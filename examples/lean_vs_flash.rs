@@ -1,0 +1,83 @@
+//! Attention-operation comparison on real tensors through PJRT:
+//! the fused kernel vs the stream-K partial path under each partitioning
+//! strategy, with wall-clock on this CPU and the A100 projection side by
+//! side. (CPU wall-clock is NOT a GPU proxy — it validates plumbing cost
+//! and exactness; the projection column is the paper-relevant number.)
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example lean_vs_flash
+//! ```
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use lean_attention::attention::attention_host;
+use lean_attention::partition::plan::{build_plan, DecodeProblem, Strategy};
+use lean_attention::runtime::attention_exec::AttentionProblem;
+use lean_attention::runtime::{AttentionExecutor, Manifest, Runtime};
+use lean_attention::sim::schedule::simulate;
+use lean_attention::sim::GpuArch;
+use lean_attention::util::rng::Rng;
+use lean_attention::util::testing::max_abs_err;
+
+fn main() -> anyhow::Result<()> {
+    let runtime = Rc::new(Runtime::cpu()?);
+    let manifest = Rc::new(Manifest::load(Manifest::default_dir())?);
+    let exec = AttentionExecutor::new(runtime, manifest);
+    let arch = GpuArch::a100();
+
+    let (g, n, d) = (8usize, 4096usize, 64usize);
+    let mut rng = Rng::new(1);
+    let q = rng.normal_vec(g * d);
+    let k = rng.normal_vec(g * n * d);
+    let v = rng.normal_vec(g * n * d);
+    let lens: Vec<u32> = (0..g).map(|_| rng.range(1, n as u64 + 1) as u32).collect();
+    let ap = AttentionProblem { q: &q, k: &k, v: &v, lens: &lens, g, n, d };
+    let oracle = attention_host(&q, &k, &v, g, n, d, &lens);
+
+    println!("decode attention: g={g} groups, ctx<=?{n}, d={d} (ragged lens)");
+    println!(
+        "{:<22} {:>12} {:>12} {:>14} {:>12}",
+        "path", "cpu_ms", "max_err", "a100_proj_us", "occupancy"
+    );
+
+    // fused kernel
+    let t0 = Instant::now();
+    let (o_full, _) = exec.full(&ap)?;
+    let fused_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "{:<22} {:>12.1} {:>12.2e} {:>14} {:>12}",
+        "fused kernel",
+        fused_ms,
+        max_abs_err(&o_full, &oracle),
+        "-",
+        "-"
+    );
+
+    // stream-K and baselines through the partial path
+    let problem = DecodeProblem { heads: 1, head_dim: d, ctx_lens: lens.clone(), tile: 256 };
+    for strategy in [
+        Strategy::Dense,
+        Strategy::fixed_split_auto(&problem, arch.num_sms),
+        Strategy::StreamK,
+    ] {
+        let plan = build_plan(&problem, strategy, arch.sm_slots());
+        plan.validate(&problem)?;
+        let t0 = Instant::now();
+        let (o, _) = exec.lean(&ap, &plan)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let sim = simulate(&problem, strategy, &arch);
+        println!(
+            "{:<22} {:>12.1} {:>12.2e} {:>14.1} {:>11.0}%",
+            format!("partials/{}", strategy.name()),
+            ms,
+            max_abs_err(&o, &oracle),
+            sim.latency_us,
+            sim.occupancy * 100.0
+        );
+    }
+
+    println!("\nall paths compute the same exact attention; the projection column");
+    println!("shows why the stream-K placement wins on real hardware.");
+    Ok(())
+}

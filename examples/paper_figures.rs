@@ -1,0 +1,67 @@
+//! Regenerate every table and figure of the paper's evaluation section
+//! (Table I, Figs 1-3, 7-13 and the §VI 1000-sample aggregate) from the
+//! GPU-schedule simulator. Results print as aligned tables and are
+//! persisted under `target/figures/*.{txt,json}`.
+//!
+//! ```sh
+//! cargo run --release --example paper_figures            # everything
+//! cargo run --release --example paper_figures -- fig07   # one figure
+//! cargo run --release --example paper_figures -- sweep 2000
+//! ```
+
+use lean_attention::bench_harness::figures;
+use lean_attention::sim::GpuArch;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let which = args.first().map(String::as_str).unwrap_or("all");
+    let all = which == "all";
+
+    if all || which == "table1" {
+        figures::table1().emit("table1");
+    }
+    if all || which == "fig01" {
+        println!("{}", figures::fig01_schedule());
+    }
+    if all || which == "fig02" {
+        figures::fig02_timeshare().emit("fig02");
+    }
+    if all || which == "fig03" {
+        figures::fig03_occupancy().emit("fig03");
+    }
+    if all || which == "fig07" {
+        for (i, t) in figures::fig07_a100().iter().enumerate() {
+            t.emit(&format!("fig07{}", ['a', 'b', 'c'][i]));
+        }
+    }
+    if all || which == "fig08" {
+        for (i, t) in figures::fig08_h100().iter().enumerate() {
+            t.emit(&format!("fig08{}", ['a', 'b', 'c'][i]));
+        }
+    }
+    if all || which == "fig09" {
+        for (i, t) in figures::fig09_multigpu().iter().enumerate() {
+            t.emit(&format!("fig09{}", ['a', 'b', 'c'][i]));
+        }
+    }
+    if all || which == "fig10" {
+        figures::fig10_ragged().emit("fig10");
+    }
+    if all || which == "fig11" {
+        figures::fig11_headdim128().emit("fig11");
+    }
+    if all || which == "fig12" {
+        figures::fig12_e2e().emit("fig12");
+    }
+    if all || which == "fig13" {
+        figures::fig13_energy().emit("fig13");
+    }
+    if all || which == "sweep" {
+        let samples = args
+            .get(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(if all { 1000 } else { 1000 });
+        figures::sweep_aggregate(samples, &GpuArch::a100()).emit("sweep_a100");
+        figures::sweep_aggregate(samples, &GpuArch::h100()).emit("sweep_h100");
+    }
+}

@@ -1,0 +1,82 @@
+//! End-to-end serving driver (the repo's full-system validation run,
+//! recorded in EXPERIMENTS.md §E2E).
+//!
+//! Loads the `small` transformer (real weights from the AOT blob), serves
+//! a batched workload of synthetic requests through the full stack —
+//! router → continuous batcher → batched prefill → paged KV cache →
+//! per-step decode through the PJRT artifact (whose attention is the L1
+//! LeanAttention Pallas kernel) → greedy sampling — and reports
+//! latency/throughput plus the per-step A100 hardware projection.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_decode -- [requests] [max_new]
+//! ```
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use lean_attention::coordinator::{Engine, EngineConfig};
+use lean_attention::runtime::{Manifest, Runtime};
+use lean_attention::util::rng::Rng;
+use lean_attention::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(12);
+    let max_new: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(24);
+
+    let runtime = Rc::new(Runtime::cpu()?);
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let mut engine = Engine::new(
+        &runtime,
+        &manifest,
+        EngineConfig {
+            model: "small".into(),
+            cache_pages: 1024,
+            page_tokens: 16,
+            project_hardware: true,
+        },
+    )?;
+    println!(
+        "model=small ({} layers x {} heads x d{}), engine batch {}, ctx bucket {}",
+        4, 4, 64,
+        engine.batch_size(),
+        engine.ctx_bucket()
+    );
+
+    // Synthetic workload: mixed prompt lengths, fixed generation budget.
+    let mut rng = Rng::new(42);
+    let t0 = Instant::now();
+    for _ in 0..n_requests {
+        let len = rng.urange(4, engine.prefill_bucket() + 1);
+        let prompt: Vec<i32> = (0..len).map(|_| rng.range(0, 2048) as i32).collect();
+        engine.submit(prompt, max_new)?;
+    }
+    let finished = engine.run_until_idle()?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // --- report -----------------------------------------------------------
+    println!("\n== serve_decode results ==");
+    println!(
+        "{n_requests} requests, {} tokens generated in {wall_s:.2}s wall ({:.1} tok/s aggregate)",
+        engine.metrics.tokens_generated,
+        engine.metrics.tokens_generated as f64 / wall_s
+    );
+
+    let total: Vec<f64> = finished.iter().map(|f| f.total_s() * 1e3).collect();
+    let tps: Vec<f64> = finished.iter().map(|f| f.decode_tps()).collect();
+    let ts = Summary::of(&total);
+    println!(
+        "request latency ms: mean {:.0}  p50 {:.0}  p99 {:.0}  max {:.0}",
+        ts.mean, ts.p50, ts.p99, ts.max
+    );
+    println!(
+        "per-request decode throughput: mean {:.1} tok/s",
+        tps.iter().sum::<f64>() / tps.len() as f64
+    );
+    println!();
+    println!("{}", engine.metrics.report());
+
+    assert_eq!(finished.len(), n_requests, "all requests completed");
+    Ok(())
+}

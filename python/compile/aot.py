@@ -1,0 +1,254 @@
+"""AOT pipeline: lower L2/L1 jax functions to HLO **text** artifacts.
+
+``python -m compile.aot --out ../artifacts`` produces everything the Rust
+runtime loads at startup:
+
+* ``attn_full_g{G}_d{D}_c{C}.hlo.txt``    — exact decode attention (o, lse)
+* ``attn_partial_g{G}_d{D}_c{C}.hlo.txt`` — un-scaled partials (o~, m, l)
+* ``reduce_p{P}_g{G}_d{D}.hlo.txt``       — on-device rescale-reduce
+* ``decode_{model}.hlo.txt`` / ``prefill_{model}.hlo.txt`` — transformer steps
+* ``{model}.weights.bin``                 — flat little-endian f32 blob
+* ``manifest.json``                       — shapes, buckets, param order
+
+HLO *text* (not ``HloModuleProto.serialize``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. Python runs only here — never on the Rust request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import lean_attention as la
+
+# Attention artifact grid. G = batch*heads groups; every decode request the
+# Rust engine forms is padded up to the nearest (G, C) bucket.
+ATTN_BUCKETS = [
+    # (g, d, ctx)
+    (8, 64, 256),
+    (8, 64, 1024),
+    (32, 64, 256),
+    (32, 64, 1024),
+    (8, 128, 256),
+    (16, 64, 4096),
+]
+REDUCE_BUCKETS = [
+    # (p, g, d)
+    (8, 8, 64),
+    (8, 32, 64),
+]
+MODELS = ["tiny", "small"]
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via stablehlo (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir: pathlib.Path, name: str, text: str) -> dict:
+    path = out_dir / name
+    path.write_text(text)
+    return {
+        "file": name,
+        "bytes": len(text),
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+    }
+
+
+def build_attention(out_dir: pathlib.Path) -> list[dict]:
+    entries = []
+    for g, d, ctx in ATTN_BUCKETS:
+        tile = la.lean_tile_for(d)
+        tile = min(tile, ctx)
+        q = jax.ShapeDtypeStruct((g, d), jnp.float32)
+        kv = jax.ShapeDtypeStruct((g, ctx, d), jnp.float32)
+        lens = jax.ShapeDtypeStruct((g,), jnp.int32)
+
+        full = jax.jit(
+            lambda q, k, v, lens: la.decode_attention(q, k, v, lens)
+        ).lower(q, kv, kv, lens)
+        meta = _write(out_dir, f"attn_full_g{g}_d{d}_c{ctx}.hlo.txt", to_hlo_text(full))
+        entries.append(
+            {
+                "kind": "full",
+                "g": g,
+                "d": d,
+                "ctx": ctx,
+                "tile": tile,
+                "inputs": ["q[g,d]f32", "k[g,ctx,d]f32", "v[g,ctx,d]f32", "lens[g]i32"],
+                "outputs": ["o[g,d]f32", "lse[g,1]f32"],
+                **meta,
+            }
+        )
+
+        part = jax.jit(
+            lambda q, k, v, valid: la.partial_attention(q, k, v, valid)
+        ).lower(q, kv, kv, lens)
+        meta = _write(
+            out_dir, f"attn_partial_g{g}_d{d}_c{ctx}.hlo.txt", to_hlo_text(part)
+        )
+        entries.append(
+            {
+                "kind": "partial",
+                "g": g,
+                "d": d,
+                "ctx": ctx,
+                "tile": tile,
+                "inputs": ["q[g,d]f32", "k[g,ctx,d]f32", "v[g,ctx,d]f32", "valid[g]i32"],
+                "outputs": ["o_unscaled[g,d]f32", "m[g,1]f32", "l[g,1]f32"],
+                **meta,
+            }
+        )
+    return entries
+
+
+def build_reduce(out_dir: pathlib.Path) -> list[dict]:
+    entries = []
+    for p, g, d in REDUCE_BUCKETS:
+        op = jax.ShapeDtypeStruct((p, g, d), jnp.float32)
+        mp = jax.ShapeDtypeStruct((p, g, 1), jnp.float32)
+        lowered = jax.jit(
+            lambda o, m, l: la.rescale_reduce(o, m, l)
+        ).lower(op, mp, mp)
+        meta = _write(out_dir, f"reduce_p{p}_g{g}_d{d}.hlo.txt", to_hlo_text(lowered))
+        entries.append(
+            {
+                "p": p,
+                "g": g,
+                "d": d,
+                "inputs": ["o[p,g,d]f32", "m[p,g,1]f32", "l[p,g,1]f32"],
+                "outputs": ["o[g,d]f32", "lse[g,1]f32"],
+                **meta,
+            }
+        )
+    return entries
+
+
+def build_model(out_dir: pathlib.Path, name: str) -> dict:
+    cfg = M.CONFIGS[name]
+    params_np = M.init_params(cfg, seed=0)
+
+    # Weights blob: flat little-endian f32 in param_order.
+    blob = b"".join(np.ascontiguousarray(w, dtype="<f4").tobytes() for w in params_np)
+    (out_dir / f"{name}.weights.bin").write_bytes(blob)
+
+    l, b, h, c, dh = (
+        cfg.n_layers,
+        cfg.batch,
+        cfg.n_heads,
+        cfg.ctx_bucket,
+        cfg.head_dim,
+    )
+    pspecs = [jax.ShapeDtypeStruct(w.shape, jnp.float32) for w in params_np]
+
+    toks = jax.ShapeDtypeStruct((b,), jnp.int32)
+    kcache = jax.ShapeDtypeStruct((l, b, h, c, dh), jnp.float32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    def dec(params, tokens, k_cache, v_cache, positions):
+        return M.decode_step(cfg, params, tokens, k_cache, v_cache, positions)
+
+    dec_meta = _write(
+        out_dir,
+        f"decode_{name}.hlo.txt",
+        to_hlo_text(jax.jit(dec).lower(pspecs, toks, kcache, kcache, pos)),
+    )
+
+    ptoks = jax.ShapeDtypeStruct((b, cfg.prefill_bucket), jnp.int32)
+    plens = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    def pre(params, tokens, lengths):
+        return M.prefill_step(cfg, params, tokens, lengths)
+
+    pre_meta = _write(
+        out_dir,
+        f"prefill_{name}.hlo.txt",
+        to_hlo_text(jax.jit(pre).lower(pspecs, ptoks, plens)),
+    )
+
+    return {
+        "config": {
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "ctx_bucket": cfg.ctx_bucket,
+            "prefill_bucket": cfg.prefill_bucket,
+            "batch": cfg.batch,
+            "rope_base": cfg.rope_base,
+            "param_count": cfg.param_count(),
+        },
+        "decode": dec_meta,
+        "prefill": pre_meta,
+        "weights": f"{name}.weights.bin",
+        "weights_bytes": len(blob),
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in cfg.param_order()
+        ],
+        "decode_inputs": "params... , tokens[b]i32, k_cache[l,b,h,c,dh]f32, "
+        "v_cache[l,b,h,c,dh]f32, positions[b]i32",
+        "decode_outputs": "logits[b,v]f32, new_k[l,b,h,dh]f32, new_v[l,b,h,dh]f32",
+        "prefill_inputs": "params... , tokens[b,p]i32, lengths[b]i32",
+        "prefill_outputs": "logits[b,v]f32, k[l,b,h,p,dh]f32, v[l,b,h,p,dh]f32",
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--models", nargs="*", default=MODELS, help="model configs to build"
+    )
+    ap.add_argument(
+        "--skip-models", action="store_true", help="attention artifacts only"
+    )
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    t0 = time.time()
+    manifest = {
+        "version": 1,
+        "generated_unix": int(t0),
+        "jax": jax.__version__,
+        "attention": build_attention(out_dir),
+        "reduce": build_reduce(out_dir),
+        "models": {},
+    }
+    print(f"attention+reduce artifacts: {time.time() - t0:.1f}s")
+
+    if not args.skip_models:
+        for name in args.models:
+            t = time.time()
+            manifest["models"][name] = build_model(out_dir, name)
+            print(f"model {name}: {time.time() - t:.1f}s")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    n = len(manifest["attention"]) + len(manifest["reduce"]) + 2 * len(
+        manifest["models"]
+    )
+    print(f"wrote {n} HLO artifacts + manifest to {out_dir} in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,304 @@
+"""L1 — LeanAttention Pallas kernels (decode phase).
+
+Three kernels, all built from one online-softmax core:
+
+* ``decode_attention``  — exact length-masked decode attention over the
+  whole (bucketed) context. LeanTile-sized KV blocks stream through VMEM
+  while ``(acc, m, l)`` stay resident; the output block doubles as the
+  accumulator (the classic revisit-the-same-block carry). Equivalent to
+  Algorithm 1 run start-to-finish by a single CTA.
+* ``partial_attention`` — Algorithm 1 proper: the *un-scaled* partial
+  output ``(O~, m, l)`` over one KV slice. This is what a LeanAttention
+  CTA computes before the host-block reduction; the Rust coordinator
+  executes this artifact once per stream-K work assignment and performs
+  the softmax re-scaling reduction itself (Alg 2 lines 24-39).
+* ``rescale_reduce``    — the reduction as a kernel, for when the whole
+  reduce should stay on-device: folds ``P`` partials into one output.
+
+TPU adaptation of the paper's CUDA design (DESIGN.md §Hardware-Adaptation):
+CUDA shared-memory KV tiles become VMEM blocks expressed via ``BlockSpec``;
+the warp-level online softmax becomes vectorized ``rowmax/rowsum`` feeding
+``[q, d] x [d, T]`` MXU matmuls with fp32 accumulation; CTA scheduling
+(the stream-K placement) moves to the Rust coordinator. Kernels run with
+``interpret=True`` — real-TPU lowering emits Mosaic custom-calls the CPU
+PJRT plugin cannot execute; see DESIGN.md for the VMEM/MXU estimates used
+for performance reasoning instead.
+
+Shared conventions: ``G = batch*heads`` flattened groups, ``q: [G, d]``,
+``k/v: [G, N, d]``, per-group valid lengths ``[G, 1] int32``. Outputs are
+always f32 (accumulation dtype) regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Finite -inf stand-in (see ref.NEG_INF): keeps exp NaN-free when a whole
+# LeanTile is masked while still underflowing to exactly 0.
+NEG_INF = -1.0e30
+
+# LeanTile granularity table (§IV-B): empirically optimal KV-block token
+# counts per head dimension on A100-class hardware. Used as the default
+# block size along N_k, and mirrored by the Rust partitioner
+# (partition::lean_tile).
+LEAN_TILE_BY_HEAD_DIM = {32: 256, 64: 256, 96: 128, 128: 128, 256: 64}
+
+
+def lean_tile_for(head_dim: int) -> int:
+    """Smallest profitable KV-block size for ``head_dim`` (§IV-B)."""
+    if head_dim in LEAN_TILE_BY_HEAD_DIM:
+        return LEAN_TILE_BY_HEAD_DIM[head_dim]
+    # Fall back to keeping the K+V tile footprint ~constant (2*T*d*4B).
+    return max(16, (256 * 64) // max(head_dim, 1))
+
+
+def _online_softmax_kernel(
+    len_ref,  # [Gb, 1] int32 valid length per group in this block
+    q_ref,  # [Gb, d]
+    k_ref,  # [Gb, T, d]
+    v_ref,  # [Gb, T, d]
+    o_ref,  # [Gb, d] f32 — doubles as the accumulator across KV blocks
+    m_ref,  # [Gb, 1] f32 running rowmax
+    l_ref,  # [Gb, 1] f32 running rowsum
+    *,
+    scale: float,
+    block_t: int,
+    normalize: bool,
+):
+    """One LeanTile iteration of Algorithm 1 (lines 13-26), batched over a
+    block of ``Gb`` groups.
+
+    Grid is (num_group_blocks, num_kv_blocks); the KV axis is innermost so
+    (o, m, l) blocks stay resident while j sweeps the context. Group
+    batching was the perf-pass change (EXPERIMENTS.md §Perf L1): one grid
+    step now does `[Gb, T] x [T, d]` contractions instead of `[1, T]`,
+    13x faster under interpret mode and MXU-shaped on real TPU.
+    ``normalize=True`` additionally applies Alg 2 line 38 on the last
+    block; ``normalize=False`` leaves the un-scaled partial (the
+    LeanAttention CTA contract).
+    """
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)  # [Gb, d]
+    k = k_ref[...].astype(jnp.float32)  # [Gb, T, d]
+    v = v_ref[...].astype(jnp.float32)
+
+    s = (
+        jnp.einsum("gd,gtd->gt", q, k, preferred_element_type=jnp.float32)
+        * scale
+    )  # [Gb, T]
+
+    # Length masking: absolute position of column t is j*T + t.
+    pos = j * block_t + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    in_range = pos < len_ref[...]
+    s = jnp.where(in_range, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    # Fully-masked tiles keep m_new == NEG_INF, making s - m_new == 0 and
+    # p == 1 on every (masked) column; zero them explicitly.
+    p = jnp.where(in_range, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = alpha * o_ref[...] + jnp.einsum(
+        "gt,gtd->gd", p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    if normalize:
+
+        @pl.when(j == nj - 1)
+        def _fin():
+            # Guard l == 0 (length 0 — not produced by the engine, but the
+            # kernel should not emit NaN for padding groups).
+            l = l_ref[...]
+            o_ref[...] = o_ref[...] / jnp.where(l == 0.0, 1.0, l)
+
+
+def _attention_call(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    scale: float | None,
+    block_t: int | None,
+    normalize: bool,
+    interpret: bool,
+):
+    g, d = q.shape
+    n = k.shape[1]
+    scale = (1.0 / d**0.5) if scale is None else scale
+    block_t = lean_tile_for(d) if block_t is None else block_t
+    block_t = min(block_t, n)
+    if n % block_t != 0:
+        raise ValueError(f"context bucket {n} not a multiple of LeanTile {block_t}")
+    lengths = lengths.reshape(g, 1).astype(jnp.int32)
+
+    # Group-block size: batch as many groups per grid step as the VMEM
+    # budget allows (K+V blocks are 2*Gb*T*d*4B; cap ~8 MiB), while
+    # keeping Gb a divisor of g so blocks tile exactly.
+    vmem_cap_groups = max(1, (8 << 20) // (2 * block_t * d * 4))
+    block_g = g
+    if g > vmem_cap_groups:
+        block_g = next(
+            (c for c in range(min(g, vmem_cap_groups), 0, -1) if g % c == 0),
+            1,
+        )
+
+    grid = (g // block_g, n // block_t)
+    kernel = functools.partial(
+        _online_softmax_kernel,
+        scale=scale,
+        block_t=block_t,
+        normalize=normalize,
+    )
+    out_shapes = (
+        jax.ShapeDtypeStruct((g, d), jnp.float32),  # O (or O~)
+        jax.ShapeDtypeStruct((g, 1), jnp.float32),  # m
+        jax.ShapeDtypeStruct((g, 1), jnp.float32),  # l
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_g, 1), lambda g_, j: (g_, 0)),  # lengths
+            pl.BlockSpec((block_g, d), lambda g_, j: (g_, 0)),  # q
+            pl.BlockSpec((block_g, block_t, d), lambda g_, j: (g_, j, 0)),  # k
+            pl.BlockSpec((block_g, block_t, d), lambda g_, j: (g_, j, 0)),  # v
+        ],
+        out_specs=(
+            pl.BlockSpec((block_g, d), lambda g_, j: (g_, 0)),
+            pl.BlockSpec((block_g, 1), lambda g_, j: (g_, 0)),
+            pl.BlockSpec((block_g, 1), lambda g_, j: (g_, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(lengths, q, k, v)
+    return o, m, l
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,
+    scale: float | None = None,
+    block_t: int | None = None,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact decode attention. Returns ``(O [G,d] f32, L [G,1] logsumexp)``.
+
+    ``L = m + log(l)`` is emitted like FlashAttention-2 (Alg 2 line 39) so
+    downstream consumers (e.g. a backward pass or a cross-device reduce)
+    can re-scale this output against others.
+    """
+    o, m, l = _attention_call(
+        q, k, v, lengths, scale=scale, block_t=block_t, normalize=True,
+        interpret=interpret,
+    )
+    lse = m + jnp.log(jnp.where(l == 0.0, 1.0, l))
+    return o, lse
+
+
+def partial_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    valid: jnp.ndarray,
+    scale: float | None = None,
+    block_t: int | None = None,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Un-scaled partial attention over a KV slice: ``(O~, m, l)``.
+
+    One LeanAttention work assignment (Alg 1 called from Alg 2 line 16).
+    ``k/v: [G, S, d]`` is a slice of the context; ``valid: [G]`` gives the
+    number of real rows per group. The kernel's q-block view never sees
+    the head boundary — the Rust stream-K planner decides which slices
+    exist and how their partials reduce.
+    """
+    return _attention_call(
+        q, k, v, valid, scale=scale, block_t=block_t, normalize=False,
+        interpret=interpret,
+    )
+
+
+def _rescale_reduce_kernel(op_ref, mp_ref, lp_ref, o_ref, m_ref, l_ref):
+    """Fold partial i into the running (o, m, l) — Alg 2 lines 29-35.
+
+    Batched over all G groups per grid step (perf pass, EXPERIMENTS.md
+    §Perf L1): grid is just the partial axis.
+    """
+    i = pl.program_id(0)
+    ni = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    m_i = mp_ref[0, ...]
+    l_i = lp_ref[0, ...]
+    o_i = op_ref[0, ...]
+    m_new = jnp.maximum(m_ref[...], m_i)
+    a_acc = jnp.exp(m_ref[...] - m_new)
+    a_i = jnp.exp(m_i - m_new)
+    l_ref[...] = a_acc * l_ref[...] + a_i * l_i
+    o_ref[...] = a_acc * o_ref[...] + a_i * o_i
+    m_ref[...] = m_new
+
+    @pl.when(i == ni - 1)
+    def _fin():
+        l = l_ref[...]
+        o_ref[...] = o_ref[...] / jnp.where(l == 0.0, 1.0, l)
+
+
+def rescale_reduce(
+    o_parts: jnp.ndarray,  # [P, G, d] f32
+    m_parts: jnp.ndarray,  # [P, G, 1] f32
+    l_parts: jnp.ndarray,  # [P, G, 1] f32
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reduce P partials per group into the exact output. Returns (O, lse).
+
+    The host-block reduction (Alg 2 lines 24-39) as an on-device kernel.
+    Empty partials are the identity element ``(0, NEG_INF, 0)``, so padded
+    P-slots are harmless.
+    """
+    p, g, d = o_parts.shape
+    o, m, l = pl.pallas_call(
+        _rescale_reduce_kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, g, 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, g, 1), lambda i: (i, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((g, d), lambda i: (0, 0)),
+            pl.BlockSpec((g, 1), lambda i: (0, 0)),
+            pl.BlockSpec((g, 1), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((g, d), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(o_parts, m_parts, l_parts)
+    lse = m + jnp.log(jnp.where(l == 0.0, 1.0, l))
+    return o, lse

@@ -1,0 +1,190 @@
+"""Pure-jnp correctness oracles for LeanAttention.
+
+Everything the Pallas kernels (and the Rust reduction path) compute is
+checked against these functions:
+
+* ``attention_ref``        — exact length-masked decode attention.
+* ``partial_attention_ref``— the un-scaled partial output ``(O~, m, l)``
+                             of §IV-A computed over one KV slice.
+* ``rescale_reduce_ref``   — the softmax re-scaling reduction operator
+                             ``f(x, y)`` of §IV-A (pairwise).
+* ``finalize_ref``         — ``O = diag(l)^-1 O~`` (Alg 2 line 38).
+* ``lean_attention_ref``   — full stream-K-style split → partial →
+                             tree-reduce pipeline; must equal
+                             ``attention_ref`` for *any* split and any
+                             association order (the paper's associativity
+                             theorem).
+
+Shapes use the flattened-group convention the whole repo shares:
+``G = batch * heads``, ``q: [G, d]``, ``k/v: [G, N, d]``.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+# Finite stand-in for -inf: keeps ``exp(s - m)`` NaN-free when an entire
+# KV block is masked out (see kernel docstring). exp(-1e30 - m) underflows
+# to exactly 0.0 for any realistic m, so results match true -inf masking.
+NEG_INF = -1.0e30
+
+
+def _mask_scores(s: jnp.ndarray, start: int, valid: jnp.ndarray) -> jnp.ndarray:
+    """Mask score columns at absolute positions >= valid.
+
+    ``s: [G, N]`` holds scores for absolute KV positions
+    ``start .. start+N``; ``valid: [G]`` is the per-group context length.
+    """
+    n = s.shape[-1]
+    pos = start + jnp.arange(n, dtype=jnp.int32)[None, :]
+    return jnp.where(pos < valid[:, None], s, NEG_INF)
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Exact decode attention. q:[G,d] k,v:[G,N,d] lengths:[G] -> [G,d]."""
+    d = q.shape[-1]
+    scale = (1.0 / d**0.5) if scale is None else scale
+    q32 = q.astype(jnp.float32)
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    s = jnp.einsum("gd,gnd->gn", q32, k32) * scale
+    s = _mask_scores(s, 0, lengths.astype(jnp.int32))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("gn,gnd->gd", p / l, v32)
+
+
+def partial_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    valid: jnp.ndarray,
+    scale: float | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Un-scaled partial attention over one KV slice (§IV-A, first part).
+
+    ``k/v: [G, S, d]`` is the slice, ``valid: [G]`` the number of its rows
+    that are real tokens (the rest are padding). Returns
+    ``(O~: [G, d], m: [G, 1], l: [G, 1])``.
+    """
+    d = q.shape[-1]
+    scale = (1.0 / d**0.5) if scale is None else scale
+    q32 = q.astype(jnp.float32)
+    s = jnp.einsum("gd,gnd->gn", q32, k.astype(jnp.float32)) * scale
+    s = _mask_scores(s, 0, valid.astype(jnp.int32))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    # A fully-masked slice must contribute zero weight: zero p explicitly so
+    # exp(NEG_INF - NEG_INF) = 1 rows cannot leak in.
+    p = jnp.where(
+        (jnp.arange(s.shape[-1], dtype=jnp.int32)[None, :] < valid[:, None]),
+        p,
+        0.0,
+    )
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("gn,gnd->gd", p, v.astype(jnp.float32))
+    return o, m, l
+
+
+def rescale_reduce_ref(
+    ox: jnp.ndarray,
+    mx: jnp.ndarray,
+    lx: jnp.ndarray,
+    oy: jnp.ndarray,
+    my: jnp.ndarray,
+    ly: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Softmax re-scaling operator f(x, y) of §IV-A. All-f32, pairwise."""
+    m = jnp.maximum(mx, my)
+    ax = jnp.exp(mx - m)
+    ay = jnp.exp(my - m)
+    l = ax * lx + ay * ly
+    o = ax * ox + ay * oy
+    return o, m, l
+
+
+def finalize_ref(o: jnp.ndarray, l: jnp.ndarray) -> jnp.ndarray:
+    """O = diag(l)^-1 O~ (Alg 2 line 38)."""
+    return o / l
+
+
+def split_points_to_slices(splits: Sequence[int], n: int) -> list[tuple[int, int]]:
+    """[s0, s1, ...] interior split points -> [(lo, hi), ...] covering [0, n)."""
+    bounds = [0, *sorted(set(int(s) for s in splits if 0 < s < n)), n]
+    return [(bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1)]
+
+
+def lean_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,
+    splits: Sequence[int],
+    reduce_order: str = "left",
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Full LeanAttention pipeline in jnp: arbitrary unequal splits of the
+    context, partial attention per slice, reduction in the requested
+    association order, then finalize. The associativity theorem says this
+    equals ``attention_ref`` for every ``splits`` and ``reduce_order``.
+
+    reduce_order: 'left' (((x,y),z)…), 'right' (x,(y,(z…))), or 'tree'.
+    """
+    n = k.shape[1]
+    slices = split_points_to_slices(splits, n)
+    parts = []
+    for lo, hi in slices:
+        valid = jnp.clip(lengths.astype(jnp.int32) - lo, 0, hi - lo)
+        parts.append(
+            partial_attention_ref(q, k[:, lo:hi], v[:, lo:hi], valid, scale=scale)
+        )
+
+    def red(a, b):
+        return rescale_reduce_ref(*a, *b)
+
+    if reduce_order == "left":
+        acc = parts[0]
+        for p in parts[1:]:
+            acc = red(acc, p)
+    elif reduce_order == "right":
+        acc = parts[-1]
+        for p in reversed(parts[:-1]):
+            acc = red(p, acc)
+    elif reduce_order == "tree":
+        level = parts
+        while len(level) > 1:
+            nxt = [
+                red(level[i], level[i + 1]) if i + 1 < len(level) else level[i]
+                for i in range(0, len(level), 2)
+            ]
+            level = nxt
+        acc = level[0]
+    else:  # pragma: no cover - guarded by tests
+        raise ValueError(f"unknown reduce_order {reduce_order!r}")
+    o, _, l = acc
+    return finalize_ref(o, l)
+
+
+def mha_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,
+) -> jnp.ndarray:
+    """Batched multi-head wrapper: q [B,H,d], k/v [B,H,N,d], lengths [B]."""
+    b, h, d = q.shape
+    g = b * h
+    glens = jnp.repeat(lengths, h)
+    o = attention_ref(
+        q.reshape(g, d), k.reshape(g, -1, d), v.reshape(g, -1, d), glens
+    )
+    return o.reshape(b, h, d)

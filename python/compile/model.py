@@ -1,0 +1,323 @@
+"""L2 — JAX transformer model (build-time only; never on the request path).
+
+A small decoder-only transformer (pre-LN, RoPE, GELU MLP, tied LM head)
+whose *decode step* routes its attention through the L1 LeanAttention
+Pallas kernel. Two entry points are AOT-lowered by ``compile.aot``:
+
+* ``prefill_step``  — causal self-attention over the whole prompt,
+  producing the last-token logits plus the K/V cache the decode phase
+  consumes (the paper's prefill/decode split, §I).
+* ``decode_step``   — one autoregressive step: N_q = 1 per sequence,
+  attention over the bucketed KV cache via ``kernels.lean_attention``.
+  Returns logits and the current token's per-layer K/V rows so the Rust
+  coordinator can append them to its paged cache (the cache lives in
+  Rust; the graph is pure).
+
+Weight layout is a flat ordered list (see ``param_order``) so the Rust
+runtime can feed the blob ``compile.aot`` serializes without pytree
+machinery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import lean_attention as la
+from compile.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer hyper-parameters.
+
+    ``name`` doubles as the artifact key. ``ctx_bucket`` is the static KV
+    bucket the decode artifact is compiled for (lengths are masked inside
+    the kernel); ``prefill_bucket`` likewise for the prompt.
+    """
+
+    name: str = "tiny"
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 512
+    ctx_bucket: int = 256
+    prefill_bucket: int = 64
+    batch: int = 2
+    rope_base: float = 10000.0
+
+    @property
+    def groups(self) -> int:
+        return self.batch * self.n_heads
+
+    def param_order(self) -> list[tuple[str, tuple[int, ...]]]:
+        """Flat (name, shape) list defining blob order for the Rust loader."""
+        d, h, dh, f = self.d_model, self.n_heads, self.head_dim, self.d_ff
+        order: list[tuple[str, tuple[int, ...]]] = [
+            ("embed", (self.vocab, d)),
+        ]
+        for i in range(self.n_layers):
+            order += [
+                (f"l{i}.ln1.scale", (d,)),
+                (f"l{i}.ln1.bias", (d,)),
+                (f"l{i}.wq", (d, h * dh)),
+                (f"l{i}.wk", (d, h * dh)),
+                (f"l{i}.wv", (d, h * dh)),
+                (f"l{i}.wo", (h * dh, d)),
+                (f"l{i}.ln2.scale", (d,)),
+                (f"l{i}.ln2.bias", (d,)),
+                (f"l{i}.w1", (d, f)),
+                (f"l{i}.b1", (f,)),
+                (f"l{i}.w2", (f, d)),
+                (f"l{i}.b2", (d,)),
+            ]
+        order += [("ln_f.scale", (d,)), ("ln_f.bias", (d,))]
+        return order
+
+    def param_count(self) -> int:
+        return sum(int(np.prod(s)) for _, s in self.param_order())
+
+
+# Registry of configs the AOT pipeline knows how to build. "tiny" keeps
+# `make artifacts` fast; "small" is the e2e serving demo scale.
+CONFIGS: dict[str, ModelConfig] = {
+    "tiny": ModelConfig(),
+    "small": ModelConfig(
+        name="small",
+        vocab=2048,
+        d_model=256,
+        n_layers=4,
+        n_heads=4,
+        head_dim=64,
+        d_ff=1024,
+        ctx_bucket=512,
+        prefill_bucket=128,
+        batch=4,
+    ),
+}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> list[np.ndarray]:
+    """Deterministic scaled-normal init, in ``param_order``."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in cfg.param_order():
+        if name.endswith((".scale",)):
+            w = np.ones(shape, dtype=np.float32)
+        elif name.endswith((".bias", ".b1", ".b2")):
+            w = np.zeros(shape, dtype=np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 1.0 / math.sqrt(fan_in)
+            w = rng.standard_normal(shape).astype(np.float32) * std
+        out.append(w)
+    return out
+
+
+def _layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * scale + bias
+
+
+def _rope_freqs(cfg: ModelConfig, positions: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for ``positions`` [...]-shaped int32 -> [..., dh/2]."""
+    half = cfg.head_dim // 2
+    inv = cfg.rope_base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (x1, x2) -> (x1 cos - x2 sin, x1 sin + x2 cos).
+
+    ``x: [..., dh]``; cos/sin broadcast over leading dims with a [..., dh/2]
+    trailing shape.
+    """
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _unpack(cfg: ModelConfig, params: Sequence[jnp.ndarray]) -> dict[str, jnp.ndarray]:
+    return {name: p for (name, _), p in zip(cfg.param_order(), params)}
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Sequence[jnp.ndarray],
+    tokens: jnp.ndarray,  # [B] int32 current token per sequence
+    k_cache: jnp.ndarray,  # [L, B, H, C, dh] f32 (C = ctx_bucket)
+    v_cache: jnp.ndarray,  # [L, B, H, C, dh]
+    positions: jnp.ndarray,  # [B] int32 index of `tokens` in each sequence
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step. Returns (logits [B,V], new_k [L,B,H,dh], new_v).
+
+    The current token's K/V are *not* written into the cache tensors here —
+    attention folds them in as an extra partial via the softmax re-scaling
+    operator (exactly the paper's reduction, applied once more for the
+    freshest token), and the Rust coordinator persists ``new_k/new_v`` into
+    its paged cache for subsequent steps. This keeps the graph free of
+    scatter ops and the cache single-writer (Rust).
+    """
+    p = _unpack(cfg, params)
+    b, h, dh = cfg.batch, cfg.n_heads, cfg.head_dim
+    g = b * h
+
+    x = p["embed"][tokens]  # [B, D]
+    cos, sin = _rope_freqs(cfg, positions)  # [B, dh/2]
+
+    new_ks, new_vs = [], []
+    for i in range(cfg.n_layers):
+        hpre = _layer_norm(x, p[f"l{i}.ln1.scale"], p[f"l{i}.ln1.bias"])
+        q = (hpre @ p[f"l{i}.wq"]).reshape(b, h, dh)
+        k_new = (hpre @ p[f"l{i}.wk"]).reshape(b, h, dh)
+        v_new = (hpre @ p[f"l{i}.wv"]).reshape(b, h, dh)
+        q = _apply_rope(q, cos[:, None, :], sin[:, None, :])
+        k_new = _apply_rope(k_new, cos[:, None, :], sin[:, None, :])
+        new_ks.append(k_new)
+        new_vs.append(v_new)
+
+        # Cached-context attention through the L1 Pallas kernel.
+        glens = jnp.repeat(positions, h)  # cache holds `positions` tokens
+        o_c, m_c, l_c = la.partial_attention(
+            q.reshape(g, dh),
+            k_cache[i].reshape(g, cfg.ctx_bucket, dh),
+            v_cache[i].reshape(g, cfg.ctx_bucket, dh),
+            glens,
+        )
+        # Fresh-token partial (a 1-token slice), folded in by re-scaling.
+        o_n, m_n, l_n = kref.partial_attention_ref(
+            q.reshape(g, dh),
+            k_new.reshape(g, 1, dh),
+            v_new.reshape(g, 1, dh),
+            jnp.ones((g,), jnp.int32),
+        )
+        o, _, l = kref.rescale_reduce_ref(o_c, m_c, l_c, o_n, m_n, l_n)
+        attn = kref.finalize_ref(o, l).reshape(b, h * dh)
+        x = x + attn @ p[f"l{i}.wo"]
+
+        hpre2 = _layer_norm(x, p[f"l{i}.ln2.scale"], p[f"l{i}.ln2.bias"])
+        ff = jax.nn.gelu(hpre2 @ p[f"l{i}.w1"] + p[f"l{i}.b1"])
+        x = x + ff @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+
+    x = _layer_norm(x, p["ln_f.scale"], p["ln_f.bias"])
+    logits = x @ p["embed"].T  # tied head
+    new_k = jnp.stack(new_ks)  # [L, B, H, dh]
+    new_v = jnp.stack(new_vs)
+    return logits, new_k, new_v
+
+
+def prefill_step(
+    cfg: ModelConfig,
+    params: Sequence[jnp.ndarray],
+    tokens: jnp.ndarray,  # [B, P] int32, right-padded
+    lengths: jnp.ndarray,  # [B] int32 true prompt lengths
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Prompt prefill: returns (last_logits [B,V], k [L,B,H,P,dh], v [...]).
+
+    Plain causal jnp attention — prefill parallelism is not this paper's
+    contribution (§III-A); FlashAttention-2 already serves it well.
+    """
+    p = _unpack(cfg, params)
+    b, pl_, h, dh = cfg.batch, tokens.shape[1], cfg.n_heads, cfg.head_dim
+
+    x = p["embed"][tokens]  # [B, P, D]
+    pos = jnp.arange(pl_, dtype=jnp.int32)
+    cos, sin = _rope_freqs(cfg, pos)  # [P, dh/2]
+
+    causal = pos[None, :] <= pos[:, None]  # [P, P]
+    in_len = pos[None, None, :] < lengths[:, None, None]  # [B, 1, P]
+    mask = causal[None] & in_len  # [B, P, P]
+
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        hpre = _layer_norm(x, p[f"l{i}.ln1.scale"], p[f"l{i}.ln1.bias"])
+        q = (hpre @ p[f"l{i}.wq"]).reshape(b, pl_, h, dh)
+        k = (hpre @ p[f"l{i}.wk"]).reshape(b, pl_, h, dh)
+        v = (hpre @ p[f"l{i}.wv"]).reshape(b, pl_, h, dh)
+        q = _apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+        k = _apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+        k_bh = jnp.moveaxis(k, 2, 1)  # [B, H, P, dh]
+        v_bh = jnp.moveaxis(v, 2, 1)
+        ks.append(k_bh)
+        vs.append(v_bh)
+
+        s = jnp.einsum("bqhd,bhkd->bhqk", q, k_bh) / math.sqrt(dh)
+        s = jnp.where(mask[:, None, :, :], s, kref.NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("bhqk,bhkd->bqhd", w, v_bh).reshape(b, pl_, h * dh)
+        x = x + attn @ p[f"l{i}.wo"]
+
+        hpre2 = _layer_norm(x, p[f"l{i}.ln2.scale"], p[f"l{i}.ln2.bias"])
+        ff = jax.nn.gelu(hpre2 @ p[f"l{i}.w1"] + p[f"l{i}.b1"])
+        x = x + ff @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+
+    x = _layer_norm(x, p["ln_f.scale"], p["ln_f.bias"])
+    # Logits of each sequence's *last real* token.
+    last = jnp.clip(lengths - 1, 0, pl_ - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    logits = x_last @ p["embed"].T
+    k_all = jnp.stack(ks)  # [L, B, H, P, dh]
+    v_all = jnp.stack(vs)
+    return logits, k_all, v_all
+
+
+def decode_step_dense(
+    cfg: ModelConfig,
+    params: Sequence[jnp.ndarray],
+    tokens: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    positions: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle decode step: identical math via the pure-jnp reference
+    attention (no Pallas). Used by tests to pin ``decode_step``."""
+    p = _unpack(cfg, params)
+    b, h, dh = cfg.batch, cfg.n_heads, cfg.head_dim
+    g = b * h
+
+    x = p["embed"][tokens]
+    cos, sin = _rope_freqs(cfg, positions)
+
+    new_ks, new_vs = [], []
+    for i in range(cfg.n_layers):
+        hpre = _layer_norm(x, p[f"l{i}.ln1.scale"], p[f"l{i}.ln1.bias"])
+        q = (hpre @ p[f"l{i}.wq"]).reshape(b, h, dh)
+        k_new = (hpre @ p[f"l{i}.wk"]).reshape(b, h, dh)
+        v_new = (hpre @ p[f"l{i}.wv"]).reshape(b, h, dh)
+        q = _apply_rope(q, cos[:, None, :], sin[:, None, :])
+        k_new = _apply_rope(k_new, cos[:, None, :], sin[:, None, :])
+        new_ks.append(k_new)
+        new_vs.append(v_new)
+
+        # Concatenate fresh token behind the (bucketed) cache, then mask by
+        # true length with the fresh token mapped to slot `positions`.
+        kc = k_cache[i].reshape(g, cfg.ctx_bucket, dh)
+        vc = v_cache[i].reshape(g, cfg.ctx_bucket, dh)
+        glens = jnp.repeat(positions, h)
+        # scatter fresh kv into slot glens (per group)
+        idx = glens[:, None, None]
+        kn = k_new.reshape(g, 1, dh)
+        vn = v_new.reshape(g, 1, dh)
+        onehot = (
+            jnp.arange(cfg.ctx_bucket, dtype=jnp.int32)[None, :, None] == idx
+        )
+        kc = jnp.where(onehot, kn, kc)
+        vc = jnp.where(onehot, vn, vc)
+        attn = kref.attention_ref(q.reshape(g, dh), kc, vc, glens + 1)
+        x = x + attn.reshape(b, h * dh) @ p[f"l{i}.wo"]
+
+        hpre2 = _layer_norm(x, p[f"l{i}.ln2.scale"], p[f"l{i}.ln2.bias"])
+        ff = jax.nn.gelu(hpre2 @ p[f"l{i}.w1"] + p[f"l{i}.b1"])
+        x = x + ff @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+
+    x = _layer_norm(x, p["ln_f.scale"], p["ln_f.bias"])
+    logits = x @ p["embed"].T
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)

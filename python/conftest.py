@@ -1,0 +1,7 @@
+"""Make `pytest python/tests/` work from the repo root: the test modules
+import the build-time package as `compile.*`, which lives here."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

@@ -1,0 +1,125 @@
+"""AOT pipeline tests: manifest integrity, HLO text well-formedness, and
+weights-blob layout — the contract the Rust runtime depends on."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import struct
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ART / "manifest.json").read_text())
+
+
+class TestManifest:
+    def test_version_and_sections(self, manifest):
+        assert manifest["version"] == 1
+        assert manifest["attention"]
+        assert manifest["reduce"]
+        assert "tiny" in manifest["models"]
+
+    def test_every_artifact_file_exists_and_is_hlo(self, manifest):
+        entries = list(manifest["attention"]) + list(manifest["reduce"])
+        for m in manifest["models"].values():
+            entries += [m["decode"], m["prefill"]]
+        for e in entries:
+            p = ART / e["file"]
+            assert p.exists(), e["file"]
+            text = p.read_text()
+            assert text.startswith("HloModule"), e["file"]
+            assert "ENTRY" in text, e["file"]
+            assert len(text) == e["bytes"]
+
+    def test_attention_buckets_cover_configured_grid(self, manifest):
+        got = {
+            (e["kind"], e["g"], e["d"], e["ctx"]) for e in manifest["attention"]
+        }
+        for g, d, c in aot.ATTN_BUCKETS:
+            assert ("full", g, d, c) in got
+            assert ("partial", g, d, c) in got
+
+    def test_full_artifacts_declare_two_outputs(self, manifest):
+        for e in manifest["attention"]:
+            n_out = 2 if e["kind"] == "full" else 3
+            assert len(e["outputs"]) == n_out
+
+
+class TestWeightsBlob:
+    def test_blob_size_matches_param_order(self, manifest):
+        for name, m in manifest["models"].items():
+            cfg = M.CONFIGS[name]
+            expect = 4 * cfg.param_count()
+            blob = (ART / m["weights"]).read_bytes()
+            assert len(blob) == expect == m["weights_bytes"]
+
+    def test_blob_round_trips_init_params(self, manifest):
+        name = "tiny"
+        cfg = M.CONFIGS[name]
+        blob = (ART / manifest["models"][name]["weights"]).read_bytes()
+        params = M.init_params(cfg, seed=0)
+        off = 0
+        for w in params:
+            n = w.size * 4
+            got = np.frombuffer(blob[off : off + n], dtype="<f4").reshape(w.shape)
+            np.testing.assert_array_equal(got, w)
+            off += n
+        assert off == len(blob)
+
+    def test_manifest_param_shapes(self, manifest):
+        for name, m in manifest["models"].items():
+            cfg = M.CONFIGS[name]
+            assert [
+                (p["name"], tuple(p["shape"])) for p in m["params"]
+            ] == cfg.param_order()
+
+
+class TestHloParamCount:
+    """The HLO entry computation must take exactly the inputs the manifest
+    declares — the Rust runtime feeds buffers positionally."""
+
+    def _entry_param_count(self, text: str) -> int:
+        # Parse the input tuple of `entry_computation_layout={(a, b, ...)->...}`.
+        key = "entry_computation_layout={("
+        start = text.index(key) + len(key)
+        depth, count, i = 1, 1, start
+        while depth > 0:
+            ch = text[i]
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+            elif ch == "," and depth == 1:
+                count += 1
+            i += 1
+        if text[start:i - 1].strip() == "":
+            return 0
+        return count
+
+    def test_attention_inputs(self, manifest):
+        for e in manifest["attention"]:
+            text = (ART / e["file"]).read_text()
+            assert self._entry_param_count(text) == len(e["inputs"])
+
+    def test_model_inputs(self, manifest):
+        for name, m in manifest["models"].items():
+            cfg = M.CONFIGS[name]
+            n_params = len(cfg.param_order())
+            dec = (ART / m["decode"]["file"]).read_text()
+            assert self._entry_param_count(dec) == n_params + 4
+            pre = (ART / m["prefill"]["file"]).read_text()
+            assert self._entry_param_count(pre) == n_params + 2

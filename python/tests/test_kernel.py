@@ -1,0 +1,246 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, dtypes, lengths, and tile sizes; every case
+asserts allclose against ``kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lean_attention as la
+from compile.kernels import ref
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+def _case(rng, g, n, d, dtype, max_len=None):
+    q = _rand(rng, (g, d), dtype)
+    k = _rand(rng, (g, n, d), dtype)
+    v = _rand(rng, (g, n, d), dtype)
+    hi = max_len or n
+    lens = jnp.asarray(rng.integers(1, hi + 1, g), dtype=jnp.int32)
+    return q, k, v, lens
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("g,n,d", [(4, 256, 64), (8, 512, 64), (2, 256, 128)])
+    def test_matches_ref(self, g, n, d, dtype):
+        rng = np.random.default_rng(g * n + d)
+        q, k, v, lens = _case(rng, g, n, d, dtype)
+        o, lse = la.decode_attention(q, k, v, lens)
+        o_ref = ref.attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(o, o_ref, atol=TOL[dtype], rtol=TOL[dtype])
+
+    def test_length_one(self):
+        """Shortest legal context: every group attends to a single token."""
+        rng = np.random.default_rng(7)
+        q, k, v, _ = _case(rng, 4, 256, 64, jnp.float32)
+        lens = jnp.ones(4, jnp.int32)
+        o, _ = la.decode_attention(q, k, v, lens)
+        # softmax over one token is 1 -> output is v[:, 0]
+        np.testing.assert_allclose(o, v[:, 0].astype(jnp.float32), atol=1e-6)
+
+    def test_full_bucket(self):
+        rng = np.random.default_rng(8)
+        q, k, v, _ = _case(rng, 4, 512, 64, jnp.float32)
+        lens = jnp.full(4, 512, jnp.int32)
+        o, _ = la.decode_attention(q, k, v, lens)
+        np.testing.assert_allclose(
+            o, ref.attention_ref(q, k, v, lens), atol=2e-5, rtol=2e-5
+        )
+
+    def test_lse_matches_naive(self):
+        rng = np.random.default_rng(9)
+        q, k, v, lens = _case(rng, 4, 256, 64, jnp.float32)
+        _, lse = la.decode_attention(q, k, v, lens)
+        s = jnp.einsum("gd,gnd->gn", q, k) / 8.0
+        pos = jnp.arange(256)[None, :]
+        s = jnp.where(pos < lens[:, None], s, -jnp.inf)
+        naive = jax_logsumexp(s)
+        np.testing.assert_allclose(lse[:, 0], naive, atol=1e-4, rtol=1e-5)
+
+    def test_custom_tile_sizes_agree(self):
+        rng = np.random.default_rng(10)
+        q, k, v, lens = _case(rng, 4, 512, 64, jnp.float32)
+        outs = [
+            la.decode_attention(q, k, v, lens, block_t=t)[0]
+            for t in (32, 64, 128, 256, 512)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], atol=2e-5, rtol=2e-5)
+
+    def test_extreme_scores_no_nan(self):
+        """Large-magnitude logits must not overflow (online softmax)."""
+        rng = np.random.default_rng(11)
+        q, k, v, lens = _case(rng, 4, 256, 64, jnp.float32)
+        q = q * 100.0
+        o, lse = la.decode_attention(q, k, v, lens)
+        assert np.isfinite(np.asarray(o)).all()
+        assert np.isfinite(np.asarray(lse)).all()
+        np.testing.assert_allclose(
+            o, ref.attention_ref(q, k, v, lens), atol=1e-4, rtol=1e-4
+        )
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        g=st.integers(1, 8),
+        nblk=st.integers(1, 8),
+        d=st.sampled_from([32, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    )
+    def test_hypothesis_sweep(self, g, nblk, d, seed, dtype):
+        tile = la.lean_tile_for(d)
+        n = nblk * tile
+        rng = np.random.default_rng(seed)
+        q, k, v, lens = _case(rng, g, n, d, dtype)
+        o, _ = la.decode_attention(q, k, v, lens)
+        o_ref = ref.attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(o, o_ref, atol=TOL[dtype], rtol=TOL[dtype])
+
+
+class TestPartialAttention:
+    def test_partial_covers_whole_context_equals_full(self):
+        rng = np.random.default_rng(20)
+        q, k, v, lens = _case(rng, 4, 512, 64, jnp.float32)
+        o, m, l = la.partial_attention(q, k, v, lens)
+        of = ref.finalize_ref(o, l)
+        np.testing.assert_allclose(
+            of, ref.attention_ref(q, k, v, lens), atol=2e-5, rtol=2e-5
+        )
+
+    def test_matches_partial_ref(self):
+        rng = np.random.default_rng(21)
+        q, k, v, _ = _case(rng, 4, 256, 64, jnp.float32)
+        valid = jnp.asarray([256, 100, 1, 7], jnp.int32)
+        o, m, l = la.partial_attention(q, k, v, valid)
+        ro, rm, rl = ref.partial_attention_ref(q, k, v, valid)
+        np.testing.assert_allclose(o, ro, atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(m, rm, atol=1e-6)
+        np.testing.assert_allclose(l, rl, atol=2e-5, rtol=2e-5)
+
+    def test_fully_masked_slice_is_identity_element(self):
+        """valid == 0 must produce (0, NEG_INF-ish, 0): zero weight."""
+        rng = np.random.default_rng(22)
+        q, k, v, _ = _case(rng, 4, 256, 64, jnp.float32)
+        valid = jnp.zeros(4, jnp.int32)
+        o, m, l = la.partial_attention(q, k, v, valid)
+        np.testing.assert_array_equal(np.asarray(o), 0.0)
+        np.testing.assert_array_equal(np.asarray(l), 0.0)
+        assert (np.asarray(m) <= la.NEG_INF / 2).all()
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        g=st.integers(1, 6),
+        nblk=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_partials(self, g, nblk, seed):
+        n = nblk * 128
+        rng = np.random.default_rng(seed)
+        q, k, v, _ = _case(rng, g, n, 64, jnp.float32)
+        valid = jnp.asarray(rng.integers(0, n + 1, g), jnp.int32)
+        o, m, l = la.partial_attention(q, k, v, valid, block_t=128)
+        ro, rm, rl = ref.partial_attention_ref(q, k, v, valid)
+        np.testing.assert_allclose(o, ro, atol=3e-5, rtol=3e-5)
+        np.testing.assert_allclose(l, rl, atol=3e-5, rtol=3e-5)
+
+
+class TestRescaleReduce:
+    def _split_partials(self, rng, q, k, v, lens, bounds):
+        parts = []
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            valid = jnp.clip(lens - lo, 0, hi - lo)
+            # pad slices to a common width for the stacked kernel input
+            parts.append(
+                ref.partial_attention_ref(q, k[:, lo:hi], v[:, lo:hi], valid)
+            )
+        return parts
+
+    def test_kernel_reduce_matches_full(self):
+        rng = np.random.default_rng(30)
+        q, k, v, lens = _case(rng, 4, 512, 64, jnp.float32)
+        bounds = [0, 64, 65, 300, 512]  # deliberately unequal slices
+        parts = self._split_partials(rng, q, k, v, lens, bounds)
+        # stack with padding to widest slice handled by (o,m,l) being [G,*]
+        o, lse = la.rescale_reduce(
+            jnp.stack([p[0] for p in parts]),
+            jnp.stack([p[1] for p in parts]),
+            jnp.stack([p[2] for p in parts]),
+        )
+        np.testing.assert_allclose(
+            o, ref.attention_ref(q, k, v, lens), atol=2e-5, rtol=2e-5
+        )
+
+    def test_identity_slot_padding(self):
+        """Padding the P axis with (0, NEG_INF, 0) must not change results."""
+        rng = np.random.default_rng(31)
+        q, k, v, lens = _case(rng, 4, 256, 64, jnp.float32)
+        parts = self._split_partials(rng, q, k, v, lens, [0, 128, 256])
+        g, d = 4, 64
+        ident_o = jnp.zeros((1, g, d))
+        ident_m = jnp.full((1, g, 1), ref.NEG_INF)
+        ident_l = jnp.zeros((1, g, 1))
+        o, _ = la.rescale_reduce(
+            jnp.concatenate([jnp.stack([p[0] for p in parts]), ident_o]),
+            jnp.concatenate([jnp.stack([p[1] for p in parts]), ident_m]),
+            jnp.concatenate([jnp.stack([p[2] for p in parts]), ident_l]),
+        )
+        np.testing.assert_allclose(
+            o, ref.attention_ref(q, k, v, lens), atol=2e-5, rtol=2e-5
+        )
+
+
+class TestAssociativity:
+    """The paper's §IV-A theorem, property-tested end to end in jnp."""
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        nsplits=st.integers(0, 6),
+        order=st.sampled_from(["left", "right", "tree"]),
+    )
+    def test_any_split_any_order(self, seed, nsplits, order):
+        rng = np.random.default_rng(seed)
+        g, n, d = 3, 384, 64
+        q, k, v, lens = _case(rng, g, n, d, jnp.float32)
+        splits = sorted(rng.integers(1, n, nsplits).tolist())
+        o = ref.lean_attention_ref(q, k, v, lens, splits, reduce_order=order)
+        np.testing.assert_allclose(
+            o, ref.attention_ref(q, k, v, lens), atol=3e-5, rtol=3e-5
+        )
+
+    def test_pairwise_commutative_in_value(self):
+        """f(x,y) and f(y,x) finalize to the same output (order of the
+        *reduction arguments* is free; linearity of the numerator)."""
+        rng = np.random.default_rng(40)
+        g, n, d = 4, 256, 64
+        q, k, v, lens = _case(rng, g, n, d, jnp.float32)
+        px = ref.partial_attention_ref(q, k[:, :100], v[:, :100], jnp.minimum(lens, 100))
+        py = ref.partial_attention_ref(
+            q, k[:, 100:], v[:, 100:], jnp.clip(lens - 100, 0, n - 100)
+        )
+        oxy = ref.finalize_ref(
+            ref.rescale_reduce_ref(*px, *py)[0], ref.rescale_reduce_ref(*px, *py)[2]
+        )
+        oyx = ref.finalize_ref(
+            ref.rescale_reduce_ref(*py, *px)[0], ref.rescale_reduce_ref(*py, *px)[2]
+        )
+        np.testing.assert_allclose(oxy, oyx, atol=1e-6)
+
+
+def jax_logsumexp(s):
+    import jax
+
+    return jax.scipy.special.logsumexp(s, axis=-1)

@@ -1,0 +1,139 @@
+"""L2 model tests: decode step (Pallas path) vs dense oracle, prefill→decode
+consistency, shape contracts the Rust runtime relies on."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels import ref as kref
+
+CFG = M.CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return [jnp.asarray(w) for w in M.init_params(CFG, seed=0)]
+
+
+def _random_cache(rng, cfg):
+    shape = (cfg.n_layers, cfg.batch, cfg.n_heads, cfg.ctx_bucket, cfg.head_dim)
+    return (
+        jnp.asarray(rng.standard_normal(shape), jnp.float32),
+        jnp.asarray(rng.standard_normal(shape), jnp.float32),
+    )
+
+
+class TestDecodeStep:
+    def test_matches_dense_oracle(self, params):
+        rng = np.random.default_rng(0)
+        kc, vc = _random_cache(rng, CFG)
+        toks = jnp.asarray(rng.integers(0, CFG.vocab, CFG.batch), jnp.int32)
+        pos = jnp.asarray([5, CFG.ctx_bucket - 1], jnp.int32)
+        lg1, nk1, nv1 = M.decode_step(CFG, params, toks, kc, vc, pos)
+        lg2, nk2, nv2 = M.decode_step_dense(CFG, params, toks, kc, vc, pos)
+        np.testing.assert_allclose(lg1, lg2, atol=5e-5, rtol=5e-5)
+        np.testing.assert_allclose(nk1, nk2, atol=5e-5, rtol=5e-5)
+        np.testing.assert_allclose(nv1, nv2, atol=5e-5, rtol=5e-5)
+
+    def test_output_shapes(self, params):
+        rng = np.random.default_rng(1)
+        kc, vc = _random_cache(rng, CFG)
+        toks = jnp.zeros(CFG.batch, jnp.int32)
+        pos = jnp.ones(CFG.batch, jnp.int32)
+        lg, nk, nv = M.decode_step(CFG, params, toks, kc, vc, pos)
+        assert lg.shape == (CFG.batch, CFG.vocab)
+        assert nk.shape == (CFG.n_layers, CFG.batch, CFG.n_heads, CFG.head_dim)
+        assert nv.shape == nk.shape
+
+    def test_position_zero_uses_only_fresh_token(self, params):
+        """pos == 0: cache contributes nothing; garbage cache must not leak."""
+        rng = np.random.default_rng(2)
+        kc, vc = _random_cache(rng, CFG)
+        kc2 = kc * 1e3  # wildly different garbage
+        vc2 = vc * -7.0
+        toks = jnp.asarray(rng.integers(0, CFG.vocab, CFG.batch), jnp.int32)
+        pos = jnp.zeros(CFG.batch, jnp.int32)
+        lg1, _, _ = M.decode_step(CFG, params, toks, kc, vc, pos)
+        lg2, _, _ = M.decode_step(CFG, params, toks, kc2, vc2, pos)
+        np.testing.assert_allclose(lg1, lg2, atol=1e-5)
+
+    def test_deterministic(self, params):
+        rng = np.random.default_rng(3)
+        kc, vc = _random_cache(rng, CFG)
+        toks = jnp.asarray([1, 2], jnp.int32)
+        pos = jnp.asarray([3, 4], jnp.int32)
+        a = M.decode_step(CFG, params, toks, kc, vc, pos)[0]
+        b = M.decode_step(CFG, params, toks, kc, vc, pos)[0]
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestPrefillDecodeConsistency:
+    def test_decode_continues_prefill(self, params):
+        """Prefill P tokens, then decode token P; must equal prefilling P+1
+        tokens directly (same attention, one step later)."""
+        rng = np.random.default_rng(4)
+        b, p = CFG.batch, CFG.prefill_bucket
+        prompt = jnp.asarray(rng.integers(0, CFG.vocab, (b, p)), jnp.int32)
+        lens = jnp.full((b,), p - 1, jnp.int32)
+
+        # Path A: prefill p-1 tokens, decode token at position p-1.
+        lgA, kpre, vpre = M.prefill_step(CFG, params, prompt, lens)
+        next_tok = prompt[:, p - 1]
+        kc = jnp.zeros(
+            (CFG.n_layers, b, CFG.n_heads, CFG.ctx_bucket, CFG.head_dim),
+            jnp.float32,
+        )
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[:, :, :, : p].set(kpre)
+        vc = vc.at[:, :, :, : p].set(vpre)
+        pos = jnp.full((b,), p - 1, jnp.int32)
+        lgB, _, _ = M.decode_step(CFG, params, next_tok, kc, vc, pos)
+
+        # Path B: prefill all p tokens; last-token logits.
+        lens_full = jnp.full((b,), p, jnp.int32)
+        lgC, _, _ = M.prefill_step(CFG, params, prompt, lens_full)
+        np.testing.assert_allclose(lgB, lgC, atol=1e-3, rtol=1e-3)
+
+    def test_prefill_padding_invariance(self, params):
+        """Tokens beyond `lengths` must not affect last-token logits."""
+        rng = np.random.default_rng(5)
+        b, p = CFG.batch, CFG.prefill_bucket
+        prompt = jnp.asarray(rng.integers(0, CFG.vocab, (b, p)), jnp.int32)
+        lens = jnp.full((b,), p // 2, jnp.int32)
+        lg1, k1, _ = M.prefill_step(CFG, params, prompt, lens)
+        scrambled = prompt.at[:, p // 2 :].set(
+            jnp.asarray(rng.integers(0, CFG.vocab, (b, p - p // 2)), jnp.int32)
+        )
+        lg2, k2, _ = M.prefill_step(CFG, params, scrambled, lens)
+        np.testing.assert_allclose(lg1, lg2, atol=1e-5)
+        # K rows inside the true length are identical too
+        np.testing.assert_allclose(
+            k1[:, :, :, : p // 2], k2[:, :, :, : p // 2], atol=1e-6
+        )
+
+
+class TestParamLayout:
+    def test_param_order_matches_init(self):
+        order = CFG.param_order()
+        params = M.init_params(CFG, seed=0)
+        assert len(order) == len(params)
+        for (name, shape), w in zip(order, params):
+            assert tuple(shape) == w.shape, name
+
+    def test_param_count(self):
+        total = sum(w.size for w in M.init_params(CFG))
+        assert total == CFG.param_count()
+
+    def test_init_deterministic(self):
+        a = M.init_params(CFG, seed=0)
+        b = M.init_params(CFG, seed=0)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_different_seeds_differ(self):
+        a = M.init_params(CFG, seed=0)
+        b = M.init_params(CFG, seed=1)
+        assert any(not np.array_equal(x, y) for x, y in zip(a, b))

@@ -1,0 +1,106 @@
+"""Property tests for the softmax re-scaling reduction (§IV-A) on the
+jnp side: associativity, identity, chunk-subdivision exactness, and the
+LeanTile table contract shared with the Rust planner."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lean_attention as la
+from compile.kernels import ref
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+class TestReductionProperties:
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 64))
+    def test_subdividing_a_partial_is_exact(self, seed, n):
+        """Splitting any KV slice into sub-slices and reducing must give
+        the same partial — the property the Rust executor's bucket
+        chunking relies on."""
+        rng = np.random.default_rng(seed)
+        g, d = 2, 16
+        q = _rand(rng, (g, d))
+        k = _rand(rng, (g, n, d))
+        v = _rand(rng, (g, n, d))
+        valid = jnp.asarray(rng.integers(1, n + 1, g), jnp.int32)
+
+        whole = ref.partial_attention_ref(q, k, v, valid)
+
+        cut = int(rng.integers(1, n))
+        p1 = ref.partial_attention_ref(q, k[:, :cut], v[:, :cut], jnp.minimum(valid, cut))
+        p2 = ref.partial_attention_ref(
+            q, k[:, cut:], v[:, cut:], jnp.clip(valid - cut, 0, n - cut)
+        )
+        o, m, l = ref.rescale_reduce_ref(*p1, *p2)
+
+        # compare finalized outputs and rowsums
+        np.testing.assert_allclose(
+            ref.finalize_ref(o, jnp.where(l == 0, 1.0, l)),
+            ref.finalize_ref(whole[0], jnp.where(whole[2] == 0, 1.0, whole[2])),
+            atol=1e-5,
+            rtol=1e-5,
+        )
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_reduce_commutes_after_finalize(self, seed):
+        rng = np.random.default_rng(seed)
+        g, d, n = 3, 8, 48
+        q = _rand(rng, (g, d))
+        k = _rand(rng, (g, n, d))
+        v = _rand(rng, (g, n, d))
+        lens = jnp.full((g,), n, jnp.int32)
+        px = ref.partial_attention_ref(q, k[:, :20], v[:, :20], jnp.minimum(lens, 20))
+        py = ref.partial_attention_ref(q, k[:, 20:], v[:, 20:], lens - 20)
+        oxy, _, lxy = ref.rescale_reduce_ref(*px, *py)
+        oyx, _, lyx = ref.rescale_reduce_ref(*py, *px)
+        np.testing.assert_allclose(
+            ref.finalize_ref(oxy, lxy), ref.finalize_ref(oyx, lyx), atol=1e-6
+        )
+
+    def test_identity_is_neutral(self):
+        rng = np.random.default_rng(0)
+        g, d = 2, 8
+        o = _rand(rng, (g, d))
+        m = _rand(rng, (g, 1))
+        l = jnp.abs(_rand(rng, (g, 1))) + 0.1
+        ident = (jnp.zeros((g, d)), jnp.full((g, 1), ref.NEG_INF), jnp.zeros((g, 1)))
+        o2, m2, l2 = ref.rescale_reduce_ref(o, m, l, *ident)
+        np.testing.assert_allclose(o2, o, atol=1e-7)
+        np.testing.assert_allclose(m2, m, atol=1e-7)
+        np.testing.assert_allclose(l2, l, atol=1e-7)
+
+    def test_reduction_stable_under_extreme_maxima(self):
+        g, d = 1, 4
+        parts = []
+        for m in [-300.0, 250.0, -50.0, 249.0]:
+            parts.append(
+                (
+                    jnp.ones((g, d)),
+                    jnp.full((g, 1), m, jnp.float32),
+                    jnp.ones((g, 1), jnp.float32),
+                )
+            )
+        acc = parts[0]
+        for p in parts[1:]:
+            acc = ref.rescale_reduce_ref(*acc, *p)
+        out = ref.finalize_ref(acc[0], acc[2])
+        assert np.isfinite(np.asarray(out)).all()
+
+
+class TestLeanTileTable:
+    def test_paper_values(self):
+        """§IV-B: 256 tokens for d=64, 128 for d=128 — and the Rust
+        planner (partition::lean_tile) mirrors this table."""
+        assert la.lean_tile_for(64) == 256
+        assert la.lean_tile_for(128) == 128
+
+    def test_fallback_positive(self):
+        for d in [8, 48, 100, 512]:
+            assert la.lean_tile_for(d) >= 16

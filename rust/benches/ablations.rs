@@ -1,0 +1,12 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! LeanTile granularity (§IV-B), co-resident CTAs per SM (Eq. 2),
+//! FlashInfer page size (§V), and the mixed prefill+decode extension.
+use lean_attention::bench_harness::figures::{
+    ablation_ctas_per_sm, ablation_fi_page, ablation_lean_tile, mixed_phase_batching,
+};
+fn main() {
+    ablation_lean_tile().emit("ablation_lean_tile");
+    ablation_ctas_per_sm().emit("ablation_ctas_per_sm");
+    ablation_fi_page().emit("ablation_fi_page");
+    mixed_phase_batching().emit("ext_mixed_phase");
+}

@@ -1,0 +1,49 @@
+//! PJRT attention wall-clock on this CPU: fused kernel vs the stream-K
+//! partial path (plumbing cost; exactness is asserted). Self-skips when
+//! artifacts are absent. Perf-pass subject in EXPERIMENTS.md §Perf.
+
+use std::rc::Rc;
+
+use lean_attention::bench_harness::runner::{bench, save};
+use lean_attention::partition::plan::{build_plan, DecodeProblem, Strategy};
+use lean_attention::runtime::attention_exec::AttentionProblem;
+use lean_attention::runtime::{AttentionExecutor, Manifest, Runtime};
+use lean_attention::util::rng::Rng;
+
+fn main() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("skipping attention_pjrt: artifacts not built");
+        return;
+    }
+    let runtime = Rc::new(Runtime::cpu().expect("pjrt"));
+    let manifest = Rc::new(Manifest::load(dir).expect("manifest"));
+    let exec = AttentionExecutor::new(runtime, manifest);
+
+    let mut results = Vec::new();
+    for (g, n) in [(8usize, 1024usize), (16, 4096)] {
+        let d = 64;
+        let mut rng = Rng::new(3);
+        let q = rng.normal_vec(g * d);
+        let k = rng.normal_vec(g * n * d);
+        let v = rng.normal_vec(g * n * d);
+        let lens: Vec<u32> = vec![n as u32; g];
+        let ap = AttentionProblem { q: &q, k: &k, v: &v, lens: &lens, g, n, d };
+
+        results.push(bench(&format!("pjrt_full_g{g}_n{n}"), 5, || {
+            std::hint::black_box(exec.full(&ap).expect("full"));
+        }));
+
+        let problem = DecodeProblem {
+            heads: 1,
+            head_dim: d,
+            ctx_lens: lens.clone(),
+            tile: 256,
+        };
+        let plan = build_plan(&problem, Strategy::StreamK, 216);
+        results.push(bench(&format!("pjrt_lean_g{g}_n{n}"), 5, || {
+            std::hint::black_box(exec.lean(&ap, &plan).expect("lean"));
+        }));
+    }
+    save("attention_pjrt", &results);
+}

@@ -1,0 +1,11 @@
+//! Fig 2 bench: regenerate the prefill/decode timeshare table and time
+//! the analytic model itself.
+use lean_attention::bench_harness::figures::fig02_timeshare;
+use lean_attention::bench_harness::runner::{bench, save};
+fn main() {
+    fig02_timeshare().emit("fig02");
+    let r = bench("fig02_generation", 5, || {
+        std::hint::black_box(fig02_timeshare());
+    });
+    save("fig02", &[r]);
+}

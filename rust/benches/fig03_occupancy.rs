@@ -1,0 +1,10 @@
+//! Fig 3 bench: SM occupancy LA vs FD (56 heads, BS 1, A100).
+use lean_attention::bench_harness::figures::fig03_occupancy;
+use lean_attention::bench_harness::runner::{bench, save};
+fn main() {
+    fig03_occupancy().emit("fig03");
+    let r = bench("fig03_generation", 5, || {
+        std::hint::black_box(fig03_occupancy());
+    });
+    save("fig03", &[r]);
+}

@@ -1,0 +1,7 @@
+//! Fig 7 bench: A100 speedups vs context / heads / batch (d=64).
+use lean_attention::bench_harness::figures::fig07_a100;
+fn main() {
+    for (i, t) in fig07_a100().iter().enumerate() {
+        t.emit(&format!("fig07{}", ['a', 'b', 'c'][i]));
+    }
+}

@@ -1,0 +1,7 @@
+//! Fig 8 bench: H100 speedups vs context / heads / batch (d=64).
+use lean_attention::bench_harness::figures::fig08_h100;
+fn main() {
+    for (i, t) in fig08_h100().iter().enumerate() {
+        t.emit(&format!("fig08{}", ['a', 'b', 'c'][i]));
+    }
+}

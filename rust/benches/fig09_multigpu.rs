@@ -1,0 +1,7 @@
+//! Fig 9 bench: 8xA100 tensor-parallel speedups (256+ heads, 1k-1M ctx).
+use lean_attention::bench_harness::figures::fig09_multigpu;
+fn main() {
+    for (i, t) in fig09_multigpu().iter().enumerate() {
+        t.emit(&format!("fig09{}", ['a', 'b', 'c'][i]));
+    }
+}

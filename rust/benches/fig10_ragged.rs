@@ -1,0 +1,5 @@
+//! Fig 10 bench: ragged-batch speedup vs batch-context ratio.
+use lean_attention::bench_harness::figures::fig10_ragged;
+fn main() {
+    fig10_ragged().emit("fig10");
+}

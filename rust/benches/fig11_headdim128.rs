@@ -1,0 +1,5 @@
+//! Fig 11 bench: head-dim-128 model family (LLaMA-2 / Mistral / Phi-3).
+use lean_attention::bench_harness::figures::fig11_headdim128;
+fn main() {
+    fig11_headdim128().emit("fig11");
+}

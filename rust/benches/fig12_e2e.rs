@@ -1,0 +1,5 @@
+//! Fig 12 bench: end-to-end Phi-3 Medium speedup (8:1 prompt:output).
+use lean_attention::bench_harness::figures::fig12_e2e;
+fn main() {
+    fig12_e2e().emit("fig12");
+}

@@ -1,0 +1,5 @@
+//! Fig 13 bench: attention energy relative to FlashDecoding.
+use lean_attention::bench_harness::figures::fig13_energy;
+fn main() {
+    fig13_energy().emit("fig13");
+}

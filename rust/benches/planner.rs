@@ -1,0 +1,32 @@
+//! Microbench: plan construction (per-step scheduling cost in the
+//! engine hot loop). Perf-pass target in EXPERIMENTS.md §Perf.
+
+use lean_attention::bench_harness::runner::{bench, save};
+use lean_attention::partition::plan::{build_plan, DecodeProblem, Strategy};
+use lean_attention::util::timer::black_box;
+
+fn main() {
+    let mut results = Vec::new();
+    for (b, h, ctx) in [(4usize, 32usize, 65_536usize), (8, 56, 262_144), (32, 128, 1 << 20)] {
+        let p = DecodeProblem::uniform(b, h, ctx, 64);
+        for (label, s) in [
+            ("stream_k", Strategy::StreamK),
+            ("fixed_split_auto", Strategy::fixed_split_auto(&p, 108)),
+            ("dense", Strategy::Dense),
+        ] {
+            results.push(bench(
+                &format!("{label}_b{b}_h{h}_ctx{ctx}"),
+                100,
+                || {
+                    black_box(build_plan(&p, s, 216));
+                },
+            ));
+        }
+    }
+    // ragged planning (engine path builds one per decode step)
+    let ragged = DecodeProblem::ragged(32, (1..=32).map(|i| i * 4096).collect(), 64);
+    results.push(bench("stream_k_ragged_b32", 100, || {
+        black_box(build_plan(&ragged, Strategy::StreamK, 216));
+    }));
+    save("planner", &results);
+}

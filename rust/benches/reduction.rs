@@ -1,0 +1,41 @@
+//! Microbench: the softmax re-scaling reduction (the L3 hot path).
+//! Perf-pass target recorded in EXPERIMENTS.md §Perf.
+
+use lean_attention::attention::Partials;
+use lean_attention::bench_harness::runner::{bench, save};
+use lean_attention::util::rng::Rng;
+use lean_attention::util::timer::black_box;
+
+fn random_partials(rng: &mut Rng, g: usize, d: usize) -> Partials {
+    Partials::from_flat(
+        g,
+        d,
+        rng.normal_vec(g * d),
+        &rng.normal_vec(g),
+        &rng.normal_vec(g).iter().map(|x| x.abs() + 0.1).collect::<Vec<_>>(),
+    )
+}
+
+fn main() {
+    let mut results = Vec::new();
+    for (g, d) in [(32usize, 64usize), (128, 64), (128, 128), (1024, 64)] {
+        let mut rng = Rng::new(7);
+        let parts: Vec<Partials> = (0..16).map(|_| random_partials(&mut rng, g, d)).collect();
+        results.push(bench(
+            &format!("reduce_16_partials_g{g}_d{d}"),
+            50,
+            || {
+                let mut acc = Partials::identity(g, d);
+                for p in &parts {
+                    acc.reduce_from(p);
+                }
+                black_box(&acc);
+            },
+        ));
+        let one = random_partials(&mut rng, g, d);
+        results.push(bench(&format!("finalize_g{g}_d{d}"), 50, || {
+            black_box(one.clone().finalize());
+        }));
+    }
+    save("reduction", &results);
+}

@@ -1,0 +1,14 @@
+//! Exact attention math on the host: the softmax re-scaling reduction
+//! operator (§IV-A of the paper), a scalar reference attention used as the
+//! Rust-side oracle, and a host executor that runs a [`crate::partition`]
+//! plan end-to-end on real numbers (each simulated CTA computes its
+//! partials; host CTAs reduce) — the numerical proof that any partitioning
+//! the planners emit computes *exact* attention.
+
+pub mod partials;
+pub mod reference;
+pub mod rescale;
+
+pub use partials::Partials;
+pub use reference::{attention_host, partial_attention_host};
+pub use rescale::{finalize_rows, rescale_row, RowStats, NEG_INF};

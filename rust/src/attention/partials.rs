@@ -1,0 +1,144 @@
+//! Batched partial-attention container: `G` query rows × head_dim `d`,
+//! each with its `(m, l)` statistics. This is the unit the engine moves
+//! between the PJRT partial-attention artifact and the Rust reduction.
+
+use super::rescale::{finalize_rows, rescale_row, RowStats};
+
+/// `G` un-scaled partial outputs with their softmax statistics.
+#[derive(Clone, Debug)]
+pub struct Partials {
+    pub g: usize,
+    pub d: usize,
+    /// Row-major `[g, d]` un-scaled outputs.
+    pub o: Vec<f32>,
+    pub stats: Vec<RowStats>,
+}
+
+impl Partials {
+    /// The reduction identity for `g` rows of width `d`.
+    pub fn identity(g: usize, d: usize) -> Partials {
+        Partials {
+            g,
+            d,
+            o: vec![0.0; g * d],
+            stats: vec![RowStats::IDENTITY; g],
+        }
+    }
+
+    /// Build from flat `(o, m, l)` buffers as produced by the PJRT partial
+    /// artifact (`o: [g, d]`, `m/l: [g, 1]` flattened).
+    pub fn from_flat(g: usize, d: usize, o: Vec<f32>, m: &[f32], l: &[f32]) -> Partials {
+        assert_eq!(o.len(), g * d);
+        assert_eq!(m.len(), g);
+        assert_eq!(l.len(), g);
+        let stats = m
+            .iter()
+            .zip(l)
+            .map(|(&m, &l)| RowStats { m, l })
+            .collect();
+        Partials { g, d, o, stats }
+    }
+
+    /// Fold `other` into `self` row-by-row (the §IV-A operator, batched).
+    pub fn reduce_from(&mut self, other: &Partials) {
+        assert_eq!(self.g, other.g);
+        assert_eq!(self.d, other.d);
+        let d = self.d;
+        for gi in 0..self.g {
+            rescale_row(
+                &mut self.o[gi * d..(gi + 1) * d],
+                &mut self.stats[gi],
+                &other.o[gi * d..(gi + 1) * d],
+                other.stats[gi],
+            );
+        }
+    }
+
+    /// Fold only the rows in `rows` (engine path: a peer CTA contributed to
+    /// a subset of output tiles).
+    pub fn reduce_rows_from(&mut self, other: &Partials, rows: &[usize]) {
+        let d = self.d;
+        for &gi in rows {
+            rescale_row(
+                &mut self.o[gi * d..(gi + 1) * d],
+                &mut self.stats[gi],
+                &other.o[gi * d..(gi + 1) * d],
+                other.stats[gi],
+            );
+        }
+    }
+
+    /// Normalize into the exact attention output (consumes the partials).
+    pub fn finalize(mut self) -> Vec<f32> {
+        finalize_rows(&mut self.o, &self.stats, self.d);
+        self.o
+    }
+
+    /// Log-sum-exp per row (FA2's `L` output).
+    pub fn lse(&self) -> Vec<f32> {
+        self.stats.iter().map(|s| s.lse()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testing::assert_allclose;
+
+    fn random_partials(rng: &mut Rng, g: usize, d: usize) -> Partials {
+        Partials {
+            g,
+            d,
+            o: rng.normal_vec(g * d),
+            stats: (0..g)
+                .map(|_| RowStats {
+                    m: (rng.normal() * 2.0) as f32,
+                    l: rng.f32() * 3.0 + 0.05,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn identity_then_reduce_equals_copy() {
+        let mut rng = Rng::new(5);
+        let p = random_partials(&mut rng, 4, 8);
+        let mut acc = Partials::identity(4, 8);
+        acc.reduce_from(&p);
+        assert_allclose(&acc.o, &p.o, 1e-6, 1e-6, "o");
+        for (a, b) in acc.stats.iter().zip(&p.stats) {
+            assert!((a.m - b.m).abs() < 1e-6 && (a.l - b.l).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn from_flat_round_trip() {
+        let o = vec![1.0, 2.0, 3.0, 4.0];
+        let p = Partials::from_flat(2, 2, o.clone(), &[0.1, 0.2], &[1.0, 2.0]);
+        assert_eq!(p.o, o);
+        assert_eq!(p.stats[1], RowStats { m: 0.2, l: 2.0 });
+    }
+
+    #[test]
+    fn reduce_rows_only_touches_selected() {
+        let mut rng = Rng::new(6);
+        let a = random_partials(&mut rng, 3, 4);
+        let b = random_partials(&mut rng, 3, 4);
+        let mut sel = a.clone();
+        sel.reduce_rows_from(&b, &[1]);
+        // row 0 and 2 unchanged
+        assert_eq!(&sel.o[0..4], &a.o[0..4]);
+        assert_eq!(&sel.o[8..12], &a.o[8..12]);
+        // row 1 matches full reduce
+        let mut full = a.clone();
+        full.reduce_from(&b);
+        assert_allclose(&sel.o[4..8], &full.o[4..8], 1e-6, 1e-6, "row1");
+    }
+
+    #[test]
+    fn finalize_normalizes() {
+        let p = Partials::from_flat(1, 2, vec![2.0, 6.0], &[0.0], &[2.0]);
+        assert_eq!(p.finalize(), vec![1.0, 3.0]);
+    }
+}

@@ -1,0 +1,189 @@
+//! Scalar exact-attention oracle on the host. Mirrors
+//! `python/compile/kernels/ref.py` so the Rust side can validate both the
+//! PJRT artifacts and the partition plans without crossing the FFI.
+//!
+//! All math in f64 accumulation over f32 storage — the tolerance anchor
+//! for everything else in the repo.
+
+use super::partials::Partials;
+use super::rescale::{RowStats, NEG_INF};
+
+/// Exact decode attention.
+///
+/// * `q: [g, d]`, `k/v: [g, n, d]` row-major, `lens[g]` valid context per
+///   group. Returns `[g, d]`.
+pub fn attention_host(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    g: usize,
+    n: usize,
+    d: usize,
+    lens: &[u32],
+) -> Vec<f32> {
+    let p = partial_attention_host(q, k, v, g, n, d, lens, 0);
+    p.finalize()
+}
+
+/// Un-scaled partial attention over rows `[0, n)` of a KV slice, where
+/// only the first `lens[g] - start` rows (clamped) are valid — i.e. the
+/// slice begins at absolute context offset `start`.
+#[allow(clippy::too_many_arguments)]
+pub fn partial_attention_host(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    g: usize,
+    n: usize,
+    d: usize,
+    lens: &[u32],
+    start: usize,
+) -> Partials {
+    assert_eq!(q.len(), g * d, "q shape");
+    assert_eq!(k.len(), g * n * d, "k shape");
+    assert_eq!(v.len(), g * n * d, "v shape");
+    assert_eq!(lens.len(), g, "lens shape");
+    let scale = 1.0 / (d as f64).sqrt();
+
+    let mut out = Partials::identity(g, d);
+    let mut scores = vec![0.0f64; n];
+    for gi in 0..g {
+        let valid = (lens[gi] as usize).saturating_sub(start).min(n);
+        if valid == 0 {
+            continue;
+        }
+        let qrow = &q[gi * d..(gi + 1) * d];
+        let kmat = &k[gi * n * d..(gi + 1) * n * d];
+        let vmat = &v[gi * n * d..(gi + 1) * n * d];
+
+        let mut m = f64::from(NEG_INF);
+        for (t, s) in scores.iter_mut().enumerate().take(valid) {
+            let krow = &kmat[t * d..(t + 1) * d];
+            let dot: f64 = qrow
+                .iter()
+                .zip(krow)
+                .map(|(&a, &b)| f64::from(a) * f64::from(b))
+                .sum();
+            *s = dot * scale;
+            m = m.max(*s);
+        }
+
+        let mut l = 0.0f64;
+        let mut acc = vec![0.0f64; d];
+        for t in 0..valid {
+            let w = (scores[t] - m).exp();
+            l += w;
+            let vrow = &vmat[t * d..(t + 1) * d];
+            for (a, &b) in acc.iter_mut().zip(vrow) {
+                *a += w * f64::from(b);
+            }
+        }
+        for (o, a) in out.o[gi * d..(gi + 1) * d].iter_mut().zip(&acc) {
+            *o = *a as f32;
+        }
+        out.stats[gi] = RowStats { m: m as f32, l: l as f32 };
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testing::{assert_allclose, prop_check};
+
+    #[test]
+    fn single_token_returns_v0() {
+        let mut rng = Rng::new(1);
+        let (g, n, d) = (3, 8, 4);
+        let q = rng.normal_vec(g * d);
+        let k = rng.normal_vec(g * n * d);
+        let v = rng.normal_vec(g * n * d);
+        let lens = vec![1u32; g];
+        let o = attention_host(&q, &k, &v, g, n, d, &lens);
+        for gi in 0..g {
+            assert_allclose(
+                &o[gi * d..(gi + 1) * d],
+                &v[gi * n * d..gi * n * d + d],
+                1e-6,
+                1e-6,
+                "v0",
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_scores_average_values() {
+        // identical K rows -> softmax uniform -> output = mean of V rows
+        let (g, n, d) = (1, 4, 2);
+        let q = vec![1.0, 0.0];
+        let k = vec![1.0, 0.0].repeat(n);
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let o = attention_host(&q, &k, &v, g, n, d, &[4]);
+        assert_allclose(&o, &[4.0, 5.0], 1e-6, 1e-6, "mean");
+    }
+
+    #[test]
+    fn partials_cover_context_equals_full() {
+        prop_check("split partials reduce to full", 50, |rng| {
+            let g = rng.urange(1, 4);
+            let n = rng.urange(4, 64);
+            let d = *rng.choose(&[4usize, 8, 16]);
+            let q = rng.normal_vec(g * d);
+            let k = rng.normal_vec(g * n * d);
+            let v = rng.normal_vec(g * n * d);
+            let lens: Vec<u32> = (0..g).map(|_| rng.range(1, n as u64 + 1) as u32).collect();
+
+            let full = attention_host(&q, &k, &v, g, n, d, &lens);
+
+            // random split point
+            let cut = rng.urange(1, n);
+            let slice = |m: &[f32], lo: usize, hi: usize| -> Vec<f32> {
+                let mut out = Vec::with_capacity(g * (hi - lo) * d);
+                for gi in 0..g {
+                    out.extend_from_slice(&m[gi * n * d + lo * d..gi * n * d + hi * d]);
+                }
+                out
+            };
+            let k1 = slice(&k, 0, cut);
+            let v1 = slice(&v, 0, cut);
+            let k2 = slice(&k, cut, n);
+            let v2 = slice(&v, cut, n);
+            let mut p1 = partial_attention_host(&q, &k1, &v1, g, cut, d, &lens, 0);
+            let p2 = partial_attention_host(&q, &k2, &v2, g, n - cut, d, &lens, cut);
+            p1.reduce_from(&p2);
+            let got = p1.finalize();
+            for (a, b) in got.iter().zip(&full) {
+                if (a - b).abs() > 1e-4 {
+                    return Err(format!("mismatch {a} vs {b} (cut {cut})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn start_offset_masks_prefix_lens() {
+        // A slice whose start is beyond the length contributes identity.
+        let mut rng = Rng::new(3);
+        let (g, n, d) = (2, 8, 4);
+        let q = rng.normal_vec(g * d);
+        let k = rng.normal_vec(g * n * d);
+        let v = rng.normal_vec(g * n * d);
+        let p = partial_attention_host(&q, &k, &v, g, n, d, &[4, 2], 6);
+        assert_eq!(p.stats[0], RowStats::IDENTITY);
+        assert_eq!(p.stats[1], RowStats::IDENTITY);
+        assert!(p.o.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn extreme_scores_stay_finite() {
+        let mut rng = Rng::new(4);
+        let (g, n, d) = (2, 16, 8);
+        let q: Vec<f32> = rng.normal_vec(g * d).iter().map(|x| x * 100.0).collect();
+        let k = rng.normal_vec(g * n * d);
+        let v = rng.normal_vec(g * n * d);
+        let o = attention_host(&q, &k, &v, g, n, d, &[16, 16]);
+        assert!(o.iter().all(|x| x.is_finite()));
+    }
+}

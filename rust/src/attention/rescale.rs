@@ -1,0 +1,209 @@
+//! The softmax re-scaling reduction operator (§IV-A).
+//!
+//! A partial attention result for one query row is `(O~, m, l)`:
+//! un-scaled output `O~ ∈ R^d`, running rowmax `m`, running rowsum `l`.
+//! The operator
+//!
+//! ```text
+//! m'  = max(m_x, m_y)
+//! l'  = e^{m_x - m'} l_x + e^{m_y - m'} l_y
+//! O~' = e^{m_x - m'} O~_x + e^{m_y - m'} O~_y
+//! ```
+//!
+//! is **associative** (proved in the paper and property-tested in
+//! `rust/tests/associativity.rs`), has the identity element
+//! `(0, NEG_INF, 0)`, and is commutative in value — which is what lets
+//! LeanAttention split a head's context into *unequal* blocks, compute the
+//! partials anywhere, and reduce them in whatever order the host CTAs see
+//! them (Alg 2 lines 24-39).
+//!
+//! This is the L3 hot path: the engine reduces every stream-K partial
+//! here, so `rescale_row` is written to be allocation-free and
+//! auto-vectorizable.
+
+/// Finite stand-in for -inf, shared with the Pallas kernels (`ref.NEG_INF`).
+/// `exp(NEG_INF - m)` underflows to exactly 0.0 for any realistic `m`.
+pub const NEG_INF: f32 = -1.0e30;
+
+/// Per-row softmax statistics carried alongside the un-scaled output.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RowStats {
+    /// Running row maximum of attention scores.
+    pub m: f32,
+    /// Running row sum of `exp(score - m)`.
+    pub l: f32,
+}
+
+impl RowStats {
+    /// The reduction identity: contributes zero weight.
+    pub const IDENTITY: RowStats = RowStats { m: NEG_INF, l: 0.0 };
+
+    /// Log-sum-exp of the scores this row has seen (FA2's `L`).
+    pub fn lse(&self) -> f32 {
+        if self.l == 0.0 {
+            NEG_INF
+        } else {
+            self.m + self.l.ln()
+        }
+    }
+}
+
+/// Fold `(o_y, y)` into the accumulator `(o_acc, acc)` in place.
+///
+/// Equivalent to `f(acc, y)` in §IV-A. `o_acc` and `o_y` are the d-element
+/// un-scaled outputs of one query row.
+#[inline]
+pub fn rescale_row(o_acc: &mut [f32], acc: &mut RowStats, o_y: &[f32], y: RowStats) {
+    debug_assert_eq!(o_acc.len(), o_y.len());
+    let m_new = acc.m.max(y.m);
+    // exp(NEG_INF - NEG_INF) would be NaN; both-identity means stay identity.
+    if m_new <= NEG_INF {
+        return;
+    }
+    let ax = (acc.m - m_new).exp();
+    let ay = (y.m - m_new).exp();
+    acc.l = ax * acc.l + ay * y.l;
+    acc.m = m_new;
+    // The common fast path in a stream-K reduce is ax == 1.0 (accumulator
+    // already holds the max); skip the accumulator scaling then.
+    if ax == 1.0 {
+        for (a, &b) in o_acc.iter_mut().zip(o_y) {
+            *a += ay * b;
+        }
+    } else {
+        for (a, &b) in o_acc.iter_mut().zip(o_y) {
+            *a = ax * *a + ay * b;
+        }
+    }
+}
+
+/// Final normalization `O = diag(l)^-1 O~` for `g` rows of width `d`
+/// (Alg 2 line 38). Rows with `l == 0` (identity — nothing attended) are
+/// left as zeros rather than NaN.
+pub fn finalize_rows(o: &mut [f32], stats: &[RowStats], d: usize) {
+    debug_assert_eq!(o.len(), stats.len() * d);
+    for (row, st) in o.chunks_mut(d).zip(stats) {
+        if st.l != 0.0 {
+            let inv = 1.0 / st.l;
+            for x in row {
+                *x *= inv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{assert_allclose, prop_check};
+
+    fn reduce_pair(
+        a: (&[f32], RowStats),
+        b: (&[f32], RowStats),
+    ) -> (Vec<f32>, RowStats) {
+        let mut o = a.0.to_vec();
+        let mut st = a.1;
+        rescale_row(&mut o, &mut st, b.0, b.1);
+        (o, st)
+    }
+
+    #[test]
+    fn identity_element_is_neutral() {
+        let o = vec![1.0f32, -2.0, 3.0];
+        let st = RowStats { m: 0.7, l: 2.0 };
+        let (o2, st2) = reduce_pair((&o, st), (&[0.0, 0.0, 0.0], RowStats::IDENTITY));
+        assert_eq!(o2, o);
+        assert_eq!(st2, st);
+        // identity on the left too
+        let (o3, st3) = reduce_pair((&[0.0, 0.0, 0.0], RowStats::IDENTITY), (&o, st));
+        assert_allclose(&o3, &o, 1e-7, 1e-7, "left identity");
+        assert!((st3.m - st.m).abs() < 1e-7 && (st3.l - st.l).abs() < 1e-7);
+    }
+
+    #[test]
+    fn both_identity_stays_identity() {
+        let (o, st) = reduce_pair(
+            (&[0.0, 0.0], RowStats::IDENTITY),
+            (&[0.0, 0.0], RowStats::IDENTITY),
+        );
+        assert_eq!(o, vec![0.0, 0.0]);
+        assert_eq!(st, RowStats::IDENTITY);
+        assert!(st.lse() <= NEG_INF);
+    }
+
+    #[test]
+    fn commutative_in_value() {
+        prop_check("rescale commutes", 200, |rng| {
+            let d = 8;
+            let ox: Vec<f32> = rng.normal_vec(d);
+            let oy: Vec<f32> = rng.normal_vec(d);
+            let sx = RowStats { m: rng.normal() as f32, l: rng.f32() + 0.1 };
+            let sy = RowStats { m: rng.normal() as f32, l: rng.f32() + 0.1 };
+            let (axy, stxy) = reduce_pair((&ox, sx), (&oy, sy));
+            let (ayx, styx) = reduce_pair((&oy, sy), (&ox, sx));
+            for (a, b) in axy.iter().zip(&ayx) {
+                if (a - b).abs() > 1e-5 {
+                    return Err(format!("o mismatch {a} {b}"));
+                }
+            }
+            if (stxy.l - styx.l).abs() > 1e-5 * stxy.l.abs().max(1.0) {
+                return Err("l mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn associative() {
+        prop_check("rescale associates", 300, |rng| {
+            let d = 4;
+            let parts: Vec<(Vec<f32>, RowStats)> = (0..3)
+                .map(|_| {
+                    (
+                        rng.normal_vec(d),
+                        RowStats {
+                            m: (rng.normal() * 3.0) as f32,
+                            l: rng.f32() * 4.0 + 0.01,
+                        },
+                    )
+                })
+                .collect();
+            let (xy, st_xy) = reduce_pair(
+                (&parts[0].0, parts[0].1),
+                (&parts[1].0, parts[1].1),
+            );
+            let (xy_z, st_xyz) = reduce_pair((&xy, st_xy), (&parts[2].0, parts[2].1));
+            let (yz, st_yz) = reduce_pair(
+                (&parts[1].0, parts[1].1),
+                (&parts[2].0, parts[2].1),
+            );
+            let (x_yz, st_x_yz) = reduce_pair((&parts[0].0, parts[0].1), (&yz, st_yz));
+            // Compare *finalized* outputs (the theorem's statement).
+            for ((a, b)) in xy_z
+                .iter()
+                .map(|v| v / st_xyz.l)
+                .zip(x_yz.iter().map(|v| v / st_x_yz.l))
+            {
+                let (a, b): (f32, f32) = (a, b);
+                if (a - b).abs() > 1e-5 {
+                    return Err(format!("assoc mismatch {a} {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn finalize_skips_zero_rows() {
+        let mut o = vec![2.0, 4.0, 0.0, 0.0];
+        let stats = vec![RowStats { m: 0.0, l: 2.0 }, RowStats::IDENTITY];
+        finalize_rows(&mut o, &stats, 2);
+        assert_eq!(o, vec![1.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn lse_matches_naive() {
+        let st = RowStats { m: 3.0, l: 2.0 };
+        assert!((st.lse() - (3.0 + 2.0f32.ln())).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,13 @@
+//! Benchmark harness: workload generators, the paper-figure generators
+//! (one per table/figure in the evaluation section), and plain-text /
+//! JSON table formatting. The `rust/benches/figXX_*.rs` binaries are thin
+//! wrappers over [`figures`].
+
+pub mod figures;
+pub mod runner;
+pub mod table;
+pub mod trace;
+pub mod workload;
+
+pub use runner::{bench, BenchResult};
+pub use table::Table;

@@ -1,0 +1,69 @@
+//! Micro-bench runner (criterion is not in the offline crate cache):
+//! warmup + timed samples + a one-line summary, plus a JSON record under
+//! `target/benches/`.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::util::timer::sample_us;
+use std::collections::BTreeMap;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} mean {:>10.2}us  p50 {:>10.2}us  p99 {:>10.2}us  (n={})",
+            self.name, self.summary.mean, self.summary.p50, self.summary.p99, self.summary.n
+        )
+    }
+}
+
+/// Run one benchmark case: at least `min_iters` iterations and 0.3s.
+pub fn bench(name: &str, min_iters: usize, f: impl FnMut()) -> BenchResult {
+    let samples = sample_us(min_iters, 0.3, f);
+    let r = BenchResult { name: name.to_string(), summary: Summary::of(&samples) };
+    println!("{}", r.line());
+    r
+}
+
+/// Persist a set of results as JSON under `target/benches/<group>.json`.
+pub fn save(group: &str, results: &[BenchResult]) {
+    let arr: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), Json::Str(r.name.clone()));
+            o.insert("mean_us".into(), Json::Num(r.summary.mean));
+            o.insert("p50_us".into(), Json::Num(r.summary.p50));
+            o.insert("p99_us".into(), Json::Num(r.summary.p99));
+            o.insert("n".into(), Json::Num(r.summary.n as f64));
+            Json::Obj(o)
+        })
+        .collect();
+    let dir = std::path::Path::new("target/benches");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let _ = std::fs::write(
+            dir.join(format!("{group}.json")),
+            Json::Arr(arr).to_string(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_summary() {
+        let r = bench("noop", 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.summary.n >= 5);
+        assert!(r.summary.mean >= 0.0);
+    }
+}

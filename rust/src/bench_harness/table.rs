@@ -1,0 +1,177 @@
+//! Plain-text + JSON result tables (the offline stand-in for criterion's
+//! reports). Every figure generator returns one of these; benches print it
+//! and drop a machine-readable copy under `target/figures/`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A titled table of string cells with float-aware formatting.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes rendered under the table (assumptions, paper refs).
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn note(&mut self, note: impl Into<String>) -> &mut Self {
+        self.notes.push(note.into());
+        self
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for (w, c) in widths.iter().zip(cells) {
+                let _ = write!(s, " {c:>w$} |", w = w);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out, &self.headers);
+        let total: usize = widths.iter().map(|w| w + 3).sum::<usize>() + 1;
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "  note: {n}");
+        }
+        out
+    }
+
+    /// Machine-readable JSON (array of header-keyed objects).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                let mut obj = BTreeMap::new();
+                for (h, c) in self.headers.iter().zip(row) {
+                    let v = c
+                        .parse::<f64>()
+                        .map(Json::Num)
+                        .unwrap_or_else(|_| Json::Str(c.clone()));
+                    obj.insert(h.clone(), v);
+                }
+                Json::Obj(obj)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("title".to_string(), Json::Str(self.title.clone()));
+        top.insert("rows".to_string(), Json::Arr(rows));
+        top.insert(
+            "notes".to_string(),
+            Json::Arr(self.notes.iter().cloned().map(Json::Str).collect()),
+        );
+        Json::Obj(top)
+    }
+
+    /// Print to stdout and persist text+json under `target/figures/<name>`.
+    pub fn emit(&self, name: &str) {
+        let text = self.render();
+        println!("{text}");
+        let dir = std::path::Path::new("target/figures");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let _ = std::fs::write(dir.join(format!("{name}.txt")), &text);
+            let _ = std::fs::write(
+                dir.join(format!("{name}.json")),
+                self.to_json().to_string(),
+            );
+        }
+    }
+}
+
+/// Format a float with 2 decimals (shared row-building helper).
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format a float with 3 decimals.
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Human context-length label: 1024 -> "1k", 262144 -> "256k", 1048576 -> "1M".
+pub fn ctx_label(ctx: usize) -> String {
+    if ctx >= 1 << 20 && ctx % (1 << 20) == 0 {
+        format!("{}M", ctx >> 20)
+    } else if ctx >= 1024 && ctx % 1024 == 0 {
+        format!("{}k", ctx >> 10)
+    } else {
+        ctx.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("T", &["a", "long_header"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["100".into(), "x".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.lines().count() >= 4);
+        // all data lines same length
+        let lens: Vec<usize> = s
+            .lines()
+            .filter(|l| l.starts_with('|'))
+            .map(|l| l.len())
+            .collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn json_round_trip_types() {
+        let mut t = Table::new("T", &["n", "s"]);
+        t.row(vec!["1.5".into(), "abc".into()]);
+        let j = t.to_json();
+        let rows = j.at("rows").as_arr().unwrap();
+        assert_eq!(rows[0].at("n").as_f64(), Some(1.5));
+        assert_eq!(rows[0].str_at("s"), "abc");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn ctx_labels() {
+        assert_eq!(ctx_label(1024), "1k");
+        assert_eq!(ctx_label(262_144), "256k");
+        assert_eq!(ctx_label(1 << 20), "1M");
+        assert_eq!(ctx_label(100), "100");
+    }
+}

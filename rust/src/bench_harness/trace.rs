@@ -1,0 +1,202 @@
+//! Trace-driven load generation for the serving engine: Poisson (or
+//! fixed-interval) arrivals with sampled prompt/generation lengths,
+//! replayed open-loop against the engine's step clock. Reports the
+//! serving metrics a deployment cares about (TTFT, end-to-end latency
+//! percentiles, throughput) — the engine-level complement of the paper's
+//! operation-level benchmarks.
+
+use anyhow::Result;
+
+use crate::coordinator::Engine;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// One synthetic request in a trace.
+#[derive(Clone, Debug)]
+pub struct TraceEntry {
+    /// Arrival time in engine steps (iteration-level clock).
+    pub arrival_step: usize,
+    pub prompt_len: usize,
+    pub max_new: usize,
+}
+
+/// Workload trace description.
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    pub requests: usize,
+    /// Mean inter-arrival gap in engine steps (Poisson when `poisson`).
+    pub mean_gap_steps: f64,
+    pub poisson: bool,
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    pub new_min: usize,
+    pub new_max: usize,
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    /// Materialize the trace deterministically.
+    pub fn generate(&self) -> Vec<TraceEntry> {
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0f64;
+        (0..self.requests)
+            .map(|_| {
+                let gap = if self.poisson {
+                    // exponential inter-arrival via inverse CDF
+                    -self.mean_gap_steps * (1.0 - rng.f64()).ln()
+                } else {
+                    self.mean_gap_steps
+                };
+                t += gap;
+                TraceEntry {
+                    arrival_step: t as usize,
+                    prompt_len: rng.urange(self.prompt_min, self.prompt_max + 1),
+                    max_new: rng.urange(self.new_min, self.new_max + 1),
+                }
+            })
+            .collect()
+    }
+}
+
+/// Result of replaying a trace.
+#[derive(Clone, Debug)]
+pub struct TraceReport {
+    pub requests: usize,
+    pub steps: usize,
+    pub wall_s: f64,
+    pub tokens: usize,
+    /// Time-to-first-token per request (seconds, includes queue).
+    pub ttft_s: Summary,
+    /// End-to-end latency per request (seconds).
+    pub e2e_s: Summary,
+    pub tokens_per_s: f64,
+}
+
+impl TraceReport {
+    pub fn render(&self) -> String {
+        format!(
+            "trace: {} requests in {} steps / {:.2}s wall, {} tokens ({:.1} tok/s)\n\
+             TTFT  s: mean {:.3} p50 {:.3} p99 {:.3}\n\
+             e2e   s: mean {:.3} p50 {:.3} p99 {:.3}",
+            self.requests,
+            self.steps,
+            self.wall_s,
+            self.tokens,
+            self.tokens_per_s,
+            self.ttft_s.mean,
+            self.ttft_s.p50,
+            self.ttft_s.p99,
+            self.e2e_s.mean,
+            self.e2e_s.p50,
+            self.e2e_s.p99
+        )
+    }
+}
+
+/// Replay a trace against an engine: submissions are released when the
+/// engine's step counter reaches each arrival step (open-loop on the
+/// iteration clock), and the engine is stepped until drained.
+pub fn replay(engine: &mut Engine, spec: &TraceSpec) -> Result<TraceReport> {
+    let mut trace = spec.generate();
+    // clamp to the engine's buckets
+    let pmax = engine.prefill_bucket();
+    for e in &mut trace {
+        e.prompt_len = e.prompt_len.clamp(1, pmax);
+        e.max_new = e.max_new.max(1);
+    }
+
+    let mut rng = Rng::new(spec.seed ^ 0xABCD);
+    let t0 = std::time::Instant::now();
+    let mut finished = Vec::new();
+    let mut next = 0usize;
+    let mut step = 0usize;
+    while next < trace.len() || !engine.is_idle() {
+        while next < trace.len() && trace[next].arrival_step <= step {
+            let e = &trace[next];
+            let prompt: Vec<i32> =
+                (0..e.prompt_len).map(|_| rng.range(0, 512) as i32).collect();
+            engine.submit(prompt, e.max_new)?;
+            next += 1;
+        }
+        finished.extend(engine.step()?);
+        step += 1;
+        if step > 1_000_000 {
+            anyhow::bail!("trace replay did not drain");
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let ttft: Vec<f64> = finished.iter().map(|f| f.queue_s + f.prefill_s).collect();
+    let e2e: Vec<f64> = finished.iter().map(|f| f.total_s()).collect();
+    let tokens: usize = finished.iter().map(|f| f.output.len()).sum();
+    Ok(TraceReport {
+        requests: finished.len(),
+        steps: step,
+        wall_s,
+        tokens,
+        ttft_s: Summary::of(&ttft),
+        e2e_s: Summary::of(&e2e),
+        tokens_per_s: tokens as f64 / wall_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_generation_deterministic_and_monotonic() {
+        let spec = TraceSpec {
+            requests: 50,
+            mean_gap_steps: 2.0,
+            poisson: true,
+            prompt_min: 1,
+            prompt_max: 64,
+            new_min: 1,
+            new_max: 16,
+            seed: 9,
+        };
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_step, y.arrival_step);
+            assert_eq!(x.prompt_len, y.prompt_len);
+        }
+        assert!(a.windows(2).all(|w| w[0].arrival_step <= w[1].arrival_step));
+    }
+
+    #[test]
+    fn fixed_gap_arrivals_evenly_spaced() {
+        let spec = TraceSpec {
+            requests: 5,
+            mean_gap_steps: 3.0,
+            poisson: false,
+            prompt_min: 4,
+            prompt_max: 4,
+            new_min: 2,
+            new_max: 2,
+            seed: 0,
+        };
+        let t = spec.generate();
+        let arrivals: Vec<usize> = t.iter().map(|e| e.arrival_step).collect();
+        assert_eq!(arrivals, vec![3, 6, 9, 12, 15]);
+    }
+
+    #[test]
+    fn poisson_mean_gap_approximate() {
+        let spec = TraceSpec {
+            requests: 2000,
+            mean_gap_steps: 5.0,
+            poisson: true,
+            prompt_min: 1,
+            prompt_max: 2,
+            new_min: 1,
+            new_max: 2,
+            seed: 17,
+        };
+        let t = spec.generate();
+        let mean = t.last().unwrap().arrival_step as f64 / t.len() as f64;
+        assert!((mean - 5.0).abs() < 0.5, "mean gap {mean}");
+    }
+}

@@ -1,0 +1,99 @@
+//! Workload generators for the evaluation sweeps: the >1000-sample random
+//! problem population of §VI, and ragged batches at controlled
+//! heterogeneity (Fig 10's batch-context-ratio).
+
+use crate::partition::plan::DecodeProblem;
+use crate::util::rng::Rng;
+
+/// The sweep population of §VI: varying batch sizes, context lengths and
+/// attention heads, head_dim 64.
+pub fn sweep_population(samples: usize, seed: u64) -> Vec<DecodeProblem> {
+    let mut rng = Rng::new(seed);
+    let heads = [8usize, 12, 16, 24, 32, 40, 48, 56, 64, 96, 128];
+    let batches = [1usize, 2, 4, 6, 8, 16, 32];
+    let ctx_pows = 10..=19; // 1k .. 512k
+    let ctxs: Vec<usize> = ctx_pows.map(|p| 1usize << p).collect();
+    (0..samples)
+        .map(|_| {
+            DecodeProblem::uniform(
+                *rng.choose(&batches),
+                *rng.choose(&heads),
+                *rng.choose(&ctxs),
+                64,
+            )
+        })
+        .collect()
+}
+
+/// Build a ragged batch whose average/max context ratio is approximately
+/// `ratio` (Fig 10's heterogeneity metric). The longest sequence is pinned
+/// at `max_ctx`; the rest are spread uniformly so the mean hits the target.
+pub fn ragged_batch(
+    batch: usize,
+    heads: usize,
+    max_ctx: usize,
+    ratio: f64,
+    seed: u64,
+) -> DecodeProblem {
+    assert!(batch >= 1);
+    assert!((0.0..=1.0).contains(&ratio));
+    let mut rng = Rng::new(seed);
+    let mut lens = vec![max_ctx as u32];
+    if batch > 1 {
+        // Remaining sequences need mean m = (ratio*batch*max - max)/(batch-1).
+        let target = ((ratio * batch as f64 - 1.0) * max_ctx as f64
+            / (batch - 1) as f64)
+            .max(1.0);
+        for _ in 1..batch {
+            // jitter ±25% around the target, clamped to [1, max].
+            let jitter = 0.75 + 0.5 * rng.f64();
+            let len = (target * jitter).round().clamp(1.0, max_ctx as f64);
+            lens.push(len as u32);
+        }
+    }
+    DecodeProblem::ragged(heads, lens, 64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn population_is_deterministic_and_sized() {
+        let a = sweep_population(100, 1);
+        let b = sweep_population(100, 1);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a[0], b[0]);
+        assert_eq!(a[99], b[99]);
+    }
+
+    #[test]
+    fn population_varies() {
+        let pop = sweep_population(50, 2);
+        let distinct: std::collections::BTreeSet<_> = pop
+            .iter()
+            .map(|p| (p.batch(), p.heads, p.ctx_lens[0]))
+            .collect();
+        assert!(distinct.len() > 10);
+    }
+
+    #[test]
+    fn ragged_ratio_hits_target() {
+        for &ratio in &[0.3, 0.5, 0.8, 1.0] {
+            let p = ragged_batch(8, 32, 65536, ratio, 7);
+            let got = p.batch_context_ratio();
+            assert!(
+                (got - ratio).abs() < 0.15,
+                "ratio target {ratio} got {got}"
+            );
+            assert_eq!(p.ctx_lens[0], 65536);
+        }
+    }
+
+    #[test]
+    fn ragged_single_sequence() {
+        let p = ragged_batch(1, 8, 4096, 0.5, 3);
+        assert_eq!(p.batch(), 1);
+        assert_eq!(p.batch_context_ratio(), 1.0);
+    }
+}

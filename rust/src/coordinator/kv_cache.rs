@@ -1,0 +1,325 @@
+//! Paged KV cache with block tables (the vLLM/FlashInfer storage model,
+//! built as a substrate for the serving engine).
+//!
+//! Storage unit is a **page** of `page_tokens` tokens holding all layers
+//! and heads: `[layers, heads, page_tokens, head_dim]` f32, one buffer for
+//! K and one for V. Sequences own ordered page lists; the engine gathers
+//! a sequence's pages into the contiguous `[l, b, h, ctx_bucket, dh]`
+//! views the decode artifact consumes (the CPU-PJRT analogue of the
+//! paper's constant-stride tensor requirement, §IV-C).
+
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+
+use super::request::RequestId;
+
+/// Paged K/V storage for many sequences.
+pub struct PagedKvCache {
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub page_tokens: usize,
+    k_pages: Vec<Vec<f32>>,
+    v_pages: Vec<Vec<f32>>,
+    free: Vec<usize>,
+    seqs: HashMap<RequestId, SeqEntry>,
+}
+
+struct SeqEntry {
+    pages: Vec<usize>,
+    len: usize,
+}
+
+impl PagedKvCache {
+    /// Allocate a cache with a fixed budget of `num_pages` pages.
+    pub fn new(
+        layers: usize,
+        heads: usize,
+        head_dim: usize,
+        page_tokens: usize,
+        num_pages: usize,
+    ) -> PagedKvCache {
+        let page_elems = layers * heads * page_tokens * head_dim;
+        PagedKvCache {
+            layers,
+            heads,
+            head_dim,
+            page_tokens,
+            k_pages: (0..num_pages).map(|_| vec![0.0; page_elems]).collect(),
+            v_pages: (0..num_pages).map(|_| vec![0.0; page_elems]).collect(),
+            free: (0..num_pages).rev().collect(),
+            seqs: HashMap::new(),
+        }
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.k_pages.len()
+    }
+
+    pub fn seq_len(&self, id: RequestId) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.len)
+    }
+
+    /// Pages needed to hold `tokens` tokens.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Whether a sequence of `tokens` tokens can currently be admitted.
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.pages_for(tokens) <= self.free.len()
+    }
+
+    /// Register a new sequence and copy in its prefill K/V
+    /// (`[layers, heads, len, head_dim]` row-major per tensor).
+    pub fn insert_seq(&mut self, id: RequestId, k: &[f32], v: &[f32], len: usize) -> Result<()> {
+        ensure!(!self.seqs.contains_key(&id), "sequence {id} already cached");
+        let plane = self.heads * self.head_dim;
+        ensure!(k.len() == self.layers * plane * len, "prefill k size");
+        ensure!(v.len() == k.len(), "prefill v size");
+        let need = self.pages_for(len.max(1));
+        if need > self.free.len() {
+            bail!("cache full: need {need} pages, {} free", self.free.len());
+        }
+        let pages: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        let mut entry = SeqEntry { pages, len: 0 };
+        let (heads, dh) = (self.heads, self.head_dim);
+        for t in 0..len {
+            self.write_token(&mut entry, t, |l, h| {
+                let base = (l * heads + h) * len * dh + t * dh;
+                (&k[base..base + dh], &v[base..base + dh])
+            });
+        }
+        entry.len = len;
+        self.seqs.insert(id, entry);
+        Ok(())
+    }
+
+    /// Append one token's K/V rows (`[layers, heads, head_dim]` each).
+    pub fn append_token(&mut self, id: RequestId, k: &[f32], v: &[f32]) -> Result<()> {
+        let plane = self.layers * self.heads * self.head_dim;
+        ensure!(k.len() == plane, "append k size");
+        ensure!(v.len() == plane, "append v size");
+        let mut entry = self.seqs.remove(&id).ok_or_else(|| {
+            anyhow::anyhow!("sequence {id} not cached")
+        })?;
+        let t = entry.len;
+        if t >= entry.pages.len() * self.page_tokens {
+            if self.free.is_empty() {
+                self.seqs.insert(id, entry);
+                bail!("cache full appending to sequence {id}");
+            }
+            let p = self.free.pop().unwrap();
+            entry.pages.push(p);
+        }
+        let (heads, dh) = (self.heads, self.head_dim);
+        self.write_token(&mut entry, t, |l, h| {
+            let base = (l * heads + h) * dh;
+            (&k[base..base + dh], &v[base..base + dh])
+        });
+        entry.len = t + 1;
+        self.seqs.insert(id, entry);
+        Ok(())
+    }
+
+    fn write_token<'a>(
+        &mut self,
+        entry: &mut SeqEntry,
+        t: usize,
+        src: impl Fn(usize, usize) -> (&'a [f32], &'a [f32]),
+    ) {
+        let page = entry.pages[t / self.page_tokens];
+        let slot = t % self.page_tokens;
+        let dh = self.head_dim;
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let off = ((l * self.heads + h) * self.page_tokens + slot) * dh;
+                let (ks, vs) = src(l, h);
+                self.k_pages[page][off..off + dh].copy_from_slice(ks);
+                self.v_pages[page][off..off + dh].copy_from_slice(vs);
+            }
+        }
+    }
+
+    /// Gather a batch of sequences into contiguous decode-artifact views
+    /// `[layers, batch, heads, ctx_bucket, head_dim]` (zero-padded).
+    /// `slots[i] = Some(request)` maps batch lane `i` to a sequence.
+    pub fn gather(
+        &self,
+        slots: &[Option<RequestId>],
+        ctx_bucket: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) -> Result<()> {
+        let b = slots.len();
+        let dh = self.head_dim;
+        let expect = self.layers * b * self.heads * ctx_bucket * dh;
+        ensure!(k_out.len() == expect, "k_out size");
+        ensure!(v_out.len() == expect, "v_out size");
+        k_out.fill(0.0);
+        v_out.fill(0.0);
+        for (bi, slot) in slots.iter().enumerate() {
+            let Some(id) = slot else { continue };
+            let entry = self
+                .seqs
+                .get(id)
+                .ok_or_else(|| anyhow::anyhow!("sequence {id} not cached"))?;
+            ensure!(entry.len <= ctx_bucket, "sequence longer than ctx bucket");
+            for l in 0..self.layers {
+                for h in 0..self.heads {
+                    let dst_base =
+                        (((l * b) + bi) * self.heads + h) * ctx_bucket * dh;
+                    // copy page by page
+                    for (pi, &page) in entry.pages.iter().enumerate() {
+                        let t0 = pi * self.page_tokens;
+                        if t0 >= entry.len {
+                            break;
+                        }
+                        let count = self.page_tokens.min(entry.len - t0);
+                        let src_base =
+                            ((l * self.heads + h) * self.page_tokens) * dh;
+                        let dst = dst_base + t0 * dh;
+                        k_out[dst..dst + count * dh].copy_from_slice(
+                            &self.k_pages[page][src_base..src_base + count * dh],
+                        );
+                        v_out[dst..dst + count * dh].copy_from_slice(
+                            &self.v_pages[page][src_base..src_base + count * dh],
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Release a sequence's pages.
+    pub fn free_seq(&mut self, id: RequestId) {
+        if let Some(entry) = self.seqs.remove(&id) {
+            self.free.extend(entry.pages);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cache() -> PagedKvCache {
+        PagedKvCache::new(2, 3, 4, 8, 16)
+    }
+
+    fn rows(rng: &mut Rng, layers: usize, heads: usize, len: usize, dh: usize) -> Vec<f32> {
+        rng.normal_vec(layers * heads * len * dh)
+    }
+
+    #[test]
+    fn insert_gather_round_trip() {
+        let mut c = cache();
+        let mut rng = Rng::new(1);
+        let len = 13; // crosses a page boundary (page=8)
+        let k = rows(&mut rng, 2, 3, len, 4);
+        let v = rows(&mut rng, 2, 3, len, 4);
+        c.insert_seq(7, &k, &v, len).unwrap();
+        assert_eq!(c.seq_len(7), Some(13));
+        assert_eq!(c.free_pages(), 16 - 2);
+
+        let ctx = 16;
+        let mut ko = vec![0.0; 2 * 1 * 3 * ctx * 4];
+        let mut vo = vec![0.0; ko.len()];
+        c.gather(&[Some(7)], ctx, &mut ko, &mut vo).unwrap();
+        // spot-check token t=9, layer 1, head 2
+        let (l, h, t) = (1usize, 2usize, 9usize);
+        let src = (l * 3 + h) * len * 4 + t * 4;
+        let dst = ((l * 1) * 3 + h) * ctx * 4 + t * 4;
+        assert_eq!(&ko[dst..dst + 4], &k[src..src + 4]);
+        assert_eq!(&vo[dst..dst + 4], &v[src..src + 4]);
+        // padding is zero
+        let pad = ((0 * 1) * 3 + 0) * ctx * 4 + 15 * 4;
+        assert_eq!(&ko[pad..pad + 4], &[0.0; 4]);
+    }
+
+    #[test]
+    fn append_token_and_page_growth() {
+        let mut c = cache();
+        let mut rng = Rng::new(2);
+        let k = rows(&mut rng, 2, 3, 8, 4);
+        let v = rows(&mut rng, 2, 3, 8, 4);
+        c.insert_seq(1, &k, &v, 8).unwrap(); // exactly one page
+        assert_eq!(c.free_pages(), 15);
+        let nk = rng.normal_vec(2 * 3 * 4);
+        let nv = rng.normal_vec(2 * 3 * 4);
+        c.append_token(1, &nk, &nv).unwrap(); // forces a second page
+        assert_eq!(c.free_pages(), 14);
+        assert_eq!(c.seq_len(1), Some(9));
+
+        let mut ko = vec![0.0; 2 * 1 * 3 * 16 * 4];
+        let mut vo = vec![0.0; ko.len()];
+        c.gather(&[Some(1)], 16, &mut ko, &mut vo).unwrap();
+        // token 8 row for layer 0 head 1
+        let dst = ((0 * 1) * 3 + 1) * 16 * 4 + 8 * 4;
+        assert_eq!(&ko[dst..dst + 4], &nk[4..8]);
+    }
+
+    #[test]
+    fn free_seq_returns_pages() {
+        let mut c = cache();
+        let mut rng = Rng::new(3);
+        let k = rows(&mut rng, 2, 3, 20, 4);
+        let v = rows(&mut rng, 2, 3, 20, 4);
+        c.insert_seq(5, &k, &v, 20).unwrap();
+        let used = 16 - c.free_pages();
+        assert_eq!(used, 3); // ceil(20/8)
+        c.free_seq(5);
+        assert_eq!(c.free_pages(), 16);
+        assert_eq!(c.seq_len(5), None);
+    }
+
+    #[test]
+    fn admission_control() {
+        let mut c = cache();
+        assert!(c.can_admit(16 * 8));
+        assert!(!c.can_admit(16 * 8 + 1));
+        let mut rng = Rng::new(4);
+        let k = rows(&mut rng, 2, 3, 100, 4);
+        let v = rows(&mut rng, 2, 3, 100, 4);
+        c.insert_seq(1, &k, &v, 100).unwrap(); // 13 pages
+        assert!(!c.can_admit(8 * 4)); // only 3 pages left
+        let err = c.insert_seq(2, &k, &v, 100).unwrap_err();
+        assert!(err.to_string().contains("cache full"));
+    }
+
+    #[test]
+    fn cache_full_append_is_recoverable() {
+        let mut c = PagedKvCache::new(1, 1, 2, 2, 1);
+        c.insert_seq(1, &[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2)
+            .unwrap();
+        let err = c.append_token(1, &[9.0, 9.0], &[9.0, 9.0]).unwrap_err();
+        assert!(err.to_string().contains("cache full"));
+        // sequence still intact
+        assert_eq!(c.seq_len(1), Some(2));
+    }
+
+    #[test]
+    fn gather_multi_batch_lanes() {
+        let mut c = cache();
+        let mut rng = Rng::new(5);
+        for id in 0..3u64 {
+            let len = 4 + id as usize;
+            let k = rows(&mut rng, 2, 3, len, 4);
+            let v = rows(&mut rng, 2, 3, len, 4);
+            c.insert_seq(id, &k, &v, len).unwrap();
+        }
+        let mut ko = vec![0.0; 2 * 4 * 3 * 8 * 4];
+        let mut vo = vec![0.0; ko.len()];
+        c.gather(&[Some(2), None, Some(0), Some(1)], 8, &mut ko, &mut vo)
+            .unwrap();
+        // lane 1 is empty -> zeros
+        let lane1 = ((0 * 4 + 1) * 3) * 8 * 4;
+        assert!(ko[lane1..lane1 + 8 * 4].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,114 @@
+//! Engine metrics: step counters, token throughput, and the per-step
+//! LeanAttention-vs-FlashDecoding hardware projection the engine records
+//! (linking the serving loop back to the paper's contribution).
+
+use crate::util::stats::Summary;
+
+/// Accumulated engine counters.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub prefill_calls: usize,
+    pub decode_steps: usize,
+    pub tokens_generated: usize,
+    pub requests_finished: usize,
+    /// Wall-clock of each decode step, microseconds.
+    pub step_us: Vec<f64>,
+    /// Wall-clock of each prefill call, microseconds.
+    pub prefill_us: Vec<f64>,
+    /// Projected GPU attention latency per step under LeanAttention (us).
+    pub projected_lean_us: Vec<f64>,
+    /// Projected GPU attention latency per step under FlashDecoding (us).
+    pub projected_fd_us: Vec<f64>,
+    /// Projected LeanAttention SM occupancy per step.
+    pub projected_occupancy: Vec<f64>,
+}
+
+impl Metrics {
+    pub fn step_summary(&self) -> Option<Summary> {
+        (!self.step_us.is_empty()).then(|| Summary::of(&self.step_us))
+    }
+
+    pub fn prefill_summary(&self) -> Option<Summary> {
+        (!self.prefill_us.is_empty()).then(|| Summary::of(&self.prefill_us))
+    }
+
+    /// Mean projected speedup of LeanAttention over FlashDecoding across
+    /// the steps this engine served.
+    pub fn projected_speedup(&self) -> Option<f64> {
+        if self.projected_fd_us.is_empty() {
+            return None;
+        }
+        let ratios: Vec<f64> = self
+            .projected_fd_us
+            .iter()
+            .zip(&self.projected_lean_us)
+            .map(|(fd, la)| fd / la)
+            .collect();
+        Some(ratios.iter().sum::<f64>() / ratios.len() as f64)
+    }
+
+    /// Tokens per second of decode wall-clock.
+    pub fn decode_tps(&self) -> f64 {
+        let total_s: f64 = self.step_us.iter().sum::<f64>() * 1e-6;
+        if total_s <= 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / total_s
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "prefills={} steps={} tokens={} finished={}\n",
+            self.prefill_calls,
+            self.decode_steps,
+            self.tokens_generated,
+            self.requests_finished
+        ));
+        if let Some(sm) = self.step_summary() {
+            s.push_str(&format!(
+                "step_us: mean={:.0} p50={:.0} p99={:.0}\n",
+                sm.mean, sm.p50, sm.p99
+            ));
+        }
+        s.push_str(&format!("decode throughput: {:.1} tok/s\n", self.decode_tps()));
+        if let Some(sp) = self.projected_speedup() {
+            let occ = self.projected_occupancy.iter().sum::<f64>()
+                / self.projected_occupancy.len().max(1) as f64;
+            s.push_str(&format!(
+                "projected on A100: LeanAttention {sp:.2}x over FlashDecoding, occupancy {:.0}%\n",
+                occ * 100.0
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::default();
+        assert!(m.step_summary().is_none());
+        assert!(m.projected_speedup().is_none());
+        assert_eq!(m.decode_tps(), 0.0);
+        assert!(m.report().contains("steps=0"));
+    }
+
+    #[test]
+    fn speedup_and_tps() {
+        let m = Metrics {
+            decode_steps: 2,
+            tokens_generated: 4,
+            step_us: vec![1000.0, 1000.0],
+            projected_lean_us: vec![10.0, 10.0],
+            projected_fd_us: vec![20.0, 15.0],
+            ..Default::default()
+        };
+        assert!((m.projected_speedup().unwrap() - 1.75).abs() < 1e-12);
+        assert!((m.decode_tps() - 2000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,29 @@
+//! L3 coordinator: a decode-phase serving engine with LeanAttention as a
+//! first-class scheduling policy.
+//!
+//! * [`request`] — request lifecycle types.
+//! * [`kv_cache`] — paged KV cache (block tables, page reuse).
+//! * [`batcher`] — Orca-style continuous batching (iteration-level
+//!   admission into fixed engine slots).
+//! * [`engine`] — the serving loop: prefill admissions → decode steps via
+//!   the PJRT model artifact → sampling → cache append; every step also
+//!   derives the stream-K attention plan for the current (ragged) batch
+//!   and records the projected GPU latency/occupancy against the
+//!   FlashDecoding baseline.
+//! * [`router`] — multi-engine front door (least-loaded dispatch).
+//! * [`metrics`] — latency/throughput accounting.
+//! * [`pool`] — std-thread fork-join pool (tokio is not in the offline
+//!   crate cache; the event loop is plain Rust).
+
+pub mod batcher;
+pub mod engine;
+pub mod kv_cache;
+pub mod metrics;
+pub mod pool;
+pub mod request;
+pub mod router;
+
+pub use engine::{Engine, EngineConfig};
+pub use kv_cache::PagedKvCache;
+pub use request::{FinishedRequest, Request, RequestId};
+pub use router::Router;

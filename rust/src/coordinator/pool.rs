@@ -1,0 +1,156 @@
+//! Fork-join worker pool on std threads (tokio is not in the offline
+//! crate cache). Used for the host-math stream-K execution path, where a
+//! pool of workers stands in for the GPU's SMs: each worker drains CTA
+//! work items, computes partials with the Rust oracle, and the caller
+//! reduces — the same topology the CUDA kernel realizes on hardware.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `items` with `workers` threads, preserving order.
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    let inputs: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let outputs: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = inputs[i].lock().unwrap().take().unwrap();
+                let r = f(item);
+                *outputs[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    outputs
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().unwrap())
+        .collect()
+}
+
+/// Execute a partition plan's CTAs on a worker pool with host math —
+/// the multi-core analogue of the kernel's SM dispatch. Returns the exact
+/// attention output; see `partition::host_exec` for the sequential twin.
+pub fn execute_plan_host_parallel(
+    plan: &crate::partition::Plan,
+    problem: &crate::partition::DecodeProblem,
+    t: &crate::partition::host_exec::HostTensors,
+    workers: usize,
+) -> Vec<f32> {
+    use crate::attention::{partial_attention_host, Partials};
+
+    let g = problem.groups();
+    let d = problem.head_dim;
+    let tile = plan.tile;
+    let lens = t.group_lens(problem);
+
+    // Phase 1 (parallel): each CTA computes its partials.
+    let cta_parts: Vec<Vec<(usize, Partials)>> = parallel_map(
+        plan.ctas.iter().collect::<Vec<_>>(),
+        workers,
+        |cta| {
+            cta.segments
+                .iter()
+                .map(|seg| {
+                    let gi = seg.group as usize;
+                    let start = seg.tile_begin as usize * tile;
+                    let end = ((seg.tile_begin + seg.tile_count) as usize * tile)
+                        .min(t.n_max);
+                    let k = &t.k[gi * t.n_max * d + start * d
+                        ..gi * t.n_max * d + end * d];
+                    let v = &t.v[gi * t.n_max * d + start * d
+                        ..gi * t.n_max * d + end * d];
+                    let q = &t.q[gi * d..(gi + 1) * d];
+                    (
+                        gi,
+                        partial_attention_host(
+                            q,
+                            k,
+                            v,
+                            1,
+                            end - start,
+                            d,
+                            &[lens[gi]],
+                            start,
+                        ),
+                    )
+                })
+                .collect()
+        },
+    );
+
+    // Phase 2 (sequential): host-side reduction per group.
+    let mut accs: Vec<Partials> = (0..g).map(|_| Partials::identity(1, d)).collect();
+    for parts in &cta_parts {
+        for (gi, p) in parts {
+            accs[*gi].reduce_from(p);
+        }
+    }
+    let mut out = vec![0.0f32; g * d];
+    for (gi, acc) in accs.into_iter().enumerate() {
+        out[gi * d..(gi + 1) * d].copy_from_slice(&acc.finalize());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::attention_host;
+    use crate::partition::host_exec::HostTensors;
+    use crate::partition::plan::{build_plan, DecodeProblem, Strategy};
+    use crate::util::testing::max_abs_err;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map((0..100).collect(), 4, |x: i32| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty_and_single() {
+        let empty: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(empty.is_empty());
+        assert_eq!(parallel_map(vec![7], 8, |x: i32| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn parallel_plan_execution_matches_direct() {
+        let problem = DecodeProblem::uniform(2, 3, 900, 32).with_tile(64);
+        let t = HostTensors::random(&problem, 11);
+        let want = attention_host(
+            &t.q,
+            &t.k,
+            &t.v,
+            problem.groups(),
+            t.n_max,
+            32,
+            &t.group_lens(&problem),
+        );
+        for workers in [1usize, 2, 4] {
+            let plan = build_plan(&problem, Strategy::StreamK, 16);
+            let got = execute_plan_host_parallel(&plan, &problem, &t, workers);
+            assert!(max_abs_err(&got, &want) < 1e-4, "workers={workers}");
+        }
+    }
+}

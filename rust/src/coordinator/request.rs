@@ -1,0 +1,94 @@
+//! Request lifecycle types for the decode-serving engine.
+
+use std::time::Instant;
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// An inference request: a tokenized prompt plus generation budget.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(max_new_tokens >= 1);
+        Request { id, prompt, max_new_tokens, arrival: Instant::now() }
+    }
+}
+
+/// Why a sequence stopped generating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit its `max_new_tokens` budget.
+    Length,
+    /// Hit the model's context bucket (cache full).
+    ContextFull,
+}
+
+/// A completed request with its generation and timing.
+#[derive(Clone, Debug)]
+pub struct FinishedRequest {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub output: Vec<i32>,
+    pub reason: FinishReason,
+    /// Queue time until prefill started, seconds.
+    pub queue_s: f64,
+    /// Time from prefill start to first token, seconds.
+    pub prefill_s: f64,
+    /// Time spent decoding, seconds.
+    pub decode_s: f64,
+}
+
+impl FinishedRequest {
+    pub fn total_s(&self) -> f64 {
+        self.queue_s + self.prefill_s + self.decode_s
+    }
+
+    /// Decode throughput in tokens/s (excluding prefill).
+    pub fn decode_tps(&self) -> f64 {
+        if self.decode_s <= 0.0 {
+            0.0
+        } else {
+            self.output.len() as f64 / self.decode_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_construction() {
+        let r = Request::new(1, vec![1, 2, 3], 8);
+        assert_eq!(r.prompt.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn empty_prompt_rejected() {
+        Request::new(1, vec![], 8);
+    }
+
+    #[test]
+    fn finished_request_stats() {
+        let f = FinishedRequest {
+            id: 1,
+            prompt_len: 4,
+            output: vec![5, 6, 7, 8],
+            reason: FinishReason::Length,
+            queue_s: 0.1,
+            prefill_s: 0.2,
+            decode_s: 2.0,
+        };
+        assert!((f.total_s() - 2.3).abs() < 1e-12);
+        assert!((f.decode_tps() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,81 @@
+//! Multi-replica request router (the vLLM-router-shaped front door).
+//!
+//! PJRT handles are not `Send`, so replicas live on the router's thread
+//! and are stepped round-robin; dispatch is least-loaded (fewest waiting,
+//! then fewest active). With one replica this degrades to a thin queue —
+//! the structure matters for the scheduling tests and for swapping in a
+//! process-per-replica transport later.
+
+use anyhow::Result;
+
+use super::engine::Engine;
+use super::request::{FinishedRequest, RequestId};
+
+/// Least-loaded dispatcher over engine replicas.
+pub struct Router {
+    engines: Vec<Engine>,
+    /// (engine index, id within engine) per external request id.
+    routes: Vec<(usize, RequestId)>,
+}
+
+impl Router {
+    pub fn new(engines: Vec<Engine>) -> Router {
+        assert!(!engines.is_empty());
+        Router { engines, routes: Vec::new() }
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Pick the least-loaded replica and submit. Returns a router-level id.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize) -> Result<RequestId> {
+        let (ei, _) = self
+            .engines
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| (e.waiting(), e.active()))
+            .unwrap();
+        let inner = self.engines[ei].submit(prompt, max_new)?;
+        self.routes.push((ei, inner));
+        Ok(self.routes.len() as RequestId - 1)
+    }
+
+    /// Step every replica once; collect finished requests (with router
+    /// ids rewritten).
+    pub fn step_all(&mut self) -> Result<Vec<FinishedRequest>> {
+        let mut out = Vec::new();
+        for ei in 0..self.engines.len() {
+            for mut f in self.engines[ei].step()? {
+                if let Some(router_id) = self
+                    .routes
+                    .iter()
+                    .position(|&(e, id)| e == ei && id == f.id)
+                {
+                    f.id = router_id as RequestId;
+                }
+                out.push(f);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.engines.iter().all(|e| e.is_idle())
+    }
+
+    /// Drive all replicas until idle.
+    pub fn run_until_idle(&mut self) -> Result<Vec<FinishedRequest>> {
+        let mut all = Vec::new();
+        while !self.is_idle() {
+            all.extend(self.step_all()?);
+        }
+        Ok(all)
+    }
+
+    pub fn engines(&self) -> &[Engine] {
+        &self.engines
+    }
+}
+
+// Integration tests in rust/tests/engine_e2e.rs (need artifacts).

@@ -1,0 +1,45 @@
+//! # LeanAttention — hardware-aware scalable decode-phase attention
+//!
+//! Reproduction of *LeanAttention: Hardware-Aware Scalable Attention
+//! Mechanism for the Decode-Phase of Transformers* (Sanovar et al.,
+//! Microsoft, 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas online-softmax kernels
+//!   (decode attention, un-scaled partials, rescale-reduce), AOT-lowered
+//!   to HLO text.
+//! * **L2** (`python/compile/model.py`) — a decoder-only transformer whose
+//!   decode step routes attention through the L1 kernel.
+//! * **L3** (this crate) — the paper's *coordination* contribution:
+//!   [`attention`] implements the softmax re-scaling reduction operator
+//!   (§IV-A), [`partition`] the LeanTile stream-K decomposition plus the
+//!   FlashAttention-2 / FlashDecoding / FlashInfer baselines (§IV-B/C),
+//!   [`sim`] the GPU execution-model simulator that regenerates every
+//!   figure of the evaluation, [`runtime`] the PJRT loader for the AOT
+//!   artifacts, and [`coordinator`] a decode-serving engine (router →
+//!   continuous batcher → paged KV cache → stream-K attention with
+//!   Rust-side reduction).
+//!
+//! Quick start (after `make artifacts`):
+//!
+//! ```no_run
+//! use lean_attention::partition::{DecodeProblem, Strategy};
+//! use lean_attention::sim::{self, GpuArch};
+//!
+//! let problem = DecodeProblem::uniform(4, 32, 65536, 64); // B=4, H=32, 64k ctx
+//! let arch = GpuArch::a100();
+//! let lean = sim::simulate(&problem, Strategy::StreamK, &arch);
+//! let fd = sim::simulate(&problem, Strategy::fixed_split_auto(&problem, arch.num_sms), &arch);
+//! println!("speedup over FlashDecoding: {:.2}x", fd.latency_us / lean.latency_us);
+//! ```
+
+pub mod attention;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod model;
+pub mod partition;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,330 @@
+//! `leanattn` — CLI for the LeanAttention reproduction.
+//!
+//! ```text
+//! leanattn info                          artifact + device inventory
+//! leanattn serve   [--model tiny] [--requests 8] [--max-new 16]
+//! leanattn simulate --batch 4 --heads 32 --ctx 65536 [--arch a100|h100|8xa100]
+//! leanattn plan    --batch 1 --heads 8 --ctx 65536 [--slots 216]
+//! leanattn figures [fig01|fig02|...|all]
+//! leanattn sweep   [--samples 1000] [--arch a100]
+//! ```
+//!
+//! (Arg parsing is hand-rolled: clap is not in the offline crate cache.)
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use lean_attention::bench_harness::figures;
+use lean_attention::coordinator::{Engine, EngineConfig};
+use lean_attention::partition::plan::{build_plan, DecodeProblem, Strategy};
+use lean_attention::runtime::{Manifest, Runtime};
+use lean_attention::sim::schedule::simulate_all;
+use lean_attention::sim::GpuArch;
+use lean_attention::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                match argv.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(key.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => {
+                        flags.insert(key.to_string(), "true".into());
+                        i += 1;
+                    }
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or(default))
+            .unwrap_or(default)
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+}
+
+fn arch_by_name(name: &str) -> Result<GpuArch> {
+    Ok(match name {
+        "a100" => GpuArch::a100(),
+        "h100" => GpuArch::h100(),
+        "8xa100" => GpuArch::a100().multi(8),
+        "8xh100" => GpuArch::h100().multi(8),
+        other => bail!("unknown arch {other} (a100|h100|8xa100|8xh100)"),
+    })
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+
+    match cmd {
+        "info" => info(),
+        "serve" => serve(&args),
+        "simulate" => simulate_cmd(&args),
+        "plan" => plan_cmd(&args),
+        "figures" => figures_cmd(&args),
+        "sweep" => sweep_cmd(&args),
+        "trace" => trace_cmd(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "leanattn — LeanAttention (decode-phase stream-K attention) reproduction
+commands:
+  info                              artifact + PJRT device inventory
+  serve    [--model tiny] [--requests 8] [--max-new 16] [--seed 0]
+  simulate --batch B --heads H --ctx N [--head-dim 64] [--arch a100]
+  plan     --batch B --heads H --ctx N [--slots 216]
+  figures  [table1|fig01|fig02|fig03|fig07|fig08|fig09|fig10|fig11|fig12|fig13|all]
+  sweep    [--samples 1000] [--arch a100]
+  trace    [--model tiny] [--requests 16] [--gap 3] [--fixed] [--seed 0]";
+
+fn info() -> Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())
+        .context("load artifacts (run `make artifacts`)")?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {} ({} device(s))", rt.platform(), rt.device_count());
+    println!("artifact dir:  {}", manifest.dir.display());
+    println!("attention artifacts:");
+    for a in &manifest.attention {
+        println!(
+            "  {:?} g={} d={} ctx={} tile={} ({})",
+            a.kind, a.g, a.d, a.ctx, a.tile, a.file
+        );
+    }
+    println!("models:");
+    for (name, m) in &manifest.models {
+        println!(
+            "  {name}: {} layers, {} heads x d{}, vocab {}, ctx bucket {}, {} params",
+            m.n_layers, m.n_heads, m.head_dim, m.vocab, m.ctx_bucket, m.param_count
+        );
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let model = args.str("model", "tiny");
+    let n_requests = args.usize("requests", 8);
+    let max_new = args.usize("max-new", 16);
+    let seed = args.usize("seed", 0) as u64;
+
+    let runtime = Rc::new(Runtime::cpu()?);
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let mut engine = Engine::new(
+        &runtime,
+        &manifest,
+        EngineConfig { model: model.clone(), ..Default::default() },
+    )?;
+    println!(
+        "engine up: model={model} batch={} ctx_bucket={} prefill_bucket={}",
+        engine.batch_size(),
+        engine.ctx_bucket(),
+        engine.prefill_bucket()
+    );
+
+    let mut rng = Rng::new(seed);
+    let vocab = 512u64;
+    for i in 0..n_requests {
+        let len = rng.urange(1, engine.prefill_bucket() + 1);
+        let prompt: Vec<i32> = (0..len).map(|_| rng.range(0, vocab) as i32).collect();
+        let id = engine.submit(prompt, max_new)?;
+        println!("submitted request {id} (prompt {len} tokens), #{i}");
+    }
+
+    let finished = engine.run_until_idle()?;
+    println!("\nper-request results:");
+    for f in &finished {
+        println!(
+            "  req {}: {} prompt + {} generated, queue {:.1}ms, prefill {:.1}ms, decode {:.1}ms ({:.1} tok/s)",
+            f.id,
+            f.prompt_len,
+            f.output.len(),
+            f.queue_s * 1e3,
+            f.prefill_s * 1e3,
+            f.decode_s * 1e3,
+            f.decode_tps()
+        );
+    }
+    println!("\n{}", engine.metrics.report());
+    Ok(())
+}
+
+fn simulate_cmd(args: &Args) -> Result<()> {
+    let batch = args.usize("batch", 4);
+    let heads = args.usize("heads", 32);
+    let ctx = args.usize("ctx", 65536);
+    let head_dim = args.usize("head-dim", 64);
+    let arch = arch_by_name(&args.str("arch", "a100"))?;
+
+    let p = DecodeProblem::uniform(batch, heads, ctx, head_dim);
+    println!(
+        "problem: batch={batch} heads={heads} ctx={ctx} d={head_dim} tile={} -> {} output tiles, {} LeanTiles",
+        p.tile,
+        p.groups(),
+        p.total_tiles()
+    );
+    println!("arch: {} ({} SMs, {} CTA slots)\n", arch.name, arch.num_sms, arch.sm_slots());
+    println!(
+        "{:<18} {:>12} {:>10} {:>8} {:>8} {:>10}",
+        "mechanism", "latency_us", "occupancy", "grid", "waves", "energy_mJ"
+    );
+    let results = simulate_all(&p, &arch);
+    let la = results.last().unwrap().latency_us;
+    for r in &results {
+        println!(
+            "{:<18} {:>12.1} {:>9.1}% {:>8} {:>8.2} {:>10.2}   ({:.2}x vs LA)",
+            r.name(),
+            r.latency_us,
+            r.occupancy * 100.0,
+            r.grid,
+            r.waves,
+            r.energy_j * 1e3,
+            r.latency_us / la
+        );
+    }
+    Ok(())
+}
+
+fn plan_cmd(args: &Args) -> Result<()> {
+    let batch = args.usize("batch", 1);
+    let heads = args.usize("heads", 8);
+    let ctx = args.usize("ctx", 65536);
+    let slots = args.usize("slots", 216);
+    let p = DecodeProblem::uniform(batch, heads, ctx, 64);
+    let plan = build_plan(&p, Strategy::StreamK, slots);
+    plan.validate(&p)?;
+    let tiles = plan.tiles_per_cta();
+    println!(
+        "stream-K plan: {} CTAs over {} LeanTiles ({} tiles/CTA max), imbalance {:.4}",
+        plan.grid(),
+        p.total_tiles(),
+        tiles.iter().max().unwrap(),
+        plan.imbalance()
+    );
+    let multi: usize = plan.ctas.iter().filter(|c| c.segments.len() > 1).count();
+    println!("CTAs crossing head boundaries: {multi}");
+    let partials = plan.partials_per_group();
+    println!(
+        "partials per output tile: min {} max {}",
+        partials.iter().min().unwrap(),
+        partials.iter().max().unwrap()
+    );
+    Ok(())
+}
+
+fn figures_cmd(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let all = which == "all";
+    if all || which == "table1" {
+        figures::table1().emit("table1");
+    }
+    if all || which == "fig01" {
+        println!("{}", figures::fig01_schedule());
+    }
+    if all || which == "fig02" {
+        figures::fig02_timeshare().emit("fig02");
+    }
+    if all || which == "fig03" {
+        figures::fig03_occupancy().emit("fig03");
+    }
+    if all || which == "fig07" {
+        for (i, t) in figures::fig07_a100().iter().enumerate() {
+            t.emit(&format!("fig07{}", ['a', 'b', 'c'][i]));
+        }
+    }
+    if all || which == "fig08" {
+        for (i, t) in figures::fig08_h100().iter().enumerate() {
+            t.emit(&format!("fig08{}", ['a', 'b', 'c'][i]));
+        }
+    }
+    if all || which == "fig09" {
+        for (i, t) in figures::fig09_multigpu().iter().enumerate() {
+            t.emit(&format!("fig09{}", ['a', 'b', 'c'][i]));
+        }
+    }
+    if all || which == "fig10" {
+        figures::fig10_ragged().emit("fig10");
+    }
+    if all || which == "fig11" {
+        figures::fig11_headdim128().emit("fig11");
+    }
+    if all || which == "fig12" {
+        figures::fig12_e2e().emit("fig12");
+    }
+    if all || which == "fig13" {
+        figures::fig13_energy().emit("fig13");
+    }
+    Ok(())
+}
+
+fn sweep_cmd(args: &Args) -> Result<()> {
+    let samples = args.usize("samples", 1000);
+    let arch = arch_by_name(&args.str("arch", "a100"))?;
+    figures::sweep_aggregate(samples, &arch).emit("sweep");
+    Ok(())
+}
+
+fn trace_cmd(args: &Args) -> Result<()> {
+    use lean_attention::bench_harness::trace::{replay, TraceSpec};
+    let runtime = Rc::new(Runtime::cpu()?);
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let mut engine = Engine::new(
+        &runtime,
+        &manifest,
+        EngineConfig { model: args.str("model", "tiny"), ..Default::default() },
+    )?;
+    let spec = TraceSpec {
+        requests: args.usize("requests", 16),
+        mean_gap_steps: args.usize("gap", 3) as f64,
+        poisson: !args.flags.contains_key("fixed"),
+        prompt_min: 1,
+        prompt_max: engine.prefill_bucket(),
+        new_min: 1,
+        new_max: 16,
+        seed: args.usize("seed", 0) as u64,
+    };
+    let report = replay(&mut engine, &spec)?;
+    println!("{}", report.render());
+    println!("\n{}", engine.metrics.report());
+    Ok(())
+}

@@ -1,0 +1,162 @@
+//! Transformer model configurations.
+//!
+//! The paper evaluates attention shapes drawn from Phi-3 Medium (40 heads,
+//! d=128), LLaMA-2-7B, Mistral-7B and OPT; the e2e artifacts serve the
+//! `tiny`/`small` configs built by `python/compile/aot.py`. Parameter
+//! counts here drive the Fig 2 / Fig 12 timeshare model.
+
+/// Decoder-only transformer hyper-parameters (inference view).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// KV heads (GQA); == n_heads when no grouping.
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    /// MLP weight matrices per layer (2 = up/down, 3 = gated SwiGLU).
+    pub mlp_mults: usize,
+}
+
+impl ModelConfig {
+    /// Phi-3 Medium 14B: the paper's end-to-end model (Figs 2, 12).
+    pub fn phi3_medium() -> Self {
+        ModelConfig {
+            name: "phi3-medium",
+            vocab: 32_064,
+            d_model: 5120,
+            n_layers: 40,
+            n_heads: 40,
+            n_kv_heads: 10,
+            head_dim: 128,
+            d_ff: 17_920,
+            mlp_mults: 3,
+        }
+    }
+
+    /// LLaMA-2-7B (Fig 11's head-dim-128 family).
+    pub fn llama2_7b() -> Self {
+        ModelConfig {
+            name: "llama2-7b",
+            vocab: 32_000,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 32,
+            head_dim: 128,
+            d_ff: 11_008,
+            mlp_mults: 3,
+        }
+    }
+
+    /// Mistral-7B (Fig 11).
+    pub fn mistral_7b() -> Self {
+        ModelConfig {
+            name: "mistral-7b",
+            vocab: 32_000,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            d_ff: 14_336,
+            mlp_mults: 3,
+        }
+    }
+
+    /// OPT-30B-like (the paper's HuggingFace e2e vehicle; d=128 variant).
+    pub fn opt_30b() -> Self {
+        ModelConfig {
+            name: "opt-30b",
+            vocab: 50_272,
+            d_model: 7168,
+            n_layers: 48,
+            n_heads: 56,
+            n_kv_heads: 56,
+            head_dim: 128,
+            d_ff: 28_672,
+            mlp_mults: 2,
+        }
+    }
+
+    /// A d=64 model with many heads (the operation-level benchmark shape:
+    /// 56 heads × d 64 — Figs 3, 13).
+    pub fn bench_d64(heads: usize) -> Self {
+        ModelConfig {
+            name: "bench-d64",
+            vocab: 32_000,
+            d_model: heads * 64,
+            n_layers: 32,
+            n_heads: heads,
+            n_kv_heads: heads,
+            head_dim: 64,
+            d_ff: heads * 64 * 4,
+            mlp_mults: 2,
+        }
+    }
+
+    /// Total parameter count (tied LM head).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let attn = d * (self.n_heads * self.head_dim) as u64 // Wq
+            + 2 * d * (self.n_kv_heads * self.head_dim) as u64 // Wk, Wv
+            + (self.n_heads * self.head_dim) as u64 * d; // Wo
+        let mlp = self.mlp_mults as u64 * d * self.d_ff as u64;
+        let per_layer = attn + mlp + 2 * d; // + layernorms
+        self.vocab as u64 * d + self.n_layers as u64 * per_layer + d
+    }
+
+    /// Bytes of KV cache per token (fp16 storage).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * (self.n_layers * self.n_kv_heads * self.head_dim) as u64 * 2
+    }
+
+    /// FLOPs for one decode-step pass through the linear layers
+    /// (2 × params, weight-streaming matvec).
+    pub fn decode_linear_flops(&self) -> u64 {
+        2 * self.param_count()
+    }
+
+    /// FLOPs to prefill a prompt of `p` tokens (2·P·params + attention).
+    pub fn prefill_flops(&self, p: u64) -> u64 {
+        2 * p * self.param_count()
+            + 2 * 2 * p * p * (self.n_layers * self.n_heads * self.head_dim) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phi3_medium_is_14b_class() {
+        let c = ModelConfig::phi3_medium();
+        let b = c.param_count() as f64 / 1e9;
+        assert!((12.0..16.0).contains(&b), "phi3 params {b}B");
+        assert_eq!(c.n_heads, 40); // paper: "Phi-3 Medium (40 heads)"
+        assert_eq!(c.head_dim, 128);
+    }
+
+    #[test]
+    fn llama2_7b_class() {
+        let b = ModelConfig::llama2_7b().param_count() as f64 / 1e9;
+        assert!((6.0..8.0).contains(&b), "llama2 params {b}B");
+    }
+
+    #[test]
+    fn mistral_gqa_smaller_kv() {
+        let m = ModelConfig::mistral_7b();
+        let l = ModelConfig::llama2_7b();
+        assert!(m.kv_bytes_per_token() < l.kv_bytes_per_token());
+    }
+
+    #[test]
+    fn kv_bytes_formula() {
+        let c = ModelConfig::llama2_7b();
+        // 32 layers * 32 heads * 128 dim * 2 (K+V) * 2 bytes = 524288
+        assert_eq!(c.kv_bytes_per_token(), 524_288);
+    }
+}

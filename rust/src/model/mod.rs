@@ -1,0 +1,6 @@
+//! Model zoo: transformer configurations used across the evaluation
+//! (paper §V-VI) plus the tiny configs the PJRT artifacts serve.
+
+pub mod config;
+
+pub use config::ModelConfig;

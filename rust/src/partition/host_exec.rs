@@ -1,0 +1,194 @@
+//! Host execution of a partition [`Plan`] on real numbers.
+//!
+//! Every simulated CTA runs Algorithm 1 over its segments with the Rust
+//! oracle; the host CTAs then perform Algorithm 2's reduction in an
+//! arbitrary (optionally shuffled) order. The output must equal plain
+//! exact attention for **every** legal plan — this is the repo's
+//! numerical witness of the paper's associativity theorem applied to the
+//! actual planners, and the integration point the property tests sweep.
+
+use crate::attention::{partial_attention_host, Partials};
+use crate::util::rng::Rng;
+
+use super::plan::{DecodeProblem, Plan};
+
+/// Padded host tensors for a decode problem: `q [g, d]`,
+/// `k/v [g, n_max, d]` with per-group valid lengths from the problem.
+pub struct HostTensors {
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub n_max: usize,
+}
+
+impl HostTensors {
+    /// Random tensors for `problem` (deterministic in `seed`).
+    pub fn random(problem: &DecodeProblem, seed: u64) -> HostTensors {
+        let mut rng = Rng::new(seed);
+        let g = problem.groups();
+        let d = problem.head_dim;
+        let n_max = problem
+            .ctx_lens
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(0) as usize;
+        HostTensors {
+            q: rng.normal_vec(g * d),
+            k: rng.normal_vec(g * n_max * d),
+            v: rng.normal_vec(g * n_max * d),
+            n_max,
+        }
+    }
+
+    pub fn group_lens(&self, problem: &DecodeProblem) -> Vec<u32> {
+        (0..problem.groups())
+            .map(|gi| problem.ctx_for_group(gi) as u32)
+            .collect()
+    }
+}
+
+/// Execute `plan` on host numbers. `shuffle_seed` randomizes the order in
+/// which each group's partials are reduced (None = CTA order) — the result
+/// must not depend on it.
+pub fn execute_plan_host(
+    plan: &Plan,
+    problem: &DecodeProblem,
+    t: &HostTensors,
+    shuffle_seed: Option<u64>,
+) -> Vec<f32> {
+    let g = problem.groups();
+    let d = problem.head_dim;
+    let tile = plan.tile;
+    let lens = t.group_lens(problem);
+
+    // Phase 1: every CTA computes one partial per segment (Alg 1).
+    let mut per_group: Vec<Vec<Partials>> = vec![Vec::new(); g];
+    for cta in &plan.ctas {
+        for seg in &cta.segments {
+            let gi = seg.group as usize;
+            let start = seg.tile_begin as usize * tile;
+            let end = ((seg.tile_begin + seg.tile_count) as usize * tile)
+                .min(t.n_max);
+            let width = end - start;
+            // Views into the padded K/V for this group's slice.
+            let k_slice =
+                &t.k[gi * t.n_max * d + start * d..gi * t.n_max * d + end * d];
+            let v_slice =
+                &t.v[gi * t.n_max * d + start * d..gi * t.n_max * d + end * d];
+            let q_row = &t.q[gi * d..(gi + 1) * d];
+            let p = partial_attention_host(
+                q_row,
+                k_slice,
+                v_slice,
+                1,
+                width,
+                d,
+                &[lens[gi]],
+                start,
+            );
+            per_group[gi].push(p);
+        }
+    }
+
+    // Phase 2: host-CTA reduction (Alg 2 lines 24-39), order-shuffled.
+    let mut rng = shuffle_seed.map(Rng::new);
+    let mut out = vec![0.0f32; g * d];
+    for (gi, mut parts) in per_group.into_iter().enumerate() {
+        if parts.is_empty() {
+            continue; // empty context
+        }
+        if let Some(r) = rng.as_mut() {
+            // Fisher-Yates
+            for i in (1..parts.len()).rev() {
+                let j = r.urange(0, i + 1);
+                parts.swap(i, j);
+            }
+        }
+        let mut acc = Partials::identity(1, d);
+        for p in &parts {
+            acc.reduce_from(p);
+        }
+        out[gi * d..(gi + 1) * d].copy_from_slice(&acc.finalize());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::attention_host;
+    use crate::partition::plan::{build_plan, Strategy};
+    use crate::util::testing::{max_abs_err, prop_check};
+
+    fn direct(problem: &DecodeProblem, t: &HostTensors) -> Vec<f32> {
+        attention_host(
+            &t.q,
+            &t.k,
+            &t.v,
+            problem.groups(),
+            t.n_max,
+            problem.head_dim,
+            &t.group_lens(problem),
+        )
+    }
+
+    #[test]
+    fn all_strategies_compute_exact_attention() {
+        let problem = DecodeProblem::uniform(2, 3, 700, 64).with_tile(64);
+        let t = HostTensors::random(&problem, 42);
+        let want = direct(&problem, &t);
+        for strategy in [
+            Strategy::Dense,
+            Strategy::FixedSplit { splits: 4 },
+            Strategy::StreamK,
+        ] {
+            let plan = build_plan(&problem, strategy, 10);
+            plan.validate(&problem).unwrap();
+            let got = execute_plan_host(&plan, &problem, &t, None);
+            let err = max_abs_err(&got, &want);
+            assert!(err < 1e-4, "{}: err {err}", strategy.name());
+        }
+    }
+
+    #[test]
+    fn reduction_order_does_not_matter() {
+        let problem = DecodeProblem::uniform(1, 4, 1500, 64).with_tile(32);
+        let t = HostTensors::random(&problem, 7);
+        let plan = build_plan(&problem, Strategy::StreamK, 13);
+        let a = execute_plan_host(&plan, &problem, &t, None);
+        for seed in [1u64, 2, 3] {
+            let b = execute_plan_host(&plan, &problem, &t, Some(seed));
+            assert!(max_abs_err(&a, &b) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn property_random_problems_random_strategies() {
+        prop_check("host exec == direct attention", 40, |rng| {
+            let batch = rng.urange(1, 4);
+            let heads = rng.urange(1, 5);
+            let ctx_lens: Vec<u32> =
+                (0..batch).map(|_| rng.range(1, 600) as u32).collect();
+            let mut p = DecodeProblem::ragged(heads, ctx_lens, 32);
+            p = p.with_tile(*rng.choose(&[16usize, 32, 64]));
+            let t = HostTensors::random(&p, rng.next_u64());
+            let want = direct(&p, &t);
+            let strategy = *rng.choose(&[
+                Strategy::Dense,
+                Strategy::FixedSplit { splits: 3 },
+                Strategy::FixedSplit { splits: 8 },
+                Strategy::StreamK,
+            ]);
+            let slots = rng.urange(1, 64);
+            let plan = build_plan(&p, strategy, slots);
+            plan.validate(&p).map_err(|e| e.to_string())?;
+            let got = execute_plan_host(&plan, &p, &t, Some(rng.next_u64()));
+            let err = max_abs_err(&got, &want);
+            if err > 5e-4 {
+                return Err(format!("{} err {err}", strategy.name()));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,55 @@
+//! LeanTile granularity (§IV-B): the smallest KV-block size that still
+//! reaches peak compute efficiency, fixed per head dimension and
+//! architecture. Mirrors `python/compile/kernels/lean_attention.py`
+//! (`LEAN_TILE_BY_HEAD_DIM`) — the two tables must stay in sync because
+//! the Rust planner counts tiles that the Pallas kernel will execute.
+
+/// Empirically optimal LeanTile token counts on A100-class hardware
+/// (paper §IV-B: 256 tokens for d=64, 128 for d=128, FP16→FP32).
+pub fn lean_tile_for(head_dim: usize) -> usize {
+    match head_dim {
+        32 => 256,
+        64 => 256,
+        96 => 128,
+        128 => 128,
+        256 => 64,
+        d => {
+            // Keep the K+V tile footprint roughly constant (≈ 2·T·d elems).
+            ((256 * 64) / d.max(1)).max(16)
+        }
+    }
+}
+
+/// Number of LeanTile iterations to cover `ctx` tokens.
+pub fn tiles_for_ctx(ctx: usize, tile: usize) -> u64 {
+    assert!(tile > 0);
+    (ctx as u64).div_ceil(tile as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table_values() {
+        assert_eq!(lean_tile_for(64), 256);
+        assert_eq!(lean_tile_for(128), 128);
+    }
+
+    #[test]
+    fn fallback_keeps_footprint() {
+        let t = lean_tile_for(48);
+        assert!(t >= 16);
+        // footprint within 2x of the d=64 reference
+        let fp = t * 48;
+        assert!(fp <= 2 * 256 * 64 && fp * 2 >= 256 * 64);
+    }
+
+    #[test]
+    fn tiles_for_ctx_rounds_up() {
+        assert_eq!(tiles_for_ctx(1, 256), 1);
+        assert_eq!(tiles_for_ctx(256, 256), 1);
+        assert_eq!(tiles_for_ctx(257, 256), 2);
+        assert_eq!(tiles_for_ctx(65536, 256), 256);
+    }
+}

@@ -1,0 +1,35 @@
+//! Attention partitioning strategies (§IV of the paper).
+//!
+//! A decode-attention problem is a set of *output tiles* — one per
+//! `(batch, head)` group, since the decode query is a single token — each
+//! needing `ceil(ctx / LeanTile)` tile iterations along the context. A
+//! [`Plan`] assigns every tile iteration to exactly one CTA:
+//!
+//! * [`dense`]       — FlashAttention-2: one CTA per output tile, no
+//!   context split (the paper's "vanilla" baseline).
+//! * [`fixed_split`] — FlashDecoding / FlashInfer: every output tile is
+//!   cut into `s` equal chunks (plus the split-factor heuristic both
+//!   libraries use).
+//! * [`stream_k`]    — LeanAttention: all tile iterations of all output
+//!   tiles are linearized and divided *equally* across a fixed grid,
+//!   crossing head boundaries as needed; host CTAs reduce the partials
+//!   with the softmax re-scaling operator.
+//!
+//! [`host_exec`] runs any plan on real numbers with the Rust oracle — the
+//! numerical witness that every legal plan computes exact attention.
+
+pub mod host_exec;
+pub mod lean_tile;
+pub mod plan;
+pub mod stream_k;
+pub mod tensor_parallel;
+pub mod workspec;
+
+pub use lean_tile::lean_tile_for;
+pub use plan::{CtaWork, DecodeProblem, Plan, Segment, Strategy};
+
+/// Re-exported planner entry points.
+pub mod planners {
+    pub use super::plan::build_plan;
+    pub use super::stream_k::stream_k_plan;
+}

@@ -1,0 +1,495 @@
+//! Plan types shared by all partitioners, plus the dense (FlashAttention-2)
+//! and fixed-split (FlashDecoding / FlashInfer) planners and the
+//! FlashDecoding split-factor heuristic.
+
+use super::lean_tile::{lean_tile_for, tiles_for_ctx};
+
+/// A decode-phase attention problem: one output tile per `(batch, head)`
+/// group (the decode query is a single token), context lengths per batch
+/// element (ragged batches supported — §IV-C "Lean Ragged Batching").
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecodeProblem {
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Context length per batch element.
+    pub ctx_lens: Vec<u32>,
+    /// LeanTile size in tokens (defaults to the §IV-B table).
+    pub tile: usize,
+}
+
+impl DecodeProblem {
+    /// Uniform batch: every sequence has the same context length.
+    pub fn uniform(batch: usize, heads: usize, ctx: usize, head_dim: usize) -> Self {
+        DecodeProblem {
+            heads,
+            head_dim,
+            ctx_lens: vec![ctx as u32; batch],
+            tile: lean_tile_for(head_dim),
+        }
+    }
+
+    /// Ragged batch with per-sequence context lengths.
+    pub fn ragged(heads: usize, ctx_lens: Vec<u32>, head_dim: usize) -> Self {
+        let tile = lean_tile_for(head_dim);
+        DecodeProblem { heads, head_dim, ctx_lens, tile }
+    }
+
+    pub fn with_tile(mut self, tile: usize) -> Self {
+        assert!(tile > 0);
+        self.tile = tile;
+        self
+    }
+
+    pub fn batch(&self) -> usize {
+        self.ctx_lens.len()
+    }
+
+    /// Output tiles = flattened groups (batch-major, heads inner) — the
+    /// `batch → heads → context` linearization of §IV-C.
+    pub fn groups(&self) -> usize {
+        self.batch() * self.heads
+    }
+
+    pub fn ctx_for_group(&self, group: usize) -> usize {
+        self.ctx_lens[group / self.heads] as usize
+    }
+
+    pub fn tiles_for_group(&self, group: usize) -> u64 {
+        tiles_for_ctx(self.ctx_for_group(group), self.tile)
+    }
+
+    pub fn total_tiles(&self) -> u64 {
+        (0..self.groups()).map(|g| self.tiles_for_group(g)).sum()
+    }
+
+    /// Prefix sums of tiles per group: `cum[g]` = tiles before group `g`;
+    /// `cum[groups]` = total. The "cumulative sequence lengths" pointer
+    /// array of Lean ragged batching, in tile units.
+    pub fn cum_tiles(&self) -> Vec<u64> {
+        let groups = self.groups();
+        let mut cum = Vec::with_capacity(groups + 1);
+        let mut acc = 0u64;
+        cum.push(0);
+        for g in 0..groups {
+            acc += self.tiles_for_group(g);
+            cum.push(acc);
+        }
+        cum
+    }
+
+    /// Ratio of average to maximum context length — the paper's batch
+    /// heterogeneity measure (Fig 10's x-axis).
+    pub fn batch_context_ratio(&self) -> f64 {
+        let max = self.ctx_lens.iter().copied().max().unwrap_or(0) as f64;
+        if max == 0.0 {
+            return 1.0;
+        }
+        let avg =
+            self.ctx_lens.iter().map(|&c| c as f64).sum::<f64>() / self.batch() as f64;
+        avg / max
+    }
+}
+
+/// Partitioning strategy selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// FlashAttention-2: one CTA per output tile, sequential context walk.
+    Dense,
+    /// FlashDecoding-style fixed split of every output tile into `splits`
+    /// same-sized chunks.
+    FixedSplit { splits: usize },
+    /// FlashInfer batch-decode flavour: fixed split at page granularity
+    /// (chunks are multiples of `page` tokens). Latency-wise FlashInfer's
+    /// fixed-split behaves like FlashDecoding (§III-C); the page size
+    /// matters for the simulator's gather-efficiency penalty.
+    PagedFixedSplit { splits: usize, page: usize },
+    /// LeanAttention stream-K: equalized tile split over a fixed grid.
+    StreamK,
+}
+
+impl Strategy {
+    /// FlashDecoding with its split-factor heuristic resolved for a GPU
+    /// with `num_sms` compute units.
+    pub fn fixed_split_auto(problem: &DecodeProblem, num_sms: usize) -> Strategy {
+        Strategy::FixedSplit { splits: fd_heuristic_splits(problem, num_sms, 128) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Dense => "flashattention2",
+            Strategy::FixedSplit { .. } => "flashdecoding",
+            Strategy::PagedFixedSplit { .. } => "flashinfer",
+            Strategy::StreamK => "leanattention",
+        }
+    }
+}
+
+/// One contiguous run of LeanTile iterations a CTA performs for a single
+/// output tile (Alg 2 lines 11-16).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segment {
+    /// Output tile = flattened `(batch, head)` group index.
+    pub group: u32,
+    /// First LeanTile index within the group's context.
+    pub tile_begin: u32,
+    pub tile_count: u32,
+    /// Host CTA for this output tile: owns tile 0 and performs the
+    /// reduction (Alg 2 line 17).
+    pub is_host: bool,
+    /// Covers the group's final LeanTile (Alg 2 line 18): a host that is
+    /// also finishing needs no reduction at all.
+    pub is_finishing: bool,
+}
+
+/// All work assigned to one CTA.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CtaWork {
+    pub segments: Vec<Segment>,
+}
+
+impl CtaWork {
+    pub fn tiles(&self) -> u64 {
+        self.segments.iter().map(|s| s.tile_count as u64).sum()
+    }
+}
+
+/// A complete partitioning of a [`DecodeProblem`].
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub strategy: Strategy,
+    pub tile: usize,
+    pub ctas: Vec<CtaWork>,
+    pub groups: usize,
+}
+
+impl Plan {
+    pub fn grid(&self) -> usize {
+        self.ctas.len()
+    }
+
+    pub fn tiles_per_cta(&self) -> Vec<u64> {
+        self.ctas.iter().map(|c| c.tiles()).collect()
+    }
+
+    /// max/mean tile load — 1.0 means perfectly balanced.
+    pub fn imbalance(&self) -> f64 {
+        let tiles = self.tiles_per_cta();
+        let max = *tiles.iter().max().unwrap_or(&0) as f64;
+        let sum: u64 = tiles.iter().sum();
+        if sum == 0 {
+            return 1.0;
+        }
+        max * self.grid() as f64 / sum as f64
+    }
+
+    /// Number of partials produced for each group (1 = no reduction
+    /// needed; k > 1 = k-1 global-memory stores + a k-way host reduce).
+    pub fn partials_per_group(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.groups];
+        for cta in &self.ctas {
+            for seg in &cta.segments {
+                counts[seg.group as usize] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Structural validation: every group's tiles covered exactly once by
+    /// contiguous segments, exactly one host and one finishing segment per
+    /// group, flags consistent. The planner invariants the property tests
+    /// sweep.
+    pub fn validate(&self, problem: &DecodeProblem) -> anyhow::Result<()> {
+        use anyhow::{bail, ensure};
+        ensure!(self.groups == problem.groups(), "group count mismatch");
+        ensure!(self.tile == problem.tile, "tile mismatch");
+
+        // Gather segments per group.
+        let mut per_group: Vec<Vec<Segment>> = vec![Vec::new(); self.groups];
+        for (ci, cta) in self.ctas.iter().enumerate() {
+            for seg in &cta.segments {
+                ensure!(
+                    (seg.group as usize) < self.groups,
+                    "cta {ci}: group {} out of range",
+                    seg.group
+                );
+                ensure!(seg.tile_count > 0, "cta {ci}: empty segment");
+                per_group[seg.group as usize].push(*seg);
+            }
+        }
+
+        for (g, segs) in per_group.iter_mut().enumerate() {
+            let need = problem.tiles_for_group(g);
+            if need == 0 {
+                ensure!(segs.is_empty(), "group {g}: segments for empty context");
+                continue;
+            }
+            ensure!(!segs.is_empty(), "group {g}: no coverage");
+            segs.sort_by_key(|s| s.tile_begin);
+            let mut cursor = 0u64;
+            let mut hosts = 0;
+            let mut finishers = 0;
+            for seg in segs.iter() {
+                if seg.tile_begin as u64 != cursor {
+                    bail!(
+                        "group {g}: gap/overlap at tile {} (expected {cursor})",
+                        seg.tile_begin
+                    );
+                }
+                cursor += seg.tile_count as u64;
+                ensure!(
+                    seg.is_host == (seg.tile_begin == 0),
+                    "group {g}: host flag wrong on tile {}",
+                    seg.tile_begin
+                );
+                let finishes = cursor == need;
+                ensure!(
+                    seg.is_finishing == finishes,
+                    "group {g}: finishing flag wrong on tile {}",
+                    seg.tile_begin
+                );
+                hosts += seg.is_host as u32;
+                finishers += seg.is_finishing as u32;
+            }
+            ensure!(cursor == need, "group {g}: covered {cursor} of {need} tiles");
+            ensure!(hosts == 1, "group {g}: {hosts} hosts");
+            ensure!(finishers == 1, "group {g}: {finishers} finishers");
+        }
+        Ok(())
+    }
+}
+
+/// Build a plan for `problem` under `strategy` on a device exposing
+/// `sm_slots` co-resident CTA slots (`num_sms × max CTAs per SM`).
+pub fn build_plan(problem: &DecodeProblem, strategy: Strategy, sm_slots: usize) -> Plan {
+    match strategy {
+        Strategy::Dense => dense_plan(problem),
+        Strategy::FixedSplit { splits } => fixed_split_plan(problem, splits, strategy),
+        Strategy::PagedFixedSplit { splits, page } => {
+            // Page granularity only coarsens the chunk boundaries; with
+            // tile >= page (typical: 256 >= 16) chunk boundaries already
+            // land on page boundaries, so the CTA structure matches
+            // fixed-split. The simulator applies the paged-gather penalty.
+            let _ = page;
+            fixed_split_plan(problem, splits, strategy)
+        }
+        Strategy::StreamK => super::stream_k::stream_k_plan(problem, sm_slots),
+    }
+}
+
+/// FlashAttention-2: one CTA per output tile.
+pub fn dense_plan(problem: &DecodeProblem) -> Plan {
+    let mut ctas = Vec::with_capacity(problem.groups());
+    for g in 0..problem.groups() {
+        let tiles = problem.tiles_for_group(g);
+        if tiles == 0 {
+            continue;
+        }
+        ctas.push(CtaWork {
+            segments: vec![Segment {
+                group: g as u32,
+                tile_begin: 0,
+                tile_count: tiles as u32,
+                is_host: true,
+                is_finishing: true,
+            }],
+        });
+    }
+    Plan {
+        strategy: Strategy::Dense,
+        tile: problem.tile,
+        ctas,
+        groups: problem.groups(),
+    }
+}
+
+/// FlashDecoding: split every group's tile range into `splits` same-sized
+/// chunks (ceil-division; trailing chunks may be smaller, and groups with
+/// fewer tiles than `splits` get one chunk per tile).
+pub fn fixed_split_plan(problem: &DecodeProblem, splits: usize, strategy: Strategy) -> Plan {
+    assert!(splits > 0, "splits must be >= 1");
+    let mut ctas = Vec::new();
+    for g in 0..problem.groups() {
+        let tiles = problem.tiles_for_group(g);
+        if tiles == 0 {
+            continue;
+        }
+        let s = (splits as u64).min(tiles);
+        let chunk = tiles.div_ceil(s);
+        let mut begin = 0u64;
+        while begin < tiles {
+            let count = chunk.min(tiles - begin);
+            ctas.push(CtaWork {
+                segments: vec![Segment {
+                    group: g as u32,
+                    tile_begin: begin as u32,
+                    tile_count: count as u32,
+                    is_host: begin == 0,
+                    is_finishing: begin + count == tiles,
+                }],
+            });
+            begin += count;
+        }
+    }
+    Plan { strategy, tile: problem.tile, ctas, groups: problem.groups() }
+}
+
+/// FlashDecoding's split-factor heuristic (flash-attention
+/// `num_splits_heuristic`): if the unsplit grid already fills ≥ 80% of the
+/// SMs, don't split; otherwise pick the smallest split count whose wave
+/// efficiency is within 85% of the best achievable, skipping split counts
+/// that don't actually shrink the per-CTA chunk.
+pub fn fd_heuristic_splits(
+    problem: &DecodeProblem,
+    num_sms: usize,
+    max_splits: usize,
+) -> usize {
+    let batch_nheads = problem.groups(); // N_q = 1 -> one m-block per group
+    if batch_nheads as f64 >= 0.8 * num_sms as f64 {
+        return 1;
+    }
+    let num_n_blocks = problem
+        .ctx_lens
+        .iter()
+        .map(|&c| tiles_for_ctx(c as usize, problem.tile))
+        .max()
+        .unwrap_or(1)
+        .max(1) as usize;
+    let max_splits = max_splits.min(num_sms).min(num_n_blocks).max(1);
+
+    let eff = |s: usize| -> f64 {
+        let n_waves = (batch_nheads * s) as f64 / num_sms as f64;
+        n_waves / n_waves.ceil()
+    };
+    let is_split_eligible = |s: usize| -> bool {
+        s == 1 || num_n_blocks.div_ceil(s) != num_n_blocks.div_ceil(s - 1)
+    };
+
+    let mut max_eff = 0.0f64;
+    for s in 1..=max_splits {
+        if is_split_eligible(s) {
+            max_eff = max_eff.max(eff(s));
+        }
+    }
+    for s in 1..=max_splits {
+        if is_split_eligible(s) && eff(s) >= 0.85 * max_eff {
+            return s;
+        }
+    }
+    1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_problem_accessors() {
+        let p = DecodeProblem::uniform(4, 32, 65536, 64);
+        assert_eq!(p.batch(), 4);
+        assert_eq!(p.groups(), 128);
+        assert_eq!(p.tile, 256);
+        assert_eq!(p.tiles_for_group(0), 256);
+        assert_eq!(p.total_tiles(), 128 * 256);
+        assert_eq!(p.batch_context_ratio(), 1.0);
+    }
+
+    #[test]
+    fn ragged_cum_tiles() {
+        let p = DecodeProblem::ragged(2, vec![256, 512, 1024], 64);
+        // tiles per seq: 1, 2, 4; per group (2 heads each): 1,1,2,2,4,4
+        assert_eq!(p.cum_tiles(), vec![0, 1, 2, 4, 6, 10, 14]);
+        assert!((p.batch_context_ratio() - (597.33 / 1024.0)).abs() < 0.01);
+    }
+
+    #[test]
+    fn dense_plan_structure() {
+        let p = DecodeProblem::uniform(2, 4, 1024, 64);
+        let plan = dense_plan(&p);
+        assert_eq!(plan.grid(), 8);
+        plan.validate(&p).unwrap();
+        assert!(plan.partials_per_group().iter().all(|&c| c == 1));
+        assert_eq!(plan.imbalance(), 1.0);
+    }
+
+    #[test]
+    fn fixed_split_covers_and_chunks() {
+        let p = DecodeProblem::uniform(1, 2, 10 * 256, 64); // 10 tiles/group
+        let plan = fixed_split_plan(&p, 4, Strategy::FixedSplit { splits: 4 });
+        plan.validate(&p).unwrap();
+        assert_eq!(plan.grid(), 8); // 2 groups x 4 splits
+        // ceil(10/4)=3 -> chunks 3,3,3,1
+        let tiles: Vec<u64> = plan.tiles_per_cta();
+        assert_eq!(tiles, vec![3, 3, 3, 1, 3, 3, 3, 1]);
+        assert!(plan.imbalance() > 1.0);
+    }
+
+    #[test]
+    fn fixed_split_clamps_to_tiles() {
+        let p = DecodeProblem::uniform(1, 1, 256, 64); // 1 tile
+        let plan = fixed_split_plan(&p, 8, Strategy::FixedSplit { splits: 8 });
+        plan.validate(&p).unwrap();
+        assert_eq!(plan.grid(), 1);
+    }
+
+    #[test]
+    fn fd_heuristic_no_split_when_busy() {
+        // groups >= 0.8 * sms -> no split (paper: FD behaves like FA2 at
+        // high batch, Fig 7c discussion).
+        let p = DecodeProblem::uniform(8, 32, 65536, 64); // 256 groups
+        assert_eq!(fd_heuristic_splits(&p, 108, 128), 1);
+    }
+
+    #[test]
+    fn fd_heuristic_splits_when_idle() {
+        let p = DecodeProblem::uniform(1, 8, 65536, 64); // 8 groups, 108 SMs
+        let s = fd_heuristic_splits(&p, 108, 128);
+        assert!(s > 1, "should split, got {s}");
+        assert!(8 * s <= 2 * 108, "not absurdly oversplit: {s}");
+    }
+
+    #[test]
+    fn validate_catches_gap() {
+        let p = DecodeProblem::uniform(1, 1, 512, 64); // 2 tiles
+        let plan = Plan {
+            strategy: Strategy::Dense,
+            tile: p.tile,
+            groups: 1,
+            ctas: vec![CtaWork {
+                segments: vec![Segment {
+                    group: 0,
+                    tile_begin: 0,
+                    tile_count: 1,
+                    is_host: true,
+                    is_finishing: false,
+                }],
+            }],
+        };
+        assert!(plan.validate(&p).is_err());
+    }
+
+    #[test]
+    fn validate_catches_wrong_host_flag() {
+        let p = DecodeProblem::uniform(1, 1, 256, 64);
+        let plan = Plan {
+            strategy: Strategy::Dense,
+            tile: p.tile,
+            groups: 1,
+            ctas: vec![CtaWork {
+                segments: vec![Segment {
+                    group: 0,
+                    tile_begin: 0,
+                    tile_count: 1,
+                    is_host: false,
+                    is_finishing: true,
+                }],
+            }],
+        };
+        assert!(plan.validate(&p).is_err());
+    }
+
+    #[test]
+    fn strategy_names() {
+        assert_eq!(Strategy::Dense.name(), "flashattention2");
+        assert_eq!(Strategy::StreamK.name(), "leanattention");
+    }
+}

@@ -1,0 +1,175 @@
+//! LeanAttention's stream-K decomposition (§IV-C/D, Algorithm 2).
+//!
+//! All LeanTile iterations of all output tiles are rolled out into one
+//! linear iteration space following the `batch → heads → context`
+//! linearization (ragged batches linearize the same way — the per-group
+//! tile counts simply differ). That space is divided into `grid` *equal*
+//! contiguous ranges, one per CTA; a CTA's range may cross output-tile
+//! boundaries, in which case it contributes partial results that the
+//! tile's **host** CTA (owner of the tile's first iteration) reduces with
+//! the softmax re-scaling operator.
+//!
+//! Grid sizing follows the paper: the grid is fixed at the device's
+//! co-resident CTA capacity (`num_sms × MaxCTAsPerSM`, Eq. 2) — unless the
+//! problem has fewer tiles than that, in which case one CTA per tile
+//! degenerates to FlashAttention-2-style execution (the "special case"
+//! generalization the paper points out).
+
+use super::plan::{CtaWork, DecodeProblem, Plan, Segment, Strategy};
+
+/// Build the LeanAttention plan for a device with `sm_slots` co-resident
+/// CTA slots.
+pub fn stream_k_plan(problem: &DecodeProblem, sm_slots: usize) -> Plan {
+    assert!(sm_slots > 0, "need at least one CTA slot");
+    let cum = problem.cum_tiles();
+    let total = *cum.last().unwrap();
+    let groups = problem.groups();
+
+    if total == 0 {
+        return Plan {
+            strategy: Strategy::StreamK,
+            tile: problem.tile,
+            ctas: Vec::new(),
+            groups,
+        };
+    }
+
+    let grid = (sm_slots as u64).min(total) as usize;
+    let base = total / grid as u64;
+    let rem = (total % grid as u64) as usize;
+
+    let mut ctas = Vec::with_capacity(grid);
+    let mut iter = 0u64; // global LeanTile iteration cursor
+    let mut group = 0usize; // group containing `iter` (monotonic sweep)
+    for cta in 0..grid {
+        let take = base + u64::from(cta < rem);
+        let end = iter + take;
+        let mut work = CtaWork::default();
+        while iter < end {
+            // advance `group` to the one containing `iter`
+            while cum[group + 1] <= iter {
+                group += 1;
+            }
+            let g_begin = cum[group];
+            let g_end = cum[group + 1];
+            let seg_begin = iter - g_begin;
+            let seg_end = (end.min(g_end)) - g_begin;
+            work.segments.push(Segment {
+                group: group as u32,
+                tile_begin: seg_begin as u32,
+                tile_count: (seg_end - seg_begin) as u32,
+                is_host: seg_begin == 0,
+                is_finishing: g_begin + seg_end == g_end,
+            });
+            iter = g_begin + seg_end;
+        }
+        ctas.push(work);
+    }
+    debug_assert_eq!(iter, total);
+
+    Plan { strategy: Strategy::StreamK, tile: problem.tile, ctas, groups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::prop_check;
+
+    #[test]
+    fn equalized_loads() {
+        let p = DecodeProblem::uniform(4, 32, 65536, 64); // 128 * 256 tiles
+        let plan = stream_k_plan(&p, 216); // A100: 108 SMs x 2 CTAs
+        plan.validate(&p).unwrap();
+        assert_eq!(plan.grid(), 216);
+        let tiles = plan.tiles_per_cta();
+        let max = *tiles.iter().max().unwrap();
+        let min = *tiles.iter().min().unwrap();
+        assert!(max - min <= 1, "stream-K loads differ by at most one tile");
+    }
+
+    #[test]
+    fn degenerates_to_dense_when_tiles_scarce() {
+        // groups == tiles (1 tile each) and plenty of slots: one CTA per
+        // output tile == FlashAttention-2 (the paper's special case).
+        let p = DecodeProblem::uniform(2, 8, 256, 64);
+        let plan = stream_k_plan(&p, 216);
+        plan.validate(&p).unwrap();
+        assert_eq!(plan.grid(), 16);
+        assert!(plan
+            .ctas
+            .iter()
+            .all(|c| c.segments.len() == 1
+                && c.segments[0].is_host
+                && c.segments[0].is_finishing));
+    }
+
+    #[test]
+    fn recovers_fixed_split_when_grid_divides_evenly() {
+        // grid an even multiple of output tiles -> equal chunks per head,
+        // which is exactly FlashDecoding's layout (the paper's second
+        // special case).
+        let p = DecodeProblem::uniform(1, 2, 8 * 256, 64); // 2 groups x 8 tiles
+        let plan = stream_k_plan(&p, 4); // 4 CTAs over 16 tiles -> 4 each
+        plan.validate(&p).unwrap();
+        let tiles = plan.tiles_per_cta();
+        assert_eq!(tiles, vec![4, 4, 4, 4]);
+        // every CTA covers a single group (no boundary crossing)
+        assert!(plan.ctas.iter().all(|c| c.segments.len() == 1));
+    }
+
+    #[test]
+    fn crosses_head_boundaries() {
+        // 2 groups x 3 tiles, 4 CTAs -> 6 tiles, loads 2,2,1,1: CTA 1 gets
+        // the tail of group 0 and the head of group 1 -> two segments.
+        let p = DecodeProblem::uniform(1, 2, 3 * 256, 64);
+        let plan = stream_k_plan(&p, 4);
+        plan.validate(&p).unwrap();
+        assert!(plan.ctas.iter().any(|c| c.segments.len() == 2));
+    }
+
+    #[test]
+    fn ragged_batch_equalized() {
+        let p = DecodeProblem::ragged(4, vec![1024, 65536, 256, 8192], 64);
+        let plan = stream_k_plan(&p, 108);
+        plan.validate(&p).unwrap();
+        let tiles = plan.tiles_per_cta();
+        let max = *tiles.iter().max().unwrap();
+        let min = *tiles.iter().min().unwrap();
+        assert!(max - min <= 1, "ragged loads equalized: {min}..{max}");
+    }
+
+    #[test]
+    fn empty_context_group() {
+        let p = DecodeProblem::ragged(2, vec![0, 512], 64);
+        let plan = stream_k_plan(&p, 8);
+        plan.validate(&p).unwrap();
+        // groups 0,1 (ctx 0) get no tiles; groups 2,3 covered
+        assert_eq!(plan.partials_per_group()[0], 0);
+    }
+
+    #[test]
+    fn property_valid_and_balanced_for_random_problems() {
+        prop_check("stream-K invariants", 300, |rng| {
+            let batch = rng.urange(1, 9);
+            let heads = *rng.choose(&[1usize, 2, 8, 32, 56, 128]);
+            let head_dim = *rng.choose(&[64usize, 128]);
+            let ctx_lens: Vec<u32> = (0..batch)
+                .map(|_| rng.range(1, 300_000) as u32)
+                .collect();
+            let p = DecodeProblem::ragged(heads, ctx_lens, head_dim);
+            let slots = rng.urange(1, 1024);
+            let plan = stream_k_plan(&p, slots);
+            plan.validate(&p).map_err(|e| e.to_string())?;
+            let tiles = plan.tiles_per_cta();
+            let max = *tiles.iter().max().unwrap_or(&0);
+            let min = *tiles.iter().min().unwrap_or(&0);
+            if max.saturating_sub(min) > 1 {
+                return Err(format!("imbalance {min}..{max}"));
+            }
+            if plan.grid() > slots {
+                return Err("grid exceeds slots".into());
+            }
+            Ok(())
+        });
+    }
+}

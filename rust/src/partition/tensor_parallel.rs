@@ -1,0 +1,142 @@
+//! Tensor-parallel head sharding (§III-D / §V "Multi-GPU Tensor
+//! Parallelism"): attention heads are partitioned across GPUs (each GPU
+//! holds `heads / n` heads of every layer), and each GPU runs its own
+//! stream-K plan over its shard. Because attention is computed per head,
+//! no cross-GPU reduction is needed inside the attention op — the only
+//! collective is the later `Wo` all-reduce, outside this kernel — which is
+//! exactly why LeanAttention "supports tensor parallelism" while
+//! FlashDecoding's fixed grid does not adapt (the paper scales FD to the
+//! total SM count instead; our simulator does the same for the baseline).
+
+use anyhow::{ensure, Result};
+
+use super::plan::{build_plan, DecodeProblem, Plan, Strategy};
+
+/// One GPU's share of a tensor-parallel attention problem.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub gpu: usize,
+    pub problem: DecodeProblem,
+    pub plan: Plan,
+}
+
+/// Shard `problem`'s heads over `n_gpus` and plan each shard
+/// independently with `strategy` on a device with `slots_per_gpu` CTA
+/// slots. Head counts that do not divide evenly are spread ±1 (the same
+/// remainder rule stream-K uses for tiles).
+pub fn shard_heads(
+    problem: &DecodeProblem,
+    n_gpus: usize,
+    strategy: Strategy,
+    slots_per_gpu: usize,
+) -> Result<Vec<Shard>> {
+    ensure!(n_gpus >= 1, "need at least one GPU");
+    ensure!(
+        problem.heads >= n_gpus,
+        "cannot shard {} heads over {n_gpus} GPUs",
+        problem.heads
+    );
+    let base = problem.heads / n_gpus;
+    let rem = problem.heads % n_gpus;
+    let mut shards = Vec::with_capacity(n_gpus);
+    for gpu in 0..n_gpus {
+        let heads = base + usize::from(gpu < rem);
+        let sub = DecodeProblem {
+            heads,
+            head_dim: problem.head_dim,
+            ctx_lens: problem.ctx_lens.clone(),
+            tile: problem.tile,
+        };
+        let plan = build_plan(&sub, strategy, slots_per_gpu);
+        plan.validate(&sub)?;
+        shards.push(Shard { gpu, problem: sub, plan });
+    }
+    Ok(shards)
+}
+
+/// Simulated multi-GPU latency: GPUs run concurrently, so the batch
+/// completes when the slowest shard does.
+pub fn simulate_sharded(
+    shards: &[Shard],
+    arch: &crate::sim::GpuArch,
+) -> crate::sim::SimResult {
+    use crate::sim::schedule::simulate_plan;
+    let mut worst: Option<crate::sim::SimResult> = None;
+    for s in shards {
+        let r = simulate_plan(&s.plan, &s.problem, arch);
+        if worst
+            .as_ref()
+            .map(|w| r.latency_us > w.latency_us)
+            .unwrap_or(true)
+        {
+            worst = Some(r);
+        }
+    }
+    worst.expect("at least one shard")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::GpuArch;
+    use crate::util::testing::prop_check;
+
+    #[test]
+    fn even_sharding() {
+        let p = DecodeProblem::uniform(4, 256, 65536, 64);
+        let shards = shard_heads(&p, 8, Strategy::StreamK, 216).unwrap();
+        assert_eq!(shards.len(), 8);
+        assert!(shards.iter().all(|s| s.problem.heads == 32));
+        let total: usize = shards.iter().map(|s| s.problem.heads).sum();
+        assert_eq!(total, 256);
+    }
+
+    #[test]
+    fn uneven_sharding_spreads_remainder() {
+        let p = DecodeProblem::uniform(1, 30, 65536, 64);
+        let shards = shard_heads(&p, 8, Strategy::StreamK, 216).unwrap();
+        let heads: Vec<usize> = shards.iter().map(|s| s.problem.heads).collect();
+        assert_eq!(heads.iter().sum::<usize>(), 30);
+        let max = heads.iter().max().unwrap();
+        let min = heads.iter().min().unwrap();
+        assert!(max - min <= 1, "{heads:?}");
+    }
+
+    #[test]
+    fn too_few_heads_rejected() {
+        let p = DecodeProblem::uniform(1, 4, 65536, 64);
+        assert!(shard_heads(&p, 8, Strategy::StreamK, 216).is_err());
+    }
+
+    #[test]
+    fn sharded_lean_matches_monolithic_multi_gpu_model() {
+        // Sharding heads across 8 GPUs ~= one 8x device in the aggregate
+        // simulator (both near-perfect occupancy).
+        let p = DecodeProblem::uniform(4, 256, 262_144, 64);
+        let single = GpuArch::a100();
+        let shards = shard_heads(&p, 8, Strategy::StreamK, single.sm_slots()).unwrap();
+        let sharded = simulate_sharded(&shards, &single);
+        let mono = crate::sim::simulate(&p, Strategy::StreamK, &single.multi(8));
+        let ratio = sharded.latency_us / mono.latency_us;
+        assert!((0.8..1.3).contains(&ratio), "TP vs mono ratio {ratio}");
+    }
+
+    #[test]
+    fn property_shards_cover_all_heads() {
+        prop_check("TP sharding coverage", 100, |rng| {
+            let heads = rng.urange(8, 512);
+            let gpus = *rng.choose(&[2usize, 4, 8]);
+            if heads < gpus {
+                return Ok(());
+            }
+            let p = DecodeProblem::uniform(rng.urange(1, 5), heads, 1 << rng.urange(10, 18), 64);
+            let shards =
+                shard_heads(&p, gpus, Strategy::StreamK, 216).map_err(|e| e.to_string())?;
+            let total: usize = shards.iter().map(|s| s.problem.heads).sum();
+            if total != heads {
+                return Err(format!("covered {total} of {heads} heads"));
+            }
+            Ok(())
+        });
+    }
+}

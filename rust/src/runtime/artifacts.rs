@@ -1,0 +1,242 @@
+//! `artifacts/manifest.json` parsing and bucket lookup.
+//!
+//! The AOT pipeline compiles attention kernels for a grid of
+//! `(g = batch×heads, head_dim, ctx)` buckets; at runtime a problem is
+//! padded up to the smallest bucket that fits (lengths are masked inside
+//! the kernel, so padding is exact).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One attention artifact bucket.
+#[derive(Clone, Debug)]
+pub struct AttentionArtifact {
+    pub kind: AttentionKind,
+    pub g: usize,
+    pub d: usize,
+    pub ctx: usize,
+    pub tile: usize,
+    pub file: String,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttentionKind {
+    /// Full decode attention: `(q, k, v, lens) -> (o, lse)`.
+    Full,
+    /// Un-scaled partials: `(q, k, v, valid) -> (o~, m, l)`.
+    Partial,
+}
+
+/// One transformer model's artifact set.
+#[derive(Clone, Debug)]
+pub struct ModelArtifact {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub ctx_bucket: usize,
+    pub prefill_bucket: usize,
+    pub batch: usize,
+    pub param_count: usize,
+    pub decode_file: String,
+    pub prefill_file: String,
+    pub weights_file: String,
+    /// Flat parameter order: (name, shape).
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+/// Parsed manifest with artifact lookups.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub attention: Vec<AttentionArtifact>,
+    pub models: BTreeMap<String, ModelArtifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let json = Json::parse(&text).context("parse manifest.json")?;
+        if json.usize_at("version") != 1 {
+            bail!("unsupported manifest version");
+        }
+
+        let mut attention = Vec::new();
+        for e in json.at("attention").as_arr().context("attention array")? {
+            let kind = match e.str_at("kind") {
+                "full" => AttentionKind::Full,
+                "partial" => AttentionKind::Partial,
+                k => bail!("unknown attention kind {k}"),
+            };
+            attention.push(AttentionArtifact {
+                kind,
+                g: e.usize_at("g"),
+                d: e.usize_at("d"),
+                ctx: e.usize_at("ctx"),
+                tile: e.usize_at("tile"),
+                file: e.str_at("file").to_string(),
+            });
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(obj) = json.at("models").as_obj() {
+            for (name, m) in obj {
+                let cfg = m.at("config");
+                let params = m
+                    .at("params")
+                    .as_arr()
+                    .context("params")?
+                    .iter()
+                    .map(|p| {
+                        let shape = p
+                            .at("shape")
+                            .as_arr()
+                            .unwrap()
+                            .iter()
+                            .map(|d| d.as_usize().unwrap())
+                            .collect();
+                        (p.str_at("name").to_string(), shape)
+                    })
+                    .collect();
+                models.insert(
+                    name.clone(),
+                    ModelArtifact {
+                        name: name.clone(),
+                        vocab: cfg.usize_at("vocab"),
+                        d_model: cfg.usize_at("d_model"),
+                        n_layers: cfg.usize_at("n_layers"),
+                        n_heads: cfg.usize_at("n_heads"),
+                        head_dim: cfg.usize_at("head_dim"),
+                        d_ff: cfg.usize_at("d_ff"),
+                        ctx_bucket: cfg.usize_at("ctx_bucket"),
+                        prefill_bucket: cfg.usize_at("prefill_bucket"),
+                        batch: cfg.usize_at("batch"),
+                        param_count: cfg.usize_at("param_count"),
+                        decode_file: m.at("decode").str_at("file").to_string(),
+                        prefill_file: m.at("prefill").str_at("file").to_string(),
+                        weights_file: m.str_at("weights").to_string(),
+                        params,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest { dir, attention, models })
+    }
+
+    /// Default artifact directory: `$LEANATTN_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("LEANATTN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Cheapest bucket with `g >= g_need`, `ctx >= ctx_need`, exact `d`.
+    /// "Cheapest" = least padded work (`g × ctx`), tie-broken by shape —
+    /// kernel cost is proportional to the padded area, so lexicographic
+    /// `(g, ctx)` would happily pick a 16×4096 bucket for a 16×256 task
+    /// (16× the work) over a 32×256 one.
+    pub fn find_attention(
+        &self,
+        kind: AttentionKind,
+        d: usize,
+        g_need: usize,
+        ctx_need: usize,
+    ) -> Option<&AttentionArtifact> {
+        self.attention
+            .iter()
+            .filter(|a| {
+                a.kind == kind && a.d == d && a.g >= g_need && a.ctx >= ctx_need
+            })
+            .min_by_key(|a| (a.g * a.ctx, a.g, a.ctx))
+    }
+
+    /// Largest partial-attention bucket for dimension `d` (the chunking
+    /// target when a problem exceeds every bucket).
+    pub fn largest_partial(&self, d: usize) -> Option<&AttentionArtifact> {
+        self.attention
+            .iter()
+            .filter(|a| a.kind == AttentionKind::Partial && a.d == d)
+            .max_by_key(|a| (a.ctx, a.g))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifact> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        manifest_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(manifest_dir()).unwrap();
+        assert!(!m.attention.is_empty());
+        assert!(m.models.contains_key("tiny"));
+        let tiny = m.model("tiny").unwrap();
+        assert!(!tiny.params.is_empty());
+        assert!(m.path_of(&tiny.weights_file).exists());
+    }
+
+    #[test]
+    fn bucket_selection_prefers_smallest_fit() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(manifest_dir()).unwrap();
+        let a = m
+            .find_attention(AttentionKind::Full, 64, 5, 200)
+            .expect("bucket for g=5 ctx=200");
+        assert!(a.g >= 5 && a.ctx >= 200);
+        // smallest: no other bucket strictly smaller fits
+        for other in &m.attention {
+            if other.kind == AttentionKind::Full
+                && other.d == 64
+                && other.g >= 5
+                && other.ctx >= 200
+            {
+                assert!((a.g, a.ctx) <= (other.g, other.ctx));
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_requests_fail_gracefully() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(manifest_dir()).unwrap();
+        assert!(m.find_attention(AttentionKind::Full, 64, 10_000, 256).is_none());
+        assert!(m.largest_partial(64).is_some());
+    }
+}

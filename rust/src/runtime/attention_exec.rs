@@ -1,0 +1,256 @@
+//! Decode attention over the PJRT kernel artifacts.
+//!
+//! Two execution paths:
+//!
+//! * [`AttentionExecutor::full`] — one fused kernel call per bucket
+//!   (padding is exact because lengths are masked in-kernel).
+//! * [`AttentionExecutor::lean`] — the LeanAttention path: a
+//!   [`crate::partition::Plan`]'s CTA segments are chunked to the partial
+//!   artifact's bucket, executed as batched partial-attention calls, and
+//!   reduced in Rust with the softmax re-scaling operator (Alg 2 L24-39).
+//!   Chunking a segment is exact for the same reason the paper's unequal
+//!   splits are: the operator is associative.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::attention::{Partials, RowStats};
+use crate::partition::plan::Plan;
+
+use super::artifacts::{AttentionKind, Manifest};
+use super::client::{Executable, Runtime};
+use super::tensor::HostTensor;
+
+/// Decode-attention inputs in the repo's flattened-group layout:
+/// `q: [g, d]`, `k/v: [g, n, d]` row-major, `lens[g]`.
+pub struct AttentionProblem<'a> {
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub lens: &'a [u32],
+    pub g: usize,
+    pub n: usize,
+    pub d: usize,
+}
+
+/// Compiles and caches attention artifacts; executes decode attention.
+pub struct AttentionExecutor {
+    runtime: Rc<Runtime>,
+    manifest: Rc<Manifest>,
+    cache: std::cell::RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl AttentionExecutor {
+    pub fn new(runtime: Rc<Runtime>, manifest: Rc<Manifest>) -> AttentionExecutor {
+        AttentionExecutor {
+            runtime,
+            manifest,
+            cache: Default::default(),
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&self, file: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let exe = Rc::new(self.runtime.load_hlo(self.manifest.path_of(file))?);
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of distinct compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Exact decode attention through the fused `attn_full` artifact.
+    /// Returns `(o: [g, d], lse: [g])`.
+    pub fn full(&self, p: &AttentionProblem) -> Result<(Vec<f32>, Vec<f32>)> {
+        let art = self
+            .manifest
+            .find_attention(AttentionKind::Full, p.d, p.g, p.n)
+            .with_context(|| {
+                format!("no full-attention bucket for g={} d={} ctx={}", p.g, p.d, p.n)
+            })?;
+        let exe = self.executable(&art.file)?;
+        let (bg, bc, d) = (art.g, art.ctx, p.d);
+
+        // Pad into the bucket (zeros + length masking make this exact).
+        let mut q = vec![0.0f32; bg * d];
+        let mut k = vec![0.0f32; bg * bc * d];
+        let mut v = vec![0.0f32; bg * bc * d];
+        let mut lens = vec![0i32; bg];
+        for gi in 0..p.g {
+            q[gi * d..(gi + 1) * d].copy_from_slice(&p.q[gi * d..(gi + 1) * d]);
+            let src = gi * p.n * d;
+            let dst = gi * bc * d;
+            k[dst..dst + p.n * d].copy_from_slice(&p.k[src..src + p.n * d]);
+            v[dst..dst + p.n * d].copy_from_slice(&p.v[src..src + p.n * d]);
+            lens[gi] = p.lens[gi].min(p.n as u32) as i32;
+        }
+
+        let out = exe.run(&[
+            HostTensor::f32(&[bg as i64, d as i64], q),
+            HostTensor::f32(&[bg as i64, bc as i64, d as i64], k),
+            HostTensor::f32(&[bg as i64, bc as i64, d as i64], v),
+            HostTensor::i32(&[bg as i64], lens),
+        ])?;
+        let o_full = out[0].as_f32()?;
+        let lse_full = out[1].as_f32()?;
+        Ok((
+            o_full[..p.g * d].to_vec(),
+            lse_full[..p.g].to_vec(),
+        ))
+    }
+
+    /// Un-scaled partial attention over a batch of same-width tasks via
+    /// the `attn_partial` artifact. `q: [t, d]`, `kv: [t, w, d]`,
+    /// `valid[t]`; returns `Partials` with `g = t`.
+    fn partial_batch(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        valid: &[u32],
+        t: usize,
+        w: usize,
+        d: usize,
+    ) -> Result<Partials> {
+        let art = self
+            .manifest
+            .find_attention(AttentionKind::Partial, d, t, w)
+            .with_context(|| format!("no partial bucket for t={t} d={d} w={w}"))?;
+        let exe = self.executable(&art.file)?;
+        let (bg, bc) = (art.g, art.ctx);
+
+        let mut qb = vec![0.0f32; bg * d];
+        let mut kb = vec![0.0f32; bg * bc * d];
+        let mut vb = vec![0.0f32; bg * bc * d];
+        let mut validb = vec![0i32; bg];
+        qb[..t * d].copy_from_slice(q);
+        for ti in 0..t {
+            let src = ti * w * d;
+            let dst = ti * bc * d;
+            kb[dst..dst + w * d].copy_from_slice(&k[src..src + w * d]);
+            vb[dst..dst + w * d].copy_from_slice(&v[src..src + w * d]);
+            validb[ti] = valid[ti].min(w as u32) as i32;
+        }
+
+        let out = exe.run(&[
+            HostTensor::f32(&[bg as i64, d as i64], qb),
+            HostTensor::f32(&[bg as i64, bc as i64, d as i64], kb),
+            HostTensor::f32(&[bg as i64, bc as i64, d as i64], vb),
+            HostTensor::i32(&[bg as i64], validb),
+        ])?;
+        let o = out[0].as_f32()?[..t * d].to_vec();
+        let m = &out[1].as_f32()?[..t];
+        let l = &out[2].as_f32()?[..t];
+        Ok(Partials::from_flat(t, d, o, m, l))
+    }
+
+    /// LeanAttention: execute `plan`'s CTA segments through the partial
+    /// artifact and reduce in Rust. Returns `(o: [g, d], lse: [g])`.
+    pub fn lean(&self, p: &AttentionProblem, plan: &Plan) -> Result<(Vec<f32>, Vec<f32>)> {
+        let d = p.d;
+        // Chunk tasks at LeanTile width and batch as many as the widest
+        // available group bucket allows: padded work then tracks real work
+        // (perf note in EXPERIMENTS.md §Perf — the previous
+        // largest-bucket choice cost ~100x on small problems).
+        let chunk_w = plan.tile;
+        let batch_t = self
+            .manifest
+            .attention
+            .iter()
+            .filter(|a| a.kind == AttentionKind::Partial && a.d == d && a.ctx >= chunk_w)
+            .map(|a| a.g)
+            .max()
+            .with_context(|| format!("no partial bucket for d={d}"))?;
+
+        // Roll plan segments out into bucket-width tasks.
+        struct Task {
+            group: usize,
+            start: usize, // token offset in the group's context
+            width: usize,
+        }
+        let mut tasks = Vec::new();
+        for cta in &plan.ctas {
+            for seg in &cta.segments {
+                let gi = seg.group as usize;
+                let ctx = (p.lens[gi] as usize).min(p.n);
+                let mut tok = seg.tile_begin as usize * plan.tile;
+                let seg_end =
+                    ((seg.tile_begin + seg.tile_count) as usize * plan.tile).min(p.n);
+                while tok < seg_end {
+                    let width = chunk_w.min(seg_end - tok);
+                    // Tasks fully beyond the valid length contribute the
+                    // identity; skip them outright.
+                    if tok < ctx {
+                        tasks.push(Task { group: gi, start: tok, width });
+                    }
+                    tok += width;
+                }
+            }
+        }
+
+        // Execute tasks in batches of the artifact's group capacity.
+        let mut acc = Partials::identity(p.g, d);
+        let mut qb = Vec::new();
+        let mut kb = Vec::new();
+        let mut vb = Vec::new();
+        let mut valid = Vec::new();
+        let mut groups = Vec::new();
+        for chunk in tasks.chunks(batch_t) {
+            qb.clear();
+            kb.clear();
+            vb.clear();
+            valid.clear();
+            groups.clear();
+            let w = chunk.iter().map(|t| t.width).max().unwrap();
+            for task in chunk {
+                let gi = task.group;
+                qb.extend_from_slice(&p.q[gi * d..(gi + 1) * d]);
+                let base = gi * p.n * d + task.start * d;
+                kb.extend_from_slice(&p.k[base..base + task.width * d]);
+                vb.extend_from_slice(&p.v[base..base + task.width * d]);
+                // pad narrower tasks inside this batch to width w
+                for _ in task.width..w {
+                    kb.extend(std::iter::repeat(0.0).take(d));
+                    vb.extend(std::iter::repeat(0.0).take(d));
+                }
+                let ctx = p.lens[gi] as usize;
+                valid.push(ctx.saturating_sub(task.start).min(task.width) as u32);
+                groups.push(gi);
+            }
+            let part =
+                self.partial_batch(&qb, &kb, &vb, &valid, chunk.len(), w, d)?;
+            // Fold each task's row into its group's accumulator.
+            for (ti, &gi) in groups.iter().enumerate() {
+                let row = &part.o[ti * d..(ti + 1) * d];
+                let stats = part.stats[ti];
+                fold_row(&mut acc, gi, row, stats);
+            }
+        }
+
+        let lse = acc.lse();
+        Ok((acc.finalize(), lse))
+    }
+}
+
+fn fold_row(acc: &mut Partials, gi: usize, row: &[f32], stats: RowStats) {
+    let d = acc.d;
+    crate::attention::rescale_row(
+        &mut acc.o[gi * d..(gi + 1) * d],
+        &mut acc.stats[gi],
+        row,
+        stats,
+    );
+}
+
+// Integration tests against the host oracle live in
+// rust/tests/pjrt_attention.rs (they require built artifacts).

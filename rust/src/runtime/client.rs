@@ -1,0 +1,96 @@
+//! PJRT client + compiled-executable wrappers.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax
+//! ≥ 0.5 serialized protos carry 64-bit instruction ids that the pinned
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::tensor::HostTensor;
+
+/// A PJRT device connection (CPU in this environment).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Connect to the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it for this device.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable { exe, path: path.to_path_buf() })
+    }
+}
+
+/// A compiled computation ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the flattened output tuple.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the single
+    /// device output is a tuple we decompose into per-output tensors.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        self.run_literals(&lits.iter().collect::<Vec<_>>())
+    }
+
+    /// Execute with pre-built literals (lets callers cache e.g. weights).
+    pub fn run_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<HostTensor>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.path.display()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = lit.to_tuple().context("decompose result tuple")?;
+        parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Runtime tests live in `rust/tests/pjrt_attention.rs` (they need the
+    //! AOT artifacts); here we only check client construction, which must
+    //! work without artifacts.
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().expect("cpu client");
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+        assert!(rt.device_count() >= 1);
+    }
+}

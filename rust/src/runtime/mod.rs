@@ -1,0 +1,25 @@
+//! PJRT runtime: loads the HLO-text artifacts `python/compile/aot.py`
+//! emits and executes them on the CPU PJRT client. Python never runs on
+//! this path — the Rust binary is self-contained once `make artifacts`
+//! has produced `artifacts/`.
+//!
+//! * [`client`]   — PJRT client + executable wrappers.
+//! * [`tensor`]   — host tensors ⇄ XLA literals.
+//! * [`artifacts`]— `manifest.json` parsing and bucket lookup.
+//! * [`weights`]  — flat f32 weight-blob loading.
+//! * [`attention_exec`] — decode attention over the kernel artifacts,
+//!   including the stream-K partial path reduced in Rust.
+//! * [`model_exec`] — transformer prefill/decode step execution.
+
+pub mod artifacts;
+pub mod attention_exec;
+pub mod client;
+pub mod model_exec;
+pub mod tensor;
+pub mod weights;
+
+pub use artifacts::Manifest;
+pub use attention_exec::AttentionExecutor;
+pub use client::{Executable, Runtime};
+pub use model_exec::ModelRuntime;
+pub use tensor::HostTensor;

@@ -1,0 +1,149 @@
+//! Transformer prefill/decode step execution over the model artifacts.
+//!
+//! Weights are uploaded once as XLA literals and reused across every call
+//! — the only per-step traffic is tokens, positions and the KV cache
+//! views the coordinator materializes.
+
+use std::rc::Rc;
+
+use anyhow::{ensure, Context, Result};
+
+use super::artifacts::{Manifest, ModelArtifact};
+use super::client::{Executable, Runtime};
+use super::tensor::HostTensor;
+use super::weights::load_weights;
+
+/// Output of one decode step.
+pub struct DecodeOut {
+    /// `[b, vocab]` next-token logits.
+    pub logits: Vec<f32>,
+    /// `[l, b, h, dh]` fresh K rows for the token just consumed.
+    pub new_k: Vec<f32>,
+    /// `[l, b, h, dh]` fresh V rows.
+    pub new_v: Vec<f32>,
+}
+
+/// Output of a prefill call.
+pub struct PrefillOut {
+    /// `[b, vocab]` logits of each sequence's last real token.
+    pub logits: Vec<f32>,
+    /// `[l, b, h, p, dh]` prompt K cache.
+    pub k: Vec<f32>,
+    /// `[l, b, h, p, dh]` prompt V cache.
+    pub v: Vec<f32>,
+}
+
+/// A loaded model: compiled steps + uploaded weights.
+pub struct ModelRuntime {
+    pub art: ModelArtifact,
+    decode: Executable,
+    prefill: Executable,
+    weight_literals: Vec<xla::Literal>,
+}
+
+impl ModelRuntime {
+    pub fn load(runtime: &Rc<Runtime>, manifest: &Manifest, name: &str) -> Result<ModelRuntime> {
+        let art = manifest.model(name)?.clone();
+        let decode = runtime
+            .load_hlo(manifest.path_of(&art.decode_file))
+            .context("compile decode step")?;
+        let prefill = runtime
+            .load_hlo(manifest.path_of(&art.prefill_file))
+            .context("compile prefill step")?;
+        let weights = load_weights(manifest, &art)?;
+        let weight_literals = weights
+            .iter()
+            .map(|w| w.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelRuntime { art, decode, prefill, weight_literals })
+    }
+
+    /// KV cache element count per layer-batch-head plane: `ctx_bucket * head_dim`.
+    pub fn cache_elems(&self) -> usize {
+        self.art.n_layers * self.art.batch * self.art.n_heads * self.art.ctx_bucket
+            * self.art.head_dim
+    }
+
+    /// One decode step.
+    ///
+    /// * `tokens[b]` — current token per sequence.
+    /// * `k_cache/v_cache` — `[l, b, h, ctx_bucket, dh]` materialized caches
+    ///   holding each sequence's first `positions[b]` tokens.
+    /// * `positions[b]` — number of cached tokens (the fresh token's index).
+    pub fn decode(
+        &self,
+        tokens: &[i32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        positions: &[i32],
+    ) -> Result<DecodeOut> {
+        let b = self.art.batch;
+        ensure!(tokens.len() == b, "tokens len");
+        ensure!(positions.len() == b, "positions len");
+        ensure!(k_cache.len() == self.cache_elems(), "k_cache size");
+        ensure!(v_cache.len() == self.cache_elems(), "v_cache size");
+        for &p in positions {
+            ensure!(
+                (p as usize) < self.art.ctx_bucket,
+                "position {p} exceeds ctx bucket {}",
+                self.art.ctx_bucket
+            );
+        }
+
+        let (l, h, c, dh) = (
+            self.art.n_layers as i64,
+            self.art.n_heads as i64,
+            self.art.ctx_bucket as i64,
+            self.art.head_dim as i64,
+        );
+        // Literals straight from the borrowed buffers: one copy into XLA
+        // instead of Vec-clone + copy (perf log in EXPERIMENTS.md §Perf).
+        let dyn_literals = [
+            HostTensor::literal_i32(&[b as i64], tokens)?,
+            HostTensor::literal_f32(&[l, b as i64, h, c, dh], k_cache)?,
+            HostTensor::literal_f32(&[l, b as i64, h, c, dh], v_cache)?,
+            HostTensor::literal_i32(&[b as i64], positions)?,
+        ];
+        let mut inputs: Vec<&xla::Literal> = self.weight_literals.iter().collect();
+        inputs.extend(dyn_literals.iter());
+
+        let out = self.decode.run_literals(&inputs)?;
+        ensure!(out.len() == 3, "decode outputs");
+        let mut it = out.into_iter();
+        Ok(DecodeOut {
+            logits: it.next().unwrap().into_f32()?,
+            new_k: it.next().unwrap().into_f32()?,
+            new_v: it.next().unwrap().into_f32()?,
+        })
+    }
+
+    /// Prefill `tokens: [b, prefill_bucket]` (right-padded) with true
+    /// `lengths[b]`.
+    pub fn prefill(&self, tokens: &[i32], lengths: &[i32]) -> Result<PrefillOut> {
+        let b = self.art.batch;
+        let p = self.art.prefill_bucket;
+        ensure!(tokens.len() == b * p, "tokens shape");
+        ensure!(lengths.len() == b, "lengths shape");
+        for &len in lengths {
+            ensure!(len >= 1 && (len as usize) <= p, "prompt length {len}");
+        }
+
+        let dyn_literals = [
+            HostTensor::literal_i32(&[b as i64, p as i64], tokens)?,
+            HostTensor::literal_i32(&[b as i64], lengths)?,
+        ];
+        let mut inputs: Vec<&xla::Literal> = self.weight_literals.iter().collect();
+        inputs.extend(dyn_literals.iter());
+
+        let out = self.prefill.run_literals(&inputs)?;
+        ensure!(out.len() == 3, "prefill outputs");
+        let mut it = out.into_iter();
+        Ok(PrefillOut {
+            logits: it.next().unwrap().into_f32()?,
+            k: it.next().unwrap().into_f32()?,
+            v: it.next().unwrap().into_f32()?,
+        })
+    }
+}
+
+// Integration tests live in rust/tests/pjrt_model.rs (need artifacts).

@@ -1,0 +1,144 @@
+//! Host tensors and conversion to/from XLA literals.
+
+use anyhow::{bail, Context, Result};
+
+/// Element storage for a host tensor (the two dtypes the artifacts use).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense row-major host tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<i64>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(dims: &[i64], data: Vec<f32>) -> HostTensor {
+        assert_eq!(
+            dims.iter().product::<i64>() as usize,
+            data.len(),
+            "f32 tensor shape/data mismatch"
+        );
+        HostTensor { dims: dims.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn i32(dims: &[i64], data: Vec<i32>) -> HostTensor {
+        assert_eq!(
+            dims.iter().product::<i64>() as usize,
+            data.len(),
+            "i32 tensor shape/data mismatch"
+        );
+        HostTensor { dims: dims.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn zeros_f32(dims: &[i64]) -> HostTensor {
+        let n = dims.iter().product::<i64>() as usize;
+        HostTensor::f32(dims, vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Build an f32 literal straight from a borrowed slice (one copy into
+    /// XLA, no intermediate Vec — the hot-path variant).
+    pub fn literal_f32(dims: &[i64], data: &[f32]) -> Result<xla::Literal> {
+        debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .with_context(|| format!("reshape literal to {dims:?}"))
+    }
+
+    /// Build an i32 literal straight from a borrowed slice.
+    pub fn literal_i32(dims: &[i64], data: &[i32]) -> Result<xla::Literal> {
+        debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .with_context(|| format!("reshape literal to {dims:?}"))
+    }
+
+    /// Convert to an XLA literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        lit.reshape(&self.dims)
+            .with_context(|| format!("reshape literal to {:?}", self.dims))
+    }
+
+    /// Read an XLA literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal array shape")?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        let data = match shape.primitive_type() {
+            xla::PrimitiveType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            xla::PrimitiveType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+            ty => bail!("unsupported literal element type {ty:?}"),
+        };
+        Ok(HostTensor { dims, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        let t = HostTensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn bad_shape_panics() {
+        HostTensor::f32(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let t = HostTensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+
+        let ti = HostTensor::i32(&[3], vec![7, 8, 9]);
+        let lit = ti.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), ti);
+    }
+}

@@ -1,0 +1,68 @@
+//! Flat f32 weight-blob loading (written by `python/compile/aot.py` in
+//! `param_order`; little-endian f32, concatenated).
+
+use anyhow::{ensure, Context, Result};
+
+use super::artifacts::{Manifest, ModelArtifact};
+use super::tensor::HostTensor;
+
+/// Load a model's weights as host tensors in parameter order.
+pub fn load_weights(manifest: &Manifest, model: &ModelArtifact) -> Result<Vec<HostTensor>> {
+    let path = manifest.path_of(&model.weights_file);
+    let blob = std::fs::read(&path)
+        .with_context(|| format!("read weights blob {}", path.display()))?;
+    let expect: usize = model
+        .params
+        .iter()
+        .map(|(_, s)| s.iter().product::<usize>())
+        .sum::<usize>()
+        * 4;
+    ensure!(
+        blob.len() == expect,
+        "weights blob {} bytes, manifest says {expect}",
+        blob.len()
+    );
+
+    let mut out = Vec::with_capacity(model.params.len());
+    let mut off = 0usize;
+    for (name, shape) in &model.params {
+        let n: usize = shape.iter().product();
+        let bytes = &blob[off..off + n * 4];
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        ensure!(
+            data.iter().all(|x| x.is_finite()),
+            "non-finite weight in {name}"
+        );
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        out.push(HostTensor::f32(&dims, data));
+        off += n * 4;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn loads_tiny_weights() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let tiny = m.model("tiny").unwrap();
+        let ws = load_weights(&m, tiny).unwrap();
+        assert_eq!(ws.len(), tiny.params.len());
+        let total: usize = ws.iter().map(|w| w.len()).sum();
+        assert_eq!(total, tiny.param_count);
+        // embed is first and non-trivial
+        assert_eq!(ws[0].dims.len(), 2);
+        assert!(ws[0].as_f32().unwrap().iter().any(|&x| x != 0.0));
+    }
+}

@@ -1,0 +1,156 @@
+//! Device descriptors. Numbers for A100/H100 come from the public spec
+//! sheets and the microbenchmarking literature the paper cites ([13],
+//! [21], [28]); the per-event overheads are calibration constants fitted
+//! so the simulator reproduces the paper's measured speedup *ratios*
+//! (documented in DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md).
+
+/// A (possibly multi-) GPU execution target.
+#[derive(Clone, Debug)]
+pub struct GpuArch {
+    pub name: String,
+    /// Streaming multiprocessors (compute units) across all GPUs.
+    pub num_sms: usize,
+    /// Co-resident attention CTAs per SM (shared-memory limited; 2 for the
+    /// 256-token LeanTile on A100 — paper §IV-C).
+    pub max_ctas_per_sm: usize,
+    /// Aggregate HBM bandwidth, GB/s (per GPU × num GPUs).
+    pub hbm_bw_gbs: f64,
+    /// Peak dense bf16/fp16 TFLOP/s (used by the timeshare model).
+    pub peak_tflops: f64,
+    /// Cost of launching one kernel (FlashDecoding pays this twice:
+    /// attention + reduction kernel; LeanAttention once — §IV-C).
+    pub kernel_launch_us: f64,
+    /// Host-CTA cost to load + re-scale one peer partial (Alg 2 L29-35).
+    pub reduce_per_partial_us: f64,
+    /// Non-host CTA cost to store `(O~, m, l)` to global memory + signal.
+    pub partial_store_us: f64,
+    /// Per-SM dynamic power when busy / idle-but-clocked, and baseline
+    /// board power (W) — for the Fig 13 energy model.
+    pub sm_busy_w: f64,
+    pub sm_idle_w: f64,
+    pub base_w: f64,
+    /// Bandwidth-efficiency multiplier (>1 = slower) for paged KV gathers
+    /// (FlashInfer's 16-token pages vs contiguous streams).
+    pub paged_gather_penalty: f64,
+    /// Fraction of CTA slots FlashInfer's batch scheduler can actually
+    /// fill (its reserved buffers/metadata CTAs; fitted to the paper's
+    /// FI-vs-FD gap).
+    pub fi_slot_fraction: f64,
+}
+
+impl GpuArch {
+    /// Nvidia A100-80GB (SXM): 108 SMs, 2039 GB/s, 312 TFLOPs bf16.
+    pub fn a100() -> GpuArch {
+        GpuArch {
+            name: "A100-80GB".into(),
+            num_sms: 108,
+            max_ctas_per_sm: 2,
+            hbm_bw_gbs: 2039.0,
+            peak_tflops: 312.0,
+            kernel_launch_us: 5.0,
+            reduce_per_partial_us: 0.12,
+            partial_store_us: 0.10,
+            sm_busy_w: 2.6,
+            sm_idle_w: 0.9,
+            base_w: 90.0,
+            paged_gather_penalty: 1.35,
+            fi_slot_fraction: 0.55,
+        }
+    }
+
+    /// Nvidia H100-SXM-80GB: 132 SMs, 3350 GB/s, 990 TFLOPs bf16.
+    pub fn h100() -> GpuArch {
+        GpuArch {
+            name: "H100-SXM-80GB".into(),
+            num_sms: 132,
+            max_ctas_per_sm: 2,
+            hbm_bw_gbs: 3350.0,
+            peak_tflops: 990.0,
+            kernel_launch_us: 4.0,
+            reduce_per_partial_us: 0.10,
+            partial_store_us: 0.08,
+            sm_busy_w: 3.6,
+            sm_idle_w: 1.2,
+            base_w: 110.0,
+            paged_gather_penalty: 1.5,
+            fi_slot_fraction: 0.45,
+        }
+    }
+
+    /// Tensor-parallel scale-out: `n` identical GPUs. Attention heads are
+    /// sharded across GPUs (§III-D), so the SM pool and bandwidth scale
+    /// linearly; per-event overheads stay per-GPU.
+    pub fn multi(&self, n: usize) -> GpuArch {
+        assert!(n >= 1);
+        GpuArch {
+            name: format!("{}x{}", n, self.name),
+            num_sms: self.num_sms * n,
+            hbm_bw_gbs: self.hbm_bw_gbs * n as f64,
+            peak_tflops: self.peak_tflops * n as f64,
+            ..self.clone()
+        }
+    }
+
+    /// Hypothetical 5-SM device from Fig 1 (for the schedule illustration).
+    pub fn toy(num_sms: usize) -> GpuArch {
+        GpuArch {
+            name: format!("toy-{num_sms}sm"),
+            num_sms,
+            max_ctas_per_sm: 1,
+            hbm_bw_gbs: 100.0,
+            peak_tflops: 10.0,
+            kernel_launch_us: 0.0,
+            reduce_per_partial_us: 0.1,
+            partial_store_us: 0.05,
+            sm_busy_w: 1.0,
+            sm_idle_w: 0.3,
+            base_w: 0.0,
+            paged_gather_penalty: 1.0,
+            fi_slot_fraction: 1.0,
+        }
+    }
+
+    /// Total co-resident CTA slots (the stream-K grid size, Eq. 2).
+    pub fn sm_slots(&self) -> usize {
+        self.num_sms * self.max_ctas_per_sm
+    }
+
+    /// Per-CTA-slot sustained memory bandwidth (GB/s). Each SM's LSU path
+    /// sustains roughly its fair share of HBM bandwidth; co-resident CTAs
+    /// split it.
+    pub fn slot_bw_gbs(&self) -> f64 {
+        self.hbm_bw_gbs / (self.num_sms as f64 * self.max_ctas_per_sm as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_matches_paper_constants() {
+        let a = GpuArch::a100();
+        assert_eq!(a.num_sms, 108);
+        assert_eq!(a.sm_slots(), 216); // paper: 108 x 2 = 216 grid
+    }
+
+    #[test]
+    fn h100_sm_count() {
+        assert_eq!(GpuArch::h100().num_sms, 132);
+    }
+
+    #[test]
+    fn multi_scales_linearly() {
+        let m = GpuArch::a100().multi(8);
+        assert_eq!(m.num_sms, 864); // paper: 8x108 = 864 compute cores
+        assert!((m.hbm_bw_gbs - 8.0 * 2039.0).abs() < 1e-9);
+        assert_eq!(m.max_ctas_per_sm, 2);
+    }
+
+    #[test]
+    fn slot_bandwidth_partitioned() {
+        let a = GpuArch::a100();
+        let total = a.slot_bw_gbs() * a.sm_slots() as f64;
+        assert!((total - a.hbm_bw_gbs).abs() < 1e-6);
+    }
+}

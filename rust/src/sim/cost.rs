@@ -1,0 +1,90 @@
+//! LeanTile cost model.
+//!
+//! Decode attention is memory-bandwidth-bound (arithmetic intensity ≈ 1
+//! FLOP/byte — paper §I, [37]): each LeanTile iteration streams `tile × d`
+//! K rows and V rows from HBM exactly once, does two skinny matmuls, and
+//! keeps everything else resident. The per-tile latency is therefore
+//! `bytes_moved / slot_bandwidth`, with a small fixed issue overhead, and
+//! an MXU/ALU floor that only matters for tiny tiles.
+
+use super::arch::GpuArch;
+use crate::partition::plan::Strategy;
+
+/// Per-strategy per-tile execution cost on a given architecture.
+#[derive(Clone, Copy, Debug)]
+pub struct TileCost {
+    /// Latency for one full LeanTile iteration, microseconds.
+    pub tile_us: f64,
+    /// Fixed per-segment setup (Q tile load, index math), microseconds.
+    pub segment_setup_us: f64,
+}
+
+/// KV element size in bytes (fp16/bf16 storage, as the paper's FP16→32).
+pub const KV_BYTES: f64 = 2.0;
+
+impl TileCost {
+    /// Cost of a LeanTile of `tile` tokens × `head_dim` for `strategy`.
+    pub fn new(arch: &GpuArch, tile: usize, head_dim: usize, strategy: Strategy) -> Self {
+        // K + V streamed once per iteration.
+        let bytes = 2.0 * tile as f64 * head_dim as f64 * KV_BYTES;
+        let gather = match strategy {
+            Strategy::PagedFixedSplit { .. } => arch.paged_gather_penalty,
+            _ => 1.0,
+        };
+        // slot_bw is GB/s == bytes/ns; convert to us.
+        let mem_us = bytes * gather / (arch.slot_bw_gbs() * 1e3);
+        // Compute floor: 4 * tile * d FLOPs per tile at ~1/slots of peak.
+        let flops = 4.0 * tile as f64 * head_dim as f64;
+        let slot_flops_per_us =
+            arch.peak_tflops * 1e6 / arch.sm_slots() as f64;
+        let mxu_us = flops / slot_flops_per_us;
+        TileCost {
+            tile_us: mem_us.max(mxu_us),
+            segment_setup_us: 0.15,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_tile_cost_order_of_magnitude() {
+        // 256 x 64 fp16 tile = 64 KiB; at ~9.4 GB/s per slot ≈ 7 us.
+        let c = TileCost::new(&GpuArch::a100(), 256, 64, Strategy::StreamK);
+        assert!(c.tile_us > 1.0 && c.tile_us < 30.0, "tile_us = {}", c.tile_us);
+    }
+
+    #[test]
+    fn memory_bound_not_compute_bound() {
+        let arch = GpuArch::a100();
+        let c = TileCost::new(&arch, 256, 64, Strategy::StreamK);
+        let bytes = 2.0 * 256.0 * 64.0 * KV_BYTES;
+        let mem_us = bytes / (arch.slot_bw_gbs() * 1e3);
+        assert!((c.tile_us - mem_us).abs() / mem_us < 1e-9);
+    }
+
+    #[test]
+    fn paged_gather_is_slower() {
+        let arch = GpuArch::a100();
+        let plain = TileCost::new(&arch, 256, 64, Strategy::FixedSplit { splits: 4 });
+        let paged = TileCost::new(
+            &arch,
+            256,
+            64,
+            Strategy::PagedFixedSplit { splits: 4, page: 16 },
+        );
+        assert!(paged.tile_us > plain.tile_us);
+    }
+
+    #[test]
+    fn cost_scales_with_tile_and_dim() {
+        let arch = GpuArch::a100();
+        let small = TileCost::new(&arch, 128, 64, Strategy::StreamK);
+        let big = TileCost::new(&arch, 256, 64, Strategy::StreamK);
+        assert!((big.tile_us / small.tile_us - 2.0).abs() < 0.01);
+        let wide = TileCost::new(&arch, 128, 128, Strategy::StreamK);
+        assert!((wide.tile_us / small.tile_us - 2.0).abs() < 0.01);
+    }
+}

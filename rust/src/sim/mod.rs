@@ -1,0 +1,19 @@
+//! GPU execution-model simulator.
+//!
+//! The paper's claims — occupancy, wave quantization, speedup over
+//! FlashDecoding/FlashInfer, energy — are *scheduling* properties of how
+//! CTAs map onto SMs, not properties of the arithmetic. This module
+//! executes the exact CTA→LeanTile assignments a [`crate::partition::Plan`]
+//! describes on a discrete model of an A100/H100-class device and reports
+//! latency, occupancy and energy. Absolute microseconds are calibrated
+//! (DESIGN.md §Hardware-Adaptation); the *shapes* — who wins, by what
+//! factor, where the crossovers sit — are the reproduction target.
+
+pub mod arch;
+pub mod cost;
+pub mod schedule;
+pub mod timeshare;
+
+pub use arch::GpuArch;
+pub use cost::TileCost;
+pub use schedule::{simulate, simulate_plan, SimResult};

@@ -1,0 +1,388 @@
+//! Discrete CTA-level schedule simulation.
+//!
+//! Executes a [`Plan`] on a [`GpuArch`]: CTAs are list-scheduled onto the
+//! device's co-resident CTA slots in launch order (the hardware's wave
+//! behaviour), each running its LeanTile segments sequentially. Reduction
+//! is modelled per strategy:
+//!
+//! * FlashAttention-2 — none.
+//! * FlashDecoding / FlashInfer — a *second kernel launch* whose CTAs
+//!   (one per output tile with >1 partial) re-scale the partials.
+//! * LeanAttention — in-kernel: the host CTA finishes when its own tiles
+//!   *and* all peer partials are done, then folds them in (Alg 2 L24-39).
+//!
+//! Outputs latency, SM occupancy (busy-slot-time over makespan), wave
+//! count and energy (busy/idle SM power integrated over the makespan).
+
+use super::arch::GpuArch;
+use super::cost::TileCost;
+use crate::partition::plan::{build_plan, DecodeProblem, Plan, Strategy};
+
+/// Simulation outcome for one (problem, strategy, arch) triple.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub strategy: Strategy,
+    pub latency_us: f64,
+    /// Busy-slot time / (compute makespan × slots); 1.0 = every SM busy
+    /// the whole time (the paper's "quantization efficiency").
+    pub occupancy: f64,
+    pub energy_j: f64,
+    pub grid: usize,
+    /// Waves of the attention kernel (ceil(grid / slots) effective).
+    pub waves: f64,
+    /// Time attributable to reduction (incl. FD's second launch).
+    pub reduce_us: f64,
+    pub kernel_launches: usize,
+}
+
+impl SimResult {
+    pub fn name(&self) -> &'static str {
+        self.strategy.name()
+    }
+}
+
+/// Plan + simulate in one step.
+pub fn simulate(problem: &DecodeProblem, strategy: Strategy, arch: &GpuArch) -> SimResult {
+    let slots = effective_slots(strategy, arch);
+    let plan = build_plan(problem, strategy, slots);
+    simulate_plan(&plan, problem, arch)
+}
+
+/// FlashInfer's scheduler can keep fewer CTAs resident (reserved buffer
+/// management); everyone else gets the full device.
+fn effective_slots(strategy: Strategy, arch: &GpuArch) -> usize {
+    match strategy {
+        Strategy::PagedFixedSplit { .. } => {
+            ((arch.sm_slots() as f64 * arch.fi_slot_fraction) as usize).max(1)
+        }
+        _ => arch.sm_slots(),
+    }
+}
+
+/// Greedy list scheduling of `durations` onto `slots` identical slots in
+/// index order. Returns per-CTA finish times and the makespan.
+fn list_schedule(durations: &[f64], slots: usize) -> (Vec<f64>, f64) {
+    assert!(slots > 0);
+    let mut slot_free = vec![0.0f64; slots.min(durations.len()).max(1)];
+    let mut finish = Vec::with_capacity(durations.len());
+    for (i, &d) in durations.iter().enumerate() {
+        // Hardware dispatches to the earliest-free slot; with equal frees,
+        // round-robin. Scan is O(slots) but slots ≤ ~2k.
+        let (si, &free) = slot_free
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(&b.0)))
+            .unwrap();
+        let _ = i;
+        let end = free + d;
+        slot_free[si] = end;
+        finish.push(end);
+    }
+    let makespan = slot_free.iter().cloned().fold(0.0, f64::max);
+    (finish, makespan)
+}
+
+/// Simulate an already-built plan.
+pub fn simulate_plan(plan: &Plan, problem: &DecodeProblem, arch: &GpuArch) -> SimResult {
+    let strategy = plan.strategy;
+    let slots = effective_slots(strategy, arch);
+    let cost = TileCost::new(arch, plan.tile, problem.head_dim, strategy);
+
+    // Per-CTA compute duration: segments run back-to-back; non-host
+    // segments additionally store their partial to global memory.
+    let durations: Vec<f64> = plan
+        .ctas
+        .iter()
+        .map(|cta| {
+            cta.segments
+                .iter()
+                .map(|seg| {
+                    let mut t = cost.segment_setup_us
+                        + seg.tile_count as f64 * cost.tile_us;
+                    if !(seg.is_host && seg.is_finishing) {
+                        t += arch.partial_store_us;
+                    }
+                    t
+                })
+                .sum()
+        })
+        .collect();
+
+    let busy_compute: f64 = durations.iter().sum();
+    let (finish, compute_makespan) = list_schedule(&durations, slots);
+
+    // group -> (host cta, peer ctas)
+    let groups = plan.groups;
+    let mut host_of: Vec<Option<usize>> = vec![None; groups];
+    let mut peers_of: Vec<Vec<usize>> = vec![Vec::new(); groups];
+    for (ci, cta) in plan.ctas.iter().enumerate() {
+        for seg in &cta.segments {
+            if seg.is_host {
+                host_of[seg.group as usize] = Some(ci);
+            } else {
+                peers_of[seg.group as usize].push(ci);
+            }
+        }
+    }
+
+    let mut reduce_us = 0.0f64;
+    let mut busy_reduce = 0.0f64;
+    let mut kernel_launches = 1;
+
+    let latency_compute = match strategy {
+        Strategy::Dense => compute_makespan,
+        Strategy::StreamK => {
+            // In-kernel reduction: host completes when its own compute and
+            // every peer partial are done, plus the fold cost.
+            let mut total = compute_makespan;
+            for g in 0..groups {
+                let Some(h) = host_of[g] else { continue };
+                if peers_of[g].is_empty() {
+                    continue;
+                }
+                let peers_done = peers_of[g]
+                    .iter()
+                    .map(|&p| finish[p])
+                    .fold(0.0f64, f64::max);
+                let fold = peers_of[g].len() as f64 * arch.reduce_per_partial_us;
+                let done = finish[h].max(peers_done) + fold;
+                busy_reduce += fold;
+                if done > total {
+                    reduce_us = reduce_us.max(done - compute_makespan);
+                    total = total.max(done);
+                }
+            }
+            total
+        }
+        Strategy::FixedSplit { .. } | Strategy::PagedFixedSplit { .. } => {
+            // Separate fix-up kernel: one reduce-CTA per group that has
+            // more than one partial.
+            let reduce_durs: Vec<f64> = (0..groups)
+                .filter(|&g| !peers_of[g].is_empty())
+                .map(|g| (peers_of[g].len() + 1) as f64 * arch.reduce_per_partial_us)
+                .collect();
+            if reduce_durs.is_empty() {
+                compute_makespan
+            } else {
+                kernel_launches = 2;
+                busy_reduce = reduce_durs.iter().sum();
+                let (_, reduce_makespan) = list_schedule(&reduce_durs, slots);
+                reduce_us = arch.kernel_launch_us + reduce_makespan;
+                compute_makespan + arch.kernel_launch_us + reduce_makespan
+            }
+        }
+    };
+
+    let latency_us = latency_compute + arch.kernel_launch_us;
+    let busy = busy_compute + busy_reduce;
+    let denom = latency_compute.max(1e-12) * slots as f64;
+    let occupancy = (busy / denom).min(1.0);
+    let waves = plan.grid() as f64 / slots as f64;
+
+    // Energy: SMs are busy for busy/max_ctas SM-time (co-resident CTAs
+    // share an SM), idle otherwise; baseline board power over the run.
+    let t = latency_us;
+    let busy_sm_time = (busy / arch.max_ctas_per_sm as f64)
+        .min(arch.num_sms as f64 * t);
+    let idle_sm_time = arch.num_sms as f64 * t - busy_sm_time;
+    let energy_j = (arch.base_w * t
+        + arch.sm_busy_w * busy_sm_time
+        + arch.sm_idle_w * idle_sm_time)
+        * 1e-6;
+
+    SimResult {
+        strategy,
+        latency_us,
+        occupancy,
+        energy_j,
+        grid: plan.grid(),
+        waves,
+        reduce_us,
+        kernel_launches,
+    }
+}
+
+/// Per-CTA placement detail (for schedule visualisation — Fig 1).
+#[derive(Clone, Debug)]
+pub struct CtaTimeline {
+    pub cta: usize,
+    pub slot: usize,
+    pub start_us: f64,
+    pub finish_us: f64,
+    /// Groups (output tiles) this CTA contributes to.
+    pub groups: Vec<u32>,
+}
+
+/// List-schedule a plan and report each CTA's slot and time window.
+pub fn schedule_detail(plan: &Plan, problem: &DecodeProblem, arch: &GpuArch) -> Vec<CtaTimeline> {
+    let slots = effective_slots(plan.strategy, arch);
+    let cost = TileCost::new(arch, plan.tile, problem.head_dim, plan.strategy);
+    let mut slot_free = vec![0.0f64; slots];
+    let mut out = Vec::with_capacity(plan.grid());
+    for (ci, cta) in plan.ctas.iter().enumerate() {
+        let dur: f64 = cta
+            .segments
+            .iter()
+            .map(|seg| {
+                cost.segment_setup_us
+                    + seg.tile_count as f64 * cost.tile_us
+                    + if seg.is_host && seg.is_finishing {
+                        0.0
+                    } else {
+                        arch.partial_store_us
+                    }
+            })
+            .sum();
+        let (si, &free) = slot_free
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(&b.0)))
+            .unwrap();
+        slot_free[si] = free + dur;
+        out.push(CtaTimeline {
+            cta: ci,
+            slot: si,
+            start_us: free,
+            finish_us: free + dur,
+            groups: cta.segments.iter().map(|s| s.group).collect(),
+        });
+    }
+    out
+}
+
+/// Convenience: simulate all four mechanisms on one problem.
+pub fn simulate_all(problem: &DecodeProblem, arch: &GpuArch) -> Vec<SimResult> {
+    let fd = Strategy::fixed_split_auto(problem, arch.num_sms);
+    let fi_splits = match fd {
+        Strategy::FixedSplit { splits } => splits,
+        _ => 1,
+    };
+    vec![
+        simulate(problem, Strategy::Dense, arch),
+        simulate(problem, fd, arch),
+        simulate(
+            problem,
+            Strategy::PagedFixedSplit { splits: fi_splits, page: 16 },
+            arch,
+        ),
+        simulate(problem, Strategy::StreamK, arch),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a100() -> GpuArch {
+        GpuArch::a100()
+    }
+
+    #[test]
+    fn list_schedule_basic() {
+        let (finish, makespan) = list_schedule(&[3.0, 1.0, 2.0], 2);
+        // slot0: 3.0; slot1: 1.0 then 2.0 -> finish 3.0
+        assert_eq!(finish, vec![3.0, 1.0, 3.0]);
+        assert_eq!(makespan, 3.0);
+    }
+
+    #[test]
+    fn fa2_low_occupancy_in_decode() {
+        // 1 batch x 8 heads on 108 SMs: paper Fig 3 — FA2 nearly idle.
+        let p = DecodeProblem::uniform(1, 8, 65536, 64);
+        let r = simulate(&p, Strategy::Dense, &a100());
+        assert!(r.occupancy < 0.10, "occupancy {}", r.occupancy);
+    }
+
+    #[test]
+    fn lean_near_full_occupancy() {
+        let p = DecodeProblem::uniform(1, 8, 65536, 64);
+        let r = simulate(&p, Strategy::StreamK, &a100());
+        assert!(r.occupancy > 0.90, "occupancy {}", r.occupancy);
+        assert_eq!(r.grid, 216);
+    }
+
+    #[test]
+    fn lean_beats_fd_on_long_context_odd_heads() {
+        // 56 heads, BS 2, 256k ctx (the paper's max-speedup point).
+        let p = DecodeProblem::uniform(2, 56, 262_144, 64);
+        let arch = a100();
+        let fd = simulate(&p, Strategy::fixed_split_auto(&p, arch.num_sms), &arch);
+        let la = simulate(&p, Strategy::StreamK, &arch);
+        let speedup = fd.latency_us / la.latency_us;
+        assert!(speedup > 1.3, "LA/FD speedup {speedup}");
+        assert!(speedup < 3.0, "speedup within sane bounds {speedup}");
+    }
+
+    #[test]
+    fn lean_never_slower_than_fa2_or_fd() {
+        for (b, h, ctx) in [
+            (1usize, 8usize, 1024usize),
+            (4, 32, 65536),
+            (8, 56, 4096),
+            (1, 128, 262_144),
+            (32, 32, 2048),
+        ] {
+            let p = DecodeProblem::uniform(b, h, ctx, 64);
+            let arch = a100();
+            let la = simulate(&p, Strategy::StreamK, &arch);
+            let fa2 = simulate(&p, Strategy::Dense, &arch);
+            let fd =
+                simulate(&p, Strategy::fixed_split_auto(&p, arch.num_sms), &arch);
+            // 5% slack for overhead modelling noise
+            assert!(
+                la.latency_us <= fa2.latency_us * 1.05,
+                "b{b} h{h} ctx{ctx}: LA {} vs FA2 {}",
+                la.latency_us,
+                fa2.latency_us
+            );
+            assert!(
+                la.latency_us <= fd.latency_us * 1.05,
+                "b{b} h{h} ctx{ctx}: LA {} vs FD {}",
+                la.latency_us,
+                fd.latency_us
+            );
+        }
+    }
+
+    #[test]
+    fn fd_two_kernel_launches_when_split() {
+        let p = DecodeProblem::uniform(1, 8, 65536, 64);
+        let arch = a100();
+        let fd = simulate(&p, Strategy::fixed_split_auto(&p, arch.num_sms), &arch);
+        assert_eq!(fd.kernel_launches, 2);
+        let la = simulate(&p, Strategy::StreamK, &arch);
+        assert_eq!(la.kernel_launches, 1);
+    }
+
+    #[test]
+    fn flashinfer_slower_than_fd_at_long_ctx() {
+        let p = DecodeProblem::uniform(4, 32, 262_144, 64);
+        let arch = a100();
+        let results = simulate_all(&p, &arch);
+        let fd = &results[1];
+        let fi = &results[2];
+        assert!(fi.latency_us > fd.latency_us, "FI should trail FD");
+    }
+
+    #[test]
+    fn energy_tracks_idleness() {
+        // Same work, FA2 leaves SMs idle -> more energy than LA (Fig 13).
+        let p = DecodeProblem::uniform(1, 56, 262_144, 64);
+        let arch = a100();
+        let la = simulate(&p, Strategy::StreamK, &arch);
+        let fd = simulate(&p, Strategy::fixed_split_auto(&p, arch.num_sms), &arch);
+        assert!(fd.energy_j > la.energy_j, "FD {} vs LA {}", fd.energy_j, la.energy_j);
+    }
+
+    #[test]
+    fn multi_gpu_zero_idle_for_lean() {
+        // Paper Fig 9: 256 heads x 4 batch on 864 SMs — FD wastes the
+        // 52-SM tail wave, LA does not.
+        let p = DecodeProblem::uniform(4, 256, 262_144, 64);
+        let arch = a100().multi(8);
+        let la = simulate(&p, Strategy::StreamK, &arch);
+        let fd = simulate(&p, Strategy::fixed_split_auto(&p, arch.num_sms), &arch);
+        assert!(la.occupancy > 0.95);
+        assert!(fd.latency_us / la.latency_us > 1.2);
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained substrates the offline environment forced us to
+//! build rather than depend on: a JSON parser ([`json`]), a deterministic
+//! RNG ([`rng`]), a property-testing helper ([`testing`]), descriptive
+//! statistics ([`stats`]) and a wall-clock timer ([`timer`]).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod testing;
+pub mod timer;

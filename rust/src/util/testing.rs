@@ -1,0 +1,84 @@
+//! Miniature property-testing harness (proptest is not in the offline
+//! crate cache). Runs a closure over many seeded random cases and reports
+//! the first failing seed so failures reproduce deterministically:
+//!
+//! ```no_run
+//! use lean_attention::util::testing::prop_check;
+//! prop_check("addition commutes", 256, |rng| {
+//!     let a = rng.next_u64() / 2;
+//!     let b = rng.next_u64() / 2;
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `cases` random trials of `f`; panic with the failing seed + message
+/// on the first failure. Seeds are derived deterministically so a failure
+/// is reproducible by running the same test again.
+pub fn prop_check(
+    name: &str,
+    cases: u64,
+    mut f: impl FnMut(&mut Rng) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "{what}: element {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Relative max-abs error between two slices (0 for identical).
+pub fn max_abs_err(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes_trivial_property() {
+        prop_check("u64 halves sum", 64, |rng| {
+            let a = rng.next_u64() >> 1;
+            let b = rng.next_u64() >> 1;
+            (a + b >= a).then_some(()).ok_or_else(|| "overflow".into())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn prop_check_reports_failures() {
+        prop_check("always fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn allclose_accepts_close() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-6, 1e-6, "x");
+    }
+
+    #[test]
+    #[should_panic(expected = "element 1")]
+    fn allclose_rejects_far() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 3.0], 1e-6, 1e-6, "x");
+    }
+}

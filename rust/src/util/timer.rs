@@ -1,0 +1,65 @@
+//! Wall-clock measurement helpers shared by the bench harness and the
+//! engine's metrics.
+
+use std::time::Instant;
+
+/// Time one invocation of `f` in microseconds.
+pub fn time_us<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64() * 1e6)
+}
+
+/// Run `f` repeatedly for at least `min_iters` iterations and
+/// `min_duration_s` seconds (whichever is later), returning per-iteration
+/// microsecond samples. A cheap stand-in for criterion (not in the offline
+/// crate cache).
+pub fn sample_us(
+    min_iters: usize,
+    min_duration_s: f64,
+    mut f: impl FnMut(),
+) -> Vec<f64> {
+    // Warmup: a few runs to populate caches/JIT-ish effects.
+    for _ in 0..3.min(min_iters) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(min_iters);
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed().as_secs_f64() < min_duration_s
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        if samples.len() > 1_000_000 {
+            break; // hard cap for pathologically fast bodies
+        }
+    }
+    samples
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_us_returns_value_and_positive_time() {
+        let (v, us) = time_us(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499500);
+        assert!(us >= 0.0);
+    }
+
+    #[test]
+    fn sample_us_collects_at_least_min_iters() {
+        let s = sample_us(10, 0.0, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(s.len() >= 10);
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+}

@@ -1,0 +1,169 @@
+//! Property tests for the paper's central theorem (§IV-A): softmax
+//! re-scaling is an associative reduction with identity, so *any* split of
+//! the context into unequal blocks, reduced in *any* association order,
+//! yields exact attention.
+
+use lean_attention::attention::{
+    attention_host, partial_attention_host, Partials, RowStats,
+};
+use lean_attention::util::rng::Rng;
+use lean_attention::util::testing::{max_abs_err, prop_check};
+
+/// Split [0, n) at `cuts` and compute per-slice partials.
+fn split_partials(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    g: usize,
+    n: usize,
+    d: usize,
+    lens: &[u32],
+    cuts: &[usize],
+) -> Vec<Partials> {
+    let mut bounds = vec![0usize];
+    bounds.extend(cuts.iter().copied().filter(|&c| c > 0 && c < n));
+    bounds.push(n);
+    bounds.sort_unstable();
+    bounds.dedup();
+    bounds
+        .windows(2)
+        .map(|w| {
+            let (lo, hi) = (w[0], w[1]);
+            let mut ks = Vec::with_capacity(g * (hi - lo) * d);
+            let mut vs = Vec::with_capacity(g * (hi - lo) * d);
+            for gi in 0..g {
+                ks.extend_from_slice(&k[gi * n * d + lo * d..gi * n * d + hi * d]);
+                vs.extend_from_slice(&v[gi * n * d + lo * d..gi * n * d + hi * d]);
+            }
+            partial_attention_host(q, &ks, &vs, g, hi - lo, d, lens, lo)
+        })
+        .collect()
+}
+
+fn reduce_in_order(parts: &[Partials], order: &[usize], g: usize, d: usize) -> Vec<f32> {
+    let mut acc = Partials::identity(g, d);
+    for &i in order {
+        acc.reduce_from(&parts[i]);
+    }
+    acc.finalize()
+}
+
+#[test]
+fn arbitrary_splits_and_orders_equal_direct_attention() {
+    prop_check("associativity end-to-end", 120, |rng| {
+        let g = rng.urange(1, 5);
+        let n = rng.urange(8, 200);
+        let d = *rng.choose(&[4usize, 16, 64]);
+        let q = rng.normal_vec(g * d);
+        let k = rng.normal_vec(g * n * d);
+        let v = rng.normal_vec(g * n * d);
+        let lens: Vec<u32> = (0..g).map(|_| rng.range(1, n as u64 + 1) as u32).collect();
+        let want = attention_host(&q, &k, &v, g, n, d, &lens);
+
+        let ncuts = rng.urange(0, 6);
+        let cuts: Vec<usize> = (0..ncuts).map(|_| rng.urange(1, n)).collect();
+        let parts = split_partials(&q, &k, &v, g, n, d, &lens, &cuts);
+
+        // random permutation of the reduce order
+        let mut order: Vec<usize> = (0..parts.len()).collect();
+        for i in (1..order.len()).rev() {
+            let j = rng.urange(0, i + 1);
+            order.swap(i, j);
+        }
+        let got = reduce_in_order(&parts, &order, g, d);
+        let err = max_abs_err(&got, &want);
+        if err > 5e-4 {
+            return Err(format!("err {err} with {} cuts", cuts.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tree_vs_linear_reduction_agree() {
+    prop_check("tree == linear", 60, |rng| {
+        let (g, n, d) = (2usize, 96usize, 8usize);
+        let q = rng.normal_vec(g * d);
+        let k = rng.normal_vec(g * n * d);
+        let v = rng.normal_vec(g * n * d);
+        let lens = vec![n as u32; g];
+        let cuts = vec![16, 32, 48, 64, 80];
+        let parts = split_partials(&q, &k, &v, g, n, d, &lens, &cuts);
+
+        // linear
+        let linear = reduce_in_order(&parts, &(0..parts.len()).collect::<Vec<_>>(), g, d);
+        // pairwise tree
+        let mut level: Vec<Partials> = parts;
+        while level.len() > 1 {
+            let mut next = Vec::new();
+            for pair in level.chunks(2) {
+                if pair.len() == 2 {
+                    let mut a = pair[0].clone();
+                    a.reduce_from(&pair[1]);
+                    next.push(a);
+                } else {
+                    next.push(pair[0].clone());
+                }
+            }
+            level = next;
+        }
+        let tree = level.remove(0).finalize();
+        let err = max_abs_err(&linear, &tree);
+        if err > 1e-5 {
+            return Err(format!("tree vs linear err {err}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn identity_element_absorbs_anywhere() {
+    prop_check("identity anywhere", 60, |rng| {
+        let (g, d) = (3usize, 8usize);
+        let n = 64usize;
+        let q = rng.normal_vec(g * d);
+        let k = rng.normal_vec(g * n * d);
+        let v = rng.normal_vec(g * n * d);
+        let lens = vec![n as u32; g];
+        let parts = split_partials(&q, &k, &v, g, n, d, &lens, &[20, 40]);
+        let want = reduce_in_order(&parts, &[0, 1, 2], g, d);
+
+        // interleave identities at random positions
+        let mut acc = Partials::identity(g, d);
+        for i in 0..parts.len() {
+            if rng.chance(0.5) {
+                acc.reduce_from(&Partials::identity(g, d));
+            }
+            acc.reduce_from(&parts[i]);
+        }
+        acc.reduce_from(&Partials::identity(g, d));
+        let got = acc.finalize();
+        let err = max_abs_err(&got, &want);
+        if err > 1e-6 {
+            return Err(format!("identity err {err}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn numerical_stability_under_extreme_stats() {
+    // Reduction must stay finite when partial maxima differ by hundreds
+    // (long-context regime where naive exp would overflow).
+    let mut rng = Rng::new(99);
+    let d = 8;
+    let mut acc = Partials::identity(1, d);
+    for m in [-300.0f32, 250.0, -50.0, 249.0, 0.0] {
+        let p = Partials {
+            g: 1,
+            d,
+            o: rng.normal_vec(d),
+            stats: vec![RowStats { m, l: 1.0 }],
+        };
+        acc.reduce_from(&p);
+        assert!(acc.o.iter().all(|x| x.is_finite()), "m={m}");
+        assert!(acc.stats[0].l.is_finite());
+    }
+    let out = acc.finalize();
+    assert!(out.iter().all(|x| x.is_finite()));
+}

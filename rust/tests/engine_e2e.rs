@@ -1,0 +1,211 @@
+//! End-to-end engine integration: continuous batching over the PJRT
+//! artifacts, paged cache, sampling, router. Self-skips without artifacts.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use lean_attention::coordinator::request::FinishReason;
+use lean_attention::coordinator::{Engine, EngineConfig, Router};
+use lean_attention::runtime::{Manifest, Runtime};
+use lean_attention::util::rng::Rng;
+
+fn setup() -> Option<(Rc<Runtime>, Manifest)> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some((
+        Rc::new(Runtime::cpu().expect("pjrt")),
+        Manifest::load(dir).expect("manifest"),
+    ))
+}
+
+fn engine(rt: &Rc<Runtime>, m: &Manifest) -> Engine {
+    Engine::new(rt, m, EngineConfig::default()).expect("engine")
+}
+
+fn random_prompt(rng: &mut Rng, vocab: usize, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.range(0, vocab as u64) as i32).collect()
+}
+
+#[test]
+fn single_request_completes() {
+    let Some((rt, m)) = setup() else { return };
+    let mut e = engine(&rt, &m);
+    let mut rng = Rng::new(1);
+    let vocab = 512;
+    let id = e.submit(random_prompt(&mut rng, vocab, 10), 8).unwrap();
+    let fin = e.run_until_idle().expect("run");
+    assert_eq!(fin.len(), 1);
+    assert_eq!(fin[0].id, id);
+    assert_eq!(fin[0].output.len(), 8);
+    assert_eq!(fin[0].reason, FinishReason::Length);
+    assert!(fin[0].output.iter().all(|&t| t >= 0 && (t as usize) < vocab));
+    assert!(e.metrics.decode_steps >= 7);
+}
+
+#[test]
+fn generation_is_deterministic() {
+    let Some((rt, m)) = setup() else { return };
+    let prompt: Vec<i32> = vec![5, 17, 333, 7, 42];
+    let gen = |rt: &Rc<Runtime>, m: &Manifest| {
+        let mut e = engine(rt, m);
+        e.submit(prompt.clone(), 12).unwrap();
+        e.run_until_idle().unwrap().remove(0).output
+    };
+    assert_eq!(gen(&rt, &m), gen(&rt, &m));
+}
+
+#[test]
+fn continuous_batching_many_requests() {
+    // More requests than slots: the batcher must cycle them all through.
+    let Some((rt, m)) = setup() else { return };
+    let mut e = engine(&rt, &m);
+    let slots = e.batch_size();
+    let mut rng = Rng::new(3);
+    let n_req = slots * 3 + 1;
+    let mut ids = Vec::new();
+    for _ in 0..n_req {
+        let len = rng.urange(1, e.prefill_bucket() + 1);
+        let max_new = rng.urange(1, 6);
+        ids.push(e.submit(random_prompt(&mut rng, 512, len), max_new).unwrap());
+    }
+    let fin = e.run_until_idle().expect("run");
+    assert_eq!(fin.len(), n_req);
+    let mut got: Vec<_> = fin.iter().map(|f| f.id).collect();
+    got.sort();
+    assert_eq!(got, ids);
+    assert!(e.metrics.prefill_calls >= 3, "multiple admission waves");
+    // all pages returned
+    assert_eq!(e.active(), 0);
+}
+
+#[test]
+fn varied_prompt_lengths_ragged_batch() {
+    let Some((rt, m)) = setup() else { return };
+    let mut e = engine(&rt, &m);
+    let mut rng = Rng::new(4);
+    let p = e.prefill_bucket();
+    for len in [1usize, p / 3, p] {
+        e.submit(random_prompt(&mut rng, 512, len.max(1)), 4).unwrap();
+    }
+    let fin = e.run_until_idle().expect("run");
+    assert_eq!(fin.len(), 3);
+    for f in &fin {
+        assert_eq!(f.output.len(), 4);
+    }
+    // ragged projection was recorded
+    assert!(!e.metrics.projected_lean_us.is_empty());
+    assert!(e.metrics.projected_speedup().unwrap() >= 0.9);
+}
+
+#[test]
+fn context_full_terminates_gracefully() {
+    let Some((rt, m)) = setup() else { return };
+    let mut e = engine(&rt, &m);
+    let ctx = e.ctx_bucket();
+    let p = e.prefill_bucket();
+    // Ask for more tokens than the context can hold.
+    e.submit(vec![1; p], ctx).unwrap();
+    let fin = e.run_until_idle().expect("run");
+    assert_eq!(fin.len(), 1);
+    assert_eq!(fin[0].reason, FinishReason::ContextFull);
+    assert!(fin[0].output.len() < ctx);
+}
+
+#[test]
+fn prompt_validation() {
+    let Some((rt, m)) = setup() else { return };
+    let mut e = engine(&rt, &m);
+    assert!(e.submit(vec![], 4).is_err());
+    assert!(e.submit(vec![0; e.prefill_bucket() + 1], 4).is_err());
+    assert!(e.submit(vec![-1], 4).is_err());
+    assert!(e.submit(vec![1_000_000], 4).is_err());
+}
+
+#[test]
+fn router_least_loaded_across_replicas() {
+    let Some((rt, m)) = setup() else { return };
+    let e1 = engine(&rt, &m);
+    let e2 = engine(&rt, &m);
+    let mut router = Router::new(vec![e1, e2]);
+    let mut rng = Rng::new(5);
+    let mut ids = Vec::new();
+    for _ in 0..6 {
+        ids.push(router.submit(random_prompt(&mut rng, 512, 8), 3).unwrap());
+    }
+    // both replicas should have received work
+    assert!(router.engines().iter().all(|e| !e.is_idle()));
+    let fin = router.run_until_idle().expect("run");
+    assert_eq!(fin.len(), 6);
+    let mut got: Vec<_> = fin.iter().map(|f| f.id).collect();
+    got.sort();
+    assert_eq!(got, ids);
+}
+
+#[test]
+fn cache_pressure_queues_and_recovers() {
+    // A cache too small for two concurrent sequences must serialize them
+    // via admission control, not fail.
+    let Some((rt, m)) = setup() else { return };
+    let mut e = Engine::new(
+        &rt,
+        &m,
+        EngineConfig {
+            model: "tiny".into(),
+            cache_pages: 4, // 4 pages x 16 tokens = 64 tokens of KV budget
+            page_tokens: 16,
+            project_hardware: false,
+        },
+    )
+    .expect("engine");
+    let mut rng = Rng::new(7);
+    // each request needs ceil((prompt 30 + 16 new)/16) = 3 pages
+    let ids: Vec<_> = (0..3)
+        .map(|_| e.submit(random_prompt(&mut rng, 512, 30), 16).unwrap())
+        .collect();
+    let fin = e.run_until_idle().expect("run");
+    assert_eq!(fin.len(), 3);
+    let mut got: Vec<_> = fin.iter().map(|f| f.id).collect();
+    got.sort();
+    assert_eq!(got, ids);
+    // admission happened in separate waves (at most one resident at a time)
+    assert!(e.metrics.prefill_calls >= 3, "serialized admissions");
+}
+
+#[test]
+fn oversubscribed_generation_budget_respects_cache() {
+    // Generation budget larger than remaining cache must finish with
+    // ContextFull rather than corrupt state; pages are all returned.
+    let Some((rt, m)) = setup() else { return };
+    let mut e = Engine::new(
+        &rt,
+        &m,
+        EngineConfig {
+            model: "tiny".into(),
+            cache_pages: 64,
+            page_tokens: 16,
+            project_hardware: false,
+        },
+    )
+    .expect("engine");
+    let p = e.prefill_bucket();
+    e.submit(vec![3; p], e.ctx_bucket() * 2).unwrap();
+    let fin = e.run_until_idle().expect("run");
+    assert_eq!(fin.len(), 1);
+    assert_eq!(fin[0].reason, FinishReason::ContextFull);
+    assert_eq!(e.active(), 0);
+}
+
+#[test]
+fn metrics_populated() {
+    let Some((rt, m)) = setup() else { return };
+    let mut e = engine(&rt, &m);
+    e.submit(vec![1, 2, 3], 5).unwrap();
+    e.run_until_idle().unwrap();
+    let rep = e.metrics.report();
+    assert!(rep.contains("finished=1"), "{rep}");
+    assert!(e.metrics.decode_tps() > 0.0);
+    assert!(e.metrics.step_summary().is_some());
+}

@@ -1,0 +1,178 @@
+//! Integration: PJRT attention artifacts vs the Rust host oracle, and the
+//! LeanAttention partial path vs the fused kernel. Requires
+//! `make artifacts`; tests self-skip when artifacts are absent.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use lean_attention::attention::attention_host;
+use lean_attention::partition::plan::{build_plan, DecodeProblem, Strategy};
+use lean_attention::runtime::attention_exec::AttentionProblem;
+use lean_attention::runtime::{AttentionExecutor, Manifest, Runtime};
+use lean_attention::util::rng::Rng;
+use lean_attention::util::testing::assert_allclose;
+
+fn setup() -> Option<AttentionExecutor> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let runtime = Rc::new(Runtime::cpu().expect("pjrt cpu client"));
+    let manifest = Rc::new(Manifest::load(dir).expect("manifest"));
+    Some(AttentionExecutor::new(runtime, manifest))
+}
+
+struct Case {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    lens: Vec<u32>,
+    g: usize,
+    n: usize,
+    d: usize,
+}
+
+fn random_case(seed: u64, g: usize, n: usize, d: usize, ragged: bool) -> Case {
+    let mut rng = Rng::new(seed);
+    let lens = (0..g)
+        .map(|_| {
+            if ragged {
+                rng.range(1, n as u64 + 1) as u32
+            } else {
+                n as u32
+            }
+        })
+        .collect();
+    Case {
+        q: rng.normal_vec(g * d),
+        k: rng.normal_vec(g * n * d),
+        v: rng.normal_vec(g * n * d),
+        lens,
+        g,
+        n,
+        d,
+    }
+}
+
+impl Case {
+    fn problem(&self) -> AttentionProblem<'_> {
+        AttentionProblem {
+            q: &self.q,
+            k: &self.k,
+            v: &self.v,
+            lens: &self.lens,
+            g: self.g,
+            n: self.n,
+            d: self.d,
+        }
+    }
+
+    fn oracle(&self) -> Vec<f32> {
+        attention_host(&self.q, &self.k, &self.v, self.g, self.n, self.d, &self.lens)
+    }
+}
+
+#[test]
+fn full_artifact_matches_oracle() {
+    let Some(exec) = setup() else { return };
+    for (seed, g, n) in [(1u64, 4usize, 256usize), (2, 8, 1024), (3, 6, 700)] {
+        let case = random_case(seed, g, n, 64, true);
+        let (o, _lse) = exec.full(&case.problem()).expect("full attention");
+        assert_allclose(&o, &case.oracle(), 2e-4, 2e-4, "full vs oracle");
+    }
+}
+
+#[test]
+fn full_artifact_head_dim_128() {
+    let Some(exec) = setup() else { return };
+    let case = random_case(9, 4, 256, 128, true);
+    let (o, _) = exec.full(&case.problem()).expect("d=128 attention");
+    assert_allclose(&o, &case.oracle(), 2e-4, 2e-4, "d128 vs oracle");
+}
+
+#[test]
+fn lean_partial_path_matches_fused_kernel() {
+    let Some(exec) = setup() else { return };
+    let case = random_case(4, 6, 1024, 64, true);
+    let (o_full, lse_full) = exec.full(&case.problem()).expect("full");
+
+    // One head per batch element makes group i's context exactly lens[i],
+    // matching the ragged per-group lengths of the raw tensors.
+    let problem = DecodeProblem {
+        heads: 1,
+        head_dim: 64,
+        ctx_lens: case.lens.clone(),
+        tile: 256,
+    };
+    let plan = build_plan(&problem, Strategy::StreamK, 13);
+    plan.validate(&problem).expect("plan valid");
+    let (o_lean, lse_lean) = exec.lean(&case.problem(), &plan).expect("lean");
+    assert_allclose(&o_lean, &o_full, 3e-4, 3e-4, "lean vs fused");
+    assert_allclose(&lse_lean, &lse_full, 1e-3, 1e-3, "lse lean vs fused");
+}
+
+#[test]
+fn lean_path_all_strategies_match_oracle() {
+    let Some(exec) = setup() else { return };
+    let case = random_case(5, 8, 1024, 64, true);
+    let want = case.oracle();
+    let problem = DecodeProblem {
+        heads: 1,
+        head_dim: 64,
+        ctx_lens: case.lens.clone(),
+        tile: 256,
+    };
+    for strategy in [
+        Strategy::Dense,
+        Strategy::FixedSplit { splits: 3 },
+        Strategy::StreamK,
+    ] {
+        let plan = build_plan(&problem, strategy, 7);
+        plan.validate(&problem).expect("plan valid");
+        let (o, _) = exec.lean(&case.problem(), &plan).expect("lean exec");
+        assert_allclose(&o, &want, 3e-4, 3e-4, strategy.name());
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(exec) = setup() else { return };
+    let case = random_case(6, 4, 256, 64, false);
+    exec.full(&case.problem()).unwrap();
+    let after_first = exec.compiled_count();
+    exec.full(&case.problem()).unwrap();
+    assert_eq!(exec.compiled_count(), after_first, "no recompilation");
+}
+
+#[test]
+fn padding_does_not_leak() {
+    // Same logical problem executed at two bucket sizes must agree: run a
+    // g=4/n=256 case (fits g8/c256) and again forced through g8/c1024 by
+    // growing n with garbage rows beyond lens.
+    let Some(exec) = setup() else { return };
+    let small = random_case(7, 4, 256, 64, true);
+    let (o_small, _) = exec.full(&small.problem()).unwrap();
+
+    // embed into n=1024 with poison in the padding region
+    let n2 = 1024;
+    let mut k2 = vec![7.7f32; small.g * n2 * 64];
+    let mut v2 = vec![-9.9f32; small.g * n2 * 64];
+    for gi in 0..small.g {
+        k2[gi * n2 * 64..gi * n2 * 64 + 256 * 64]
+            .copy_from_slice(&small.k[gi * 256 * 64..(gi + 1) * 256 * 64]);
+        v2[gi * n2 * 64..gi * n2 * 64 + 256 * 64]
+            .copy_from_slice(&small.v[gi * 256 * 64..(gi + 1) * 256 * 64]);
+    }
+    let big = AttentionProblem {
+        q: &small.q,
+        k: &k2,
+        v: &v2,
+        lens: &small.lens,
+        g: small.g,
+        n: n2,
+        d: 64,
+    };
+    let (o_big, _) = exec.full(&big).unwrap();
+    assert_allclose(&o_big, &o_small, 1e-5, 1e-5, "bucket invariance");
+}

@@ -1,0 +1,117 @@
+//! Integration: transformer model artifacts (prefill + decode) through
+//! PJRT — determinism, shape contracts, prefill/decode consistency.
+//! Self-skips when artifacts are absent.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use lean_attention::runtime::{Manifest, ModelRuntime, Runtime};
+use lean_attention::util::rng::Rng;
+use lean_attention::util::testing::assert_allclose;
+
+fn setup() -> Option<(Rc<Runtime>, Manifest)> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some((
+        Rc::new(Runtime::cpu().expect("pjrt")),
+        Manifest::load(dir).expect("manifest"),
+    ))
+}
+
+fn random_prompt(rng: &mut Rng, vocab: usize, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.range(0, vocab as u64) as i32).collect()
+}
+
+#[test]
+fn prefill_shapes_and_determinism() {
+    let Some((rt, m)) = setup() else { return };
+    let model = ModelRuntime::load(&rt, &m, "tiny").expect("load tiny");
+    let a = &model.art;
+    let mut rng = Rng::new(1);
+    let tokens = random_prompt(&mut rng, a.vocab, a.batch * a.prefill_bucket);
+    let lengths: Vec<i32> = (0..a.batch)
+        .map(|i| ((i + 1) * a.prefill_bucket / a.batch).max(1) as i32)
+        .collect();
+
+    let o1 = model.prefill(&tokens, &lengths).expect("prefill");
+    assert_eq!(o1.logits.len(), a.batch * a.vocab);
+    assert_eq!(
+        o1.k.len(),
+        a.n_layers * a.batch * a.n_heads * a.prefill_bucket * a.head_dim
+    );
+    assert!(o1.logits.iter().all(|x| x.is_finite()));
+
+    let o2 = model.prefill(&tokens, &lengths).expect("prefill again");
+    assert_eq!(o1.logits, o2.logits, "deterministic");
+}
+
+#[test]
+fn decode_consistent_with_prefill() {
+    // Prefill p-1 tokens then decode token p-1: last-token logits must
+    // match prefilling all p tokens directly (same check as the python
+    // test, but through the compiled artifacts and the Rust cache path).
+    let Some((rt, m)) = setup() else { return };
+    let model = ModelRuntime::load(&rt, &m, "tiny").expect("load tiny");
+    let a = model.art.clone();
+    let mut rng = Rng::new(2);
+    let p = a.prefill_bucket;
+    let prompt: Vec<i32> = random_prompt(&mut rng, a.vocab, a.batch * p);
+
+    // Path A: full prefill.
+    let full_lens = vec![p as i32; a.batch];
+    let full = model.prefill(&prompt, &full_lens).expect("full prefill");
+
+    // Path B: prefill p-1, then one decode step.
+    let part_lens = vec![(p - 1) as i32; a.batch];
+    let part = model.prefill(&prompt, &part_lens).expect("part prefill");
+    let c = a.ctx_bucket;
+    let (l, b, h, dh) = (a.n_layers, a.batch, a.n_heads, a.head_dim);
+    let mut kc = vec![0.0f32; l * b * h * c * dh];
+    let mut vc = vec![0.0f32; l * b * h * c * dh];
+    // copy [l,b,h,p,dh] -> [l,b,h,c,dh] (only first p-1 rows are real)
+    for li in 0..l {
+        for bi in 0..b {
+            for hi in 0..h {
+                let src = (((li * b) + bi) * h + hi) * p * dh;
+                let dst = (((li * b) + bi) * h + hi) * c * dh;
+                kc[dst..dst + (p - 1) * dh]
+                    .copy_from_slice(&part.k[src..src + (p - 1) * dh]);
+                vc[dst..dst + (p - 1) * dh]
+                    .copy_from_slice(&part.v[src..src + (p - 1) * dh]);
+            }
+        }
+    }
+    let tokens: Vec<i32> = (0..b).map(|bi| prompt[bi * p + p - 1]).collect();
+    let positions = vec![(p - 1) as i32; b];
+    let dec = model.decode(&tokens, &kc, &vc, &positions).expect("decode");
+
+    assert_allclose(&dec.logits, &full.logits, 5e-3, 5e-3, "decode vs prefill");
+}
+
+#[test]
+fn decode_rejects_bad_shapes() {
+    let Some((rt, m)) = setup() else { return };
+    let model = ModelRuntime::load(&rt, &m, "tiny").expect("load tiny");
+    let a = model.art.clone();
+    let n = model.cache_elems();
+    // wrong cache size
+    assert!(model
+        .decode(&vec![0; a.batch], &vec![0.0; n - 1], &vec![0.0; n], &vec![0; a.batch])
+        .is_err());
+    // position out of bucket
+    assert!(model
+        .decode(
+            &vec![0; a.batch],
+            &vec![0.0; n],
+            &vec![0.0; n],
+            &vec![a.ctx_bucket as i32; a.batch],
+        )
+        .is_err());
+    // prompt length 0
+    assert!(model
+        .prefill(&vec![0; a.batch * a.prefill_bucket], &vec![0; a.batch])
+        .is_err());
+}

@@ -1,0 +1,160 @@
+//! Property tests over the partition planners: structural invariants
+//! (exact coverage, host/finishing uniqueness), stream-K balance, the
+//! paper's special-case generalizations, and numerical equivalence of
+//! every plan under host execution — sequential and parallel.
+
+use lean_attention::attention::attention_host;
+use lean_attention::coordinator::pool::execute_plan_host_parallel;
+use lean_attention::partition::host_exec::{execute_plan_host, HostTensors};
+use lean_attention::partition::plan::{
+    build_plan, fd_heuristic_splits, DecodeProblem, Strategy,
+};
+use lean_attention::util::testing::{max_abs_err, prop_check};
+
+fn random_problem(rng: &mut lean_attention::util::rng::Rng) -> DecodeProblem {
+    let batch = rng.urange(1, 6);
+    let heads = *rng.choose(&[1usize, 2, 4, 8, 32, 56]);
+    let head_dim = *rng.choose(&[32usize, 64, 128]);
+    let ctx_lens: Vec<u32> = (0..batch)
+        .map(|_| rng.range(1, 100_000) as u32)
+        .collect();
+    DecodeProblem::ragged(heads, ctx_lens, head_dim)
+}
+
+#[test]
+fn every_strategy_produces_valid_plans() {
+    prop_check("plan validity", 200, |rng| {
+        let p = random_problem(rng);
+        let slots = rng.urange(1, 512);
+        let strategies = [
+            Strategy::Dense,
+            Strategy::FixedSplit { splits: rng.urange(1, 20) },
+            Strategy::PagedFixedSplit { splits: rng.urange(1, 20), page: 16 },
+            Strategy::StreamK,
+            Strategy::fixed_split_auto(&p, 108),
+        ];
+        for s in strategies {
+            let plan = build_plan(&p, s, slots);
+            plan.validate(&p)
+                .map_err(|e| format!("{}: {e}", s.name()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn stream_k_load_balance_is_optimal() {
+    prop_check("stream-K balance", 200, |rng| {
+        let p = random_problem(rng);
+        let slots = rng.urange(1, 1000);
+        let plan = build_plan(&p, Strategy::StreamK, slots);
+        let tiles = plan.tiles_per_cta();
+        let max = *tiles.iter().max().unwrap_or(&0);
+        let min = *tiles.iter().min().unwrap_or(&0);
+        if max.saturating_sub(min) > 1 {
+            return Err(format!("load range {min}..{max}"));
+        }
+        // total preserved
+        let total: u64 = tiles.iter().sum();
+        if total != p.total_tiles() {
+            return Err("tile count mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn stream_k_generalizes_to_fa2_when_tiles_equal_grid() {
+    // Paper §IV-C: when output tiles == grid size, LA == FA2 (one CTA per
+    // tile, all host+finishing).
+    let p = DecodeProblem::uniform(2, 8, 256, 64); // 16 groups x 1 tile
+    let lean = build_plan(&p, Strategy::StreamK, 16);
+    let dense = build_plan(&p, Strategy::Dense, 16);
+    assert_eq!(lean.grid(), dense.grid());
+    for (a, b) in lean.ctas.iter().zip(&dense.ctas) {
+        assert_eq!(a.segments, b.segments);
+    }
+}
+
+#[test]
+fn stream_k_generalizes_to_fixed_split_on_even_multiple() {
+    // Grid an even multiple of output tiles -> same chunk sizes as FD.
+    let p = DecodeProblem::uniform(1, 4, 8 * 256, 64); // 4 groups x 8 tiles
+    let lean = build_plan(&p, Strategy::StreamK, 8); // 2 CTAs per group
+    let fd = build_plan(&p, Strategy::FixedSplit { splits: 2 }, 8);
+    let mut lean_tiles = lean.tiles_per_cta();
+    let mut fd_tiles = fd.tiles_per_cta();
+    lean_tiles.sort_unstable();
+    fd_tiles.sort_unstable();
+    assert_eq!(lean_tiles, fd_tiles);
+    assert!(lean.ctas.iter().all(|c| c.segments.len() == 1));
+}
+
+#[test]
+fn fd_heuristic_matches_paper_behaviour() {
+    // No split once groups ~fill the device (Fig 7c: FD stops splitting
+    // at batch >= 4 with 32 heads on 108 SMs).
+    for batch in [4usize, 8, 16, 32] {
+        let p = DecodeProblem::uniform(batch, 32, 65536, 64);
+        assert_eq!(fd_heuristic_splits(&p, 108, 128), 1, "batch {batch}");
+    }
+    // Splits appear for small grids.
+    let p = DecodeProblem::uniform(1, 32, 65536, 64);
+    assert!(fd_heuristic_splits(&p, 108, 128) > 1);
+    // Never exceeds tiles available.
+    let p = DecodeProblem::uniform(1, 2, 512, 64); // 2 tiles per group
+    assert!(fd_heuristic_splits(&p, 108, 128) <= 2);
+}
+
+#[test]
+fn all_plans_numerically_exact_sequential_and_parallel() {
+    prop_check("plan numerics", 25, |rng| {
+        let batch = rng.urange(1, 3);
+        let heads = rng.urange(1, 4);
+        let ctx_lens: Vec<u32> = (0..batch).map(|_| rng.range(1, 500) as u32).collect();
+        let p = DecodeProblem::ragged(heads, ctx_lens, 32).with_tile(32);
+        let t = HostTensors::random(&p, rng.next_u64());
+        let want = attention_host(
+            &t.q,
+            &t.k,
+            &t.v,
+            p.groups(),
+            t.n_max,
+            p.head_dim,
+            &t.group_lens(&p),
+        );
+        for s in [
+            Strategy::Dense,
+            Strategy::FixedSplit { splits: 4 },
+            Strategy::StreamK,
+        ] {
+            let plan = build_plan(&p, s, rng.urange(1, 32));
+            let seq = execute_plan_host(&plan, &p, &t, Some(rng.next_u64()));
+            let par = execute_plan_host_parallel(&plan, &p, &t, 3);
+            let e1 = max_abs_err(&seq, &want);
+            let e2 = max_abs_err(&par, &want);
+            if e1 > 5e-4 || e2 > 5e-4 {
+                return Err(format!("{}: seq {e1} par {e2}", s.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lean_tile_counts_scale_with_problem() {
+    // Eq. 2 sanity: TilesPerCTA tracks problem size over fixed grid.
+    let arch_slots = 216;
+    let small = DecodeProblem::uniform(1, 8, 16_384, 64);
+    let large = DecodeProblem::uniform(1, 8, 262_144, 64);
+    let ps = build_plan(&small, Strategy::StreamK, arch_slots);
+    let pl = build_plan(&large, Strategy::StreamK, arch_slots);
+    let t_small = *ps.tiles_per_cta().iter().max().unwrap();
+    let t_large = *pl.tiles_per_cta().iter().max().unwrap();
+    // Eq. 2: TilesPerCTA = ceil(total / grid)
+    assert_eq!(t_small, small.total_tiles().div_ceil(ps.grid() as u64));
+    assert_eq!(t_large, large.total_tiles().div_ceil(pl.grid() as u64));
+    // and 16x the context is ~16x the per-CTA work (within quantization)
+    let ratio = t_large as f64 / t_small as f64;
+    assert!((10.0..=16.5).contains(&ratio), "ratio {ratio}");
+}

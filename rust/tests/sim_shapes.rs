@@ -1,0 +1,150 @@
+//! Simulator shape tests: the qualitative claims of the paper's
+//! evaluation, asserted across broad parameter ranges (the "who wins,
+//! roughly by how much, where are the crossovers" contract of DESIGN.md).
+
+use lean_attention::partition::plan::{DecodeProblem, Strategy};
+use lean_attention::sim::schedule::{simulate, simulate_all};
+use lean_attention::sim::GpuArch;
+use lean_attention::util::testing::prop_check;
+
+#[test]
+fn lean_dominates_everywhere() {
+    // §IV-C: "LeanAttention will either always perform better or the same
+    // as FlashAttention-2 and FlashDecoding."
+    prop_check("LA never loses", 150, |rng| {
+        let batch = rng.urange(1, 33);
+        let heads = *rng.choose(&[8usize, 16, 32, 56, 64, 128]);
+        let ctx = 1usize << rng.urange(10, 19);
+        let p = DecodeProblem::uniform(batch, heads, ctx, 64);
+        let arch = if rng.chance(0.5) { GpuArch::a100() } else { GpuArch::h100() };
+        let rs = simulate_all(&p, &arch);
+        let (fa2, fd, la) = (&rs[0], &rs[1], &rs[3]);
+        if la.latency_us > fa2.latency_us * 1.05 {
+            return Err(format!(
+                "LA {:.1} > FA2 {:.1} at b{batch} h{heads} c{ctx}",
+                la.latency_us, fa2.latency_us
+            ));
+        }
+        if la.latency_us > fd.latency_us * 1.05 {
+            return Err(format!(
+                "LA {:.1} > FD {:.1} at b{batch} h{heads} c{ctx}",
+                la.latency_us, fd.latency_us
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn speedup_band_matches_paper_at_headline_points() {
+    let arch = GpuArch::a100();
+    // 256k ctx, 56 heads, BS 2 — paper's 2.18x point. Accept 1.5-3x.
+    let p = DecodeProblem::uniform(2, 56, 262_144, 64);
+    let fd = simulate(&p, Strategy::fixed_split_auto(&p, arch.num_sms), &arch);
+    let la = simulate(&p, Strategy::StreamK, &arch);
+    let s = fd.latency_us / la.latency_us;
+    assert!((1.4..3.2).contains(&s), "headline speedup {s}");
+}
+
+#[test]
+fn fa2_latency_flat_in_heads_until_saturation() {
+    // FA2 parallelizes only over batch*heads: below device capacity its
+    // latency is context-bound and constant in heads.
+    let arch = GpuArch::a100();
+    let l8 = simulate(&DecodeProblem::uniform(1, 8, 65536, 64), Strategy::Dense, &arch);
+    let l64 =
+        simulate(&DecodeProblem::uniform(1, 64, 65536, 64), Strategy::Dense, &arch);
+    let ratio = l64.latency_us / l8.latency_us;
+    assert!((0.9..1.1).contains(&ratio), "FA2 flat: {ratio}");
+}
+
+#[test]
+fn fd_quantization_cliff_when_heads_exceed_sms() {
+    // Fig 7b: once groups > SMs, FD stops splitting and rides partially
+    // full waves; LA keeps its advantage.
+    let arch = GpuArch::a100();
+    let p = DecodeProblem::uniform(4, 32, 262_144, 64); // 128 groups > 0.8*108
+    let fd = simulate(&p, Strategy::fixed_split_auto(&p, arch.num_sms), &arch);
+    let la = simulate(&p, Strategy::StreamK, &arch);
+    assert_eq!(fd.kernel_launches, 1, "FD resorts to vanilla FA2");
+    assert!(fd.latency_us / la.latency_us > 1.2);
+}
+
+#[test]
+fn h100_faster_than_a100_all_mechanisms() {
+    let p = DecodeProblem::uniform(4, 32, 65536, 64);
+    for s in [Strategy::Dense, Strategy::StreamK] {
+        let a = simulate(&p, s, &GpuArch::a100());
+        let h = simulate(&p, s, &GpuArch::h100());
+        assert!(h.latency_us < a.latency_us, "{}", s.name());
+    }
+}
+
+#[test]
+fn multi_gpu_scales_lean_nearly_linearly() {
+    let p = DecodeProblem::uniform(4, 256, 262_144, 64);
+    let one = simulate(&p, Strategy::StreamK, &GpuArch::a100());
+    let eight = simulate(&p, Strategy::StreamK, &GpuArch::a100().multi(8));
+    let scaling = one.latency_us / eight.latency_us;
+    assert!(
+        (5.0..8.5).contains(&scaling),
+        "8-GPU scaling {scaling} (paper: near-linear with TP)"
+    );
+}
+
+#[test]
+fn energy_ordering_follows_occupancy() {
+    prop_check("energy ordering", 60, |rng| {
+        let heads = *rng.choose(&[32usize, 56]);
+        let ctx = 1usize << rng.urange(14, 19);
+        let p = DecodeProblem::uniform(1, heads, ctx, 64);
+        let rs = simulate_all(&p, &GpuArch::a100());
+        let (fa2, fd, la) = (&rs[0], &rs[1], &rs[3]);
+        if la.energy_j > fd.energy_j * 1.02 {
+            return Err(format!("LA {} > FD {} energy", la.energy_j, fd.energy_j));
+        }
+        if fa2.energy_j < la.energy_j * 0.98 {
+            return Err("FA2 cheaper than LA?".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn occupancy_independent_of_problem_size_for_lean() {
+    // The paper's core claim: near-100% occupancy irrespective of problem
+    // size (given enough tiles to fill one wave).
+    let arch = GpuArch::a100();
+    for (b, h, ctx) in [
+        (1usize, 12usize, 1 << 17),
+        (2, 56, 1 << 18),
+        (8, 8, 1 << 16),
+        (16, 128, 1 << 14),
+        (1, 96, 1 << 19),
+    ] {
+        let p = DecodeProblem::uniform(b, h, ctx, 64);
+        let la = simulate(&p, Strategy::StreamK, &arch);
+        assert!(
+            la.occupancy > 0.9,
+            "b{b} h{h} ctx{ctx}: occupancy {}",
+            la.occupancy
+        );
+    }
+}
+
+#[test]
+fn reduction_overhead_constant_in_context_for_lean() {
+    // §I: LA has constant reduction overheads vs FD's split-scaling ones.
+    let arch = GpuArch::a100();
+    let short = DecodeProblem::uniform(1, 8, 1 << 14, 64);
+    let long = DecodeProblem::uniform(1, 8, 1 << 18, 64);
+    let rs = simulate(&short, Strategy::StreamK, &arch);
+    let rl = simulate(&long, Strategy::StreamK, &arch);
+    // absolute reduce time must not blow up with 16x context
+    assert!(
+        rl.reduce_us <= rs.reduce_us * 4.0 + 5.0,
+        "reduce grew {} -> {}",
+        rs.reduce_us,
+        rl.reduce_us
+    );
+}
