@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
             cache_pages: 1024,
             page_tokens: 16,
             project_hardware: true,
+            ..EngineConfig::default()
         },
     )?;
     println!(

@@ -45,6 +45,11 @@ impl ContinuousBatcher {
         self.active_len() == 0 && self.waiting.is_empty()
     }
 
+    /// The request next in line for admission (FCFS head), if any.
+    pub fn peek_waiting(&self) -> Option<&Request> {
+        self.waiting.front()
+    }
+
     /// Admit waiting requests into free slots, gated by `admit` (capacity
     /// check, e.g. KV-cache pages). Returns `(slot, request)` pairs in
     /// admission order.
@@ -122,6 +127,17 @@ mod tests {
         // head-of-line blocking is deliberate (FCFS): a gate that accepts
         // only id 2 still admits nothing
         assert!(b.admit(|r| r.id == 2).is_empty());
+    }
+
+    #[test]
+    fn peek_waiting_sees_fcfs_head() {
+        let mut b = ContinuousBatcher::new(1);
+        assert!(b.peek_waiting().is_none());
+        b.enqueue(req(3));
+        b.enqueue(req(4));
+        assert_eq!(b.peek_waiting().unwrap().id, 3);
+        b.admit(|_| true);
+        assert_eq!(b.peek_waiting().unwrap().id, 4);
     }
 
     #[test]

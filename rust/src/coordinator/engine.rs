@@ -1,11 +1,22 @@
 //! The decode-serving engine: continuous batching over the PJRT model
-//! artifacts with a paged KV cache, greedy sampling, and a per-step
-//! LeanAttention hardware projection.
+//! artifacts with a paged KV cache, greedy sampling, a radix prefix cache
+//! with copy-on-write page sharing, and a per-step LeanAttention hardware
+//! projection.
 //!
 //! One `step()` is one Orca-style iteration: admit waiting requests into
 //! free slots (batch prefill), then run one decode step for every active
 //! sequence. Python never runs here — both phases execute AOT-compiled
 //! HLO through the PJRT CPU client.
+//!
+//! **Shared-prefix serving.** Prompts are probed against a
+//! [`super::radix::RadixPrefixIndex`]; matched full pages are shared by
+//! reference ([`PagedKvCache::insert_seq_shared`]) instead of duplicated,
+//! which shrinks both the admission footprint (more concurrent sequences
+//! fit) and the modeled decode bandwidth (the per-step cascade projection
+//! streams each shared prefix once per group). Every admitted prompt's
+//! full pages are registered back into the index so later requests can
+//! share them; under memory pressure the index evicts cold pages nobody
+//! else references.
 
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -13,13 +24,16 @@ use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::partition::cascade::{CascadeProblem, PrefixGroup};
 use crate::partition::plan::{DecodeProblem, Strategy};
 use crate::runtime::{Manifest, ModelRuntime, Runtime};
+use crate::sim::cascade::simulate_cascade;
 use crate::sim::{simulate, GpuArch};
 
 use super::batcher::ContinuousBatcher;
 use super::kv_cache::PagedKvCache;
 use super::metrics::Metrics;
+use super::radix::{PrefixMatch, RadixPrefixIndex};
 use super::request::{FinishReason, FinishedRequest, Request, RequestId};
 
 /// Engine construction parameters.
@@ -33,6 +47,8 @@ pub struct EngineConfig {
     pub page_tokens: usize,
     /// Record per-step LeanAttention-vs-FlashDecoding GPU projections.
     pub project_hardware: bool,
+    /// Share prompt-prefix KV pages across requests via the radix index.
+    pub enable_prefix_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -42,6 +58,7 @@ impl Default for EngineConfig {
             cache_pages: 256,
             page_tokens: 16,
             project_hardware: true,
+            enable_prefix_cache: true,
         }
     }
 }
@@ -54,8 +71,21 @@ struct ActiveSeq {
     arrival: Instant,
     prefill_started: Instant,
     first_token_at: Instant,
-    /// KV pages reserved for this request's full budget at admission.
+    /// Fresh KV pages reserved for this request's full budget at
+    /// admission (cached prefix pages are excluded — the index holds
+    /// those).
     reserved_pages: usize,
+    /// Of this request's pages, how many the prefix index newly
+    /// registered (they outlive the request, so its release returns
+    /// `reserved_pages - index_kept` to the committed-pages pool).
+    index_kept: usize,
+    /// This sequence's leading full KV pages (shared prefix pages it
+    /// references + its own prompt pages). Sequences whose runs share a
+    /// leading segment physically share those pages and form a cascade
+    /// prefix group — including the request that populated the index,
+    /// not just later matchers. Every listed page is in the sequence's
+    /// own page list, so it stays referenced while the request is active.
+    prefix_pages: Vec<usize>,
 }
 
 /// A single-replica serving engine.
@@ -65,13 +95,16 @@ pub struct Engine {
     cache: PagedKvCache,
     batcher: ContinuousBatcher,
     active: HashMap<RequestId, ActiveSeq>,
+    prefix_index: RadixPrefixIndex,
     pub metrics: Metrics,
     arch: GpuArch,
     next_id: RequestId,
-    /// Sum of KV pages reserved by active requests (admission reserves
-    /// the whole prompt+generation budget so decode appends cannot hit a
-    /// full cache mid-flight).
-    reserved_pages: usize,
+    /// Pages committed to being (or becoming) allocated: the prefix
+    /// index's pages plus every active request's fresh-page budget.
+    /// Admission keeps `committed + need <= total`, so same-wave
+    /// admissions and later decode appends can never run the cache dry
+    /// mid-flight.
+    committed_pages: usize,
     // reusable gather buffers (hot path: no per-step allocation)
     k_buf: Vec<f32>,
     v_buf: Vec<f32>,
@@ -91,6 +124,7 @@ impl Engine {
             config.cache_pages,
         );
         let batcher = ContinuousBatcher::new(art.batch);
+        let prefix_index = RadixPrefixIndex::new(config.page_tokens);
         let cache_elems = model.cache_elems();
         Ok(Engine {
             config,
@@ -98,10 +132,11 @@ impl Engine {
             cache,
             batcher,
             active: HashMap::new(),
+            prefix_index,
             metrics: Metrics::default(),
             arch: GpuArch::a100(),
             next_id: 1,
-            reserved_pages: 0,
+            committed_pages: 0,
             k_buf: vec![0.0; cache_elems],
             v_buf: vec![0.0; cache_elems],
         })
@@ -133,6 +168,11 @@ impl Engine {
 
     pub fn is_idle(&self) -> bool {
         self.batcher.is_idle()
+    }
+
+    /// Pages currently pinned by the radix prefix index.
+    pub fn prefix_index_pages(&self) -> usize {
+        self.prefix_index.num_pages()
     }
 
     /// Submit a request; returns its id. The prompt must fit the prefill
@@ -180,26 +220,75 @@ impl Engine {
     }
 
     fn admit_and_prefill(&mut self) -> Result<()> {
-        let cache = &self.cache;
-        // Admit up to the free slots, gated by KV page availability for
-        // the prompt plus the *whole* generation budget — reserving as we
-        // go, so same-wave admissions and later decode appends can never
-        // run the cache dry mid-flight. The budget caps at the ctx bucket
-        // (generation stops there with ContextFull regardless).
         let ctx_cap = self.model.art.ctx_bucket;
         let budget = |r: &Request| (r.prompt.len() + r.max_new_tokens).min(ctx_cap);
-        let mut reserved = self.reserved_pages;
+
+        // Under memory pressure, evict cold prefix-index pages nobody
+        // else references so the queue head can fit. The head's match is
+        // kept (eviction spares those pages) and handed to the admission
+        // gate below, saving a redundant trie walk per congested step.
+        let mut head_match: Option<PrefixMatch> = None;
+        if self.config.enable_prefix_cache
+            && self.batcher.free_slots() > 0
+            && !self.prefix_index.is_empty()
+        {
+            if let Some(front) = self.batcher.peek_waiting() {
+                let m = self.prefix_index.peek(&front.prompt);
+                let need = self
+                    .cache
+                    .pages_for(budget(front))
+                    .saturating_sub(m.pages.len());
+                let available = self
+                    .cache
+                    .total_pages()
+                    .saturating_sub(self.committed_pages);
+                if need > available {
+                    let cache = &self.cache;
+                    // Spare the pages the head request is about to share.
+                    let evicted = self.prefix_index.evict_lru(need - available, |p| {
+                        cache.page_ref(p) == 1 && !m.pages.contains(&p)
+                    });
+                    for &p in &evicted {
+                        self.cache.release_page(p)?;
+                    }
+                    self.committed_pages -= evicted.len();
+                    self.metrics.prefix.evicted_pages += evicted.len();
+                }
+                head_match = Some(m);
+            }
+        }
+
+        // Admit up to the free slots, gated by KV page availability for
+        // the prompt plus the *whole* generation budget (minus pages a
+        // cached prefix already provides), reserving as we go. The budget
+        // caps at the ctx bucket (generation stops there with ContextFull
+        // regardless).
+        let cache = &self.cache;
+        let prefix_index = &self.prefix_index;
+        let use_prefix = self.config.enable_prefix_cache;
+        let mut committed = self.committed_pages;
         let total = cache.total_pages();
+        let mut needs: Vec<usize> = Vec::new();
         let admitted = self.batcher.admit(|r| {
-            let need = cache.pages_for(budget(r));
-            if reserved + need <= total {
-                reserved += need;
+            let m = if use_prefix {
+                // First gate call is the same head the eviction pass
+                // probed; its match is unchanged (eviction spared it).
+                head_match
+                    .take()
+                    .unwrap_or_else(|| prefix_index.peek(&r.prompt))
+            } else {
+                PrefixMatch::default()
+            };
+            let need = cache.pages_for(budget(r)).saturating_sub(m.pages.len());
+            if committed + need <= total {
+                committed += need;
+                needs.push(need);
                 true
             } else {
                 false
             }
         });
-        self.reserved_pages = reserved;
+        self.committed_pages = committed;
         if admitted.is_empty() {
             return Ok(());
         }
@@ -226,30 +315,76 @@ impl Engine {
             self.model.art.head_dim,
         );
         let vocab = self.model.art.vocab;
-        for (slot, r) in admitted {
+        for ((slot, r), need) in admitted.into_iter().zip(needs) {
             let len = r.prompt.len();
-            // Extract this lane's K/V as [l, h, len, dh].
-            let mut k = vec![0.0f32; l * h * len * dh];
-            let mut v = vec![0.0f32; l * h * len * dh];
+            // Re-probe the index now: an earlier request in this same
+            // admission wave may have just registered the shared prefix,
+            // so a cold burst of identical prompts still deduplicates
+            // everything after the first. (Admission reserved pages using
+            // the pre-wave probe — a larger match here only means fewer
+            // fresh pages than reserved, which the finish-time release
+            // balances.)
+            let m = if use_prefix {
+                self.prefix_index.peek(&r.prompt)
+            } else {
+                PrefixMatch::default()
+            };
+            // Extract this lane's K/V rows *after* the cached prefix as
+            // [l, h, suffix, dh] — the prefix pages are shared, so only
+            // the suffix is written into fresh pages.
+            let skip = m.tokens;
+            let suffix = len - skip;
+            let mut k = vec![0.0f32; l * h * suffix * dh];
+            let mut v = vec![0.0f32; l * h * suffix * dh];
             for li in 0..l {
                 for hi in 0..h {
-                    for t in 0..len {
-                        let src = ((((li * b) + slot) * h + hi) * p + t) * dh;
-                        let dst = ((li * h + hi) * len + t) * dh;
+                    for t in 0..suffix {
+                        let src = ((((li * b) + slot) * h + hi) * p + skip + t) * dh;
+                        let dst = ((li * h + hi) * suffix + t) * dh;
                         k[dst..dst + dh].copy_from_slice(&out.k[src..src + dh]);
                         v[dst..dst + dh].copy_from_slice(&out.v[src..src + dh]);
                     }
                 }
             }
-            self.cache.insert_seq(r.id, &k, &v, len)?;
+            if skip > 0 {
+                self.cache.insert_seq_shared(r.id, &m.pages, &k, &v, suffix)?;
+            } else {
+                self.cache.insert_seq(r.id, &k, &v, len)?;
+            }
+
+            // Account the hit and register this prompt's full pages so
+            // later requests can share them.
+            let mut index_kept = 0;
+            let mut prefix_run = Vec::new();
+            if use_prefix {
+                self.metrics.prefix.lookups += 1;
+                if skip > 0 {
+                    self.metrics.prefix.hits += 1;
+                    self.metrics.prefix.tokens_matched += skip;
+                    self.metrics.prefix.pages_shared += m.pages.len();
+                    self.metrics.prefix.kv_bytes_deduped +=
+                        (m.pages.len() * self.cache.page_bytes()) as u64;
+                }
+                let pages = self.cache.seq_pages(r.id).unwrap().to_vec();
+                let fresh = self.prefix_index.insert(&r.prompt, &pages);
+                for &pg in &fresh {
+                    self.cache.retain_page(pg)?;
+                }
+                index_kept = fresh.len();
+                // This sequence's leading full pages — shared prefix pages
+                // plus the pages it just registered. Every page here is in
+                // its own page list (reference held while active), so the
+                // cascade grouping below can never see a freed-and-reused
+                // page id; and the prefix *owner* participates in groups,
+                // not just later matchers.
+                let full = (len / self.config.page_tokens).min(pages.len());
+                prefix_run = pages[..full].to_vec();
+            }
 
             // First generated token from the prefill logits.
             let logits = &out.logits[slot * vocab..(slot + 1) * vocab];
             let first = argmax(logits);
             let now = Instant::now();
-            let reserved_pages = self
-                .cache
-                .pages_for((len + r.max_new_tokens).min(self.model.art.ctx_bucket));
             self.active.insert(
                 r.id,
                 ActiveSeq {
@@ -260,7 +395,9 @@ impl Engine {
                     arrival: r.arrival,
                     prefill_started: t0,
                     first_token_at: now,
-                    reserved_pages,
+                    reserved_pages: need,
+                    index_kept,
+                    prefix_pages: prefix_run,
                 },
             );
             self.metrics.tokens_generated += 1;
@@ -321,7 +458,9 @@ impl Engine {
                     nv[dst..dst + dh].copy_from_slice(&out.new_v[src..src + dh]);
                 }
             }
-            self.cache.append_token(id, &nk, &nv)?;
+            if self.cache.append_token(id, &nk, &nv)? {
+                self.metrics.prefix.cow_copies += 1;
+            }
 
             let seq = self.active.get_mut(&id).unwrap();
             let logits = &out.logits[bi * vocab..(bi + 1) * vocab];
@@ -340,7 +479,10 @@ impl Engine {
             };
             if let Some(reason) = reason {
                 let seq = self.active.remove(&id).unwrap();
-                self.reserved_pages -= seq.reserved_pages;
+                // Pages the index registered from this request stay
+                // committed (cached for future prompts); the rest of the
+                // reservation returns to the pool.
+                self.committed_pages -= seq.reserved_pages - seq.index_kept;
                 let now = Instant::now();
                 finished.push(FinishedRequest {
                     id,
@@ -361,19 +503,28 @@ impl Engine {
     }
 
     /// Project this step's (ragged) attention batch onto the A100 model:
-    /// what would LeanAttention vs FlashDecoding cost on real hardware?
+    /// what would LeanAttention vs FlashDecoding cost on real hardware —
+    /// and, when sequences share cached prefixes, what does the cascade
+    /// plan save by streaming each shared prefix once per group?
     fn record_projection(&mut self, slots: &[Option<RequestId>]) {
-        let lens: Vec<u32> = slots
-            .iter()
-            .flatten()
-            .filter_map(|id| self.cache.seq_len(*id))
-            .map(|l| l as u32)
-            .collect();
+        let mut lens: Vec<u32> = Vec::new();
+        // (index page run, seq idx) for sequences holding indexed pages.
+        let mut runs: Vec<(Vec<usize>, u32)> = Vec::new();
+        for id in slots.iter().flatten() {
+            let Some(len) = self.cache.seq_len(*id) else { continue };
+            let seq_idx = lens.len() as u32;
+            lens.push(len as u32);
+            if let Some(a) = self.active.get(id) {
+                if !a.prefix_pages.is_empty() {
+                    runs.push((a.prefix_pages.clone(), seq_idx));
+                }
+            }
+        }
         if lens.is_empty() {
             return;
         }
         let problem =
-            DecodeProblem::ragged(self.model.art.n_heads, lens, self.model.art.head_dim);
+            DecodeProblem::ragged(self.model.art.n_heads, lens.clone(), self.model.art.head_dim);
         let la = simulate(&problem, Strategy::StreamK, &self.arch);
         let fd = simulate(
             &problem,
@@ -384,6 +535,59 @@ impl Engine {
         self.metrics.projected_lean_us.push(la.latency_us * layers);
         self.metrics.projected_fd_us.push(fd.latency_us * layers);
         self.metrics.projected_occupancy.push(la.occupancy);
+
+        // Cascade projection: sequences whose own leading page runs
+        // overlap physically share those KV pages — stream them once per
+        // group. Sharing is always a leading run (insert_seq_shared
+        // prepends the shared pages), so runs starting with the same page
+        // overlap by exactly their longest common leading run.
+        let mut by_first: HashMap<usize, Vec<usize>> = HashMap::new();
+        for (i, (run, _)) in runs.iter().enumerate() {
+            by_first.entry(run[0]).or_default().push(i);
+        }
+        let groups: Vec<PrefixGroup> = by_first
+            .into_values()
+            .filter(|idxs| idxs.len() >= 2)
+            .map(|idxs| {
+                let head = &runs[idxs[0]].0;
+                let mut common = head.len();
+                for &i in &idxs[1..] {
+                    let r = &runs[i].0;
+                    let c = head
+                        .iter()
+                        .zip(r)
+                        .take(common)
+                        .take_while(|(a, b)| a == b)
+                        .count();
+                    common = c;
+                }
+                PrefixGroup {
+                    prefix_len: (common * self.config.page_tokens) as u32,
+                    members: idxs.iter().map(|&i| runs[i].1).collect(),
+                }
+            })
+            .collect();
+        if groups.is_empty() {
+            return;
+        }
+        let Ok(cp) = CascadeProblem::new(
+            self.model.art.n_heads,
+            lens,
+            self.model.art.head_dim,
+            groups,
+        ) else {
+            return;
+        };
+        // Below one LeanTile of shared context the cascade split saves
+        // nothing; align to tile boundaries so savings are never negative.
+        let cp = cp.tile_aligned();
+        if cp.prefix_groups.is_empty() {
+            return;
+        }
+        let r = simulate_cascade(&cp, &self.arch);
+        self.metrics.projected_cascade_us.push(r.latency_us * layers);
+        self.metrics.cascade_kv_bytes_saved +=
+            (r.baseline_kv_bytes - r.kv_bytes) * layers;
     }
 }
 
@@ -408,6 +612,13 @@ mod tests {
         assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
         assert_eq!(argmax(&[f32::NEG_INFINITY, -5.0]), 1);
         assert_eq!(argmax(&[2.0]), 0);
+    }
+
+    #[test]
+    fn config_default_enables_prefix_cache() {
+        let c = EngineConfig::default();
+        assert!(c.enable_prefix_cache);
+        assert!(c.project_hardware);
     }
 
     // Engine integration tests (need artifacts + PJRT) live in

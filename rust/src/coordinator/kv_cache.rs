@@ -7,6 +7,15 @@
 //! a sequence's pages into the contiguous `[l, b, h, ctx_bucket, dh]`
 //! views the decode artifact consumes (the CPU-PJRT analogue of the
 //! paper's constant-stride tensor requirement, §IV-C).
+//!
+//! Pages are **reference-counted** so the radix prefix index
+//! ([`super::radix`]) can share one physical copy of a common prefix
+//! across many sequences (cascade/shared-prefix serving). Writes go
+//! through **copy-on-write**: appending into a page another holder still
+//! references first clones it, so a shared prefix is immutable in place.
+//! A page returns to the free list only when its last reference drops —
+//! the refcount invariants (no leak, no double free, eviction only at
+//! zero) are property-tested in `rust/tests/kv_cache_props.rs`.
 
 use anyhow::{bail, ensure, Result};
 use std::collections::HashMap;
@@ -21,6 +30,8 @@ pub struct PagedKvCache {
     pub page_tokens: usize,
     k_pages: Vec<Vec<f32>>,
     v_pages: Vec<Vec<f32>>,
+    /// Holders per page: sequences + the prefix index. 0 = free.
+    ref_counts: Vec<u32>,
     free: Vec<usize>,
     seqs: HashMap<RequestId, SeqEntry>,
 }
@@ -47,6 +58,7 @@ impl PagedKvCache {
             page_tokens,
             k_pages: (0..num_pages).map(|_| vec![0.0; page_elems]).collect(),
             v_pages: (0..num_pages).map(|_| vec![0.0; page_elems]).collect(),
+            ref_counts: vec![0; num_pages],
             free: (0..num_pages).rev().collect(),
             seqs: HashMap::new(),
         }
@@ -60,8 +72,28 @@ impl PagedKvCache {
         self.k_pages.len()
     }
 
+    pub fn used_pages(&self) -> usize {
+        self.total_pages() - self.free.len()
+    }
+
+    /// K+V bytes held by one page (f32 host storage).
+    pub fn page_bytes(&self) -> usize {
+        2 * self.layers * self.heads * self.page_tokens * self.head_dim
+            * std::mem::size_of::<f32>()
+    }
+
     pub fn seq_len(&self, id: RequestId) -> Option<usize> {
         self.seqs.get(&id).map(|s| s.len)
+    }
+
+    /// A sequence's in-order physical page list.
+    pub fn seq_pages(&self, id: RequestId) -> Option<&[usize]> {
+        self.seqs.get(&id).map(|s| s.pages.as_slice())
+    }
+
+    /// Current holder count of a page (0 = free).
+    pub fn page_ref(&self, page: usize) -> u32 {
+        self.ref_counts.get(page).copied().unwrap_or(0)
     }
 
     /// Pages needed to hold `tokens` tokens.
@@ -72,6 +104,38 @@ impl PagedKvCache {
     /// Whether a sequence of `tokens` tokens can currently be admitted.
     pub fn can_admit(&self, tokens: usize) -> bool {
         self.pages_for(tokens) <= self.free.len()
+    }
+
+    fn alloc_page(&mut self) -> Option<usize> {
+        let p = self.free.pop()?;
+        debug_assert_eq!(self.ref_counts[p], 0);
+        self.ref_counts[p] = 1;
+        Some(p)
+    }
+
+    /// Take an additional reference on a live page (prefix index or a
+    /// sequence sharing a cached prefix).
+    pub fn retain_page(&mut self, page: usize) -> Result<()> {
+        ensure!(page < self.total_pages(), "retain of page {page} out of range");
+        ensure!(self.ref_counts[page] > 0, "retain of unallocated page {page}");
+        self.ref_counts[page] += 1;
+        Ok(())
+    }
+
+    /// Drop one reference; the page returns to the free list only when
+    /// the count reaches zero. Returns whether the page was freed.
+    pub fn release_page(&mut self, page: usize) -> Result<bool> {
+        ensure!(page < self.total_pages(), "release of page {page} out of range");
+        ensure!(
+            self.ref_counts[page] > 0,
+            "double free of page {page} (refcount already 0)"
+        );
+        self.ref_counts[page] -= 1;
+        if self.ref_counts[page] == 0 {
+            self.free.push(page);
+            return Ok(true);
+        }
+        Ok(false)
     }
 
     /// Register a new sequence and copy in its prefill K/V
@@ -85,7 +149,7 @@ impl PagedKvCache {
         if need > self.free.len() {
             bail!("cache full: need {need} pages, {} free", self.free.len());
         }
-        let pages: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        let pages: Vec<usize> = (0..need).map(|_| self.alloc_page().unwrap()).collect();
         let mut entry = SeqEntry { pages, len: 0 };
         let (heads, dh) = (self.heads, self.head_dim);
         for t in 0..len {
@@ -99,8 +163,59 @@ impl PagedKvCache {
         Ok(())
     }
 
+    /// Register a new sequence whose first `shared.len() * page_tokens`
+    /// tokens live in already-cached (prefix index) pages. The sequence
+    /// takes one reference per shared page; only the suffix K/V
+    /// (`[layers, heads, suffix_len, head_dim]`, the tokens *after* the
+    /// shared prefix) is written into freshly allocated pages.
+    pub fn insert_seq_shared(
+        &mut self,
+        id: RequestId,
+        shared: &[usize],
+        k_suffix: &[f32],
+        v_suffix: &[f32],
+        suffix_len: usize,
+    ) -> Result<()> {
+        ensure!(!self.seqs.contains_key(&id), "sequence {id} already cached");
+        let plane = self.heads * self.head_dim;
+        ensure!(k_suffix.len() == self.layers * plane * suffix_len, "suffix k size");
+        ensure!(v_suffix.len() == k_suffix.len(), "suffix v size");
+        for &p in shared {
+            ensure!(p < self.total_pages(), "shared page {p} out of range");
+            ensure!(self.ref_counts[p] > 0, "shared page {p} is not live");
+        }
+        let shared_tokens = shared.len() * self.page_tokens;
+        let total = shared_tokens + suffix_len;
+        ensure!(total >= 1, "empty sequence");
+        let need = self.pages_for(total.max(1)) - shared.len();
+        if need > self.free.len() {
+            bail!("cache full: need {need} pages, {} free", self.free.len());
+        }
+
+        for &p in shared {
+            self.ref_counts[p] += 1;
+        }
+        let mut pages = shared.to_vec();
+        pages.extend((0..need).map(|_| self.alloc_page().unwrap()));
+        let mut entry = SeqEntry { pages, len: 0 };
+        let (heads, dh) = (self.heads, self.head_dim);
+        for s in 0..suffix_len {
+            // Absolute position: suffix token `s` lands after the shared
+            // prefix, which is page-aligned by construction.
+            self.write_token(&mut entry, shared_tokens + s, |l, h| {
+                let base = (l * heads + h) * suffix_len * dh + s * dh;
+                (&k_suffix[base..base + dh], &v_suffix[base..base + dh])
+            });
+        }
+        entry.len = total;
+        self.seqs.insert(id, entry);
+        Ok(())
+    }
+
     /// Append one token's K/V rows (`[layers, heads, head_dim]` each).
-    pub fn append_token(&mut self, id: RequestId, k: &[f32], v: &[f32]) -> Result<()> {
+    /// Returns whether a copy-on-write page clone happened (the target
+    /// page was shared with another holder).
+    pub fn append_token(&mut self, id: RequestId, k: &[f32], v: &[f32]) -> Result<bool> {
         let plane = self.layers * self.heads * self.head_dim;
         ensure!(k.len() == plane, "append k size");
         ensure!(v.len() == plane, "append v size");
@@ -108,13 +223,29 @@ impl PagedKvCache {
             anyhow::anyhow!("sequence {id} not cached")
         })?;
         let t = entry.len;
+        let mut cow = false;
         if t >= entry.pages.len() * self.page_tokens {
-            if self.free.is_empty() {
+            let Some(p) = self.alloc_page() else {
                 self.seqs.insert(id, entry);
                 bail!("cache full appending to sequence {id}");
-            }
-            let p = self.free.pop().unwrap();
+            };
             entry.pages.push(p);
+        } else {
+            // Writing into an existing page: if anyone else holds it,
+            // clone first so the shared copy stays immutable.
+            let pi = t / self.page_tokens;
+            let page = entry.pages[pi];
+            if self.ref_counts[page] > 1 {
+                let Some(fresh) = self.alloc_page() else {
+                    self.seqs.insert(id, entry);
+                    bail!("cache full (copy-on-write) appending to sequence {id}");
+                };
+                copy_page(&mut self.k_pages, page, fresh);
+                copy_page(&mut self.v_pages, page, fresh);
+                self.ref_counts[page] -= 1; // still >= 1: not freed
+                entry.pages[pi] = fresh;
+                cow = true;
+            }
         }
         let (heads, dh) = (self.heads, self.head_dim);
         self.write_token(&mut entry, t, |l, h| {
@@ -123,7 +254,7 @@ impl PagedKvCache {
         });
         entry.len = t + 1;
         self.seqs.insert(id, entry);
-        Ok(())
+        Ok(cow)
     }
 
     fn write_token<'a>(
@@ -196,11 +327,29 @@ impl PagedKvCache {
         Ok(())
     }
 
-    /// Release a sequence's pages.
+    /// Release a sequence's references; pages with no other holder (e.g.
+    /// the prefix index) return to the free list.
     pub fn free_seq(&mut self, id: RequestId) {
         if let Some(entry) = self.seqs.remove(&id) {
-            self.free.extend(entry.pages);
+            for page in entry.pages {
+                // A sequence's pages are live by construction.
+                let _ = self.release_page(page);
+            }
         }
+    }
+}
+
+/// Copy one page buffer over another without a temporary allocation
+/// (split borrows around the larger index; `src != dst` by construction —
+/// the destination comes off the free list while the source is live).
+fn copy_page(pages: &mut [Vec<f32>], src: usize, dst: usize) {
+    debug_assert_ne!(src, dst);
+    if src < dst {
+        let (lo, hi) = pages.split_at_mut(dst);
+        hi[0].copy_from_slice(&lo[src]);
+    } else {
+        let (lo, hi) = pages.split_at_mut(src);
+        lo[dst].copy_from_slice(&hi[0]);
     }
 }
 
@@ -253,7 +402,8 @@ mod tests {
         assert_eq!(c.free_pages(), 15);
         let nk = rng.normal_vec(2 * 3 * 4);
         let nv = rng.normal_vec(2 * 3 * 4);
-        c.append_token(1, &nk, &nv).unwrap(); // forces a second page
+        let cow = c.append_token(1, &nk, &nv).unwrap(); // forces a second page
+        assert!(!cow, "fresh page, no copy-on-write");
         assert_eq!(c.free_pages(), 14);
         assert_eq!(c.seq_len(1), Some(9));
 
@@ -321,5 +471,118 @@ mod tests {
         // lane 1 is empty -> zeros
         let lane1 = ((0 * 4 + 1) * 3) * 8 * 4;
         assert!(ko[lane1..lane1 + 8 * 4].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn shared_prefix_dedups_pages() {
+        let mut c = cache();
+        let mut rng = Rng::new(6);
+        // Seq 1 owns a 16-token (2-page) prompt.
+        let k = rows(&mut rng, 2, 3, 16, 4);
+        let v = rows(&mut rng, 2, 3, 16, 4);
+        c.insert_seq(1, &k, &v, 16).unwrap();
+        let shared: Vec<usize> = c.seq_pages(1).unwrap().to_vec();
+        assert_eq!(c.used_pages(), 2);
+
+        // Seq 2 shares both pages and adds a 5-token suffix (1 new page).
+        let ks = rows(&mut rng, 2, 3, 5, 4);
+        let vs = rows(&mut rng, 2, 3, 5, 4);
+        c.insert_seq_shared(2, &shared, &ks, &vs, 5).unwrap();
+        assert_eq!(c.used_pages(), 3, "prefix pages are shared, not copied");
+        assert_eq!(c.seq_len(2), Some(21));
+        for &p in &shared {
+            assert_eq!(c.page_ref(p), 2);
+        }
+
+        // Gather sees the shared prefix + private suffix.
+        let mut ko = vec![0.0; 2 * 1 * 3 * 24 * 4];
+        let mut vo = vec![0.0; ko.len()];
+        c.gather(&[Some(2)], 24, &mut ko, &mut vo).unwrap();
+        // prefix token 3, layer 1, head 2 comes from seq 1's prompt
+        let (l, h, t) = (1usize, 2usize, 3usize);
+        let src = (l * 3 + h) * 16 * 4 + t * 4;
+        let dst = ((l * 1) * 3 + h) * 24 * 4 + t * 4;
+        assert_eq!(&ko[dst..dst + 4], &k[src..src + 4]);
+        // suffix token 16 (= suffix row 0)
+        let ssrc = (l * 3 + h) * 5 * 4;
+        let sdst = ((l * 1) * 3 + h) * 24 * 4 + 16 * 4;
+        assert_eq!(&ko[sdst..sdst + 4], &ks[ssrc..ssrc + 4]);
+
+        // Freeing seq 1 keeps the shared pages alive for seq 2.
+        c.free_seq(1);
+        for &p in &shared {
+            assert_eq!(c.page_ref(p), 1);
+        }
+        assert_eq!(c.used_pages(), 3);
+        c.free_seq(2);
+        assert_eq!(c.free_pages(), 16);
+    }
+
+    #[test]
+    fn full_page_share_appends_into_fresh_pages_without_cow() {
+        // The engine's steady state: a shared prefix is always whole
+        // pages, so a sharer's first append lands in a new page and the
+        // shared copy is never even COW'd.
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 4);
+        let k: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        let v: Vec<f32> = (0..8).map(|x| 100.0 + x as f32).collect();
+        c.insert_seq(1, &k, &v, 4).unwrap(); // one full page
+        let page = c.seq_pages(1).unwrap()[0];
+        c.insert_seq_shared(2, &[page], &[], &[], 0).unwrap();
+        assert_eq!(c.page_ref(page), 2);
+        let cow = c.append_token(2, &[9.0, 9.0], &[9.0, 9.0]).unwrap();
+        assert!(!cow, "page-aligned append allocates, never copies");
+        assert_eq!(c.seq_pages(2).unwrap()[0], page, "prefix page still shared");
+        // Seq 1's view is untouched.
+        let mut ko = vec![0.0; 8];
+        let mut vo = vec![0.0; 8];
+        c.gather(&[Some(1)], 4, &mut ko, &mut vo).unwrap();
+        assert_eq!(ko, k);
+    }
+
+    #[test]
+    fn copy_on_write_preserves_the_shared_copy() {
+        // COW is for *partial-page* sharing — the parallel-sampling fork
+        // scenario, where two branches continue from the same half-filled
+        // page. Model the second holder with an explicit retain.
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 4);
+        c.insert_seq(1, &[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2)
+            .unwrap(); // 2 of 4 slots used: partial page
+        let page = c.seq_pages(1).unwrap()[0];
+        c.retain_page(page).unwrap(); // forked holder
+        assert_eq!(c.page_ref(page), 2);
+
+        // Appending writes into the shared partial page: must clone.
+        let cow = c.append_token(1, &[9.0, 9.0], &[9.0, 9.0]).unwrap();
+        assert!(cow, "append into a shared page must copy");
+        let new_page = c.seq_pages(1).unwrap()[0];
+        assert_ne!(new_page, page);
+        assert_eq!(c.page_ref(page), 1, "forked holder keeps the original");
+        assert_eq!(c.page_ref(new_page), 1);
+
+        // The sequence reads the cloned prefix plus its new token.
+        let mut ko = vec![0.0; 8];
+        let mut vo = vec![0.0; 8];
+        c.gather(&[Some(1)], 4, &mut ko, &mut vo).unwrap();
+        assert_eq!(&ko[..6], &[1.0, 2.0, 3.0, 4.0, 9.0, 9.0]);
+        assert_eq!(&vo[4..6], &[9.0, 9.0]);
+
+        // Releasing the fork's reference frees the original page.
+        assert!(c.release_page(page).unwrap());
+        c.free_seq(1);
+        assert_eq!(c.free_pages(), 4);
+    }
+
+    #[test]
+    fn double_free_is_rejected() {
+        let mut c = PagedKvCache::new(1, 1, 2, 2, 2);
+        c.insert_seq(1, &[1.0, 2.0], &[3.0, 4.0], 1).unwrap();
+        let page = c.seq_pages(1).unwrap()[0];
+        c.free_seq(1);
+        assert_eq!(c.page_ref(page), 0);
+        let err = c.release_page(page).unwrap_err();
+        assert!(err.to_string().contains("double free"));
+        assert!(c.retain_page(page).is_err(), "cannot retain a free page");
+        assert_eq!(c.free_pages(), 2, "free list not corrupted");
     }
 }

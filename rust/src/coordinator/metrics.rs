@@ -1,8 +1,39 @@
-//! Engine metrics: step counters, token throughput, and the per-step
-//! LeanAttention-vs-FlashDecoding hardware projection the engine records
-//! (linking the serving loop back to the paper's contribution).
+//! Engine metrics: step counters, token throughput, latency percentiles,
+//! prefix-cache accounting, and the per-step LeanAttention-vs-FlashDecoding
+//! hardware projection the engine records (linking the serving loop back
+//! to the paper's contribution).
 
 use crate::util::stats::Summary;
+
+/// Prefix-cache (radix index) counters.
+#[derive(Clone, Debug, Default)]
+pub struct PrefixCacheStats {
+    /// Prompts probed against the radix index.
+    pub lookups: usize,
+    /// Prompts that matched at least one full page.
+    pub hits: usize,
+    /// Prompt tokens served from cached prefix pages.
+    pub tokens_matched: usize,
+    /// Page references taken on cached prefix pages by admitted sequences.
+    pub pages_shared: usize,
+    /// K+V bytes the shared pages would otherwise have duplicated.
+    pub kv_bytes_deduped: u64,
+    /// Index pages evicted under cache pressure.
+    pub evicted_pages: usize,
+    /// Copy-on-write page clones performed by the cache.
+    pub cow_copies: usize,
+}
+
+impl PrefixCacheStats {
+    /// Fraction of prompts that reused at least one cached prefix page.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+}
 
 /// Accumulated engine counters.
 #[derive(Clone, Debug, Default)]
@@ -21,6 +52,15 @@ pub struct Metrics {
     pub projected_fd_us: Vec<f64>,
     /// Projected LeanAttention SM occupancy per step.
     pub projected_occupancy: Vec<f64>,
+    /// Projected attention latency per step under cascade (shared-prefix)
+    /// stream-K, when the step's batch had a shared prefix (us).
+    pub projected_cascade_us: Vec<f64>,
+    /// Modeled KV bytes the cascade plan avoided streaming, summed over
+    /// projected steps (shared prefix counted once per group, not per
+    /// sequence).
+    pub cascade_kv_bytes_saved: f64,
+    /// Prefix-cache counters.
+    pub prefix: PrefixCacheStats,
 }
 
 impl Metrics {
@@ -68,17 +108,48 @@ impl Metrics {
         ));
         if let Some(sm) = self.step_summary() {
             s.push_str(&format!(
-                "step_us: mean={:.0} p50={:.0} p99={:.0}\n",
-                sm.mean, sm.p50, sm.p99
+                "step_us: mean={:.0} p50={:.0} p95={:.0} p99={:.0}\n",
+                sm.mean, sm.p50, sm.p95, sm.p99
+            ));
+        }
+        if let Some(sm) = self.prefill_summary() {
+            s.push_str(&format!(
+                "prefill_us: mean={:.0} p50={:.0} p95={:.0} p99={:.0}\n",
+                sm.mean, sm.p50, sm.p95, sm.p99
             ));
         }
         s.push_str(&format!("decode throughput: {:.1} tok/s\n", self.decode_tps()));
+        if self.prefix.lookups > 0 {
+            s.push_str(&format!(
+                "prefix cache: hit rate {:.0}% ({}/{} prompts), {} tokens from cache, \
+                 {} pages shared, {:.1} KiB KV deduplicated, {} pages evicted, {} COW copies\n",
+                self.prefix.hit_rate() * 100.0,
+                self.prefix.hits,
+                self.prefix.lookups,
+                self.prefix.tokens_matched,
+                self.prefix.pages_shared,
+                self.prefix.kv_bytes_deduped as f64 / 1024.0,
+                self.prefix.evicted_pages,
+                self.prefix.cow_copies,
+            ));
+        }
         if let Some(sp) = self.projected_speedup() {
             let occ = self.projected_occupancy.iter().sum::<f64>()
                 / self.projected_occupancy.len().max(1) as f64;
             s.push_str(&format!(
                 "projected on A100: LeanAttention {sp:.2}x over FlashDecoding, occupancy {:.0}%\n",
                 occ * 100.0
+            ));
+        }
+        if !self.projected_cascade_us.is_empty() {
+            let c: f64 = self.projected_cascade_us.iter().sum::<f64>()
+                / self.projected_cascade_us.len() as f64;
+            s.push_str(&format!(
+                "projected cascade: mean {:.1}us attention/step over {} shared-prefix steps, \
+                 {:.1} KiB modeled KV traffic saved\n",
+                c,
+                self.projected_cascade_us.len(),
+                self.cascade_kv_bytes_saved / 1024.0,
             ));
         }
         s
@@ -96,6 +167,8 @@ mod tests {
         assert!(m.projected_speedup().is_none());
         assert_eq!(m.decode_tps(), 0.0);
         assert!(m.report().contains("steps=0"));
+        assert!(!m.report().contains("prefix cache"));
+        assert_eq!(m.prefix.hit_rate(), 0.0);
     }
 
     #[test]
@@ -110,5 +183,37 @@ mod tests {
         };
         assert!((m.projected_speedup().unwrap() - 1.75).abs() < 1e-12);
         assert!((m.decode_tps() - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefix_stats_in_report() {
+        let m = Metrics {
+            prefix: PrefixCacheStats {
+                lookups: 4,
+                hits: 3,
+                tokens_matched: 96,
+                pages_shared: 6,
+                kv_bytes_deduped: 6 * 2048,
+                evicted_pages: 1,
+                cow_copies: 0,
+            },
+            ..Default::default()
+        };
+        assert!((m.prefix.hit_rate() - 0.75).abs() < 1e-12);
+        let rep = m.report();
+        assert!(rep.contains("hit rate 75%"), "{rep}");
+        assert!(rep.contains("6 pages shared"), "{rep}");
+    }
+
+    #[test]
+    fn step_percentiles_surface_p95() {
+        let m = Metrics {
+            step_us: (1..=100).map(|x| x as f64).collect(),
+            ..Default::default()
+        };
+        let rep = m.report();
+        assert!(rep.contains("p95="), "{rep}");
+        let sm = m.step_summary().unwrap();
+        assert!(sm.p50 <= sm.p95 && sm.p95 <= sm.p99);
     }
 }

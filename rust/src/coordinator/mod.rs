@@ -10,8 +10,11 @@
 //!   derives the stream-K attention plan for the current (ragged) batch
 //!   and records the projected GPU latency/occupancy against the
 //!   FlashDecoding baseline.
+//! * [`radix`] — radix prefix index: token prefixes → shared KV page
+//!   runs (the serving half of cascade/shared-prefix decoding).
 //! * [`router`] — multi-engine front door (least-loaded dispatch).
-//! * [`metrics`] — latency/throughput accounting.
+//! * [`metrics`] — latency/throughput accounting, including prefix-cache
+//!   hit rates and deduplicated KV bytes.
 //! * [`pool`] — std-thread fork-join pool (tokio is not in the offline
 //!   crate cache; the event loop is plain Rust).
 
@@ -20,10 +23,13 @@ pub mod engine;
 pub mod kv_cache;
 pub mod metrics;
 pub mod pool;
+pub mod radix;
 pub mod request;
 pub mod router;
 
 pub use engine::{Engine, EngineConfig};
 pub use kv_cache::PagedKvCache;
+pub use metrics::{Metrics, PrefixCacheStats};
+pub use radix::{PrefixMatch, RadixPrefixIndex};
 pub use request::{FinishedRequest, Request, RequestId};
 pub use router::Router;

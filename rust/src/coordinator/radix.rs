@@ -1,0 +1,301 @@
+//! Radix prefix index: token prefixes → KV page runs.
+//!
+//! The serving-side half of cascade decoding (the SGLang/vLLM "radix
+//! cache" idea): prompts that share a prefix — system prompts, few-shot
+//! templates, parallel sampling — should share the KV pages holding that
+//! prefix instead of re-prefilling and re-storing it per request.
+//!
+//! Sharing is only sound at **page granularity** (a page is the unit the
+//! [`super::kv_cache::PagedKvCache`] refcounts), so the tree is a radix
+//! trie whose every edge is one *full page* of tokens: a node compares an
+//! entire `page_tokens`-sized chunk at once and owns the physical page
+//! holding that chunk's K/V for all layers and heads. A prompt's partial
+//! trailing page is never indexed — it may still grow in place.
+//!
+//! The index itself holds one cache reference per indexed page (taken by
+//! the caller via `retain_page` on the pages [`RadixPrefixIndex::insert`]
+//! reports as new). Sequences that match a prefix take further references;
+//! eviction under memory pressure releases only pages whose sole remaining
+//! reference is the index — never pages an active sequence still reads.
+
+/// Result of a prefix lookup: the longest indexed page run covering the
+/// head of the token sequence.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PrefixMatch {
+    /// Physical pages of the matched prefix, in order.
+    pub pages: Vec<usize>,
+    /// Tokens covered: `pages.len() * page_tokens`.
+    pub tokens: usize,
+}
+
+struct Node {
+    /// Exactly `page_tokens` tokens — the edge label.
+    chunk: Vec<i32>,
+    /// Physical page holding this chunk's K/V.
+    page: usize,
+    /// LRU stamp (index-wide logical clock).
+    last_used: u64,
+    children: Vec<Node>,
+}
+
+/// Page-granular radix tree over token prefixes.
+pub struct RadixPrefixIndex {
+    page_tokens: usize,
+    roots: Vec<Node>,
+    clock: u64,
+    num_pages: usize,
+}
+
+impl RadixPrefixIndex {
+    pub fn new(page_tokens: usize) -> RadixPrefixIndex {
+        assert!(page_tokens >= 1);
+        RadixPrefixIndex { page_tokens, roots: Vec::new(), clock: 0, num_pages: 0 }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Pages currently indexed.
+    pub fn num_pages(&self) -> usize {
+        self.num_pages
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.roots.is_empty()
+    }
+
+    /// Longest indexed prefix of `tokens`, bumping LRU stamps along the
+    /// matched path (a hit keeps the whole prefix chain hot).
+    pub fn lookup(&mut self, tokens: &[i32]) -> PrefixMatch {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut m = PrefixMatch::default();
+        let mut nodes = &mut self.roots;
+        for chunk in tokens.chunks_exact(self.page_tokens) {
+            let Some(pos) = nodes.iter().position(|n| n.chunk == chunk) else {
+                break;
+            };
+            let node = &mut nodes[pos];
+            node.last_used = clock;
+            m.pages.push(node.page);
+            nodes = &mut node.children;
+        }
+        m.tokens = m.pages.len() * self.page_tokens;
+        m
+    }
+
+    /// Longest indexed prefix of `tokens` without touching LRU state
+    /// (admission-control probes must not alter eviction order).
+    pub fn peek(&self, tokens: &[i32]) -> PrefixMatch {
+        let mut m = PrefixMatch::default();
+        let mut nodes = &self.roots;
+        for chunk in tokens.chunks_exact(self.page_tokens) {
+            let Some(node) = nodes.iter().find(|n| n.chunk == chunk) else {
+                break;
+            };
+            m.pages.push(node.page);
+            nodes = &node.children;
+        }
+        m.tokens = m.pages.len() * self.page_tokens;
+        m
+    }
+
+    /// Index the full-page chunks of `tokens`, where `pages[i]` is the
+    /// physical page holding chunk `i` (a sequence's in-order page list
+    /// works directly). Chunks already present keep their existing page;
+    /// the trailing partial chunk, if any, is ignored. Returns the pages
+    /// newly referenced by the index — the caller must take one cache
+    /// reference on each (and only each) of these.
+    pub fn insert(&mut self, tokens: &[i32], pages: &[usize]) -> Vec<usize> {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut fresh = Vec::new();
+        let mut nodes = &mut self.roots;
+        for (ci, chunk) in tokens.chunks_exact(self.page_tokens).enumerate() {
+            if ci >= pages.len() {
+                break;
+            }
+            let pos = match nodes.iter().position(|n| n.chunk == chunk) {
+                Some(p) => p,
+                None => {
+                    nodes.push(Node {
+                        chunk: chunk.to_vec(),
+                        page: pages[ci],
+                        last_used: clock,
+                        children: Vec::new(),
+                    });
+                    fresh.push(pages[ci]);
+                    self.num_pages += 1;
+                    nodes.len() - 1
+                }
+            };
+            let node = &mut nodes[pos];
+            node.last_used = clock;
+            nodes = &mut node.children;
+        }
+        fresh
+    }
+
+    /// Evict up to `max_pages` least-recently-used **leaf** pages for
+    /// which `evictable` holds (the caller checks the cache refcount is 1,
+    /// i.e. the index holds the only reference). Returns the evicted
+    /// pages; the caller must release one cache reference per page.
+    /// Leaf-only eviction keeps every surviving prefix chain contiguous.
+    pub fn evict_lru(
+        &mut self,
+        max_pages: usize,
+        evictable: impl Fn(usize) -> bool,
+    ) -> Vec<usize> {
+        let mut out = Vec::new();
+        while out.len() < max_pages {
+            let mut best: Option<(u64, usize)> = None;
+            Self::coldest_leaf(&self.roots, &evictable, &mut best);
+            let Some((_, page)) = best else { break };
+            let removed = Self::remove_leaf(&mut self.roots, page);
+            debug_assert!(removed);
+            self.num_pages -= 1;
+            out.push(page);
+        }
+        out
+    }
+
+    fn coldest_leaf(
+        nodes: &[Node],
+        evictable: &impl Fn(usize) -> bool,
+        best: &mut Option<(u64, usize)>,
+    ) {
+        for n in nodes {
+            if n.children.is_empty() {
+                if evictable(n.page)
+                    && best.map_or(true, |(t, _)| n.last_used < t)
+                {
+                    *best = Some((n.last_used, n.page));
+                }
+            } else {
+                Self::coldest_leaf(&n.children, evictable, best);
+            }
+        }
+    }
+
+    fn remove_leaf(nodes: &mut Vec<Node>, page: usize) -> bool {
+        if let Some(pos) = nodes
+            .iter()
+            .position(|n| n.children.is_empty() && n.page == page)
+        {
+            nodes.remove(pos);
+            return true;
+        }
+        for n in nodes.iter_mut() {
+            if Self::remove_leaf(&mut n.children, page) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(xs: &[i32]) -> Vec<i32> {
+        xs.to_vec()
+    }
+
+    #[test]
+    fn empty_index_matches_nothing() {
+        let mut idx = RadixPrefixIndex::new(4);
+        assert_eq!(idx.lookup(&[1, 2, 3, 4, 5]), PrefixMatch::default());
+        assert!(idx.is_empty());
+        assert_eq!(idx.num_pages(), 0);
+    }
+
+    #[test]
+    fn insert_then_lookup_full_pages_only() {
+        let mut idx = RadixPrefixIndex::new(4);
+        // 10 tokens over pages [7, 8, 9]: only 2 full chunks are indexable.
+        let prompt = toks(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+        let fresh = idx.insert(&prompt, &[7, 8, 9]);
+        assert_eq!(fresh, vec![7, 8]);
+        assert_eq!(idx.num_pages(), 2);
+
+        let m = idx.lookup(&prompt);
+        assert_eq!(m.pages, vec![7, 8]);
+        assert_eq!(m.tokens, 8);
+
+        // A shorter probe sharing one page matches one chunk.
+        let m1 = idx.peek(&[1, 2, 3, 4, 99, 98, 97, 96]);
+        assert_eq!(m1.pages, vec![7]);
+        assert_eq!(m1.tokens, 4);
+
+        // A diverging probe matches nothing.
+        assert_eq!(idx.peek(&[9, 9, 9, 9]), PrefixMatch::default());
+    }
+
+    #[test]
+    fn reinsert_is_idempotent() {
+        let mut idx = RadixPrefixIndex::new(2);
+        let prompt = toks(&[1, 2, 3, 4]);
+        assert_eq!(idx.insert(&prompt, &[10, 11]), vec![10, 11]);
+        // Same tokens from another sequence with different pages: the
+        // existing pages win, nothing new is referenced.
+        assert_eq!(idx.insert(&prompt, &[20, 21]), Vec::<usize>::new());
+        assert_eq!(idx.num_pages(), 2);
+        assert_eq!(idx.lookup(&prompt).pages, vec![10, 11]);
+    }
+
+    #[test]
+    fn divergent_suffixes_share_the_common_prefix() {
+        let mut idx = RadixPrefixIndex::new(2);
+        idx.insert(&[5, 6, 1, 1], &[0, 1]);
+        let fresh = idx.insert(&[5, 6, 2, 2], &[0, 2]);
+        assert_eq!(fresh, vec![2]); // page 0 shared via the tree
+        assert_eq!(idx.num_pages(), 3);
+        assert_eq!(idx.lookup(&[5, 6, 1, 1]).pages, vec![0, 1]);
+        assert_eq!(idx.lookup(&[5, 6, 2, 2]).pages, vec![0, 2]);
+    }
+
+    #[test]
+    fn evicts_lru_leaves_first_and_respects_gate() {
+        let mut idx = RadixPrefixIndex::new(2);
+        idx.insert(&[1, 1, 2, 2], &[0, 1]); // chain 0 -> 1
+        idx.insert(&[3, 3], &[2]); // separate root
+        // Touch the first chain so page 2 is coldest.
+        idx.lookup(&[1, 1, 2, 2]);
+
+        // Gate refuses page 2: eviction takes the coldest *allowed* leaf
+        // (page 1, the deeper chain's leaf) instead; page 0 is an interior
+        // node and survives while its child exists.
+        let ev = idx.evict_lru(1, |p| p != 2);
+        assert_eq!(ev, vec![1]);
+        assert_eq!(idx.num_pages(), 2);
+
+        // Now page 0 is a leaf and evictable; drain everything.
+        let ev = idx.evict_lru(10, |_| true);
+        assert_eq!(ev.len(), 2);
+        assert!(ev.contains(&0) && ev.contains(&2));
+        assert!(idx.is_empty());
+        assert_eq!(idx.num_pages(), 0);
+    }
+
+    #[test]
+    fn eviction_order_follows_recency() {
+        let mut idx = RadixPrefixIndex::new(1);
+        idx.insert(&[1], &[0]);
+        idx.insert(&[2], &[1]);
+        idx.insert(&[3], &[2]);
+        idx.lookup(&[1]); // page 0 most recent
+        let ev = idx.evict_lru(2, |_| true);
+        assert_eq!(ev, vec![1, 2]); // coldest first, hot page 0 survives
+        assert_eq!(idx.peek(&[1]).pages, vec![0]);
+    }
+
+    #[test]
+    fn partial_page_probe_matches_nothing() {
+        let mut idx = RadixPrefixIndex::new(4);
+        idx.insert(&[1, 2, 3, 4], &[0]);
+        // 3 tokens < one page: nothing shareable.
+        assert_eq!(idx.peek(&[1, 2, 3]), PrefixMatch::default());
+    }
+}

@@ -12,12 +12,14 @@
 //! * **L3** (this crate) — the paper's *coordination* contribution:
 //!   [`attention`] implements the softmax re-scaling reduction operator
 //!   (§IV-A), [`partition`] the LeanTile stream-K decomposition plus the
-//!   FlashAttention-2 / FlashDecoding / FlashInfer baselines (§IV-B/C),
+//!   FlashAttention-2 / FlashDecoding / FlashInfer baselines (§IV-B/C)
+//!   and the cascade shared-prefix planner ([`partition::cascade`]),
 //!   [`sim`] the GPU execution-model simulator that regenerates every
-//!   figure of the evaluation, [`runtime`] the PJRT loader for the AOT
-//!   artifacts, and [`coordinator`] a decode-serving engine (router →
-//!   continuous batcher → paged KV cache → stream-K attention with
-//!   Rust-side reduction).
+//!   figure of the evaluation (plus modeled KV traffic for cascade),
+//!   [`runtime`] the PJRT loader for the AOT artifacts, and
+//!   [`coordinator`] a decode-serving engine (router → continuous
+//!   batcher → radix prefix cache → copy-on-write paged KV cache →
+//!   stream-K attention with Rust-side reduction).
 //!
 //! Quick start (after `make artifacts`):
 //!

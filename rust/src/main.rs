@@ -109,7 +109,11 @@ const HELP: &str = "leanattn — LeanAttention (decode-phase stream-K attention)
 commands:
   info                              artifact + PJRT device inventory
   serve    [--model tiny] [--requests 8] [--max-new 16] [--seed 0]
+           [--system-prompt-len N]  share an N-token system prompt across
+                                    requests through the radix prefix cache
   simulate --batch B --heads H --ctx N [--head-dim 64] [--arch a100]
+           [--shared-prefix N]      add the cascade row: batch shares an
+                                    N-token prefix, streamed once per group
   plan     --batch B --heads H --ctx N [--slots 216]
   figures  [table1|fig01|fig02|fig03|fig07|fig08|fig09|fig10|fig11|fig12|fig13|all]
   sweep    [--samples 1000] [--arch a100]
@@ -143,6 +147,7 @@ fn serve(args: &Args) -> Result<()> {
     let n_requests = args.usize("requests", 8);
     let max_new = args.usize("max-new", 16);
     let seed = args.usize("seed", 0) as u64;
+    let system_len = args.usize("system-prompt-len", 0);
 
     let runtime = Rc::new(Runtime::cpu()?);
     let manifest = Manifest::load(Manifest::default_dir())?;
@@ -160,11 +165,22 @@ fn serve(args: &Args) -> Result<()> {
 
     let mut rng = Rng::new(seed);
     let vocab = 512u64;
+    // A shared system prompt, prepended to every request so the radix
+    // prefix cache and the cascade projection have something to share.
+    let system_len = system_len.min(engine.prefill_bucket().saturating_sub(1));
+    let system: Vec<i32> = (0..system_len)
+        .map(|_| rng.range(0, vocab) as i32)
+        .collect();
+    if system_len > 0 {
+        println!("sharing a {system_len}-token system prompt across all requests");
+    }
     for i in 0..n_requests {
-        let len = rng.urange(1, engine.prefill_bucket() + 1);
-        let prompt: Vec<i32> = (0..len).map(|_| rng.range(0, vocab) as i32).collect();
+        let len = rng.urange(1, engine.prefill_bucket() - system_len + 1);
+        let mut prompt = system.clone();
+        prompt.extend((0..len).map(|_| rng.range(0, vocab) as i32));
+        let total = prompt.len();
         let id = engine.submit(prompt, max_new)?;
-        println!("submitted request {id} (prompt {len} tokens), #{i}");
+        println!("submitted request {id} (prompt {total} tokens), #{i}");
     }
 
     let finished = engine.run_until_idle()?;
@@ -217,6 +233,46 @@ fn simulate_cmd(args: &Args) -> Result<()> {
             r.energy_j * 1e3,
             r.latency_us / la
         );
+    }
+
+    // Optional cascade row: the whole batch shares an N-token prefix,
+    // streamed once instead of once per sequence.
+    let shared = args.usize("shared-prefix", 0);
+    if shared > 0 {
+        use lean_attention::partition::cascade::{CascadeProblem, PrefixGroup};
+        use lean_attention::sim::simulate_cascade;
+        anyhow::ensure!(
+            shared <= ctx,
+            "--shared-prefix {shared} exceeds --ctx {ctx}"
+        );
+        let cp = CascadeProblem::new(
+            heads,
+            vec![ctx as u32; batch],
+            head_dim,
+            vec![PrefixGroup {
+                prefix_len: shared as u32,
+                members: (0..batch as u32).collect(),
+            }],
+        )?
+        .tile_aligned();
+        if cp.prefix_groups.is_empty() {
+            println!(
+                "\ncascade: shared prefix of {shared} tokens is below one \
+                 LeanTile or batch < 2 — nothing to share"
+            );
+        } else {
+            let r = simulate_cascade(&cp, &arch);
+            println!(
+                "\ncascade (shared {shared}-token prefix): {:.1}us, occupancy {:.1}%, \
+                 KV bytes {:.1} MiB vs {:.1} MiB flat ({:.0}% saved), {:.2}x vs LA",
+                r.latency_us,
+                r.occupancy * 100.0,
+                r.kv_bytes / (1024.0 * 1024.0),
+                r.baseline_kv_bytes / (1024.0 * 1024.0),
+                r.bytes_saved_fraction() * 100.0,
+                la / r.latency_us,
+            );
+        }
     }
     Ok(())
 }

@@ -1,0 +1,526 @@
+//! Cascade (shared-prefix) attention partitioning.
+//!
+//! When many sequences in a decode batch share a common context prefix —
+//! one system prompt serving every user, parallel sampling, few-shot
+//! templates — plain stream-K streams that prefix's K/V from HBM once
+//! **per sequence**. But the §IV-A rescale operator is associative, so
+//! each output row can be computed as
+//!
+//! ```text
+//! O(seq, head) = rescale( partial(prefix KV, q_seq), partial(suffix KV, q_seq) )
+//! ```
+//!
+//! and the prefix partials of *all* member sequences can be produced by a
+//! single walk over the shared KV stream: one KV load, many query rows —
+//! the decode GEMV becomes a skinny GEMM, the same bandwidth argument as
+//! multi-query attention. This module turns a batch + prefix-group
+//! description into a **segment problem** whose groups are the shared
+//! prefix streams (counted once per group) plus the per-sequence
+//! suffixes; the existing stream-K planner then schedules those segments
+//! as first-class LeanTiles, and [`execute_cascade_host`] is the
+//! numerical witness that the composition is exact.
+
+use crate::attention::{partial_attention_host, Partials};
+use crate::util::rng::Rng;
+
+use super::lean_tile::lean_tile_for;
+use super::plan::{DecodeProblem, Plan, Strategy};
+use super::stream_k::stream_k_plan;
+
+/// A set of sequences sharing one context prefix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PrefixGroup {
+    /// Shared tokens at the head of every member's context.
+    pub prefix_len: u32,
+    /// Batch indices of the member sequences.
+    pub members: Vec<u32>,
+}
+
+/// A decode batch annotated with shared-prefix structure.
+#[derive(Clone, Debug)]
+pub struct CascadeProblem {
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Total context per sequence (prefix + suffix for group members).
+    pub ctx_lens: Vec<u32>,
+    /// LeanTile size in tokens.
+    pub tile: usize,
+    /// Disjoint prefix groups; sequences in no group are solo.
+    pub prefix_groups: Vec<PrefixGroup>,
+}
+
+/// What a segment-problem group stands for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SegKind {
+    /// The shared prefix stream of `prefix_groups[pg]` for one head:
+    /// every LeanTile serves all member queries at once.
+    Shared { pg: usize, head: usize },
+    /// One sequence's private suffix for one head.
+    Suffix { seq: usize, head: usize },
+}
+
+impl CascadeProblem {
+    /// Build and validate. Groups must be disjoint, members in range,
+    /// and every member's context at least as long as its group's prefix.
+    pub fn new(
+        heads: usize,
+        ctx_lens: Vec<u32>,
+        head_dim: usize,
+        prefix_groups: Vec<PrefixGroup>,
+    ) -> anyhow::Result<CascadeProblem> {
+        use anyhow::ensure;
+        let batch = ctx_lens.len();
+        let mut owner = vec![false; batch];
+        for (gi, g) in prefix_groups.iter().enumerate() {
+            ensure!(!g.members.is_empty(), "prefix group {gi} has no members");
+            ensure!(g.prefix_len >= 1, "prefix group {gi} has empty prefix");
+            for &m in &g.members {
+                let m = m as usize;
+                ensure!(m < batch, "prefix group {gi}: member {m} out of range");
+                ensure!(!owner[m], "sequence {m} in more than one prefix group");
+                owner[m] = true;
+                ensure!(
+                    g.prefix_len <= ctx_lens[m],
+                    "prefix group {gi}: prefix {} exceeds member {m} context {}",
+                    g.prefix_len,
+                    ctx_lens[m]
+                );
+            }
+        }
+        Ok(CascadeProblem {
+            heads,
+            head_dim,
+            ctx_lens,
+            tile: lean_tile_for(head_dim),
+            prefix_groups,
+        })
+    }
+
+    pub fn with_tile(mut self, tile: usize) -> Self {
+        assert!(tile > 0);
+        self.tile = tile;
+        self
+    }
+
+    pub fn batch(&self) -> usize {
+        self.ctx_lens.len()
+    }
+
+    /// Output rows: one per `(sequence, head)`.
+    pub fn outputs(&self) -> usize {
+        self.batch() * self.heads
+    }
+
+    /// The shared-prefix length covering sequence `seq` (0 if solo).
+    pub fn prefix_of(&self, seq: usize) -> u32 {
+        self.prefix_groups
+            .iter()
+            .find(|g| g.members.contains(&(seq as u32)))
+            .map_or(0, |g| g.prefix_len)
+    }
+
+    /// Floor every group's shared boundary to a LeanTile multiple and
+    /// drop groups left with no shared tiles or fewer than two members.
+    /// Splitting at a tile boundary guarantees the cascade plan never
+    /// streams *more* tiles than the flat plan (unaligned cuts can add a
+    /// boundary tile per sequence); the trimmed prefix tokens simply move
+    /// into the member suffixes, which stays exact by associativity.
+    pub fn tile_aligned(&self) -> CascadeProblem {
+        let tile = self.tile as u32;
+        let groups = self
+            .prefix_groups
+            .iter()
+            .filter_map(|g| {
+                let aligned = (g.prefix_len / tile) * tile;
+                (aligned >= tile && g.members.len() >= 2).then(|| PrefixGroup {
+                    prefix_len: aligned,
+                    members: g.members.clone(),
+                })
+            })
+            .collect();
+        CascadeProblem { prefix_groups: groups, ..self.clone() }
+    }
+
+    /// The flat (no sharing) problem this batch poses — the baseline.
+    pub fn baseline_problem(&self) -> DecodeProblem {
+        DecodeProblem::ragged(self.heads, self.ctx_lens.clone(), self.head_dim)
+            .with_tile(self.tile)
+    }
+
+    /// The segment problem the planner partitions: synthetic batch lanes
+    /// `[0, n_groups)` carry the shared prefix streams (context =
+    /// `prefix_len`, counted **once** per group), lanes `[n_groups,
+    /// n_groups + batch)` carry the per-sequence suffixes (context =
+    /// `ctx - prefix`, possibly 0). Group `g = lane * heads + head`
+    /// follows the usual batch-major linearization, so
+    /// [`stream_k_plan`] equalizes LeanTiles across shared and suffix
+    /// segments alike.
+    pub fn segment_problem(&self) -> DecodeProblem {
+        let mut lens: Vec<u32> =
+            self.prefix_groups.iter().map(|g| g.prefix_len).collect();
+        for (seq, &ctx) in self.ctx_lens.iter().enumerate() {
+            lens.push(ctx - self.prefix_of(seq));
+        }
+        DecodeProblem::ragged(self.heads, lens, self.head_dim).with_tile(self.tile)
+    }
+
+    /// Meaning of segment-problem group `g`.
+    pub fn seg_kind(&self, g: usize) -> SegKind {
+        let lane = g / self.heads;
+        let head = g % self.heads;
+        let n_pg = self.prefix_groups.len();
+        if lane < n_pg {
+            SegKind::Shared { pg: lane, head }
+        } else {
+            SegKind::Suffix { seq: lane - n_pg, head }
+        }
+    }
+
+    /// Query rows served by one LeanTile of segment-problem group `g`
+    /// (members of the prefix group for shared streams, 1 otherwise).
+    pub fn queries_of(&self, g: usize) -> usize {
+        match self.seg_kind(g) {
+            SegKind::Shared { pg, .. } => self.prefix_groups[pg].members.len(),
+            SegKind::Suffix { .. } => 1,
+        }
+    }
+}
+
+/// A stream-K plan over a cascade segment problem.
+#[derive(Clone, Debug)]
+pub struct CascadePlan {
+    /// CTA → LeanTile assignment over [`CascadePlan::segment_problem`].
+    pub plan: Plan,
+    /// The synthetic problem the plan partitions.
+    pub segment_problem: DecodeProblem,
+}
+
+/// Partition a cascade problem for a device with `sm_slots` co-resident
+/// CTA slots: shared prefix streams and suffixes are linearized into one
+/// LeanTile space and split equally, exactly like plain stream-K.
+pub fn build_cascade_plan(problem: &CascadeProblem, sm_slots: usize) -> CascadePlan {
+    let segment_problem = problem.segment_problem();
+    let mut plan = stream_k_plan(&segment_problem, sm_slots);
+    plan.strategy = Strategy::Cascade;
+    CascadePlan { plan, segment_problem }
+}
+
+/// Host tensors for a cascade problem: per-group shared prefix K/V plus
+/// per-sequence suffix K/V (each `[heads, len, d]` row-major), and one
+/// query row per output.
+pub struct CascadeTensors {
+    /// `[batch * heads, d]` query rows.
+    pub q: Vec<f32>,
+    /// Per prefix group: `[heads, prefix_len, d]`.
+    pub k_shared: Vec<Vec<f32>>,
+    pub v_shared: Vec<Vec<f32>>,
+    /// Per sequence: `[heads, suffix_len, d]` with `suffix_len = ctx - prefix`.
+    pub k_suffix: Vec<Vec<f32>>,
+    pub v_suffix: Vec<Vec<f32>>,
+}
+
+impl CascadeTensors {
+    /// Random tensors for `problem` (deterministic in `seed`).
+    pub fn random(problem: &CascadeProblem, seed: u64) -> CascadeTensors {
+        let mut rng = Rng::new(seed);
+        let (h, d) = (problem.heads, problem.head_dim);
+        let q = rng.normal_vec(problem.batch() * h * d);
+        let mut k_shared = Vec::new();
+        let mut v_shared = Vec::new();
+        for g in &problem.prefix_groups {
+            let n = h * g.prefix_len as usize * d;
+            k_shared.push(rng.normal_vec(n));
+            v_shared.push(rng.normal_vec(n));
+        }
+        let mut k_suffix = Vec::new();
+        let mut v_suffix = Vec::new();
+        for (seq, &ctx) in problem.ctx_lens.iter().enumerate() {
+            let sl = (ctx - problem.prefix_of(seq)) as usize;
+            k_suffix.push(rng.normal_vec(h * sl * d));
+            v_suffix.push(rng.normal_vec(h * sl * d));
+        }
+        CascadeTensors { q, k_shared, v_shared, k_suffix, v_suffix }
+    }
+
+    /// Materialize each sequence's full per-head K/V — prefix rows taken
+    /// from the group's shared tensors — padded to `[batch*heads, n_max, d]`.
+    /// This is what a sharing-oblivious engine would store per sequence;
+    /// the cascade path must match exact attention over it.
+    pub fn full_kv(&self, problem: &CascadeProblem) -> (Vec<f32>, Vec<f32>, usize) {
+        let (h, d) = (problem.heads, problem.head_dim);
+        let n_max = problem.ctx_lens.iter().copied().max().unwrap_or(0) as usize;
+        let g_out = problem.outputs();
+        let mut k = vec![0.0f32; g_out * n_max * d];
+        let mut v = vec![0.0f32; g_out * n_max * d];
+        for (seq, &ctx) in problem.ctx_lens.iter().enumerate() {
+            let ctx = ctx as usize;
+            let pg = problem
+                .prefix_groups
+                .iter()
+                .position(|g| g.members.contains(&(seq as u32)));
+            let prefix = pg.map_or(0, |p| {
+                problem.prefix_groups[p].prefix_len as usize
+            });
+            for hi in 0..h {
+                let out_base = (seq * h + hi) * n_max * d;
+                if let Some(p) = pg {
+                    let src = hi * prefix * d;
+                    k[out_base..out_base + prefix * d]
+                        .copy_from_slice(&self.k_shared[p][src..src + prefix * d]);
+                    v[out_base..out_base + prefix * d]
+                        .copy_from_slice(&self.v_shared[p][src..src + prefix * d]);
+                }
+                let sl = ctx - prefix;
+                let src = hi * sl * d;
+                let dst = out_base + prefix * d;
+                k[dst..dst + sl * d]
+                    .copy_from_slice(&self.k_suffix[seq][src..src + sl * d]);
+                v[dst..dst + sl * d]
+                    .copy_from_slice(&self.v_suffix[seq][src..src + sl * d]);
+            }
+        }
+        (k, v, n_max)
+    }
+}
+
+/// Execute a cascade plan on host numbers: every CTA computes its
+/// segments' partials (a shared segment computes one partial **per member
+/// query** from a single walk of the shared KV slice), then each output
+/// row folds its shared + suffix partials with the rescale operator in an
+/// arbitrary (optionally shuffled) order and normalizes. Must equal plain
+/// exact attention over the composed per-sequence K/V for every legal
+/// plan — the cascade extension of the associativity witness.
+pub fn execute_cascade_host(
+    cplan: &CascadePlan,
+    problem: &CascadeProblem,
+    t: &CascadeTensors,
+    shuffle_seed: Option<u64>,
+) -> Vec<f32> {
+    let (h, d) = (problem.heads, problem.head_dim);
+    let tile = cplan.plan.tile;
+    let n_pg = problem.prefix_groups.len();
+
+    // Phase 1: per-CTA partials, routed to the output rows they serve.
+    let mut per_output: Vec<Vec<Partials>> = vec![Vec::new(); problem.outputs()];
+    for cta in &cplan.plan.ctas {
+        for seg in &cta.segments {
+            let g = seg.group as usize;
+            let lane = g / h;
+            let head = g % h;
+            let ctx = cplan.segment_problem.ctx_for_group(g);
+            let start = seg.tile_begin as usize * tile;
+            let end = ((seg.tile_begin + seg.tile_count) as usize * tile).min(ctx);
+            let width = end - start;
+            if width == 0 {
+                continue;
+            }
+            if lane < n_pg {
+                // Shared prefix stream: one KV slice, all member queries.
+                let group = &problem.prefix_groups[lane];
+                let prefix = group.prefix_len as usize;
+                let base = (head * prefix + start) * d;
+                let k_slice = &t.k_shared[lane][base..base + width * d];
+                let v_slice = &t.v_shared[lane][base..base + width * d];
+                for &m in &group.members {
+                    let out = m as usize * h + head;
+                    let q_row = &t.q[out * d..(out + 1) * d];
+                    per_output[out].push(partial_attention_host(
+                        q_row,
+                        k_slice,
+                        v_slice,
+                        1,
+                        width,
+                        d,
+                        &[group.prefix_len],
+                        start,
+                    ));
+                }
+            } else {
+                // Private suffix segment.
+                let seq = lane - n_pg;
+                let sl = ctx; // suffix length for this lane
+                let base = (head * sl + start) * d;
+                let k_slice = &t.k_suffix[seq][base..base + width * d];
+                let v_slice = &t.v_suffix[seq][base..base + width * d];
+                let out = seq * h + head;
+                let q_row = &t.q[out * d..(out + 1) * d];
+                per_output[out].push(partial_attention_host(
+                    q_row,
+                    k_slice,
+                    v_slice,
+                    1,
+                    width,
+                    d,
+                    &[sl as u32],
+                    start,
+                ));
+            }
+        }
+    }
+
+    // Phase 2: fold each output's partials (order-insensitive).
+    let mut rng = shuffle_seed.map(Rng::new);
+    let mut out = vec![0.0f32; problem.outputs() * d];
+    for (oi, mut parts) in per_output.into_iter().enumerate() {
+        if parts.is_empty() {
+            continue; // empty context
+        }
+        if let Some(r) = rng.as_mut() {
+            for i in (1..parts.len()).rev() {
+                let j = r.urange(0, i + 1);
+                parts.swap(i, j);
+            }
+        }
+        let mut acc = Partials::identity(1, d);
+        for p in &parts {
+            acc.reduce_from(p);
+        }
+        out[oi * d..(oi + 1) * d].copy_from_slice(&acc.finalize());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::attention_host;
+    use crate::util::testing::max_abs_err;
+
+    fn two_group_problem() -> CascadeProblem {
+        // 4 seqs: 0,1 share a 96-token prefix; 2 solo; 3 in its own pair
+        // with seq 1? No — groups disjoint. 3 solo too.
+        CascadeProblem::new(
+            2,
+            vec![160, 130, 70, 96],
+            8,
+            vec![PrefixGroup { prefix_len: 96, members: vec![0, 1] }],
+        )
+        .unwrap()
+        .with_tile(32)
+    }
+
+    #[test]
+    fn validation_rejects_bad_groups() {
+        // member out of range
+        assert!(CascadeProblem::new(
+            1,
+            vec![10],
+            8,
+            vec![PrefixGroup { prefix_len: 4, members: vec![1] }],
+        )
+        .is_err());
+        // overlapping groups
+        assert!(CascadeProblem::new(
+            1,
+            vec![10, 10],
+            8,
+            vec![
+                PrefixGroup { prefix_len: 4, members: vec![0] },
+                PrefixGroup { prefix_len: 2, members: vec![0, 1] },
+            ],
+        )
+        .is_err());
+        // prefix longer than a member's context
+        assert!(CascadeProblem::new(
+            1,
+            vec![10, 3],
+            8,
+            vec![PrefixGroup { prefix_len: 4, members: vec![0, 1] }],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn segment_problem_counts_shared_tiles_once() {
+        let p = two_group_problem();
+        let seg = p.segment_problem();
+        // lanes: [prefix 96] + suffixes [64, 34, 70, 96]
+        assert_eq!(seg.ctx_lens, vec![96, 64, 34, 70, 96]);
+        assert_eq!(seg.tile, 32);
+        // shared tiles counted once: 3 + (2 + 2 + 3 + 3) = 13 tiles/head
+        assert_eq!(seg.total_tiles(), 2 * 13);
+        // baseline streams the prefix per member: (5+5+3+3)=16 tiles/head
+        assert_eq!(p.baseline_problem().total_tiles(), 2 * 16);
+    }
+
+    #[test]
+    fn seg_kind_and_queries_mapping() {
+        let p = two_group_problem();
+        assert_eq!(p.seg_kind(0), SegKind::Shared { pg: 0, head: 0 });
+        assert_eq!(p.seg_kind(1), SegKind::Shared { pg: 0, head: 1 });
+        assert_eq!(p.seg_kind(2), SegKind::Suffix { seq: 0, head: 0 });
+        assert_eq!(p.seg_kind(9), SegKind::Suffix { seq: 3, head: 1 });
+        assert_eq!(p.queries_of(0), 2);
+        assert_eq!(p.queries_of(3), 1);
+        assert_eq!(p.prefix_of(0), 96);
+        assert_eq!(p.prefix_of(2), 0);
+    }
+
+    #[test]
+    fn tile_alignment_floors_and_prunes() {
+        let p = CascadeProblem::new(
+            1,
+            vec![100, 100, 50, 50],
+            8,
+            vec![
+                PrefixGroup { prefix_len: 70, members: vec![0, 1] },
+                PrefixGroup { prefix_len: 20, members: vec![2, 3] },
+            ],
+        )
+        .unwrap()
+        .with_tile(32);
+        let a = p.tile_aligned();
+        // 70 -> 64; 20 -> 0 (pruned)
+        assert_eq!(a.prefix_groups.len(), 1);
+        assert_eq!(a.prefix_groups[0].prefix_len, 64);
+    }
+
+    #[test]
+    fn cascade_plan_validates_and_balances() {
+        let p = two_group_problem();
+        let cp = build_cascade_plan(&p, 6);
+        assert_eq!(cp.plan.strategy, Strategy::Cascade);
+        cp.plan.validate(&cp.segment_problem).unwrap();
+        let tiles = cp.plan.tiles_per_cta();
+        let max = *tiles.iter().max().unwrap();
+        let min = *tiles.iter().min().unwrap();
+        assert!(max - min <= 1, "stream-K balance holds: {min}..{max}");
+    }
+
+    #[test]
+    fn cascade_matches_reference_exactly() {
+        let p = two_group_problem();
+        let t = CascadeTensors::random(&p, 11);
+        let (k, v, n_max) = t.full_kv(&p);
+        let want = attention_host(
+            &t.q,
+            &k,
+            &v,
+            p.outputs(),
+            n_max,
+            p.head_dim,
+            &(0..p.outputs())
+                .map(|g| p.ctx_lens[g / p.heads])
+                .collect::<Vec<_>>(),
+        );
+        for slots in [1usize, 3, 7, 64] {
+            let cp = build_cascade_plan(&p, slots);
+            cp.plan.validate(&cp.segment_problem).unwrap();
+            let got = execute_cascade_host(&cp, &p, &t, None);
+            let err = max_abs_err(&got, &want);
+            assert!(err < 1e-4, "slots {slots}: err {err}");
+        }
+    }
+
+    #[test]
+    fn merge_order_does_not_matter() {
+        let p = two_group_problem();
+        let t = CascadeTensors::random(&p, 3);
+        let cp = build_cascade_plan(&p, 9);
+        let a = execute_cascade_host(&cp, &p, &t, None);
+        for seed in [1u64, 5, 9] {
+            let b = execute_cascade_host(&cp, &p, &t, Some(seed));
+            assert!(max_abs_err(&a, &b) < 1e-5);
+        }
+    }
+}

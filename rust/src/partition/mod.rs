@@ -18,6 +18,7 @@
 //! [`host_exec`] runs any plan on real numbers with the Rust oracle — the
 //! numerical witness that every legal plan computes exact attention.
 
+pub mod cascade;
 pub mod host_exec;
 pub mod lean_tile;
 pub mod plan;
@@ -25,6 +26,7 @@ pub mod stream_k;
 pub mod tensor_parallel;
 pub mod workspec;
 
+pub use cascade::{build_cascade_plan, CascadePlan, CascadeProblem, PrefixGroup};
 pub use lean_tile::lean_tile_for;
 pub use plan::{CtaWork, DecodeProblem, Plan, Segment, Strategy};
 

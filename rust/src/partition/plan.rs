@@ -105,6 +105,13 @@ pub enum Strategy {
     PagedFixedSplit { splits: usize, page: usize },
     /// LeanAttention stream-K: equalized tile split over a fixed grid.
     StreamK,
+    /// Shared-prefix cascade: stream-K over a *segment problem* whose
+    /// groups are shared prefix streams (one KV walk serving every member
+    /// query) plus per-sequence suffixes — see [`super::cascade`]. On a
+    /// plain [`DecodeProblem`] (no prefix structure) this degenerates to
+    /// stream-K; real cascade plans come from
+    /// [`super::cascade::build_cascade_plan`].
+    Cascade,
 }
 
 impl Strategy {
@@ -120,6 +127,7 @@ impl Strategy {
             Strategy::FixedSplit { .. } => "flashdecoding",
             Strategy::PagedFixedSplit { .. } => "flashinfer",
             Strategy::StreamK => "leanattention",
+            Strategy::Cascade => "cascade",
         }
     }
 }
@@ -273,6 +281,14 @@ pub fn build_plan(problem: &DecodeProblem, strategy: Strategy, sm_slots: usize) 
             fixed_split_plan(problem, splits, strategy)
         }
         Strategy::StreamK => super::stream_k::stream_k_plan(problem, sm_slots),
+        Strategy::Cascade => {
+            // Prefix structure is not expressible on a bare DecodeProblem;
+            // build_cascade_plan owns the real path. Keep the strategy tag
+            // so simulators report the mechanism they were asked for.
+            let mut plan = super::stream_k::stream_k_plan(problem, sm_slots);
+            plan.strategy = Strategy::Cascade;
+            plan
+        }
     }
 }
 

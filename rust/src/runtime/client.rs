@@ -9,6 +9,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use super::tensor::HostTensor;
+use super::xla_shim as xla;
 
 /// A PJRT device connection (CPU in this environment).
 pub struct Runtime {

@@ -17,6 +17,7 @@ pub mod client;
 pub mod model_exec;
 pub mod tensor;
 pub mod weights;
+pub mod xla_shim;
 
 pub use artifacts::Manifest;
 pub use attention_exec::AttentionExecutor;

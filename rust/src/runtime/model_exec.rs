@@ -12,6 +12,7 @@ use super::artifacts::{Manifest, ModelArtifact};
 use super::client::{Executable, Runtime};
 use super::tensor::HostTensor;
 use super::weights::load_weights;
+use super::xla_shim as xla;
 
 /// Output of one decode step.
 pub struct DecodeOut {

@@ -2,6 +2,8 @@
 
 use anyhow::{bail, Context, Result};
 
+use super::xla_shim as xla;
+
 /// Element storage for a host tensor (the two dtypes the artifacts use).
 #[derive(Clone, Debug, PartialEq)]
 pub enum TensorData {

@@ -1,0 +1,248 @@
+//! Host-side stand-in for the `xla-rs` PJRT bindings.
+//!
+//! The offline crate cache has no `xla` crate (it needs the native
+//! `xla_extension` toolchain), so the runtime modules import this shim as
+//! `xla` instead (`use super::xla_shim as xla`). The shim keeps the exact
+//! API surface the runtime uses:
+//!
+//! * **Literals are fully functional** — they are plain host containers,
+//!   so every tensor⇄literal conversion path (and its tests) runs for
+//!   real.
+//! * **Compilation/execution is unavailable** — `from_text_file`,
+//!   `compile` and `execute` return a clear error. Callers never reach
+//!   them without AOT artifacts on disk, and every artifact-dependent
+//!   test self-skips when `artifacts/manifest.json` is absent.
+//!
+//! Swapping the real bindings back in is a one-line change per importer.
+
+use std::path::Path;
+
+/// Error type for shim operations (carried into `anyhow` by callers).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the PJRT runtime (the `xla` crate is not in the \
+         offline cargo cache; this build uses the host shim)"
+    ))
+}
+
+/// Element types the artifacts use (subset of XLA's primitive types).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S32,
+    S64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+    Tuple,
+}
+
+/// Literal payload storage (public only because the [`Element`] trait
+/// names it; not part of the intended API surface).
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+}
+
+/// A host literal: dims + typed flat data (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+/// Dense array shape of a literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: PrimitiveType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty
+    }
+}
+
+/// Elements storable in a [`Literal`].
+pub trait Element: Copy {
+    fn store(data: &[Self]) -> Data;
+    fn extract(lit: &Literal) -> Result<Vec<Self>, Error>;
+}
+
+impl Element for f32 {
+    fn store(data: &[Self]) -> Data {
+        Data::F32(data.to_vec())
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>, Error> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            Data::S32(_) => Err(Error("literal holds s32, expected f32".into())),
+        }
+    }
+}
+
+impl Element for i32 {
+    fn store(data: &[Self]) -> Data {
+        Data::S32(data.to_vec())
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>, Error> {
+        match &lit.data {
+            Data::S32(v) => Ok(v.clone()),
+            Data::F32(_) => Err(Error("literal holds f32, expected s32".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1<T: Element>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::store(data) }
+    }
+
+    /// Reinterpret the flat data under new dims (element count must match).
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal, Error> {
+        let have = match &self.data {
+            Data::F32(v) => v.len(),
+            Data::S32(v) => v.len(),
+        };
+        let want: i64 = dims.iter().product();
+        if want as usize != have {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({want} elems) from {have} elems"
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        let ty = match &self.data {
+            Data::F32(_) => PrimitiveType::F32,
+            Data::S32(_) => PrimitiveType::S32,
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, Error> {
+        T::extract(self)
+    }
+
+    /// Decompose a tuple literal. The shim never produces tuples (they
+    /// only come back from executions, which the shim cannot run).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("tuple literal decomposition"))
+    }
+}
+
+/// PJRT client stand-in: the host *is* the device, so construction and
+/// inventory work; compilation does not.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("compiling an XLA computation"))
+    }
+}
+
+/// Parsed HLO module stand-in.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        Err(unavailable(&format!(
+            "parsing HLO text {}",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// XLA computation stand-in.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer stand-in (never constructed by the shim).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("fetching a device buffer"))
+    }
+}
+
+/// Loaded executable stand-in (never constructed by the shim).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("executing a compiled computation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_round_trip_on_host() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0])
+            .reshape(&[2, 2])
+            .unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.primitive_type(), PrimitiveType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        assert!(Literal::vec1(&[1i32, 2, 3]).reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn execution_paths_error_clearly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu");
+        assert!(client.device_count() >= 1);
+        let err = HloModuleProto::from_text_file("x.hlo").err().unwrap();
+        assert!(err.to_string().contains("PJRT"));
+        assert!(PjRtLoadedExecutable.execute::<&Literal>(&[]).is_err());
+    }
+}

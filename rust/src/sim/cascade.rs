@@ -1,0 +1,248 @@
+//! Cascade (shared-prefix) schedule simulation.
+//!
+//! Extends the discrete CTA model of [`super::schedule`] to cascade
+//! plans: a shared-prefix segment's LeanTiles stream the same K/V bytes
+//! as any other tile but serve every member query at once, so the modeled
+//! HBM traffic of a batch with a common prefix drops by
+//! `(members - 1) × prefix_tiles` tile-streams per head — the bandwidth
+//! win `leanattn simulate --shared-prefix` and `benches/cascade.rs`
+//! quantify. Reduction follows stream-K (host CTA folds peer partials
+//! in-kernel), plus one final rescale per output row that merges its
+//! shared-prefix partial with its suffix partial.
+
+use crate::partition::cascade::{build_cascade_plan, CascadeProblem, SegKind};
+use crate::partition::plan::Strategy;
+
+use super::arch::GpuArch;
+use super::cost::{kv_stream_bytes, TileCost};
+use super::schedule::list_schedule;
+
+/// Simulation outcome for a cascade problem, with the flat stream-K
+/// baseline's traffic for comparison.
+#[derive(Clone, Debug)]
+pub struct CascadeSimResult {
+    pub latency_us: f64,
+    /// Busy-slot time over makespan × slots.
+    pub occupancy: f64,
+    pub grid: usize,
+    /// Time attributable to reductions and the final per-output merges.
+    pub reduce_us: f64,
+    /// Modeled HBM bytes the cascade plan streams (shared prefix counted
+    /// once per group).
+    pub kv_bytes: f64,
+    /// Modeled HBM bytes the flat plan streams (prefix re-streamed per
+    /// member sequence).
+    pub baseline_kv_bytes: f64,
+}
+
+impl CascadeSimResult {
+    /// Fraction of baseline KV traffic the cascade plan avoids.
+    pub fn bytes_saved_fraction(&self) -> f64 {
+        if self.baseline_kv_bytes <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.kv_bytes / self.baseline_kv_bytes
+    }
+}
+
+/// Modeled KV bytes of a cascade problem (shared tiles counted once).
+pub fn cascade_kv_bytes(problem: &CascadeProblem) -> f64 {
+    kv_stream_bytes(
+        problem.segment_problem().total_tiles(),
+        problem.tile,
+        problem.head_dim,
+    )
+}
+
+/// Modeled KV bytes of the flat (no sharing) plan for the same batch.
+pub fn baseline_kv_bytes(problem: &CascadeProblem) -> f64 {
+    kv_stream_bytes(
+        problem.baseline_problem().total_tiles(),
+        problem.tile,
+        problem.head_dim,
+    )
+}
+
+/// Plan + simulate a cascade problem on `arch`.
+pub fn simulate_cascade(problem: &CascadeProblem, arch: &GpuArch) -> CascadeSimResult {
+    let slots = arch.sm_slots();
+    let cplan = build_cascade_plan(problem, slots);
+    let plan = &cplan.plan;
+
+    // Per-CTA compute durations: a segment's per-tile cost depends on how
+    // many query rows its group's KV stream serves.
+    let durations: Vec<f64> = plan
+        .ctas
+        .iter()
+        .map(|cta| {
+            cta.segments
+                .iter()
+                .map(|seg| {
+                    let cost = TileCost::with_queries(
+                        arch,
+                        plan.tile,
+                        problem.head_dim,
+                        Strategy::Cascade,
+                        problem.queries_of(seg.group as usize),
+                    );
+                    let mut t = cost.segment_setup_us
+                        + seg.tile_count as f64 * cost.tile_us;
+                    if !(seg.is_host && seg.is_finishing) {
+                        t += arch.partial_store_us;
+                    }
+                    t
+                })
+                .sum()
+        })
+        .collect();
+
+    let busy_compute: f64 = durations.iter().sum();
+    let (finish, compute_makespan) = list_schedule(&durations, slots);
+
+    // Stream-K in-kernel reduction over segment-problem groups.
+    let groups = plan.groups;
+    let mut host_of: Vec<Option<usize>> = vec![None; groups];
+    let mut peers_of: Vec<Vec<usize>> = vec![Vec::new(); groups];
+    for (ci, cta) in plan.ctas.iter().enumerate() {
+        for seg in &cta.segments {
+            if seg.is_host {
+                host_of[seg.group as usize] = Some(ci);
+            } else {
+                peers_of[seg.group as usize].push(ci);
+            }
+        }
+    }
+    let mut busy_reduce = 0.0f64;
+    let mut total = compute_makespan;
+    let mut reduce_us = 0.0f64;
+    for g in 0..groups {
+        let Some(h) = host_of[g] else { continue };
+        if peers_of[g].is_empty() {
+            continue;
+        }
+        let peers_done = peers_of[g]
+            .iter()
+            .map(|&p| finish[p])
+            .fold(0.0f64, f64::max);
+        // A shared group's host folds each peer partial once per member
+        // row (the fold is vectorized over rows but still moves them).
+        let rows = problem.queries_of(g) as f64;
+        let fold = peers_of[g].len() as f64 * arch.reduce_per_partial_us * rows;
+        let done = finish[h].max(peers_done) + fold;
+        busy_reduce += fold;
+        if done > total {
+            reduce_us = reduce_us.max(done - compute_makespan);
+            total = total.max(done);
+        }
+    }
+
+    // Final cascade merge: every output row with both a shared-prefix
+    // contribution and a non-empty suffix folds the two partials once.
+    let mut merges = 0usize;
+    for g in 0..groups {
+        if let SegKind::Shared { pg, head: _ } = problem.seg_kind(g) {
+            for &m in &problem.prefix_groups[pg].members {
+                if problem.ctx_lens[m as usize] > problem.prefix_of(m as usize) {
+                    merges += 1;
+                }
+            }
+        }
+    }
+    let merge_work = merges as f64 * arch.reduce_per_partial_us;
+    let merge_us = merge_work / slots.min(merges.max(1)) as f64;
+    busy_reduce += merge_work;
+    reduce_us += merge_us;
+    let latency_compute = total + merge_us;
+
+    let latency_us = latency_compute + arch.kernel_launch_us;
+    let busy = busy_compute + busy_reduce;
+    let denom = latency_compute.max(1e-12) * slots as f64;
+
+    CascadeSimResult {
+        latency_us,
+        occupancy: (busy / denom).min(1.0),
+        grid: plan.grid(),
+        reduce_us,
+        kv_bytes: cascade_kv_bytes(problem),
+        baseline_kv_bytes: baseline_kv_bytes(problem),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::cascade::PrefixGroup;
+    use crate::partition::plan::{DecodeProblem, Strategy};
+    use crate::sim::schedule::simulate;
+
+    fn shared_batch(batch: usize, prefix: u32, suffix: u32) -> CascadeProblem {
+        CascadeProblem::new(
+            8,
+            vec![prefix + suffix; batch],
+            64,
+            vec![PrefixGroup {
+                prefix_len: prefix,
+                members: (0..batch as u32).collect(),
+            }],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shared_prefix_streams_strictly_fewer_bytes() {
+        for batch in [2usize, 4, 8, 16] {
+            let p = shared_batch(batch, 65536, 1024);
+            let r = simulate_cascade(&p, &GpuArch::a100());
+            assert!(
+                r.kv_bytes < r.baseline_kv_bytes,
+                "batch {batch}: cascade {} >= baseline {}",
+                r.kv_bytes,
+                r.baseline_kv_bytes
+            );
+            // Savings grow with the number of sequences sharing the prefix.
+            let expect = 1.0 - (1.0 / batch as f64);
+            assert!(
+                (r.bytes_saved_fraction() - expect).abs() < 0.05,
+                "batch {batch}: saved {:.3}, expected ~{expect:.3}",
+                r.bytes_saved_fraction()
+            );
+        }
+    }
+
+    #[test]
+    fn cascade_latency_beats_flat_stream_k_on_shared_batches() {
+        let p = shared_batch(8, 65536, 1024);
+        let arch = GpuArch::a100();
+        let cascade = simulate_cascade(&p, &arch);
+        let flat = simulate(&p.baseline_problem(), Strategy::StreamK, &arch);
+        assert!(
+            cascade.latency_us < flat.latency_us,
+            "cascade {} vs flat {}",
+            cascade.latency_us,
+            flat.latency_us
+        );
+    }
+
+    #[test]
+    fn no_sharing_degenerates_to_stream_k() {
+        let p = CascadeProblem::new(8, vec![4096; 4], 64, vec![]).unwrap();
+        let r = simulate_cascade(&p, &GpuArch::a100());
+        assert!((r.kv_bytes - r.baseline_kv_bytes).abs() < 1e-6);
+        let flat = simulate(
+            &DecodeProblem::uniform(4, 8, 4096, 64),
+            Strategy::StreamK,
+            &GpuArch::a100(),
+        );
+        // Same tile space, same scheduler: latencies agree closely.
+        let ratio = r.latency_us / flat.latency_us;
+        assert!((0.9..1.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn occupancy_stays_high() {
+        let p = shared_batch(4, 131_072, 2048);
+        let r = simulate_cascade(&p, &GpuArch::a100());
+        assert!(r.occupancy > 0.85, "occupancy {}", r.occupancy);
+        assert!(r.grid <= GpuArch::a100().sm_slots());
+    }
+}

@@ -25,7 +25,23 @@ pub const KV_BYTES: f64 = 2.0;
 impl TileCost {
     /// Cost of a LeanTile of `tile` tokens × `head_dim` for `strategy`.
     pub fn new(arch: &GpuArch, tile: usize, head_dim: usize, strategy: Strategy) -> Self {
-        // K + V streamed once per iteration.
+        Self::with_queries(arch, tile, head_dim, strategy, 1)
+    }
+
+    /// Like [`TileCost::new`], but the tile's K/V stream serves `queries`
+    /// query rows at once (a cascade shared-prefix segment). Memory
+    /// traffic is unchanged — that is the whole point of sharing — but
+    /// the compute floor scales with the query count (the GEMV has become
+    /// a skinny GEMM), so very wide groups eventually go compute-bound.
+    pub fn with_queries(
+        arch: &GpuArch,
+        tile: usize,
+        head_dim: usize,
+        strategy: Strategy,
+        queries: usize,
+    ) -> Self {
+        assert!(queries >= 1);
+        // K + V streamed once per iteration, shared by all query rows.
         let bytes = 2.0 * tile as f64 * head_dim as f64 * KV_BYTES;
         let gather = match strategy {
             Strategy::PagedFixedSplit { .. } => arch.paged_gather_penalty,
@@ -33,8 +49,9 @@ impl TileCost {
         };
         // slot_bw is GB/s == bytes/ns; convert to us.
         let mem_us = bytes * gather / (arch.slot_bw_gbs() * 1e3);
-        // Compute floor: 4 * tile * d FLOPs per tile at ~1/slots of peak.
-        let flops = 4.0 * tile as f64 * head_dim as f64;
+        // Compute floor: 4 * tile * d FLOPs per tile *per query row* at
+        // ~1/slots of peak.
+        let flops = 4.0 * tile as f64 * head_dim as f64 * queries as f64;
         let slot_flops_per_us =
             arch.peak_tflops * 1e6 / arch.sm_slots() as f64;
         let mxu_us = flops / slot_flops_per_us;
@@ -43,6 +60,11 @@ impl TileCost {
             segment_setup_us: 0.15,
         }
     }
+}
+
+/// Modeled HBM bytes to stream `tiles` LeanTiles of K+V once.
+pub fn kv_stream_bytes(tiles: u64, tile: usize, head_dim: usize) -> f64 {
+    tiles as f64 * 2.0 * tile as f64 * head_dim as f64 * KV_BYTES
 }
 
 #[cfg(test)]
@@ -76,6 +98,25 @@ mod tests {
             Strategy::PagedFixedSplit { splits: 4, page: 16 },
         );
         assert!(paged.tile_us > plain.tile_us);
+    }
+
+    #[test]
+    fn shared_queries_keep_bytes_but_raise_compute_floor() {
+        let arch = GpuArch::a100();
+        let one = TileCost::new(&arch, 256, 64, Strategy::Cascade);
+        let few = TileCost::with_queries(&arch, 256, 64, Strategy::Cascade, 8);
+        // A handful of shared queries rides free on the same KV stream.
+        assert_eq!(one.tile_us, few.tile_us, "memory-bound: same tile cost");
+        // Enough queries and the tile goes compute-bound.
+        let many = TileCost::with_queries(&arch, 256, 64, Strategy::Cascade, 100_000);
+        assert!(many.tile_us > one.tile_us);
+    }
+
+    #[test]
+    fn kv_stream_bytes_counts_k_and_v_once() {
+        // 1 tile of 256 x 64 fp16: 2 tensors * 256 * 64 * 2 bytes = 64 KiB.
+        assert_eq!(kv_stream_bytes(1, 256, 64), 65536.0);
+        assert_eq!(kv_stream_bytes(10, 256, 64), 655360.0);
     }
 
     #[test]

@@ -10,10 +10,12 @@
 //! factor, where the crossovers sit — are the reproduction target.
 
 pub mod arch;
+pub mod cascade;
 pub mod cost;
 pub mod schedule;
 pub mod timeshare;
 
 pub use arch::GpuArch;
+pub use cascade::{simulate_cascade, CascadeSimResult};
 pub use cost::TileCost;
 pub use schedule::{simulate, simulate_plan, SimResult};

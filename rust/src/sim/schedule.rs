@@ -61,7 +61,7 @@ fn effective_slots(strategy: Strategy, arch: &GpuArch) -> usize {
 
 /// Greedy list scheduling of `durations` onto `slots` identical slots in
 /// index order. Returns per-CTA finish times and the makespan.
-fn list_schedule(durations: &[f64], slots: usize) -> (Vec<f64>, f64) {
+pub(crate) fn list_schedule(durations: &[f64], slots: usize) -> (Vec<f64>, f64) {
     assert!(slots > 0);
     let mut slot_free = vec![0.0f64; slots.min(durations.len()).max(1)];
     let mut finish = Vec::with_capacity(durations.len());
@@ -131,7 +131,7 @@ pub fn simulate_plan(plan: &Plan, problem: &DecodeProblem, arch: &GpuArch) -> Si
 
     let latency_compute = match strategy {
         Strategy::Dense => compute_makespan,
-        Strategy::StreamK => {
+        Strategy::StreamK | Strategy::Cascade => {
             // In-kernel reduction: host completes when its own compute and
             // every peer partial are done, plus the fold cost.
             let mut total = compute_makespan;

@@ -9,6 +9,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub max: f64,
 }
@@ -29,6 +30,7 @@ impl Summary {
             min: sorted[0],
             p50: percentile_sorted(&sorted, 0.50),
             p90: percentile_sorted(&sorted, 0.90),
+            p95: percentile_sorted(&sorted, 0.95),
             p99: percentile_sorted(&sorted, 0.99),
             max: sorted[n - 1],
         }
@@ -77,6 +79,14 @@ mod tests {
         assert_eq!(percentile_sorted(&sorted, 0.9), 90.0);
         assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
         assert_eq!(percentile_sorted(&sorted, 1.0), 100.0);
+    }
+
+    #[test]
+    fn p95_between_p90_and_p99() {
+        let samples: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&samples);
+        assert_eq!(s.p95, 95.0);
+        assert!(s.p90 <= s.p95 && s.p95 <= s.p99);
     }
 
     #[test]

@@ -1,0 +1,213 @@
+//! Cascade (shared-prefix) attention correctness and traffic accounting.
+//!
+//! The load-bearing claims:
+//!
+//! 1. **Exactness** — for any batch with shared-prefix structure (mixed
+//!    freely with solo sequences), computing each shared prefix's
+//!    partials from a single KV walk and merging them with per-sequence
+//!    suffix partials through the §IV-A rescale operator equals plain
+//!    exact attention over the composed per-sequence contexts, for every
+//!    legal stream-K segment plan and any reduction order.
+//! 2. **Traffic** — the cascade segment plan streams strictly fewer
+//!    modeled KV bytes than the flat plan whenever ≥ 2 sequences share
+//!    at least one LeanTile of prefix.
+
+use lean_attention::attention::attention_host;
+use lean_attention::partition::cascade::{
+    build_cascade_plan, execute_cascade_host, CascadeProblem, CascadeTensors,
+    PrefixGroup,
+};
+use lean_attention::sim::cascade::simulate_cascade;
+use lean_attention::sim::GpuArch;
+use lean_attention::util::rng::Rng;
+use lean_attention::util::testing::{max_abs_err, prop_check};
+
+/// Exact attention over the composed (prefix + suffix) per-sequence KV.
+fn reference(p: &CascadeProblem, t: &CascadeTensors) -> Vec<f32> {
+    let (k, v, n_max) = t.full_kv(p);
+    let lens: Vec<u32> = (0..p.outputs())
+        .map(|g| p.ctx_lens[g / p.heads])
+        .collect();
+    attention_host(&t.q, &k, &v, p.outputs(), n_max, p.head_dim, &lens)
+}
+
+/// Random cascade problem: ragged contexts, zero to two disjoint prefix
+/// groups (group sizes 1..batch allowed — singletons must also be exact).
+fn random_problem(rng: &mut Rng) -> CascadeProblem {
+    let batch = rng.urange(2, 7);
+    let heads = rng.urange(1, 4);
+    let d = *rng.choose(&[16usize, 32]);
+    let ctx_lens: Vec<u32> = (0..batch).map(|_| rng.range(1, 400) as u32).collect();
+
+    // Partition a shuffled batch into up to two candidate groups.
+    let mut order: Vec<u32> = (0..batch as u32).collect();
+    for i in (1..order.len()).rev() {
+        let j = rng.urange(0, i + 1);
+        order.swap(i, j);
+    }
+    let mut groups = Vec::new();
+    let n_groups = rng.urange(0, 3);
+    let mut cursor = 0usize;
+    for _ in 0..n_groups {
+        if cursor >= order.len() {
+            break;
+        }
+        let take = rng.urange(1, order.len() - cursor + 1);
+        let members: Vec<u32> = order[cursor..cursor + take].to_vec();
+        cursor += take;
+        let min_ctx = members
+            .iter()
+            .map(|&m| ctx_lens[m as usize])
+            .min()
+            .unwrap();
+        let prefix_len = rng.range(1, u64::from(min_ctx) + 1) as u32;
+        groups.push(PrefixGroup { prefix_len, members });
+    }
+
+    CascadeProblem::new(heads, ctx_lens, d, groups)
+        .expect("generator builds valid problems")
+        .with_tile(*rng.choose(&[16usize, 32, 64]))
+}
+
+#[test]
+fn cascade_equals_reference_on_random_problems() {
+    prop_check("cascade host exec == direct attention", 60, |rng| {
+        let p = random_problem(rng);
+        let t = CascadeTensors::random(&p, rng.next_u64());
+        let want = reference(&p, &t);
+        let slots = rng.urange(1, 64);
+        let cp = build_cascade_plan(&p, slots);
+        cp.plan
+            .validate(&cp.segment_problem)
+            .map_err(|e| e.to_string())?;
+        let got = execute_cascade_host(&cp, &p, &t, Some(rng.next_u64()));
+        let err = max_abs_err(&got, &want);
+        if err > 5e-4 {
+            return Err(format!(
+                "err {err} (batch {}, groups {:?})",
+                p.batch(),
+                p.prefix_groups
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mixed_shared_and_solo_batch_is_exact() {
+    // Two sequences share a prefix, one is solo, one shares nothing but
+    // has the *same length* as the group prefix (an aliasing trap).
+    let p = CascadeProblem::new(
+        2,
+        vec![200, 150, 96, 80],
+        16,
+        vec![PrefixGroup { prefix_len: 96, members: vec![0, 1] }],
+    )
+    .unwrap()
+    .with_tile(32);
+    let t = CascadeTensors::random(&p, 42);
+    let want = reference(&p, &t);
+    for slots in [1usize, 5, 17, 216] {
+        let cp = build_cascade_plan(&p, slots);
+        cp.plan.validate(&cp.segment_problem).unwrap();
+        let got = execute_cascade_host(&cp, &p, &t, None);
+        let err = max_abs_err(&got, &want);
+        assert!(err < 1e-4, "slots {slots}: err {err}");
+    }
+}
+
+#[test]
+fn member_with_empty_suffix_is_exact() {
+    // One member's context *is* the shared prefix (suffix length 0): its
+    // output must come entirely from the shared segment partials.
+    let p = CascadeProblem::new(
+        3,
+        vec![64, 100],
+        16,
+        vec![PrefixGroup { prefix_len: 64, members: vec![0, 1] }],
+    )
+    .unwrap()
+    .with_tile(16);
+    let t = CascadeTensors::random(&p, 7);
+    let want = reference(&p, &t);
+    let cp = build_cascade_plan(&p, 12);
+    let got = execute_cascade_host(&cp, &p, &t, Some(3));
+    assert!(max_abs_err(&got, &want) < 1e-4);
+}
+
+#[test]
+fn unaligned_prefix_boundaries_stay_exact() {
+    // Prefix cuts that straddle LeanTile boundaries exercise the
+    // associativity of the merge, not just tile-aligned splits.
+    for prefix in [1u32, 17, 33, 250] {
+        let p = CascadeProblem::new(
+            1,
+            vec![300, 260],
+            16,
+            vec![PrefixGroup { prefix_len: prefix, members: vec![0, 1] }],
+        )
+        .unwrap()
+        .with_tile(32);
+        let t = CascadeTensors::random(&p, u64::from(prefix));
+        let want = reference(&p, &t);
+        let cp = build_cascade_plan(&p, 7);
+        let got = execute_cascade_host(&cp, &p, &t, None);
+        assert!(
+            max_abs_err(&got, &want) < 1e-4,
+            "prefix {prefix} mismatch"
+        );
+    }
+}
+
+#[test]
+fn shared_prefix_streams_strictly_fewer_bytes_than_flat() {
+    let arch = GpuArch::a100();
+    for batch in [2usize, 3, 8] {
+        let p = CascadeProblem::new(
+            8,
+            vec![32_768; batch],
+            64,
+            vec![PrefixGroup {
+                prefix_len: 16_384,
+                members: (0..batch as u32).collect(),
+            }],
+        )
+        .unwrap();
+        let r = simulate_cascade(&p, &arch);
+        assert!(
+            r.kv_bytes < r.baseline_kv_bytes,
+            "batch {batch}: {} vs {}",
+            r.kv_bytes,
+            r.baseline_kv_bytes
+        );
+        assert!(r.bytes_saved_fraction() > 0.0);
+    }
+
+    // Solo batch (batch 1 group pruned by tile alignment): no saving,
+    // and tile_aligned() reports that by dropping the group.
+    let solo = CascadeProblem::new(
+        8,
+        vec![32_768],
+        64,
+        vec![PrefixGroup { prefix_len: 16_384, members: vec![0] }],
+    )
+    .unwrap()
+    .tile_aligned();
+    assert!(solo.prefix_groups.is_empty());
+}
+
+#[test]
+fn tile_aligned_cascade_never_exceeds_flat_traffic() {
+    prop_check("aligned cascade bytes <= flat bytes", 100, |rng| {
+        let p = random_problem(rng).tile_aligned();
+        let cascade = p.segment_problem().total_tiles();
+        let flat = p.baseline_problem().total_tiles();
+        if cascade > flat {
+            return Err(format!(
+                "cascade {cascade} > flat {flat} for groups {:?}",
+                p.prefix_groups
+            ));
+        }
+        Ok(())
+    });
+}

@@ -157,6 +157,7 @@ fn cache_pressure_queues_and_recovers() {
             cache_pages: 4, // 4 pages x 16 tokens = 64 tokens of KV budget
             page_tokens: 16,
             project_hardware: false,
+            ..EngineConfig::default()
         },
     )
     .expect("engine");
@@ -187,6 +188,7 @@ fn oversubscribed_generation_budget_respects_cache() {
             cache_pages: 64,
             page_tokens: 16,
             project_hardware: false,
+            ..EngineConfig::default()
         },
     )
     .expect("engine");
@@ -196,6 +198,65 @@ fn oversubscribed_generation_budget_respects_cache() {
     assert_eq!(fin.len(), 1);
     assert_eq!(fin[0].reason, FinishReason::ContextFull);
     assert_eq!(e.active(), 0);
+}
+
+#[test]
+fn shared_prefix_prompts_hit_the_radix_cache() {
+    let Some((rt, m)) = setup() else { return };
+    let mut e = engine(&rt, &m);
+    if e.prefill_bucket() < 16 + 2 {
+        eprintln!("skipping: prefill bucket too small for a full shared page");
+        return;
+    }
+    // One full page (16 tokens) of shared system prompt + distinct tails.
+    let system: Vec<i32> = (0..16).map(|t| (t * 7 + 3) % 512).collect();
+    let pages_before = e.prefix_index_pages();
+    // First request registers the system prompt's page in the index.
+    let mut first = system.clone();
+    first.extend([100, 200]);
+    e.submit(first, 3).unwrap();
+    let fin = e.run_until_idle().expect("run");
+    assert_eq!(fin.len(), 1);
+    assert_eq!(e.metrics.prefix.hits, 0, "cold start cannot hit");
+    // Later requests sharing the prefix must hit it.
+    for tail in 1..3i32 {
+        let mut prompt = system.clone();
+        prompt.extend([100 + tail, 200 + tail]);
+        e.submit(prompt, 3).unwrap();
+    }
+    let fin = e.run_until_idle().expect("run");
+    assert_eq!(fin.len(), 2);
+    assert!(e.metrics.prefix.lookups >= 3);
+    assert_eq!(
+        e.metrics.prefix.hits, 2,
+        "both warm prompts hit: {:?}",
+        e.metrics.prefix
+    );
+    assert!(e.metrics.prefix.hit_rate() > 0.0);
+    assert!(e.metrics.prefix.kv_bytes_deduped > 0);
+    assert!(e.prefix_index_pages() > pages_before);
+    // All request-held pages were returned; only index pages remain.
+    assert_eq!(e.active(), 0);
+    let rep = e.metrics.report();
+    assert!(rep.contains("prefix cache"), "{rep}");
+}
+
+#[test]
+fn prefix_cache_disabled_takes_the_plain_path() {
+    let Some((rt, m)) = setup() else { return };
+    let mut e = Engine::new(
+        &rt,
+        &m,
+        EngineConfig { enable_prefix_cache: false, ..EngineConfig::default() },
+    )
+    .expect("engine");
+    let prompt: Vec<i32> = (0..20).map(|t| t % 512).collect();
+    e.submit(prompt.clone(), 2).unwrap();
+    e.submit(prompt, 2).unwrap();
+    let fin = e.run_until_idle().expect("run");
+    assert_eq!(fin.len(), 2);
+    assert_eq!(e.metrics.prefix.lookups, 0);
+    assert_eq!(e.prefix_index_pages(), 0);
 }
 
 #[test]

@@ -1,0 +1,236 @@
+//! Property tests for [`PagedKvCache`] page accounting: across random
+//! workloads of inserts, shared-prefix inserts, appends (with
+//! copy-on-write), external retains (the radix index), releases and
+//! frees, the cache must (a) never leak a page, (b) never double-free,
+//! (c) keep every holder's refcount exact, and (d) return a page to the
+//! free list exactly when its last reference drops.
+
+use std::collections::HashMap;
+
+use lean_attention::coordinator::PagedKvCache;
+use lean_attention::util::rng::Rng;
+use lean_attention::util::testing::prop_check;
+
+const LAYERS: usize = 1;
+const HEADS: usize = 2;
+const DH: usize = 4;
+const PAGE_TOKENS: usize = 4;
+const PAGES: usize = 24;
+
+fn new_cache() -> PagedKvCache {
+    PagedKvCache::new(LAYERS, HEADS, DH, PAGE_TOKENS, PAGES)
+}
+
+fn kv(rng: &mut Rng, tokens: usize) -> (Vec<f32>, Vec<f32>) {
+    let n = LAYERS * HEADS * tokens * DH;
+    (rng.normal_vec(n), rng.normal_vec(n))
+}
+
+/// Shadow refcount model: every active sequence holds one reference per
+/// page in its page list; every tracked external retain holds one more.
+fn expected_refs(
+    cache: &PagedKvCache,
+    active: &[u64],
+    retains: &[usize],
+) -> HashMap<usize, u32> {
+    let mut refs: HashMap<usize, u32> = HashMap::new();
+    for &id in active {
+        for &p in cache.seq_pages(id).unwrap() {
+            *refs.entry(p).or_insert(0) += 1;
+        }
+    }
+    for &p in retains {
+        *refs.entry(p).or_insert(0) += 1;
+    }
+    refs
+}
+
+fn check_invariants(
+    cache: &PagedKvCache,
+    active: &[u64],
+    retains: &[usize],
+) -> Result<(), String> {
+    let refs = expected_refs(cache, active, retains);
+    for p in 0..PAGES {
+        let want = refs.get(&p).copied().unwrap_or(0);
+        let got = cache.page_ref(p);
+        if got != want {
+            return Err(format!("page {p}: refcount {got}, shadow says {want}"));
+        }
+    }
+    let live = refs.values().filter(|&&r| r > 0).count();
+    if cache.used_pages() != live {
+        return Err(format!(
+            "used {} but {live} pages have holders (leak or phantom)",
+            cache.used_pages()
+        ));
+    }
+    if cache.free_pages() + cache.used_pages() != PAGES {
+        return Err("free + used != total".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn random_workload_never_leaks_or_double_frees() {
+    prop_check("kv cache refcount invariants", 40, |rng| {
+        let mut cache = new_cache();
+        let mut active: Vec<u64> = Vec::new();
+        let mut retains: Vec<usize> = Vec::new();
+        let mut next_id = 0u64;
+
+        for _ in 0..120 {
+            match rng.urange(0, 6) {
+                // Plain insert.
+                0 => {
+                    let len = rng.urange(1, 3 * PAGE_TOKENS + 2);
+                    let (k, v) = kv(rng, len);
+                    let id = next_id;
+                    next_id += 1;
+                    if cache.insert_seq(id, &k, &v, len).is_ok() {
+                        active.push(id);
+                    }
+                }
+                // Shared-prefix insert: share an existing sequence's full
+                // pages (only fully-occupied ones are shareable).
+                1 if !active.is_empty() => {
+                    let donor = *rng.choose(&active);
+                    let donor_len = cache.seq_len(donor).unwrap();
+                    let full = donor_len / PAGE_TOKENS;
+                    if full == 0 {
+                        continue;
+                    }
+                    let take = rng.urange(1, full + 1);
+                    let shared: Vec<usize> =
+                        cache.seq_pages(donor).unwrap()[..take].to_vec();
+                    let suffix = rng.urange(0, PAGE_TOKENS + 3);
+                    if shared.is_empty() && suffix == 0 {
+                        continue;
+                    }
+                    let (k, v) = kv(rng, suffix);
+                    let id = next_id;
+                    next_id += 1;
+                    if cache
+                        .insert_seq_shared(id, &shared, &k, &v, suffix)
+                        .is_ok()
+                    {
+                        active.push(id);
+                    }
+                }
+                // Append (may copy-on-write if the tail page is shared).
+                2 if !active.is_empty() => {
+                    let id = *rng.choose(&active);
+                    let (k, v) = kv(rng, 1);
+                    let _ = cache.append_token(id, &k, &v);
+                }
+                // Free a sequence.
+                3 if !active.is_empty() => {
+                    let i = rng.urange(0, active.len());
+                    let id = active.swap_remove(i);
+                    cache.free_seq(id);
+                }
+                // External retain (radix-index style) on a live page.
+                4 if !active.is_empty() => {
+                    let id = *rng.choose(&active);
+                    let pages = cache.seq_pages(id).unwrap();
+                    let p = pages[rng.urange(0, pages.len())];
+                    cache.retain_page(p).map_err(|e| e.to_string())?;
+                    retains.push(p);
+                }
+                // Release one external retain ("eviction at refcount 1"
+                // is the caller's policy; releasing is legal at any
+                // refcount >= 1 and frees only at 0).
+                5 if !retains.is_empty() => {
+                    let i = rng.urange(0, retains.len());
+                    let p = retains.swap_remove(i);
+                    cache.release_page(p).map_err(|e| e.to_string())?;
+                }
+                _ => {}
+            }
+            check_invariants(&cache, &active, &retains)?;
+        }
+
+        // Drain everything: no page may leak.
+        for id in active.drain(..) {
+            cache.free_seq(id);
+        }
+        for p in retains.drain(..) {
+            cache.release_page(p).map_err(|e| e.to_string())?;
+        }
+        if cache.free_pages() != PAGES {
+            return Err(format!(
+                "leak: {} of {PAGES} pages free after draining",
+                cache.free_pages()
+            ));
+        }
+        // Everything is free now: any further release is a double free.
+        for p in 0..PAGES {
+            if cache.release_page(p).is_ok() {
+                return Err(format!("double free of page {p} not rejected"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn eviction_frees_only_at_refcount_zero() {
+    let mut rng = Rng::new(9);
+    let mut cache = new_cache();
+    // Seq 1 owns two full pages; an index-style retain pins both.
+    let (k, v) = kv(&mut rng, 2 * PAGE_TOKENS);
+    cache.insert_seq(1, &k, &v, 2 * PAGE_TOKENS).unwrap();
+    let pages: Vec<usize> = cache.seq_pages(1).unwrap().to_vec();
+    for &p in &pages {
+        cache.retain_page(p).unwrap();
+        assert_eq!(cache.page_ref(p), 2);
+    }
+
+    // "Evicting" (releasing the index reference) while the sequence is
+    // alive must not free the pages.
+    assert!(!cache.release_page(pages[0]).unwrap());
+    assert_eq!(cache.page_ref(pages[0]), 1);
+    assert_eq!(cache.free_pages(), PAGES - 2);
+
+    // Once the sequence is gone, the remaining reference is the last
+    // holder: releasing it frees the page.
+    cache.free_seq(1);
+    assert_eq!(cache.free_pages(), PAGES - 1); // pages[1] still index-held
+    assert!(cache.release_page(pages[1]).unwrap());
+    assert_eq!(cache.free_pages(), PAGES);
+}
+
+#[test]
+fn cow_keeps_both_views_consistent_under_shared_partial_pages() {
+    let mut rng = Rng::new(11);
+    let mut cache = new_cache();
+    // Donor with 1.5 pages; a fork retains its partial tail page.
+    let len = PAGE_TOKENS + PAGE_TOKENS / 2;
+    let (k, v) = kv(&mut rng, len);
+    cache.insert_seq(1, &k, &v, len).unwrap();
+    let tail = *cache.seq_pages(1).unwrap().last().unwrap();
+    cache.retain_page(tail).unwrap();
+
+    // Append: the tail is shared, so the cache must clone it.
+    let (nk, nv) = kv(&mut rng, 1);
+    let cow = cache.append_token(1, &nk, &nv).unwrap();
+    assert!(cow);
+    let new_tail = *cache.seq_pages(1).unwrap().last().unwrap();
+    assert_ne!(new_tail, tail);
+    assert_eq!(cache.page_ref(tail), 1, "fork still owns the original");
+
+    // The sequence's gathered view has the old rows plus the new token.
+    let ctx = 2 * PAGE_TOKENS;
+    let mut ko = vec![0.0; LAYERS * HEADS * ctx * DH];
+    let mut vo = vec![0.0; ko.len()];
+    cache.gather(&[Some(1)], ctx, &mut ko, &mut vo).unwrap();
+    // layer 0, head 0: original token `len - 1` then the appended token.
+    let row = |t: usize| t * DH;
+    let orig = (len - 1) * DH;
+    assert_eq!(&ko[row(len - 1)..row(len - 1) + DH], &k[orig..orig + DH]);
+    assert_eq!(&ko[row(len)..row(len) + DH], &nk[..DH]);
+
+    cache.free_seq(1);
+    cache.release_page(tail).unwrap();
+    assert_eq!(cache.free_pages(), PAGES);
+}
