@@ -1,11 +1,18 @@
 //! Shared-prefix (cascade) decode: modeled KV traffic + simulated latency
-//! vs the flat stream-K plan, and a host-exec microbench of the cascade
-//! reduction path.
+//! vs the flat stream-K plan, a host-exec microbench of the cascade
+//! reduction path, and the flat-lean vs cascade **execution** comparison
+//! (gathered KV bytes + wall-clock) through the partial-attention driver —
+//! over the PJRT artifacts when built, the host oracle otherwise.
 //!
 //! ```sh
-//! cargo bench --bench cascade
+//! cargo bench --bench cascade            # full run
+//! cargo bench --bench cascade -- --smoke # CI smoke: small cases, fast
 //! ```
 
+use std::path::Path;
+use std::rc::Rc;
+
+use lean_attention::bench_harness::cascade_exec::{compare_exec, ExecCase};
 use lean_attention::bench_harness::runner::{bench, save};
 use lean_attention::bench_harness::Table;
 use lean_attention::partition::cascade::{
@@ -13,6 +20,7 @@ use lean_attention::partition::cascade::{
     PrefixGroup,
 };
 use lean_attention::partition::plan::Strategy;
+use lean_attention::runtime::{AttentionExecutor, Manifest, Runtime};
 use lean_attention::sim::cascade::simulate_cascade;
 use lean_attention::sim::schedule::simulate;
 use lean_attention::sim::GpuArch;
@@ -31,7 +39,22 @@ fn shared_batch(batch: usize, prefix: u32, suffix: u32, heads: usize) -> Cascade
     .expect("valid cascade problem")
 }
 
+/// Executors for the exec comparison: the PJRT artifact path when
+/// `artifacts/manifest.json` exists, the host-oracle path otherwise.
+fn attention_executor() -> Option<AttentionExecutor> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    let runtime = Rc::new(Runtime::cpu().ok()?);
+    let manifest = Rc::new(Manifest::load(dir).ok()?);
+    Some(AttentionExecutor::new(runtime, manifest))
+}
+
 fn main() {
+    // `--smoke` (after `--` with cargo bench) shrinks the sweep so CI can
+    // exercise the whole bench path in seconds.
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let arch = GpuArch::a100();
 
     // --- modeled traffic + latency sweep over batch size ----------------
@@ -84,13 +107,19 @@ fn main() {
 
     // --- host-path microbench: plan + execute + merge -------------------
     let mut results = Vec::new();
-    for (batch, prefix, suffix) in [(4usize, 512u32, 128u32), (8, 1024, 128)] {
+    let micro_cases: &[(usize, u32, u32)] = if smoke {
+        &[(4, 512, 128)]
+    } else {
+        &[(4, 512, 128), (8, 1024, 128)]
+    };
+    let micro_iters = if smoke { 3 } else { 20 };
+    for &(batch, prefix, suffix) in micro_cases {
         let p = shared_batch(batch, prefix, suffix, 2).with_tile(64);
         let tens = CascadeTensors::random(&p, 3);
         let cplan = build_cascade_plan(&p, 216);
         results.push(bench(
             &format!("cascade_host_b{batch}_p{prefix}_s{suffix}"),
-            20,
+            micro_iters,
             || {
                 black_box(execute_cascade_host(&cplan, &p, &tens, None));
             },
@@ -100,4 +129,71 @@ fn main() {
         }));
     }
     save("cascade", &results);
+
+    // --- execution: flat-lean vs cascade over the same numbers ----------
+    // Both paths run the same task-rolling + group-broadcast-fold driver;
+    // only the prefix structure differs, so the byte and latency gaps are
+    // the cascade mechanism itself. With artifacts the partials go through
+    // the PJRT `attn_partial` kernel, otherwise the host oracle.
+    let exec = attention_executor();
+    let backend = if exec.is_some() { "pjrt artifacts" } else { "host oracle" };
+    let mut t3 = Table::new(
+        format!("flat-lean vs cascade execution ({backend})"),
+        &[
+            "batch",
+            "prefix",
+            "suffix",
+            "flat_KV_KiB",
+            "cascade_KV_KiB",
+            "bytes_saved",
+            "flat_us",
+            "cascade_us",
+            "speedup",
+            "max_err",
+        ],
+    );
+    let exec_iters = if smoke { 2 } else { 10 };
+    let exec_cases: &[(usize, u32, u32)] = if smoke {
+        &[(2, 64, 32), (4, 128, 32)]
+    } else {
+        &[(2, 256, 64), (4, 512, 64), (8, 1024, 128)]
+    };
+    for &(batch, prefix, suffix) in exec_cases {
+        // d=64/tile=256 matches the artifact buckets; the smoke/host run
+        // uses a small head_dim + tile so it stays fast.
+        let case = if exec.is_some() {
+            ExecCase { batch, prefix: prefix.max(256), suffix, heads: 1, head_dim: 64, tile: 256, slots: 64 }
+        } else {
+            ExecCase { batch, prefix, suffix, heads: 2, head_dim: 16, tile: 32, slots: 64 }
+        };
+        let c = compare_exec(case, exec_iters, exec.as_ref(), 11)
+            .expect("exec comparison");
+        assert!(
+            c.cascade_kv_bytes < c.flat_kv_bytes,
+            "cascade must gather fewer KV bytes on shared batches \
+             ({} vs {})",
+            c.cascade_kv_bytes,
+            c.flat_kv_bytes
+        );
+        assert!(
+            c.max_err < 1e-3,
+            "flat and cascade outputs diverged: {}",
+            c.max_err
+        );
+        t3.row(vec![
+            case.batch.to_string(),
+            case.prefix.to_string(),
+            case.suffix.to_string(),
+            format!("{:.1}", c.flat_kv_bytes as f64 / 1024.0),
+            format!("{:.1}", c.cascade_kv_bytes as f64 / 1024.0),
+            format!("{:.1}%", c.bytes_saved_fraction() * 100.0),
+            format!("{:.1}", c.flat_us.p50),
+            format!("{:.1}", c.cascade_us.p50),
+            format!("{:.2}x", c.flat_us.p50 / c.cascade_us.p50),
+            format!("{:.1e}", c.max_err),
+        ]);
+    }
+    t3.note("gathered KV bytes are what each path reads from its KV streams");
+    t3.note("shared prefix slices are materialized once per group task");
+    t3.emit("cascade_exec");
 }

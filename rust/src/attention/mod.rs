@@ -11,4 +11,4 @@ pub mod rescale;
 
 pub use partials::Partials;
 pub use reference::{attention_host, partial_attention_host};
-pub use rescale::{finalize_rows, rescale_row, RowStats, NEG_INF};
+pub use rescale::{finalize_rows, rescale_group_broadcast, rescale_row, RowStats, NEG_INF};

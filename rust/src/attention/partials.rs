@@ -2,7 +2,7 @@
 //! each with its `(m, l)` statistics. This is the unit the engine moves
 //! between the PJRT partial-attention artifact and the Rust reduction.
 
-use super::rescale::{finalize_rows, rescale_row, RowStats};
+use super::rescale::{finalize_rows, rescale_group_broadcast, rescale_row, RowStats};
 
 /// `G` un-scaled partial outputs with their softmax statistics.
 #[derive(Clone, Debug)]
@@ -66,6 +66,24 @@ impl Partials {
                 other.stats[gi],
             );
         }
+    }
+
+    /// Group-broadcast fold (cascade path): `other`'s row `j` folds into
+    /// this accumulator's row `targets[j]`. A shared-prefix partial batch
+    /// carries one row per member query of its group; this routes the
+    /// whole batch into the members' accumulators in one call. Duplicate
+    /// targets are legal and fold in order.
+    pub fn fold_group_broadcast(&mut self, other: &Partials, targets: &[usize]) {
+        assert_eq!(self.d, other.d);
+        assert_eq!(other.g, targets.len());
+        rescale_group_broadcast(
+            &mut self.o,
+            &mut self.stats,
+            self.d,
+            &other.o,
+            &other.stats,
+            targets,
+        );
     }
 
     /// Normalize into the exact attention output (consumes the partials).
@@ -134,6 +152,31 @@ mod tests {
         let mut full = a.clone();
         full.reduce_from(&b);
         assert_allclose(&sel.o[4..8], &full.o[4..8], 1e-6, 1e-6, "row1");
+    }
+
+    #[test]
+    fn fold_group_broadcast_routes_rows_to_targets() {
+        let mut rng = Rng::new(7);
+        // Partial batch of 3 rows scattering into accumulator rows 2, 0, 2.
+        let part = random_partials(&mut rng, 3, 4);
+        let targets = [2usize, 0, 2];
+        let mut acc = Partials::identity(3, 4);
+        acc.fold_group_broadcast(&part, &targets);
+
+        // Row-by-row reference with plain rescale folds.
+        let mut want = Partials::identity(3, 4);
+        for (j, &gi) in targets.iter().enumerate() {
+            let mut one = Partials::identity(3, 4);
+            one.o[gi * 4..(gi + 1) * 4].copy_from_slice(&part.o[j * 4..(j + 1) * 4]);
+            one.stats[gi] = part.stats[j];
+            want.reduce_from(&one);
+        }
+        assert_allclose(&acc.o, &want.o, 1e-6, 1e-6, "scattered o");
+        for (a, b) in acc.stats.iter().zip(&want.stats) {
+            assert!((a.l - b.l).abs() < 1e-6 && (a.m - b.m).abs() < 1e-6);
+        }
+        // Row 1 received nothing and stays identity.
+        assert_eq!(acc.stats[1], RowStats::IDENTITY);
     }
 
     #[test]

@@ -77,6 +77,37 @@ pub fn rescale_row(o_acc: &mut [f32], acc: &mut RowStats, o_y: &[f32], y: RowSta
     }
 }
 
+/// Group-broadcast fold (the cascade execution path): partial row `j` of
+/// `(o_y, ys)` folds into accumulator row `targets[j]`.
+///
+/// A shared-prefix LeanTile is streamed **once** per prefix group but
+/// produces one partial row per member query; this fold routes that one
+/// partial batch into every member's accumulator in a single call, so the
+/// executor never has to re-shuffle partials into per-output order.
+/// Duplicate targets are legal (several partials of one output row in the
+/// same batch) — folds apply in order, and the operator is associative
+/// and commutative in value, so grouping does not change the result.
+pub fn rescale_group_broadcast(
+    o_acc: &mut [f32],
+    acc: &mut [RowStats],
+    d: usize,
+    o_y: &[f32],
+    ys: &[RowStats],
+    targets: &[usize],
+) {
+    debug_assert_eq!(o_acc.len(), acc.len() * d);
+    debug_assert_eq!(o_y.len(), ys.len() * d);
+    debug_assert_eq!(ys.len(), targets.len());
+    for (j, &gi) in targets.iter().enumerate() {
+        rescale_row(
+            &mut o_acc[gi * d..(gi + 1) * d],
+            &mut acc[gi],
+            &o_y[j * d..(j + 1) * d],
+            ys[j],
+        );
+    }
+}
+
 /// Final normalization `O = diag(l)^-1 O~` for `g` rows of width `d`
 /// (Alg 2 line 38). Rows with `l == 0` (identity — nothing attended) are
 /// left as zeros rather than NaN.
@@ -191,6 +222,68 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn group_broadcast_matches_sequential_folds() {
+        prop_check("group broadcast == per-row folds", 100, |rng| {
+            let d = 4;
+            let rows = rng.urange(1, 6);
+            let outs = rng.urange(1, 4);
+            let o_y: Vec<f32> = rng.normal_vec(rows * d);
+            let ys: Vec<RowStats> = (0..rows)
+                .map(|_| RowStats {
+                    m: (rng.normal() * 2.0) as f32,
+                    l: rng.f32() * 3.0 + 0.05,
+                })
+                .collect();
+            // Duplicate targets allowed: several partials fold into one row.
+            let targets: Vec<usize> = (0..rows).map(|_| rng.urange(0, outs)).collect();
+
+            let mut o_a = vec![0.0f32; outs * d];
+            let mut st_a = vec![RowStats::IDENTITY; outs];
+            rescale_group_broadcast(&mut o_a, &mut st_a, d, &o_y, &ys, &targets);
+
+            let mut o_b = vec![0.0f32; outs * d];
+            let mut st_b = vec![RowStats::IDENTITY; outs];
+            for (j, &gi) in targets.iter().enumerate() {
+                rescale_row(
+                    &mut o_b[gi * d..(gi + 1) * d],
+                    &mut st_b[gi],
+                    &o_y[j * d..(j + 1) * d],
+                    ys[j],
+                );
+            }
+            for (a, b) in o_a.iter().zip(&o_b) {
+                if (a - b).abs() > 1e-6 {
+                    return Err(format!("o mismatch {a} {b}"));
+                }
+            }
+            for (a, b) in st_a.iter().zip(&st_b) {
+                if (a.l - b.l).abs() > 1e-6 {
+                    return Err("l mismatch".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn group_broadcast_identity_rows_are_neutral() {
+        let d = 2;
+        let mut o = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut st = vec![RowStats { m: 0.5, l: 1.0 }; 2];
+        let before = (o.clone(), st.clone());
+        rescale_group_broadcast(
+            &mut o,
+            &mut st,
+            d,
+            &[0.0, 0.0, 0.0, 0.0],
+            &[RowStats::IDENTITY; 2],
+            &[1, 0],
+        );
+        assert_eq!(o, before.0);
+        assert_eq!(st, before.1);
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Flat-lean vs cascade **execution** comparison over identical numbers:
+//! the measurement backing `leanattn bench --cascade-exec` and the
+//! executor section of `benches/cascade.rs`.
+//!
+//! Both paths run through the same task-rolling + group-broadcast-fold
+//! driver ([`crate::runtime::attention_exec`]); the only difference is the
+//! problem's prefix structure. The flat path poses the batch with **no**
+//! prefix groups (every lane streams its full context), the cascade path
+//! poses the same contexts with the shared prefix as a first-class group —
+//! so the gathered-KV-byte gap and the latency gap are attributable to
+//! the cascade mechanism alone. With PJRT artifacts on disk the partials
+//! execute through the `attn_partial` kernel; without them the host
+//! oracle stands in (same driver, same fold).
+
+use anyhow::Result;
+
+use crate::partition::cascade::{
+    build_cascade_plan, CascadeProblem, CascadeTensors, PrefixGroup,
+};
+use crate::runtime::attention_exec::{
+    lean_cascade_host, roll_cascade_tasks, rolled_kv_bytes,
+};
+use crate::runtime::AttentionExecutor;
+use crate::util::stats::Summary;
+use crate::util::testing::max_abs_err;
+use crate::util::timer::sample_us;
+
+/// Shape of one comparison case.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecCase {
+    pub batch: usize,
+    /// Shared prefix tokens (every sequence in one group).
+    pub prefix: u32,
+    /// Private suffix tokens per sequence.
+    pub suffix: u32,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub tile: usize,
+    /// CTA slots handed to the stream-K planner.
+    pub slots: usize,
+}
+
+/// Outcome of one flat-vs-cascade execution comparison.
+#[derive(Clone, Debug)]
+pub struct ExecComparison {
+    pub case: ExecCase,
+    /// K+V bytes the flat lean path gathers from its KV streams.
+    pub flat_kv_bytes: usize,
+    /// K+V bytes the cascade path gathers (shared prefix once per group).
+    pub cascade_kv_bytes: usize,
+    pub flat_us: Summary,
+    pub cascade_us: Summary,
+    /// Max abs error of the cascade output vs the flat output (both exact
+    /// up to float association; this bounds the numerical agreement).
+    pub max_err: f32,
+    /// Whether the partials ran through the PJRT artifact (vs host math).
+    pub pjrt: bool,
+}
+
+impl ExecComparison {
+    pub fn bytes_saved_fraction(&self) -> f64 {
+        if self.flat_kv_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - self.cascade_kv_bytes as f64 / self.flat_kv_bytes as f64
+    }
+}
+
+/// Derive the flat twin of a grouped problem: same contexts, same numbers,
+/// no prefix structure — each sequence's suffix tensor is its composed
+/// full-context KV.
+fn flat_twin(
+    p: &CascadeProblem,
+    t: &CascadeTensors,
+) -> (CascadeProblem, CascadeTensors) {
+    let pf = CascadeProblem::new(p.heads, p.ctx_lens.clone(), p.head_dim, Vec::new())
+        .expect("flat twin is always valid")
+        .with_tile(p.tile);
+    let (k_full, v_full, n_max) = t.full_kv(p);
+    let (h, d) = (p.heads, p.head_dim);
+    let mut k_suffix = Vec::with_capacity(p.batch());
+    let mut v_suffix = Vec::with_capacity(p.batch());
+    for (seq, &ctx) in p.ctx_lens.iter().enumerate() {
+        let ctx = ctx as usize;
+        let mut k = Vec::with_capacity(h * ctx * d);
+        let mut v = Vec::with_capacity(h * ctx * d);
+        for hi in 0..h {
+            let base = (seq * h + hi) * n_max * d;
+            k.extend_from_slice(&k_full[base..base + ctx * d]);
+            v.extend_from_slice(&v_full[base..base + ctx * d]);
+        }
+        k_suffix.push(k);
+        v_suffix.push(v);
+    }
+    let tf = CascadeTensors {
+        q: t.q.clone(),
+        k_shared: Vec::new(),
+        v_shared: Vec::new(),
+        k_suffix,
+        v_suffix,
+    };
+    (pf, tf)
+}
+
+/// Run one flat-vs-cascade comparison. `exec` routes partials through the
+/// PJRT artifact when present; `iters` bounds the timing samples per path.
+pub fn compare_exec(
+    case: ExecCase,
+    iters: usize,
+    exec: Option<&AttentionExecutor>,
+    seed: u64,
+) -> Result<ExecComparison> {
+    let members: Vec<u32> = (0..case.batch as u32).collect();
+    let p = CascadeProblem::new(
+        case.heads,
+        vec![case.prefix + case.suffix; case.batch],
+        case.head_dim,
+        vec![PrefixGroup { prefix_len: case.prefix, members }],
+    )?
+    .with_tile(case.tile);
+    let t = CascadeTensors::random(&p, seed);
+    let (pf, tf) = flat_twin(&p, &t);
+
+    let cp = build_cascade_plan(&p, case.slots);
+    cp.plan.validate(&cp.segment_problem)?;
+    let cpf = build_cascade_plan(&pf, case.slots);
+    cpf.plan.validate(&cpf.segment_problem)?;
+
+    let cascade_kv_bytes = rolled_kv_bytes(&roll_cascade_tasks(&p, &cp), case.head_dim);
+    let flat_kv_bytes = rolled_kv_bytes(&roll_cascade_tasks(&pf, &cpf), case.head_dim);
+
+    // The emulated partial-batch capacity for the host path (the PJRT
+    // path takes its capacity from the artifact manifest).
+    let batch_rows = 64;
+    let run_cascade = || -> Result<Vec<f32>> {
+        Ok(match exec {
+            Some(e) => e.lean_cascade(&p, &t, &cp)?.0,
+            None => lean_cascade_host(&p, &t, &cp, batch_rows).0,
+        })
+    };
+    let run_flat = || -> Result<Vec<f32>> {
+        Ok(match exec {
+            Some(e) => e.lean_cascade(&pf, &tf, &cpf)?.0,
+            None => lean_cascade_host(&pf, &tf, &cpf, batch_rows).0,
+        })
+    };
+
+    let o_cascade = run_cascade()?;
+    let o_flat = run_flat()?;
+    let max_err = max_abs_err(&o_cascade, &o_flat);
+
+    let flat_samples = sample_us(iters, 0.0, || {
+        let _ = std::hint::black_box(run_flat());
+    });
+    let cascade_samples = sample_us(iters, 0.0, || {
+        let _ = std::hint::black_box(run_cascade());
+    });
+
+    Ok(ExecComparison {
+        case,
+        flat_kv_bytes,
+        cascade_kv_bytes,
+        flat_us: Summary::of(&flat_samples),
+        cascade_us: Summary::of(&cascade_samples),
+        max_err,
+        pjrt: exec.is_some(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_comparison_agrees_and_dedups() {
+        let case = ExecCase {
+            batch: 3,
+            prefix: 64,
+            suffix: 32,
+            heads: 2,
+            head_dim: 16,
+            tile: 32,
+            slots: 12,
+        };
+        let c = compare_exec(case, 2, None, 7).expect("host comparison");
+        assert!(c.max_err < 1e-4, "paths disagree: {}", c.max_err);
+        assert!(
+            c.cascade_kv_bytes < c.flat_kv_bytes,
+            "cascade gathered {} vs flat {}",
+            c.cascade_kv_bytes,
+            c.flat_kv_bytes
+        );
+        // 3 lanes × (64+32) tokens flat vs 64 + 3×32 cascade, × heads.
+        let token = 2 * case.head_dim * 4;
+        assert_eq!(c.flat_kv_bytes, 3 * 96 * 2 * token);
+        assert_eq!(c.cascade_kv_bytes, (64 + 3 * 32) * 2 * token);
+        assert!(!c.pjrt);
+        assert!((c.bytes_saved_fraction() - (1.0 - 160.0 / 288.0)).abs() < 1e-12);
+    }
+}

@@ -3,11 +3,13 @@
 //! JSON table formatting. The `rust/benches/figXX_*.rs` binaries are thin
 //! wrappers over [`figures`].
 
+pub mod cascade_exec;
 pub mod figures;
 pub mod runner;
 pub mod table;
 pub mod trace;
 pub mod workload;
 
+pub use cascade_exec::{compare_exec, ExecCase, ExecComparison};
 pub use runner::{bench, BenchResult};
 pub use table::Table;

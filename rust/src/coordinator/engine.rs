@@ -176,8 +176,11 @@ impl Engine {
     }
 
     /// Submit a request; returns its id. The prompt must fit the prefill
-    /// bucket and the vocab.
+    /// bucket and the vocab, and the generation budget must be at least
+    /// one token (prefill always produces one, so `max_new_tokens = 0`
+    /// has no meaningful contract and is rejected).
     pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> Result<RequestId> {
+        ensure!(max_new_tokens >= 1, "max_new_tokens must be >= 1");
         ensure!(
             !prompt.is_empty() && prompt.len() <= self.model.art.prefill_bucket,
             "prompt length {} outside [1, {}]",
@@ -205,7 +208,7 @@ impl Engine {
     /// step. Returns requests that finished during this iteration.
     pub fn step(&mut self) -> Result<Vec<FinishedRequest>> {
         let mut finished = Vec::new();
-        self.admit_and_prefill()?;
+        self.admit_and_prefill(&mut finished)?;
         self.decode_once(&mut finished)?;
         Ok(finished)
     }
@@ -219,7 +222,7 @@ impl Engine {
         Ok(all)
     }
 
-    fn admit_and_prefill(&mut self) -> Result<()> {
+    fn admit_and_prefill(&mut self, finished: &mut Vec<FinishedRequest>) -> Result<()> {
         let ctx_cap = self.model.art.ctx_bucket;
         let budget = |r: &Request| (r.prompt.len() + r.max_new_tokens).min(ctx_cap);
 
@@ -234,6 +237,7 @@ impl Engine {
         {
             if let Some(front) = self.batcher.peek_waiting() {
                 let m = self.prefix_index.peek(&front.prompt);
+                self.metrics.prefix.lookups += 1;
                 let need = self
                     .cache
                     .pages_for(budget(front))
@@ -269,13 +273,17 @@ impl Engine {
         let mut committed = self.committed_pages;
         let total = cache.total_pages();
         let mut needs: Vec<usize> = Vec::new();
+        // Gate-time probes of queued/rejected requests count too — the
+        // hit rate is per actual index probe, not per admitted request.
+        let mut gate_probes = 0usize;
         let admitted = self.batcher.admit(|r| {
             let m = if use_prefix {
                 // First gate call is the same head the eviction pass
                 // probed; its match is unchanged (eviction spared it).
-                head_match
-                    .take()
-                    .unwrap_or_else(|| prefix_index.peek(&r.prompt))
+                head_match.take().unwrap_or_else(|| {
+                    gate_probes += 1;
+                    prefix_index.peek(&r.prompt)
+                })
             } else {
                 PrefixMatch::default()
             };
@@ -289,6 +297,7 @@ impl Engine {
             }
         });
         self.committed_pages = committed;
+        self.metrics.prefix.lookups += gate_probes;
         if admitted.is_empty() {
             return Ok(());
         }
@@ -323,9 +332,15 @@ impl Engine {
             // everything after the first. (Admission reserved pages using
             // the pre-wave probe — a larger match here only means fewer
             // fresh pages than reserved, which the finish-time release
-            // balances.)
+            // balances.) This probe is the one that commits to sharing,
+            // so it goes through `lookup` to refresh the LRU stamps of
+            // the matched chain — `peek` stays reserved for
+            // admission-control probes, which must not perturb eviction
+            // order. Without the bump here, eviction degrades to
+            // insertion order and can evict a hot system prompt.
             let m = if use_prefix {
-                self.prefix_index.peek(&r.prompt)
+                self.metrics.prefix.lookups += 1;
+                self.prefix_index.lookup(&r.prompt)
             } else {
                 PrefixMatch::default()
             };
@@ -357,7 +372,6 @@ impl Engine {
             let mut index_kept = 0;
             let mut prefix_run = Vec::new();
             if use_prefix {
-                self.metrics.prefix.lookups += 1;
                 if skip > 0 {
                     self.metrics.prefix.hits += 1;
                     self.metrics.prefix.tokens_matched += skip;
@@ -385,6 +399,28 @@ impl Engine {
             let logits = &out.logits[slot * vocab..(slot + 1) * vocab];
             let first = argmax(logits);
             let now = Instant::now();
+            self.metrics.tokens_generated += 1;
+
+            // A one-token budget is already satisfied by the prefill
+            // logits: finish here instead of letting the decode loop push
+            // a second token past the budget (`submit` rejects budget 0).
+            if r.max_new_tokens <= 1 {
+                self.committed_pages -= need - index_kept;
+                finished.push(FinishedRequest {
+                    id: r.id,
+                    prompt_len: len,
+                    output: vec![first],
+                    reason: FinishReason::Length,
+                    queue_s: (t0 - r.arrival).as_secs_f64(),
+                    prefill_s: (now - t0).as_secs_f64(),
+                    decode_s: 0.0,
+                });
+                self.batcher.release(r.id);
+                self.cache.free_seq(r.id);
+                self.metrics.requests_finished += 1;
+                continue;
+            }
+
             self.active.insert(
                 r.id,
                 ActiveSeq {
@@ -400,7 +436,6 @@ impl Engine {
                     prefix_pages: prefix_run,
                 },
             );
-            self.metrics.tokens_generated += 1;
         }
         Ok(())
     }
@@ -419,8 +454,39 @@ impl Engine {
         );
         let vocab = self.model.art.vocab;
 
-        // Gather paged caches into the contiguous decode views.
-        self.cache.gather(&slots, c, &mut self.k_buf, &mut self.v_buf)?;
+        // Detect physically-shared leading page runs once per step: both
+        // the gather below and the hardware projection consume them.
+        let detect = self.config.enable_prefix_cache || self.config.project_hardware;
+        let (lens, groups) = if detect {
+            self.step_prefix_groups(&slots)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+
+        // Gather paged caches into the contiguous decode views. Steps
+        // whose lanes share a prefix run take the cascade (Strategy::
+        // Cascade) gather: each shared run is materialized once and
+        // scattered into its member lanes, and the measured dedup is
+        // recorded. Solo steps keep the allocation-free flat gather.
+        //
+        // The monolithic decode HLO still consumes dense per-lane views,
+        // so on this CPU path the scatter re-expands the runs (segment
+        // allocation + one extra copy per shared run vs the flat gather);
+        // the SharedSegment views are the shape a kernel-level cascade
+        // attention consumes directly, at which point compose_dense
+        // disappears. gather_shared re-derives the same leading-run
+        // grouping as step_prefix_groups from the live page lists (the
+        // physical ground truth); kv_cache_props pins the two paths'
+        // views bit-identical either way.
+        if groups.is_empty() {
+            self.cache.gather(&slots, c, &mut self.k_buf, &mut self.v_buf)?;
+        } else {
+            let sg = self.cache.gather_shared(&slots)?;
+            sg.compose_dense(c, &mut self.k_buf, &mut self.v_buf)?;
+            self.metrics.cascade_gather_steps += 1;
+            self.metrics.gather_bytes_flat += sg.flat_bytes as u64;
+            self.metrics.gather_bytes_shared += sg.shared_bytes as u64;
+        }
 
         let mut tokens = vec![0i32; b];
         let mut positions = vec![0i32; b];
@@ -441,7 +507,7 @@ impl Engine {
         self.metrics.step_us.push(step_us);
 
         if self.config.project_hardware {
-            self.record_projection(&slots);
+            self.record_projection(&lens, &groups);
         }
 
         // Per-lane: append fresh KV, sample, check termination.
@@ -502,11 +568,19 @@ impl Engine {
         Ok(())
     }
 
-    /// Project this step's (ragged) attention batch onto the A100 model:
-    /// what would LeanAttention vs FlashDecoding cost on real hardware —
-    /// and, when sequences share cached prefixes, what does the cascade
-    /// plan save by streaming each shared prefix once per group?
-    fn record_projection(&mut self, slots: &[Option<RequestId>]) {
+    /// Per-live-lane context lengths of the current step, plus the
+    /// shared-prefix groups detected from the leading KV page runs active
+    /// sequences physically share (group members are live-lane indices in
+    /// slot order). Sharing is always a leading run (`insert_seq_shared`
+    /// prepends the shared pages), so runs starting with the same page
+    /// overlap by exactly their longest common leading run. Both the
+    /// cascade-gather trigger and the hardware projection consume this;
+    /// [`super::kv_cache::PagedKvCache::gather_shared`] independently
+    /// re-derives the grouping from the live page lists (of which
+    /// `prefix_pages` is a leading snapshot), so the two agree on any
+    /// sharing the cache can express — keep them in sync if sharing ever
+    /// becomes non-leading (e.g. partial-page radix edges).
+    fn step_prefix_groups(&self, slots: &[Option<RequestId>]) -> (Vec<u32>, Vec<PrefixGroup>) {
         let mut lens: Vec<u32> = Vec::new();
         // (index page run, seq idx) for sequences holding indexed pages.
         let mut runs: Vec<(Vec<usize>, u32)> = Vec::new();
@@ -520,27 +594,6 @@ impl Engine {
                 }
             }
         }
-        if lens.is_empty() {
-            return;
-        }
-        let problem =
-            DecodeProblem::ragged(self.model.art.n_heads, lens.clone(), self.model.art.head_dim);
-        let la = simulate(&problem, Strategy::StreamK, &self.arch);
-        let fd = simulate(
-            &problem,
-            Strategy::fixed_split_auto(&problem, self.arch.num_sms),
-            &self.arch,
-        );
-        let layers = self.model.art.n_layers as f64;
-        self.metrics.projected_lean_us.push(la.latency_us * layers);
-        self.metrics.projected_fd_us.push(fd.latency_us * layers);
-        self.metrics.projected_occupancy.push(la.occupancy);
-
-        // Cascade projection: sequences whose own leading page runs
-        // overlap physically share those KV pages — stream them once per
-        // group. Sharing is always a leading run (insert_seq_shared
-        // prepends the shared pages), so runs starting with the same page
-        // overlap by exactly their longest common leading run.
         let mut by_first: HashMap<usize, Vec<usize>> = HashMap::new();
         for (i, (run, _)) in runs.iter().enumerate() {
             by_first.entry(run[0]).or_default().push(i);
@@ -566,15 +619,43 @@ impl Engine {
                     members: idxs.iter().map(|&i| runs[i].1).collect(),
                 }
             })
+            .filter(|g| g.prefix_len > 0)
             .collect();
+        (lens, groups)
+    }
+
+    /// Project this step's (ragged) attention batch onto the A100 model:
+    /// what would LeanAttention vs FlashDecoding cost on real hardware —
+    /// and, when sequences share cached prefixes, what does the cascade
+    /// plan save by streaming each shared prefix once per group?
+    fn record_projection(&mut self, lens: &[u32], groups: &[PrefixGroup]) {
+        if lens.is_empty() {
+            return;
+        }
+        let problem = DecodeProblem::ragged(
+            self.model.art.n_heads,
+            lens.to_vec(),
+            self.model.art.head_dim,
+        );
+        let la = simulate(&problem, Strategy::StreamK, &self.arch);
+        let fd = simulate(
+            &problem,
+            Strategy::fixed_split_auto(&problem, self.arch.num_sms),
+            &self.arch,
+        );
+        let layers = self.model.art.n_layers as f64;
+        self.metrics.projected_lean_us.push(la.latency_us * layers);
+        self.metrics.projected_fd_us.push(fd.latency_us * layers);
+        self.metrics.projected_occupancy.push(la.occupancy);
+
         if groups.is_empty() {
             return;
         }
         let Ok(cp) = CascadeProblem::new(
             self.model.art.n_heads,
-            lens,
+            lens.to_vec(),
             self.model.art.head_dim,
-            groups,
+            groups.to_vec(),
         ) else {
             return;
         };

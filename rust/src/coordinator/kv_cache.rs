@@ -18,7 +18,7 @@
 //! zero) are property-tested in `rust/tests/kv_cache_props.rs`.
 
 use anyhow::{bail, ensure, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use super::request::RequestId;
 
@@ -327,6 +327,127 @@ impl PagedKvCache {
         Ok(())
     }
 
+    /// Deduplicated gather for the cascade execution path: each physical
+    /// page run is materialized **once**, so a prefix shared by several
+    /// batch lanes costs one copy instead of one per lane. Sharing is
+    /// detected from the page lists themselves — lanes whose lists begin
+    /// with the same physical page share exactly their longest common
+    /// leading full-page run (sharing is always a leading run:
+    /// [`Self::insert_seq_shared`] prepends the shared pages, and
+    /// copy-on-write only ever diverges the tail).
+    pub fn gather_shared(&self, slots: &[Option<RequestId>]) -> Result<SharedGather> {
+        let token_bytes = self.page_bytes() / self.page_tokens;
+        let mut lanes: Vec<(usize, &SeqEntry)> = Vec::new();
+        for (bi, slot) in slots.iter().enumerate() {
+            if let Some(id) = slot {
+                let entry = self
+                    .seqs
+                    .get(id)
+                    .ok_or_else(|| anyhow::anyhow!("sequence {id} not cached"))?;
+                lanes.push((bi, entry));
+            }
+        }
+
+        // Group lanes by their first physical page (BTreeMap: the segment
+        // order is deterministic). Physical pages are shared only through
+        // explicit prefix sharing, so equal first pages mean a real group.
+        let mut by_first: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, (_, entry)) in lanes.iter().enumerate() {
+            if let Some(&p0) = entry.pages.first() {
+                by_first.entry(p0).or_default().push(i);
+            }
+        }
+
+        let mut segments = Vec::new();
+        let mut flat_bytes = 0usize;
+        for idxs in by_first.values() {
+            for &i in idxs {
+                flat_bytes += lanes[i].1.len * token_bytes;
+            }
+            // Longest common leading page run, clamped to full pages of
+            // the shortest member.
+            let mut shared_pages = if idxs.len() >= 2 {
+                let head = &lanes[idxs[0]].1.pages;
+                let mut common = head.len();
+                for &i in &idxs[1..] {
+                    common = head
+                        .iter()
+                        .zip(&lanes[i].1.pages)
+                        .take(common)
+                        .take_while(|(a, b)| a == b)
+                        .count();
+                }
+                common
+            } else {
+                0
+            };
+            let min_len = idxs.iter().map(|&i| lanes[i].1.len).min().unwrap_or(0);
+            shared_pages = shared_pages.min(min_len / self.page_tokens);
+
+            if shared_pages > 0 {
+                let run = &lanes[idxs[0]].1.pages[..shared_pages];
+                let tokens = shared_pages * self.page_tokens;
+                let (k, v) = self.materialize_run(run, tokens);
+                segments.push(SharedSegment {
+                    lanes: idxs.iter().map(|&i| lanes[i].0).collect(),
+                    start: 0,
+                    tokens,
+                    k,
+                    v,
+                });
+            }
+            // Per-lane remainder (the whole context for unshared lanes).
+            let skip = shared_pages * self.page_tokens;
+            for &i in idxs {
+                let (lane, entry) = (lanes[i].0, lanes[i].1);
+                if entry.len <= skip {
+                    continue;
+                }
+                let tokens = entry.len - skip;
+                let (k, v) = self.materialize_run(&entry.pages[shared_pages..], tokens);
+                segments.push(SharedSegment { lanes: vec![lane], start: skip, tokens, k, v });
+            }
+        }
+
+        let shared_bytes = segments.iter().map(|s| s.tokens * token_bytes).sum();
+        Ok(SharedGather {
+            segments,
+            batch: slots.len(),
+            layers: self.layers,
+            heads: self.heads,
+            head_dim: self.head_dim,
+            flat_bytes,
+            shared_bytes,
+        })
+    }
+
+    /// Copy `tokens` tokens spanning `pages` (first token at the first
+    /// page's first slot) into a fresh `[layers, heads, tokens, head_dim]`
+    /// pair of K/V buffers.
+    fn materialize_run(&self, pages: &[usize], tokens: usize) -> (Vec<f32>, Vec<f32>) {
+        let dh = self.head_dim;
+        let mut k = vec![0.0f32; self.layers * self.heads * tokens * dh];
+        let mut v = vec![0.0f32; k.len()];
+        for (pi, &page) in pages.iter().enumerate() {
+            let t0 = pi * self.page_tokens;
+            if t0 >= tokens {
+                break;
+            }
+            let count = self.page_tokens.min(tokens - t0);
+            for l in 0..self.layers {
+                for h in 0..self.heads {
+                    let src = ((l * self.heads + h) * self.page_tokens) * dh;
+                    let dst = ((l * self.heads + h) * tokens + t0) * dh;
+                    k[dst..dst + count * dh]
+                        .copy_from_slice(&self.k_pages[page][src..src + count * dh]);
+                    v[dst..dst + count * dh]
+                        .copy_from_slice(&self.v_pages[page][src..src + count * dh]);
+                }
+            }
+        }
+        (k, v)
+    }
+
     /// Release a sequence's references; pages with no other holder (e.g.
     /// the prefix index) return to the free list.
     pub fn free_seq(&mut self, id: RequestId) {
@@ -336,6 +457,90 @@ impl PagedKvCache {
                 let _ = self.release_page(page);
             }
         }
+    }
+}
+
+/// One contiguous token run of a decode batch, materialized once by
+/// [`PagedKvCache::gather_shared`]. Shared-prefix runs list several lanes;
+/// exclusive runs list one.
+pub struct SharedSegment {
+    /// Batch lanes (indices into the `slots` slice passed to
+    /// [`PagedKvCache::gather_shared`]) whose context contains this run.
+    pub lanes: Vec<usize>,
+    /// Token offset of the run within each lane's context (identical for
+    /// all lanes: sharing is always a leading run).
+    pub start: usize,
+    /// Tokens in the run.
+    pub tokens: usize,
+    /// `[layers, heads, tokens, head_dim]` row-major K rows.
+    pub k: Vec<f32>,
+    /// Same layout, V rows.
+    pub v: Vec<f32>,
+}
+
+/// A deduplicated gather: every physical page run appears in exactly one
+/// [`SharedSegment`], so a shared prefix is materialized once per group
+/// instead of once per member lane. `shared_bytes / flat_bytes` is the
+/// measured KV-gather traffic ratio of the cascade path vs the flat path.
+pub struct SharedGather {
+    pub segments: Vec<SharedSegment>,
+    /// Lanes the gather spans (`slots.len()`).
+    pub batch: usize,
+    layers: usize,
+    heads: usize,
+    head_dim: usize,
+    /// K+V bytes a flat [`PagedKvCache::gather`] materializes for the same
+    /// slots (every lane's full context, shared or not).
+    pub flat_bytes: usize,
+    /// K+V bytes this gather materialized (each run once).
+    pub shared_bytes: usize,
+}
+
+impl SharedGather {
+    /// Lanes that read at least one multi-lane (shared) segment.
+    pub fn shared_lane_count(&self) -> usize {
+        self.segments
+            .iter()
+            .filter(|s| s.lanes.len() >= 2)
+            .map(|s| s.lanes.len())
+            .sum()
+    }
+
+    /// Scatter the materialized runs into the dense decode views
+    /// `[layers, batch, heads, ctx_bucket, head_dim]` (zero-padded) —
+    /// equivalent to [`PagedKvCache::gather`] over the same slots.
+    pub fn compose_dense(
+        &self,
+        ctx_bucket: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) -> Result<()> {
+        let (ln, b, hn, dh) = (self.layers, self.batch, self.heads, self.head_dim);
+        let expect = ln * b * hn * ctx_bucket * dh;
+        ensure!(k_out.len() == expect, "k_out size");
+        ensure!(v_out.len() == expect, "v_out size");
+        k_out.fill(0.0);
+        v_out.fill(0.0);
+        for seg in &self.segments {
+            ensure!(
+                seg.start + seg.tokens <= ctx_bucket,
+                "segment beyond ctx bucket"
+            );
+            for &lane in &seg.lanes {
+                ensure!(lane < b, "lane {lane} out of range");
+                for l in 0..ln {
+                    for h in 0..hn {
+                        let src = ((l * hn + h) * seg.tokens) * dh;
+                        let dst = ((((l * b) + lane) * hn + h) * ctx_bucket + seg.start) * dh;
+                        k_out[dst..dst + seg.tokens * dh]
+                            .copy_from_slice(&seg.k[src..src + seg.tokens * dh]);
+                        v_out[dst..dst + seg.tokens * dh]
+                            .copy_from_slice(&seg.v[src..src + seg.tokens * dh]);
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -571,6 +776,117 @@ mod tests {
         assert!(c.release_page(page).unwrap());
         c.free_seq(1);
         assert_eq!(c.free_pages(), 4);
+    }
+
+    /// gather and gather_shared+compose_dense must agree bit-for-bit.
+    fn assert_gather_equivalent(c: &PagedKvCache, slots: &[Option<RequestId>], ctx: usize) {
+        let n = c.layers * slots.len() * c.heads * ctx * c.head_dim;
+        let (mut kf, mut vf) = (vec![0.0; n], vec![0.0; n]);
+        c.gather(slots, ctx, &mut kf, &mut vf).unwrap();
+        let sg = c.gather_shared(slots).unwrap();
+        let (mut ks, mut vs) = (vec![1.0; n], vec![1.0; n]); // poison: fill must clear
+        sg.compose_dense(ctx, &mut ks, &mut vs).unwrap();
+        assert_eq!(kf, ks, "k views differ");
+        assert_eq!(vf, vs, "v views differ");
+    }
+
+    #[test]
+    fn gather_shared_dedups_interleaved_shared_and_exclusive_pages() {
+        let mut c = cache(); // 2 layers, 3 heads, dh 4, page 8
+        let mut rng = Rng::new(21);
+        // Seqs 1 and 2 share a 2-page (16-token) prefix; 2 adds a 5-token
+        // suffix. Seq 3 is solo. Lane order interleaves solo between the
+        // sharers.
+        let k = rows(&mut rng, 2, 3, 16, 4);
+        let v = rows(&mut rng, 2, 3, 16, 4);
+        c.insert_seq(1, &k, &v, 16).unwrap();
+        let shared: Vec<usize> = c.seq_pages(1).unwrap().to_vec();
+        let ks = rows(&mut rng, 2, 3, 5, 4);
+        let vs = rows(&mut rng, 2, 3, 5, 4);
+        c.insert_seq_shared(2, &shared, &ks, &vs, 5).unwrap();
+        let k3 = rows(&mut rng, 2, 3, 10, 4);
+        let v3 = rows(&mut rng, 2, 3, 10, 4);
+        c.insert_seq(3, &k3, &v3, 10).unwrap();
+
+        let slots = [Some(1), Some(3), Some(2)];
+        let sg = c.gather_shared(&slots).unwrap();
+        // One shared run (lanes 0 and 2, 16 tokens), seq 2's suffix, and
+        // the solo lane — seq 1 has no remainder beyond the shared run.
+        assert_eq!(sg.segments.len(), 3);
+        let shared_seg = sg
+            .segments
+            .iter()
+            .find(|s| s.lanes.len() == 2)
+            .expect("shared segment");
+        assert_eq!(shared_seg.lanes, vec![0, 2]);
+        assert_eq!((shared_seg.start, shared_seg.tokens), (0, 16));
+        assert!(sg
+            .segments
+            .iter()
+            .any(|s| s.lanes == vec![2] && s.start == 16 && s.tokens == 5));
+        assert!(sg
+            .segments
+            .iter()
+            .any(|s| s.lanes == vec![1] && s.start == 0 && s.tokens == 10));
+        assert_eq!(sg.shared_lane_count(), 2);
+        // Flat materializes 16+21+10 tokens; shared 16+5+10.
+        let token_bytes = c.page_bytes() / c.page_tokens;
+        assert_eq!(sg.flat_bytes, 47 * token_bytes);
+        assert_eq!(sg.shared_bytes, 31 * token_bytes);
+        assert_gather_equivalent(&c, &slots, 24);
+        // Empty lanes stay zero through either path.
+        assert_gather_equivalent(&c, &[Some(2), None, Some(1)], 24);
+    }
+
+    #[test]
+    fn gather_shared_forked_suffixes_share_only_the_common_run() {
+        // Two sequences share one page then diverge (the COW-fork shape):
+        // only the common leading run may be deduplicated.
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 8);
+        let mut rng = Rng::new(22);
+        let k = rows(&mut rng, 1, 1, 4, 2);
+        let v = rows(&mut rng, 1, 1, 4, 2);
+        c.insert_seq(1, &k, &v, 4).unwrap(); // one full page
+        let page = c.seq_pages(1).unwrap()[0];
+        let (ka, va) = (rows(&mut rng, 1, 1, 3, 2), rows(&mut rng, 1, 1, 3, 2));
+        c.insert_seq_shared(2, &[page], &ka, &va, 3).unwrap();
+        // Seq 1 grows its own divergent suffix.
+        for _ in 0..2 {
+            let (nk, nv) = (rng.normal_vec(2), rng.normal_vec(2));
+            c.append_token(1, &nk, &nv).unwrap();
+        }
+        assert_eq!(c.seq_len(1), Some(6));
+        assert_eq!(c.seq_len(2), Some(7));
+
+        let slots = [Some(1), Some(2)];
+        let sg = c.gather_shared(&slots).unwrap();
+        let shared_seg = sg
+            .segments
+            .iter()
+            .find(|s| s.lanes.len() == 2)
+            .expect("shared segment");
+        assert_eq!((shared_seg.start, shared_seg.tokens), (0, 4));
+        // Both forks keep private suffixes starting at the fork point.
+        assert!(sg.segments.iter().any(|s| s.lanes == vec![0] && s.start == 4 && s.tokens == 2));
+        assert!(sg.segments.iter().any(|s| s.lanes == vec![1] && s.start == 4 && s.tokens == 3));
+        assert_gather_equivalent(&c, &slots, 8);
+    }
+
+    #[test]
+    fn gather_shared_without_sharing_matches_flat_bytes() {
+        let mut c = cache();
+        let mut rng = Rng::new(23);
+        for id in 0..3u64 {
+            let len = 5 + 3 * id as usize;
+            let k = rows(&mut rng, 2, 3, len, 4);
+            let v = rows(&mut rng, 2, 3, len, 4);
+            c.insert_seq(id, &k, &v, len).unwrap();
+        }
+        let slots = [Some(0), Some(1), Some(2)];
+        let sg = c.gather_shared(&slots).unwrap();
+        assert_eq!(sg.shared_bytes, sg.flat_bytes, "no sharing, no dedup");
+        assert_eq!(sg.shared_lane_count(), 0);
+        assert_gather_equivalent(&c, &slots, 16);
     }
 
     #[test]

@@ -8,9 +8,12 @@ use crate::util::stats::Summary;
 /// Prefix-cache (radix index) counters.
 #[derive(Clone, Debug, Default)]
 pub struct PrefixCacheStats {
-    /// Prompts probed against the radix index.
+    /// Index probes — admission-gate peeks (including requests that were
+    /// rejected or left queued), eviction-pass peeks, and the post-prefill
+    /// registration lookups. A single request can account for several
+    /// probes, so this counts actual index traffic, not admitted prompts.
     pub lookups: usize,
-    /// Prompts that matched at least one full page.
+    /// Admitted prompts that matched at least one full page.
     pub hits: usize,
     /// Prompt tokens served from cached prefix pages.
     pub tokens_matched: usize,
@@ -25,7 +28,8 @@ pub struct PrefixCacheStats {
 }
 
 impl PrefixCacheStats {
-    /// Fraction of prompts that reused at least one cached prefix page.
+    /// Fraction of index probes that led to an admitted prompt reusing at
+    /// least one cached prefix page.
     pub fn hit_rate(&self) -> f64 {
         if self.lookups == 0 {
             0.0
@@ -59,6 +63,14 @@ pub struct Metrics {
     /// projected steps (shared prefix counted once per group, not per
     /// sequence).
     pub cascade_kv_bytes_saved: f64,
+    /// Decode steps that took the cascade (deduplicated) gather path
+    /// because batch lanes physically shared a leading KV page run.
+    pub cascade_gather_steps: usize,
+    /// K+V bytes a flat gather would have materialized on those steps.
+    pub gather_bytes_flat: u64,
+    /// K+V bytes the cascade gather actually materialized (each shared
+    /// page run once per group instead of once per lane).
+    pub gather_bytes_shared: u64,
     /// Prefix-cache counters.
     pub prefix: PrefixCacheStats,
 }
@@ -121,7 +133,7 @@ impl Metrics {
         s.push_str(&format!("decode throughput: {:.1} tok/s\n", self.decode_tps()));
         if self.prefix.lookups > 0 {
             s.push_str(&format!(
-                "prefix cache: hit rate {:.0}% ({}/{} prompts), {} tokens from cache, \
+                "prefix cache: hit rate {:.0}% ({} hits / {} probes), {} tokens from cache, \
                  {} pages shared, {:.1} KiB KV deduplicated, {} pages evicted, {} COW copies\n",
                 self.prefix.hit_rate() * 100.0,
                 self.prefix.hits,
@@ -139,6 +151,20 @@ impl Metrics {
             s.push_str(&format!(
                 "projected on A100: LeanAttention {sp:.2}x over FlashDecoding, occupancy {:.0}%\n",
                 occ * 100.0
+            ));
+        }
+        if self.cascade_gather_steps > 0 {
+            let dedup = if self.gather_bytes_flat > 0 {
+                100.0 * (1.0 - self.gather_bytes_shared as f64 / self.gather_bytes_flat as f64)
+            } else {
+                0.0
+            };
+            s.push_str(&format!(
+                "cascade gather: {} shared-prefix steps materialized {:.1} KiB \
+                 vs {:.1} KiB flat ({dedup:.0}% deduped)\n",
+                self.cascade_gather_steps,
+                self.gather_bytes_shared as f64 / 1024.0,
+                self.gather_bytes_flat as f64 / 1024.0,
             ));
         }
         if !self.projected_cascade_us.is_empty() {
@@ -203,6 +229,35 @@ mod tests {
         let rep = m.report();
         assert!(rep.contains("hit rate 75%"), "{rep}");
         assert!(rep.contains("6 pages shared"), "{rep}");
+    }
+
+    #[test]
+    fn hit_rate_counts_every_probe_not_every_request() {
+        // Two admitted requests hit, but the index was probed six times
+        // (gate peeks of queued/rejected requests included): the rate is
+        // per probe, so skew from uncounted gate probes is gone.
+        let m = Metrics {
+            prefix: PrefixCacheStats { lookups: 6, hits: 2, ..Default::default() },
+            ..Default::default()
+        };
+        assert!((m.prefix.hit_rate() - 2.0 / 6.0).abs() < 1e-12);
+        let rep = m.report();
+        assert!(rep.contains("2 hits / 6 probes"), "{rep}");
+    }
+
+    #[test]
+    fn cascade_gather_dedup_in_report() {
+        let m = Metrics {
+            cascade_gather_steps: 3,
+            gather_bytes_flat: 4096,
+            gather_bytes_shared: 1024,
+            ..Default::default()
+        };
+        let rep = m.report();
+        assert!(rep.contains("cascade gather: 3 shared-prefix steps"), "{rep}");
+        assert!(rep.contains("75% deduped"), "{rep}");
+        // Absent when no shared step ran.
+        assert!(!Metrics::default().report().contains("cascade gather"));
     }
 
     #[test]

@@ -292,6 +292,32 @@ mod tests {
     }
 
     #[test]
+    fn repeatedly_hit_prefix_survives_eviction_while_cold_one_goes() {
+        // The engine regression this guards: `lookup` (not `peek`) must be
+        // used on the hit path, otherwise eviction degrades to insertion
+        // order and a hot system prompt inserted first is evicted before a
+        // cold one-off prompt inserted later.
+        let mut idx = RadixPrefixIndex::new(2);
+        idx.insert(&[1, 1, 1, 2], &[0, 1]); // hot chain, inserted first
+        idx.insert(&[7, 7], &[2]); // cold prompt, inserted later
+        for _ in 0..4 {
+            idx.lookup(&[1, 1, 1, 2]); // repeated hits keep the chain warm
+        }
+        let ev = idx.evict_lru(1, |_| true);
+        assert_eq!(ev, vec![2], "the cold prefix is evicted first");
+        assert_eq!(idx.peek(&[1, 1, 1, 2]).pages, vec![0, 1], "hot chain intact");
+
+        // `peek` must NOT refresh recency: peeking the cold survivor of a
+        // fresh pair leaves it coldest and it still goes first.
+        let mut idx = RadixPrefixIndex::new(1);
+        idx.insert(&[5], &[0]);
+        idx.insert(&[6], &[1]);
+        idx.peek(&[5]); // no LRU bump
+        idx.lookup(&[6]);
+        assert_eq!(idx.evict_lru(1, |_| true), vec![0]);
+    }
+
+    #[test]
     fn partial_page_probe_matches_nothing() {
         let mut idx = RadixPrefixIndex::new(4);
         idx.insert(&[1, 2, 3, 4], &[0]);

@@ -93,6 +93,7 @@ fn run() -> Result<()> {
         "info" => info(),
         "serve" => serve(&args),
         "simulate" => simulate_cmd(&args),
+        "bench" => bench_cmd(&args),
         "plan" => plan_cmd(&args),
         "figures" => figures_cmd(&args),
         "sweep" => sweep_cmd(&args),
@@ -114,6 +115,11 @@ commands:
   simulate --batch B --heads H --ctx N [--head-dim 64] [--arch a100]
            [--shared-prefix N]      add the cascade row: batch shares an
                                     N-token prefix, streamed once per group
+  bench    --cascade-exec [--batch 4] [--prefix 256] [--suffix 64]
+           [--heads 2] [--head-dim 16] [--tile 32] [--slots 64] [--iters 10]
+                                    flat-lean vs cascade execution: gathered
+                                    KV bytes + wall-clock (PJRT artifacts
+                                    when built, host oracle otherwise)
   plan     --batch B --heads H --ctx N [--slots 216]
   figures  [table1|fig01|fig02|fig03|fig07|fig08|fig09|fig10|fig11|fig12|fig13|all]
   sweep    [--samples 1000] [--arch a100]
@@ -274,6 +280,57 @@ fn simulate_cmd(args: &Args) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+fn bench_cmd(args: &Args) -> Result<()> {
+    use lean_attention::bench_harness::{compare_exec, ExecCase};
+    use lean_attention::runtime::AttentionExecutor;
+
+    anyhow::ensure!(
+        args.flags.contains_key("cascade-exec"),
+        "usage: leanattn bench --cascade-exec [--batch 4] [--prefix 256] ..."
+    );
+    let case = ExecCase {
+        batch: args.usize("batch", 4),
+        prefix: args.usize("prefix", 256) as u32,
+        suffix: args.usize("suffix", 64) as u32,
+        heads: args.usize("heads", 2),
+        head_dim: args.usize("head-dim", 16),
+        tile: args.usize("tile", 32),
+        slots: args.usize("slots", 64),
+    };
+    anyhow::ensure!(case.batch >= 2, "--batch must be >= 2 to share a prefix");
+    let iters = args.usize("iters", 10);
+
+    // PJRT artifacts when present, host oracle otherwise — both run the
+    // identical task-rolling + group-broadcast-fold driver.
+    let exec = Manifest::load(Manifest::default_dir())
+        .ok()
+        .and_then(|m| {
+            let rt = Rc::new(Runtime::cpu().ok()?);
+            Some(AttentionExecutor::new(rt, Rc::new(m)))
+        });
+    let backend = if exec.is_some() { "pjrt artifacts" } else { "host oracle" };
+    println!(
+        "cascade-exec: batch={} prefix={} suffix={} heads={} d={} tile={} ({backend})",
+        case.batch, case.prefix, case.suffix, case.heads, case.head_dim, case.tile
+    );
+
+    let c = compare_exec(case, iters, exec.as_ref(), args.usize("seed", 11) as u64)?;
+    println!(
+        "flat lean:  {:>10.1} KiB gathered KV, p50 {:>9.1}us",
+        c.flat_kv_bytes as f64 / 1024.0,
+        c.flat_us.p50
+    );
+    println!(
+        "cascade:    {:>10.1} KiB gathered KV, p50 {:>9.1}us  ({:.1}% bytes saved, {:.2}x)",
+        c.cascade_kv_bytes as f64 / 1024.0,
+        c.cascade_us.p50,
+        c.bytes_saved_fraction() * 100.0,
+        c.flat_us.p50 / c.cascade_us.p50
+    );
+    println!("max |flat - cascade| = {:.2e}", c.max_err);
     Ok(())
 }
 

@@ -16,7 +16,8 @@ use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
-use crate::attention::{Partials, RowStats};
+use crate::attention::{partial_attention_host, Partials, RowStats};
+use crate::partition::cascade::{CascadePlan, CascadeProblem, CascadeTensors, SegKind};
 use crate::partition::plan::Plan;
 
 use super::artifacts::{AttentionKind, Manifest};
@@ -240,6 +241,208 @@ impl AttentionExecutor {
         let lse = acc.lse();
         Ok((acc.finalize(), lse))
     }
+
+    /// Cascade LeanAttention through the PJRT partial artifact: a
+    /// [`CascadePlan`]'s shared-prefix segments are rolled into tasks whose
+    /// KV slice is materialized **once per task** and serves every member
+    /// query row of the prefix group (one KV stream, many query rows);
+    /// suffix segments execute per-sequence exactly like [`Self::lean`].
+    /// All partials fold into the per-output accumulator with the
+    /// group-broadcast rescale operator (Alg 2 L24-39 extended to shared
+    /// groups). Returns `(o: [batch*heads, d], lse: [batch*heads])` in
+    /// [`crate::partition::cascade::execute_cascade_host`]'s output layout.
+    pub fn lean_cascade(
+        &self,
+        problem: &CascadeProblem,
+        t: &CascadeTensors,
+        cplan: &CascadePlan,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let d = problem.head_dim;
+        let chunk_w = cplan.plan.tile;
+        // Same bucket policy as `lean`: batch as many tasks as the widest
+        // available partial group bucket allows.
+        let batch_rows = self
+            .manifest
+            .attention
+            .iter()
+            .filter(|a| a.kind == AttentionKind::Partial && a.d == d && a.ctx >= chunk_w)
+            .map(|a| a.g)
+            .max()
+            .with_context(|| format!("no partial bucket for d={d} ctx>={chunk_w}"))?;
+        let tasks = roll_cascade_tasks(problem, cplan);
+        run_cascade_tasks(problem, t, &tasks, batch_rows, |q, k, v, valid, rows, w| {
+            self.partial_batch(q, k, v, valid, rows, w, d)
+        })
+    }
+}
+
+/// One partial-attention task rolled out of a cascade plan: a contiguous
+/// KV slice of one segment-problem lane, chunked at the plan's LeanTile
+/// width. A `Shared` task serves every member query of its prefix group
+/// from the single slice; a `Suffix` task serves one sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CascadeTask {
+    /// Which lane (shared prefix stream or private suffix) the slice
+    /// belongs to.
+    pub kind: SegKind,
+    /// Token offset within the lane's KV stream.
+    pub start: usize,
+    /// Tokens covered (clamped to the lane's context).
+    pub width: usize,
+}
+
+/// Roll a cascade plan's CTA segments into [`CascadeTask`]s. Shared-prefix
+/// slices appear **once per task** regardless of group size — that is the
+/// KV-stream dedup the cascade executor banks over the flat lean path.
+/// Tiles beyond a lane's context contribute the identity and are skipped.
+pub fn roll_cascade_tasks(problem: &CascadeProblem, cplan: &CascadePlan) -> Vec<CascadeTask> {
+    let tile = cplan.plan.tile;
+    let mut tasks = Vec::new();
+    for cta in &cplan.plan.ctas {
+        for seg in &cta.segments {
+            let g = seg.group as usize;
+            let ctx = cplan.segment_problem.ctx_for_group(g);
+            let kind = problem.seg_kind(g);
+            let mut tok = seg.tile_begin as usize * tile;
+            let seg_end = ((seg.tile_begin + seg.tile_count) as usize * tile).min(ctx);
+            while tok < seg_end {
+                let width = tile.min(seg_end - tok);
+                tasks.push(CascadeTask { kind, start: tok, width });
+                tok += width;
+            }
+        }
+    }
+    tasks
+}
+
+/// K+V bytes a task list reads from its source KV streams (f32 storage).
+/// Each task's slice counts **once** — shared slices are not multiplied by
+/// group size — so this is exactly what the cascade executor gathers,
+/// and, on a plan without prefix groups, what the flat lean path gathers.
+pub fn rolled_kv_bytes(tasks: &[CascadeTask], head_dim: usize) -> usize {
+    tasks
+        .iter()
+        .map(|t| 2 * t.width * head_dim * std::mem::size_of::<f32>())
+        .sum()
+}
+
+/// Resolve a task's K/V slice inside the deduplicated cascade tensors.
+fn task_kv<'a>(
+    problem: &CascadeProblem,
+    t: &'a CascadeTensors,
+    task: &CascadeTask,
+) -> (&'a [f32], &'a [f32]) {
+    let d = problem.head_dim;
+    let n = task.width * d;
+    match task.kind {
+        SegKind::Shared { pg, head } => {
+            let prefix = problem.prefix_groups[pg].prefix_len as usize;
+            let base = (head * prefix + task.start) * d;
+            (
+                &t.k_shared[pg][base..base + n],
+                &t.v_shared[pg][base..base + n],
+            )
+        }
+        SegKind::Suffix { seq, head } => {
+            let sl = (problem.ctx_lens[seq] - problem.prefix_of(seq)) as usize;
+            let base = (head * sl + task.start) * d;
+            (
+                &t.k_suffix[seq][base..base + n],
+                &t.v_suffix[seq][base..base + n],
+            )
+        }
+    }
+}
+
+/// Execute rolled cascade tasks through `exec_partial` — the PJRT partial
+/// artifact or the host oracle — in batches of at most `batch_rows` query
+/// rows, folding every partial into the per-output accumulator with the
+/// group-broadcast rescale fold. `exec_partial(q, k, v, valid, rows, w)`
+/// computes un-scaled partials for `rows` tasks of padded width `w`.
+///
+/// A shared task expands to one query row per group member, all served by
+/// the same KV slice: the slice is read from the source stream once and
+/// duplicated in-buffer for the remaining member rows.
+fn run_cascade_tasks<F>(
+    problem: &CascadeProblem,
+    t: &CascadeTensors,
+    tasks: &[CascadeTask],
+    batch_rows: usize,
+    mut exec_partial: F,
+) -> Result<(Vec<f32>, Vec<f32>)>
+where
+    F: FnMut(&[f32], &[f32], &[f32], &[u32], usize, usize) -> Result<Partials>,
+{
+    let d = problem.head_dim;
+    let heads = problem.heads;
+
+    // Expand tasks to (task, output-row) pairs. Rows of one shared task
+    // stay adjacent so they land in the same artifact batch and reuse the
+    // materialized slice.
+    let mut rows: Vec<(usize, usize)> = Vec::new();
+    for (ti, task) in tasks.iter().enumerate() {
+        match task.kind {
+            SegKind::Shared { pg, head } => {
+                for &m in &problem.prefix_groups[pg].members {
+                    rows.push((ti, m as usize * heads + head));
+                }
+            }
+            SegKind::Suffix { seq, head } => rows.push((ti, seq * heads + head)),
+        }
+    }
+
+    let mut acc = Partials::identity(problem.outputs(), d);
+    for chunk in rows.chunks(batch_rows.max(1)) {
+        let w = chunk.iter().map(|&(ti, _)| tasks[ti].width).max().unwrap();
+        let mut qb = Vec::with_capacity(chunk.len() * d);
+        let mut kb = vec![0.0f32; chunk.len() * w * d];
+        let mut vb = vec![0.0f32; chunk.len() * w * d];
+        let mut valid = Vec::with_capacity(chunk.len());
+        let mut targets = Vec::with_capacity(chunk.len());
+        for (ri, &(ti, out)) in chunk.iter().enumerate() {
+            let task = &tasks[ti];
+            qb.extend_from_slice(&t.q[out * d..(out + 1) * d]);
+            let dst = ri * w * d;
+            if ri > 0 && chunk[ri - 1].0 == ti {
+                // Same shared slice as the previous row: duplicate the
+                // already-materialized copy instead of re-reading the
+                // source KV stream.
+                let prev = (ri - 1) * w * d;
+                kb.copy_within(prev..prev + task.width * d, dst);
+                vb.copy_within(prev..prev + task.width * d, dst);
+            } else {
+                let (ks, vs) = task_kv(problem, t, task);
+                kb[dst..dst + task.width * d].copy_from_slice(ks);
+                vb[dst..dst + task.width * d].copy_from_slice(vs);
+            }
+            valid.push(task.width as u32);
+            targets.push(out);
+        }
+        let part = exec_partial(&qb, &kb, &vb, &valid, chunk.len(), w)?;
+        acc.fold_group_broadcast(&part, &targets);
+    }
+
+    let lse = acc.lse();
+    Ok((acc.finalize(), lse))
+}
+
+/// Cascade LeanAttention on host numbers through the same task-rolling,
+/// batching and group-broadcast fold as [`AttentionExecutor::lean_cascade`]
+/// — its artifact-free twin, which the tier-1 property tests drive against
+/// the exact oracle. `batch_rows` emulates the partial bucket's group
+/// capacity.
+pub fn lean_cascade_host(
+    problem: &CascadeProblem,
+    t: &CascadeTensors,
+    cplan: &CascadePlan,
+    batch_rows: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let d = problem.head_dim;
+    let tasks = roll_cascade_tasks(problem, cplan);
+    run_cascade_tasks(problem, t, &tasks, batch_rows, |q, k, v, valid, rows, w| {
+        Ok(partial_attention_host(q, k, v, rows, w, d, valid, 0))
+    })
+    .expect("host partials cannot fail")
 }
 
 fn fold_row(acc: &mut Partials, gi: usize, row: &[f32], stats: RowStats) {

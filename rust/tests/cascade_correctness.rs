@@ -15,7 +15,10 @@
 use lean_attention::attention::attention_host;
 use lean_attention::partition::cascade::{
     build_cascade_plan, execute_cascade_host, CascadeProblem, CascadeTensors,
-    PrefixGroup,
+    PrefixGroup, SegKind,
+};
+use lean_attention::runtime::attention_exec::{
+    lean_cascade_host, roll_cascade_tasks, rolled_kv_bytes,
 };
 use lean_attention::sim::cascade::simulate_cascade;
 use lean_attention::sim::GpuArch;
@@ -157,6 +160,137 @@ fn unaligned_prefix_boundaries_stay_exact() {
             "prefix {prefix} mismatch"
         );
     }
+}
+
+#[test]
+fn lean_cascade_matches_oracle_on_random_problems() {
+    // The executor-path property of the tentpole: the task-rolling +
+    // partial-batching + group-broadcast-fold driver (the exact code the
+    // PJRT `lean_cascade` runs, here with host partials) must equal the
+    // exact oracle for any legal plan, any batching granularity.
+    prop_check("lean_cascade (host partials) == direct attention", 60, |rng| {
+        let p = random_problem(rng);
+        let t = CascadeTensors::random(&p, rng.next_u64());
+        let want = reference(&p, &t);
+        let cp = build_cascade_plan(&p, rng.urange(1, 64));
+        cp.plan
+            .validate(&cp.segment_problem)
+            .map_err(|e| e.to_string())?;
+        let batch_rows = rng.urange(1, 33);
+        let (got, _lse) = lean_cascade_host(&p, &t, &cp, batch_rows);
+        let err = max_abs_err(&got, &want);
+        if err > 1e-4 {
+            return Err(format!(
+                "err {err} (batch {}, rows {batch_rows}, groups {:?})",
+                p.batch(),
+                p.prefix_groups
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lean_cascade_page_aligned_groups_of_every_size() {
+    // Page-aligned prompts (prefix a multiple of the tile), group sizes
+    // 2..=8, one member whose context *is* the prefix (empty suffix), one
+    // COW-forked pair (identical contexts, divergent suffix numbers), and
+    // a solo straggler.
+    let tile = 16usize;
+    let prefix = 4 * tile as u32; // page-aligned: 4 whole tiles
+    for gsize in 2..=8usize {
+        let mut ctx_lens: Vec<u32> = (0..gsize as u32)
+            .map(|i| match i {
+                0 => prefix, // empty suffix
+                1 => prefix + 37,
+                2 => prefix + 37, // fork twin of member 1
+                i => prefix + 11 * i,
+            })
+            .collect();
+        ctx_lens.push(23); // solo
+        let p = CascadeProblem::new(
+            2,
+            ctx_lens,
+            16,
+            vec![PrefixGroup {
+                prefix_len: prefix,
+                members: (0..gsize as u32).collect(),
+            }],
+        )
+        .unwrap()
+        .with_tile(tile);
+        let t = CascadeTensors::random(&p, 100 + gsize as u64);
+        let want = reference(&p, &t);
+        for slots in [1usize, 9, 216] {
+            let cp = build_cascade_plan(&p, slots);
+            cp.plan.validate(&cp.segment_problem).unwrap();
+            let (got, _) = lean_cascade_host(&p, &t, &cp, 8);
+            let err = max_abs_err(&got, &want);
+            assert!(err < 1e-4, "gsize {gsize} slots {slots}: err {err}");
+        }
+    }
+}
+
+#[test]
+fn rolled_tasks_cover_every_output_exactly() {
+    // Every output row's context is covered exactly once by the rolled
+    // tasks (shared tasks count toward every member), for random problems
+    // and random grids.
+    prop_check("cascade task coverage", 100, |rng| {
+        let p = random_problem(rng);
+        let cp = build_cascade_plan(&p, rng.urange(1, 128));
+        let tasks = roll_cascade_tasks(&p, &cp);
+        let mut covered = vec![0u64; p.outputs()];
+        for task in &tasks {
+            match task.kind {
+                SegKind::Shared { pg, head } => {
+                    for &m in &p.prefix_groups[pg].members {
+                        covered[m as usize * p.heads + head] += task.width as u64;
+                    }
+                }
+                SegKind::Suffix { seq, head } => {
+                    covered[seq * p.heads + head] += task.width as u64;
+                }
+            }
+        }
+        for (out, &c) in covered.iter().enumerate() {
+            let want = u64::from(p.ctx_lens[out / p.heads]);
+            if c != want {
+                return Err(format!("output {out}: covered {c} of {want}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cascade_tasks_gather_fewer_bytes_than_flat_tasks() {
+    // The executor-level dedup claim: on a tile-aligned shared batch the
+    // rolled cascade tasks read strictly fewer KV bytes than the flat
+    // rolling of the same contexts (shared slices count once per task).
+    let lens = vec![128u32; 4];
+    let grouped = CascadeProblem::new(
+        2,
+        lens.clone(),
+        16,
+        vec![PrefixGroup { prefix_len: 64, members: vec![0, 1, 2, 3] }],
+    )
+    .unwrap()
+    .with_tile(16);
+    let flat = CascadeProblem::new(2, lens, 16, vec![]).unwrap().with_tile(16);
+    let gb = rolled_kv_bytes(
+        &roll_cascade_tasks(&grouped, &build_cascade_plan(&grouped, 32)),
+        16,
+    );
+    let fb = rolled_kv_bytes(
+        &roll_cascade_tasks(&flat, &build_cascade_plan(&flat, 32)),
+        16,
+    );
+    // flat: 4 seqs x 128 tokens x 2 heads; cascade: (64 + 4 x 64) x 2.
+    let token = 2 * 16 * 4;
+    assert_eq!(fb, 4 * 128 * 2 * token);
+    assert_eq!(gb, (64 + 4 * 64) * 2 * token);
+    assert!(gb < fb);
 }
 
 #[test]

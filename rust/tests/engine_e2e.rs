@@ -101,6 +101,84 @@ fn varied_prompt_lengths_ragged_batch() {
 }
 
 #[test]
+fn generation_budget_is_exact() {
+    // Regression: the Length check used to run only in decode (after the
+    // push), so a one-token budget emitted two tokens. The budget must be
+    // exact for small and large values, and zero is rejected at submit.
+    let Some((rt, m)) = setup() else { return };
+    let mut e = engine(&rt, &m);
+    for max_new in [1usize, 2, 16] {
+        let id = e.submit(vec![1, 2, 3], max_new).unwrap();
+        let fin = e.run_until_idle().expect("run");
+        assert_eq!(fin.len(), 1, "budget {max_new}");
+        assert_eq!(fin[0].id, id);
+        assert_eq!(
+            fin[0].output.len(),
+            max_new,
+            "budget {max_new} must emit exactly {max_new} tokens"
+        );
+        assert_eq!(fin[0].reason, FinishReason::Length);
+        assert_eq!(e.active(), 0);
+    }
+    assert!(
+        e.submit(vec![1, 2, 3], 0).is_err(),
+        "max_new_tokens = 0 has no contract and is rejected"
+    );
+    // One-token budgets release their whole reservation: a fresh burst of
+    // them cannot exhaust the page pool.
+    for _ in 0..8 {
+        e.submit(vec![7, 8, 9, 10], 1).unwrap();
+    }
+    let fin = e.run_until_idle().expect("run burst");
+    assert_eq!(fin.len(), 8);
+    assert!(fin.iter().all(|f| f.output.len() == 1));
+}
+
+#[test]
+fn cascade_gather_dedups_shared_decode_steps() {
+    // Decode steps whose lanes physically share a prefix run must take
+    // the deduplicated gather and record the measured saving.
+    let Some((rt, m)) = setup() else { return };
+    let mut e = engine(&rt, &m);
+    if e.batch_size() < 2 {
+        eprintln!("skipping: batch size 1 cannot co-schedule sharers");
+        return;
+    }
+    if e.prefill_bucket() < 16 + 2 {
+        eprintln!("skipping: prefill bucket too small for a shared page");
+        return;
+    }
+    // Warm the index with one full page of system prompt.
+    let system: Vec<i32> = (0..16).map(|t| (t * 5 + 1) % 512).collect();
+    let mut first = system.clone();
+    first.extend([40, 41]);
+    e.submit(first, 2).unwrap();
+    e.run_until_idle().expect("warm");
+    assert_eq!(e.metrics.cascade_gather_steps, 0, "solo run stays flat");
+
+    // Two sharers decode together: their leading page run is physical.
+    for tail in 0..2i32 {
+        let mut prompt = system.clone();
+        prompt.extend([50 + tail, 60 + tail]);
+        e.submit(prompt, 6).unwrap();
+    }
+    e.run_until_idle().expect("shared");
+    assert!(
+        e.metrics.cascade_gather_steps > 0,
+        "shared steps must take the cascade gather: {:?}",
+        e.metrics.cascade_gather_steps
+    );
+    assert!(
+        e.metrics.gather_bytes_shared < e.metrics.gather_bytes_flat,
+        "dedup must be measured: {} vs {}",
+        e.metrics.gather_bytes_shared,
+        e.metrics.gather_bytes_flat
+    );
+    let rep = e.metrics.report();
+    assert!(rep.contains("cascade gather"), "{rep}");
+}
+
+#[test]
 fn context_full_terminates_gracefully() {
     let Some((rt, m)) = setup() else { return };
     let mut e = engine(&rt, &m);

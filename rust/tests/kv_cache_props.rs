@@ -174,6 +174,92 @@ fn random_workload_never_leaks_or_double_frees() {
 }
 
 #[test]
+fn gather_shared_equals_flat_gather_on_random_sharing() {
+    // Across random mixes of solo sequences, shared-prefix inserts and
+    // appends (including COW forks of the page lists), the deduplicated
+    // gather composed back into dense views must equal the flat gather
+    // bit-for-bit, while never materializing more bytes than it.
+    prop_check("gather_shared == gather", 40, |rng| {
+        let mut cache = new_cache();
+        let mut active: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..20 {
+            match rng.urange(0, 3) {
+                0 => {
+                    let len = rng.urange(1, 3 * PAGE_TOKENS);
+                    let (k, v) = kv(rng, len);
+                    if cache.insert_seq(next_id, &k, &v, len).is_ok() {
+                        active.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 if !active.is_empty() => {
+                    let donor = *rng.choose(&active);
+                    let full = cache.seq_len(donor).unwrap() / PAGE_TOKENS;
+                    if full == 0 {
+                        continue;
+                    }
+                    let take = rng.urange(1, full + 1);
+                    let shared: Vec<usize> =
+                        cache.seq_pages(donor).unwrap()[..take].to_vec();
+                    let suffix = rng.urange(0, 2 * PAGE_TOKENS);
+                    let (k, v) = kv(rng, suffix);
+                    if cache
+                        .insert_seq_shared(next_id, &shared, &k, &v, suffix)
+                        .is_ok()
+                    {
+                        active.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                2 if !active.is_empty() => {
+                    let id = *rng.choose(&active);
+                    let (k, v) = kv(rng, 1);
+                    let _ = cache.append_token(id, &k, &v);
+                }
+                _ => {}
+            }
+        }
+        if active.is_empty() {
+            return Ok(());
+        }
+        // Random slot layout over the active set, with gaps.
+        let mut slots: Vec<Option<u64>> = Vec::new();
+        let mut ctx = PAGE_TOKENS;
+        for &id in active.iter().take(6) {
+            if rng.urange(0, 4) == 0 {
+                slots.push(None);
+            }
+            slots.push(Some(id));
+            ctx = ctx.max(cache.seq_len(id).unwrap());
+        }
+        let ctx = ctx.next_multiple_of(PAGE_TOKENS);
+        let n = LAYERS * slots.len() * HEADS * ctx * DH;
+        let (mut kf, mut vf) = (vec![0.0; n], vec![0.0; n]);
+        cache
+            .gather(&slots, ctx, &mut kf, &mut vf)
+            .map_err(|e| e.to_string())?;
+        let sg = cache.gather_shared(&slots).map_err(|e| e.to_string())?;
+        let (mut ks, mut vs) = (vec![9.0; n], vec![9.0; n]);
+        sg.compose_dense(ctx, &mut ks, &mut vs)
+            .map_err(|e| e.to_string())?;
+        if kf != ks || vf != vs {
+            return Err("composed views differ from flat gather".into());
+        }
+        if sg.shared_bytes > sg.flat_bytes {
+            return Err(format!(
+                "dedup gather grew: {} > {}",
+                sg.shared_bytes, sg.flat_bytes
+            ));
+        }
+        for id in active.drain(..) {
+            cache.free_seq(id);
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn eviction_frees_only_at_refcount_zero() {
     let mut rng = Rng::new(9);
     let mut cache = new_cache();

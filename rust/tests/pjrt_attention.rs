@@ -6,8 +6,11 @@ use std::path::Path;
 use std::rc::Rc;
 
 use lean_attention::attention::attention_host;
+use lean_attention::partition::cascade::{
+    build_cascade_plan, CascadeProblem, CascadeTensors, PrefixGroup,
+};
 use lean_attention::partition::plan::{build_plan, DecodeProblem, Strategy};
-use lean_attention::runtime::attention_exec::AttentionProblem;
+use lean_attention::runtime::attention_exec::{lean_cascade_host, AttentionProblem};
 use lean_attention::runtime::{AttentionExecutor, Manifest, Runtime};
 use lean_attention::util::rng::Rng;
 use lean_attention::util::testing::assert_allclose;
@@ -133,6 +136,39 @@ fn lean_path_all_strategies_match_oracle() {
         let (o, _) = exec.lean(&case.problem(), &plan).expect("lean exec");
         assert_allclose(&o, &want, 3e-4, 3e-4, strategy.name());
     }
+}
+
+#[test]
+fn lean_cascade_matches_host_oracle_and_host_twin() {
+    let Some(exec) = setup() else { return };
+    // Two sequences share one 256-token (= artifact tile) prefix; a third
+    // is solo; one sharer's context is exactly the prefix (empty suffix).
+    let p = CascadeProblem::new(
+        1,
+        vec![640, 256, 300],
+        64,
+        vec![PrefixGroup { prefix_len: 256, members: vec![0, 1] }],
+    )
+    .unwrap()
+    .with_tile(256);
+    let t = CascadeTensors::random(&p, 11);
+    let cp = build_cascade_plan(&p, 13);
+    cp.plan.validate(&cp.segment_problem).expect("plan valid");
+
+    let (o, lse) = exec.lean_cascade(&p, &t, &cp).expect("lean cascade");
+
+    // Exact oracle over the composed per-sequence K/V.
+    let (k, v, n_max) = t.full_kv(&p);
+    let lens: Vec<u32> = (0..p.outputs())
+        .map(|g| p.ctx_lens[g / p.heads])
+        .collect();
+    let want = attention_host(&t.q, &k, &v, p.outputs(), n_max, 64, &lens);
+    assert_allclose(&o, &want, 3e-4, 3e-4, "lean_cascade vs oracle");
+
+    // And against the artifact-free twin (same driver, host partials).
+    let (o_host, lse_host) = lean_cascade_host(&p, &t, &cp, 8);
+    assert_allclose(&o, &o_host, 3e-4, 3e-4, "pjrt vs host twin");
+    assert_allclose(&lse, &lse_host, 1e-3, 1e-3, "lse pjrt vs host twin");
 }
 
 #[test]
