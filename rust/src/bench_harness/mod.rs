@@ -6,10 +6,12 @@
 pub mod cascade_exec;
 pub mod figures;
 pub mod runner;
+pub mod sampling;
 pub mod table;
 pub mod trace;
 pub mod workload;
 
 pub use cascade_exec::{compare_exec, ExecCase, ExecComparison};
 pub use runner::{bench, BenchResult};
+pub use sampling::{compare_sampling, SamplingCase, SamplingComparison};
 pub use table::Table;

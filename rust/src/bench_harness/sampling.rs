@@ -1,0 +1,259 @@
+//! Flat vs **sibling-cascade** decode for parallel sampling: the
+//! measurement behind `leanattn bench --sampling`.
+//!
+//! A fork family — one parent plus `siblings - 1` zero-copy forks — is
+//! built on a real [`PagedKvCache`] (refcount-only forks, divergent
+//! suffixes appended with copy-on-write), and the decode-side gather is
+//! measured both ways over the identical physical pages:
+//!
+//! * **flat** — [`PagedKvCache::gather`] materializes every sibling's
+//!   full context, shared history included, once per sibling;
+//! * **sibling-cascade** — [`PagedKvCache::gather_shared`] materializes
+//!   the family's shared leading page run once per *group*.
+//!
+//! The same shape is also posed to the cascade attention executor
+//! (flat-lean vs cascade over identical numbers, via
+//! [`compare_exec`]), so the report covers both halves of a decode
+//! step: KV gather traffic and attention execution. Gathered-KV byte
+//! counts are exact by construction; wall-clock columns carry the usual
+//! timing noise.
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::PagedKvCache;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::timer::sample_us;
+
+use super::cascade_exec::{compare_exec, ExecCase, ExecComparison};
+
+/// Shape of one fork-family comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingCase {
+    /// Sequences in the fork family (parent + forks), >= 1.
+    pub siblings: usize,
+    /// Tokens shared by the family at fork time.
+    pub history: usize,
+    /// Divergent tokens appended per sibling after the fork.
+    pub suffix: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub page_tokens: usize,
+    /// LeanTile width for the attention-executor comparison.
+    pub tile: usize,
+}
+
+impl SamplingCase {
+    /// The `leanattn bench --sampling` default shape.
+    pub fn default_case() -> SamplingCase {
+        SamplingCase {
+            siblings: 4,
+            history: 256,
+            suffix: 64,
+            layers: 2,
+            heads: 2,
+            head_dim: 16,
+            page_tokens: 16,
+            tile: 32,
+        }
+    }
+
+    /// CI smoke shape: small and fast, still >= 2 siblings with a
+    /// nonzero shared history so every assertion stays meaningful.
+    pub fn smoke() -> SamplingCase {
+        SamplingCase {
+            siblings: 2,
+            history: 64,
+            suffix: 16,
+            ..SamplingCase::default_case()
+        }
+    }
+}
+
+/// Outcome of one flat vs sibling-cascade comparison.
+pub struct SamplingComparison {
+    pub case: SamplingCase,
+    /// Pages allocated by the fork calls themselves (refcount-only
+    /// forking means exactly 0).
+    pub fork_fresh_pages: usize,
+    /// Copy-on-write page clones performed as the siblings diverged.
+    pub cow_copies: usize,
+    /// K+V bytes the flat gather materializes per decode step.
+    pub flat_gather_bytes: usize,
+    /// K+V bytes the sibling-cascade gather materializes per step.
+    pub shared_gather_bytes: usize,
+    pub flat_us: Summary,
+    pub shared_us: Summary,
+    /// Attention-executor comparison over the same prefix structure.
+    pub attention: ExecComparison,
+}
+
+impl SamplingComparison {
+    /// Fraction of flat gather traffic the sibling-cascade path avoids.
+    pub fn bytes_saved_fraction(&self) -> f64 {
+        if self.flat_gather_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - self.shared_gather_bytes as f64 / self.flat_gather_bytes as f64
+    }
+}
+
+/// Build the fork family on a paged cache, diverge it, and measure both
+/// gather paths plus the attention-executor comparison. Asserts the two
+/// gathers agree bit-for-bit before timing anything.
+pub fn compare_sampling(
+    case: SamplingCase,
+    iters: usize,
+    seed: u64,
+) -> Result<SamplingComparison> {
+    ensure!(case.siblings >= 1, "need at least one sequence");
+    ensure!(case.history >= 1, "need a nonzero shared history");
+    let tokens_per_seq = case.history + case.suffix;
+    let pages_per_seq = tokens_per_seq.div_ceil(case.page_tokens);
+    let total_pages = case.siblings * pages_per_seq + 2;
+    let mut cache = PagedKvCache::new(
+        case.layers,
+        case.heads,
+        case.head_dim,
+        case.page_tokens,
+        total_pages,
+    );
+    let mut rng = Rng::new(seed);
+
+    // Parent holds the shared history; forks are refcount-only.
+    let n = case.layers * case.heads * case.history * case.head_dim;
+    let (k, v) = (rng.normal_vec(n), rng.normal_vec(n));
+    cache.insert_seq(0, &k, &v, case.history)?;
+    let free_before = cache.free_pages();
+    for child in 1..case.siblings as u64 {
+        cache.fork_seq(0, child)?;
+    }
+    let fork_fresh_pages = free_before - cache.free_pages();
+
+    // Diverge: every sibling appends its own suffix (COW clones the
+    // shared partial last page on first touch, at most once per holder).
+    let plane = case.layers * case.heads * case.head_dim;
+    let mut cow_copies = 0usize;
+    for _ in 0..case.suffix {
+        for id in 0..case.siblings as u64 {
+            let (nk, nv) = (rng.normal_vec(plane), rng.normal_vec(plane));
+            if cache.append_token(id, &nk, &nv)? {
+                cow_copies += 1;
+            }
+        }
+    }
+
+    // Both gathers over the whole family, proven bit-identical first.
+    let slots: Vec<Option<u64>> = (0..case.siblings as u64).map(Some).collect();
+    let ctx = pages_per_seq * case.page_tokens;
+    let nelem = case.layers * case.siblings * case.heads * ctx * case.head_dim;
+    let (mut kf, mut vf) = (vec![0.0f32; nelem], vec![0.0f32; nelem]);
+    cache.gather(&slots, ctx, &mut kf, &mut vf)?;
+    let sg = cache.gather_shared(&slots)?;
+    let (mut ks, mut vs) = (vec![1.0f32; nelem], vec![1.0f32; nelem]);
+    sg.compose_dense(ctx, &mut ks, &mut vs)?;
+    ensure!(kf == ks && vf == vs, "sibling-cascade gather diverged from flat");
+    let (flat_gather_bytes, shared_gather_bytes) = (sg.flat_bytes, sg.shared_bytes);
+
+    let flat_samples = sample_us(iters, 0.0, || {
+        cache.gather(&slots, ctx, &mut kf, &mut vf).expect("flat gather");
+    });
+    let shared_samples = sample_us(iters, 0.0, || {
+        let sg = cache.gather_shared(&slots).expect("shared gather");
+        sg.compose_dense(ctx, &mut ks, &mut vs).expect("compose");
+    });
+
+    // Attention side: the same prefix structure through the cascade
+    // executor (host oracle; `leanattn bench --cascade-exec` covers the
+    // PJRT-artifact variant).
+    let attention = compare_exec(
+        ExecCase {
+            batch: case.siblings.max(2),
+            prefix: case.history as u32,
+            suffix: case.suffix.max(1) as u32,
+            heads: case.heads,
+            head_dim: case.head_dim,
+            tile: case.tile,
+            slots: 64,
+        },
+        iters,
+        None,
+        seed ^ 0x5A5A,
+    )?;
+
+    Ok(SamplingComparison {
+        case,
+        fork_fresh_pages,
+        cow_copies,
+        flat_gather_bytes,
+        shared_gather_bytes,
+        flat_us: Summary::of(&flat_samples),
+        shared_us: Summary::of(&shared_samples),
+        attention,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fork_family_dedups_and_accounts_cow() {
+        let case = SamplingCase {
+            siblings: 3,
+            history: 20, // 2.5 pages of 8 -> partial last page at fork
+            suffix: 5,
+            layers: 1,
+            heads: 2,
+            head_dim: 4,
+            page_tokens: 8,
+            tile: 16,
+        };
+        let c = compare_sampling(case, 2, 7).expect("comparison");
+        assert_eq!(c.fork_fresh_pages, 0, "forks are refcount-only");
+        // 3 holders of the partial page -> 2 COW clones (the last holder
+        // owns the only remaining reference and writes in place).
+        assert_eq!(c.cow_copies, 2);
+        assert!(
+            c.shared_gather_bytes < c.flat_gather_bytes,
+            "{} vs {}",
+            c.shared_gather_bytes,
+            c.flat_gather_bytes
+        );
+        // Shared run = the 2 full history pages (16 tokens), counted once
+        // instead of three times. K+V × layers(1) × heads(2) × dh(4) × f32.
+        let token_bytes = 2 * 2 * 4 * 4;
+        assert_eq!(c.flat_gather_bytes, 3 * 25 * token_bytes);
+        assert_eq!(c.shared_gather_bytes, (16 + 3 * 9) * token_bytes);
+        assert!(c.bytes_saved_fraction() > 0.0);
+        assert!(c.attention.cascade_kv_bytes < c.attention.flat_kv_bytes);
+    }
+
+    #[test]
+    fn page_aligned_fork_never_cows() {
+        let case = SamplingCase {
+            siblings: 4,
+            history: 16, // exactly 2 pages of 8
+            suffix: 3,
+            layers: 1,
+            heads: 1,
+            head_dim: 4,
+            page_tokens: 8,
+            tile: 8,
+        };
+        let c = compare_sampling(case, 2, 9).expect("comparison");
+        assert_eq!(c.fork_fresh_pages, 0);
+        assert_eq!(c.cow_copies, 0, "page-aligned fork never copies");
+        assert!(c.shared_gather_bytes < c.flat_gather_bytes);
+    }
+
+    #[test]
+    fn smoke_case_upholds_the_bench_assertions() {
+        let c = compare_sampling(SamplingCase::smoke(), 1, 3).expect("smoke");
+        assert_eq!(c.fork_fresh_pages, 0);
+        assert!(c.shared_gather_bytes < c.flat_gather_bytes);
+        assert!(c.attention.cascade_kv_bytes < c.attention.flat_kv_bytes);
+        assert!(c.attention.max_err < 1e-3);
+    }
+}

@@ -72,6 +72,16 @@ impl ContinuousBatcher {
         admitted
     }
 
+    /// Place an engine-created sequence (a fork sibling) directly into a
+    /// free slot, bypassing the FCFS waiting queue — siblings must join
+    /// their family's decode wave immediately, not queue behind unrelated
+    /// requests. Returns the slot, or `None` when every slot is taken.
+    pub fn occupy(&mut self, id: RequestId) -> Option<usize> {
+        let si = self.slots.iter().position(|s| s.is_none())?;
+        self.slots[si] = Some(id);
+        Some(si)
+    }
+
     /// Free the slot owning `id` (request finished or evicted).
     pub fn release(&mut self, id: RequestId) {
         for s in &mut self.slots {
@@ -138,6 +148,23 @@ mod tests {
         assert_eq!(b.peek_waiting().unwrap().id, 3);
         b.admit(|_| true);
         assert_eq!(b.peek_waiting().unwrap().id, 4);
+    }
+
+    #[test]
+    fn occupy_fills_free_slots_and_respects_capacity() {
+        let mut b = ContinuousBatcher::new(2);
+        b.enqueue(req(1));
+        b.admit(|_| true);
+        // A fork sibling takes the remaining slot directly.
+        assert_eq!(b.occupy(10), Some(1));
+        assert_eq!(b.active_len(), 2);
+        assert_eq!(b.occupy(11), None, "no slot left");
+        // Releasing the sibling frees its slot like any request.
+        b.release(10);
+        assert_eq!(b.occupy(11), Some(1));
+        // The waiting queue is untouched by occupy.
+        b.enqueue(req(2));
+        assert_eq!(b.waiting_len(), 1);
     }
 
     #[test]

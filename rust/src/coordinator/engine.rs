@@ -1,7 +1,8 @@
 //! The decode-serving engine: continuous batching over the PJRT model
-//! artifacts with a paged KV cache, greedy sampling, a radix prefix cache
-//! with copy-on-write page sharing, and a per-step LeanAttention hardware
-//! projection.
+//! artifacts with a paged KV cache, a deterministic logits-sampling
+//! pipeline, a radix prefix cache with copy-on-write page sharing, a
+//! zero-copy `fork` entry point for parallel sampling, and a per-step
+//! LeanAttention hardware projection.
 //!
 //! One `step()` is one Orca-style iteration: admit waiting requests into
 //! free slots (batch prefill), then run one decode step for every active
@@ -17,18 +18,29 @@
 //! full pages are registered back into the index so later requests can
 //! share them; under memory pressure the index evicts cold pages nobody
 //! else references.
+//!
+//! **Parallel sampling.** [`Engine::fork`] clones a live sequence into
+//! `n` siblings purely by KV page refcounts (zero page copies at fork
+//! time; the shared partial last page is copy-on-write cloned lazily as
+//! holders diverge). Each sibling resamples the parent's pending token
+//! with its own deterministic RNG, the family's full-page history is
+//! registered in the radix index, and the decode loop's prefix grouping
+//! streams the shared history once per group — generated sharing rides
+//! the same cascade machinery as shared prompts.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::partition::cascade::{CascadeProblem, PrefixGroup};
 use crate::partition::plan::{DecodeProblem, Strategy};
 use crate::runtime::{Manifest, ModelRuntime, Runtime};
+use crate::sampling::{sample_token, seq_rng, ForkTree, SamplingParams};
 use crate::sim::cascade::simulate_cascade;
 use crate::sim::{simulate, GpuArch};
+use crate::util::rng::Rng;
 
 use super::batcher::ContinuousBatcher;
 use super::kv_cache::PagedKvCache;
@@ -49,6 +61,13 @@ pub struct EngineConfig {
     pub project_hardware: bool,
     /// Share prompt-prefix KV pages across requests via the radix index.
     pub enable_prefix_cache: bool,
+    /// Default logits pipeline for `submit` (greedy unless overridden
+    /// per request via [`Engine::submit_with`]).
+    pub sampling: SamplingParams,
+    /// Seed of the per-sequence sampling RNGs; with a fixed seed every
+    /// generation — including forked best-of-n/beam candidates — is
+    /// bit-reproducible.
+    pub seed: u64,
 }
 
 impl Default for EngineConfig {
@@ -59,6 +78,8 @@ impl Default for EngineConfig {
             page_tokens: 16,
             project_hardware: true,
             enable_prefix_cache: true,
+            sampling: SamplingParams::default(),
+            seed: 0,
         }
     }
 }
@@ -68,6 +89,22 @@ struct ActiveSeq {
     max_new: usize,
     last_token: i32,
     generated: Vec<i32>,
+    /// Prompt + sampled tokens (the repetition-penalty history; its
+    /// first `cache.seq_len` entries are KV-backed, the final entry is
+    /// the pending token whose KV lands next step).
+    tokens: Vec<i32>,
+    /// Per-token logprob trace under the processed distribution.
+    logprobs: Vec<f32>,
+    /// Running sum of `logprobs` (the best-of-n / beam score).
+    cum_logprob: f64,
+    /// Raw logits of the most recent sampling step — what a fork
+    /// sibling resamples its divergent pending token from.
+    last_logits: Vec<f32>,
+    /// This sequence's sampling pipeline and private RNG.
+    params: SamplingParams,
+    rng: Rng,
+    /// The sequence this one was forked off, if any.
+    parent: Option<RequestId>,
     arrival: Instant,
     prefill_started: Instant,
     first_token_at: Instant,
@@ -96,6 +133,7 @@ pub struct Engine {
     batcher: ContinuousBatcher,
     active: HashMap<RequestId, ActiveSeq>,
     prefix_index: RadixPrefixIndex,
+    fork_tree: ForkTree,
     pub metrics: Metrics,
     arch: GpuArch,
     next_id: RequestId,
@@ -133,6 +171,7 @@ impl Engine {
             batcher,
             active: HashMap::new(),
             prefix_index,
+            fork_tree: ForkTree::new(),
             metrics: Metrics::default(),
             arch: GpuArch::a100(),
             next_id: 1,
@@ -175,11 +214,64 @@ impl Engine {
         self.prefix_index.num_pages()
     }
 
-    /// Submit a request; returns its id. The prompt must fit the prefill
-    /// bucket and the vocab, and the generation budget must be at least
-    /// one token (prefill always produces one, so `max_new_tokens = 0`
-    /// has no meaningful contract and is rejected).
+    /// KV pages currently holding data (shared pages counted once).
+    pub fn kv_used_pages(&self) -> usize {
+        self.cache.used_pages()
+    }
+
+    /// Free batch slots available to admissions and forks.
+    pub fn free_slots(&self) -> usize {
+        self.batcher.free_slots()
+    }
+
+    /// Whether `id` is resident in a batch slot right now.
+    pub fn is_active_seq(&self, id: RequestId) -> bool {
+        self.active.contains_key(&id)
+    }
+
+    /// Cumulative logprob of a live sequence's sampled tokens.
+    pub fn cum_logprob(&self, id: RequestId) -> Option<f64> {
+        self.active.get(&id).map(|s| s.cum_logprob)
+    }
+
+    /// Tokens generated so far by a live sequence.
+    pub fn generated_len(&self, id: RequestId) -> Option<usize> {
+        self.active.get(&id).map(|s| s.generated.len())
+    }
+
+    /// Fork lineage of the engine's sequences.
+    pub fn fork_tree(&self) -> &ForkTree {
+        &self.fork_tree
+    }
+
+    /// Longest prefix of `prompt` (in tokens) this engine's radix index
+    /// currently holds, without touching LRU state — the router's
+    /// prefix-affinity probe.
+    pub fn peek_prefix_tokens(&self, prompt: &[i32]) -> usize {
+        if !self.config.enable_prefix_cache {
+            return 0;
+        }
+        self.prefix_index.peek(prompt).tokens
+    }
+
+    /// Submit a request with the engine's default sampling parameters.
     pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> Result<RequestId> {
+        let params = self.config.sampling.clone();
+        self.submit_with(prompt, max_new_tokens, params)
+    }
+
+    /// Submit a request with explicit sampling parameters; returns its
+    /// id. The prompt must fit the prefill bucket and the vocab, and the
+    /// generation budget must be at least one token (prefill always
+    /// produces one, so `max_new_tokens = 0` has no meaningful contract
+    /// and is rejected).
+    pub fn submit_with(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        params: SamplingParams,
+    ) -> Result<RequestId> {
+        params.validate()?;
         ensure!(max_new_tokens >= 1, "max_new_tokens must be >= 1");
         ensure!(
             !prompt.is_empty() && prompt.len() <= self.model.art.prefill_bucket,
@@ -200,7 +292,8 @@ impl Engine {
         );
         let id = self.next_id;
         self.next_id += 1;
-        self.batcher.enqueue(Request::new(id, prompt, max_new_tokens));
+        self.batcher
+            .enqueue(Request::new(id, prompt, max_new_tokens).with_params(params));
         Ok(id)
     }
 
@@ -220,6 +313,159 @@ impl Engine {
             all.extend(self.step()?);
         }
         Ok(all)
+    }
+
+    /// Fork a live sequence into `n` siblings that share its **entire**
+    /// KV history by reference — zero page copies at fork time (pure
+    /// refcounts via [`PagedKvCache::fork_seq`]; the shared partial last
+    /// page, if any, is copy-on-write cloned lazily on each holder's
+    /// next append). Each sibling resamples the parent's pending token
+    /// from the stored last-step logits with its own deterministic RNG,
+    /// so candidates diverge immediately while physically sharing every
+    /// decoded page. Siblings enter free batch slots directly (no FCFS
+    /// queue), the parent's full-page history is registered in the radix
+    /// index, and the family's shared leading page run is exposed to the
+    /// decode loop's prefix grouping — the next decode step streams the
+    /// shared history once per group through the cascade gather instead
+    /// of once per sibling.
+    ///
+    /// Returns the sibling ids. Fails (leaving the engine untouched)
+    /// when `n` free slots or the siblings' KV page reservations are not
+    /// available.
+    pub fn fork(&mut self, seq: RequestId, n: usize) -> Result<Vec<RequestId>> {
+        ensure!(n >= 1, "fork needs n >= 1");
+        ensure!(
+            self.active.contains_key(&seq),
+            "sequence {seq} is not an active sequence"
+        );
+        let cache_len = self.cache.seq_len(seq).expect("active sequence has cache");
+        let pages = self.cache.seq_pages(seq).expect("active").to_vec();
+        let full_pages = cache_len / self.config.page_tokens;
+        let free = self.batcher.free_slots();
+        ensure!(free >= n, "fork needs {n} free batch slots, {free} available");
+
+        // Snapshot the parent state every sibling clones.
+        let parent = &self.active[&seq];
+        let p_prompt_len = parent.prompt_len;
+        let p_max_new = parent.max_new;
+        let p_generated = parent.generated.clone();
+        let p_tokens = parent.tokens.clone();
+        let p_logprobs = parent.logprobs.clone();
+        let p_cum = parent.cum_logprob;
+        let p_logits = parent.last_logits.clone();
+        let p_params = parent.params.clone();
+
+        // Reserve fresh pages for every sibling's remaining budget: its
+        // final context minus the full pages it shares forever (the
+        // shared partial last page is replaced by a COW clone out of
+        // this same budget).
+        let budget = (p_prompt_len + p_max_new).min(self.model.art.ctx_bucket);
+        let need = self.cache.pages_for(budget).saturating_sub(full_pages);
+        let total = self.cache.total_pages();
+        ensure!(
+            self.committed_pages + n * need <= total,
+            "KV cache cannot hold {n} fork siblings: need {} fresh pages, {} uncommitted",
+            n * need,
+            total - self.committed_pages
+        );
+
+        // Register the parent's KV-backed history (prompt + decoded
+        // tokens, full pages only) in the radix index: future prompts
+        // sharing the history can reuse it, and the family's pages gain
+        // the same LRU protection as shared prompts. These pages came
+        // out of the parent's reservation, so keeping them indexed means
+        // the parent's release must not decommit them.
+        if self.config.enable_prefix_cache && full_pages > 0 {
+            let fresh = self.prefix_index.insert(&p_tokens[..cache_len], &pages);
+            for &pg in &fresh {
+                self.cache.retain_page(pg)?;
+            }
+            self.active.get_mut(&seq).unwrap().index_kept += fresh.len();
+        }
+
+        // The family's physically-shared leading full pages: the decode
+        // loop groups sequences whose runs share a leading segment into
+        // one cascade prefix group, parent included.
+        let prefix_run: Vec<usize> = pages[..full_pages].to_vec();
+
+        let now = Instant::now();
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.cache.fork_seq(seq, id)?;
+            self.batcher.occupy(id).expect("free slots were checked above");
+            // Resample the pending token with the sibling's own RNG:
+            // divergence starts at the fork token, not one step later.
+            let mut rng = seq_rng(self.config.seed, id);
+            let s = sample_token(&p_logits, &p_tokens[..cache_len], &p_params, &mut rng);
+            let mut generated = p_generated.clone();
+            *generated.last_mut().unwrap() = s.token;
+            let mut tokens = p_tokens.clone();
+            *tokens.last_mut().unwrap() = s.token;
+            let mut logprobs = p_logprobs.clone();
+            let cum_logprob =
+                p_cum - f64::from(*logprobs.last().unwrap()) + f64::from(s.logprob);
+            *logprobs.last_mut().unwrap() = s.logprob;
+            self.active.insert(
+                id,
+                ActiveSeq {
+                    prompt_len: p_prompt_len,
+                    max_new: p_max_new,
+                    last_token: s.token,
+                    generated,
+                    tokens,
+                    logprobs,
+                    cum_logprob,
+                    last_logits: p_logits.clone(),
+                    params: p_params.clone(),
+                    rng,
+                    parent: Some(seq),
+                    arrival: now,
+                    prefill_started: now,
+                    first_token_at: now,
+                    reserved_pages: need,
+                    index_kept: 0,
+                    prefix_pages: prefix_run.clone(),
+                },
+            );
+            self.fork_tree.register(seq, id, cache_len);
+            ids.push(id);
+        }
+        self.committed_pages += n * need;
+        self.active.get_mut(&seq).unwrap().prefix_pages = prefix_run;
+        self.metrics.sampling.fork_calls += 1;
+        self.metrics.sampling.forked_siblings += n;
+        Ok(ids)
+    }
+
+    /// Cancel a live sequence (beam pruning): frees its batch slot, KV
+    /// pages and reservation, and returns a [`FinishReason::Cancelled`]
+    /// record carrying the partial output and logprob trace.
+    pub fn cancel(&mut self, id: RequestId) -> Result<FinishedRequest> {
+        let seq = self
+            .active
+            .remove(&id)
+            .ok_or_else(|| anyhow!("sequence {id} is not an active sequence"))?;
+        self.committed_pages -= seq.reserved_pages - seq.index_kept;
+        self.batcher.release(id);
+        self.cache.free_seq(id);
+        self.fork_tree.remove(id);
+        self.metrics.sampling.cancelled += 1;
+        self.metrics.requests_finished += 1;
+        let now = Instant::now();
+        Ok(FinishedRequest {
+            id,
+            prompt_len: seq.prompt_len,
+            output: seq.generated,
+            reason: FinishReason::Cancelled,
+            queue_s: (seq.prefill_started - seq.arrival).as_secs_f64(),
+            prefill_s: (seq.first_token_at - seq.prefill_started).as_secs_f64(),
+            decode_s: (now - seq.first_token_at).as_secs_f64(),
+            cum_logprob: seq.cum_logprob,
+            logprobs: seq.logprobs,
+            parent: seq.parent,
+        })
     }
 
     fn admit_and_prefill(&mut self, finished: &mut Vec<FinishedRequest>) -> Result<()> {
@@ -395,9 +641,12 @@ impl Engine {
                 prefix_run = pages[..full].to_vec();
             }
 
-            // First generated token from the prefill logits.
-            let logits = &out.logits[slot * vocab..(slot + 1) * vocab];
-            let first = argmax(logits);
+            // First generated token: the sampling pipeline over the
+            // prefill logits with this sequence's own deterministic RNG.
+            let logits = out.logits[slot * vocab..(slot + 1) * vocab].to_vec();
+            let mut rng = seq_rng(self.config.seed, r.id);
+            let s = sample_token(&logits, &r.prompt, &r.params, &mut rng);
+            let first = s.token;
             let now = Instant::now();
             self.metrics.tokens_generated += 1;
 
@@ -414,6 +663,9 @@ impl Engine {
                     queue_s: (t0 - r.arrival).as_secs_f64(),
                     prefill_s: (now - t0).as_secs_f64(),
                     decode_s: 0.0,
+                    cum_logprob: f64::from(s.logprob),
+                    logprobs: vec![s.logprob],
+                    parent: None,
                 });
                 self.batcher.release(r.id);
                 self.cache.free_seq(r.id);
@@ -421,6 +673,8 @@ impl Engine {
                 continue;
             }
 
+            let mut tokens = r.prompt;
+            tokens.push(first);
             self.active.insert(
                 r.id,
                 ActiveSeq {
@@ -428,6 +682,13 @@ impl Engine {
                     max_new: r.max_new_tokens,
                     last_token: first,
                     generated: vec![first],
+                    tokens,
+                    logprobs: vec![s.logprob],
+                    cum_logprob: f64::from(s.logprob),
+                    last_logits: logits,
+                    params: r.params,
+                    rng,
+                    parent: None,
                     arrival: r.arrival,
                     prefill_started: t0,
                     first_token_at: now,
@@ -530,9 +791,14 @@ impl Engine {
 
             let seq = self.active.get_mut(&id).unwrap();
             let logits = &out.logits[bi * vocab..(bi + 1) * vocab];
-            let next = argmax(logits);
-            seq.generated.push(next);
-            seq.last_token = next;
+            let s = sample_token(logits, &seq.tokens, &seq.params, &mut seq.rng);
+            seq.generated.push(s.token);
+            seq.tokens.push(s.token);
+            seq.logprobs.push(s.logprob);
+            seq.cum_logprob += f64::from(s.logprob);
+            seq.last_token = s.token;
+            seq.last_logits.clear();
+            seq.last_logits.extend_from_slice(logits);
             self.metrics.tokens_generated += 1;
 
             let cache_len = self.cache.seq_len(id).unwrap();
@@ -559,9 +825,13 @@ impl Engine {
                     prefill_s: (seq.first_token_at - seq.prefill_started)
                         .as_secs_f64(),
                     decode_s: (now - seq.first_token_at).as_secs_f64(),
+                    cum_logprob: seq.cum_logprob,
+                    logprobs: seq.logprobs,
+                    parent: seq.parent,
                 });
                 self.batcher.release(id);
                 self.cache.free_seq(id);
+                self.fork_tree.remove(id);
                 self.metrics.requests_finished += 1;
             }
         }
@@ -594,7 +864,9 @@ impl Engine {
                 }
             }
         }
-        let mut by_first: HashMap<usize, Vec<usize>> = HashMap::new();
+        // BTreeMap: group order is deterministic, so projections — and
+        // anything downstream of group order — reproduce across runs.
+        let mut by_first: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
         for (i, (run, _)) in runs.iter().enumerate() {
             by_first.entry(run[0]).or_default().push(i);
         }
@@ -672,28 +944,9 @@ impl Engine {
     }
 }
 
-fn argmax(xs: &[f32]) -> i32 {
-    let mut best = 0usize;
-    let mut bv = f32::NEG_INFINITY;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > bv {
-            bv = x;
-            best = i;
-        }
-    }
-    best as i32
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn argmax_basics() {
-        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
-        assert_eq!(argmax(&[f32::NEG_INFINITY, -5.0]), 1);
-        assert_eq!(argmax(&[2.0]), 0);
-    }
 
     #[test]
     fn config_default_enables_prefix_cache() {
@@ -702,6 +955,14 @@ mod tests {
         assert!(c.project_hardware);
     }
 
-    // Engine integration tests (need artifacts + PJRT) live in
-    // rust/tests/engine_e2e.rs.
+    #[test]
+    fn config_default_sampling_is_greedy_and_seeded() {
+        let c = EngineConfig::default();
+        assert!(c.sampling.is_greedy(), "greedy decode stays the default");
+        assert_eq!(c.seed, 0);
+    }
+
+    // Engine integration tests — including fork/cancel, best-of-n and
+    // beam determinism, and the fork COW accounting — need artifacts +
+    // PJRT and live in rust/tests/engine_e2e.rs.
 }

@@ -212,6 +212,33 @@ impl PagedKvCache {
         Ok(())
     }
 
+    /// Fork a live sequence: register `child` with the same page list
+    /// and length as `parent`, taking one reference per page. **No page
+    /// is copied** — the fork is pure refcount bookkeeping, and the
+    /// shared partial last page (if any) is cloned lazily by
+    /// copy-on-write on each holder's next [`Self::append_token`]. This
+    /// is the storage half of parallel sampling (best-of-n, beam
+    /// search): `n` siblings of a `t`-token parent cost zero bytes at
+    /// fork time and at most one page clone each as they diverge.
+    pub fn fork_seq(&mut self, parent: RequestId, child: RequestId) -> Result<()> {
+        ensure!(
+            !self.seqs.contains_key(&child),
+            "fork target sequence {child} already cached"
+        );
+        let entry = self
+            .seqs
+            .get(&parent)
+            .ok_or_else(|| anyhow::anyhow!("fork source sequence {parent} not cached"))?;
+        let pages = entry.pages.clone();
+        let len = entry.len;
+        for &p in &pages {
+            // Parent pages are live by construction.
+            self.ref_counts[p] += 1;
+        }
+        self.seqs.insert(child, SeqEntry { pages, len });
+        Ok(())
+    }
+
     /// Append one token's K/V rows (`[layers, heads, head_dim]` each).
     /// Returns whether a copy-on-write page clone happened (the target
     /// page was shared with another holder).
@@ -887,6 +914,124 @@ mod tests {
         assert_eq!(sg.shared_bytes, sg.flat_bytes, "no sharing, no dedup");
         assert_eq!(sg.shared_lane_count(), 0);
         assert_gather_equivalent(&c, &slots, 16);
+    }
+
+    #[test]
+    fn fork_seq_is_refcount_only_zero_page_copies() {
+        // The acceptance invariant of `Engine::fork`: forking allocates
+        // nothing — n siblings of a live sequence cost zero pages at
+        // fork time, only refcounts move.
+        let mut c = cache(); // page_tokens 8
+        let mut rng = Rng::new(31);
+        let len = 13; // 2 pages, the second partial
+        let k = rows(&mut rng, 2, 3, len, 4);
+        let v = rows(&mut rng, 2, 3, len, 4);
+        c.insert_seq(1, &k, &v, len).unwrap();
+        let free_before = c.free_pages();
+        let pages: Vec<usize> = c.seq_pages(1).unwrap().to_vec();
+
+        for child in 2..=4u64 {
+            c.fork_seq(1, child).unwrap();
+        }
+        assert_eq!(c.free_pages(), free_before, "fork must allocate zero pages");
+        for &p in &pages {
+            assert_eq!(c.page_ref(p), 4, "parent + 3 forks hold every page");
+        }
+        for child in 2..=4u64 {
+            assert_eq!(c.seq_len(child), Some(len));
+            assert_eq!(c.seq_pages(child).unwrap(), pages.as_slice());
+        }
+
+        // Every fork reads the identical bytes as the parent.
+        let ctx = 16;
+        let n = 2 * 2 * 3 * ctx * 4;
+        let (mut ko, mut vo) = (vec![0.0; n], vec![0.0; n]);
+        c.gather(&[Some(1), Some(3)], ctx, &mut ko, &mut vo).unwrap();
+        // Lanes interleave per layer; spot-check layer 0's two lanes.
+        let lane = 3 * ctx * 4;
+        assert_eq!(&ko[..lane], &ko[lane..2 * lane], "fork view == parent view");
+
+        // Freeing forks returns only refcounts; the last holder frees.
+        for child in 2..=4u64 {
+            c.free_seq(child);
+        }
+        assert_eq!(c.free_pages(), free_before);
+        c.free_seq(1);
+        assert_eq!(c.free_pages(), 16);
+    }
+
+    #[test]
+    fn forked_partial_page_cows_once_per_sibling() {
+        // Fork with a partial last page: every holder's first divergent
+        // append clones that page exactly once — except the last holder,
+        // which by then owns the only reference and writes in place. So
+        // `siblings` holders yield `siblings - 1` COW copies.
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 12);
+        let mut rng = Rng::new(32);
+        let len = 6; // page 0 full, page 1 half-full
+        let k = rows(&mut rng, 1, 1, len, 2);
+        let v = rows(&mut rng, 1, 1, len, 2);
+        c.insert_seq(0, &k, &v, len).unwrap();
+        for child in 1..4u64 {
+            c.fork_seq(0, child).unwrap();
+        }
+        let mut cows = 0;
+        for id in 0..4u64 {
+            let (nk, nv) = (rng.normal_vec(2), rng.normal_vec(2));
+            if c.append_token(id, &nk, &nv).unwrap() {
+                cows += 1;
+            }
+        }
+        assert_eq!(cows, 3, "4 holders of a partial page -> 3 COW clones");
+        // Divergent tails: every sequence kept its own token 6 while the
+        // shared 6-token history stayed identical.
+        let full_page0: Vec<usize> =
+            (0..4u64).map(|id| c.seq_pages(id).unwrap()[0]).collect();
+        assert!(full_page0.windows(2).all(|w| w[0] == w[1]), "full page still shared");
+        for id in 0..4u64 {
+            c.free_seq(id);
+        }
+        assert_eq!(c.free_pages(), 12);
+    }
+
+    #[test]
+    fn forked_page_aligned_history_never_cows() {
+        // Fork exactly at a page boundary: appends go into fresh pages,
+        // the shared history is immutable, zero COW copies.
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 12);
+        let mut rng = Rng::new(33);
+        let len = 8; // exactly 2 full pages
+        let k = rows(&mut rng, 1, 1, len, 2);
+        let v = rows(&mut rng, 1, 1, len, 2);
+        c.insert_seq(0, &k, &v, len).unwrap();
+        for child in 1..3u64 {
+            c.fork_seq(0, child).unwrap();
+        }
+        for id in 0..3u64 {
+            for _ in 0..3 {
+                let (nk, nv) = (rng.normal_vec(2), rng.normal_vec(2));
+                assert!(
+                    !c.append_token(id, &nk, &nv).unwrap(),
+                    "page-aligned fork must never copy"
+                );
+            }
+        }
+        for id in 0..3u64 {
+            c.free_seq(id);
+        }
+        assert_eq!(c.free_pages(), 12);
+    }
+
+    #[test]
+    fn fork_of_unknown_or_duplicate_sequence_is_rejected() {
+        let mut c = PagedKvCache::new(1, 1, 2, 2, 2);
+        assert!(c.fork_seq(9, 10).is_err(), "unknown parent");
+        c.insert_seq(1, &[1.0, 2.0], &[3.0, 4.0], 1).unwrap();
+        c.fork_seq(1, 2).unwrap();
+        assert!(c.fork_seq(1, 2).is_err(), "duplicate child id");
+        // Failed forks must not corrupt refcounts.
+        let p = c.seq_pages(1).unwrap()[0];
+        assert_eq!(c.page_ref(p), 2);
     }
 
     #[test]

@@ -39,6 +39,19 @@ impl PrefixCacheStats {
     }
 }
 
+/// Parallel-sampling (fork/prune) counters.
+#[derive(Clone, Debug, Default)]
+pub struct SamplingStats {
+    /// `Engine::fork` calls served.
+    pub fork_calls: usize,
+    /// Sibling sequences created by forks (refcount-only — zero page
+    /// copies at fork time; divergence COWs show up in
+    /// [`PrefixCacheStats::cow_copies`]).
+    pub forked_siblings: usize,
+    /// Sequences cancelled mid-generation (beam pruning).
+    pub cancelled: usize,
+}
+
 /// Accumulated engine counters.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -73,6 +86,8 @@ pub struct Metrics {
     pub gather_bytes_shared: u64,
     /// Prefix-cache counters.
     pub prefix: PrefixCacheStats,
+    /// Parallel-sampling counters.
+    pub sampling: SamplingStats,
 }
 
 impl Metrics {
@@ -143,6 +158,14 @@ impl Metrics {
                 self.prefix.kv_bytes_deduped as f64 / 1024.0,
                 self.prefix.evicted_pages,
                 self.prefix.cow_copies,
+            ));
+        }
+        if self.sampling.fork_calls > 0 {
+            s.push_str(&format!(
+                "parallel sampling: {} forks created {} siblings (zero-copy), {} pruned\n",
+                self.sampling.fork_calls,
+                self.sampling.forked_siblings,
+                self.sampling.cancelled,
             ));
         }
         if let Some(sp) = self.projected_speedup() {
@@ -258,6 +281,18 @@ mod tests {
         assert!(rep.contains("75% deduped"), "{rep}");
         // Absent when no shared step ran.
         assert!(!Metrics::default().report().contains("cascade gather"));
+    }
+
+    #[test]
+    fn sampling_stats_in_report_only_after_forks() {
+        assert!(!Metrics::default().report().contains("parallel sampling"));
+        let m = Metrics {
+            sampling: SamplingStats { fork_calls: 2, forked_siblings: 6, cancelled: 3 },
+            ..Default::default()
+        };
+        let rep = m.report();
+        assert!(rep.contains("2 forks created 6 siblings"), "{rep}");
+        assert!(rep.contains("3 pruned"), "{rep}");
     }
 
     #[test]

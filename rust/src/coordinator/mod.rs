@@ -6,13 +6,17 @@
 //! * [`batcher`] — Orca-style continuous batching (iteration-level
 //!   admission into fixed engine slots).
 //! * [`engine`] — the serving loop: prefill admissions → decode steps via
-//!   the PJRT model artifact → sampling → cache append; every step also
-//!   derives the stream-K attention plan for the current (ragged) batch
-//!   and records the projected GPU latency/occupancy against the
+//!   the PJRT model artifact → the logits-sampling pipeline → cache
+//!   append; plus the zero-copy `fork`/`cancel` lifecycle parallel
+//!   sampling (best-of-n, beam search) drives. Every step also derives
+//!   the stream-K attention plan for the current (ragged) batch and
+//!   records the projected GPU latency/occupancy against the
 //!   FlashDecoding baseline.
 //! * [`radix`] — radix prefix index: token prefixes → shared KV page
 //!   runs (the serving half of cascade/shared-prefix decoding).
-//! * [`router`] — multi-engine front door (least-loaded dispatch).
+//! * [`router`] — multi-engine front door (prefix-affinity dispatch:
+//!   requests steer to the replica holding the longest cached prefix,
+//!   round-robin on ties).
 //! * [`metrics`] — latency/throughput accounting, including prefix-cache
 //!   hit rates and deduplicated KV bytes.
 //! * [`pool`] — std-thread fork-join pool (tokio is not in the offline
@@ -29,7 +33,7 @@ pub mod router;
 
 pub use engine::{Engine, EngineConfig};
 pub use kv_cache::PagedKvCache;
-pub use metrics::{Metrics, PrefixCacheStats};
+pub use metrics::{Metrics, PrefixCacheStats, SamplingStats};
 pub use radix::{PrefixMatch, RadixPrefixIndex};
-pub use request::{FinishedRequest, Request, RequestId};
+pub use request::{FinishReason, FinishedRequest, Request, RequestId};
 pub use router::Router;

@@ -2,23 +2,40 @@
 
 use std::time::Instant;
 
+use crate::sampling::SamplingParams;
+
 /// Monotonic request identifier.
 pub type RequestId = u64;
 
-/// An inference request: a tokenized prompt plus generation budget.
+/// An inference request: a tokenized prompt plus generation budget and
+/// logits-processing parameters.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: RequestId,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub arrival: Instant,
+    /// Logits pipeline for this request (greedy by default).
+    pub params: SamplingParams,
 }
 
 impl Request {
     pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
         assert!(!prompt.is_empty(), "empty prompt");
         assert!(max_new_tokens >= 1);
-        Request { id, prompt, max_new_tokens, arrival: Instant::now() }
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            arrival: Instant::now(),
+            params: SamplingParams::default(),
+        }
+    }
+
+    /// Attach non-default sampling parameters.
+    pub fn with_params(mut self, params: SamplingParams) -> Request {
+        self.params = params;
+        self
     }
 }
 
@@ -29,9 +46,11 @@ pub enum FinishReason {
     Length,
     /// Hit the model's context bucket (cache full).
     ContextFull,
+    /// Cancelled mid-generation (beam pruning); the output is partial.
+    Cancelled,
 }
 
-/// A completed request with its generation and timing.
+/// A completed request with its generation, scores and timing.
 #[derive(Clone, Debug)]
 pub struct FinishedRequest {
     pub id: RequestId,
@@ -44,6 +63,14 @@ pub struct FinishedRequest {
     pub prefill_s: f64,
     /// Time spent decoding, seconds.
     pub decode_s: f64,
+    /// Sum of the sampled tokens' logprobs under the processed
+    /// distribution (the candidate score for best-of-n / beam search).
+    pub cum_logprob: f64,
+    /// Per-token logprob trace, one entry per `output` token,
+    /// reproducible by the `sampling::sample_token` oracle.
+    pub logprobs: Vec<f32>,
+    /// The sequence this one was forked off, if any.
+    pub parent: Option<RequestId>,
 }
 
 impl FinishedRequest {
@@ -69,6 +96,9 @@ mod tests {
     fn request_construction() {
         let r = Request::new(1, vec![1, 2, 3], 8);
         assert_eq!(r.prompt.len(), 3);
+        assert!(r.params.is_greedy(), "default sampling is greedy");
+        let r = r.with_params(SamplingParams::stochastic(0.7));
+        assert!(!r.params.is_greedy());
     }
 
     #[test]
@@ -87,8 +117,13 @@ mod tests {
             queue_s: 0.1,
             prefill_s: 0.2,
             decode_s: 2.0,
+            cum_logprob: -2.0,
+            logprobs: vec![-0.5; 4],
+            parent: None,
         };
         assert!((f.total_s() - 2.3).abs() < 1e-12);
         assert!((f.decode_tps() - 2.0).abs() < 1e-12);
+        let trace_sum: f64 = f.logprobs.iter().map(|&x| f64::from(x)).sum();
+        assert!((f.cum_logprob - trace_sum).abs() < 1e-9);
     }
 }

@@ -1,44 +1,76 @@
 //! Multi-replica request router (the vLLM-router-shaped front door).
 //!
 //! PJRT handles are not `Send`, so replicas live on the router's thread
-//! and are stepped round-robin; dispatch is least-loaded (fewest waiting,
-//! then fewest active). With one replica this degrades to a thin queue —
-//! the structure matters for the scheduling tests and for swapping in a
-//! process-per-replica transport later.
+//! and are stepped round-robin. Dispatch is **prefix-affine**: every
+//! replica's radix index is probed for the incoming prompt and the
+//! request steers to the replica holding the longest cached prefix — a
+//! request that lands where its prefix pages already live skips
+//! re-prefilling and re-storing them, and joins that replica's cascade
+//! groups. Ties (including the all-cold case) break round-robin so load
+//! still spreads. Affinity deliberately outranks load: a single hot
+//! prefix therefore concentrates on its warm replica — the bounded
+//! admission queue absorbs the burst, but a load-pressure valve
+//! (replicate the hot prefix, or cap queue skew before overriding
+//! affinity) is an open ROADMAP item. With one replica this degrades to
+//! a thin queue — the structure matters for the scheduling tests and
+//! for swapping in a process-per-replica transport later.
 
 use anyhow::Result;
 
 use super::engine::Engine;
 use super::request::{FinishedRequest, RequestId};
 
-/// Least-loaded dispatcher over engine replicas.
+/// Prefix-affinity dispatcher over engine replicas.
 pub struct Router {
     engines: Vec<Engine>,
     /// (engine index, id within engine) per external request id.
     routes: Vec<(usize, RequestId)>,
+    /// Round-robin cursor for prefix-length ties.
+    rr: usize,
+}
+
+/// Pick the replica holding the longest cached prefix; break ties
+/// (including "nobody holds anything") round-robin via `rr`. Pure so the
+/// policy is unit-testable without engines.
+pub fn route_by_prefix(prefix_tokens: &[usize], rr: &mut usize) -> usize {
+    assert!(!prefix_tokens.is_empty());
+    let best = prefix_tokens.iter().copied().max().unwrap();
+    let tied: Vec<usize> = (0..prefix_tokens.len())
+        .filter(|&i| prefix_tokens[i] == best)
+        .collect();
+    let pick = tied[*rr % tied.len()];
+    *rr += 1;
+    pick
 }
 
 impl Router {
     pub fn new(engines: Vec<Engine>) -> Router {
         assert!(!engines.is_empty());
-        Router { engines, routes: Vec::new() }
+        Router { engines, routes: Vec::new(), rr: 0 }
     }
 
     pub fn num_replicas(&self) -> usize {
         self.engines.len()
     }
 
-    /// Pick the least-loaded replica and submit. Returns a router-level id.
+    /// Probe every replica's radix index and submit to the one holding
+    /// the longest cached prefix (round-robin tiebreak). Returns a
+    /// router-level id.
     pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize) -> Result<RequestId> {
-        let (ei, _) = self
+        let matched: Vec<usize> = self
             .engines
             .iter()
-            .enumerate()
-            .min_by_key(|(_, e)| (e.waiting(), e.active()))
-            .unwrap();
+            .map(|e| e.peek_prefix_tokens(&prompt))
+            .collect();
+        let ei = route_by_prefix(&matched, &mut self.rr);
         let inner = self.engines[ei].submit(prompt, max_new)?;
         self.routes.push((ei, inner));
         Ok(self.routes.len() as RequestId - 1)
+    }
+
+    /// The replica a router-level request was dispatched to.
+    pub fn route_of(&self, id: RequestId) -> Option<usize> {
+        self.routes.get(id as usize).map(|&(e, _)| e)
     }
 
     /// Step every replica once; collect finished requests (with router
@@ -78,4 +110,50 @@ impl Router {
     }
 }
 
-// Integration tests in rust/tests/engine_e2e.rs (need artifacts).
+// Engine-driving integration tests live in rust/tests/engine_e2e.rs
+// (they need artifacts); the routing policy itself is pure and tested
+// here.
+#[cfg(test)]
+mod tests {
+    use super::route_by_prefix;
+
+    #[test]
+    fn longest_prefix_wins_regardless_of_cursor() {
+        for start in 0..5usize {
+            let mut rr = start;
+            // Replica 2 holds the longest cached prefix.
+            assert_eq!(route_by_prefix(&[0, 16, 48, 16], &mut rr), 2);
+        }
+    }
+
+    #[test]
+    fn same_prefix_requests_colocate() {
+        // Once one replica holds the prefix, every later probe returns a
+        // unique maximum there — same-prefix requests stick together
+        // while the rr cursor keeps moving.
+        let mut rr = 0;
+        let after_warm = [32usize, 0, 0];
+        for _ in 0..6 {
+            assert_eq!(route_by_prefix(&after_warm, &mut rr), 0);
+        }
+        assert_eq!(rr, 6, "cursor advances even on affinity hits");
+    }
+
+    #[test]
+    fn cold_prompts_round_robin() {
+        let mut rr = 0;
+        let cold = [0usize, 0, 0];
+        let picks: Vec<usize> =
+            (0..6).map(|_| route_by_prefix(&cold, &mut rr)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn ties_cycle_only_the_tied_set() {
+        let mut rr = 0;
+        // Replicas 1 and 2 tie at 16 tokens; 0 is cold.
+        let picks: Vec<usize> =
+            (0..4).map(|_| route_by_prefix(&[0, 16, 16], &mut rr)).collect();
+        assert_eq!(picks, vec![1, 2, 1, 2]);
+    }
+}

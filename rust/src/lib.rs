@@ -40,6 +40,7 @@ pub mod coordinator;
 pub mod model;
 pub mod partition;
 pub mod runtime;
+pub mod sampling;
 pub mod sim;
 pub mod util;
 

@@ -20,6 +20,7 @@ use lean_attention::bench_harness::figures;
 use lean_attention::coordinator::{Engine, EngineConfig};
 use lean_attention::partition::plan::{build_plan, DecodeProblem, Strategy};
 use lean_attention::runtime::{Manifest, Runtime};
+use lean_attention::sampling::{BeamSearch, BestOfN, SamplingParams};
 use lean_attention::sim::schedule::simulate_all;
 use lean_attention::sim::GpuArch;
 use lean_attention::util::rng::Rng;
@@ -72,6 +73,17 @@ impl Args {
     fn str(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.into())
     }
+
+    fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or(default))
+            .unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
 }
 
 fn arch_by_name(name: &str) -> Result<GpuArch> {
@@ -112,14 +124,23 @@ commands:
   serve    [--model tiny] [--requests 8] [--max-new 16] [--seed 0]
            [--system-prompt-len N]  share an N-token system prompt across
                                     requests through the radix prefix cache
+           [--temperature T] [--top-k K] [--top-p P]   sampling pipeline
+           [--best-of N]            N zero-copy fork candidates per prompt,
+                                    highest cumulative logprob wins
+           [--beam-width W] [--expand E]   sampled beam search over forks
   simulate --batch B --heads H --ctx N [--head-dim 64] [--arch a100]
            [--shared-prefix N]      add the cascade row: batch shares an
                                     N-token prefix, streamed once per group
+           [--fork-n N] [--fork-new M]   model a fork family: N siblings
+                                    sharing the ctx as history, M decode steps
   bench    --cascade-exec [--batch 4] [--prefix 256] [--suffix 64]
            [--heads 2] [--head-dim 16] [--tile 32] [--slots 64] [--iters 10]
                                     flat-lean vs cascade execution: gathered
                                     KV bytes + wall-clock (PJRT artifacts
                                     when built, host oracle otherwise)
+  bench    --sampling [--n 4] [--history 256] [--suffix 64] [--iters 10]
+           [--smoke]                parallel sampling: flat vs sibling-cascade
+                                    decode on a forked COW paged KV cache
   plan     --batch B --heads H --ctx N [--slots 216]
   figures  [table1|fig01|fig02|fig03|fig07|fig08|fig09|fig10|fig11|fig12|fig13|all]
   sweep    [--samples 1000] [--arch a100]
@@ -154,13 +175,36 @@ fn serve(args: &Args) -> Result<()> {
     let max_new = args.usize("max-new", 16);
     let seed = args.usize("seed", 0) as u64;
     let system_len = args.usize("system-prompt-len", 0);
+    let best_of = args.usize("best-of", 1);
+    let beam_width = args.usize("beam-width", 1);
+    anyhow::ensure!(
+        best_of <= 1 || beam_width <= 1,
+        "--best-of and --beam-width are mutually exclusive"
+    );
+
+    // Sampling pipeline: greedy unless a temperature is given; parallel
+    // sampling needs a stochastic sampler, so it defaults to 0.8.
+    let parallel = best_of > 1 || beam_width > 1;
+    let default_temp = if parallel { 0.8 } else { 0.0 };
+    let params = SamplingParams {
+        temperature: args.f64("temperature", default_temp) as f32,
+        top_k: args.usize("top-k", 0),
+        top_p: args.f64("top-p", 1.0) as f32,
+        repetition_penalty: args.f64("repetition-penalty", 1.0) as f32,
+    };
+    params.validate()?;
 
     let runtime = Rc::new(Runtime::cpu()?);
     let manifest = Manifest::load(Manifest::default_dir())?;
     let mut engine = Engine::new(
         &runtime,
         &manifest,
-        EngineConfig { model: model.clone(), ..Default::default() },
+        EngineConfig {
+            model: model.clone(),
+            sampling: params.clone(),
+            seed,
+            ..Default::default()
+        },
     )?;
     println!(
         "engine up: model={model} batch={} ctx_bucket={} prefill_bucket={}",
@@ -180,6 +224,54 @@ fn serve(args: &Args) -> Result<()> {
     if system_len > 0 {
         println!("sharing a {system_len}-token system prompt across all requests");
     }
+
+    if parallel {
+        // Parallel sampling: each prompt runs through a controller that
+        // forks zero-copy siblings over the COW paged KV cache; the
+        // siblings' shared history streams once per group through the
+        // cascade gather.
+        for i in 0..n_requests {
+            let len = rng.urange(1, engine.prefill_bucket() - system_len + 1);
+            let mut prompt = system.clone();
+            prompt.extend((0..len).map(|_| rng.range(0, vocab) as i32));
+            let total = prompt.len();
+            let outcome = if best_of > 1 {
+                println!("\nrequest #{i}: best-of-{best_of} over a {total}-token prompt");
+                BestOfN { n: best_of, max_new, params: params.clone() }
+                    .run(&mut engine, prompt)?
+            } else {
+                let expand = args.usize("expand", 2);
+                println!(
+                    "\nrequest #{i}: beam search (width {beam_width}, expand {expand}) \
+                     over a {total}-token prompt"
+                );
+                BeamSearch {
+                    width: beam_width,
+                    expand,
+                    max_new,
+                    params: params.clone(),
+                }
+                .run(&mut engine, prompt)?
+            };
+            for (rank, c) in outcome.candidates.iter().enumerate() {
+                println!(
+                    "  {} candidate {}: {} tokens, cum logprob {:>9.3} ({:?}{})",
+                    if rank == 0 { "*" } else { " " },
+                    c.finished.id,
+                    c.finished.output.len(),
+                    c.score,
+                    c.finished.reason,
+                    c.finished
+                        .parent
+                        .map(|p| format!(", forked off {p}"))
+                        .unwrap_or_default(),
+                );
+            }
+        }
+        println!("\n{}", engine.metrics.report());
+        return Ok(());
+    }
+
     for i in 0..n_requests {
         let len = rng.urange(1, engine.prefill_bucket() - system_len + 1);
         let mut prompt = system.clone();
@@ -193,14 +285,15 @@ fn serve(args: &Args) -> Result<()> {
     println!("\nper-request results:");
     for f in &finished {
         println!(
-            "  req {}: {} prompt + {} generated, queue {:.1}ms, prefill {:.1}ms, decode {:.1}ms ({:.1} tok/s)",
+            "  req {}: {} prompt + {} generated, queue {:.1}ms, prefill {:.1}ms, decode {:.1}ms ({:.1} tok/s), cum logprob {:.3}",
             f.id,
             f.prompt_len,
             f.output.len(),
             f.queue_s * 1e3,
             f.prefill_s * 1e3,
             f.decode_s * 1e3,
-            f.decode_tps()
+            f.decode_tps(),
+            f.cum_logprob
         );
     }
     println!("\n{}", engine.metrics.report());
@@ -280,6 +373,30 @@ fn simulate_cmd(args: &Args) -> Result<()> {
             );
         }
     }
+
+    // Optional fork-family row: N siblings share the full ctx as their
+    // fork-point history and decode M divergent tokens.
+    let fork_n = args.usize("fork-n", 0);
+    if fork_n > 0 {
+        use lean_attention::sim::{simulate_fork_decode, ForkDecodeCase};
+        let case = ForkDecodeCase {
+            heads,
+            head_dim,
+            siblings: fork_n,
+            history: ctx,
+            decode_steps: args.usize("fork-new", 32),
+        };
+        let r = simulate_fork_decode(&case, &arch);
+        println!(
+            "\nfork family ({fork_n} siblings, {ctx}-token history, {} steps): \
+             KV {:.1} MiB vs {:.1} MiB flat ({:.0}% saved), {:.2}x speedup",
+            r.steps,
+            r.cascade_kv_bytes / (1024.0 * 1024.0),
+            r.flat_kv_bytes / (1024.0 * 1024.0),
+            r.bytes_saved_fraction() * 100.0,
+            r.speedup(),
+        );
+    }
     Ok(())
 }
 
@@ -287,9 +404,13 @@ fn bench_cmd(args: &Args) -> Result<()> {
     use lean_attention::bench_harness::{compare_exec, ExecCase};
     use lean_attention::runtime::AttentionExecutor;
 
+    if args.has("sampling") {
+        return bench_sampling(args);
+    }
     anyhow::ensure!(
-        args.flags.contains_key("cascade-exec"),
-        "usage: leanattn bench --cascade-exec [--batch 4] [--prefix 256] ..."
+        args.has("cascade-exec"),
+        "usage: leanattn bench --cascade-exec [--batch 4] [--prefix 256] ...\n       \
+         leanattn bench --sampling [--n 4] [--history 256] [--suffix 64] [--smoke]"
     );
     let case = ExecCase {
         batch: args.usize("batch", 4),
@@ -331,6 +452,98 @@ fn bench_cmd(args: &Args) -> Result<()> {
         c.flat_us.p50 / c.cascade_us.p50
     );
     println!("max |flat - cascade| = {:.2e}", c.max_err);
+    Ok(())
+}
+
+/// `leanattn bench --sampling`: flat vs sibling-cascade decode for a
+/// fork family on the COW paged KV cache (no artifacts needed — the
+/// gather paths are host-side, the attention comparison runs the host
+/// oracle). Asserts, on every run, that forking allocates zero pages and
+/// that the sibling-cascade path reads strictly fewer gathered-KV bytes
+/// than flat for >= 2 siblings with nonzero shared history.
+fn bench_sampling(args: &Args) -> Result<()> {
+    use lean_attention::bench_harness::{compare_sampling, SamplingCase};
+
+    let smoke = args.has("smoke");
+    let base = if smoke { SamplingCase::smoke() } else { SamplingCase::default_case() };
+    let case = SamplingCase {
+        siblings: args.usize("n", base.siblings),
+        history: args.usize("history", base.history),
+        suffix: args.usize("suffix", base.suffix),
+        layers: args.usize("layers", base.layers),
+        heads: args.usize("heads", base.heads),
+        head_dim: args.usize("head-dim", base.head_dim),
+        page_tokens: args.usize("page", base.page_tokens),
+        tile: args.usize("tile", base.tile),
+    };
+    let iters = args.usize("iters", if smoke { 2 } else { 10 });
+    println!(
+        "sampling: {} siblings, history {} + suffix {} tokens, page {}, \
+         {} layers x {} heads x d{}",
+        case.siblings,
+        case.history,
+        case.suffix,
+        case.page_tokens,
+        case.layers,
+        case.heads,
+        case.head_dim
+    );
+
+    let c = compare_sampling(case, iters, args.usize("seed", 17) as u64)?;
+    anyhow::ensure!(
+        c.fork_fresh_pages == 0,
+        "fork allocated {} pages; forking must be refcount-only",
+        c.fork_fresh_pages
+    );
+    println!(
+        "fork: 0 pages allocated at fork time, {} COW page clones during divergence",
+        c.cow_copies
+    );
+    println!(
+        "gather  flat:    {:>10.1} KiB/step, p50 {:>9.1}us",
+        c.flat_gather_bytes as f64 / 1024.0,
+        c.flat_us.p50
+    );
+    println!(
+        "gather  cascade: {:>10.1} KiB/step, p50 {:>9.1}us  ({:.1}% bytes saved, {:.2}x)",
+        c.shared_gather_bytes as f64 / 1024.0,
+        c.shared_us.p50,
+        c.bytes_saved_fraction() * 100.0,
+        c.flat_us.p50 / c.shared_us.p50
+    );
+    println!(
+        "attn    flat:    {:>10.1} KiB gathered KV, p50 {:>9.1}us",
+        c.attention.flat_kv_bytes as f64 / 1024.0,
+        c.attention.flat_us.p50
+    );
+    println!(
+        "attn    cascade: {:>10.1} KiB gathered KV, p50 {:>9.1}us  ({:.1}% saved, max err {:.1e})",
+        c.attention.cascade_kv_bytes as f64 / 1024.0,
+        c.attention.cascade_us.p50,
+        c.attention.bytes_saved_fraction() * 100.0,
+        c.attention.max_err
+    );
+    if case.siblings >= 2 && case.history >= case.page_tokens {
+        // Page-granular sharing: at least one full shared page dedups.
+        anyhow::ensure!(
+            c.shared_gather_bytes < c.flat_gather_bytes,
+            "sibling-cascade decode must read strictly fewer gathered-KV bytes \
+             than flat ({} vs {})",
+            c.shared_gather_bytes,
+            c.flat_gather_bytes
+        );
+    }
+    if case.siblings >= 2 && case.history > 0 {
+        anyhow::ensure!(
+            c.attention.cascade_kv_bytes < c.attention.flat_kv_bytes,
+            "cascade attention must gather strictly fewer KV bytes than flat"
+        );
+        anyhow::ensure!(
+            c.attention.max_err < 1e-3,
+            "flat and cascade attention diverged: {}",
+            c.attention.max_err
+        );
+    }
     Ok(())
 }
 

@@ -87,6 +87,19 @@ impl CascadeProblem {
                 );
             }
         }
+        // Dissolve degenerate (single-member) groups into plain suffix
+        // lanes after validation: a one-sequence "shared" stream saves
+        // nothing, and dissolving it here makes the degenerate-group
+        // invariant structural — a problem whose groups are all
+        // single-member has the *same* segment problem as the flat
+        // problem, so plans, rolled tasks and executor outputs are
+        // bit-identical to the flat lean path (property-tested in
+        // rust/tests/sampling_props.rs). Exactness is untouched: the
+        // prefix tokens simply stay in the member's own suffix.
+        let prefix_groups: Vec<PrefixGroup> = prefix_groups
+            .into_iter()
+            .filter(|g| g.members.len() >= 2)
+            .collect();
         Ok(CascadeProblem {
             heads,
             head_dim,
@@ -454,6 +467,32 @@ mod tests {
         assert_eq!(p.queries_of(3), 1);
         assert_eq!(p.prefix_of(0), 96);
         assert_eq!(p.prefix_of(2), 0);
+    }
+
+    #[test]
+    fn singleton_groups_dissolve_at_construction() {
+        // A single-member group is validated (bad members still error)
+        // and then dissolved: the problem is structurally flat.
+        let p = CascadeProblem::new(
+            2,
+            vec![100, 60],
+            8,
+            vec![PrefixGroup { prefix_len: 64, members: vec![0] }],
+        )
+        .unwrap()
+        .with_tile(32);
+        assert!(p.prefix_groups.is_empty());
+        assert_eq!(p.prefix_of(0), 0);
+        let flat = CascadeProblem::new(2, vec![100, 60], 8, vec![]).unwrap().with_tile(32);
+        assert_eq!(p.segment_problem().ctx_lens, flat.segment_problem().ctx_lens);
+        // Validation still sees the group before dissolution.
+        assert!(CascadeProblem::new(
+            1,
+            vec![10],
+            8,
+            vec![PrefixGroup { prefix_len: 40, members: vec![0] }],
+        )
+        .is_err());
     }
 
     #[test]

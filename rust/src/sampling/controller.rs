@@ -1,0 +1,306 @@
+//! Parallel-sampling controllers: best-of-n and (sampled) beam search
+//! over the serving engine's fork/cancel lifecycle.
+//!
+//! Both controllers drive the same loop shape — **submit** one root
+//! request, **fork** it into siblings that share the whole KV history by
+//! refcount (zero page copies), **score** candidates by cumulative
+//! logprob, and (for beam search) **prune** losers with
+//! `Engine::cancel`. Fork siblings resample the pending token with their
+//! own deterministic RNG, so candidates diverge immediately while the
+//! decode loop streams their shared history once per group through the
+//! cascade gather.
+//!
+//! Everything is deterministic under a fixed engine seed: sequence ids
+//! are allocated in submission/fork order, each id's RNG is derived from
+//! `(seed, id)`, and every ranking below breaks ties by id.
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::request::{FinishReason, FinishedRequest, RequestId};
+use crate::coordinator::Engine;
+
+use super::logits::SamplingParams;
+
+/// One finished candidate with its selection score.
+#[derive(Clone, Debug)]
+pub struct ScoredCandidate {
+    pub finished: FinishedRequest,
+    /// Cumulative logprob of the candidate's sampled tokens (higher is
+    /// better; the model's own probability of the continuation).
+    pub score: f64,
+}
+
+/// Outcome of a parallel-sampling run: candidates sorted best-first.
+#[derive(Clone, Debug, Default)]
+pub struct ParallelOutcome {
+    /// This run's candidates, sorted by (completed before pruned, score
+    /// desc, id asc).
+    pub candidates: Vec<ScoredCandidate>,
+    /// Finished requests the engine returned that belong to *other*
+    /// traffic sharing the engine (never dropped silently).
+    pub unrelated: Vec<FinishedRequest>,
+}
+
+impl ParallelOutcome {
+    /// The winning candidate.
+    pub fn best(&self) -> Option<&ScoredCandidate> {
+        self.candidates.first()
+    }
+}
+
+/// Rank candidates: completed generations before pruned (cancelled)
+/// ones, then by cumulative logprob descending, then by id for a total
+/// deterministic order.
+fn rank(mut cands: Vec<ScoredCandidate>) -> Vec<ScoredCandidate> {
+    cands.sort_by(|a, b| {
+        let done_a = a.finished.reason != FinishReason::Cancelled;
+        let done_b = b.finished.reason != FinishReason::Cancelled;
+        done_b
+            .cmp(&done_a)
+            .then(b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal))
+            .then(a.finished.id.cmp(&b.finished.id))
+    });
+    cands
+}
+
+fn collect(ids: &[RequestId], finished: Vec<FinishedRequest>) -> ParallelOutcome {
+    let mut candidates = Vec::new();
+    let mut unrelated = Vec::new();
+    for f in finished {
+        if ids.contains(&f.id) {
+            let score = f.cum_logprob;
+            candidates.push(ScoredCandidate { finished: f, score });
+        } else {
+            unrelated.push(f);
+        }
+    }
+    ParallelOutcome { candidates: rank(candidates), unrelated }
+}
+
+/// Drive the engine until `root` is resident in a batch slot (or already
+/// finished), accumulating any finished requests seen on the way.
+fn drive_to_active(
+    engine: &mut Engine,
+    root: RequestId,
+    finished: &mut Vec<FinishedRequest>,
+) -> Result<()> {
+    while !engine.is_active_seq(root) {
+        ensure!(
+            !engine.is_idle() || finished.iter().any(|f| f.id == root),
+            "request {root} neither active nor finished"
+        );
+        if finished.iter().any(|f| f.id == root) {
+            break;
+        }
+        finished.extend(engine.step()?);
+    }
+    Ok(())
+}
+
+/// Attempt a fork, degrading gracefully under resource pressure: the
+/// count is pre-clamped by the caller to the free slots, so the only
+/// remaining failure mode is KV-page reservation pressure — in that
+/// case the controller proceeds with the siblings it already has
+/// instead of aborting the run and stranding live sequences.
+fn try_fork(engine: &mut Engine, seq: RequestId, n: usize) -> Vec<RequestId> {
+    if n == 0 {
+        return Vec::new();
+    }
+    engine.fork(seq, n).unwrap_or_default()
+}
+
+/// Best-of-n: sample `n` independent continuations of one prompt and
+/// pick the highest-scoring one. The prompt is prefilled **once**; the
+/// other `n - 1` candidates are zero-copy forks of the first.
+///
+/// Best-effort under contention: when other traffic holds batch slots
+/// or KV pages, fewer than `n` candidates are produced (at minimum the
+/// root) rather than failing the run.
+#[derive(Clone, Debug)]
+pub struct BestOfN {
+    /// Candidates to sample (>= 1).
+    pub n: usize,
+    /// Generation budget per candidate.
+    pub max_new: usize,
+    /// Logits pipeline for every candidate (usually stochastic —
+    /// greedy best-of-n degenerates to n identical outputs only in the
+    /// first token; forks still resample it).
+    pub params: SamplingParams,
+}
+
+impl BestOfN {
+    pub fn run(&self, engine: &mut Engine, prompt: Vec<i32>) -> Result<ParallelOutcome> {
+        ensure!(self.n >= 1, "best-of-n needs n >= 1");
+        ensure!(
+            self.n <= engine.batch_size(),
+            "best-of-{} exceeds the engine's {} batch slots",
+            self.n,
+            engine.batch_size()
+        );
+        self.params.validate()?;
+
+        let root = engine.submit_with(prompt, self.max_new, self.params.clone())?;
+        let mut finished = Vec::new();
+        drive_to_active(engine, root, &mut finished)?;
+
+        let mut ids = vec![root];
+        if self.n > 1 && engine.is_active_seq(root) {
+            let k = (self.n - 1).min(engine.free_slots());
+            ids.extend(try_fork(engine, root, k));
+        }
+        finished.extend(engine.run_until_idle()?);
+        Ok(collect(&ids, finished))
+    }
+}
+
+/// Sampled beam search: keep the `width` highest-scoring hypotheses,
+/// expanding each live beam into stochastic variants by forking (the
+/// fork resamples the pending token) and pruning the rest by cumulative
+/// logprob after every decode step.
+///
+/// This is beam search over *sampled* expansions rather than the full
+/// top-`width * vocab` frontier — the engine emits one token per
+/// sequence per step, so the frontier is grown by zero-copy forks
+/// instead of a vocab-wide enumeration. Scores, pruning and the final
+/// ranking follow classic beam search.
+#[derive(Clone, Debug)]
+pub struct BeamSearch {
+    /// Beams kept live after every step (>= 1).
+    pub width: usize,
+    /// Hypotheses each live beam expands into per step (1 = no
+    /// expansion beyond the initial widening).
+    pub expand: usize,
+    /// Generation budget per beam.
+    pub max_new: usize,
+    /// Logits pipeline; must be stochastic (greedy forks cannot
+    /// diverge the frontier).
+    pub params: SamplingParams,
+}
+
+impl BeamSearch {
+    pub fn run(&self, engine: &mut Engine, prompt: Vec<i32>) -> Result<ParallelOutcome> {
+        ensure!(self.width >= 1, "beam width must be >= 1");
+        ensure!(self.expand >= 1, "expansion factor must be >= 1");
+        ensure!(
+            !self.params.is_greedy(),
+            "beam expansion needs a stochastic sampler (temperature > 0)"
+        );
+        ensure!(
+            self.width <= engine.batch_size(),
+            "beam width {} exceeds the engine's {} batch slots",
+            self.width,
+            engine.batch_size()
+        );
+        self.params.validate()?;
+
+        let root = engine.submit_with(prompt, self.max_new, self.params.clone())?;
+        let mut finished = Vec::new();
+        drive_to_active(engine, root, &mut finished)?;
+
+        let mut members = vec![root];
+        // Widen the frontier to `width` beams (best-effort under KV or
+        // slot pressure — the search continues with a narrower front).
+        if self.width > 1 && engine.is_active_seq(root) {
+            let n = (self.width - 1).min(engine.free_slots());
+            members.extend(try_fork(engine, root, n));
+        }
+
+        loop {
+            let live = self.live_ranked(engine, &members);
+            if live.is_empty() {
+                break;
+            }
+            // Expansion: best beams first, bounded by free slots; a
+            // fork refused for KV pressure ends this round's expansion
+            // rather than aborting the search with live beams stranded.
+            if self.expand > 1 {
+                for &id in &live {
+                    let k = (self.expand - 1).min(engine.free_slots());
+                    if k == 0 {
+                        break;
+                    }
+                    let forked = try_fork(engine, id, k);
+                    let exhausted = forked.is_empty();
+                    members.extend(forked);
+                    if exhausted {
+                        break;
+                    }
+                }
+            }
+            finished.extend(engine.step()?);
+            // Prune back down to `width` by cumulative logprob.
+            let live = self.live_ranked(engine, &members);
+            for &id in live.iter().skip(self.width) {
+                finished.push(engine.cancel(id)?);
+            }
+        }
+        Ok(collect(&members, finished))
+    }
+
+    /// Live members sorted by score descending (id tiebreak).
+    fn live_ranked(&self, engine: &Engine, members: &[RequestId]) -> Vec<RequestId> {
+        let mut live: Vec<RequestId> = members
+            .iter()
+            .copied()
+            .filter(|&id| engine.is_active_seq(id))
+            .collect();
+        live.sort_by(|&a, &b| {
+            let sa = engine.cum_logprob(a).unwrap_or(f64::NEG_INFINITY);
+            let sb = engine.cum_logprob(b).unwrap_or(f64::NEG_INFINITY);
+            sb.partial_cmp(&sa)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fin(id: RequestId, cum: f64, reason: FinishReason) -> FinishedRequest {
+        FinishedRequest {
+            id,
+            prompt_len: 2,
+            output: vec![1, 2],
+            reason,
+            queue_s: 0.0,
+            prefill_s: 0.0,
+            decode_s: 0.0,
+            cum_logprob: cum,
+            logprobs: vec![-0.5, -0.5],
+            parent: None,
+        }
+    }
+
+    #[test]
+    fn ranking_prefers_completed_then_score_then_id() {
+        let out = collect(
+            &[1, 2, 3, 4],
+            vec![
+                fin(1, -2.0, FinishReason::Length),
+                fin(2, -1.0, FinishReason::Cancelled),
+                fin(3, -1.5, FinishReason::Length),
+                fin(4, -1.5, FinishReason::Length),
+                fin(9, -0.1, FinishReason::Length), // unrelated traffic
+            ],
+        );
+        let order: Vec<RequestId> =
+            out.candidates.iter().map(|c| c.finished.id).collect();
+        // Completed (3, 4 tie on score -> id order, then 1), pruned 2 last.
+        assert_eq!(order, vec![3, 4, 1, 2]);
+        assert_eq!(out.best().unwrap().finished.id, 3);
+        assert_eq!(out.unrelated.len(), 1);
+        assert_eq!(out.unrelated[0].id, 9);
+    }
+
+    #[test]
+    fn empty_outcome_has_no_best() {
+        let out = ParallelOutcome::default();
+        assert!(out.best().is_none());
+    }
+
+    // Engine-driving controller tests (need artifacts + PJRT) live in
+    // rust/tests/engine_e2e.rs.
+}

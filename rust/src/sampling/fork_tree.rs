@@ -1,0 +1,192 @@
+//! Fork lineage tracking for parallel sampling.
+//!
+//! Every `Engine::fork(seq, n)` creates `n` sibling sequences that share
+//! the parent's KV history up to the fork point. The [`ForkTree`] records
+//! that lineage — parent, fork position in tokens, children — so
+//! controllers can map candidates back to their family, metrics can
+//! attribute sharing, and the decode loop can reason about which
+//! sequences belong to one cascade group.
+//!
+//! Removal is lineage-compressing: when a sequence finishes (or is
+//! pruned), its children are re-parented to its own parent, keeping
+//! `root_of` and `group_of` meaningful for the survivors.
+
+use std::collections::HashMap;
+
+/// Where a sequence was forked from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ForkPoint {
+    /// The sequence this one was forked off.
+    pub parent: u64,
+    /// KV-backed tokens shared with the parent at fork time.
+    pub token_len: usize,
+}
+
+/// Parent/child lineage of forked sequences.
+#[derive(Debug, Default)]
+pub struct ForkTree {
+    parents: HashMap<u64, ForkPoint>,
+    children: HashMap<u64, Vec<u64>>,
+}
+
+impl ForkTree {
+    pub fn new() -> ForkTree {
+        ForkTree::default()
+    }
+
+    /// Sequences currently tracked (every id that ever appeared in a
+    /// fork and was not removed).
+    pub fn len(&self) -> usize {
+        let mut ids: Vec<u64> = self.parents.keys().copied().collect();
+        ids.extend(self.children.keys());
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parents.is_empty() && self.children.is_empty()
+    }
+
+    /// Record that `child` was forked off `parent` with `token_len`
+    /// shared KV-backed tokens.
+    pub fn register(&mut self, parent: u64, child: u64, token_len: usize) {
+        assert_ne!(parent, child, "a sequence cannot fork into itself");
+        assert!(
+            !self.parents.contains_key(&child),
+            "sequence {child} already has a fork parent"
+        );
+        self.parents.insert(child, ForkPoint { parent, token_len });
+        self.children.entry(parent).or_default().push(child);
+    }
+
+    /// The fork point of `id`, if it was created by a fork.
+    pub fn fork_point(&self, id: u64) -> Option<ForkPoint> {
+        self.parents.get(&id).copied()
+    }
+
+    /// Direct children of `id`, in fork order.
+    pub fn children_of(&self, id: u64) -> &[u64] {
+        self.children.get(&id).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Walk parents to the family root (`id` itself if never forked).
+    pub fn root_of(&self, id: u64) -> u64 {
+        let mut cur = id;
+        while let Some(fp) = self.parents.get(&cur) {
+            cur = fp.parent;
+        }
+        cur
+    }
+
+    /// Every tracked sequence sharing `id`'s root, sorted (including
+    /// `id` itself and the root).
+    pub fn group_of(&self, id: u64) -> Vec<u64> {
+        let root = self.root_of(id);
+        let mut out = vec![root];
+        let mut stack = vec![root];
+        while let Some(cur) = stack.pop() {
+            for &c in self.children_of(cur) {
+                out.push(c);
+                stack.push(c);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Other direct children of `id`'s parent, excluding `id`.
+    pub fn siblings_of(&self, id: u64) -> Vec<u64> {
+        let Some(fp) = self.parents.get(&id) else {
+            return Vec::new();
+        };
+        self.children_of(fp.parent)
+            .iter()
+            .copied()
+            .filter(|&c| c != id)
+            .collect()
+    }
+
+    /// Drop `id` from the tree, re-parenting its children to its own
+    /// parent (or promoting them to roots). Unknown ids are a no-op.
+    pub fn remove(&mut self, id: u64) {
+        let fp = self.parents.remove(&id);
+        let kids = self.children.remove(&id).unwrap_or_default();
+        if let Some(fp) = fp {
+            if let Some(sibs) = self.children.get_mut(&fp.parent) {
+                sibs.retain(|&c| c != id);
+                // Re-parent the orphans; their own fork offsets stay.
+                sibs.extend(kids.iter().copied());
+                if sibs.is_empty() {
+                    self.children.remove(&fp.parent);
+                }
+            }
+            for &k in &kids {
+                if let Some(p) = self.parents.get_mut(&k) {
+                    p.parent = fp.parent;
+                }
+            }
+        } else {
+            // `id` was a root: its children become roots themselves.
+            for &k in &kids {
+                self.parents.remove(&k);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lineage_and_roots() {
+        let mut t = ForkTree::new();
+        assert!(t.is_empty());
+        t.register(1, 2, 10);
+        t.register(1, 3, 10);
+        t.register(3, 4, 15);
+        assert_eq!(t.fork_point(2), Some(ForkPoint { parent: 1, token_len: 10 }));
+        assert_eq!(t.fork_point(1), None);
+        assert_eq!(t.root_of(4), 1);
+        assert_eq!(t.root_of(1), 1);
+        assert_eq!(t.children_of(1), &[2, 3]);
+        assert_eq!(t.siblings_of(2), vec![3]);
+        assert_eq!(t.group_of(4), vec![1, 2, 3, 4]);
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn remove_reparents_children() {
+        let mut t = ForkTree::new();
+        t.register(1, 2, 8);
+        t.register(2, 5, 12);
+        t.register(2, 6, 12);
+        t.remove(2);
+        // 5 and 6 now hang off 1; their fork offsets are preserved.
+        assert_eq!(t.root_of(5), 1);
+        assert_eq!(t.fork_point(5).unwrap().token_len, 12);
+        assert_eq!(t.children_of(1), &[5, 6]);
+        assert_eq!(t.group_of(6), vec![1, 5, 6]);
+    }
+
+    #[test]
+    fn remove_root_promotes_children() {
+        let mut t = ForkTree::new();
+        t.register(1, 2, 4);
+        t.register(1, 3, 4);
+        t.remove(1);
+        assert_eq!(t.root_of(2), 2);
+        assert_eq!(t.root_of(3), 3);
+        assert_eq!(t.fork_point(2), None);
+        // Removing an unknown id is a no-op.
+        t.remove(99);
+    }
+
+    #[test]
+    fn group_of_unforked_sequence_is_itself() {
+        let t = ForkTree::new();
+        assert_eq!(t.group_of(7), vec![7]);
+        assert_eq!(t.siblings_of(7), Vec::<u64>::new());
+    }
+}

@@ -1,0 +1,411 @@
+//! Logits-processing pipeline: the exact host oracle for token sampling.
+//!
+//! The engine's decode loop used to pick `argmax(logits)` implicitly;
+//! this module makes the token choice a first-class, *reproducible*
+//! pipeline: repetition penalty over the sequence history, temperature,
+//! top-k and top-p (nucleus) filtering, then a draw from the renormalized
+//! distribution using the deterministic [`crate::util::rng::Rng`]. The
+//! same function is the serving sampler **and** the verification oracle —
+//! given the same raw logits, history, parameters and RNG state it
+//! returns the same `(token, logprob)` pair, so every candidate's logprob
+//! trace in a best-of-n or beam run can be replayed exactly
+//! (property-tested in `rust/tests/sampling_props.rs`).
+//!
+//! `temperature == 0` is greedy decoding and bypasses the RNG entirely,
+//! so the engine's historical behavior (deterministic argmax) is the
+//! default [`SamplingParams`].
+
+use anyhow::{ensure, Result};
+
+use crate::util::rng::{splitmix64, Rng};
+
+/// Parameters of the logits-processing pipeline, applied in order:
+/// repetition penalty → temperature → top-k → top-p → draw.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature. `0.0` means greedy (argmax, RNG untouched).
+    pub temperature: f32,
+    /// Keep only the `top_k` highest-logit tokens (`0` disables).
+    pub top_k: usize,
+    /// Keep the smallest set of tokens whose probability mass reaches
+    /// `top_p` (`1.0` disables nucleus filtering).
+    pub top_p: f32,
+    /// Divide positive / multiply negative logits of tokens already in
+    /// the history by this factor (`1.0` disables).
+    pub repetition_penalty: f32,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams::greedy()
+    }
+}
+
+impl SamplingParams {
+    /// Greedy decoding: argmax, no filtering, RNG untouched.
+    pub fn greedy() -> SamplingParams {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+        }
+    }
+
+    /// Plain stochastic sampling at `temperature`, no filtering.
+    pub fn stochastic(temperature: f32) -> SamplingParams {
+        SamplingParams { temperature, ..SamplingParams::greedy() }
+    }
+
+    /// Whether this configuration is greedy (deterministic argmax).
+    pub fn is_greedy(&self) -> bool {
+        self.temperature == 0.0
+    }
+
+    /// Reject nonsensical configurations up front (at `submit`, not mid
+    /// decode).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.temperature.is_finite() && self.temperature >= 0.0,
+            "temperature must be finite and >= 0, got {}",
+            self.temperature
+        );
+        ensure!(
+            self.top_p > 0.0 && self.top_p <= 1.0,
+            "top_p must be in (0, 1], got {}",
+            self.top_p
+        );
+        ensure!(
+            self.repetition_penalty.is_finite() && self.repetition_penalty > 0.0,
+            "repetition_penalty must be finite and > 0, got {}",
+            self.repetition_penalty
+        );
+        Ok(())
+    }
+}
+
+/// One sampled token with its log-probability under the processed
+/// (penalized / filtered / renormalized) distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampledToken {
+    pub token: i32,
+    pub logprob: f32,
+}
+
+/// The per-sequence sampling RNG: deterministic in `(seed, id)` so a
+/// sequence's draw stream survives engine restarts and fork siblings
+/// (which get fresh ids) diverge from their parent deterministically.
+pub fn seq_rng(seed: u64, id: u64) -> Rng {
+    let mut s = seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    Rng::new(splitmix64(&mut s))
+}
+
+/// First index of the maximum element (ties keep the lowest index — the
+/// engine's historical greedy tie-break).
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Log-sum-exp over the finite entries of `l` (the normalizer of the
+/// masked softmax).
+fn log_sum_exp(l: &[f32]) -> f32 {
+    let m = l.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if m == f32::NEG_INFINITY {
+        return f32::NEG_INFINITY;
+    }
+    let s: f32 = l
+        .iter()
+        .filter(|x| x.is_finite())
+        .map(|&x| (x - m).exp())
+        .sum();
+    m + s.ln()
+}
+
+/// Run the full pipeline over one step's raw logits and draw a token.
+///
+/// `history` is every token already in the sequence (prompt + generated);
+/// only the repetition penalty reads it. The returned logprob is the
+/// chosen token's log-probability under the final processed distribution
+/// (for greedy: the plain log-softmax at the argmax). The RNG advances by
+/// exactly one draw for stochastic params and not at all for greedy —
+/// which is what makes recorded traces replayable.
+pub fn sample_token(
+    logits: &[f32],
+    history: &[i32],
+    params: &SamplingParams,
+    rng: &mut Rng,
+) -> SampledToken {
+    assert!(!logits.is_empty(), "empty logits");
+    let mut l = logits.to_vec();
+
+    // Repetition penalty (each history token penalized once).
+    if params.repetition_penalty != 1.0 {
+        let rp = params.repetition_penalty;
+        let mut seen = vec![false; l.len()];
+        for &t in history {
+            let t = t as usize;
+            if t < l.len() && !seen[t] {
+                seen[t] = true;
+                l[t] = if l[t] > 0.0 { l[t] / rp } else { l[t] * rp };
+            }
+        }
+    }
+
+    if params.is_greedy() {
+        let tok = argmax(&l);
+        let logprob = l[tok] - log_sum_exp(&l);
+        return SampledToken { token: tok as i32, logprob };
+    }
+
+    for x in &mut l {
+        *x /= params.temperature;
+    }
+
+    // Top-k: mask everything strictly below the k-th largest logit
+    // (ties at the threshold all survive — deterministic, no RNG use).
+    // total_cmp: a NaN logit from a numerically-broken step must not
+    // panic the serving loop (the old argmax was NaN-tolerant too).
+    if params.top_k > 0 && params.top_k < l.len() {
+        let mut sorted = l.clone();
+        sorted.sort_by(|a, b| b.total_cmp(a));
+        let thresh = sorted[params.top_k - 1];
+        for x in &mut l {
+            if *x < thresh {
+                *x = f32::NEG_INFINITY;
+            }
+        }
+    }
+
+    // Top-p: keep the smallest high-probability set reaching `top_p`
+    // mass (always at least the single most likely token).
+    if params.top_p < 1.0 {
+        let lse = log_sum_exp(&l);
+        let mut idx: Vec<usize> = (0..l.len()).filter(|&i| l[i].is_finite()).collect();
+        idx.sort_by(|&a, &b| l[b].total_cmp(&l[a]).then(a.cmp(&b)));
+        let mut cum = 0.0f64;
+        let mut keep = 0usize;
+        for &i in &idx {
+            cum += f64::from((l[i] - lse).exp());
+            keep += 1;
+            if cum >= f64::from(params.top_p) {
+                break;
+            }
+        }
+        for &i in &idx[keep..] {
+            l[i] = f32::NEG_INFINITY;
+        }
+    }
+
+    // Draw from the renormalized survivors with a single uniform.
+    let lse = log_sum_exp(&l);
+    let u = rng.f64();
+    let mut cum = 0.0f64;
+    let mut chosen = None;
+    let mut last_finite = 0usize;
+    for (i, &x) in l.iter().enumerate() {
+        if !x.is_finite() {
+            continue;
+        }
+        last_finite = i;
+        cum += f64::from((x - lse).exp());
+        if u < cum {
+            chosen = Some(i);
+            break;
+        }
+    }
+    // Float round-off can leave cum slightly under 1: fall back to the
+    // last surviving token.
+    let tok = chosen.unwrap_or(last_finite);
+    SampledToken { token: tok as i32, logprob: l[tok] - lse }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Vec<f32> {
+        vec![0.1, 3.0, -1.0, 2.5, 0.0]
+    }
+
+    #[test]
+    fn greedy_matches_argmax_and_skips_the_rng() {
+        let params = SamplingParams::greedy();
+        let mut rng = Rng::new(1);
+        let before = rng.clone();
+        let s = sample_token(&logits(), &[], &params, &mut rng);
+        assert_eq!(s.token, 1);
+        assert!(s.logprob < 0.0);
+        // RNG untouched: the next draw matches the pristine clone.
+        let mut before = before;
+        assert_eq!(rng.next_u64(), before.next_u64());
+    }
+
+    #[test]
+    fn greedy_logprob_is_log_softmax_at_argmax() {
+        let l = logits();
+        let s = sample_token(&l, &[], &SamplingParams::greedy(), &mut Rng::new(0));
+        let m = l.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = l.iter().map(|&x| (x - m).exp()).sum();
+        let want = l[1] - (m + z.ln());
+        assert!((s.logprob - want).abs() < 1e-6, "{} vs {want}", s.logprob);
+    }
+
+    #[test]
+    fn deterministic_for_seed_and_advances_one_draw() {
+        let params = SamplingParams {
+            temperature: 0.8,
+            top_k: 3,
+            top_p: 0.95,
+            repetition_penalty: 1.1,
+        };
+        let hist = [1, 3, 3];
+        let a = sample_token(&logits(), &hist, &params, &mut Rng::new(7));
+        let b = sample_token(&logits(), &hist, &params, &mut Rng::new(7));
+        assert_eq!(a, b, "same seed, same draw");
+        // Exactly one uniform consumed.
+        let mut r1 = Rng::new(7);
+        let _ = sample_token(&logits(), &hist, &params, &mut r1);
+        let mut r2 = Rng::new(7);
+        let _ = r2.f64();
+        assert_eq!(r1.next_u64(), r2.next_u64());
+    }
+
+    #[test]
+    fn top_k_one_is_greedy() {
+        let params = SamplingParams {
+            temperature: 1.0,
+            top_k: 1,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+        };
+        for seed in 0..20 {
+            let s = sample_token(&logits(), &[], &params, &mut Rng::new(seed));
+            assert_eq!(s.token, 1);
+            // Sole survivor: probability 1, logprob 0.
+            assert!(s.logprob.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn top_k_bounds_the_support() {
+        let params = SamplingParams {
+            temperature: 1.5,
+            top_k: 2,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+        };
+        for seed in 0..64 {
+            let s = sample_token(&logits(), &[], &params, &mut Rng::new(seed));
+            // Top-2 logits are indices 1 (3.0) and 3 (2.5).
+            assert!(s.token == 1 || s.token == 3, "token {}", s.token);
+            assert!(s.logprob <= 0.0);
+        }
+    }
+
+    #[test]
+    fn tiny_top_p_keeps_only_the_mode() {
+        let params = SamplingParams {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 1e-6,
+            repetition_penalty: 1.0,
+        };
+        for seed in 0..16 {
+            let s = sample_token(&logits(), &[], &params, &mut Rng::new(seed));
+            assert_eq!(s.token, 1);
+        }
+    }
+
+    #[test]
+    fn repetition_penalty_can_flip_the_greedy_choice() {
+        // Token 1 dominates until the history penalizes it below token 3.
+        let params = SamplingParams {
+            repetition_penalty: 4.0,
+            ..SamplingParams::greedy()
+        };
+        let s = sample_token(&logits(), &[1], &params, &mut Rng::new(0));
+        assert_eq!(s.token, 3);
+        // Each history token is penalized once, not per occurrence.
+        let s2 = sample_token(&logits(), &[1, 1, 1], &params, &mut Rng::new(0));
+        assert_eq!(s2.token, 3);
+    }
+
+    #[test]
+    fn out_of_vocab_history_is_ignored() {
+        let params = SamplingParams {
+            repetition_penalty: 2.0,
+            ..SamplingParams::greedy()
+        };
+        let s = sample_token(&logits(), &[999, -1i32], &params, &mut Rng::new(0));
+        assert_eq!(s.token, 1);
+    }
+
+    #[test]
+    fn nan_logits_never_panic_and_never_win() {
+        // A numerically-broken step must not take down the serving loop:
+        // NaNs are ignored by greedy, top-k, top-p and the draw alike.
+        let l = vec![0.1, f32::NAN, 2.0, f32::NAN, 1.0];
+        let greedy = sample_token(&l, &[], &SamplingParams::greedy(), &mut Rng::new(0));
+        assert_eq!(greedy.token, 2);
+        let stochastic = SamplingParams {
+            temperature: 1.0,
+            top_k: 2,
+            top_p: 0.9,
+            repetition_penalty: 1.1,
+        };
+        for seed in 0..32 {
+            let s = sample_token(&l, &[2], &stochastic, &mut Rng::new(seed));
+            assert!(s.token == 0 || s.token == 2 || s.token == 4, "token {}", s.token);
+            assert!(s.logprob.is_finite());
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        assert!(SamplingParams::greedy().validate().is_ok());
+        assert!(SamplingParams { temperature: -1.0, ..SamplingParams::greedy() }
+            .validate()
+            .is_err());
+        assert!(SamplingParams { top_p: 0.0, ..SamplingParams::greedy() }
+            .validate()
+            .is_err());
+        assert!(SamplingParams { top_p: 1.5, ..SamplingParams::greedy() }
+            .validate()
+            .is_err());
+        assert!(
+            SamplingParams { repetition_penalty: 0.0, ..SamplingParams::greedy() }
+                .validate()
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn seq_rng_is_deterministic_and_id_sensitive() {
+        let mut a = seq_rng(5, 10);
+        let mut b = seq_rng(5, 10);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = seq_rng(5, 11);
+        let mut a2 = seq_rng(5, 10);
+        assert_ne!(a2.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn stochastic_sampling_covers_more_than_the_mode() {
+        let params = SamplingParams::stochastic(2.0);
+        let mut seen = std::collections::HashSet::new();
+        for seed in 0..200 {
+            let s = sample_token(&logits(), &[], &params, &mut Rng::new(seed));
+            seen.insert(s.token);
+            assert!((0..5).contains(&s.token));
+        }
+        assert!(seen.len() >= 2, "temperature 2 should not be degenerate");
+    }
+}

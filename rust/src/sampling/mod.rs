@@ -1,0 +1,33 @@
+//! Parallel-sampling subsystem: logits processing, fork lineage, and
+//! best-of-n / beam-search controllers.
+//!
+//! LeanAttention's stream-K decode shines when many query rows walk the
+//! same KV stream — and the highest-multiplicity sharing in real serving
+//! is *generated*: best-of-n, beam search and speculative drafts fork a
+//! sequence into siblings sharing their entire history up to the fork
+//! point. This module supplies the three missing pieces over the
+//! copy-on-write paged KV machinery:
+//!
+//! * [`logits`] — the deterministic logits-processing pipeline
+//!   (repetition penalty → temperature → top-k → top-p → draw), which is
+//!   both the engine's sampler and the exact replay oracle.
+//! * [`fork_tree`] — parent/child lineage of forked sequences with their
+//!   fork points.
+//! * [`controller`] — [`BestOfN`] and [`BeamSearch`] controllers owning
+//!   the submit → fork → score → prune lifecycle over
+//!   [`crate::coordinator::Engine::fork`] /
+//!   [`crate::coordinator::Engine::cancel`].
+//!
+//! The serving-side mechanics live in the coordinator: `fork` clones a
+//! live sequence purely by page refcounts (COW defers any copying to the
+//! first divergent write into a shared partial page), and the decode
+//! loop's prefix grouping streams the family's shared history once per
+//! group through the cascade gather.
+
+pub mod controller;
+pub mod fork_tree;
+pub mod logits;
+
+pub use controller::{BeamSearch, BestOfN, ParallelOutcome, ScoredCandidate};
+pub use fork_tree::{ForkPoint, ForkTree};
+pub use logits::{sample_token, seq_rng, SampledToken, SamplingParams};

@@ -12,10 +12,12 @@
 pub mod arch;
 pub mod cascade;
 pub mod cost;
+pub mod sampling;
 pub mod schedule;
 pub mod timeshare;
 
 pub use arch::GpuArch;
 pub use cascade::{simulate_cascade, CascadeSimResult};
 pub use cost::TileCost;
+pub use sampling::{simulate_fork_decode, ForkDecodeCase, ForkDecodeResult};
 pub use schedule::{simulate, simulate_plan, SimResult};

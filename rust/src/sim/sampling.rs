@@ -1,0 +1,164 @@
+//! Fork-group (parallel sampling) decode cost model.
+//!
+//! Best-of-n and beam search fork one sequence into `siblings` that
+//! share their entire history up to the fork point and then grow short
+//! divergent suffixes. On the modeled GPU this is a decode-step sequence
+//! whose cascade structure *changes every step*: at step `t` each
+//! sibling's context is `history + t + 1` tokens of which `history` are
+//! shared, so the flat plan re-streams the shared history once per
+//! sibling per step while the cascade plan streams it once per step.
+//! [`simulate_fork_decode`] accumulates both over a whole decode phase —
+//! the modeled counterpart of the measured numbers from `leanattn bench
+//! --sampling`.
+
+use crate::partition::cascade::{CascadeProblem, PrefixGroup};
+use crate::partition::plan::Strategy;
+
+use super::arch::GpuArch;
+use super::cascade::simulate_cascade;
+use super::schedule::simulate;
+
+/// Shape of one fork-group decode phase.
+#[derive(Clone, Copy, Debug)]
+pub struct ForkDecodeCase {
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Sequences in the fork family (parent + siblings).
+    pub siblings: usize,
+    /// Tokens shared by the whole family at the fork point.
+    pub history: usize,
+    /// Decode steps to model (each sibling grows one token per step).
+    pub decode_steps: usize,
+}
+
+/// Accumulated model outcome over the decode phase.
+#[derive(Clone, Debug, Default)]
+pub struct ForkDecodeResult {
+    /// Modeled HBM KV bytes of the flat plan (history re-streamed per
+    /// sibling per step), summed over steps.
+    pub flat_kv_bytes: f64,
+    /// Modeled HBM KV bytes of the cascade plan (history streamed once
+    /// per step for the family), summed over steps.
+    pub cascade_kv_bytes: f64,
+    /// Summed flat stream-K attention latency (us).
+    pub flat_us: f64,
+    /// Summed cascade attention latency (us).
+    pub cascade_us: f64,
+    /// Steps modeled.
+    pub steps: usize,
+}
+
+impl ForkDecodeResult {
+    /// Fraction of the flat plan's KV traffic the cascade plan avoids.
+    pub fn bytes_saved_fraction(&self) -> f64 {
+        if self.flat_kv_bytes <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.cascade_kv_bytes / self.flat_kv_bytes
+    }
+
+    /// Whole-decode speedup of the cascade plan over flat stream-K.
+    pub fn speedup(&self) -> f64 {
+        if self.cascade_us <= 0.0 {
+            return 1.0;
+        }
+        self.flat_us / self.cascade_us
+    }
+}
+
+/// Model a fork family's whole decode phase on `arch`: one cascade
+/// problem per step (shared history as the prefix group, per-sibling
+/// suffix growing by one token each step) against the flat stream-K
+/// plan over the same contexts.
+pub fn simulate_fork_decode(case: &ForkDecodeCase, arch: &GpuArch) -> ForkDecodeResult {
+    assert!(case.siblings >= 1 && case.decode_steps >= 1);
+    let mut res = ForkDecodeResult::default();
+    for t in 0..case.decode_steps {
+        let ctx = (case.history + t + 1) as u32;
+        let groups = if case.siblings >= 2 && case.history >= 1 {
+            vec![PrefixGroup {
+                prefix_len: case.history as u32,
+                members: (0..case.siblings as u32).collect(),
+            }]
+        } else {
+            Vec::new()
+        };
+        let p = CascadeProblem::new(
+            case.heads,
+            vec![ctx; case.siblings],
+            case.head_dim,
+            groups,
+        )
+        .expect("fork-decode problems are valid by construction")
+        .tile_aligned();
+        let r = simulate_cascade(&p, arch);
+        let flat = simulate(&p.baseline_problem(), Strategy::StreamK, arch);
+        res.flat_kv_bytes += r.baseline_kv_bytes;
+        res.cascade_kv_bytes += r.kv_bytes;
+        res.flat_us += flat.latency_us;
+        res.cascade_us += r.latency_us;
+        res.steps += 1;
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn case(siblings: usize, history: usize, steps: usize) -> ForkDecodeCase {
+        ForkDecodeCase {
+            heads: 8,
+            head_dim: 64,
+            siblings,
+            history,
+            decode_steps: steps,
+        }
+    }
+
+    #[test]
+    fn fork_groups_stream_strictly_fewer_bytes() {
+        let r = simulate_fork_decode(&case(4, 16_384, 8), &GpuArch::a100());
+        assert!(
+            r.cascade_kv_bytes < r.flat_kv_bytes,
+            "cascade {} vs flat {}",
+            r.cascade_kv_bytes,
+            r.flat_kv_bytes
+        );
+        assert!(r.bytes_saved_fraction() > 0.5, "long shared history dominates");
+        assert_eq!(r.steps, 8);
+    }
+
+    #[test]
+    fn solo_decode_matches_flat() {
+        let r = simulate_fork_decode(&case(1, 16_384, 4), &GpuArch::a100());
+        assert!((r.cascade_kv_bytes - r.flat_kv_bytes).abs() < 1e-6);
+        assert!((r.bytes_saved_fraction()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn savings_grow_with_family_size() {
+        let arch = GpuArch::a100();
+        let mut prev = 0.0;
+        for n in [2usize, 4, 8] {
+            let r = simulate_fork_decode(&case(n, 32_768, 4), &arch);
+            assert!(
+                r.bytes_saved_fraction() > prev,
+                "n={n}: {} <= {prev}",
+                r.bytes_saved_fraction()
+            );
+            prev = r.bytes_saved_fraction();
+        }
+        // Asymptote: 1 - 1/n as the history dominates the suffix.
+        assert!((prev - 0.875).abs() < 0.05, "n=8 saved {prev}");
+    }
+
+    #[test]
+    fn short_history_below_one_tile_degenerates_to_flat() {
+        // tile for d=64 exceeds a 3-token history: tile_aligned prunes
+        // the group and the model reports zero savings, not negative.
+        let r = simulate_fork_decode(&case(4, 3, 2), &GpuArch::a100());
+        assert!((r.cascade_kv_bytes - r.flat_kv_bytes).abs() < 1e-6);
+        assert!(r.speedup() > 0.5 && r.speedup() < 1.5);
+    }
+}

@@ -1,5 +1,6 @@
 //! End-to-end engine integration: continuous batching over the PJRT
-//! artifacts, paged cache, sampling, router. Self-skips without artifacts.
+//! artifacts, paged cache, sampling, fork/parallel-sampling lifecycle,
+//! router. Self-skips without artifacts.
 
 use std::path::Path;
 use std::rc::Rc;
@@ -7,6 +8,7 @@ use std::rc::Rc;
 use lean_attention::coordinator::request::FinishReason;
 use lean_attention::coordinator::{Engine, EngineConfig, Router};
 use lean_attention::runtime::{Manifest, Runtime};
+use lean_attention::sampling::{BeamSearch, BestOfN, SamplingParams};
 use lean_attention::util::rng::Rng;
 
 fn setup() -> Option<(Rc<Runtime>, Manifest)> {
@@ -179,6 +181,207 @@ fn cascade_gather_dedups_shared_decode_steps() {
 }
 
 #[test]
+fn fork_with_partial_page_cows_exactly_once_per_sibling() {
+    // Fork mid-page, then diverge: the shared partial last page must be
+    // copy-on-write cloned exactly once per sibling (the last holder
+    // writes in place), and the fork itself must allocate zero pages.
+    let Some((rt, m)) = setup() else { return };
+    let mut e = engine(&rt, &m);
+    let siblings = 2usize;
+    if e.batch_size() < siblings + 1 {
+        eprintln!("skipping: batch too small for a fork family");
+        return;
+    }
+    let pt = e.config.page_tokens;
+    // After one step the cache holds prompt + 1 tokens; choose the
+    // prompt so that lands mid-page.
+    let prompt_len = (pt / 2).max(1);
+    assert!((prompt_len + 1) % pt != 0, "fork point must be mid-page");
+    let parent = e.submit(random_prompt(&mut Rng::new(2), 512, prompt_len), 6).unwrap();
+    e.step().expect("admit + first decode");
+    assert_eq!(e.metrics.prefix.cow_copies, 0, "no sharing yet");
+
+    let used_before = e.kv_used_pages();
+    let kids = e.fork(parent, siblings).expect("fork");
+    assert_eq!(kids.len(), siblings);
+    assert_eq!(
+        e.kv_used_pages(),
+        used_before,
+        "fork must allocate zero pages (refcount-only)"
+    );
+    assert_eq!(e.metrics.sampling.fork_calls, 1);
+    assert_eq!(e.metrics.sampling.forked_siblings, siblings);
+
+    let fin = e.run_until_idle().expect("family decode");
+    assert_eq!(fin.len(), siblings + 1);
+    assert_eq!(
+        e.metrics.prefix.cow_copies, siblings,
+        "one COW clone per sibling with a partial last page"
+    );
+    for f in &fin {
+        assert_eq!(f.output.len(), 6);
+        assert_eq!(f.logprobs.len(), f.output.len());
+        let sum: f64 = f.logprobs.iter().map(|&x| f64::from(x)).sum();
+        assert!((f.cum_logprob - sum).abs() < 1e-6);
+        if kids.contains(&f.id) {
+            assert_eq!(f.parent, Some(parent), "lineage surfaces on finish");
+        }
+    }
+    assert_eq!(e.active(), 0);
+}
+
+#[test]
+fn fork_on_page_boundary_never_cows_and_joins_a_cascade_group() {
+    // Fork exactly at a page boundary: zero COW copies, and the family's
+    // shared full-page history makes the decode steps take the cascade
+    // (deduplicated) gather.
+    let Some((rt, m)) = setup() else { return };
+    let mut e = engine(&rt, &m);
+    let siblings = 2usize;
+    let pt = e.config.page_tokens;
+    if e.batch_size() < siblings + 1 || e.prefill_bucket() < pt {
+        eprintln!("skipping: engine too small for an aligned fork family");
+        return;
+    }
+    // prompt + 1 sampled token == exactly one full page at the fork.
+    let prompt_len = pt - 1;
+    let parent = e.submit(random_prompt(&mut Rng::new(3), 512, prompt_len), 8).unwrap();
+    e.step().expect("admit + first decode");
+
+    let used_before = e.kv_used_pages();
+    e.fork(parent, siblings).expect("fork");
+    assert_eq!(e.kv_used_pages(), used_before, "zero page copies at fork");
+
+    e.run_until_idle().expect("family decode");
+    assert_eq!(
+        e.metrics.prefix.cow_copies, 0,
+        "page-boundary fork must never copy"
+    );
+    assert!(
+        e.metrics.cascade_gather_steps > 0,
+        "fork siblings must decode as a cascade group"
+    );
+    assert!(
+        e.metrics.gather_bytes_shared < e.metrics.gather_bytes_flat,
+        "sibling-cascade decode reads fewer gathered-KV bytes: {} vs {}",
+        e.metrics.gather_bytes_shared,
+        e.metrics.gather_bytes_flat
+    );
+    let rep = e.metrics.report();
+    assert!(rep.contains("parallel sampling"), "{rep}");
+}
+
+#[test]
+fn fork_requires_live_sequence_and_free_slots() {
+    let Some((rt, m)) = setup() else { return };
+    let mut e = engine(&rt, &m);
+    assert!(e.fork(42, 1).is_err(), "unknown sequence");
+    let id = e.submit(vec![1, 2, 3], 4).unwrap();
+    assert!(e.fork(id, 1).is_err(), "queued but not yet active");
+    e.step().expect("admit");
+    let free = e.free_slots();
+    assert!(e.fork(id, free + 1).is_err(), "more siblings than slots");
+    e.run_until_idle().expect("drain");
+}
+
+#[test]
+fn best_of_n_is_deterministic_and_ranked() {
+    let Some((rt, m)) = setup() else { return };
+    let params = SamplingParams {
+        temperature: 0.7,
+        top_k: 0,
+        top_p: 1.0,
+        repetition_penalty: 1.0,
+    };
+    let n = 3usize;
+    let run = |rt: &Rc<Runtime>, m: &Manifest| {
+        let mut e = engine(rt, m);
+        if e.batch_size() < n {
+            return None;
+        }
+        let ctl = BestOfN { n, max_new: 6, params: params.clone() };
+        let out = ctl.run(&mut e, vec![5, 17, 333, 7, 42]).expect("best-of-n");
+        Some(
+            out.candidates
+                .iter()
+                .map(|c| (c.finished.id, c.finished.output.clone(), c.score))
+                .collect::<Vec<_>>(),
+        )
+    };
+    let Some(a) = run(&rt, &m) else {
+        eprintln!("skipping: batch too small for best-of-3");
+        return;
+    };
+    let b = run(&rt, &m).unwrap();
+    assert_eq!(a, b, "fixed seed must reproduce candidates bit-exactly");
+    assert_eq!(a.len(), n);
+    for w in a.windows(2) {
+        assert!(w[0].2 >= w[1].2, "candidates sorted by score desc");
+    }
+    for (_, output, _) in &a {
+        assert_eq!(output.len(), 6);
+    }
+}
+
+#[test]
+fn beam_search_prunes_deterministically() {
+    let Some((rt, m)) = setup() else { return };
+    let params = SamplingParams {
+        temperature: 0.9,
+        top_k: 0,
+        top_p: 1.0,
+        repetition_penalty: 1.0,
+    };
+    let run = |rt: &Rc<Runtime>, m: &Manifest| {
+        let mut e = engine(rt, m);
+        if e.batch_size() < 4 {
+            return None;
+        }
+        let ctl = BeamSearch { width: 2, expand: 2, max_new: 5, params: params.clone() };
+        let out = ctl.run(&mut e, vec![9, 8, 7]).expect("beam");
+        Some((
+            out.candidates
+                .iter()
+                .map(|c| (c.finished.id, c.finished.output.clone(), c.score))
+                .collect::<Vec<_>>(),
+            e.metrics.sampling.cancelled,
+        ))
+    };
+    let Some((a, cancelled_a)) = run(&rt, &m) else {
+        eprintln!("skipping: batch too small for beam search");
+        return;
+    };
+    let (b, _) = run(&rt, &m).unwrap();
+    assert_eq!(a, b, "beam search must reproduce under a fixed seed");
+    assert!(cancelled_a > 0, "expansion must have pruned some hypotheses");
+    // The winner is a completed generation, not a pruned stub.
+    assert!(!a.is_empty());
+    assert_eq!(a[0].1.len(), 5, "winner ran to its budget");
+}
+
+#[test]
+fn stochastic_sampling_is_seed_deterministic_end_to_end() {
+    let Some((rt, m)) = setup() else { return };
+    let params = SamplingParams {
+        temperature: 0.8,
+        top_k: 8,
+        top_p: 0.95,
+        repetition_penalty: 1.1,
+    };
+    let gen = |rt: &Rc<Runtime>, m: &Manifest| {
+        let mut e = engine(rt, m);
+        e.submit_with(vec![5, 17, 333, 7, 42], 10, params.clone()).unwrap();
+        let f = e.run_until_idle().unwrap().remove(0);
+        (f.output, f.logprobs, f.cum_logprob)
+    };
+    let a = gen(&rt, &m);
+    let b = gen(&rt, &m);
+    assert_eq!(a, b, "same engine seed, same stochastic generation");
+    assert_eq!(a.0.len(), 10);
+    assert!(a.1.iter().all(|lp| lp.is_finite() && *lp <= 1e-6));
+}
+
+#[test]
 fn context_full_terminates_gracefully() {
     let Some((rt, m)) = setup() else { return };
     let mut e = engine(&rt, &m);
@@ -203,7 +406,9 @@ fn prompt_validation() {
 }
 
 #[test]
-fn router_least_loaded_across_replicas() {
+fn router_spreads_cold_prompts_round_robin() {
+    // Nothing is cached anywhere, so prefix routing ties at zero and
+    // the round-robin tiebreak spreads load over both replicas.
     let Some((rt, m)) = setup() else { return };
     let e1 = engine(&rt, &m);
     let e2 = engine(&rt, &m);
@@ -220,6 +425,57 @@ fn router_least_loaded_across_replicas() {
     let mut got: Vec<_> = fin.iter().map(|f| f.id).collect();
     got.sort();
     assert_eq!(got, ids);
+}
+
+#[test]
+fn router_colocates_same_prefix_requests_on_the_warm_replica() {
+    let Some((rt, m)) = setup() else { return };
+    let e1 = engine(&rt, &m);
+    let page = e1.config.page_tokens;
+    if e1.prefill_bucket() < page + 2 {
+        eprintln!("skipping: prefill bucket too small for a full shared page");
+        return;
+    }
+    let e2 = engine(&rt, &m);
+    let mut router = Router::new(vec![e1, e2]);
+
+    // Warm: the first (cold) submit round-robins to replica 0 and
+    // registers the prefix page there.
+    let system: Vec<i32> = (0..page as i32).map(|t| (t * 11 + 2) % 512).collect();
+    let mut warm = system.clone();
+    warm.extend([7, 8]);
+    let warm_id = router.submit(warm, 2).unwrap();
+    assert_eq!(router.route_of(warm_id), Some(0));
+    router.run_until_idle().expect("warm");
+
+    // Affinity: same-prefix requests all steer to replica 0 even while
+    // the rr cursor keeps advancing.
+    let mut affine_ids = Vec::new();
+    for tail in 0..3i32 {
+        let mut prompt = system.clone();
+        prompt.extend([20 + tail, 30 + tail]);
+        affine_ids.push(router.submit(prompt, 2).unwrap());
+    }
+    for &id in &affine_ids {
+        assert_eq!(router.route_of(id), Some(0), "same-prefix requests colocate");
+    }
+    router.run_until_idle().expect("affine");
+    assert_eq!(
+        router.engines()[0].metrics.prefix.hits,
+        3,
+        "all three warm prompts hit replica 0's radix index"
+    );
+    assert_eq!(router.engines()[1].metrics.prefix.hits, 0);
+
+    // Cold prompts still spread round-robin across the tie.
+    let cold_a = router.submit(vec![400, 401, 402], 1).unwrap();
+    let cold_b = router.submit(vec![410, 411, 412], 1).unwrap();
+    assert_ne!(
+        router.route_of(cold_a),
+        router.route_of(cold_b),
+        "cold ties alternate replicas"
+    );
+    router.run_until_idle().expect("drain");
 }
 
 #[test]

@@ -1,0 +1,252 @@
+//! Parallel-sampling properties that need no artifacts:
+//!
+//! 1. **Oracle replay** — a recorded decode trace (raw logits per step)
+//!    resampled through `sampling::sample_token` with the same seed
+//!    reproduces the identical token and logprob sequence; the logprob
+//!    of every sampled token is a valid log-probability of the processed
+//!    distribution.
+//! 2. **Degenerate-group invariant** — a cascade plan whose groups are
+//!    all single-member is *structurally* the flat plan: identical
+//!    rolled tasks and bit-identical `lean_cascade_host` output versus
+//!    the flat lean host twin, across randomized shapes.
+//! 3. **Fork-family storage** — random fork/append/free interleavings
+//!    on the paged cache keep refcounts exact and never copy at fork.
+
+use lean_attention::coordinator::PagedKvCache;
+use lean_attention::partition::cascade::{
+    build_cascade_plan, CascadeProblem, CascadeTensors, PrefixGroup,
+};
+use lean_attention::runtime::attention_exec::{
+    lean_cascade_host, roll_cascade_tasks, rolled_kv_bytes,
+};
+use lean_attention::sampling::{sample_token, seq_rng, SampledToken, SamplingParams};
+use lean_attention::util::rng::Rng;
+use lean_attention::util::testing::prop_check;
+
+fn random_params(rng: &mut Rng) -> SamplingParams {
+    SamplingParams {
+        temperature: *rng.choose(&[0.0f32, 0.5, 0.8, 1.0, 1.5]),
+        top_k: *rng.choose(&[0usize, 1, 3, 8]),
+        top_p: *rng.choose(&[1.0f32, 0.95, 0.7, 0.3]),
+        repetition_penalty: *rng.choose(&[1.0f32, 1.1, 1.5]),
+    }
+}
+
+#[test]
+fn sampled_traces_replay_exactly_through_the_oracle() {
+    prop_check("logprob trace replays bit-exactly", 50, |rng| {
+        let vocab = rng.urange(4, 40);
+        let steps = rng.urange(1, 16);
+        let params = random_params(rng);
+        params.validate().map_err(|e| e.to_string())?;
+        let seed = rng.next_u64();
+        let id = rng.next_u64();
+
+        // "Serve": sample a trace from per-step random logits.
+        let logits: Vec<Vec<f32>> =
+            (0..steps).map(|_| rng.normal_vec(vocab)).collect();
+        let mut history: Vec<i32> =
+            (0..rng.urange(1, 8)).map(|_| rng.urange(0, vocab) as i32).collect();
+        let prompt = history.clone();
+        let mut served: Vec<SampledToken> = Vec::new();
+        let mut srng = seq_rng(seed, id);
+        for l in &logits {
+            let s = sample_token(l, &history, &params, &mut srng);
+            if !(0..vocab as i32).contains(&s.token) {
+                return Err(format!("token {} outside vocab {vocab}", s.token));
+            }
+            if !(s.logprob <= 1e-6 && s.logprob.is_finite()) {
+                return Err(format!("invalid logprob {}", s.logprob));
+            }
+            history.push(s.token);
+            served.push(s);
+        }
+
+        // "Verify": the exact host oracle replays the identical trace
+        // from the recorded raw logits and the same (seed, id).
+        let mut replay_hist = prompt;
+        let mut orng = seq_rng(seed, id);
+        for (l, want) in logits.iter().zip(&served) {
+            let got = sample_token(l, &replay_hist, &params, &mut orng);
+            if got != *want {
+                return Err(format!("replay diverged: {got:?} vs {want:?}"));
+            }
+            replay_hist.push(got.token);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn greedy_trace_is_temperature_zero_of_the_same_pipeline() {
+    // Greedy is the same oracle at temperature 0 — no RNG consumption,
+    // so the trace is independent of the seed entirely.
+    prop_check("greedy ignores the seed", 30, |rng| {
+        let vocab = rng.urange(3, 20);
+        let logits = rng.normal_vec(vocab);
+        let params = SamplingParams {
+            repetition_penalty: *rng.choose(&[1.0f32, 1.3]),
+            ..SamplingParams::greedy()
+        };
+        let hist = [0i32, 1];
+        let a = sample_token(&logits, &hist, &params, &mut Rng::new(1));
+        let b = sample_token(&logits, &hist, &params, &mut Rng::new(999));
+        if a != b {
+            return Err(format!("greedy diverged across seeds: {a:?} vs {b:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Random flat decode shapes for the degenerate-group invariant.
+fn random_shape(rng: &mut Rng) -> (usize, Vec<u32>, usize, usize) {
+    let batch = rng.urange(1, 6);
+    let heads = rng.urange(1, 4);
+    let d = *rng.choose(&[16usize, 32]);
+    let tile = *rng.choose(&[16usize, 32, 64]);
+    let lens: Vec<u32> = (0..batch).map(|_| rng.range(1, 300) as u32).collect();
+    (heads, lens, d, tile)
+}
+
+#[test]
+fn all_singleton_groups_are_bit_identical_to_the_flat_lean_path() {
+    // The satellite invariant: single-member "groups" must not change
+    // the computation at all. `CascadeProblem::new` dissolves them, so
+    // the segment problem, the stream-K plan, the rolled tasks and the
+    // executed output are all *identical* — not merely close — to the
+    // flat lean host twin.
+    prop_check("degenerate cascade == flat, bitwise", 40, |rng| {
+        let (heads, lens, d, tile) = random_shape(rng);
+        // Every sequence gets its own singleton group with a random
+        // prefix cut.
+        let groups: Vec<PrefixGroup> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &ctx)| PrefixGroup {
+                prefix_len: rng.range(1, u64::from(ctx) + 1) as u32,
+                members: vec![i as u32],
+            })
+            .collect();
+        let grouped = CascadeProblem::new(heads, lens.clone(), d, groups)
+            .map_err(|e| e.to_string())?
+            .with_tile(tile);
+        let flat = CascadeProblem::new(heads, lens, d, Vec::new())
+            .map_err(|e| e.to_string())?
+            .with_tile(tile);
+        if !grouped.prefix_groups.is_empty() {
+            return Err("singleton groups survived construction".into());
+        }
+
+        let slots = rng.urange(1, 64);
+        let cp_g = build_cascade_plan(&grouped, slots);
+        let cp_f = build_cascade_plan(&flat, slots);
+        cp_g.plan
+            .validate(&cp_g.segment_problem)
+            .map_err(|e| e.to_string())?;
+
+        let tasks_g = roll_cascade_tasks(&grouped, &cp_g);
+        let tasks_f = roll_cascade_tasks(&flat, &cp_f);
+        if tasks_g != tasks_f {
+            return Err(format!(
+                "rolled tasks differ: {} vs {} tasks",
+                tasks_g.len(),
+                tasks_f.len()
+            ));
+        }
+        if rolled_kv_bytes(&tasks_g, d) != rolled_kv_bytes(&tasks_f, d) {
+            return Err("gathered-KV bytes differ".into());
+        }
+
+        // Identical tensor draws (both problems have zero groups, so the
+        // RNG consumption sequence matches), identical batching, and the
+        // outputs must be bit-identical — same ops in the same order.
+        let tseed = rng.next_u64();
+        let t_g = CascadeTensors::random(&grouped, tseed);
+        let t_f = CascadeTensors::random(&flat, tseed);
+        let batch_rows = rng.urange(1, 17);
+        let (o_g, lse_g) = lean_cascade_host(&grouped, &t_g, &cp_g, batch_rows);
+        let (o_f, lse_f) = lean_cascade_host(&flat, &t_f, &cp_f, batch_rows);
+        if o_g != o_f {
+            return Err("outputs are not bit-identical".into());
+        }
+        if lse_g != lse_f {
+            return Err("LSEs are not bit-identical".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fork_families_keep_refcounts_exact_under_random_interleavings() {
+    prop_check("fork/append/free refcount invariants", 40, |rng| {
+        const PAGE_TOKENS: usize = 4;
+        const PAGES: usize = 32;
+        let mut cache = PagedKvCache::new(1, 1, 2, PAGE_TOKENS, PAGES);
+        let mut active: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..80 {
+            match rng.urange(0, 4) {
+                0 => {
+                    let len = rng.urange(1, 3 * PAGE_TOKENS);
+                    let n = len * 2;
+                    let (k, v) = (rng.normal_vec(n), rng.normal_vec(n));
+                    if cache.insert_seq(next_id, &k, &v, len).is_ok() {
+                        active.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 if !active.is_empty() => {
+                    let parent = *rng.choose(&active);
+                    let free_before = cache.free_pages();
+                    if cache.fork_seq(parent, next_id).is_ok() {
+                        if cache.free_pages() != free_before {
+                            return Err("fork allocated pages".into());
+                        }
+                        if cache.seq_len(next_id) != cache.seq_len(parent) {
+                            return Err("fork length mismatch".into());
+                        }
+                        active.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                2 if !active.is_empty() => {
+                    let id = *rng.choose(&active);
+                    let (k, v) = (rng.normal_vec(2), rng.normal_vec(2));
+                    let _ = cache.append_token(id, &k, &v);
+                }
+                3 if !active.is_empty() => {
+                    let i = rng.urange(0, active.len());
+                    let id = active.swap_remove(i);
+                    cache.free_seq(id);
+                }
+                _ => {}
+            }
+            // Shadow refcounts: one per holding sequence per page.
+            let mut refs = vec![0u32; PAGES];
+            for &id in &active {
+                for &p in cache.seq_pages(id).unwrap() {
+                    refs[p] += 1;
+                }
+            }
+            for (p, &want) in refs.iter().enumerate() {
+                if cache.page_ref(p) != want {
+                    return Err(format!(
+                        "page {p}: refcount {} vs shadow {want}",
+                        cache.page_ref(p)
+                    ));
+                }
+            }
+            let live = refs.iter().filter(|&&r| r > 0).count();
+            if cache.used_pages() != live {
+                return Err("leak or phantom page".into());
+            }
+        }
+        for id in active.drain(..) {
+            cache.free_seq(id);
+        }
+        if cache.free_pages() != PAGES {
+            return Err("fork family leaked pages".into());
+        }
+        Ok(())
+    });
+}
