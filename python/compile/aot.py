@@ -182,6 +182,20 @@ def build_model(out_dir: pathlib.Path, name: str) -> dict:
         to_hlo_text(jax.jit(pre).lower(pspecs, ptoks, plens)),
     )
 
+    # Speculative-decoding verify step: spec_bucket block tokens scored
+    # per sequence in one pass, surfacing per-position logits.
+    vtoks = jax.ShapeDtypeStruct((b, cfg.spec_bucket), jnp.int32)
+
+    def ver(params, tokens, k_cache, v_cache, positions):
+        return M.verify_step(cfg, params, tokens, k_cache, v_cache, positions)
+
+    ver_meta = _write(
+        out_dir,
+        f"verify_{name}.hlo.txt",
+        to_hlo_text(jax.jit(ver).lower(pspecs, vtoks, kcache, kcache, pos)),
+    )
+    ver_meta["spec_bucket"] = cfg.spec_bucket
+
     return {
         "config": {
             "name": cfg.name,
@@ -199,6 +213,7 @@ def build_model(out_dir: pathlib.Path, name: str) -> dict:
         },
         "decode": dec_meta,
         "prefill": pre_meta,
+        "verify": ver_meta,
         "weights": f"{name}.weights.bin",
         "weights_bytes": len(blob),
         "params": [
@@ -209,6 +224,10 @@ def build_model(out_dir: pathlib.Path, name: str) -> dict:
         "decode_outputs": "logits[b,v]f32, new_k[l,b,h,dh]f32, new_v[l,b,h,dh]f32",
         "prefill_inputs": "params... , tokens[b,p]i32, lengths[b]i32",
         "prefill_outputs": "logits[b,v]f32, k[l,b,h,p,dh]f32, v[l,b,h,p,dh]f32",
+        "verify_inputs": "params... , tokens[b,s]i32, k_cache[l,b,h,c,dh]f32, "
+        "v_cache[l,b,h,c,dh]f32, positions[b]i32",
+        "verify_outputs": "logits[b,s,v]f32, new_k[l,b,h,s,dh]f32, "
+        "new_v[l,b,h,s,dh]f32",
     }
 
 
@@ -244,7 +263,7 @@ def main() -> None:
             print(f"model {name}: {time.time() - t:.1f}s")
 
     (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
-    n = len(manifest["attention"]) + len(manifest["reduce"]) + 2 * len(
+    n = len(manifest["attention"]) + len(manifest["reduce"]) + 3 * len(
         manifest["models"]
     )
     print(f"wrote {n} HLO artifacts + manifest to {out_dir} in {time.time()-t0:.1f}s")

@@ -12,6 +12,10 @@ Pallas kernel. Two entry points are AOT-lowered by ``compile.aot``:
   Returns logits and the current token's per-layer K/V rows so the Rust
   coordinator can append them to its paged cache (the cache lives in
   Rust; the graph is pure).
+* ``verify_step``   — the speculative-decoding verify pass: N_q =
+  ``spec_bucket`` block tokens per sequence (pending token + drafts),
+  causal within the block, scored against the cache in one pass.
+  Returns **per-position** logits plus the whole block's K/V rows.
 
 Weight layout is a flat ordered list (see ``param_order``) so the Rust
 runtime can feed the blob ``compile.aot`` serializes without pytree
@@ -52,6 +56,9 @@ class ModelConfig:
     prefill_bucket: int = 64
     batch: int = 2
     rope_base: float = 10000.0
+    # Draft-block tokens the verify step scores per sequence (pending
+    # token + spec_bucket-1 drafts) — the speculative-decoding window.
+    spec_bucket: int = 4
 
     @property
     def groups(self) -> int:
@@ -210,6 +217,88 @@ def decode_step(
     x = _layer_norm(x, p["ln_f.scale"], p["ln_f.bias"])
     logits = x @ p["embed"].T  # tied head
     new_k = jnp.stack(new_ks)  # [L, B, H, dh]
+    new_v = jnp.stack(new_vs)
+    return logits, new_k, new_v
+
+
+def verify_step(
+    cfg: ModelConfig,
+    params: Sequence[jnp.ndarray],
+    tokens: jnp.ndarray,  # [B, S] int32: pending token + S-1 drafted tokens
+    k_cache: jnp.ndarray,  # [L, B, H, C, dh] f32
+    v_cache: jnp.ndarray,  # [L, B, H, C, dh]
+    positions: jnp.ndarray,  # [B] int32 cached tokens per sequence
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Multi-token verify step (speculative decoding).
+
+    Scores all ``S = spec_bucket`` draft-block tokens of every sequence
+    in one pass: position ``s`` attends to the ``positions`` cached
+    tokens (through the L1 Pallas kernel) plus block tokens ``0..=s``
+    (a rescale-folded reference partial — causal within the block).
+    Returns ``(logits [B, S, V], new_k [L, B, H, S, dh], new_v [...])``.
+
+    Position 0 is exactly ``decode_step``'s computation (same kernel,
+    same fold), so a pass whose drafts are all rejected reproduces the
+    plain decode step; later positions extend the fresh partial to the
+    block slice, exact by the associativity of the §IV-A operator.
+    Verifying k drafts therefore turns k memory-bound single-query
+    steps into one walk of the cached KV stream serving k+1 query rows
+    — the arithmetic-intensity shift LeanAttention's stream-K
+    decomposition is built to schedule.
+    """
+    p = _unpack(cfg, params)
+    b, s_len, h, dh = cfg.batch, tokens.shape[1], cfg.n_heads, cfg.head_dim
+    g = b * h
+
+    x = p["embed"][tokens]  # [B, S, D]
+    pos = positions[:, None] + jnp.arange(s_len, dtype=jnp.int32)[None, :]
+    cos, sin = _rope_freqs(cfg, pos)  # [B, S, dh/2]
+
+    new_ks, new_vs = [], []
+    for i in range(cfg.n_layers):
+        hpre = _layer_norm(x, p[f"l{i}.ln1.scale"], p[f"l{i}.ln1.bias"])
+        q = (hpre @ p[f"l{i}.wq"]).reshape(b, s_len, h, dh)
+        k_new = (hpre @ p[f"l{i}.wk"]).reshape(b, s_len, h, dh)
+        v_new = (hpre @ p[f"l{i}.wv"]).reshape(b, s_len, h, dh)
+        q = _apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
+        k_new = _apply_rope(k_new, cos[:, :, None, :], sin[:, :, None, :])
+        k_bh = jnp.moveaxis(k_new, 2, 1)  # [B, H, S, dh]
+        v_bh = jnp.moveaxis(v_new, 2, 1)
+        new_ks.append(k_bh)
+        new_vs.append(v_bh)
+
+        # Cached-context partial once per block position (one KV walk
+        # per position here on the build-time CPU path; the Rust
+        # multi-query planner is what schedules the shared walk on the
+        # modeled GPU), folded with the causal in-block partial.
+        glens = jnp.repeat(positions, h)
+        outs = []
+        for s in range(s_len):
+            q_s = q[:, s].reshape(g, dh)
+            o_c, m_c, l_c = la.partial_attention(
+                q_s,
+                k_cache[i].reshape(g, cfg.ctx_bucket, dh),
+                v_cache[i].reshape(g, cfg.ctx_bucket, dh),
+                glens,
+            )
+            o_n, m_n, l_n = kref.partial_attention_ref(
+                q_s,
+                k_bh.reshape(g, s_len, dh),
+                v_bh.reshape(g, s_len, dh),
+                jnp.full((g,), s + 1, jnp.int32),
+            )
+            o, _, l = kref.rescale_reduce_ref(o_c, m_c, l_c, o_n, m_n, l_n)
+            outs.append(kref.finalize_ref(o, l).reshape(b, h * dh))
+        attn = jnp.stack(outs, axis=1)  # [B, S, H*dh]
+        x = x + attn @ p[f"l{i}.wo"]
+
+        hpre2 = _layer_norm(x, p[f"l{i}.ln2.scale"], p[f"l{i}.ln2.bias"])
+        ff = jax.nn.gelu(hpre2 @ p[f"l{i}.w1"] + p[f"l{i}.b1"])
+        x = x + ff @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+
+    x = _layer_norm(x, p["ln_f.scale"], p["ln_f.bias"])
+    logits = x @ p["embed"].T  # [B, S, V]
+    new_k = jnp.stack(new_ks)  # [L, B, H, S, dh]
     new_v = jnp.stack(new_vs)
     return logits, new_k, new_v
 

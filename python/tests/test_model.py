@@ -137,3 +137,70 @@ class TestParamLayout:
         a = M.init_params(CFG, seed=0)
         b = M.init_params(CFG, seed=1)
         assert any(not np.array_equal(x, y) for x, y in zip(a, b))
+
+
+class TestVerifyStep:
+    def test_output_shapes(self, params):
+        rng = np.random.default_rng(7)
+        kc, vc = _random_cache(rng, CFG)
+        s = CFG.spec_bucket
+        toks = jnp.asarray(
+            rng.integers(0, CFG.vocab, (CFG.batch, s)), jnp.int32
+        )
+        pos = jnp.asarray([3, 9], jnp.int32)
+        lg, nk, nv = M.verify_step(CFG, params, toks, kc, vc, pos)
+        assert lg.shape == (CFG.batch, s, CFG.vocab)
+        assert nk.shape == (
+            CFG.n_layers,
+            CFG.batch,
+            CFG.n_heads,
+            s,
+            CFG.head_dim,
+        )
+        assert nv.shape == nk.shape
+
+    def test_position_zero_matches_decode_step(self, params):
+        """Row 0 of a verify pass is exactly one decode step: same kernel,
+        same rescale fold — a pass whose drafts are all rejected reproduces
+        plain decode."""
+        rng = np.random.default_rng(8)
+        kc, vc = _random_cache(rng, CFG)
+        s = CFG.spec_bucket
+        toks = jnp.asarray(
+            rng.integers(0, CFG.vocab, (CFG.batch, s)), jnp.int32
+        )
+        pos = jnp.asarray([5, 17], jnp.int32)
+        lg, nk, nv = M.verify_step(CFG, params, toks, kc, vc, pos)
+        lg0, nk0, nv0 = M.decode_step(CFG, params, toks[:, 0], kc, vc, pos)
+        np.testing.assert_allclose(lg[:, 0], lg0, atol=5e-5, rtol=5e-5)
+        np.testing.assert_allclose(nk[:, :, :, 0], nk0, atol=5e-5, rtol=5e-5)
+        np.testing.assert_allclose(nv[:, :, :, 0], nv0, atol=5e-5, rtol=5e-5)
+
+    def test_matches_token_by_token_decode(self, params):
+        """Verifying a block is the same function as decoding its tokens
+        one at a time with the K/V rows appended to the cache — the
+        associativity of the rescale operator, at model scale."""
+        rng = np.random.default_rng(9)
+        kc, vc = _random_cache(rng, CFG)
+        s = CFG.spec_bucket
+        toks = jnp.asarray(
+            rng.integers(0, CFG.vocab, (CFG.batch, s)), jnp.int32
+        )
+        base = jnp.asarray([4, 11], jnp.int32)
+        lg, nk, nv = M.verify_step(CFG, params, toks, kc, vc, base)
+
+        kc_seq, vc_seq = np.asarray(kc), np.asarray(vc)
+        for i in range(s):
+            lg_i, nk_i, nv_i = M.decode_step(
+                CFG,
+                params,
+                toks[:, i],
+                jnp.asarray(kc_seq),
+                jnp.asarray(vc_seq),
+                base + i,
+            )
+            np.testing.assert_allclose(lg[:, i], lg_i, atol=2e-4, rtol=2e-4)
+            for b in range(CFG.batch):
+                p = int(base[b]) + i
+                kc_seq[:, b, :, p, :] = np.asarray(nk_i)[:, b]
+                vc_seq[:, b, :, p, :] = np.asarray(nv_i)[:, b]

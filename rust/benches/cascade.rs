@@ -53,8 +53,17 @@ fn attention_executor() -> Option<AttentionExecutor> {
 
 fn main() {
     // `--smoke` (after `--` with cargo bench) shrinks the sweep so CI can
-    // exercise the whole bench path in seconds.
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    // exercise the whole bench path in seconds; `--seed N` makes every
+    // randomized case reproduce run-to-run (default 0, like the CLI
+    // bench subcommands).
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let seed: u64 = argv
+        .iter()
+        .position(|a| a == "--seed")
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
     let arch = GpuArch::a100();
 
     // --- modeled traffic + latency sweep over batch size ----------------
@@ -115,7 +124,7 @@ fn main() {
     let micro_iters = if smoke { 3 } else { 20 };
     for &(batch, prefix, suffix) in micro_cases {
         let p = shared_batch(batch, prefix, suffix, 2).with_tile(64);
-        let tens = CascadeTensors::random(&p, 3);
+        let tens = CascadeTensors::random(&p, seed ^ 3);
         let cplan = build_cascade_plan(&p, 216);
         results.push(bench(
             &format!("cascade_host_b{batch}_p{prefix}_s{suffix}"),
@@ -166,7 +175,7 @@ fn main() {
         } else {
             ExecCase { batch, prefix, suffix, heads: 2, head_dim: 16, tile: 32, slots: 64 }
         };
-        let c = compare_exec(case, exec_iters, exec.as_ref(), 11)
+        let c = compare_exec(case, exec_iters, exec.as_ref(), seed)
             .expect("exec comparison");
         assert!(
             c.cascade_kv_bytes < c.flat_kv_bytes,

@@ -7,6 +7,7 @@ pub mod cascade_exec;
 pub mod figures;
 pub mod runner;
 pub mod sampling;
+pub mod spec;
 pub mod table;
 pub mod trace;
 pub mod workload;
@@ -14,4 +15,5 @@ pub mod workload;
 pub use cascade_exec::{compare_exec, ExecCase, ExecComparison};
 pub use runner::{bench, BenchResult};
 pub use sampling::{compare_sampling, SamplingCase, SamplingComparison};
+pub use spec::{compare_spec, SpecCase, SpecComparison};
 pub use table::Table;

@@ -40,6 +40,7 @@ use crate::runtime::{Manifest, ModelRuntime, Runtime};
 use crate::sampling::{sample_token, seq_rng, ForkTree, SamplingParams};
 use crate::sim::cascade::simulate_cascade;
 use crate::sim::{simulate, GpuArch};
+use crate::spec::{verify_chain, DraftKind, DraftSource};
 use crate::util::rng::Rng;
 
 use super::batcher::ContinuousBatcher;
@@ -68,6 +69,15 @@ pub struct EngineConfig {
     /// generation — including forked best-of-n/beam candidates — is
     /// bit-reproducible.
     pub seed: u64,
+    /// Draft tokens verified per decode step (0 disables speculative
+    /// decoding). Requires an artifact set with a verify step; without
+    /// one the engine degrades to plain one-token decode. The committed
+    /// stream is bit-identical either way — speculation only changes
+    /// how many verify passes it takes.
+    pub spec_k: usize,
+    /// Draft source for speculative decoding (n-gram self-drafting needs
+    /// no second model).
+    pub spec_draft: DraftKind,
 }
 
 impl Default for EngineConfig {
@@ -80,6 +90,8 @@ impl Default for EngineConfig {
             enable_prefix_cache: true,
             sampling: SamplingParams::default(),
             seed: 0,
+            spec_k: 0,
+            spec_draft: DraftKind::NGram,
         }
     }
 }
@@ -134,6 +146,8 @@ pub struct Engine {
     active: HashMap<RequestId, ActiveSeq>,
     prefix_index: RadixPrefixIndex,
     fork_tree: ForkTree,
+    /// Speculative draft source (used when `config.spec_k > 0`).
+    drafter: Box<dyn DraftSource>,
     pub metrics: Metrics,
     arch: GpuArch,
     next_id: RequestId,
@@ -164,6 +178,7 @@ impl Engine {
         let batcher = ContinuousBatcher::new(art.batch);
         let prefix_index = RadixPrefixIndex::new(config.page_tokens);
         let cache_elems = model.cache_elems();
+        let drafter = config.spec_draft.build(art.vocab, config.seed);
         Ok(Engine {
             config,
             model,
@@ -172,6 +187,7 @@ impl Engine {
             active: HashMap::new(),
             prefix_index,
             fork_tree: ForkTree::new(),
+            drafter,
             metrics: Metrics::default(),
             arch: GpuArch::a100(),
             next_id: 1,
@@ -284,8 +300,11 @@ impl Engine {
             "token outside vocab"
         );
         // A request whose full budget can never fit would deadlock the
-        // FCFS queue — reject it up front.
-        let budget = (prompt.len() + max_new_tokens).min(self.model.art.ctx_bucket);
+        // FCFS queue — reject it up front. The budget includes the
+        // speculative draft-block overhang: verify passes append the
+        // whole block before rolling rejects back.
+        let budget = (prompt.len() + max_new_tokens + self.spec_overhang())
+            .min(self.model.art.ctx_bucket);
         ensure!(
             self.cache.pages_for(budget) <= self.cache.total_pages(),
             "request budget of {budget} tokens exceeds total KV capacity"
@@ -358,8 +377,10 @@ impl Engine {
         // Reserve fresh pages for every sibling's remaining budget: its
         // final context minus the full pages it shares forever (the
         // shared partial last page is replaced by a COW clone out of
-        // this same budget).
-        let budget = (p_prompt_len + p_max_new).min(self.model.art.ctx_bucket);
+        // this same budget). Budgets include the speculative draft-block
+        // overhang, like admission.
+        let budget = (p_prompt_len + p_max_new + self.spec_overhang())
+            .min(self.model.art.ctx_bucket);
         let need = self.cache.pages_for(budget).saturating_sub(full_pages);
         let total = self.cache.total_pages();
         ensure!(
@@ -468,9 +489,31 @@ impl Engine {
         })
     }
 
+    /// Extra KV tokens reserved per request beyond `prompt + max_new`:
+    /// a speculative verify pass eagerly appends its whole draft block
+    /// (`spec_bucket` rows) before truncating rejects, so admission must
+    /// budget for the transient peak — the engine half of
+    /// variable-tokens-per-step accounting.
+    fn spec_overhang(&self) -> usize {
+        if self.config.spec_k == 0 || !self.model.has_verify() {
+            0
+        } else {
+            self.model.art.spec_bucket
+        }
+    }
+
+    /// Whether this engine actually runs speculative steps (configured
+    /// *and* backed by a verify artifact).
+    pub fn spec_enabled(&self) -> bool {
+        self.config.spec_k > 0 && self.model.has_verify()
+    }
+
     fn admit_and_prefill(&mut self, finished: &mut Vec<FinishedRequest>) -> Result<()> {
         let ctx_cap = self.model.art.ctx_bucket;
-        let budget = |r: &Request| (r.prompt.len() + r.max_new_tokens).min(ctx_cap);
+        let overhang = self.spec_overhang();
+        let budget = move |r: &Request| {
+            (r.prompt.len() + r.max_new_tokens + overhang).min(ctx_cap)
+        };
 
         // Under memory pressure, evict cold prefix-index pages nobody
         // else references so the queue head can fit. The head's match is
@@ -705,6 +748,75 @@ impl Engine {
         if self.batcher.active_len() == 0 {
             return Ok(());
         }
+        if self.spec_step_ready() {
+            return self.decode_once_spec(finished);
+        }
+        self.decode_once_plain(finished)
+    }
+
+    /// Whether this step can run as one speculative verify pass: spec is
+    /// configured, a verify artifact exists, and every live sequence has
+    /// room for the whole draft block inside the ctx bucket. Steps near
+    /// the bucket end degrade to plain single-token decode, so the
+    /// non-speculative finish semantics are preserved exactly.
+    fn spec_step_ready(&self) -> bool {
+        if self.config.spec_k == 0 || !self.model.has_verify() {
+            return false;
+        }
+        let s = self.model.art.spec_bucket;
+        let c = self.model.art.ctx_bucket;
+        self.batcher
+            .slots()
+            .iter()
+            .flatten()
+            .all(|id| match self.cache.seq_len(*id) {
+                Some(len) => len + s <= c,
+                None => true,
+            })
+    }
+
+    /// Gather the paged caches into the contiguous decode views. Steps
+    /// whose lanes share a prefix run take the cascade (Strategy::
+    /// Cascade) gather: each shared run is materialized once and
+    /// scattered into its member lanes, and the measured dedup is
+    /// recorded. Solo steps keep the allocation-free flat gather.
+    ///
+    /// The monolithic decode HLO still consumes dense per-lane views,
+    /// so on this CPU path the scatter re-expands the runs (segment
+    /// allocation + one extra copy per shared run vs the flat gather);
+    /// the SharedSegment views are the shape a kernel-level cascade
+    /// attention consumes directly, at which point compose_dense
+    /// disappears. gather_shared re-derives the same leading-run
+    /// grouping as step_prefix_groups from the live page lists (the
+    /// physical ground truth); kv_cache_props pins the two paths'
+    /// views bit-identical either way. Returns the per-live-lane lens
+    /// and shared-prefix groups for the hardware projection.
+    fn gather_step_views(
+        &mut self,
+        slots: &[Option<RequestId>],
+    ) -> Result<(Vec<u32>, Vec<PrefixGroup>)> {
+        let c = self.model.art.ctx_bucket;
+        // Detect physically-shared leading page runs once per step: both
+        // the gather below and the hardware projection consume them.
+        let detect = self.config.enable_prefix_cache || self.config.project_hardware;
+        let (lens, groups) = if detect {
+            self.step_prefix_groups(slots)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        if groups.is_empty() {
+            self.cache.gather(slots, c, &mut self.k_buf, &mut self.v_buf)?;
+        } else {
+            let sg = self.cache.gather_shared(slots)?;
+            sg.compose_dense(c, &mut self.k_buf, &mut self.v_buf)?;
+            self.metrics.cascade_gather_steps += 1;
+            self.metrics.gather_bytes_flat += sg.flat_bytes as u64;
+            self.metrics.gather_bytes_shared += sg.shared_bytes as u64;
+        }
+        Ok((lens, groups))
+    }
+
+    fn decode_once_plain(&mut self, finished: &mut Vec<FinishedRequest>) -> Result<()> {
         let slots: Vec<Option<RequestId>> = self.batcher.slots().to_vec();
         let b = self.model.art.batch;
         let c = self.model.art.ctx_bucket;
@@ -715,39 +827,7 @@ impl Engine {
         );
         let vocab = self.model.art.vocab;
 
-        // Detect physically-shared leading page runs once per step: both
-        // the gather below and the hardware projection consume them.
-        let detect = self.config.enable_prefix_cache || self.config.project_hardware;
-        let (lens, groups) = if detect {
-            self.step_prefix_groups(&slots)
-        } else {
-            (Vec::new(), Vec::new())
-        };
-
-        // Gather paged caches into the contiguous decode views. Steps
-        // whose lanes share a prefix run take the cascade (Strategy::
-        // Cascade) gather: each shared run is materialized once and
-        // scattered into its member lanes, and the measured dedup is
-        // recorded. Solo steps keep the allocation-free flat gather.
-        //
-        // The monolithic decode HLO still consumes dense per-lane views,
-        // so on this CPU path the scatter re-expands the runs (segment
-        // allocation + one extra copy per shared run vs the flat gather);
-        // the SharedSegment views are the shape a kernel-level cascade
-        // attention consumes directly, at which point compose_dense
-        // disappears. gather_shared re-derives the same leading-run
-        // grouping as step_prefix_groups from the live page lists (the
-        // physical ground truth); kv_cache_props pins the two paths'
-        // views bit-identical either way.
-        if groups.is_empty() {
-            self.cache.gather(&slots, c, &mut self.k_buf, &mut self.v_buf)?;
-        } else {
-            let sg = self.cache.gather_shared(&slots)?;
-            sg.compose_dense(c, &mut self.k_buf, &mut self.v_buf)?;
-            self.metrics.cascade_gather_steps += 1;
-            self.metrics.gather_bytes_flat += sg.flat_bytes as u64;
-            self.metrics.gather_bytes_shared += sg.shared_bytes as u64;
-        }
+        let (lens, groups) = self.gather_step_views(&slots)?;
 
         let mut tokens = vec![0i32; b];
         let mut positions = vec![0i32; b];
@@ -810,29 +890,183 @@ impl Engine {
                 None
             };
             if let Some(reason) = reason {
-                let seq = self.active.remove(&id).unwrap();
-                // Pages the index registered from this request stay
-                // committed (cached for future prompts); the rest of the
-                // reservation returns to the pool.
-                self.committed_pages -= seq.reserved_pages - seq.index_kept;
-                let now = Instant::now();
-                finished.push(FinishedRequest {
-                    id,
-                    prompt_len: seq.prompt_len,
-                    output: seq.generated,
-                    reason,
-                    queue_s: (seq.prefill_started - seq.arrival).as_secs_f64(),
-                    prefill_s: (seq.first_token_at - seq.prefill_started)
-                        .as_secs_f64(),
-                    decode_s: (now - seq.first_token_at).as_secs_f64(),
-                    cum_logprob: seq.cum_logprob,
-                    logprobs: seq.logprobs,
-                    parent: seq.parent,
-                });
-                self.batcher.release(id);
-                self.cache.free_seq(id);
-                self.fork_tree.remove(id);
-                self.metrics.requests_finished += 1;
+                self.finish_seq(id, reason, finished);
+            }
+        }
+        Ok(())
+    }
+
+    /// Retire a finished sequence from the decode loop: emit its
+    /// [`FinishedRequest`], free its batch slot, KV pages and fork
+    /// lineage, and return the non-indexed part of its page reservation
+    /// to the pool. Shared by the plain and speculative decode paths so
+    /// finish semantics can never drift between them.
+    fn finish_seq(
+        &mut self,
+        id: RequestId,
+        reason: FinishReason,
+        finished: &mut Vec<FinishedRequest>,
+    ) {
+        let seq = self.active.remove(&id).unwrap();
+        // Pages the index registered from this request stay committed
+        // (cached for future prompts); the rest of the reservation
+        // returns to the pool.
+        self.committed_pages -= seq.reserved_pages - seq.index_kept;
+        let now = Instant::now();
+        finished.push(FinishedRequest {
+            id,
+            prompt_len: seq.prompt_len,
+            output: seq.generated,
+            reason,
+            queue_s: (seq.prefill_started - seq.arrival).as_secs_f64(),
+            prefill_s: (seq.first_token_at - seq.prefill_started).as_secs_f64(),
+            decode_s: (now - seq.first_token_at).as_secs_f64(),
+            cum_logprob: seq.cum_logprob,
+            logprobs: seq.logprobs,
+            parent: seq.parent,
+        });
+        self.batcher.release(id);
+        self.cache.free_seq(id);
+        self.fork_tree.remove(id);
+        self.metrics.requests_finished += 1;
+    }
+
+    /// One speculative decode iteration: draft a block per live lane,
+    /// score every draft position in a **single** multi-token verify
+    /// pass (per-position logits from the verify artifact — the k-query
+    /// lean pass over the cached context), commit the longest draft
+    /// prefix that reproduces the sequential sampler's stream
+    /// bit-for-bit plus one correction/bonus token, and roll the
+    /// rejected draft KV back with the COW-aware
+    /// [`PagedKvCache::truncate_seq`]. A request commits between 1 and
+    /// `spec_k + 1` tokens per iteration; the admission budget reserves
+    /// the transient draft block ([`Self::spec_overhang`]), so the eager
+    /// block append can never run the cache dry. Hardware projections
+    /// are recorded by plain steps only (the multi-query projection
+    /// lives in `sim::spec`).
+    fn decode_once_spec(&mut self, finished: &mut Vec<FinishedRequest>) -> Result<()> {
+        let slots: Vec<Option<RequestId>> = self.batcher.slots().to_vec();
+        let b = self.model.art.batch;
+        let c = self.model.art.ctx_bucket;
+        let s = self.model.art.spec_bucket;
+        let k = self.config.spec_k.min(s - 1);
+        let (l, h, dh) = (
+            self.model.art.n_layers,
+            self.model.art.n_heads,
+            self.model.art.head_dim,
+        );
+        let vocab = self.model.art.vocab;
+
+        self.gather_step_views(&slots)?;
+
+        // Draft blocks: [pending, d_1..d_k, pad] per live lane, with the
+        // draft capped by the lane's remaining budget (a pass commits at
+        // most draft + 1 tokens, so drafting past the budget would only
+        // score-and-roll-back wasted rows and skew acceptance metrics).
+        // Padded rows are scored by the artifact but never accepted past
+        // the real draft.
+        let mut tokens = vec![0i32; b * s];
+        let mut positions = vec![0i32; b];
+        let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); b];
+        for (bi, slot) in slots.iter().enumerate() {
+            let Some(id) = slot else { continue };
+            let seq = &self.active[id];
+            positions[bi] = self.cache.seq_len(*id).unwrap() as i32;
+            tokens[bi * s] = seq.last_token;
+            let remaining = seq.max_new - seq.generated.len();
+            let k_lane = k.min(remaining.saturating_sub(1));
+            let mut d = if k_lane > 0 {
+                self.drafter.draft(&seq.tokens, k_lane)
+            } else {
+                Vec::new()
+            };
+            d.truncate(k_lane);
+            let fill = d.last().copied().unwrap_or(seq.last_token);
+            for i in 0..s - 1 {
+                tokens[bi * s + 1 + i] = d.get(i).copied().unwrap_or(fill);
+            }
+            drafts[bi] = d;
+        }
+
+        let t0 = Instant::now();
+        let out = self
+            .model
+            .verify(&tokens, &self.k_buf, &self.v_buf, &positions)?;
+        let step_us = t0.elapsed().as_secs_f64() * 1e6;
+        self.metrics.decode_steps += 1;
+        self.metrics.step_us.push(step_us);
+
+        let plane = l * h * dh;
+        let mut nk = vec![0.0f32; plane];
+        let mut nv = vec![0.0f32; plane];
+        for (bi, slot) in slots.iter().enumerate() {
+            let Some(id) = *slot else { continue };
+            let cache_len = positions[bi] as usize;
+            let draft = std::mem::take(&mut drafts[bi]);
+            let rows: Vec<&[f32]> = (0..=draft.len())
+                .map(|i| {
+                    let base = (bi * s + i) * vocab;
+                    &out.logits[base..base + vocab]
+                })
+                .collect();
+
+            // Replay the sequential sampler against the per-position
+            // logits: the committed prefix is bit-identical to what
+            // plain decode would have produced, RNG trajectory included.
+            let (verdict, remaining) = {
+                let seq = self.active.get_mut(&id).unwrap();
+                let v =
+                    verify_chain(&rows, &draft, &seq.tokens, &seq.params, &mut seq.rng);
+                (v, seq.max_new - seq.generated.len())
+            };
+            let commit = verdict.committed.len().min(remaining);
+
+            // Eagerly append the scored block (pending + this lane's
+            // drafts) — the write-back a fused verify kernel performs —
+            // then truncate the rejected tail. Copy-on-write protects
+            // fork siblings sharing the tail page.
+            for i in 0..=draft.len() {
+                for li in 0..l {
+                    for hi in 0..h {
+                        let src = ((((li * b) + bi) * h + hi) * s + i) * dh;
+                        let dst = (li * h + hi) * dh;
+                        nk[dst..dst + dh].copy_from_slice(&out.new_k[src..src + dh]);
+                        nv[dst..dst + dh].copy_from_slice(&out.new_v[src..src + dh]);
+                    }
+                }
+                if self.cache.append_token(id, &nk, &nv)? {
+                    self.metrics.prefix.cow_copies += 1;
+                }
+            }
+            self.cache.truncate_seq(id, cache_len + commit)?;
+            self.metrics.spec.rolled_back += draft.len() + 1 - commit;
+            self.metrics.spec.verify_passes += 1;
+            self.metrics.spec.drafted += draft.len();
+            self.metrics.spec.accepted += commit - 1;
+            self.metrics.spec.committed += commit;
+            self.metrics.tokens_generated += commit;
+
+            let seq = self.active.get_mut(&id).unwrap();
+            for t in &verdict.committed[..commit] {
+                seq.generated.push(t.token);
+                seq.tokens.push(t.token);
+                seq.logprobs.push(t.logprob);
+                seq.cum_logprob += f64::from(t.logprob);
+            }
+            seq.last_token = verdict.committed[commit - 1].token;
+            seq.last_logits.clear();
+            seq.last_logits.extend_from_slice(rows[commit - 1]);
+
+            let cache_len = self.cache.seq_len(id).unwrap();
+            let reason = if seq.generated.len() >= seq.max_new {
+                Some(FinishReason::Length)
+            } else if cache_len >= c {
+                Some(FinishReason::ContextFull)
+            } else {
+                None
+            };
+            if let Some(reason) = reason {
+                self.finish_seq(id, reason, finished);
             }
         }
         Ok(())
@@ -960,6 +1194,13 @@ mod tests {
         let c = EngineConfig::default();
         assert!(c.sampling.is_greedy(), "greedy decode stays the default");
         assert_eq!(c.seed, 0);
+    }
+
+    #[test]
+    fn config_default_disables_speculation() {
+        let c = EngineConfig::default();
+        assert_eq!(c.spec_k, 0, "speculative decoding is opt-in");
+        assert_eq!(c.spec_draft, DraftKind::NGram);
     }
 
     // Engine integration tests — including fork/cancel, best-of-n and

@@ -475,6 +475,40 @@ impl PagedKvCache {
         (k, v)
     }
 
+    /// Truncate a live sequence to `new_len` tokens — the speculative-
+    /// decoding rollback: draft-block K/V rows the verifier rejected are
+    /// dropped without copying or mutating anything. Whole pages past
+    /// the new length give up this sequence's reference (a page shared
+    /// with a fork sibling or the prefix index survives for its other
+    /// holders); rows past `new_len` inside the kept tail page become
+    /// invisible (every reader bounds itself by `len`) and are
+    /// overwritten by future appends, which copy-on-write the tail page
+    /// first if it is still shared — so a sibling's view is never
+    /// touched, property-tested in `rust/tests/kv_cache_props.rs`.
+    /// Returns the number of page references released.
+    pub fn truncate_seq(&mut self, id: RequestId, new_len: usize) -> Result<usize> {
+        let keep = new_len.div_ceil(self.page_tokens);
+        let dropped = {
+            let entry = self
+                .seqs
+                .get_mut(&id)
+                .ok_or_else(|| anyhow::anyhow!("sequence {id} not cached"))?;
+            ensure!(
+                new_len <= entry.len,
+                "truncate of sequence {id} to {new_len} exceeds its length {}",
+                entry.len
+            );
+            entry.len = new_len;
+            entry.pages.split_off(keep)
+        };
+        let released = dropped.len();
+        for p in dropped {
+            // A sequence's pages are live by construction.
+            self.release_page(p)?;
+        }
+        Ok(released)
+    }
+
     /// Release a sequence's references; pages with no other holder (e.g.
     /// the prefix index) return to the free list.
     pub fn free_seq(&mut self, id: RequestId) {
@@ -1032,6 +1066,122 @@ mod tests {
         // Failed forks must not corrupt refcounts.
         let p = c.seq_pages(1).unwrap()[0];
         assert_eq!(c.page_ref(p), 2);
+    }
+
+    #[test]
+    fn truncate_releases_whole_pages_and_keeps_the_tail() {
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 8);
+        let mut rng = Rng::new(41);
+        let len = 11; // 3 pages of 4
+        let k = rows(&mut rng, 1, 1, len, 2);
+        let v = rows(&mut rng, 1, 1, len, 2);
+        c.insert_seq(1, &k, &v, len).unwrap();
+        assert_eq!(c.used_pages(), 3);
+
+        // Roll back 5 tokens (the spec-decode rejected-draft shape):
+        // page 2 empties and returns; page 1 keeps tokens 4..6.
+        let released = c.truncate_seq(1, 6).unwrap();
+        assert_eq!(released, 1);
+        assert_eq!(c.seq_len(1), Some(6));
+        assert_eq!(c.used_pages(), 2);
+
+        // The surviving prefix reads back bit-identically.
+        let mut ko = vec![0.0; 8 * 2];
+        let mut vo = vec![0.0; ko.len()];
+        c.gather(&[Some(1)], 8, &mut ko, &mut vo).unwrap();
+        assert_eq!(&ko[..6 * 2], &k[..6 * 2]);
+        assert!(ko[6 * 2..].iter().all(|&x| x == 0.0), "stale rows invisible");
+
+        // Appending after the rollback reuses the tail page slot.
+        let (nk, nv) = (rng.normal_vec(2), rng.normal_vec(2));
+        assert!(!c.append_token(1, &nk, &nv).unwrap());
+        assert_eq!(c.seq_len(1), Some(7));
+        c.gather(&[Some(1)], 8, &mut ko, &mut vo).unwrap();
+        assert_eq!(&ko[6 * 2..7 * 2], &nk[..2]);
+
+        c.free_seq(1);
+        assert_eq!(c.free_pages(), 8);
+    }
+
+    #[test]
+    fn truncate_of_shared_pages_releases_refs_not_pages() {
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 8);
+        let mut rng = Rng::new(42);
+        let len = 8; // 2 full pages
+        let k = rows(&mut rng, 1, 1, len, 2);
+        let v = rows(&mut rng, 1, 1, len, 2);
+        c.insert_seq(1, &k, &v, len).unwrap();
+        c.fork_seq(1, 2).unwrap();
+        let pages: Vec<usize> = c.seq_pages(1).unwrap().to_vec();
+
+        // The fork rolls back its whole second page: the page survives
+        // for the parent, only the fork's reference drops.
+        assert_eq!(c.truncate_seq(2, 4).unwrap(), 1);
+        assert_eq!(c.page_ref(pages[1]), 1, "parent still holds page 1");
+        assert_eq!(c.seq_len(1), Some(8));
+        assert_eq!(c.seq_len(2), Some(4));
+        let mut ko = vec![0.0; 8 * 2];
+        let mut vo = vec![0.0; ko.len()];
+        c.gather(&[Some(1)], 8, &mut ko, &mut vo).unwrap();
+        assert_eq!(&ko[..], &k[..], "parent view untouched by the fork's rollback");
+
+        c.free_seq(1);
+        c.free_seq(2);
+        assert_eq!(c.free_pages(), 8);
+    }
+
+    #[test]
+    fn truncate_into_a_shared_partial_page_cows_on_the_next_append() {
+        // Fork mid-page, roll the parent back inside the shared partial
+        // page, then append: the write must copy-on-write, never mutate
+        // the sibling's bytes.
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 8);
+        let mut rng = Rng::new(43);
+        let len = 6; // page 0 full, page 1 half-full
+        let k = rows(&mut rng, 1, 1, len, 2);
+        let v = rows(&mut rng, 1, 1, len, 2);
+        c.insert_seq(1, &k, &v, len).unwrap();
+        c.fork_seq(1, 2).unwrap();
+        let tail = c.seq_pages(1).unwrap()[1];
+
+        assert_eq!(c.truncate_seq(1, 5).unwrap(), 0, "partial page is kept");
+        assert_eq!(c.page_ref(tail), 2, "both holders keep the tail page");
+        let (nk, nv) = (rng.normal_vec(2), rng.normal_vec(2));
+        assert!(c.append_token(1, &nk, &nv).unwrap(), "shared tail must COW");
+
+        // The sibling still reads the original token 5.
+        let mut ko = vec![0.0; 8 * 2];
+        let mut vo = vec![0.0; ko.len()];
+        c.gather(&[Some(2)], 8, &mut ko, &mut vo).unwrap();
+        assert_eq!(&ko[..6 * 2], &k[..6 * 2], "sibling view survives the rollback");
+        // The parent reads its replacement.
+        c.gather(&[Some(1)], 8, &mut ko, &mut vo).unwrap();
+        assert_eq!(&ko[5 * 2..6 * 2], &nk[..2]);
+
+        c.free_seq(1);
+        c.free_seq(2);
+        assert_eq!(c.free_pages(), 8);
+    }
+
+    #[test]
+    fn truncate_rejects_growth_and_unknown_sequences() {
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 4);
+        assert!(c.truncate_seq(9, 0).is_err(), "unknown sequence");
+        c.insert_seq(1, &[1.0, 2.0], &[3.0, 4.0], 1).unwrap();
+        let err = c.truncate_seq(1, 2).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+        // Truncating to the current length is a no-op.
+        assert_eq!(c.truncate_seq(1, 1).unwrap(), 0);
+        assert_eq!(c.seq_len(1), Some(1));
+        // Truncating to zero releases everything but keeps the entry.
+        assert_eq!(c.truncate_seq(1, 0).unwrap(), 1);
+        assert_eq!(c.seq_len(1), Some(0));
+        assert_eq!(c.free_pages(), 4);
+        let (nk, nv) = ([5.0f32, 6.0], [7.0f32, 8.0]);
+        assert!(!c.append_token(1, &nk, &nv).unwrap());
+        assert_eq!(c.seq_len(1), Some(1));
+        c.free_seq(1);
+        assert_eq!(c.free_pages(), 4);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! hardware projection the engine records (linking the serving loop back
 //! to the paper's contribution).
 
+use crate::spec::SpecStats;
 use crate::util::stats::Summary;
 
 /// Prefix-cache (radix index) counters.
@@ -88,6 +89,8 @@ pub struct Metrics {
     pub prefix: PrefixCacheStats,
     /// Parallel-sampling counters.
     pub sampling: SamplingStats,
+    /// Speculative-decoding counters (draft-and-verify passes).
+    pub spec: SpecStats,
 }
 
 impl Metrics {
@@ -166,6 +169,20 @@ impl Metrics {
                 self.sampling.fork_calls,
                 self.sampling.forked_siblings,
                 self.sampling.cancelled,
+            ));
+        }
+        if self.spec.verify_passes > 0 {
+            s.push_str(&format!(
+                "speculative decode: {} verify passes committed {} tokens \
+                 ({:.2} tokens/pass), {}/{} drafts accepted ({:.0}%), \
+                 {} draft KV rows rolled back\n",
+                self.spec.verify_passes,
+                self.spec.committed,
+                self.spec.tokens_per_pass(),
+                self.spec.accepted,
+                self.spec.drafted,
+                self.spec.acceptance_rate() * 100.0,
+                self.spec.rolled_back,
             ));
         }
         if let Some(sp) = self.projected_speedup() {
@@ -293,6 +310,26 @@ mod tests {
         let rep = m.report();
         assert!(rep.contains("2 forks created 6 siblings"), "{rep}");
         assert!(rep.contains("3 pruned"), "{rep}");
+    }
+
+    #[test]
+    fn spec_stats_in_report_only_after_verify_passes() {
+        assert!(!Metrics::default().report().contains("speculative decode"));
+        let m = Metrics {
+            spec: SpecStats {
+                verify_passes: 5,
+                drafted: 20,
+                accepted: 15,
+                committed: 20,
+                rolled_back: 5,
+            },
+            ..Default::default()
+        };
+        let rep = m.report();
+        assert!(rep.contains("5 verify passes committed 20 tokens"), "{rep}");
+        assert!(rep.contains("4.00 tokens/pass"), "{rep}");
+        assert!(rep.contains("15/20 drafts accepted (75%)"), "{rep}");
+        assert!(rep.contains("5 draft KV rows rolled back"), "{rep}");
     }
 
     #[test]

@@ -16,7 +16,8 @@
 //!   runs (the serving half of cascade/shared-prefix decoding).
 //! * [`router`] — multi-engine front door (prefix-affinity dispatch:
 //!   requests steer to the replica holding the longest cached prefix,
-//!   round-robin on ties).
+//!   round-robin on ties, with a load valve that drops affinity when the
+//!   warm replica's queue skews past the cap).
 //! * [`metrics`] — latency/throughput accounting, including prefix-cache
 //!   hit rates and deduplicated KV bytes.
 //! * [`pool`] — std-thread fork-join pool (tokio is not in the offline

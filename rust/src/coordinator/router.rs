@@ -7,13 +7,18 @@
 //! request that lands where its prefix pages already live skips
 //! re-prefilling and re-storing them, and joins that replica's cascade
 //! groups. Ties (including the all-cold case) break round-robin so load
-//! still spreads. Affinity deliberately outranks load: a single hot
-//! prefix therefore concentrates on its warm replica — the bounded
-//! admission queue absorbs the burst, but a load-pressure valve
-//! (replicate the hot prefix, or cap queue skew before overriding
-//! affinity) is an open ROADMAP item. With one replica this degrades to
-//! a thin queue — the structure matters for the scheduling tests and
-//! for swapping in a process-per-replica transport later.
+//! still spreads.
+//!
+//! **Load valve.** Affinity outranks load only while load is sane: a
+//! replica whose waiting queue exceeds the shortest queue by more than
+//! the queue-skew cap ([`Router::with_queue_skew_cap`], default
+//! [`DEFAULT_QUEUE_SKEW_CAP`]) is excluded from the affinity choice, so
+//! one hot prefix cannot concentrate unboundedly on its warm replica —
+//! under pressure the request pays the one-time re-prefill on a cooler
+//! replica (which then warms its own copy of the prefix) instead of
+//! queueing behind the herd. With one replica this degrades to a thin
+//! queue — the structure matters for the scheduling tests and for
+//! swapping in a process-per-replica transport later.
 
 use anyhow::Result;
 
@@ -27,16 +32,47 @@ pub struct Router {
     routes: Vec<(usize, RequestId)>,
     /// Round-robin cursor for prefix-length ties.
     rr: usize,
+    /// Load valve: replicas whose waiting queue exceeds the shortest
+    /// queue by more than this are excluded from the affinity choice.
+    queue_skew_cap: usize,
 }
+
+/// Default waiting-queue skew before affinity loses to load.
+pub const DEFAULT_QUEUE_SKEW_CAP: usize = 4;
 
 /// Pick the replica holding the longest cached prefix; break ties
 /// (including "nobody holds anything") round-robin via `rr`. Pure so the
 /// policy is unit-testable without engines.
 pub fn route_by_prefix(prefix_tokens: &[usize], rr: &mut usize) -> usize {
+    let zeros = vec![0usize; prefix_tokens.len()];
+    route_by_prefix_with_load(prefix_tokens, &zeros, usize::MAX, rr)
+}
+
+/// Prefix affinity with the load valve: only replicas whose waiting
+/// queue is within `max_skew` of the shortest queue are eligible, and
+/// among those the longest cached prefix wins (round-robin on ties).
+/// `max_skew = usize::MAX` disables the valve and recovers
+/// [`route_by_prefix`]. Pure so the policy is unit-testable without
+/// engines.
+pub fn route_by_prefix_with_load(
+    prefix_tokens: &[usize],
+    queue_lens: &[usize],
+    max_skew: usize,
+    rr: &mut usize,
+) -> usize {
     assert!(!prefix_tokens.is_empty());
-    let best = prefix_tokens.iter().copied().max().unwrap();
+    assert_eq!(prefix_tokens.len(), queue_lens.len());
+    let min_q = queue_lens.iter().copied().min().unwrap();
+    let cap = min_q.saturating_add(max_skew);
+    let best = prefix_tokens
+        .iter()
+        .zip(queue_lens)
+        .filter(|&(_, &q)| q <= cap)
+        .map(|(&p, _)| p)
+        .max()
+        .expect("the min-queue replica is always eligible");
     let tied: Vec<usize> = (0..prefix_tokens.len())
-        .filter(|&i| prefix_tokens[i] == best)
+        .filter(|&i| queue_lens[i] <= cap && prefix_tokens[i] == best)
         .collect();
     let pick = tied[*rr % tied.len()];
     *rr += 1;
@@ -46,7 +82,19 @@ pub fn route_by_prefix(prefix_tokens: &[usize], rr: &mut usize) -> usize {
 impl Router {
     pub fn new(engines: Vec<Engine>) -> Router {
         assert!(!engines.is_empty());
-        Router { engines, routes: Vec::new(), rr: 0 }
+        Router {
+            engines,
+            routes: Vec::new(),
+            rr: 0,
+            queue_skew_cap: DEFAULT_QUEUE_SKEW_CAP,
+        }
+    }
+
+    /// Override the load valve's queue-skew cap (`usize::MAX` restores
+    /// unconditional prefix affinity).
+    pub fn with_queue_skew_cap(mut self, cap: usize) -> Router {
+        self.queue_skew_cap = cap;
+        self
     }
 
     pub fn num_replicas(&self) -> usize {
@@ -54,15 +102,21 @@ impl Router {
     }
 
     /// Probe every replica's radix index and submit to the one holding
-    /// the longest cached prefix (round-robin tiebreak). Returns a
-    /// router-level id.
+    /// the longest cached prefix among replicas within the load valve's
+    /// queue-skew cap (round-robin tiebreak). Returns a router-level id.
     pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize) -> Result<RequestId> {
         let matched: Vec<usize> = self
             .engines
             .iter()
             .map(|e| e.peek_prefix_tokens(&prompt))
             .collect();
-        let ei = route_by_prefix(&matched, &mut self.rr);
+        let queues: Vec<usize> = self.engines.iter().map(|e| e.waiting()).collect();
+        let ei = route_by_prefix_with_load(
+            &matched,
+            &queues,
+            self.queue_skew_cap,
+            &mut self.rr,
+        );
         let inner = self.engines[ei].submit(prompt, max_new)?;
         self.routes.push((ei, inner));
         Ok(self.routes.len() as RequestId - 1)
@@ -115,7 +169,7 @@ impl Router {
 // here.
 #[cfg(test)]
 mod tests {
-    use super::route_by_prefix;
+    use super::{route_by_prefix, route_by_prefix_with_load};
 
     #[test]
     fn longest_prefix_wins_regardless_of_cursor() {
@@ -155,5 +209,55 @@ mod tests {
         let picks: Vec<usize> =
             (0..4).map(|_| route_by_prefix(&[0, 16, 16], &mut rr)).collect();
         assert_eq!(picks, vec![1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn valve_overrides_affinity_when_queue_skew_exceeds_the_cap() {
+        // Replica 0 is warm (48 cached tokens) but its queue is 6 deep
+        // vs 0 elsewhere: with cap 4 it is ineligible, and the request
+        // routes to the best *eligible* replica instead.
+        let mut rr = 0;
+        let pick = route_by_prefix_with_load(&[48, 16, 0], &[6, 0, 0], 4, &mut rr);
+        assert_eq!(pick, 1, "warmest eligible replica wins");
+        // Once the hot replica's queue drains within the cap, affinity
+        // returns to it.
+        let pick = route_by_prefix_with_load(&[48, 16, 0], &[4, 0, 0], 4, &mut rr);
+        assert_eq!(pick, 0);
+    }
+
+    #[test]
+    fn valve_respects_skew_relative_to_the_minimum_queue() {
+        // Every queue is deep but balanced: nobody is excluded.
+        let mut rr = 0;
+        let pick = route_by_prefix_with_load(&[0, 32, 0], &[100, 103, 101], 4, &mut rr);
+        assert_eq!(pick, 1, "uniform pressure leaves affinity in charge");
+        // Skew beyond the cap on the warm replica flips the choice.
+        let pick = route_by_prefix_with_load(&[0, 32, 0], &[100, 105, 100], 4, &mut rr);
+        assert_ne!(pick, 1);
+    }
+
+    #[test]
+    fn valve_ties_among_eligible_replicas_round_robin() {
+        let mut rr = 0;
+        // Replica 2 is overloaded; 0 and 1 tie cold.
+        let picks: Vec<usize> = (0..4)
+            .map(|_| route_by_prefix_with_load(&[0, 0, 64], &[0, 0, 9], 4, &mut rr))
+            .collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn unbounded_cap_recovers_plain_prefix_affinity() {
+        for (prefixes, queues) in [
+            (vec![0usize, 16, 48, 16], vec![9usize, 0, 7, 3]),
+            (vec![5, 5, 5], vec![0, 100, 0]),
+        ] {
+            let mut a = 2;
+            let mut b = 2;
+            assert_eq!(
+                route_by_prefix_with_load(&prefixes, &queues, usize::MAX, &mut a),
+                route_by_prefix(&prefixes, &mut b),
+            );
+        }
     }
 }

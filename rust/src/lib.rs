@@ -16,10 +16,13 @@
 //!   and the cascade shared-prefix planner ([`partition::cascade`]),
 //!   [`sim`] the GPU execution-model simulator that regenerates every
 //!   figure of the evaluation (plus modeled KV traffic for cascade),
-//!   [`runtime`] the PJRT loader for the AOT artifacts, and
+//!   [`runtime`] the PJRT loader for the AOT artifacts,
 //!   [`coordinator`] a decode-serving engine (router → continuous
 //!   batcher → radix prefix cache → copy-on-write paged KV cache →
-//!   stream-K attention with Rust-side reduction).
+//!   stream-K attention with Rust-side reduction), [`sampling`] the
+//!   deterministic logits pipeline plus parallel-sampling controllers,
+//!   and [`spec`] speculative decoding (draft-and-verify over the
+//!   multi-query lean pass, bit-identical to sequential decoding).
 //!
 //! Quick start (after `make artifacts`):
 //!
@@ -42,6 +45,7 @@ pub mod partition;
 pub mod runtime;
 pub mod sampling;
 pub mod sim;
+pub mod spec;
 pub mod util;
 
 /// Crate-wide result alias.

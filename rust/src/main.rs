@@ -128,11 +128,15 @@ commands:
            [--best-of N]            N zero-copy fork candidates per prompt,
                                     highest cumulative logprob wins
            [--beam-width W] [--expand E]   sampled beam search over forks
+           [--spec-k K] [--draft ngram|model]   speculative decoding: K
+                                    drafts verified per multi-token pass
   simulate --batch B --heads H --ctx N [--head-dim 64] [--arch a100]
            [--shared-prefix N]      add the cascade row: batch shares an
                                     N-token prefix, streamed once per group
            [--fork-n N] [--fork-new M]   model a fork family: N siblings
                                     sharing the ctx as history, M decode steps
+           [--spec-k K] [--acceptance A]   model a verify pass of K drafts
+                                    vs E(A, K) sequential decode steps
   bench    --cascade-exec [--batch 4] [--prefix 256] [--suffix 64]
            [--heads 2] [--head-dim 16] [--tile 32] [--slots 64] [--iters 10]
                                     flat-lean vs cascade execution: gathered
@@ -141,6 +145,11 @@ commands:
   bench    --sampling [--n 4] [--history 256] [--suffix 64] [--iters 10]
            [--smoke]                parallel sampling: flat vs sibling-cascade
                                     decode on a forked COW paged KV cache
+  bench    --spec [--k 4] [--draft ngram|model] [--history 256] [--smoke]
+                                    speculative decoding: stream equality vs
+                                    the sequential oracle, one multi-query
+                                    verify pass vs k+1 decode steps, rollback
+           (every bench takes [--seed N] for run-to-run reproducibility)
   plan     --batch B --heads H --ctx N [--slots 216]
   figures  [table1|fig01|fig02|fig03|fig07|fig08|fig09|fig10|fig11|fig12|fig13|all]
   sweep    [--samples 1000] [--arch a100]
@@ -181,6 +190,9 @@ fn serve(args: &Args) -> Result<()> {
         best_of <= 1 || beam_width <= 1,
         "--best-of and --beam-width are mutually exclusive"
     );
+    let spec_k = args.usize("spec-k", 0);
+    let spec_draft = lean_attention::spec::DraftKind::parse(&args.str("draft", "ngram"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --draft (ngram|model)"))?;
 
     // Sampling pipeline: greedy unless a temperature is given; parallel
     // sampling needs a stochastic sampler, so it defaults to 0.8.
@@ -203,6 +215,8 @@ fn serve(args: &Args) -> Result<()> {
             model: model.clone(),
             sampling: params.clone(),
             seed,
+            spec_k,
+            spec_draft,
             ..Default::default()
         },
     )?;
@@ -212,6 +226,20 @@ fn serve(args: &Args) -> Result<()> {
         engine.ctx_bucket(),
         engine.prefill_bucket()
     );
+    if spec_k > 0 {
+        if engine.spec_enabled() {
+            println!(
+                "speculative decoding on: k={spec_k}, draft={spec_draft} \
+                 (1..={} tokens committed per verify pass)",
+                spec_k + 1
+            );
+        } else {
+            println!(
+                "speculative decoding requested but this artifact set has no verify \
+                 step — rebuild artifacts (`make artifacts`); decoding plainly"
+            );
+        }
+    }
 
     let mut rng = Rng::new(seed);
     let vocab = 512u64;
@@ -374,6 +402,32 @@ fn simulate_cmd(args: &Args) -> Result<()> {
         }
     }
 
+    // Optional speculative-decoding row: one verify pass of k drafts
+    // over the ctx vs the expected number of sequential 1-token steps.
+    let spec_k = args.usize("spec-k", 0);
+    if spec_k > 0 {
+        use lean_attention::sim::{simulate_spec_decode, SpecDecodeCase};
+        let acceptance = args.f64("acceptance", 0.8);
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&acceptance),
+            "--acceptance must be in [0, 1]"
+        );
+        let case = SpecDecodeCase { heads, head_dim, ctx, k: spec_k, acceptance };
+        let r = simulate_spec_decode(&case, &arch);
+        println!(
+            "\nspeculative decode (k={spec_k}, acceptance {acceptance:.2}): \
+             {:.2} tokens/pass, verify {:.1}us vs {:.1}us sequential ({:.2}x), \
+             KV {:.1} MiB vs {:.1} MiB ({:.0}% saved)",
+            r.tokens_per_pass,
+            r.verify_us,
+            r.sequential_us,
+            r.speedup(),
+            r.verify_kv_bytes / (1024.0 * 1024.0),
+            r.sequential_kv_bytes / (1024.0 * 1024.0),
+            r.bytes_saved_fraction() * 100.0,
+        );
+    }
+
     // Optional fork-family row: N siblings share the full ctx as their
     // fork-point history and decode M divergent tokens.
     let fork_n = args.usize("fork-n", 0);
@@ -404,13 +458,20 @@ fn bench_cmd(args: &Args) -> Result<()> {
     use lean_attention::bench_harness::{compare_exec, ExecCase};
     use lean_attention::runtime::AttentionExecutor;
 
+    // One uniform `--seed` across every bench subcommand and harness
+    // runner, so spec/sampling/cascade numbers reproduce run-to-run.
+    let seed = args.usize("seed", 0) as u64;
     if args.has("sampling") {
-        return bench_sampling(args);
+        return bench_sampling(args, seed);
+    }
+    if args.has("spec") {
+        return bench_spec(args, seed);
     }
     anyhow::ensure!(
         args.has("cascade-exec"),
         "usage: leanattn bench --cascade-exec [--batch 4] [--prefix 256] ...\n       \
-         leanattn bench --sampling [--n 4] [--history 256] [--suffix 64] [--smoke]"
+         leanattn bench --sampling [--n 4] [--history 256] [--suffix 64] [--smoke]\n       \
+         leanattn bench --spec [--k 4] [--draft ngram|model] [--smoke]"
     );
     let case = ExecCase {
         batch: args.usize("batch", 4),
@@ -438,7 +499,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
         case.batch, case.prefix, case.suffix, case.heads, case.head_dim, case.tile
     );
 
-    let c = compare_exec(case, iters, exec.as_ref(), args.usize("seed", 11) as u64)?;
+    let c = compare_exec(case, iters, exec.as_ref(), seed)?;
     println!(
         "flat lean:  {:>10.1} KiB gathered KV, p50 {:>9.1}us",
         c.flat_kv_bytes as f64 / 1024.0,
@@ -461,7 +522,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
 /// oracle). Asserts, on every run, that forking allocates zero pages and
 /// that the sibling-cascade path reads strictly fewer gathered-KV bytes
 /// than flat for >= 2 siblings with nonzero shared history.
-fn bench_sampling(args: &Args) -> Result<()> {
+fn bench_sampling(args: &Args, seed: u64) -> Result<()> {
     use lean_attention::bench_harness::{compare_sampling, SamplingCase};
 
     let smoke = args.has("smoke");
@@ -489,7 +550,7 @@ fn bench_sampling(args: &Args) -> Result<()> {
         case.head_dim
     );
 
-    let c = compare_sampling(case, iters, args.usize("seed", 17) as u64)?;
+    let c = compare_sampling(case, iters, seed)?;
     anyhow::ensure!(
         c.fork_fresh_pages == 0,
         "fork allocated {} pages; forking must be refcount-only",
@@ -544,6 +605,95 @@ fn bench_sampling(args: &Args) -> Result<()> {
             c.attention.max_err
         );
     }
+    Ok(())
+}
+
+/// `leanattn bench --spec`: speculative draft-and-verify on the host
+/// pipeline (no artifacts needed). Asserts, on every run, that the
+/// committed stream is bit-identical to the sequential sampler's and
+/// that the repetitive workload commits more tokens than it runs verify
+/// passes (>1 token/step).
+fn bench_spec(args: &Args, seed: u64) -> Result<()> {
+    use lean_attention::bench_harness::{compare_spec, SpecCase};
+    use lean_attention::spec::DraftKind;
+
+    let smoke = args.has("smoke");
+    let base = if smoke { SpecCase::smoke() } else { SpecCase::default_case() };
+    let draft = DraftKind::parse(&args.str("draft", "ngram"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --draft (ngram|model)"))?;
+    let case = SpecCase {
+        k: args.usize("k", base.k),
+        max_new: args.usize("max-new", base.max_new),
+        prompt_len: args.usize("prompt", base.prompt_len),
+        period: args.usize("period", base.period),
+        vocab: args.usize("vocab", base.vocab),
+        draft,
+        history: args.usize("history", base.history),
+        heads: args.usize("heads", base.heads),
+        head_dim: args.usize("head-dim", base.head_dim),
+        layers: args.usize("layers", base.layers),
+        page_tokens: args.usize("page", base.page_tokens),
+        tile: args.usize("tile", base.tile),
+    };
+    let iters = args.usize("iters", if smoke { 2 } else { 10 });
+    println!(
+        "spec: k={} draft={} workload period {} over vocab {}, {} tokens; \
+         verify ctx {} ({} heads x d{})",
+        case.k,
+        case.draft,
+        case.period,
+        case.vocab,
+        case.max_new,
+        case.history,
+        case.heads,
+        case.head_dim
+    );
+
+    let c = compare_spec(case, iters, seed)?;
+    println!(
+        "stream: bit-identical to the sequential sampler ({} tokens committed)",
+        c.stats.committed
+    );
+    println!(
+        "draft-and-verify: {} passes, {:.2} tokens/pass, {}/{} drafts accepted ({:.0}%)",
+        c.stats.verify_passes,
+        c.stats.tokens_per_pass(),
+        c.stats.accepted,
+        c.stats.drafted,
+        c.stats.acceptance_rate() * 100.0
+    );
+    println!(
+        "verify pass ({} query rows): {:>9.1} KiB gathered KV, p50 {:>9.1}us",
+        case.k + 1,
+        c.verify_kv_bytes as f64 / 1024.0,
+        c.verify_us.p50
+    );
+    println!(
+        "sequential ({} 1-row steps):  {:>9.1} KiB gathered KV, p50 {:>9.1}us  \
+         ({:.1}% bytes saved, {:.2}x)",
+        case.k + 1,
+        c.sequential_kv_bytes as f64 / 1024.0,
+        c.sequential_us.p50,
+        c.bytes_saved_fraction() * 100.0,
+        c.sequential_us.p50 / c.verify_us.p50
+    );
+    println!(
+        "rollback: {} draft KV rows truncated per worst-case pass, {} COW clones, \
+         sibling view intact, zero leaked pages",
+        c.rolled_back_tokens, c.cow_copies
+    );
+    anyhow::ensure!(
+        c.stats.committed > c.stats.verify_passes,
+        "speculative decode must commit more than one token per verify pass on the \
+         repetitive workload (committed {}, passes {})",
+        c.stats.committed,
+        c.stats.verify_passes
+    );
+    anyhow::ensure!(
+        c.verify_kv_bytes < c.sequential_kv_bytes,
+        "one verify pass must gather strictly fewer KV bytes than {} sequential steps",
+        case.k + 1
+    );
     Ok(())
 }
 

@@ -21,6 +21,7 @@
 pub mod cascade;
 pub mod host_exec;
 pub mod lean_tile;
+pub mod multi_query;
 pub mod plan;
 pub mod stream_k;
 pub mod tensor_parallel;
@@ -28,6 +29,7 @@ pub mod workspec;
 
 pub use cascade::{build_cascade_plan, CascadePlan, CascadeProblem, PrefixGroup};
 pub use lean_tile::lean_tile_for;
+pub use multi_query::{MultiQueryInputs, MultiQueryProblem, MultiQuerySeq};
 pub use plan::{CtaWork, DecodeProblem, Plan, Segment, Strategy};
 
 /// Re-exported planner entry points.

@@ -1,0 +1,462 @@
+//! Multi-query decode partitioning: `q_len = k` query rows per sequence
+//! over one shared context stream — the attention shape of a
+//! speculative-decoding verify pass (and of true frontier beam search).
+//!
+//! A draft block of `q_len` tokens is causal *within* the block: query
+//! row `i` attends to the `base_len` cached tokens plus block tokens
+//! `0..=i`. That is exactly a **ragged cascade problem** over expanded
+//! row-lanes: every row of a sequence shares the sequence's cached
+//! context as a prefix group (streamed **once** for all `q_len` rows —
+//! the `k` memory-bound single-token steps collapse into one walk of the
+//! KV stream), and row `i`'s private suffix is the tiny staggered slice
+//! of draft-block K/V it alone may see. Fork families compose: siblings
+//! sharing history form one prefix group spanning *all* their rows, so
+//! speculative verification of a best-of-n family still deduplicates the
+//! shared pages like any cascade group.
+//!
+//! Everything downstream is reused, not re-implemented: the expansion
+//! produces a [`CascadeProblem`], the stream-K planner schedules it, and
+//! `runtime::attention_exec::lean_multi_query` executes it through the
+//! same task-rolling + group-broadcast-fold driver as every other
+//! cascade plan (exactness property-tested in `rust/tests/spec_props.rs`
+//! against the dense host oracle).
+
+use anyhow::{ensure, Result};
+
+use crate::util::rng::Rng;
+
+use super::cascade::{CascadeProblem, CascadeTensors, PrefixGroup};
+use super::lean_tile::lean_tile_for;
+
+/// One sequence's draft block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MultiQuerySeq {
+    /// Cached context tokens the whole block attends to.
+    pub base_len: usize,
+    /// Query rows in the block (pending token + drafts), >= 1.
+    pub q_len: usize,
+}
+
+/// A batch of draft blocks, optionally grouped into fork families.
+#[derive(Clone, Debug)]
+pub struct MultiQueryProblem {
+    pub heads: usize,
+    pub head_dim: usize,
+    pub seqs: Vec<MultiQuerySeq>,
+    /// LeanTile size in tokens.
+    pub tile: usize,
+    /// Fork families: `members` index [`Self::seqs`], `prefix_len`
+    /// counts **base** tokens every member's cached context begins with
+    /// (byte-identical leading KV, e.g. shared pages after a fork).
+    pub families: Vec<PrefixGroup>,
+}
+
+impl MultiQueryProblem {
+    /// Build and validate.
+    pub fn new(
+        heads: usize,
+        head_dim: usize,
+        seqs: Vec<MultiQuerySeq>,
+        families: Vec<PrefixGroup>,
+    ) -> Result<MultiQueryProblem> {
+        ensure!(heads >= 1 && head_dim >= 1, "need heads and head_dim >= 1");
+        ensure!(!seqs.is_empty(), "need at least one sequence");
+        for (i, s) in seqs.iter().enumerate() {
+            ensure!(s.q_len >= 1, "sequence {i} has an empty draft block");
+        }
+        let mut owner = vec![false; seqs.len()];
+        for (fi, f) in families.iter().enumerate() {
+            ensure!(!f.members.is_empty(), "family {fi} has no members");
+            ensure!(f.prefix_len >= 1, "family {fi} has an empty prefix");
+            for &m in &f.members {
+                let m = m as usize;
+                ensure!(m < seqs.len(), "family {fi}: member {m} out of range");
+                ensure!(!owner[m], "sequence {m} in more than one family");
+                owner[m] = true;
+                ensure!(
+                    f.prefix_len as usize <= seqs[m].base_len,
+                    "family {fi}: prefix {} exceeds member {m} base {}",
+                    f.prefix_len,
+                    seqs[m].base_len
+                );
+            }
+        }
+        Ok(MultiQueryProblem {
+            heads,
+            head_dim,
+            seqs,
+            tile: lean_tile_for(head_dim),
+            families,
+        })
+    }
+
+    pub fn with_tile(mut self, tile: usize) -> Self {
+        assert!(tile > 0);
+        self.tile = tile;
+        self
+    }
+
+    /// Total query rows across all draft blocks.
+    pub fn rows(&self) -> usize {
+        self.seqs.iter().map(|s| s.q_len).sum()
+    }
+
+    /// First row index of sequence `seq`.
+    pub fn row_start(&self, seq: usize) -> usize {
+        self.seqs[..seq].iter().map(|s| s.q_len).sum()
+    }
+
+    /// `(sequence, block position)` of a global row index.
+    pub fn seq_of_row(&self, row: usize) -> (usize, usize) {
+        let mut r = row;
+        for (s, q) in self.seqs.iter().enumerate() {
+            if r < q.q_len {
+                return (s, r);
+            }
+            r -= q.q_len;
+        }
+        panic!("row {row} out of range");
+    }
+
+    /// Context length row `i` of sequence `seq` attends to (causal
+    /// within the block: cached base + block tokens `0..=i`).
+    pub fn ctx_of(&self, seq: usize, i: usize) -> usize {
+        self.seqs[seq].base_len + i + 1
+    }
+
+    /// Prefix groups over the expanded row-lanes. Grouping is disjoint
+    /// (nested/hierarchical groups are a ROADMAP item), so per family we
+    /// pick whichever grouping deduplicates more bytes: the family-wide
+    /// group over the shared history, or each member's private per-block
+    /// group over its whole base. Ungrouped sequences with >= 2 rows
+    /// always get the per-block group.
+    fn row_groups(&self) -> Vec<PrefixGroup> {
+        let mut out = Vec::new();
+        let mut family_of = vec![false; self.seqs.len()];
+        for f in &self.families {
+            let rows_total: usize =
+                f.members.iter().map(|&m| self.seqs[m as usize].q_len).sum();
+            if rows_total < 2 {
+                continue;
+            }
+            // Tokens the family group saves vs tokens the members' own
+            // per-block groups would save.
+            let family_saving = f.prefix_len as usize * (rows_total - 1);
+            let per_seq_saving: usize = f
+                .members
+                .iter()
+                .map(|&m| {
+                    let s = self.seqs[m as usize];
+                    s.base_len * (s.q_len - 1)
+                })
+                .sum();
+            if family_saving >= per_seq_saving {
+                let members: Vec<u32> = f
+                    .members
+                    .iter()
+                    .flat_map(|&m| {
+                        let start = self.row_start(m as usize) as u32;
+                        let q = self.seqs[m as usize].q_len as u32;
+                        start..start + q
+                    })
+                    .collect();
+                out.push(PrefixGroup { prefix_len: f.prefix_len, members });
+                for &m in &f.members {
+                    family_of[m as usize] = true;
+                }
+            }
+        }
+        for (s, seq) in self.seqs.iter().enumerate() {
+            if family_of[s] || seq.q_len < 2 || seq.base_len == 0 {
+                continue;
+            }
+            let start = self.row_start(s) as u32;
+            out.push(PrefixGroup {
+                prefix_len: seq.base_len as u32,
+                members: (start..start + seq.q_len as u32).collect(),
+            });
+        }
+        out
+    }
+
+    /// Expand to the cascade problem over per-row lanes.
+    pub fn expand(&self) -> CascadeProblem {
+        let lens: Vec<u32> = self
+            .seqs
+            .iter()
+            .flat_map(|s| (0..s.q_len).map(move |i| (s.base_len + i + 1) as u32))
+            .collect();
+        CascadeProblem::new(self.heads, lens, self.head_dim, self.row_groups())
+            .expect("expansion of a validated multi-query problem")
+            .with_tile(self.tile)
+    }
+
+    /// The sharing-oblivious twin: same row-lanes, no prefix structure
+    /// (every row streams its whole context) — the byte baseline.
+    pub fn expand_flat(&self) -> CascadeProblem {
+        let lens = self.expand().ctx_lens;
+        CascadeProblem::new(self.heads, lens, self.head_dim, Vec::new())
+            .expect("flat expansion is always valid")
+            .with_tile(self.tile)
+    }
+
+    /// Build the expanded problem plus its tensors from per-sequence
+    /// inputs. Returns `(cascade problem, tensors)` ready for
+    /// `lean_cascade` / `lean_cascade_host`; outputs are
+    /// `[rows * heads, head_dim]` in expanded row order.
+    pub fn tensors(&self, inputs: &MultiQueryInputs) -> Result<(CascadeProblem, CascadeTensors)> {
+        let (h, d) = (self.heads, self.head_dim);
+        let n = self.seqs.len();
+        ensure!(
+            inputs.q.len() == n
+                && inputs.base_k.len() == n
+                && inputs.base_v.len() == n
+                && inputs.draft_k.len() == n
+                && inputs.draft_v.len() == n,
+            "inputs must cover every sequence"
+        );
+        for (s, seq) in self.seqs.iter().enumerate() {
+            ensure!(inputs.q[s].len() == seq.q_len * h * d, "seq {s}: q shape");
+            ensure!(
+                inputs.base_k[s].len() == h * seq.base_len * d
+                    && inputs.base_v[s].len() == inputs.base_k[s].len(),
+                "seq {s}: base kv shape"
+            );
+            ensure!(
+                inputs.draft_k[s].len() == h * seq.q_len * d
+                    && inputs.draft_v[s].len() == inputs.draft_k[s].len(),
+                "seq {s}: draft kv shape"
+            );
+        }
+
+        let cp = self.expand();
+
+        // Query rows: per-seq [q_len, heads, d] blocks concatenate into
+        // the expanded [rows * heads, d] layout directly.
+        let mut q = Vec::with_capacity(self.rows() * h * d);
+        for qs in &inputs.q {
+            q.extend_from_slice(qs);
+        }
+
+        // Shared tensors, one per surviving prefix group, in group
+        // order: the leading `prefix` base tokens of the group's first
+        // member row's sequence, `[heads, prefix, d]`.
+        let mut k_shared = Vec::with_capacity(cp.prefix_groups.len());
+        let mut v_shared = Vec::with_capacity(cp.prefix_groups.len());
+        for g in &cp.prefix_groups {
+            let (s0, _) = self.seq_of_row(g.members[0] as usize);
+            let base = self.seqs[s0].base_len;
+            let prefix = g.prefix_len as usize;
+            let mut ks = Vec::with_capacity(h * prefix * d);
+            let mut vs = Vec::with_capacity(h * prefix * d);
+            for hi in 0..h {
+                let src = hi * base * d;
+                ks.extend_from_slice(&inputs.base_k[s0][src..src + prefix * d]);
+                vs.extend_from_slice(&inputs.base_v[s0][src..src + prefix * d]);
+            }
+            k_shared.push(ks);
+            v_shared.push(vs);
+        }
+
+        // Per-row suffixes: base remainder past the row's group prefix,
+        // then draft-block tokens 0..=i, `[heads, suffix, d]`.
+        let rows = self.rows();
+        let mut k_suffix = Vec::with_capacity(rows);
+        let mut v_suffix = Vec::with_capacity(rows);
+        for row in 0..rows {
+            let (s, i) = self.seq_of_row(row);
+            let base = self.seqs[s].base_len;
+            let q_len = self.seqs[s].q_len;
+            let prefix = cp.prefix_of(row) as usize;
+            let suffix = self.ctx_of(s, i) - prefix;
+            let mut ks = Vec::with_capacity(h * suffix * d);
+            let mut vs = Vec::with_capacity(h * suffix * d);
+            for hi in 0..h {
+                let bsrc = (hi * base + prefix) * d;
+                ks.extend_from_slice(&inputs.base_k[s][bsrc..hi * base * d + base * d]);
+                vs.extend_from_slice(&inputs.base_v[s][bsrc..hi * base * d + base * d]);
+                let dsrc = hi * q_len * d;
+                ks.extend_from_slice(&inputs.draft_k[s][dsrc..dsrc + (i + 1) * d]);
+                vs.extend_from_slice(&inputs.draft_v[s][dsrc..dsrc + (i + 1) * d]);
+            }
+            debug_assert_eq!(ks.len(), h * suffix * d);
+            k_suffix.push(ks);
+            v_suffix.push(vs);
+        }
+
+        Ok((cp, CascadeTensors { q, k_shared, v_shared, k_suffix, v_suffix }))
+    }
+}
+
+/// Per-sequence host tensors for a [`MultiQueryProblem`].
+#[derive(Clone, Debug, Default)]
+pub struct MultiQueryInputs {
+    /// Per sequence: `[q_len, heads, d]` query rows (block positions).
+    pub q: Vec<Vec<f32>>,
+    /// Per sequence: `[heads, base_len, d]` cached K rows.
+    pub base_k: Vec<Vec<f32>>,
+    pub base_v: Vec<Vec<f32>>,
+    /// Per sequence: `[heads, q_len, d]` draft-block K rows.
+    pub draft_k: Vec<Vec<f32>>,
+    pub draft_v: Vec<Vec<f32>>,
+}
+
+impl MultiQueryInputs {
+    /// Random inputs for `p`, deterministic in `seed`. Family members'
+    /// leading `prefix_len` base tokens are generated once per family
+    /// and copied into every member, honoring the byte-identical-prefix
+    /// contract real shared KV pages provide.
+    pub fn random(p: &MultiQueryProblem, seed: u64) -> MultiQueryInputs {
+        let mut rng = Rng::new(seed);
+        let (h, d) = (p.heads, p.head_dim);
+        // Shared leading base tokens per family, `[heads, prefix, d]`.
+        let shared: Vec<Vec<f32>> = p
+            .families
+            .iter()
+            .map(|f| rng.normal_vec(h * f.prefix_len as usize * d))
+            .collect();
+        let shared_v: Vec<Vec<f32>> = p
+            .families
+            .iter()
+            .map(|f| rng.normal_vec(h * f.prefix_len as usize * d))
+            .collect();
+        let family_of = |s: usize| -> Option<usize> {
+            p.families
+                .iter()
+                .position(|f| f.members.contains(&(s as u32)))
+        };
+
+        let mut out = MultiQueryInputs::default();
+        for (s, seq) in p.seqs.iter().enumerate() {
+            out.q.push(rng.normal_vec(seq.q_len * h * d));
+            let (mut bk, mut bv) =
+                (rng.normal_vec(h * seq.base_len * d), rng.normal_vec(h * seq.base_len * d));
+            if let Some(fi) = family_of(s) {
+                let prefix = p.families[fi].prefix_len as usize;
+                for hi in 0..h {
+                    let dst = hi * seq.base_len * d;
+                    let src = hi * prefix * d;
+                    bk[dst..dst + prefix * d]
+                        .copy_from_slice(&shared[fi][src..src + prefix * d]);
+                    bv[dst..dst + prefix * d]
+                        .copy_from_slice(&shared_v[fi][src..src + prefix * d]);
+                }
+            }
+            out.base_k.push(bk);
+            out.base_v.push(bv);
+            out.draft_k.push(rng.normal_vec(h * seq.q_len * d));
+            out.draft_v.push(rng.normal_vec(h * seq.q_len * d));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(base_len: usize, q_len: usize) -> MultiQuerySeq {
+        MultiQuerySeq { base_len, q_len }
+    }
+
+    #[test]
+    fn expansion_staggers_causal_lens() {
+        let p = MultiQueryProblem::new(2, 8, vec![seq(64, 3), seq(40, 1)], vec![])
+            .unwrap()
+            .with_tile(16);
+        assert_eq!(p.rows(), 4);
+        assert_eq!(p.row_start(1), 3);
+        assert_eq!(p.seq_of_row(2), (0, 2));
+        assert_eq!(p.seq_of_row(3), (1, 0));
+        let cp = p.expand();
+        assert_eq!(cp.ctx_lens, vec![65, 66, 67, 41]);
+        // Seq 0's three rows share its 64-token base; seq 1 is a single
+        // row (no group).
+        assert_eq!(cp.prefix_groups.len(), 1);
+        assert_eq!(cp.prefix_groups[0].prefix_len, 64);
+        assert_eq!(cp.prefix_groups[0].members, vec![0, 1, 2]);
+        assert!(p.expand_flat().prefix_groups.is_empty());
+    }
+
+    #[test]
+    fn expansion_dedups_fewer_tiles_than_flat() {
+        let p = MultiQueryProblem::new(2, 8, vec![seq(256, 5)], vec![])
+            .unwrap()
+            .with_tile(16);
+        let cascade = p.expand().segment_problem().total_tiles();
+        let flat = p.expand_flat().segment_problem().total_tiles();
+        assert!(
+            cascade < flat,
+            "multi-query expansion must stream the base once ({cascade} vs {flat})"
+        );
+    }
+
+    #[test]
+    fn family_grouping_spans_sibling_rows_when_it_saves_more() {
+        // Two siblings share 96 of their 100 base tokens, 3 rows each:
+        // family saving 96*(6-1)=480 > per-seq 100*2*2=400.
+        let fam = PrefixGroup { prefix_len: 96, members: vec![0, 1] };
+        let p = MultiQueryProblem::new(1, 8, vec![seq(100, 3), seq(100, 3)], vec![fam])
+            .unwrap()
+            .with_tile(16);
+        let cp = p.expand();
+        assert_eq!(cp.prefix_groups.len(), 1);
+        assert_eq!(cp.prefix_groups[0].prefix_len, 96);
+        assert_eq!(cp.prefix_groups[0].members, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn shallow_family_falls_back_to_per_block_groups() {
+        // Siblings share only 8 of 100 base tokens: per-block grouping
+        // saves more, so the family dissolves into two row groups.
+        let fam = PrefixGroup { prefix_len: 8, members: vec![0, 1] };
+        let p = MultiQueryProblem::new(1, 8, vec![seq(100, 3), seq(100, 3)], vec![fam])
+            .unwrap()
+            .with_tile(16);
+        let cp = p.expand();
+        assert_eq!(cp.prefix_groups.len(), 2);
+        assert!(cp.prefix_groups.iter().all(|g| g.prefix_len == 100));
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        assert!(MultiQueryProblem::new(1, 8, vec![], vec![]).is_err());
+        assert!(MultiQueryProblem::new(1, 8, vec![seq(4, 0)], vec![]).is_err());
+        let fam = PrefixGroup { prefix_len: 8, members: vec![0] };
+        assert!(MultiQueryProblem::new(1, 8, vec![seq(4, 1)], vec![fam]).is_err());
+        let fam = PrefixGroup { prefix_len: 2, members: vec![0, 2] };
+        assert!(MultiQueryProblem::new(1, 8, vec![seq(4, 1), seq(4, 1)], vec![fam]).is_err());
+    }
+
+    #[test]
+    fn tensors_compose_shared_and_staggered_suffixes() {
+        let p = MultiQueryProblem::new(2, 4, vec![seq(8, 2)], vec![])
+            .unwrap()
+            .with_tile(4);
+        let inputs = MultiQueryInputs::random(&p, 3);
+        let (cp, t) = p.tensors(&inputs).unwrap();
+        assert_eq!(cp.prefix_groups.len(), 1);
+        assert_eq!(t.k_shared[0].len(), 2 * 8 * 4);
+        assert_eq!(t.k_shared[0], inputs.base_k[0]);
+        // Row 0 suffix: draft token 0 only; row 1: draft tokens 0..=1.
+        assert_eq!(t.k_suffix[0].len(), 2 * 4);
+        assert_eq!(t.k_suffix[1].len(), 2 * 2 * 4);
+        // Head 0 of row 1's suffix equals draft tokens 0 and 1, head 0.
+        assert_eq!(&t.k_suffix[1][..2 * 4], &inputs.draft_k[0][..2 * 4]);
+        // q concatenates per-seq blocks in row order.
+        assert_eq!(t.q, inputs.q[0]);
+    }
+
+    #[test]
+    fn random_family_inputs_share_prefix_bytes() {
+        let fam = PrefixGroup { prefix_len: 6, members: vec![0, 1] };
+        let p = MultiQueryProblem::new(2, 4, vec![seq(8, 2), seq(10, 2)], vec![fam]).unwrap();
+        let inputs = MultiQueryInputs::random(&p, 9);
+        // Head-wise: the first 6 base tokens agree across members.
+        for hi in 0..2 {
+            let a = &inputs.base_k[0][hi * 8 * 4..hi * 8 * 4 + 6 * 4];
+            let b = &inputs.base_k[1][hi * 10 * 4..hi * 10 * 4 + 6 * 4];
+            assert_eq!(a, b, "head {hi} prefix bytes differ");
+        }
+    }
+}

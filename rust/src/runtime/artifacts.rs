@@ -47,6 +47,12 @@ pub struct ModelArtifact {
     pub param_count: usize,
     pub decode_file: String,
     pub prefill_file: String,
+    /// Multi-token verify step for speculative decoding (absent in
+    /// artifact sets built before the spec subsystem).
+    pub verify_file: Option<String>,
+    /// Tokens the verify step scores per sequence and call (pending
+    /// token + drafts); 0 when no verify artifact exists.
+    pub spec_bucket: usize,
     pub weights_file: String,
     /// Flat parameter order: (name, shape).
     pub params: Vec<(String, Vec<usize>)>,
@@ -125,6 +131,13 @@ impl Manifest {
                         param_count: cfg.usize_at("param_count"),
                         decode_file: m.at("decode").str_at("file").to_string(),
                         prefill_file: m.at("prefill").str_at("file").to_string(),
+                        verify_file: m
+                            .get("verify")
+                            .map(|v| v.str_at("file").to_string()),
+                        spec_bucket: m
+                            .get("verify")
+                            .map(|v| v.usize_at("spec_bucket"))
+                            .unwrap_or(0),
                         weights_file: m.str_at("weights").to_string(),
                         params,
                     },

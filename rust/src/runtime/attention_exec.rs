@@ -17,7 +17,10 @@ use std::rc::Rc;
 use anyhow::{Context, Result};
 
 use crate::attention::{partial_attention_host, Partials, RowStats};
-use crate::partition::cascade::{CascadePlan, CascadeProblem, CascadeTensors, SegKind};
+use crate::partition::cascade::{
+    build_cascade_plan, CascadePlan, CascadeProblem, CascadeTensors, SegKind,
+};
+use crate::partition::multi_query::{MultiQueryInputs, MultiQueryProblem};
 use crate::partition::plan::Plan;
 
 use super::artifacts::{AttentionKind, Manifest};
@@ -274,6 +277,41 @@ impl AttentionExecutor {
             self.partial_batch(q, k, v, valid, rows, w, d)
         })
     }
+
+    /// Multi-query lean attention — the speculative-decoding verify
+    /// pass: `q_len` query rows per sequence (pending token + drafts,
+    /// causal within the block) served by **one** walk of each cached
+    /// context. The [`MultiQueryProblem`] expands into a cascade problem
+    /// whose prefix groups carry the per-block (and fork-family) KV
+    /// sharing, then executes through the identical task-rolling +
+    /// group-broadcast-fold driver as [`Self::lean_cascade`]. Returns
+    /// `(o: [rows * heads, d], lse: [rows * heads])` in expanded row
+    /// order (`MultiQueryProblem::seq_of_row` maps rows back).
+    pub fn lean_multi_query(
+        &self,
+        problem: &MultiQueryProblem,
+        inputs: &MultiQueryInputs,
+        sm_slots: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (cp, t) = problem.tensors(inputs)?;
+        let cplan = build_cascade_plan(&cp, sm_slots);
+        self.lean_cascade(&cp, &t, &cplan)
+    }
+}
+
+/// Artifact-free twin of [`AttentionExecutor::lean_multi_query`]: the
+/// same expansion and driver over the host partial oracle. The tier-1
+/// property tests drive this against dense exact attention with
+/// staggered causal lengths (`rust/tests/spec_props.rs`).
+pub fn lean_multi_query_host(
+    problem: &MultiQueryProblem,
+    inputs: &MultiQueryInputs,
+    sm_slots: usize,
+    batch_rows: usize,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let (cp, t) = problem.tensors(inputs)?;
+    let cplan = build_cascade_plan(&cp, sm_slots);
+    Ok(lean_cascade_host(&cp, &t, &cplan, batch_rows))
 }
 
 /// One partial-attention task rolled out of a cascade plan: a contiguous

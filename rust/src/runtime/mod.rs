@@ -22,5 +22,5 @@ pub mod xla_shim;
 pub use artifacts::Manifest;
 pub use attention_exec::AttentionExecutor;
 pub use client::{Executable, Runtime};
-pub use model_exec::ModelRuntime;
+pub use model_exec::{ModelRuntime, VerifyOut};
 pub use tensor::HostTensor;

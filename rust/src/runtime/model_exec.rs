@@ -34,11 +34,25 @@ pub struct PrefillOut {
     pub v: Vec<f32>,
 }
 
+/// Output of a multi-token verify call (speculative decoding).
+pub struct VerifyOut {
+    /// `[b, s, vocab]` logits after every draft-block position — the
+    /// per-position logit surfacing speculative verification (and true
+    /// frontier beam search) needs.
+    pub logits: Vec<f32>,
+    /// `[l, b, h, s, dh]` K rows of the draft-block tokens.
+    pub new_k: Vec<f32>,
+    /// `[l, b, h, s, dh]` V rows.
+    pub new_v: Vec<f32>,
+}
+
 /// A loaded model: compiled steps + uploaded weights.
 pub struct ModelRuntime {
     pub art: ModelArtifact,
     decode: Executable,
     prefill: Executable,
+    /// Multi-token verify step, when the artifact set provides one.
+    verify: Option<Executable>,
     weight_literals: Vec<xla::Literal>,
 }
 
@@ -51,12 +65,26 @@ impl ModelRuntime {
         let prefill = runtime
             .load_hlo(manifest.path_of(&art.prefill_file))
             .context("compile prefill step")?;
+        let verify = match &art.verify_file {
+            Some(f) => Some(
+                runtime
+                    .load_hlo(manifest.path_of(f))
+                    .context("compile verify step")?,
+            ),
+            None => None,
+        };
         let weights = load_weights(manifest, &art)?;
         let weight_literals = weights
             .iter()
             .map(|w| w.to_literal())
             .collect::<Result<Vec<_>>>()?;
-        Ok(ModelRuntime { art, decode, prefill, weight_literals })
+        Ok(ModelRuntime { art, decode, prefill, verify, weight_literals })
+    }
+
+    /// Whether this model can run multi-token verify passes (a verify
+    /// artifact with a usable draft block exists).
+    pub fn has_verify(&self) -> bool {
+        self.verify.is_some() && self.art.spec_bucket >= 2
     }
 
     /// KV cache element count per layer-batch-head plane: `ctx_bucket * head_dim`.
@@ -112,6 +140,70 @@ impl ModelRuntime {
         ensure!(out.len() == 3, "decode outputs");
         let mut it = out.into_iter();
         Ok(DecodeOut {
+            logits: it.next().unwrap().into_f32()?,
+            new_k: it.next().unwrap().into_f32()?,
+            new_v: it.next().unwrap().into_f32()?,
+        })
+    }
+
+    /// One multi-token verify pass (speculative decoding).
+    ///
+    /// * `tokens[b * s]` — per sequence, `s = spec_bucket` draft-block
+    ///   tokens: the pending token followed by `s - 1` drafted tokens
+    ///   (row-major `[b, s]`).
+    /// * `k_cache/v_cache` — the same `[l, b, h, ctx_bucket, dh]` views
+    ///   [`Self::decode`] consumes, holding `positions[b]` tokens.
+    /// * `positions[b]` — cached tokens (the block's first index).
+    ///
+    /// The artifact computes causal attention of all `s` block tokens
+    /// against cache + block in one pass — the k-query lean pass that
+    /// turns k memory-bound decode steps into one context walk — and
+    /// returns per-position logits plus the block's K/V rows.
+    pub fn verify(
+        &self,
+        tokens: &[i32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        positions: &[i32],
+    ) -> Result<VerifyOut> {
+        let exe = self
+            .verify
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("model {:?} has no verify artifact", self.art.name))?;
+        let b = self.art.batch;
+        let s = self.art.spec_bucket;
+        ensure!(s >= 1, "spec bucket unset");
+        ensure!(tokens.len() == b * s, "tokens len");
+        ensure!(positions.len() == b, "positions len");
+        ensure!(k_cache.len() == self.cache_elems(), "k_cache size");
+        ensure!(v_cache.len() == self.cache_elems(), "v_cache size");
+        for &p in positions {
+            ensure!(
+                p >= 0 && p as usize + s <= self.art.ctx_bucket,
+                "position {p} leaves no room for a {s}-token draft block in ctx bucket {}",
+                self.art.ctx_bucket
+            );
+        }
+
+        let (l, h, c, dh) = (
+            self.art.n_layers as i64,
+            self.art.n_heads as i64,
+            self.art.ctx_bucket as i64,
+            self.art.head_dim as i64,
+        );
+        let dyn_literals = [
+            HostTensor::literal_i32(&[b as i64, s as i64], tokens)?,
+            HostTensor::literal_f32(&[l, b as i64, h, c, dh], k_cache)?,
+            HostTensor::literal_f32(&[l, b as i64, h, c, dh], v_cache)?,
+            HostTensor::literal_i32(&[b as i64], positions)?,
+        ];
+        let mut inputs: Vec<&xla::Literal> = self.weight_literals.iter().collect();
+        inputs.extend(dyn_literals.iter());
+
+        let out = exe.run_literals(&inputs)?;
+        ensure!(out.len() == 3, "verify outputs");
+        let mut it = out.into_iter();
+        Ok(VerifyOut {
             logits: it.next().unwrap().into_f32()?,
             new_k: it.next().unwrap().into_f32()?,
             new_v: it.next().unwrap().into_f32()?,

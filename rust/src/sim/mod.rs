@@ -14,6 +14,7 @@ pub mod cascade;
 pub mod cost;
 pub mod sampling;
 pub mod schedule;
+pub mod spec;
 pub mod timeshare;
 
 pub use arch::GpuArch;
@@ -21,3 +22,6 @@ pub use cascade::{simulate_cascade, CascadeSimResult};
 pub use cost::TileCost;
 pub use sampling::{simulate_fork_decode, ForkDecodeCase, ForkDecodeResult};
 pub use schedule::{simulate, simulate_plan, SimResult};
+pub use spec::{
+    expected_tokens_per_pass, simulate_spec_decode, SpecDecodeCase, SpecSimResult,
+};

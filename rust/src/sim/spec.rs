@@ -1,0 +1,168 @@
+//! Speculative-decoding cost model: speedup as a function of acceptance
+//! rate and draft length.
+//!
+//! One verify pass scores `k` drafts (plus the pending token) with a
+//! multi-query lean pass that streams the cached context **once**; the
+//! sequential baseline streams it once *per committed token*. With
+//! per-draft acceptance rate `α`, a pass commits
+//! `E(α, k) = 1 + α + α² + ... + α^k` tokens in expectation, so the
+//! modeled whole-decode speedup is `E × t_step / t_verify` — approaching
+//! `E` itself as the context grows and the verify pass stays
+//! memory-bound (its extra query rows ride the same KV stream). This is
+//! the modeled counterpart of the measured numbers from
+//! `leanattn bench --spec`.
+
+use crate::partition::multi_query::{MultiQueryProblem, MultiQuerySeq};
+use crate::partition::plan::{DecodeProblem, Strategy};
+
+use super::arch::GpuArch;
+use super::cascade::simulate_cascade;
+use super::cost::kv_stream_bytes;
+use super::schedule::simulate;
+
+/// Shape of one modeled speculative decode step.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecDecodeCase {
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Cached context tokens at verify time.
+    pub ctx: usize,
+    /// Draft tokens per pass (the verify block has `k + 1` query rows).
+    pub k: usize,
+    /// Per-draft acceptance probability `α` in `[0, 1]`.
+    pub acceptance: f64,
+}
+
+/// Modeled outcome of one speculative step vs its sequential baseline.
+#[derive(Clone, Debug)]
+pub struct SpecSimResult {
+    /// Expected tokens committed per verify pass, `E(α, k)`.
+    pub tokens_per_pass: f64,
+    /// Modeled latency of the multi-query verify pass (us).
+    pub verify_us: f64,
+    /// Modeled latency of committing the same expected tokens
+    /// sequentially (`E` single-query steps, us).
+    pub sequential_us: f64,
+    /// Modeled HBM KV bytes of the verify pass (context streamed once).
+    pub verify_kv_bytes: f64,
+    /// Modeled HBM KV bytes of the sequential baseline (context streamed
+    /// once per committed token).
+    pub sequential_kv_bytes: f64,
+}
+
+impl SpecSimResult {
+    /// Whole-decode speedup of speculative over sequential decoding.
+    pub fn speedup(&self) -> f64 {
+        if self.verify_us <= 0.0 {
+            return 1.0;
+        }
+        self.sequential_us / self.verify_us
+    }
+
+    /// Fraction of sequential KV traffic the verify pass avoids.
+    pub fn bytes_saved_fraction(&self) -> f64 {
+        if self.sequential_kv_bytes <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.verify_kv_bytes / self.sequential_kv_bytes
+    }
+}
+
+/// `E(α, k) = Σ_{i=0..k} α^i` — expected tokens per verify pass: the
+/// accepted draft prefix is geometric, truncated at `k`, plus the one
+/// correction/bonus token every pass commits.
+pub fn expected_tokens_per_pass(acceptance: f64, k: usize) -> f64 {
+    let a = acceptance.clamp(0.0, 1.0);
+    (0..=k).map(|i| a.powi(i as i32)).sum()
+}
+
+/// Model one speculative step on `arch`: the verify pass is the
+/// multi-query expansion (one sequence, `k + 1` staggered-causal rows
+/// sharing the context stream) through the cascade simulator; the
+/// baseline is `E(α, k)` single-query stream-K steps.
+pub fn simulate_spec_decode(case: &SpecDecodeCase, arch: &GpuArch) -> SpecSimResult {
+    assert!(case.k >= 1 && case.ctx >= 1);
+    let e = expected_tokens_per_pass(case.acceptance, case.k);
+
+    let mq = MultiQueryProblem::new(
+        case.heads,
+        case.head_dim,
+        vec![MultiQuerySeq { base_len: case.ctx, q_len: case.k + 1 }],
+        Vec::new(),
+    )
+    .expect("spec-decode problems are valid by construction");
+    let cp = mq.expand().tile_aligned();
+    let vr = simulate_cascade(&cp, arch);
+
+    let step = DecodeProblem::uniform(1, case.heads, case.ctx + 1, case.head_dim);
+    let sr = simulate(&step, Strategy::StreamK, arch);
+    let step_bytes = kv_stream_bytes(step.total_tiles(), step.tile, case.head_dim);
+
+    SpecSimResult {
+        tokens_per_pass: e,
+        verify_us: vr.latency_us,
+        sequential_us: sr.latency_us * e,
+        verify_kv_bytes: vr.kv_bytes,
+        sequential_kv_bytes: step_bytes * e,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn case(ctx: usize, k: usize, acceptance: f64) -> SpecDecodeCase {
+        SpecDecodeCase { heads: 8, head_dim: 64, ctx, k, acceptance }
+    }
+
+    #[test]
+    fn expected_tokens_formula() {
+        assert!((expected_tokens_per_pass(0.0, 4) - 1.0).abs() < 1e-12);
+        assert!((expected_tokens_per_pass(1.0, 4) - 5.0).abs() < 1e-12);
+        assert!((expected_tokens_per_pass(0.5, 2) - 1.75).abs() < 1e-12);
+        assert!((expected_tokens_per_pass(0.8, 4) - 3.3616).abs() < 1e-9);
+    }
+
+    #[test]
+    fn high_acceptance_long_context_speeds_up() {
+        let r = simulate_spec_decode(&case(65_536, 4, 0.9), &GpuArch::a100());
+        assert!(
+            r.speedup() > 1.5,
+            "k=4 at 90% acceptance must beat sequential ({:.2}x)",
+            r.speedup()
+        );
+        assert!(r.verify_kv_bytes < r.sequential_kv_bytes);
+        assert!(r.bytes_saved_fraction() > 0.5);
+    }
+
+    #[test]
+    fn zero_acceptance_never_beats_sequential_but_stays_close() {
+        // α = 0: one token per pass, and the verify pass costs about one
+        // decode step (its extra rows ride the same KV stream).
+        let r = simulate_spec_decode(&case(65_536, 4, 0.0), &GpuArch::a100());
+        assert!((r.tokens_per_pass - 1.0).abs() < 1e-12);
+        assert!(r.speedup() <= 1.05, "no free lunch at α=0 ({:.2}x)", r.speedup());
+        assert!(r.speedup() > 0.5, "memory-bound verify stays cheap");
+    }
+
+    #[test]
+    fn speedup_grows_with_acceptance() {
+        let arch = GpuArch::a100();
+        let mut prev = 0.0;
+        for a in [0.0, 0.5, 0.8, 0.95] {
+            let s = simulate_spec_decode(&case(32_768, 4, a), &arch).speedup();
+            assert!(s > prev, "α={a}: speedup {s} <= {prev}");
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn verify_bytes_track_one_context_walk() {
+        // The verify pass streams ~one context regardless of k.
+        let arch = GpuArch::a100();
+        let r2 = simulate_spec_decode(&case(65_536, 2, 0.8), &arch);
+        let r8 = simulate_spec_decode(&case(65_536, 8, 0.8), &arch);
+        let ratio = r8.verify_kv_bytes / r2.verify_kv_bytes;
+        assert!(ratio < 1.1, "verify bytes must not scale with k ({ratio:.3})");
+    }
+}

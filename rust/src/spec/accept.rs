@@ -1,0 +1,207 @@
+//! Exact acceptance: committing draft tokens without changing the
+//! target distribution — or the target *stream*.
+//!
+//! The PR 3 logits pipeline ([`crate::sampling::sample_token`]) is a
+//! deterministic function of `(logits, history, params, rng state)`, so
+//! classical acceptance-rejection sampling (accept a draft with
+//! probability `min(1, p/q)`, resample the residual on reject) collapses
+//! to something strictly stronger: at every draft position we *replay*
+//! the sequential sampler against the target's per-position logits and
+//! accept the draft iff it equals the token the sequential pipeline
+//! would have drawn. The committed stream is therefore **bit-identical**
+//! to sequential decoding — same tokens, same logprobs, same RNG
+//! trajectory — for any sampling parameters, not merely equal in
+//! distribution (property-tested in `rust/tests/spec_props.rs`).
+//!
+//! The RNG advances exactly once per *committed* token (and not at all
+//! for greedy params), never per drafted token: a rejected draft
+//! consumes no draws, so the draw stream stays aligned with the
+//! sequential pipeline position-for-position.
+
+use crate::sampling::{sample_token, SampledToken, SamplingParams};
+use crate::util::rng::Rng;
+
+use super::tree::DraftTree;
+
+/// Outcome of verifying one draft chain.
+#[derive(Clone, Debug)]
+pub struct ChainVerdict {
+    /// Tokens committed by this pass, in order — exactly the sequential
+    /// sampler's continuation. Length is `accepted + 1`: the accepted
+    /// draft prefix plus one correction/bonus token.
+    pub committed: Vec<SampledToken>,
+    /// Draft tokens accepted (length of the matching prefix).
+    pub accepted: usize,
+}
+
+/// Verify a draft chain against per-position target logits.
+///
+/// `logits[i]` is the target distribution after
+/// `history ++ draft[..i]` — row 0 scores the position the draft begins
+/// at, row `draft.len()` is the bonus row used when every draft token is
+/// accepted; all rows come from **one** multi-query attention pass over
+/// the cached context. Commits between 1 and `draft.len() + 1` tokens.
+pub fn verify_chain(
+    logits: &[&[f32]],
+    draft: &[i32],
+    history: &[i32],
+    params: &SamplingParams,
+    rng: &mut Rng,
+) -> ChainVerdict {
+    assert_eq!(
+        logits.len(),
+        draft.len() + 1,
+        "need one logit row per draft position plus the bonus row"
+    );
+    let mut ext = history.to_vec();
+    let mut committed = Vec::with_capacity(logits.len());
+    for (i, row) in logits.iter().enumerate() {
+        let s = sample_token(row, &ext, params, rng);
+        committed.push(s);
+        if i < draft.len() && draft[i] == s.token {
+            ext.push(s.token);
+        } else {
+            break;
+        }
+    }
+    let accepted = committed.len() - 1;
+    ChainVerdict { committed, accepted }
+}
+
+/// Outcome of verifying a draft tree.
+#[derive(Clone, Debug)]
+pub struct TreeVerdict {
+    /// Tokens committed by this pass — the sequential stream, as in
+    /// [`ChainVerdict`].
+    pub committed: Vec<SampledToken>,
+    /// Accepted tree nodes, root-to-leaf along the accepted path.
+    pub path: Vec<u64>,
+}
+
+impl TreeVerdict {
+    /// Draft tokens accepted (depth of the accepted path).
+    pub fn accepted(&self) -> usize {
+        self.path.len()
+    }
+}
+
+/// Verify a [`DraftTree`] of candidate continuations: walk the oracle
+/// stream from the root, descending into whichever child proposed the
+/// token the sequential sampler actually draws; stop at the first
+/// position no candidate predicted. `logits_of(node)` must return the
+/// target logits after `history ++ path(node)` — one multi-query pass
+/// scores every tree node at once.
+pub fn verify_tree(
+    tree: &DraftTree,
+    mut logits_of: impl FnMut(u64) -> Vec<f32>,
+    history: &[i32],
+    params: &SamplingParams,
+    rng: &mut Rng,
+) -> TreeVerdict {
+    let mut ext = history.to_vec();
+    let mut cur = DraftTree::ROOT;
+    let mut committed = Vec::new();
+    let mut path = Vec::new();
+    loop {
+        let row = logits_of(cur);
+        let s = sample_token(&row, &ext, params, rng);
+        committed.push(s);
+        match tree.child_with_token(cur, s.token) {
+            Some(c) => {
+                cur = c;
+                path.push(c);
+                ext.push(s.token);
+            }
+            None => break,
+        }
+    }
+    TreeVerdict { committed, path }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Peaked logits: `win` gets logit 10, everything else 0.
+    fn peaked(vocab: usize, win: i32) -> Vec<f32> {
+        let mut l = vec![0.0; vocab];
+        l[win as usize] = 10.0;
+        l
+    }
+
+    #[test]
+    fn full_acceptance_commits_k_plus_one_tokens() {
+        let rows = [peaked(8, 3), peaked(8, 5), peaked(8, 1)];
+        let refs: Vec<&[f32]> = rows.iter().map(Vec::as_slice).collect();
+        let mut rng = Rng::new(0);
+        let v = verify_chain(&refs, &[3, 5], &[7], &SamplingParams::greedy(), &mut rng);
+        assert_eq!(v.accepted, 2);
+        let toks: Vec<i32> = v.committed.iter().map(|s| s.token).collect();
+        assert_eq!(toks, vec![3, 5, 1], "both drafts plus the bonus token");
+    }
+
+    #[test]
+    fn first_mismatch_commits_the_oracle_token_and_stops() {
+        let rows = [peaked(8, 3), peaked(8, 5), peaked(8, 1)];
+        let refs: Vec<&[f32]> = rows.iter().map(Vec::as_slice).collect();
+        let mut rng = Rng::new(0);
+        // Draft proposes 4 where the oracle draws 3: reject at position 0.
+        let v = verify_chain(&refs, &[4, 5], &[7], &SamplingParams::greedy(), &mut rng);
+        assert_eq!(v.accepted, 0);
+        assert_eq!(v.committed.len(), 1);
+        assert_eq!(v.committed[0].token, 3, "the oracle token is committed");
+    }
+
+    #[test]
+    fn empty_draft_is_a_plain_sequential_step() {
+        let rows = [peaked(8, 2)];
+        let refs: Vec<&[f32]> = rows.iter().map(Vec::as_slice).collect();
+        let mut rng = Rng::new(9);
+        let v = verify_chain(&refs, &[], &[1], &SamplingParams::greedy(), &mut rng);
+        assert_eq!(v.accepted, 0);
+        assert_eq!(v.committed[0].token, 2);
+    }
+
+    #[test]
+    fn rng_advances_once_per_committed_token_only() {
+        let params = SamplingParams::stochastic(1.0);
+        let rows = [peaked(8, 3), peaked(8, 5), peaked(8, 1)];
+        let refs: Vec<&[f32]> = rows.iter().map(Vec::as_slice).collect();
+        let mut rng = Rng::new(42);
+        let v = verify_chain(&refs, &[3, 5], &[7], &params, &mut rng);
+        // Peaked logits make the stochastic draw all but deterministic.
+        let m = v.committed.len();
+        let mut expect = Rng::new(42);
+        for _ in 0..m {
+            let _ = expect.f64();
+        }
+        assert_eq!(rng.next_u64(), expect.next_u64(), "one draw per commit");
+    }
+
+    #[test]
+    fn tree_verification_follows_the_oracle_path() {
+        let mut tree = DraftTree::default();
+        tree.add_chain(&[3, 5]); // the oracle's actual continuation
+        tree.add_chain(&[3, 6]); // a sibling branch
+        tree.add_chain(&[4]); // a wrong first guess
+        let vocab = 8;
+        // The oracle draws 3, then 5, then 1; every other context peaks
+        // at 0, so descending any wrong branch would be visible.
+        let mut rng = Rng::new(0);
+        let v = verify_tree(
+            &tree,
+            |node| match tree.path_tokens(node).as_slice() {
+                [] => peaked(vocab, 3),
+                [3] => peaked(vocab, 5),
+                [3, 5] => peaked(vocab, 1),
+                _ => peaked(vocab, 0),
+            },
+            &[7],
+            &SamplingParams::greedy(),
+            &mut rng,
+        );
+        assert_eq!(v.accepted(), 2, "descended 3 -> 5");
+        let toks: Vec<i32> = v.committed.iter().map(|s| s.token).collect();
+        assert_eq!(toks, vec![3, 5, 1]);
+    }
+}

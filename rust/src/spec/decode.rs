@@ -1,0 +1,279 @@
+//! Host draft-and-verify pipeline and its sequential oracle.
+//!
+//! [`spec_generate`] runs the full speculative loop over any
+//! [`TokenModel`]: draft a chain (or a tree via
+//! [`spec_generate_tree`]), compute the target's per-position logits —
+//! the host stand-in for the engine's single multi-query lean pass —
+//! verify with [`verify_chain`] / [`verify_tree`], and commit 1..=k+1
+//! tokens per pass. [`sequential_generate`] is the oracle it must equal
+//! **bit-for-bit** for every `(seed, params, k)`; `rust/tests/
+//! spec_props.rs` pins that equivalence, and the acceptance *rate* only
+//! moves the pass count, never the stream.
+
+use crate::sampling::{sample_token, SampledToken, SamplingParams};
+use crate::util::rng::Rng;
+
+use super::accept::{verify_chain, verify_tree};
+use super::draft::{DraftSource, TokenModel};
+use super::tree::DraftTree;
+
+/// Counters of one speculative decode run (also embedded in the engine
+/// metrics for the serving-side pipeline).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Multi-query verify passes executed (one per engine step and
+    /// sequence).
+    pub verify_passes: usize,
+    /// Draft tokens proposed.
+    pub drafted: usize,
+    /// Draft tokens accepted (committed as-is).
+    pub accepted: usize,
+    /// Tokens committed in total (accepted drafts + one correction or
+    /// bonus token per pass).
+    pub committed: usize,
+    /// Speculative KV rows rolled back by `truncate_seq` (engine path
+    /// only; the host pipeline stores no KV).
+    pub rolled_back: usize,
+}
+
+impl SpecStats {
+    /// Mean tokens committed per verify pass (>= 1 once any pass ran;
+    /// > 1 is the speculative win over one-token-per-step decode).
+    pub fn tokens_per_pass(&self) -> f64 {
+        if self.verify_passes == 0 {
+            0.0
+        } else {
+            self.committed as f64 / self.verify_passes as f64
+        }
+    }
+
+    /// Fraction of drafted tokens that were accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+}
+
+/// The sequential oracle: one token per model call through the exact
+/// sampling pipeline. This is what the engine's non-speculative decode
+/// loop computes, restated over a host [`TokenModel`].
+pub fn sequential_generate<M: TokenModel + ?Sized>(
+    model: &M,
+    prompt: &[i32],
+    max_new: usize,
+    params: &SamplingParams,
+    rng: &mut Rng,
+) -> Vec<SampledToken> {
+    assert!(!prompt.is_empty(), "empty prompt");
+    let mut hist = prompt.to_vec();
+    let mut out = Vec::with_capacity(max_new);
+    for _ in 0..max_new {
+        let l = model.logits(&hist);
+        let s = sample_token(&l, &hist, params, rng);
+        hist.push(s.token);
+        out.push(s);
+    }
+    out
+}
+
+/// A finished speculative run.
+#[derive(Clone, Debug)]
+pub struct SpecRun {
+    /// The committed stream — identical to [`sequential_generate`] under
+    /// the same `(prompt, params, rng seed)`.
+    pub tokens: Vec<SampledToken>,
+    pub stats: SpecStats,
+}
+
+/// Target logits for the draft-block positions: row `i` scores the
+/// position after `history ++ draft[..i]`. On the engine these rows come
+/// out of one multi-query lean attention pass; on the host the model is
+/// queried per extended context (same numbers, no batching to exploit).
+fn target_rows<M: TokenModel + ?Sized>(
+    model: &M,
+    history: &[i32],
+    draft: &[i32],
+) -> Vec<Vec<f32>> {
+    let mut rows = Vec::with_capacity(draft.len() + 1);
+    let mut ctx = history.to_vec();
+    rows.push(model.logits(&ctx));
+    for &d in draft {
+        ctx.push(d);
+        rows.push(model.logits(&ctx));
+    }
+    rows
+}
+
+/// Speculative decoding with a single draft chain per pass.
+pub fn spec_generate<M: TokenModel + ?Sized, D: DraftSource + ?Sized>(
+    model: &M,
+    drafter: &mut D,
+    k: usize,
+    prompt: &[i32],
+    max_new: usize,
+    params: &SamplingParams,
+    rng: &mut Rng,
+) -> SpecRun {
+    assert!(!prompt.is_empty(), "empty prompt");
+    let mut hist = prompt.to_vec();
+    let mut tokens = Vec::with_capacity(max_new);
+    let mut stats = SpecStats::default();
+    while tokens.len() < max_new {
+        let remaining = max_new - tokens.len();
+        // Never draft past the budget: a pass commits at most k + 1.
+        let k_step = k.min(remaining.saturating_sub(1));
+        let mut draft = if k_step > 0 {
+            drafter.draft(&hist, k_step)
+        } else {
+            Vec::new()
+        };
+        draft.truncate(k_step);
+        let rows = target_rows(model, &hist, &draft);
+        let row_refs: Vec<&[f32]> = rows.iter().map(Vec::as_slice).collect();
+        let verdict = verify_chain(&row_refs, &draft, &hist, params, rng);
+        stats.verify_passes += 1;
+        stats.drafted += draft.len();
+        stats.accepted += verdict.accepted;
+        stats.committed += verdict.committed.len();
+        for s in &verdict.committed {
+            hist.push(s.token);
+            tokens.push(*s);
+        }
+    }
+    SpecRun { tokens, stats }
+}
+
+/// Speculative decoding over a [`DraftTree`] merged from several
+/// drafters: agreeing prefixes are scored once, and the verify pass
+/// follows whichever branch matches the oracle stream.
+pub fn spec_generate_tree<M: TokenModel + ?Sized>(
+    model: &M,
+    drafters: &mut [Box<dyn DraftSource>],
+    k: usize,
+    prompt: &[i32],
+    max_new: usize,
+    params: &SamplingParams,
+    rng: &mut Rng,
+) -> SpecRun {
+    assert!(!prompt.is_empty(), "empty prompt");
+    let mut hist = prompt.to_vec();
+    let mut tokens = Vec::with_capacity(max_new);
+    let mut stats = SpecStats::default();
+    while tokens.len() < max_new {
+        let remaining = max_new - tokens.len();
+        let k_step = k.min(remaining.saturating_sub(1));
+        let mut tree = DraftTree::new();
+        if k_step > 0 {
+            for d in drafters.iter_mut() {
+                let mut chain = d.draft(&hist, k_step);
+                chain.truncate(k_step);
+                tree.add_chain(&chain);
+            }
+        }
+        stats.drafted += tree.len();
+        let verdict = verify_tree(
+            &tree,
+            |node| {
+                let mut ctx = hist.clone();
+                ctx.extend(tree.path_tokens(node));
+                model.logits(&ctx)
+            },
+            &hist,
+            params,
+            rng,
+        );
+        stats.verify_passes += 1;
+        stats.accepted += verdict.accepted();
+        // The accepted path is bounded by k_step, so this never commits
+        // past the budget.
+        stats.committed += verdict.committed.len();
+        for s in &verdict.committed {
+            hist.push(s.token);
+            tokens.push(*s);
+        }
+    }
+    SpecRun { tokens, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::seq_rng;
+    use crate::spec::draft::{DraftKind, NGramDrafter, SyntheticModel};
+
+    fn periodic_prompt(len: usize, period: usize) -> Vec<i32> {
+        (0..len).map(|i| (i % period) as i32).collect()
+    }
+
+    #[test]
+    fn greedy_spec_stream_equals_sequential_and_wins_passes() {
+        let model = SyntheticModel::new(32, 5, 6.0);
+        let prompt = periodic_prompt(24, 6);
+        let params = SamplingParams::greedy();
+        let mut r1 = seq_rng(1, 2);
+        let seq = sequential_generate(&model, &prompt, 40, &params, &mut r1);
+        let mut r2 = seq_rng(1, 2);
+        let mut drafter = NGramDrafter::default();
+        let run = spec_generate(&model, &mut drafter, 4, &prompt, 40, &params, &mut r2);
+        assert_eq!(run.tokens, seq, "bit-identical stream");
+        assert_eq!(run.stats.committed, 40);
+        assert!(
+            run.stats.verify_passes < 40,
+            "repetitive workload must commit >1 token/pass ({} passes)",
+            run.stats.verify_passes
+        );
+        assert!(run.stats.tokens_per_pass() > 1.0);
+        assert!(run.stats.acceptance_rate() > 0.5);
+    }
+
+    #[test]
+    fn budget_is_never_overshot() {
+        let model = SyntheticModel::new(16, 9, 6.0);
+        let prompt = periodic_prompt(12, 3);
+        let params = SamplingParams::greedy();
+        for max_new in [1usize, 2, 3, 5, 7] {
+            let mut rng = seq_rng(3, 4);
+            let mut drafter = NGramDrafter::default();
+            let run =
+                spec_generate(&model, &mut drafter, 4, &prompt, max_new, &params, &mut rng);
+            assert_eq!(run.tokens.len(), max_new);
+            let mut oracle_rng = seq_rng(3, 4);
+            let seq = sequential_generate(&model, &prompt, max_new, &params, &mut oracle_rng);
+            assert_eq!(run.tokens, seq);
+        }
+    }
+
+    #[test]
+    fn tree_spec_stream_equals_sequential() {
+        let model = SyntheticModel::new(24, 11, 6.0);
+        let prompt = periodic_prompt(20, 5);
+        let params = SamplingParams::stochastic(0.7);
+        let mut r1 = seq_rng(8, 1);
+        let seq = sequential_generate(&model, &prompt, 30, &params, &mut r1);
+        let mut drafters: Vec<Box<dyn DraftSource>> =
+            vec![DraftKind::NGram.build(24, 0), DraftKind::Model.build(24, 11)];
+        let mut r2 = seq_rng(8, 1);
+        let run =
+            spec_generate_tree(&model, &mut drafters, 4, &prompt, 30, &params, &mut r2);
+        assert_eq!(run.tokens, seq, "tree verification preserves the stream");
+        assert_eq!(run.stats.committed, 30);
+    }
+
+    #[test]
+    fn stats_ratios() {
+        let s = SpecStats {
+            verify_passes: 4,
+            drafted: 12,
+            accepted: 9,
+            committed: 13,
+            rolled_back: 3,
+        };
+        assert!((s.tokens_per_pass() - 3.25).abs() < 1e-12);
+        assert!((s.acceptance_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(SpecStats::default().tokens_per_pass(), 0.0);
+        assert_eq!(SpecStats::default().acceptance_rate(), 0.0);
+    }
+}

@@ -1,0 +1,326 @@
+//! Draft sources: where speculative tokens come from.
+//!
+//! A [`DraftSource`] proposes `k` continuation tokens for a sequence's
+//! history. Two built-in drafters cover the common serving deployments:
+//!
+//! * [`NGramDrafter`] — a **self-drafter**: suffix lookup over the
+//!   sequence's own history (find the most recent earlier occurrence of
+//!   the trailing n-gram, propose what followed it). Needs no second
+//!   model, costs O(history) per step, and is highly effective on
+//!   repetitive workloads — retrieval answers, code, templated text.
+//! * [`ModelDrafter`] — a **smaller-model drafter**: greedy rollout of a
+//!   cheaper [`TokenModel`]. [`ModelDrafter::from_config`] configures one
+//!   from an existing [`crate::model::ModelConfig`], so draft quality can
+//!   be traded against draft cost along the usual model-size axis.
+//!
+//! Draft quality only affects *speed* (acceptance rate), never
+//! correctness: the verifier ([`super::accept`]) commits exactly the
+//! sequential sampler's stream regardless of what was proposed.
+
+use crate::model::ModelConfig;
+use crate::sampling::{sample_token, SamplingParams};
+use crate::util::rng::{splitmix64, Rng};
+
+/// A source of speculative draft tokens.
+pub trait DraftSource {
+    /// Short human-readable identifier (`"ngram"`, `"model"`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Propose up to `k` continuation tokens for `history` (the prompt
+    /// plus everything committed so far). May return fewer than `k`;
+    /// callers treat a short draft as a smaller speculation window.
+    fn draft(&mut self, history: &[i32], k: usize) -> Vec<i32>;
+}
+
+/// Which built-in drafter to use (CLI/engine configuration surface).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DraftKind {
+    /// Suffix-lookup self-drafting ([`NGramDrafter`]); no second model.
+    NGram,
+    /// Greedy rollout of a smaller synthetic model ([`ModelDrafter`]).
+    Model,
+}
+
+impl DraftKind {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<DraftKind> {
+        match s {
+            "ngram" => Some(DraftKind::NGram),
+            "model" => Some(DraftKind::Model),
+            _ => None,
+        }
+    }
+
+    /// Build the drafter this kind names, for a `vocab`-sized target.
+    pub fn build(self, vocab: usize, seed: u64) -> Box<dyn DraftSource> {
+        match self {
+            DraftKind::NGram => Box::new(NGramDrafter::default()),
+            DraftKind::Model => Box::new(ModelDrafter {
+                model: SyntheticModel::new(vocab, seed ^ 0xD8AF_7E11, 4.0),
+            }),
+        }
+    }
+}
+
+impl std::fmt::Display for DraftKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DraftKind::NGram => write!(f, "ngram"),
+            DraftKind::Model => write!(f, "model"),
+        }
+    }
+}
+
+/// Suffix-lookup self-drafter: match the trailing `n`-gram (longest
+/// first) against earlier history and propose the tokens that followed
+/// its most recent occurrence. When the continuation runs off the end of
+/// history it self-extends (reads its own proposal), so a perfectly
+/// periodic sequence drafts its full period.
+#[derive(Clone, Copy, Debug)]
+pub struct NGramDrafter {
+    /// Longest trailing n-gram to match (tried first).
+    pub max_n: usize,
+    /// Shortest n-gram worth matching.
+    pub min_n: usize,
+}
+
+impl Default for NGramDrafter {
+    fn default() -> Self {
+        NGramDrafter { max_n: 4, min_n: 1 }
+    }
+}
+
+impl DraftSource for NGramDrafter {
+    fn name(&self) -> &'static str {
+        "ngram"
+    }
+
+    fn draft(&mut self, history: &[i32], k: usize) -> Vec<i32> {
+        if k == 0 || history.is_empty() {
+            return Vec::new();
+        }
+        let len = history.len();
+        let hi = self.max_n.max(self.min_n).min(len.saturating_sub(1));
+        let lo = self.min_n.max(1);
+        for n in (lo..=hi).rev() {
+            let pat = &history[len - n..];
+            // Most recent earlier occurrence with a continuation token.
+            let found = (0..len - n).rev().find(|&p| &history[p..p + n] == pat);
+            if let Some(p) = found {
+                let start = p + n;
+                let mut out = Vec::with_capacity(k);
+                for j in 0..k {
+                    let q = start + j;
+                    // Past the end of history the draft continues itself.
+                    let t = if q < len { history[q] } else { out[q - len] };
+                    out.push(t);
+                }
+                return out;
+            }
+        }
+        // No match anywhere: propose repeating the last token.
+        vec![*history.last().unwrap(); k]
+    }
+}
+
+/// A next-token logit model the host pipeline can query directly — the
+/// target of the host speculative decoder and the substrate of the
+/// smaller-model drafter. (The engine's target is the PJRT model
+/// artifact; this trait is its artifact-free stand-in.)
+pub trait TokenModel {
+    fn vocab(&self) -> usize;
+
+    /// Raw next-token logits after `history` (`history` non-empty).
+    fn logits(&self, history: &[i32]) -> Vec<f32>;
+}
+
+/// Deterministic synthetic language model: hash-noise bigram logits plus
+/// an induction-head bonus (the token that followed the most recent
+/// earlier occurrence of the current token gets `sharpness` extra
+/// logit). With `sharpness` above the noise range the model locks onto
+/// repetition — a workload where self-drafting shines, and a target
+/// whose behaviour is reproducible from `(vocab, seed)` alone.
+#[derive(Clone, Copy, Debug)]
+pub struct SyntheticModel {
+    vocab: usize,
+    seed: u64,
+    sharpness: f32,
+}
+
+impl SyntheticModel {
+    /// `sharpness` is the induction-signal strength in logits (base
+    /// noise spans `[-1, 1]`; values above ~2 make repetition dominant).
+    pub fn new(vocab: usize, seed: u64, sharpness: f32) -> SyntheticModel {
+        assert!(vocab >= 2, "vocab must be >= 2");
+        assert!(sharpness >= 0.0);
+        SyntheticModel { vocab, seed, sharpness }
+    }
+
+    /// Configure from a transformer config: vocab carries over and the
+    /// induction signal sharpens with depth, so a deeper config stands
+    /// in for a stronger (and costlier) model.
+    pub fn from_config(cfg: &ModelConfig, seed: u64) -> SyntheticModel {
+        let sharpness = (2.0 + cfg.n_layers as f32 * 0.25).min(12.0);
+        SyntheticModel::new(cfg.vocab, seed, sharpness)
+    }
+}
+
+/// Deterministic uniform in `[0, 1)` from a hash seed.
+fn unit(seed: u64) -> f32 {
+    let mut s = seed;
+    (splitmix64(&mut s) >> 40) as f32 / (1u64 << 24) as f32
+}
+
+impl TokenModel for SyntheticModel {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn logits(&self, history: &[i32]) -> Vec<f32> {
+        let last = *history.last().expect("history must be non-empty");
+        let prev = if history.len() >= 2 {
+            history[history.len() - 2]
+        } else {
+            -1
+        };
+        let ctx = self.seed
+            ^ (last as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (prev as i64 as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+        let mut l: Vec<f32> = (0..self.vocab)
+            .map(|t| unit(ctx ^ (t as u64).wrapping_mul(0xFF51_AFD7_ED55_8CCD)) * 2.0 - 1.0)
+            .collect();
+        // Induction head: continue the most recent earlier occurrence of
+        // the current token.
+        if let Some(p) = (0..history.len() - 1).rev().find(|&p| history[p] == last) {
+            let tgt = history[p + 1];
+            if tgt >= 0 && (tgt as usize) < self.vocab {
+                l[tgt as usize] += self.sharpness;
+            }
+        }
+        l
+    }
+}
+
+/// Smaller-model drafter: greedy rollout of an inner [`TokenModel`].
+/// Greedy drafting touches no RNG, so the drafter never perturbs the
+/// target pipeline's draw stream.
+#[derive(Clone, Debug)]
+pub struct ModelDrafter<M: TokenModel> {
+    pub model: M,
+}
+
+impl ModelDrafter<SyntheticModel> {
+    /// A drafter over the synthetic stand-in for `cfg` — the
+    /// "smaller model" knob expressed through [`ModelConfig`].
+    pub fn from_config(cfg: &ModelConfig, seed: u64) -> ModelDrafter<SyntheticModel> {
+        ModelDrafter { model: SyntheticModel::from_config(cfg, seed) }
+    }
+}
+
+impl<M: TokenModel> DraftSource for ModelDrafter<M> {
+    fn name(&self) -> &'static str {
+        "model"
+    }
+
+    fn draft(&mut self, history: &[i32], k: usize) -> Vec<i32> {
+        let greedy = SamplingParams::greedy();
+        let mut rng = Rng::new(0); // untouched by greedy sampling
+        let mut ctx = history.to_vec();
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            if ctx.is_empty() {
+                break;
+            }
+            let l = self.model.logits(&ctx);
+            let s = sample_token(&l, &ctx, &greedy, &mut rng);
+            out.push(s.token);
+            ctx.push(s.token);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ngram_drafts_the_period_of_a_repetitive_history() {
+        let mut d = NGramDrafter::default();
+        // Period-4 history: 0 1 2 3 0 1 2 3 0 1
+        let h: Vec<i32> = (0..10).map(|i| i % 4).collect();
+        let draft = d.draft(&h, 6);
+        assert_eq!(draft, vec![2, 3, 0, 1, 2, 3], "continues the period");
+    }
+
+    #[test]
+    fn ngram_self_extends_past_the_end_of_history() {
+        let mut d = NGramDrafter::default();
+        let h = vec![5, 6, 5, 6];
+        // Matching "5 6" at p=0 continues 5,6,5,6,... by self-reading.
+        let draft = d.draft(&h, 5);
+        assert_eq!(draft, vec![5, 6, 5, 6, 5]);
+    }
+
+    #[test]
+    fn ngram_falls_back_to_repeating_the_last_token() {
+        let mut d = NGramDrafter::default();
+        let draft = d.draft(&[1, 2, 3, 4], 3);
+        assert_eq!(draft, vec![4, 4, 4], "no repeat anywhere: repeat last");
+        assert!(d.draft(&[], 3).is_empty());
+        assert!(d.draft(&[1, 2], 0).is_empty());
+    }
+
+    #[test]
+    fn ngram_prefers_the_longest_match() {
+        let mut d = NGramDrafter::default();
+        // "..1 2" occurred twice with different continuations; the 2-gram
+        // match (7 after [1,2] at p=3) must win over any 1-gram match.
+        let h = vec![1, 2, 9, 1, 2, 7, 3, 1, 2];
+        let draft = d.draft(&h, 1);
+        assert_eq!(draft, vec![7], "most recent longest match continues");
+    }
+
+    #[test]
+    fn synthetic_model_is_deterministic_and_induction_biased() {
+        let m = SyntheticModel::new(32, 7, 6.0);
+        let h = vec![1, 2, 3, 1];
+        let a = m.logits(&h);
+        let b = m.logits(&h);
+        assert_eq!(a, b, "deterministic");
+        assert_eq!(a.len(), 32);
+        // Last token 1 occurred earlier at p=0 followed by 2: token 2
+        // carries the induction bonus and dominates the [-1,1] noise.
+        let argmax = a
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.total_cmp(y.1))
+            .unwrap()
+            .0;
+        assert_eq!(argmax, 2);
+    }
+
+    #[test]
+    fn model_drafter_continues_the_induction_pattern() {
+        let cfg = ModelConfig::bench_d64(2);
+        let mut d = ModelDrafter::from_config(&cfg, 3);
+        assert_eq!(d.name(), "model");
+        let h: Vec<i32> = (0..12).map(|i| i % 3).collect(); // 0 1 2 0 1 2 ...
+        let draft = d.draft(&h, 4);
+        assert_eq!(draft, vec![0, 1, 2, 0], "induction locks onto the period");
+    }
+
+    #[test]
+    fn draft_kind_parses_and_builds() {
+        assert_eq!(DraftKind::parse("ngram"), Some(DraftKind::NGram));
+        assert_eq!(DraftKind::parse("model"), Some(DraftKind::Model));
+        assert_eq!(DraftKind::parse("x"), None);
+        let mut d = DraftKind::NGram.build(16, 0);
+        assert_eq!(d.name(), "ngram");
+        assert_eq!(d.draft(&[1, 1, 1], 2), vec![1, 1]);
+        let mut m = DraftKind::Model.build(16, 0);
+        assert_eq!(m.name(), "model");
+        assert_eq!(m.draft(&[2, 3, 2], 1).len(), 1);
+        assert_eq!(format!("{} {}", DraftKind::NGram, DraftKind::Model), "ngram model");
+    }
+}

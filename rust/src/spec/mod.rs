@@ -1,0 +1,45 @@
+//! Speculative decoding: draft-and-verify trees on the COW paged KV,
+//! verified in one multi-token lean pass.
+//!
+//! Decode-phase attention is memory-bound: a 1-query step streams the
+//! whole cached context from HBM to produce one token. Verifying `k`
+//! drafted tokens turns `k` such steps into **one** pass with `k + 1`
+//! query rows over the *same* context stream — the arithmetic-intensity
+//! win the paper's stream-K machinery is built to exploit, and the
+//! natural consumer of the PR 1-3 substrate (COW `fork_seq`, pending-
+//! token resampling, cascade gather).
+//!
+//! * [`draft`] — pluggable [`DraftSource`]s: the n-gram/suffix-lookup
+//!   **self-drafter** (no second model) and the **smaller-model
+//!   drafter** configured from [`crate::model::ModelConfig`].
+//! * [`tree`] — [`DraftTree`]: several candidate continuations sharing
+//!   scored prefixes, with lineage on the PR 3 `ForkTree`.
+//! * [`accept`] — exact acceptance: the deterministic sampling pipeline
+//!   makes acceptance-rejection collapse to replaying the sequential
+//!   sampler, so the committed stream is **bit-identical** to
+//!   non-speculative decoding for any `(seed, params)` — not merely
+//!   equal in distribution.
+//! * [`decode`] — the host draft-and-verify loop plus its sequential
+//!   oracle and [`SpecStats`] accounting.
+//!
+//! The serving half lives in the coordinator/runtime/partition layers:
+//! `partition::multi_query` poses the draft block as staggered-causal
+//! cascade lanes, `runtime::attention_exec::lean_multi_query` executes
+//! it, the model artifacts grow a multi-token `verify` step surfacing
+//! per-position logits, and `Engine` commits 1..=k+1 tokens per step,
+//! rolling rejected draft KV back with the COW-aware
+//! `PagedKvCache::truncate_seq`.
+
+pub mod accept;
+pub mod decode;
+pub mod draft;
+pub mod tree;
+
+pub use accept::{verify_chain, verify_tree, ChainVerdict, TreeVerdict};
+pub use decode::{
+    sequential_generate, spec_generate, spec_generate_tree, SpecRun, SpecStats,
+};
+pub use draft::{
+    DraftKind, DraftSource, ModelDrafter, NGramDrafter, SyntheticModel, TokenModel,
+};
+pub use tree::DraftTree;

@@ -1,0 +1,177 @@
+//! Draft trees: several candidate continuations sharing a prefix.
+//!
+//! Chain drafting speculates one continuation; tree drafting hedges
+//! across several (e.g. the n-gram self-draft *and* a smaller-model
+//! rollout), deduplicating their shared prefixes so each distinct token
+//! is scored once by the multi-query verify pass. Node lineage rides the
+//! PR 3 [`ForkTree`] — a draft node is a (virtual) fork of its parent at
+//! depth `d`, the same parent/child/fork-point bookkeeping the engine
+//! uses for real KV forks — plus a per-node token table.
+
+use std::collections::HashMap;
+
+use crate::sampling::ForkTree;
+
+/// A tree of drafted continuation tokens. The root is the sequence's
+/// current state and carries no token; every other node proposes one
+/// token extending its parent's path.
+#[derive(Debug, Default)]
+pub struct DraftTree {
+    lineage: ForkTree,
+    tokens: HashMap<u64, i32>,
+    next: u64,
+}
+
+impl DraftTree {
+    /// The root node id (the sequence's current state).
+    pub const ROOT: u64 = 0;
+
+    pub fn new() -> DraftTree {
+        DraftTree::default()
+    }
+
+    /// Number of draft nodes (root excluded).
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Depth of a node (root = 0).
+    pub fn depth(&self, id: u64) -> usize {
+        if id == Self::ROOT {
+            0
+        } else {
+            self.lineage
+                .fork_point(id)
+                .map(|fp| fp.token_len)
+                .unwrap_or(0)
+        }
+    }
+
+    /// The token a node proposes (`None` for the root).
+    pub fn token(&self, id: u64) -> Option<i32> {
+        self.tokens.get(&id).copied()
+    }
+
+    /// Direct children of `id`, in insertion order.
+    pub fn children_of(&self, id: u64) -> &[u64] {
+        self.lineage.children_of(id)
+    }
+
+    /// The child of `parent` proposing `token`, if any.
+    pub fn child_with_token(&self, parent: u64, token: i32) -> Option<u64> {
+        self.lineage
+            .children_of(parent)
+            .iter()
+            .copied()
+            .find(|&c| self.tokens.get(&c) == Some(&token))
+    }
+
+    /// Add a child of `parent` proposing `token`; returns its id.
+    pub fn add_child(&mut self, parent: u64, token: i32) -> u64 {
+        assert!(
+            parent == Self::ROOT || self.tokens.contains_key(&parent),
+            "unknown parent node {parent}"
+        );
+        self.next += 1;
+        let id = self.next;
+        self.lineage.register(parent, id, self.depth(parent) + 1);
+        self.tokens.insert(id, token);
+        id
+    }
+
+    /// Add a whole chain from the root, reusing existing nodes for any
+    /// already-drafted prefix (this is what deduplicates several
+    /// drafters' agreeing prefixes). Returns the node ids along the
+    /// chain.
+    pub fn add_chain(&mut self, chain: &[i32]) -> Vec<u64> {
+        let mut cur = Self::ROOT;
+        let mut ids = Vec::with_capacity(chain.len());
+        for &t in chain {
+            cur = match self.child_with_token(cur, t) {
+                Some(c) => c,
+                None => self.add_child(cur, t),
+            };
+            ids.push(cur);
+        }
+        ids
+    }
+
+    /// Every draft node id, in creation order (stable across runs —
+    /// this fixes the verify pass's query-row order).
+    pub fn nodes(&self) -> Vec<u64> {
+        (1..=self.next).filter(|id| self.tokens.contains_key(id)).collect()
+    }
+
+    /// Leaf nodes (draft nodes with no children), in creation order.
+    pub fn leaves(&self) -> Vec<u64> {
+        self.nodes()
+            .into_iter()
+            .filter(|&id| self.lineage.children_of(id).is_empty())
+            .collect()
+    }
+
+    /// Root-to-node token path (empty for the root).
+    pub fn path_tokens(&self, id: u64) -> Vec<i32> {
+        let mut out = Vec::new();
+        let mut cur = id;
+        while cur != Self::ROOT {
+            out.push(self.tokens[&cur]);
+            cur = self
+                .lineage
+                .fork_point(cur)
+                .expect("non-root draft nodes have parents")
+                .parent;
+        }
+        out.reverse();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chains_share_prefixes() {
+        let mut t = DraftTree::new();
+        assert!(t.is_empty());
+        let a = t.add_chain(&[1, 2, 3]);
+        let b = t.add_chain(&[1, 2, 4]);
+        assert_eq!(t.len(), 4, "prefix [1, 2] deduplicated");
+        assert_eq!(a[0], b[0]);
+        assert_eq!(a[1], b[1]);
+        assert_ne!(a[2], b[2]);
+        assert_eq!(t.path_tokens(a[2]), vec![1, 2, 3]);
+        assert_eq!(t.path_tokens(b[2]), vec![1, 2, 4]);
+        assert_eq!(t.depth(a[2]), 3);
+        assert_eq!(t.leaves(), vec![a[2], b[2]]);
+    }
+
+    #[test]
+    fn child_lookup_and_tokens() {
+        let mut t = DraftTree::new();
+        let ids = t.add_chain(&[5, 6]);
+        assert_eq!(t.child_with_token(DraftTree::ROOT, 5), Some(ids[0]));
+        assert_eq!(t.child_with_token(DraftTree::ROOT, 6), None);
+        assert_eq!(t.child_with_token(ids[0], 6), Some(ids[1]));
+        assert_eq!(t.token(ids[1]), Some(6));
+        assert_eq!(t.token(DraftTree::ROOT), None);
+        assert_eq!(t.path_tokens(DraftTree::ROOT), Vec::<i32>::new());
+        assert_eq!(t.children_of(DraftTree::ROOT), &[ids[0]]);
+    }
+
+    #[test]
+    fn nodes_enumerate_in_creation_order() {
+        let mut t = DraftTree::new();
+        t.add_chain(&[9]);
+        t.add_chain(&[9, 8]);
+        t.add_chain(&[7]);
+        let nodes = t.nodes();
+        assert_eq!(nodes.len(), 3);
+        assert!(nodes.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -20,13 +20,21 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-/// Parse error with byte offset context.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+/// Parse error with byte offset context. (Display/Error are implemented
+/// by hand: `thiserror` is not in the offline cargo cache.)
+#[derive(Debug)]
 pub struct JsonError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {

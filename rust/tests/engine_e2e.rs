@@ -604,3 +604,65 @@ fn metrics_populated() {
     assert!(e.metrics.decode_tps() > 0.0);
     assert!(e.metrics.step_summary().is_some());
 }
+
+/// Speculative decoding end to end: the committed stream must be
+/// bit-identical to plain decode, with fewer verify passes than tokens
+/// on a repetitive (self-draftable) prompt, and no KV-page leaks from
+/// the eager-append + rollback cycle. Requires artifacts built with a
+/// verify step (older artifact sets self-skip).
+#[test]
+fn speculative_decode_matches_plain_stream_and_rolls_back() {
+    let Some((rt, m)) = setup() else { return };
+    let mut plain = engine(&rt, &m);
+    let mut spec = Engine::new(
+        &rt,
+        &m,
+        EngineConfig { spec_k: 3, ..EngineConfig::default() },
+    )
+    .expect("engine");
+    if !spec.spec_enabled() {
+        eprintln!("skipping: artifact set has no verify step");
+        return;
+    }
+
+    // Repetitive prompt: the n-gram self-drafter's best case.
+    let prompt: Vec<i32> = (0..24).map(|t| t % 6).collect();
+    let max_new = 24;
+    let a = plain.submit(prompt.clone(), max_new).unwrap();
+    let b = spec.submit(prompt, max_new).unwrap();
+    let fin_plain = plain.run_until_idle().expect("plain run");
+    let fin_spec = spec.run_until_idle().expect("spec run");
+    assert_eq!(fin_plain.len(), 1);
+    assert_eq!(fin_spec.len(), 1);
+    assert_eq!(fin_plain[0].id, a);
+    assert_eq!(fin_spec[0].id, b);
+    assert_eq!(
+        fin_spec[0].output, fin_plain[0].output,
+        "speculative stream must equal the plain decode stream"
+    );
+    assert_eq!(fin_spec[0].reason, FinishReason::Length);
+
+    let s = spec.metrics.spec;
+    assert!(s.verify_passes > 0, "spec engine must run verify passes");
+    // The first token comes from prefill; every later token was
+    // committed by a verify pass.
+    assert_eq!(s.committed, max_new - 1, "verify passes commit the rest");
+    // Speculation never takes *more* steps than plain decode, and every
+    // accepted draft shaves one off (acceptance itself depends on how
+    // draftable this tiny random-weight model's stream happens to be).
+    assert!(
+        spec.metrics.decode_steps <= plain.metrics.decode_steps,
+        "spec took more steps ({} vs {})",
+        spec.metrics.decode_steps,
+        plain.metrics.decode_steps
+    );
+    assert_eq!(
+        spec.metrics.decode_steps + s.accepted,
+        plain.metrics.decode_steps,
+        "each accepted draft saves exactly one decode step"
+    );
+    // Rollback accounting: every pass appended a full block and
+    // truncated the rejects; nothing may leak.
+    assert_eq!(spec.kv_used_pages(), spec.prefix_index_pages());
+    assert_eq!(spec.active(), 0);
+}

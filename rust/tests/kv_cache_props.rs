@@ -1,9 +1,12 @@
 //! Property tests for [`PagedKvCache`] page accounting: across random
 //! workloads of inserts, shared-prefix inserts, appends (with
-//! copy-on-write), external retains (the radix index), releases and
-//! frees, the cache must (a) never leak a page, (b) never double-free,
-//! (c) keep every holder's refcount exact, and (d) return a page to the
-//! free list exactly when its last reference drops.
+//! copy-on-write), zero-copy forks, speculative truncations, external
+//! retains (the radix index), releases and frees, the cache must
+//! (a) never leak a page, (b) never double-free, (c) keep every
+//! holder's refcount exact, and (d) return a page to the free list
+//! exactly when its last reference drops. Truncation of a shared page
+//! run must never disturb another holder's view — the next append
+//! copy-on-writes instead of mutating the sibling's bytes.
 
 use std::collections::HashMap;
 
@@ -80,7 +83,7 @@ fn random_workload_never_leaks_or_double_frees() {
         let mut next_id = 0u64;
 
         for _ in 0..120 {
-            match rng.urange(0, 6) {
+            match rng.urange(0, 8) {
                 // Plain insert.
                 0 => {
                     let len = rng.urange(1, 3 * PAGE_TOKENS + 2);
@@ -145,6 +148,23 @@ fn random_workload_never_leaks_or_double_frees() {
                     let p = retains.swap_remove(i);
                     cache.release_page(p).map_err(|e| e.to_string())?;
                 }
+                // Zero-copy fork: a sibling takes one reference per page.
+                6 if !active.is_empty() => {
+                    let donor = *rng.choose(&active);
+                    let id = next_id;
+                    next_id += 1;
+                    cache.fork_seq(donor, id).map_err(|e| e.to_string())?;
+                    active.push(id);
+                }
+                // Speculative rollback: truncate to a random shorter
+                // length, releasing whole dropped pages (shared ones
+                // survive for their other holders).
+                7 if !active.is_empty() => {
+                    let id = *rng.choose(&active);
+                    let len = cache.seq_len(id).unwrap();
+                    let new_len = rng.urange(0, len + 1);
+                    cache.truncate_seq(id, new_len).map_err(|e| e.to_string())?;
+                }
                 _ => {}
             }
             check_invariants(&cache, &active, &retains)?;
@@ -184,7 +204,7 @@ fn gather_shared_equals_flat_gather_on_random_sharing() {
         let mut active: Vec<u64> = Vec::new();
         let mut next_id = 0u64;
         for _ in 0..20 {
-            match rng.urange(0, 3) {
+            match rng.urange(0, 5) {
                 0 => {
                     let len = rng.urange(1, 3 * PAGE_TOKENS);
                     let (k, v) = kv(rng, len);
@@ -216,6 +236,18 @@ fn gather_shared_equals_flat_gather_on_random_sharing() {
                     let id = *rng.choose(&active);
                     let (k, v) = kv(rng, 1);
                     let _ = cache.append_token(id, &k, &v);
+                }
+                3 if !active.is_empty() => {
+                    let donor = *rng.choose(&active);
+                    if cache.fork_seq(donor, next_id).is_ok() {
+                        active.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                4 if !active.is_empty() => {
+                    let id = *rng.choose(&active);
+                    let len = cache.seq_len(id).unwrap();
+                    let _ = cache.truncate_seq(id, rng.urange(0, len + 1));
                 }
                 _ => {}
             }
@@ -254,6 +286,56 @@ fn gather_shared_equals_flat_gather_on_random_sharing() {
         }
         for id in active.drain(..) {
             cache.free_seq(id);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truncate_fork_append_interleavings_preserve_sibling_views() {
+    // The speculative-decoding serving shape: a fork sibling shares the
+    // parent's pages (including a partial tail) while the parent churns
+    // through eager draft appends and rollback truncates. Whatever the
+    // interleaving, the sibling's gathered view must stay bit-identical
+    // — truncation never mutates shared pages, and appends into a still-
+    // shared tail copy-on-write first.
+    prop_check("truncate x fork x append keeps sibling views", 30, |rng| {
+        let mut cache = new_cache();
+        let len = rng.urange(1, 3 * PAGE_TOKENS);
+        let (k, v) = kv(rng, len);
+        cache.insert_seq(0, &k, &v, len).map_err(|e| e.to_string())?;
+        cache.fork_seq(0, 1).map_err(|e| e.to_string())?;
+
+        let ctx = 4 * PAGE_TOKENS;
+        let n = LAYERS * HEADS * ctx * DH;
+        let (mut k0, mut v0) = (vec![0.0; n], vec![0.0; n]);
+        cache
+            .gather(&[Some(1)], ctx, &mut k0, &mut v0)
+            .map_err(|e| e.to_string())?;
+
+        let (mut kx, mut vx) = (vec![0.0; n], vec![0.0; n]);
+        for step in 0..12 {
+            if rng.chance(0.5) {
+                let (nk, nv) = kv(rng, 1);
+                let _ = cache.append_token(0, &nk, &nv);
+            } else {
+                let plen = cache.seq_len(0).unwrap();
+                cache
+                    .truncate_seq(0, rng.urange(0, plen + 1))
+                    .map_err(|e| e.to_string())?;
+            }
+            cache
+                .gather(&[Some(1)], ctx, &mut kx, &mut vx)
+                .map_err(|e| e.to_string())?;
+            if kx != k0 || vx != v0 {
+                return Err(format!("sibling view changed at step {step}"));
+            }
+        }
+
+        cache.free_seq(0);
+        cache.free_seq(1);
+        if cache.free_pages() != PAGES {
+            return Err("interleaving leaked pages".into());
         }
         Ok(())
     });

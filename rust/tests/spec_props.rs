@@ -1,0 +1,257 @@
+//! Speculative-decoding properties that need no artifacts:
+//!
+//! 1. **Acceptance-sampling equivalence** — for any seed and sampling
+//!    params, the speculative pipeline's committed token stream (tokens
+//!    *and* logprobs) is bit-identical to the sequential pipeline's, for
+//!    self-drafting and the smaller-model drafter, chain and tree, with
+//!    k ∈ {1, 2, 4, 8}. Draft quality moves only the pass count.
+//! 2. **Multi-query lean exactness** — the verify pass's staggered-
+//!    causal cascade expansion computes exact attention: every row of
+//!    every draft block matches the dense host oracle over the composed
+//!    per-row KV, with and without fork-family grouping, while gathering
+//!    strictly fewer KV bytes than the flat expansion whenever a block
+//!    has >= 2 rows of real context.
+//! 3. **Self-drafter sanity** — n-gram drafts always come from the
+//!    history's alphabet and exactly continue perfect repetitions.
+
+use lean_attention::attention::attention_host;
+use lean_attention::partition::cascade::{build_cascade_plan, PrefixGroup};
+use lean_attention::partition::multi_query::{
+    MultiQueryInputs, MultiQueryProblem, MultiQuerySeq,
+};
+use lean_attention::runtime::attention_exec::{
+    lean_multi_query_host, roll_cascade_tasks, rolled_kv_bytes,
+};
+use lean_attention::sampling::{seq_rng, SamplingParams};
+use lean_attention::spec::{
+    sequential_generate, spec_generate, spec_generate_tree, DraftKind, DraftSource,
+    NGramDrafter, SyntheticModel,
+};
+use lean_attention::util::rng::Rng;
+use lean_attention::util::testing::{max_abs_err, prop_check};
+
+fn random_params(rng: &mut Rng) -> SamplingParams {
+    SamplingParams {
+        temperature: *rng.choose(&[0.0f32, 0.5, 0.8, 1.0, 1.5]),
+        top_k: *rng.choose(&[0usize, 1, 3, 8]),
+        top_p: *rng.choose(&[1.0f32, 0.95, 0.7, 0.3]),
+        repetition_penalty: *rng.choose(&[1.0f32, 1.1, 1.5]),
+    }
+}
+
+/// A mixed workload: repetitive spans (draftable) with random
+/// interruptions (forcing rejections).
+fn random_prompt(rng: &mut Rng, vocab: usize) -> Vec<i32> {
+    let len = rng.urange(4, 40);
+    let period = rng.urange(1, 9);
+    (0..len)
+        .map(|i| {
+            if rng.chance(0.15) {
+                rng.urange(0, vocab) as i32
+            } else {
+                (i % period) as i32
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn spec_stream_is_bit_identical_to_sequential_for_any_params() {
+    prop_check("spec == sequential (self-draft)", 60, |rng| {
+        let vocab = rng.urange(8, 48);
+        let sharpness = *rng.choose(&[0.0f32, 2.0, 6.0]);
+        let model = SyntheticModel::new(vocab, rng.next_u64(), sharpness);
+        let prompt = random_prompt(rng, vocab);
+        let params = random_params(rng);
+        let max_new = rng.urange(1, 33);
+        let seed = rng.next_u64();
+        let id = rng.next_u64();
+
+        let mut oracle_rng = seq_rng(seed, id);
+        let want = sequential_generate(&model, &prompt, max_new, &params, &mut oracle_rng);
+        for k in [1usize, 2, 4, 8] {
+            let mut drafter = NGramDrafter::default();
+            let mut rng2 = seq_rng(seed, id);
+            let run =
+                spec_generate(&model, &mut drafter, k, &prompt, max_new, &params, &mut rng2);
+            if run.tokens != want {
+                return Err(format!("k={k}: stream diverged from sequential"));
+            }
+            if run.stats.committed != max_new {
+                return Err(format!(
+                    "k={k}: committed {} != {max_new}",
+                    run.stats.committed
+                ));
+            }
+            if run.stats.verify_passes > max_new {
+                return Err(format!("k={k}: more passes than tokens"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spec_stream_equivalence_holds_for_model_and_tree_drafting() {
+    prop_check("spec == sequential (model drafter, tree)", 30, |rng| {
+        let vocab = rng.urange(8, 32);
+        let model = SyntheticModel::new(vocab, rng.next_u64(), 5.0);
+        let prompt = random_prompt(rng, vocab);
+        let params = random_params(rng);
+        let max_new = rng.urange(1, 25);
+        let seed = rng.next_u64();
+
+        let mut oracle_rng = seq_rng(seed, 0);
+        let want = sequential_generate(&model, &prompt, max_new, &params, &mut oracle_rng);
+
+        // Smaller-model drafter (a different-seed synthetic model).
+        let mut drafter = DraftKind::Model.build(vocab, rng.next_u64());
+        let mut r2 = seq_rng(seed, 0);
+        let run = spec_generate(
+            &model,
+            drafter.as_mut(),
+            4,
+            &prompt,
+            max_new,
+            &params,
+            &mut r2,
+        );
+        if run.tokens != want {
+            return Err("model-drafter stream diverged".into());
+        }
+
+        // Tree drafting over both drafters at once.
+        let mut drafters: Vec<Box<dyn DraftSource>> = vec![
+            DraftKind::NGram.build(vocab, 0),
+            DraftKind::Model.build(vocab, rng.next_u64()),
+        ];
+        let mut r3 = seq_rng(seed, 0);
+        let run =
+            spec_generate_tree(&model, &mut drafters, 4, &prompt, max_new, &params, &mut r3);
+        if run.tokens != want {
+            return Err("tree stream diverged".into());
+        }
+        Ok(())
+    });
+}
+
+/// Dense-oracle check of one multi-query problem: every expanded row's
+/// attention matches exact attention over the composed per-row KV.
+fn assert_multi_query_exact(p: &MultiQueryProblem, seed: u64) -> Result<(), String> {
+    let inputs = MultiQueryInputs::random(p, seed);
+    let (cp, t) = p.tensors(&inputs).map_err(|e| e.to_string())?;
+    let (k_full, v_full, n_max) = t.full_kv(&cp);
+    let lens: Vec<u32> = (0..cp.outputs())
+        .map(|g| cp.ctx_lens[g / cp.heads])
+        .collect();
+    let want = attention_host(
+        &t.q,
+        &k_full,
+        &v_full,
+        cp.outputs(),
+        n_max,
+        cp.head_dim,
+        &lens,
+    );
+    for (slots, batch_rows) in [(3usize, 2usize), (16, 64), (64, 7)] {
+        let (got, _) = lean_multi_query_host(p, &inputs, slots, batch_rows)
+            .map_err(|e| e.to_string())?;
+        let err = max_abs_err(&got, &want);
+        if err > 1e-4 {
+            return Err(format!("slots {slots} rows {batch_rows}: err {err}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn multi_query_lean_matches_dense_attention_with_staggered_causality() {
+    prop_check("lean_multi_query == dense oracle", 30, |rng| {
+        let heads = rng.urange(1, 3);
+        let d = *rng.choose(&[4usize, 8]);
+        let n_seqs = rng.urange(1, 4);
+        let seqs: Vec<MultiQuerySeq> = (0..n_seqs)
+            .map(|_| MultiQuerySeq {
+                base_len: rng.urange(0, 41),
+                q_len: rng.urange(1, 5),
+            })
+            .collect();
+        let p = MultiQueryProblem::new(heads, d, seqs, Vec::new())
+            .map_err(|e| e.to_string())?
+            .with_tile(*rng.choose(&[8usize, 16]));
+        assert_multi_query_exact(&p, rng.next_u64())
+    });
+}
+
+#[test]
+fn multi_query_fork_family_stays_exact_and_dedups_shared_history() {
+    prop_check("family multi-query exact + deduped", 20, |rng| {
+        let heads = rng.urange(1, 3);
+        let d = 8usize;
+        let shared = rng.urange(16, 33);
+        let siblings = rng.urange(2, 4);
+        let q_len = rng.urange(2, 5);
+        let seqs: Vec<MultiQuerySeq> = (0..siblings)
+            .map(|_| MultiQuerySeq {
+                base_len: shared + rng.urange(0, 3),
+                q_len,
+            })
+            .collect();
+        let family = PrefixGroup {
+            prefix_len: shared as u32,
+            members: (0..siblings as u32).collect(),
+        };
+        let p = MultiQueryProblem::new(heads, d, seqs, vec![family])
+            .map_err(|e| e.to_string())?
+            .with_tile(8);
+        assert_multi_query_exact(&p, rng.next_u64())?;
+
+        // Any grouped expansion gathers fewer bytes than the flat twin.
+        let cp = p.expand();
+        let flat = p.expand_flat();
+        let grouped = rolled_kv_bytes(
+            &roll_cascade_tasks(&cp, &build_cascade_plan(&cp, 16)),
+            d,
+        );
+        let ungrouped = rolled_kv_bytes(
+            &roll_cascade_tasks(&flat, &build_cascade_plan(&flat, 16)),
+            d,
+        );
+        if grouped >= ungrouped {
+            return Err(format!("no dedup: grouped {grouped} >= flat {ungrouped}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ngram_drafts_come_from_history_and_continue_exact_repeats() {
+    prop_check("ngram drafter sanity", 40, |rng| {
+        let vocab = rng.urange(4, 32);
+        let mut drafter = NGramDrafter::default();
+        // Arbitrary history: drafted tokens must come from its alphabet.
+        let hist: Vec<i32> =
+            (0..rng.urange(1, 30)).map(|_| rng.urange(0, vocab) as i32).collect();
+        let k = rng.urange(1, 9);
+        let draft = drafter.draft(&hist, k);
+        if draft.len() != k {
+            return Err(format!("draft len {} != {k}", draft.len()));
+        }
+        if draft.iter().any(|t| !hist.contains(t)) {
+            return Err("drafted a token absent from history".into());
+        }
+
+        // A perfect repetition must be continued exactly.
+        let period = rng.urange(1, 6);
+        let reps = rng.urange(2, 5);
+        let phist: Vec<i32> = (0..period * reps).map(|i| (i % period) as i32).collect();
+        let draft = drafter.draft(&phist, k);
+        for (j, &t) in draft.iter().enumerate() {
+            let want = ((phist.len() + j) % period) as i32;
+            if t != want {
+                return Err(format!("position {j}: drafted {t}, period says {want}"));
+            }
+        }
+        Ok(())
+    });
+}
