@@ -7,6 +7,7 @@ pub mod cascade_exec;
 pub mod figures;
 pub mod runner;
 pub mod sampling;
+pub mod sparse;
 pub mod spec;
 pub mod table;
 pub mod trace;
@@ -15,5 +16,6 @@ pub mod workload;
 pub use cascade_exec::{compare_exec, ExecCase, ExecComparison};
 pub use runner::{bench, BenchResult};
 pub use sampling::{compare_sampling, SamplingCase, SamplingComparison};
+pub use sparse::{compare_sparse, SparseBenchCase, SparseComparison};
 pub use spec::{compare_spec, SpecCase, SpecComparison};
 pub use table::Table;

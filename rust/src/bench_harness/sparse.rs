@@ -1,0 +1,469 @@
+//! Dense vs **sparse-selected** decode on the paged KV cache: the
+//! measurement behind `leanattn bench --sparse`.
+//!
+//! A batch of long-context sequences runs a host pseudo-decode loop —
+//! gather, exact attention, a fixed random readout to logits, the
+//! deterministic sampling pipeline, KV append — twice over identical
+//! workload randomness:
+//!
+//! * **dense** — [`PagedKvCache::gather`] materializes every lane's full
+//!   context each step;
+//! * **sparse** — each lane's pages are scored with the Quest-style
+//!   upper bound against the tail-key query proxy (exactly the engine's
+//!   selection) and only the selected pages are materialized through
+//!   [`PagedKvCache::gather_selected`].
+//!
+//! At `kv_budget >= context` the selection is complete and the two loops
+//! must produce **bit-identical streams** — tokens, logprobs and RNG
+//! trajectory — which `leanattn bench --sparse` asserts on every run; at
+//! sub-context budgets the sparse loop must read strictly fewer
+//! gathered-KV bytes. One context page is planted as a **needle** (keys
+//! aligned with the query direction): a sound selector retains it at any
+//! budget, measured as needle recall. A one-shot executor check compares
+//! [`lean_sparse_host`] against the dense oracle restricted to the same
+//! selected pages.
+
+use anyhow::{ensure, Result};
+
+use crate::attention::attention_host;
+use crate::coordinator::{PagedKvCache, SparseStats};
+use crate::runtime::attention_exec::lean_sparse_host;
+use crate::sampling::{sample_token, seq_rng, SamplingParams};
+use crate::sparse::{selected_token_indices, selected_tokens, SparsePolicy};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::testing::max_abs_err;
+use crate::util::timer::sample_us;
+
+/// Shape of one dense-vs-sparse stream comparison (single layer: the
+/// query-proxy plane then coincides with the attention head rows).
+#[derive(Clone, Copy, Debug)]
+pub struct SparseBenchCase {
+    /// Concurrent sequences.
+    pub seqs: usize,
+    /// Context tokens per sequence before stepping.
+    pub context: usize,
+    /// Pseudo-decode steps.
+    pub steps: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub page_tokens: usize,
+    pub vocab: usize,
+    /// LeanTile width for the executor check.
+    pub tile: usize,
+    pub policy: SparsePolicy,
+    /// Page ordinal the needle (planted attention mass) lands in; must
+    /// be a middle page (past the sinks, before the window).
+    pub needle_page: usize,
+}
+
+impl SparseBenchCase {
+    /// The `leanattn bench --sparse` default shape: 16-page contexts
+    /// pruned to a 6-page budget.
+    pub fn default_case() -> SparseBenchCase {
+        SparseBenchCase {
+            seqs: 2,
+            context: 256,
+            steps: 12,
+            heads: 2,
+            head_dim: 16,
+            page_tokens: 16,
+            vocab: 64,
+            tile: 32,
+            policy: SparsePolicy {
+                dense_threshold_pages: 4,
+                ..SparsePolicy::with_budget(6)
+            },
+            needle_page: 5,
+        }
+    }
+
+    /// CI smoke shape: small and fast, budget still below the context so
+    /// every assertion stays meaningful.
+    pub fn smoke() -> SparseBenchCase {
+        SparseBenchCase {
+            context: 128,
+            steps: 6,
+            policy: SparsePolicy {
+                dense_threshold_pages: 3,
+                ..SparsePolicy::with_budget(4)
+            },
+            needle_page: 3,
+            ..SparseBenchCase::default_case()
+        }
+    }
+
+    /// Pages a sequence can grow to over the run (context + steps).
+    pub fn pages_cap(&self) -> usize {
+        (self.context + self.steps).div_ceil(self.page_tokens)
+    }
+
+    /// Token capacity of the gathered dense views.
+    pub fn ctx_cap(&self) -> usize {
+        self.pages_cap() * self.page_tokens
+    }
+}
+
+/// One loop's outcome: the per-sequence streams plus gather accounting.
+pub struct SparseStreamOutcome {
+    pub tokens: Vec<Vec<i32>>,
+    pub logprobs: Vec<Vec<f32>>,
+    /// Post-run draw from every sequence's sampling RNG, folded together:
+    /// equal fingerprints mean equal RNG trajectories.
+    pub rng_fingerprint: u64,
+    /// K+V bytes this loop's gathers materialized.
+    pub gathered_bytes: u64,
+    /// K+V bytes a dense gather materializes over the same steps.
+    pub dense_bytes: u64,
+    /// Selection counters (sparse loop only; default for dense).
+    pub stats: SparseStats,
+    /// Scored steps that kept the needle page / scored steps total.
+    pub needle_kept: usize,
+    pub needle_chances: usize,
+}
+
+/// Outcome of one dense-vs-sparse comparison.
+pub struct SparseComparison {
+    pub case: SparseBenchCase,
+    pub dense: SparseStreamOutcome,
+    pub sparse: SparseStreamOutcome,
+    /// Gather wall-clock over the final cache state.
+    pub dense_us: Summary,
+    pub sparse_us: Summary,
+    /// Max abs error of the sparse lean executor vs the dense oracle
+    /// restricted to the same selected pages (final state, fresh query).
+    pub exec_max_err: f32,
+}
+
+impl SparseComparison {
+    /// Whether the two loops produced bit-identical streams (tokens,
+    /// logprobs and RNG trajectories).
+    pub fn streams_equal(&self) -> bool {
+        self.dense.tokens == self.sparse.tokens
+            && self.dense.logprobs == self.sparse.logprobs
+            && self.dense.rng_fingerprint == self.sparse.rng_fingerprint
+    }
+
+    /// Fraction of dense gather traffic the sparse loop avoided.
+    pub fn bytes_saved_fraction(&self) -> f64 {
+        if self.sparse.dense_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - self.sparse.gathered_bytes as f64 / self.sparse.dense_bytes as f64
+    }
+
+    /// Fraction of scored steps that retained the needle page.
+    pub fn needle_recall(&self) -> f64 {
+        if self.sparse.needle_chances == 0 {
+            return 1.0;
+        }
+        self.sparse.needle_kept as f64 / self.sparse.needle_chances as f64
+    }
+}
+
+/// The workload's K row for absolute position `t`: needle-page rows are
+/// strongly aligned with the shared direction `u`, the final context row
+/// and every appended row weakly aligned (they serve as query proxies),
+/// everything else is low-amplitude noise.
+fn k_row(case: &SparseBenchCase, u: &[f32], t: usize, rng: &mut Rng) -> Vec<f32> {
+    let plane = case.heads * case.head_dim;
+    let noise = rng.normal_vec(plane);
+    let page = t / case.page_tokens;
+    if page == case.needle_page && t < case.context {
+        (0..plane).map(|j| 4.0 * u[j] + 0.05 * noise[j]).collect()
+    } else if t >= case.context - 1 {
+        (0..plane).map(|j| u[j] + 0.1 * noise[j]).collect()
+    } else {
+        noise.iter().map(|x| 0.3 * x).collect()
+    }
+}
+
+/// One live sequence's selection — the engine's own implementation
+/// ([`PagedKvCache::select_seq_pages`]), so the bench measures exactly
+/// what serves.
+fn select_for(
+    cache: &PagedKvCache,
+    id: u64,
+    policy: &SparsePolicy,
+) -> (Vec<usize>, Option<Vec<f32>>) {
+    cache.select_seq_pages(id, policy).expect("live sequence")
+}
+
+/// Run the pseudo-decode loop once. `sparse` toggles page selection; the
+/// workload randomness (context, queries, appended keys) is identical
+/// across modes by construction.
+fn run_stream(
+    case: &SparseBenchCase,
+    sparse: bool,
+    seed: u64,
+) -> Result<(SparseStreamOutcome, PagedKvCache)> {
+    let (h, dh, pt) = (case.heads, case.head_dim, case.page_tokens);
+    let plane = h * dh;
+    let mut cache =
+        PagedKvCache::new(1, h, dh, pt, case.seqs * case.pages_cap() + 2);
+    let mut wl = Rng::new(seed);
+    let u = wl.normal_vec(plane);
+    let readout = wl.normal_vec(plane * case.vocab);
+
+    // Prefill: identical contexts-by-construction across modes.
+    for s in 0..case.seqs as u64 {
+        let mut k = vec![0.0f32; plane * case.context];
+        let mut v = vec![0.0f32; k.len()];
+        for t in 0..case.context {
+            let row = k_row(case, &u, t, &mut wl);
+            let vrow = wl.normal_vec(plane);
+            for hi in 0..h {
+                // [layers=1, heads, len, dh] insert layout.
+                let dst = (hi * case.context + t) * dh;
+                k[dst..dst + dh].copy_from_slice(&row[hi * dh..(hi + 1) * dh]);
+                for j in 0..dh {
+                    v[dst + j] = 0.5 * vrow[hi * dh + j];
+                }
+            }
+        }
+        cache.insert_seq(s, &k, &v, case.context)?;
+    }
+
+    let slots: Vec<Option<u64>> = (0..case.seqs as u64).map(Some).collect();
+    let ctx_cap = case.ctx_cap();
+    let g = case.seqs * h;
+    let nelem = case.seqs * h * ctx_cap * dh;
+    let (mut kbuf, mut vbuf) = (vec![0.0f32; nelem], vec![0.0f32; nelem]);
+    let params = SamplingParams::stochastic(0.8);
+    let mut rngs: Vec<Rng> =
+        (0..case.seqs as u64).map(|s| seq_rng(seed, s)).collect();
+    let mut hists: Vec<Vec<i32>> = vec![Vec::new(); case.seqs];
+    let mut tokens: Vec<Vec<i32>> = vec![Vec::new(); case.seqs];
+    let mut logprobs: Vec<Vec<f32>> = vec![Vec::new(); case.seqs];
+    let mut stats = SparseStats::default();
+    let mut gathered_bytes = 0u64;
+    let mut dense_bytes = 0u64;
+    let (mut needle_kept, mut needle_chances) = (0usize, 0usize);
+    let token_bytes = cache.page_bytes() / pt;
+
+    for _ in 0..case.steps {
+        // Per-lane selection (complete selections when dense or covered).
+        let mut sels: Vec<Vec<usize>> = Vec::with_capacity(case.seqs);
+        let mut views: Vec<u32> = Vec::with_capacity(case.seqs);
+        let mut engaged = false;
+        for s in 0..case.seqs as u64 {
+            let len = cache.seq_len(s).unwrap();
+            dense_bytes += (len * token_bytes) as u64;
+            let (sel, scores) = if sparse {
+                select_for(&cache, s, &case.policy)
+            } else {
+                let used = cache.seq_pages(s).unwrap().len().min(len.div_ceil(pt));
+                ((0..used).collect(), None)
+            };
+            let scored = scores.is_some();
+            if let Some(scores) = scores {
+                stats.record_scored_lane(&scores, &sel);
+                needle_chances += 1;
+                if sel.contains(&case.needle_page) {
+                    needle_kept += 1;
+                }
+            }
+            if sparse {
+                // The engine's engagement predicate, verbatim: covering
+                // budgets count as sparse steps there too.
+                engaged |= case.policy.engages(sel.len(), scored);
+            }
+            views.push(selected_tokens(len, pt, &sel) as u32);
+            sels.push(sel);
+        }
+
+        // Gather: the dense loop takes the flat gather, the sparse loop
+        // the selected-page gather (complete selections at full budget).
+        if sparse {
+            let sg = cache.gather_selected(&slots, &sels)?;
+            sg.compose_dense(ctx_cap, &mut kbuf, &mut vbuf)?;
+            gathered_bytes += sg.shared_bytes as u64;
+            if engaged {
+                stats.selection_steps += 1;
+                stats.gather_bytes_dense += sg.flat_bytes as u64;
+                // Per-lane selected bytes (engine semantics): the ratio
+                // isolates pure selection, not cascade dedup.
+                stats.gather_bytes_sparse += views
+                    .iter()
+                    .map(|&t| t as u64 * token_bytes as u64)
+                    .sum::<u64>();
+            }
+        } else {
+            cache.gather(&slots, ctx_cap, &mut kbuf, &mut vbuf)?;
+            for s in 0..case.seqs as u64 {
+                gathered_bytes += (cache.seq_len(s).unwrap() * token_bytes) as u64;
+            }
+        }
+
+        // Attention over the gathered views, fixed readout, sample.
+        let mut q_all = vec![0.0f32; g * dh];
+        for s in 0..case.seqs {
+            let noise = wl.normal_vec(plane);
+            let q: Vec<f32> =
+                (0..plane).map(|j| u[j] + 0.1 * noise[j]).collect();
+            q_all[s * plane..(s + 1) * plane].copy_from_slice(&q);
+        }
+        let lens_rep: Vec<u32> = (0..g).map(|gi| views[gi / h]).collect();
+        let o = attention_host(&q_all, &kbuf, &vbuf, g, ctx_cap, dh, &lens_rep);
+
+        for s in 0..case.seqs {
+            let orow = &o[s * plane..(s + 1) * plane];
+            let mut logits = vec![0.0f32; case.vocab];
+            for (j, &oj) in orow.iter().enumerate() {
+                for (w, l) in logits.iter_mut().enumerate() {
+                    *l += oj * readout[j * case.vocab + w];
+                }
+            }
+            let samp = sample_token(&logits, &hists[s], &params, &mut rngs[s]);
+            hists[s].push(samp.token);
+            tokens[s].push(samp.token);
+            logprobs[s].push(samp.logprob);
+            // Append: the key stays a query-proxy row; only V carries
+            // the sampled token, so divergent streams keep comparable
+            // selection behavior.
+            let noise = wl.normal_vec(plane);
+            let nk: Vec<f32> =
+                (0..plane).map(|j| u[j] + 0.1 * noise[j]).collect();
+            let vnoise = wl.normal_vec(plane);
+            let nv: Vec<f32> = (0..plane)
+                .map(|j| 0.2 * vnoise[j] + samp.token as f32 * 0.01)
+                .collect();
+            cache.append_token(s as u64, &nk, &nv)?;
+        }
+    }
+
+    let mut fp = 0u64;
+    for r in &mut rngs {
+        fp = fp.rotate_left(7) ^ r.next_u64();
+    }
+    Ok((
+        SparseStreamOutcome {
+            tokens,
+            logprobs,
+            rng_fingerprint: fp,
+            gathered_bytes,
+            dense_bytes,
+            stats,
+            needle_kept,
+            needle_chances,
+        },
+        cache,
+    ))
+}
+
+/// Run the dense and sparse loops over identical workload randomness,
+/// time both gather paths on the final state, and check the sparse lean
+/// executor against the dense oracle restricted to the selected pages.
+pub fn compare_sparse(
+    case: SparseBenchCase,
+    iters: usize,
+    seed: u64,
+) -> Result<SparseComparison> {
+    ensure!(case.seqs >= 1 && case.context >= 1, "empty case");
+    case.policy.validate()?;
+    let pages = case.context.div_ceil(case.page_tokens);
+    ensure!(
+        case.needle_page >= case.policy.sink_pages
+            && case.needle_page + case.policy.window_pages < pages,
+        "needle page {} must be a middle page of a {pages}-page context",
+        case.needle_page
+    );
+
+    let (dense, _) = run_stream(&case, false, seed)?;
+    let (sparse, cache) = run_stream(&case, true, seed)?;
+
+    // Gather timing over the sparse run's final state.
+    let slots: Vec<Option<u64>> = (0..case.seqs as u64).map(Some).collect();
+    let sels: Vec<Vec<usize>> = (0..case.seqs as u64)
+        .map(|s| select_for(&cache, s, &case.policy).0)
+        .collect();
+    let ctx_cap = case.ctx_cap();
+    let (h, dh, pt) = (case.heads, case.head_dim, case.page_tokens);
+    let g = case.seqs * h;
+    let nelem = g * ctx_cap * dh;
+    let (mut kf, mut vf) = (vec![0.0f32; nelem], vec![0.0f32; nelem]);
+    let dense_samples = sample_us(iters, 0.0, || {
+        cache.gather(&slots, ctx_cap, &mut kf, &mut vf).expect("dense gather");
+    });
+    let sparse_samples = sample_us(iters, 0.0, || {
+        let sg = cache.gather_selected(&slots, &sels).expect("sparse gather");
+        sg.compose_dense(ctx_cap, &mut kf, &mut vf).expect("compose");
+    });
+
+    // Executor check: sparse lean vs the oracle on the same selection.
+    cache.gather(&slots, ctx_cap, &mut kf, &mut vf)?;
+    let lens: Vec<u32> =
+        (0..case.seqs as u64).map(|s| cache.seq_len(s).unwrap() as u32).collect();
+    let mut qrng = Rng::new(seed ^ 0xA5A5_5A5A);
+    let q = qrng.normal_vec(g * dh);
+    let (o_lean, _) = lean_sparse_host(
+        &q, &kf, &vf, &lens, h, ctx_cap, dh, pt, &sels, case.tile, 48, 64,
+    )?;
+    // Independent oracle: token-index compaction + exact attention.
+    let mut o_ref = vec![0.0f32; g * dh];
+    for s in 0..case.seqs {
+        let idx = selected_token_indices(lens[s] as usize, pt, &sels[s]);
+        let n_sel = idx.len().max(1);
+        let mut kc = vec![0.0f32; h * n_sel * dh];
+        let mut vc = vec![0.0f32; kc.len()];
+        for hi in 0..h {
+            for (j, &t) in idx.iter().enumerate() {
+                let src = ((s * h + hi) * ctx_cap + t) * dh;
+                let dst = (hi * n_sel + j) * dh;
+                kc[dst..dst + dh].copy_from_slice(&kf[src..src + dh]);
+                vc[dst..dst + dh].copy_from_slice(&vf[src..src + dh]);
+            }
+        }
+        let qs = &q[s * h * dh..(s + 1) * h * dh];
+        let lens_c = vec![idx.len() as u32; h];
+        let os = attention_host(qs, &kc, &vc, h, n_sel, dh, &lens_c);
+        o_ref[s * h * dh..(s + 1) * h * dh].copy_from_slice(&os);
+    }
+    let exec_max_err = max_abs_err(&o_lean, &o_ref);
+
+    Ok(SparseComparison {
+        case,
+        dense,
+        sparse,
+        dense_us: Summary::of(&dense_samples),
+        sparse_us: Summary::of(&sparse_samples),
+        exec_max_err,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sub_budget_sheds_bytes_and_keeps_the_needle() {
+        let c = compare_sparse(SparseBenchCase::smoke(), 1, 11).expect("smoke");
+        assert!(
+            c.sparse.gathered_bytes < c.dense.gathered_bytes,
+            "{} vs {}",
+            c.sparse.gathered_bytes,
+            c.dense.gathered_bytes
+        );
+        assert!((c.needle_recall() - 1.0).abs() < 1e-12, "{}", c.needle_recall());
+        assert!(c.exec_max_err < 1e-3, "executor err {}", c.exec_max_err);
+        assert!(c.sparse.stats.selection_steps > 0);
+        assert!(c.sparse.stats.pages_scanned < c.sparse.stats.pages_total);
+    }
+
+    #[test]
+    fn covering_budget_is_bit_identical_to_dense() {
+        let mut case = SparseBenchCase::smoke();
+        case.policy.budget_pages = case.pages_cap() + 1;
+        let c = compare_sparse(case, 1, 13).expect("full budget");
+        assert!(c.streams_equal(), "full-budget streams must be identical");
+        assert_eq!(c.sparse.gathered_bytes, c.dense.gathered_bytes);
+        // Past the dense threshold the sparse path stays engaged with
+        // complete selections (the engine's semantics), scoring nothing.
+        assert_eq!(c.sparse.stats.selection_steps, case.steps);
+        assert_eq!(c.sparse.stats.lanes_scored, 0, "nothing scored");
+        assert_eq!(
+            c.sparse.stats.gather_bytes_sparse,
+            c.sparse.stats.gather_bytes_dense
+        );
+    }
+}

@@ -40,7 +40,8 @@ use crate::runtime::{Manifest, ModelRuntime, Runtime};
 use crate::sampling::{sample_token, seq_rng, ForkTree, SamplingParams};
 use crate::sim::cascade::simulate_cascade;
 use crate::sim::{simulate, GpuArch};
-use crate::spec::{verify_chain, DraftKind, DraftSource};
+use crate::sparse::{advance_rope, selected_tokens, SparsePolicy};
+use crate::spec::{verify_chain, AdaptiveK, DraftKind, DraftSource};
 use crate::util::rng::Rng;
 
 use super::batcher::ContinuousBatcher;
@@ -78,6 +79,15 @@ pub struct EngineConfig {
     /// Draft source for speculative decoding (n-gram self-drafting needs
     /// no second model).
     pub spec_draft: DraftKind,
+    /// Adapt each sequence's draft length from its running acceptance
+    /// rate (EWMA over verify passes) instead of the fixed `spec_k`: a
+    /// low-acceptance stream converges to 1-draft probes. The committed
+    /// stream is unchanged — acceptance is exact for any draft length.
+    pub adaptive_spec: bool,
+    /// Sparse long-context decode: score and prune context *pages* before
+    /// each decode step (Quest-style per-page upper bounds over the
+    /// paged cache's key statistics). `None` streams dense.
+    pub sparse: Option<SparsePolicy>,
 }
 
 impl Default for EngineConfig {
@@ -92,6 +102,8 @@ impl Default for EngineConfig {
             seed: 0,
             spec_k: 0,
             spec_draft: DraftKind::NGram,
+            adaptive_spec: false,
+            sparse: None,
         }
     }
 }
@@ -135,6 +147,26 @@ struct ActiveSeq {
     /// not just later matchers. Every listed page is in the sequence's
     /// own page list, so it stays referenced while the request is active.
     prefix_pages: Vec<usize>,
+    /// Acceptance-aware draft-length controller (consulted only when
+    /// [`EngineConfig::adaptive_spec`] is set).
+    spec_ctrl: AdaptiveK,
+}
+
+/// One decode step's gathered shapes: the contiguous K/V views land in
+/// the engine's reusable buffers; this carries what the artifact and the
+/// hardware projection consume alongside them.
+struct StepViews {
+    /// Per-live-lane context lengths for the projection (compacted to the
+    /// selected tokens when the sparse policy engages).
+    lens: Vec<u32>,
+    /// Shared-prefix groups over live-lane indices.
+    groups: Vec<PrefixGroup>,
+    /// Per-slot cached-token counts the artifact consumes: the number of
+    /// valid rows in the gathered view and the fresh token's row index.
+    /// Equal to the true cache length on dense steps; smaller on sparse
+    /// steps (readers bound themselves by this, so pruned pages are
+    /// invisible to the kernel).
+    positions: Vec<i32>,
 }
 
 /// A single-replica serving engine.
@@ -165,6 +197,9 @@ pub struct Engine {
 impl Engine {
     /// Load artifacts and bring up the engine.
     pub fn new(runtime: &Rc<Runtime>, manifest: &Manifest, config: EngineConfig) -> Result<Engine> {
+        if let Some(p) = &config.sparse {
+            p.validate()?;
+        }
         let model = ModelRuntime::load(runtime, manifest, &config.model)
             .with_context(|| format!("load model {:?}", config.model))?;
         let art = &model.art;
@@ -373,6 +408,9 @@ impl Engine {
         let p_cum = parent.cum_logprob;
         let p_logits = parent.last_logits.clone();
         let p_params = parent.params.clone();
+        // Siblings inherit the parent's acceptance estimate: its history
+        // is the best predictor of theirs at the fork point.
+        let p_ctrl = parent.spec_ctrl.clone();
 
         // Reserve fresh pages for every sibling's remaining budget: its
         // final context minus the full pages it shares forever (the
@@ -448,6 +486,7 @@ impl Engine {
                     reserved_pages: need,
                     index_kept: 0,
                     prefix_pages: prefix_run.clone(),
+                    spec_ctrl: p_ctrl.clone(),
                 },
             );
             self.fork_tree.register(seq, id, cache_len);
@@ -738,6 +777,7 @@ impl Engine {
                     reserved_pages: need,
                     index_kept,
                     prefix_pages: prefix_run,
+                    spec_ctrl: AdaptiveK::new(self.config.spec_k),
                 },
             );
         }
@@ -775,11 +815,43 @@ impl Engine {
             })
     }
 
+    /// Score and select each live lane's context pages under the sparse
+    /// policy. Returns `None` when the step streams dense: no policy,
+    /// every lane below the dense threshold. A policy whose budget covers
+    /// every context still routes through the selected-page gather (with
+    /// complete selections), which is proven bit-identical to the dense
+    /// path — the engine half of the degenerate-sparsity guarantee.
+    fn sparse_selections(
+        &mut self,
+        slots: &[Option<RequestId>],
+    ) -> Option<Vec<Vec<usize>>> {
+        let policy = self.config.sparse?;
+        let mut engaged = false;
+        let mut sels: Vec<Vec<usize>> = vec![Vec::new(); slots.len()];
+        for (bi, slot) in slots.iter().enumerate() {
+            let Some(id) = slot else { continue };
+            let Some((sel, scores)) = self.cache.select_seq_pages(*id, &policy)
+            else {
+                continue;
+            };
+            let scored = scores.is_some();
+            if let Some(scores) = scores {
+                self.metrics.sparse.record_scored_lane(&scores, &sel);
+            }
+            engaged |= policy.engages(sel.len(), scored);
+            sels[bi] = sel;
+        }
+        engaged.then_some(sels)
+    }
+
     /// Gather the paged caches into the contiguous decode views. Steps
     /// whose lanes share a prefix run take the cascade (Strategy::
     /// Cascade) gather: each shared run is materialized once and
     /// scattered into its member lanes, and the measured dedup is
-    /// recorded. Solo steps keep the allocation-free flat gather.
+    /// recorded. Solo steps keep the allocation-free flat gather. When
+    /// the sparse policy engages, only each lane's **selected** pages are
+    /// materialized (compacted, shared sink runs still deduplicated) and
+    /// the returned positions shrink to the compacted lengths.
     ///
     /// The monolithic decode HLO still consumes dense per-lane views,
     /// so on this CPU path the scatter re-expands the runs (segment
@@ -789,13 +861,59 @@ impl Engine {
     /// disappears. gather_shared re-derives the same leading-run
     /// grouping as step_prefix_groups from the live page lists (the
     /// physical ground truth); kv_cache_props pins the two paths'
-    /// views bit-identical either way. Returns the per-live-lane lens
-    /// and shared-prefix groups for the hardware projection.
-    fn gather_step_views(
-        &mut self,
-        slots: &[Option<RequestId>],
-    ) -> Result<(Vec<u32>, Vec<PrefixGroup>)> {
+    /// views bit-identical either way.
+    fn gather_step_views(&mut self, slots: &[Option<RequestId>]) -> Result<StepViews> {
         let c = self.model.art.ctx_bucket;
+
+        if let Some(sels) = self.sparse_selections(slots) {
+            let sg = self.cache.gather_selected(slots, &sels)?;
+            sg.compose_dense(c, &mut self.k_buf, &mut self.v_buf)?;
+            self.metrics.sparse.selection_steps += 1;
+            self.metrics.sparse.gather_bytes_dense += sg.flat_bytes as u64;
+
+            // Compacted per-lane lengths: what the artifact masks to and
+            // where the fresh token lands in the packed view. (The fresh
+            // token is therefore *rotated* at the compacted index too —
+            // a uniform relative-angle shift for the transient query,
+            // while the appended K row is advanced back to its true
+            // position by the decode loops so the cache never holds a
+            // mis-rotated key.)
+            let mut lens = Vec::new();
+            let mut positions = vec![0i32; slots.len()];
+            let mut live_of_slot = vec![usize::MAX; slots.len()];
+            let token_bytes = (self.cache.page_bytes() / self.config.page_tokens) as u64;
+            for (bi, slot) in slots.iter().enumerate() {
+                let Some(id) = slot else { continue };
+                let Some(len) = self.cache.seq_len(*id) else { continue };
+                let compact = selected_tokens(len, self.config.page_tokens, &sels[bi]);
+                // Selected bytes are counted per lane so the sparse
+                // ratio isolates pure selection: the cascade dedup of a
+                // shared sink run (which the dense path also enjoys) is
+                // reported by the cascade gather counters, not here.
+                self.metrics.sparse.gather_bytes_sparse +=
+                    compact as u64 * token_bytes;
+                live_of_slot[bi] = lens.len();
+                lens.push(compact as u32);
+                positions[bi] = compact as i32;
+            }
+            // Shared selected runs (the deduplicated sink pages of a
+            // prefix group) become the projection's prefix groups.
+            let groups: Vec<PrefixGroup> = sg
+                .segments
+                .iter()
+                .filter(|s| s.lanes.len() >= 2)
+                .map(|s| PrefixGroup {
+                    prefix_len: s.tokens as u32,
+                    members: s
+                        .lanes
+                        .iter()
+                        .map(|&lane| live_of_slot[lane] as u32)
+                        .collect(),
+                })
+                .collect();
+            return Ok(StepViews { lens, groups, positions });
+        }
+
         // Detect physically-shared leading page runs once per step: both
         // the gather below and the hardware projection consume them.
         let detect = self.config.enable_prefix_cache || self.config.project_hardware;
@@ -813,7 +931,13 @@ impl Engine {
             self.metrics.gather_bytes_flat += sg.flat_bytes as u64;
             self.metrics.gather_bytes_shared += sg.shared_bytes as u64;
         }
-        Ok((lens, groups))
+        let mut positions = vec![0i32; slots.len()];
+        for (bi, slot) in slots.iter().enumerate() {
+            if let Some(id) = slot {
+                positions[bi] = self.cache.seq_len(*id).unwrap_or(0) as i32;
+            }
+        }
+        Ok(StepViews { lens, groups, positions })
     }
 
     fn decode_once_plain(&mut self, finished: &mut Vec<FinishedRequest>) -> Result<()> {
@@ -827,28 +951,25 @@ impl Engine {
         );
         let vocab = self.model.art.vocab;
 
-        let (lens, groups) = self.gather_step_views(&slots)?;
+        let views = self.gather_step_views(&slots)?;
 
         let mut tokens = vec![0i32; b];
-        let mut positions = vec![0i32; b];
         for (bi, slot) in slots.iter().enumerate() {
             if let Some(id) = slot {
-                let seq = &self.active[id];
-                tokens[bi] = seq.last_token;
-                positions[bi] = self.cache.seq_len(*id).unwrap() as i32;
+                tokens[bi] = self.active[id].last_token;
             }
         }
 
         let t0 = Instant::now();
         let out = self
             .model
-            .decode(&tokens, &self.k_buf, &self.v_buf, &positions)?;
+            .decode(&tokens, &self.k_buf, &self.v_buf, &views.positions)?;
         let step_us = t0.elapsed().as_secs_f64() * 1e6;
         self.metrics.decode_steps += 1;
         self.metrics.step_us.push(step_us);
 
         if self.config.project_hardware {
-            self.record_projection(&lens, &groups);
+            self.record_projection(&views.lens, &views.groups);
         }
 
         // Per-lane: append fresh KV, sample, check termination.
@@ -864,6 +985,16 @@ impl Engine {
                     nk[dst..dst + dh].copy_from_slice(&out.new_k[src..src + dh]);
                     nv[dst..dst + dh].copy_from_slice(&out.new_v[src..src + dh]);
                 }
+            }
+            // Under sparse selection the artifact rotated this fresh K
+            // row at the compacted position; advance it to its true
+            // index before it outlives the step in the cache (a zero
+            // delta — dense and covering-budget steps — is a no-op, so
+            // bit-identity with dense decode is preserved).
+            let true_len = self.cache.seq_len(id).unwrap();
+            let delta = true_len as f64 - f64::from(views.positions[bi]);
+            if delta > 0.0 {
+                advance_rope(&mut nk, dh, delta, self.model.art.rope_base);
             }
             if self.cache.append_token(id, &nk, &nv)? {
                 self.metrics.prefix.cow_copies += 1;
@@ -957,24 +1088,32 @@ impl Engine {
         );
         let vocab = self.model.art.vocab;
 
-        self.gather_step_views(&slots)?;
+        let views = self.gather_step_views(&slots)?;
 
         // Draft blocks: [pending, d_1..d_k, pad] per live lane, with the
         // draft capped by the lane's remaining budget (a pass commits at
         // most draft + 1 tokens, so drafting past the budget would only
-        // score-and-roll-back wasted rows and skew acceptance metrics).
-        // Padded rows are scored by the artifact but never accepted past
-        // the real draft.
+        // score-and-roll-back wasted rows and skew acceptance metrics)
+        // and, under `adaptive_spec`, by the lane's acceptance-aware
+        // controller. Padded rows are scored by the artifact but never
+        // accepted past the real draft.
         let mut tokens = vec![0i32; b * s];
-        let mut positions = vec![0i32; b];
+        // True cache lengths: the rollback anchor. `views.positions` can
+        // be smaller under sparse selection (compacted artifact views).
+        let mut true_len = vec![0usize; b];
         let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); b];
         for (bi, slot) in slots.iter().enumerate() {
             let Some(id) = slot else { continue };
             let seq = &self.active[id];
-            positions[bi] = self.cache.seq_len(*id).unwrap() as i32;
+            true_len[bi] = self.cache.seq_len(*id).unwrap();
             tokens[bi * s] = seq.last_token;
             let remaining = seq.max_new - seq.generated.len();
-            let k_lane = k.min(remaining.saturating_sub(1));
+            let k_adapt = if self.config.adaptive_spec {
+                seq.spec_ctrl.k().min(k)
+            } else {
+                k
+            };
+            let k_lane = k_adapt.min(remaining.saturating_sub(1));
             let mut d = if k_lane > 0 {
                 self.drafter.draft(&seq.tokens, k_lane)
             } else {
@@ -991,7 +1130,7 @@ impl Engine {
         let t0 = Instant::now();
         let out = self
             .model
-            .verify(&tokens, &self.k_buf, &self.v_buf, &positions)?;
+            .verify(&tokens, &self.k_buf, &self.v_buf, &views.positions)?;
         let step_us = t0.elapsed().as_secs_f64() * 1e6;
         self.metrics.decode_steps += 1;
         self.metrics.step_us.push(step_us);
@@ -1001,7 +1140,7 @@ impl Engine {
         let mut nv = vec![0.0f32; plane];
         for (bi, slot) in slots.iter().enumerate() {
             let Some(id) = *slot else { continue };
-            let cache_len = positions[bi] as usize;
+            let cache_len = true_len[bi];
             let draft = std::mem::take(&mut drafts[bi]);
             let rows: Vec<&[f32]> = (0..=draft.len())
                 .map(|i| {
@@ -1017,6 +1156,10 @@ impl Engine {
                 let seq = self.active.get_mut(&id).unwrap();
                 let v =
                     verify_chain(&rows, &draft, &seq.tokens, &seq.params, &mut seq.rng);
+                // Acceptance signal for the adaptive draft-length
+                // controller (the true accepted count, before the
+                // remaining-budget clamp below).
+                seq.spec_ctrl.observe(draft.len(), v.accepted);
                 (v, seq.max_new - seq.generated.len())
             };
             let commit = verdict.committed.len().min(remaining);
@@ -1024,7 +1167,11 @@ impl Engine {
             // Eagerly append the scored block (pending + this lane's
             // drafts) — the write-back a fused verify kernel performs —
             // then truncate the rejected tail. Copy-on-write protects
-            // fork siblings sharing the tail page.
+            // fork siblings sharing the tail page. Block row `i` was
+            // rotated at compacted position `views.positions + i`; its
+            // true index is `cache_len + i`, so the delta is constant
+            // per lane and zero on dense steps (no-op).
+            let delta = cache_len as f64 - f64::from(views.positions[bi]);
             for i in 0..=draft.len() {
                 for li in 0..l {
                     for hi in 0..h {
@@ -1033,6 +1180,9 @@ impl Engine {
                         nk[dst..dst + dh].copy_from_slice(&out.new_k[src..src + dh]);
                         nv[dst..dst + dh].copy_from_slice(&out.new_v[src..src + dh]);
                     }
+                }
+                if delta > 0.0 {
+                    advance_rope(&mut nk, dh, delta, self.model.art.rope_base);
                 }
                 if self.cache.append_token(id, &nk, &nv)? {
                     self.metrics.prefix.cow_copies += 1;
@@ -1201,6 +1351,12 @@ mod tests {
         let c = EngineConfig::default();
         assert_eq!(c.spec_k, 0, "speculative decoding is opt-in");
         assert_eq!(c.spec_draft, DraftKind::NGram);
+        assert!(!c.adaptive_spec, "acceptance-aware k is opt-in");
+    }
+
+    #[test]
+    fn config_default_streams_dense() {
+        assert!(EngineConfig::default().sparse.is_none());
     }
 
     // Engine integration tests — including fork/cancel, best-of-n and

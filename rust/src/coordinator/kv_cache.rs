@@ -20,6 +20,8 @@
 use anyhow::{bail, ensure, Result};
 use std::collections::{BTreeMap, HashMap};
 
+use crate::sparse::{page_upper_bound, select_pages, PageMeta, SparsePolicy};
+
 use super::request::RequestId;
 
 /// Paged K/V storage for many sequences.
@@ -30,6 +32,12 @@ pub struct PagedKvCache {
     pub page_tokens: usize,
     k_pages: Vec<Vec<f32>>,
     v_pages: Vec<Vec<f32>>,
+    /// Per-page key statistics (channel-wise min/max) the sparse page
+    /// selector scores against — maintained incrementally with every
+    /// write, recomputed on copy-on-write clones and exclusive-page
+    /// truncations so they always match a from-scratch recompute over
+    /// the page's filled rows.
+    meta: Vec<PageMeta>,
     /// Holders per page: sequences + the prefix index. 0 = free.
     ref_counts: Vec<u32>,
     free: Vec<usize>,
@@ -51,6 +59,7 @@ impl PagedKvCache {
         num_pages: usize,
     ) -> PagedKvCache {
         let page_elems = layers * heads * page_tokens * head_dim;
+        let plane = layers * heads * head_dim;
         PagedKvCache {
             layers,
             heads,
@@ -58,6 +67,7 @@ impl PagedKvCache {
             page_tokens,
             k_pages: (0..num_pages).map(|_| vec![0.0; page_elems]).collect(),
             v_pages: (0..num_pages).map(|_| vec![0.0; page_elems]).collect(),
+            meta: (0..num_pages).map(|_| PageMeta::empty(plane)).collect(),
             ref_counts: vec![0; num_pages],
             free: (0..num_pages).rev().collect(),
             seqs: HashMap::new(),
@@ -96,6 +106,28 @@ impl PagedKvCache {
         self.ref_counts.get(page).copied().unwrap_or(0)
     }
 
+    /// One cached token's K rows as a `[layers, heads, head_dim]` plane —
+    /// the sparse selector's tail-row query proxy reads the most recent
+    /// key this way before each decode step.
+    pub fn token_k(&self, id: RequestId, t: usize) -> Option<Vec<f32>> {
+        let entry = self.seqs.get(&id)?;
+        if t >= entry.len {
+            return None;
+        }
+        let page = entry.pages[t / self.page_tokens];
+        let slot = t % self.page_tokens;
+        let dh = self.head_dim;
+        let mut out = vec![0.0f32; self.layers * self.heads * dh];
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let src = ((l * self.heads + h) * self.page_tokens + slot) * dh;
+                let dst = (l * self.heads + h) * dh;
+                out[dst..dst + dh].copy_from_slice(&self.k_pages[page][src..src + dh]);
+            }
+        }
+        Some(out)
+    }
+
     /// Pages needed to hold `tokens` tokens.
     pub fn pages_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.page_tokens)
@@ -110,7 +142,69 @@ impl PagedKvCache {
         let p = self.free.pop()?;
         debug_assert_eq!(self.ref_counts[p], 0);
         self.ref_counts[p] = 1;
+        self.meta[p].reset();
         Some(p)
+    }
+
+    /// Key statistics of a live page.
+    pub fn page_meta(&self, page: usize) -> &PageMeta {
+        &self.meta[page]
+    }
+
+    /// From-scratch recompute of a page's key statistics over its first
+    /// `rows` token slots — the consistency oracle the incremental
+    /// maintenance is property-tested against.
+    pub fn recompute_page_meta(&self, page: usize, rows: usize) -> PageMeta {
+        let dh = self.head_dim;
+        let mut m = PageMeta::empty(self.layers * self.heads * dh);
+        for slot in 0..rows.min(self.page_tokens) {
+            for l in 0..self.layers {
+                for h in 0..self.heads {
+                    let off = ((l * self.heads + h) * self.page_tokens + slot) * dh;
+                    m.observe(
+                        (l * self.heads + h) * dh,
+                        &self.k_pages[page][off..off + dh],
+                    );
+                }
+            }
+            m.commit_row(slot);
+        }
+        m
+    }
+
+    /// Check the page-statistics invariants over the whole cache: every
+    /// live page's statistics equal a from-scratch recompute over its
+    /// filled rows, and every sequence's view of every page it holds is
+    /// covered by those rows (so an upper-bound score derived from the
+    /// statistics is sound for every reader). Test/debug surface.
+    pub fn validate_page_meta(&self) -> Result<()> {
+        for p in 0..self.total_pages() {
+            if self.ref_counts[p] == 0 {
+                continue;
+            }
+            let want = self.recompute_page_meta(p, self.meta[p].filled());
+            ensure!(
+                self.meta[p] == want,
+                "page {p} statistics drifted from a from-scratch recompute \
+                 over {} rows",
+                self.meta[p].filled()
+            );
+        }
+        for (id, entry) in &self.seqs {
+            for (pi, &p) in entry.pages.iter().enumerate() {
+                let view = entry
+                    .len
+                    .saturating_sub(pi * self.page_tokens)
+                    .min(self.page_tokens);
+                ensure!(
+                    view <= self.meta[p].filled(),
+                    "sequence {id} reads {view} rows of page {p} but its \
+                     statistics cover only {}",
+                    self.meta[p].filled()
+                );
+            }
+        }
+        Ok(())
     }
 
     /// Take an additional reference on a live page (prefix index or a
@@ -262,6 +356,7 @@ impl PagedKvCache {
             // clone first so the shared copy stays immutable.
             let pi = t / self.page_tokens;
             let page = entry.pages[pi];
+            let kept = t % self.page_tokens;
             if self.ref_counts[page] > 1 {
                 let Some(fresh) = self.alloc_page() else {
                     self.seqs.insert(id, entry);
@@ -269,9 +364,19 @@ impl PagedKvCache {
                 };
                 copy_page(&mut self.k_pages, page, fresh);
                 copy_page(&mut self.v_pages, page, fresh);
+                // The clone's statistics cover exactly the rows this
+                // holder's view keeps — rows past `kept` are another
+                // holder's (or rolled-back) data about to be overwritten.
+                self.meta[fresh] = self.recompute_page_meta(fresh, kept);
                 self.ref_counts[page] -= 1; // still >= 1: not freed
                 entry.pages[pi] = fresh;
                 cow = true;
+            } else if self.meta[page].filled() != kept {
+                // Exclusive page whose statistics still cover rows a
+                // truncation dropped while the page was shared (the
+                // shrink was skipped to keep the then-sibling's bounds
+                // sound): repair before the overwrite lands.
+                self.meta[page] = self.recompute_page_meta(page, kept);
             }
         }
         let (heads, dh) = (self.heads, self.head_dim);
@@ -299,8 +404,11 @@ impl PagedKvCache {
                 let (ks, vs) = src(l, h);
                 self.k_pages[page][off..off + dh].copy_from_slice(ks);
                 self.v_pages[page][off..off + dh].copy_from_slice(vs);
+                // Fold the fresh K row into the page's running min/max.
+                self.meta[page].observe((l * self.heads + h) * dh, ks);
             }
         }
+        self.meta[page].commit_row(slot);
     }
 
     /// Gather a batch of sequences into contiguous decode-artifact views
@@ -448,31 +556,217 @@ impl PagedKvCache {
         })
     }
 
-    /// Copy `tokens` tokens spanning `pages` (first token at the first
-    /// page's first slot) into a fresh `[layers, heads, tokens, head_dim]`
-    /// pair of K/V buffers.
-    fn materialize_run(&self, pages: &[usize], tokens: usize) -> (Vec<f32>, Vec<f32>) {
-        let dh = self.head_dim;
-        let mut k = vec![0.0f32; self.layers * self.heads * tokens * dh];
-        let mut v = vec![0.0f32; k.len()];
-        for (pi, &page) in pages.iter().enumerate() {
-            let t0 = pi * self.page_tokens;
-            if t0 >= tokens {
-                break;
+    /// Score one live sequence's pages against its tail-key query proxy
+    /// and select under `policy` — THE selection: the engine's decode
+    /// loop, the bench harness and the property tests all call this one
+    /// implementation, so what is measured is what serves. Returns the
+    /// ascending selected ordinals plus the page scores when scoring
+    /// actually ran (`None` on the dense bypass and on budgets covering
+    /// the context, where the selection is complete by construction).
+    /// `None` overall when the sequence is unknown.
+    pub fn select_seq_pages(
+        &self,
+        id: RequestId,
+        policy: &SparsePolicy,
+    ) -> Option<(Vec<usize>, Option<Vec<f32>>)> {
+        let len = self.seq_len(id)?;
+        if len == 0 {
+            return Some((Vec::new(), None));
+        }
+        let pages = self.seq_pages(id)?;
+        // Pages actually holding tokens (a rolled-back sequence can
+        // briefly own one empty page more than its length needs).
+        let used = pages.len().min(len.div_ceil(self.page_tokens));
+        if policy.bypasses(used) || policy.budget_pages >= used {
+            return Some(((0..used).collect(), None));
+        }
+        // Query proxy: the most recent cached K row. The true decode
+        // query is a per-layer artifact intermediate unavailable before
+        // the step runs; the tail key row is the causal stand-in
+        // (scores are exact upper bounds against *it*, and selection is
+        // exact-by-construction at covering budgets).
+        let q = self.token_k(id, len - 1)?;
+        let scores: Vec<f32> = pages[..used]
+            .iter()
+            .map(|&p| page_upper_bound(&q, &self.meta[p]))
+            .collect();
+        let sel = select_pages(policy, &scores);
+        Some((sel, Some(scores)))
+    }
+
+    /// Sparse gather: materialize only each lane's **selected** pages,
+    /// packed contiguously in context order. `selections[i]` lists
+    /// strictly ascending page ordinals (indices into lane `i`'s page
+    /// list) for `slots[i]`; a lane selecting every page reproduces the
+    /// dense [`Self::gather_shared`] views bit-for-bit (property-tested
+    /// in `rust/tests/sparse_props.rs`). A leading full-page run that
+    /// every member of a first-page group selects — the retained sink
+    /// pages of a shared prefix — is still materialized once per group.
+    /// The result's `flat_bytes` counts the **dense** traffic (every
+    /// lane's full context), so `shared_bytes / flat_bytes` measures the
+    /// sparse byte saving directly.
+    pub fn gather_selected(
+        &self,
+        slots: &[Option<RequestId>],
+        selections: &[Vec<usize>],
+    ) -> Result<SharedGather> {
+        ensure!(selections.len() == slots.len(), "one selection per slot");
+        let token_bytes = self.page_bytes() / self.page_tokens;
+        // Per live lane: (slot index, [(ordinal, physical, tokens)]).
+        let mut lanes: Vec<(usize, Vec<(usize, usize, usize)>)> = Vec::new();
+        let mut flat_bytes = 0usize;
+        for (bi, slot) in slots.iter().enumerate() {
+            let Some(id) = slot else { continue };
+            let entry = self
+                .seqs
+                .get(id)
+                .ok_or_else(|| anyhow::anyhow!("sequence {id} not cached"))?;
+            flat_bytes += entry.len * token_bytes;
+            let selection = &selections[bi];
+            ensure!(
+                selection.windows(2).all(|w| w[0] < w[1]),
+                "selection for lane {bi} must be strictly ascending"
+            );
+            let mut sel = Vec::with_capacity(selection.len());
+            for &o in selection {
+                ensure!(
+                    o < entry.pages.len(),
+                    "lane {bi}: selected ordinal {o} out of range"
+                );
+                let tokens = self
+                    .page_tokens
+                    .min(entry.len.saturating_sub(o * self.page_tokens));
+                ensure!(tokens > 0, "lane {bi}: selected ordinal {o} holds no tokens");
+                sel.push((o, entry.pages[o], tokens));
             }
-            let count = self.page_tokens.min(tokens - t0);
+            lanes.push((bi, sel));
+        }
+
+        // Group lanes by first selected physical page, as in
+        // [`Self::gather_shared`]: equal first pages mean real sharing.
+        let mut by_first: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, (_, sel)) in lanes.iter().enumerate() {
+            if let Some(&(_, p0, _)) = sel.first() {
+                by_first.entry(p0).or_default().push(i);
+            }
+        }
+
+        let mut segments = Vec::new();
+        for idxs in by_first.values() {
+            // Longest common leading run of selected (ordinal, physical)
+            // pairs, clamped to pages every member streams in full — the
+            // compacted offsets of a shared run must agree across lanes.
+            let mut common = if idxs.len() >= 2 {
+                let head = &lanes[idxs[0]].1;
+                let mut c = head.len();
+                for &i in &idxs[1..] {
+                    c = head
+                        .iter()
+                        .zip(&lanes[i].1)
+                        .take(c)
+                        .take_while(|(a, b)| a.0 == b.0 && a.1 == b.1)
+                        .count();
+                }
+                c
+            } else {
+                0
+            };
+            for &i in idxs {
+                let full = lanes[i]
+                    .1
+                    .iter()
+                    .take_while(|s| s.2 == self.page_tokens)
+                    .count();
+                common = common.min(full);
+            }
+
+            if common > 0 {
+                let runs: Vec<(usize, usize)> = lanes[idxs[0]].1[..common]
+                    .iter()
+                    .map(|&(_, p, t)| (p, t))
+                    .collect();
+                let tokens = common * self.page_tokens;
+                let (k, v) = self.materialize_pages(&runs, tokens);
+                segments.push(SharedSegment {
+                    lanes: idxs.iter().map(|&i| lanes[i].0).collect(),
+                    start: 0,
+                    tokens,
+                    k,
+                    v,
+                });
+            }
+            for &i in idxs {
+                let (lane, sel) = (lanes[i].0, &lanes[i].1);
+                if sel.len() <= common {
+                    continue;
+                }
+                let runs: Vec<(usize, usize)> =
+                    sel[common..].iter().map(|&(_, p, t)| (p, t)).collect();
+                let tokens: usize = runs.iter().map(|r| r.1).sum();
+                let (k, v) = self.materialize_pages(&runs, tokens);
+                segments.push(SharedSegment {
+                    lanes: vec![lane],
+                    start: common * self.page_tokens,
+                    tokens,
+                    k,
+                    v,
+                });
+            }
+        }
+
+        let shared_bytes = segments.iter().map(|s| s.tokens * token_bytes).sum();
+        Ok(SharedGather {
+            segments,
+            batch: slots.len(),
+            layers: self.layers,
+            heads: self.heads,
+            head_dim: self.head_dim,
+            flat_bytes,
+            shared_bytes,
+        })
+    }
+
+    /// Copy an ordered run of `(page, tokens)` spans — not necessarily
+    /// contiguous in context space — into fresh packed
+    /// `[layers, heads, total, head_dim]` K/V buffers.
+    fn materialize_pages(
+        &self,
+        runs: &[(usize, usize)],
+        total: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let dh = self.head_dim;
+        let mut k = vec![0.0f32; self.layers * self.heads * total * dh];
+        let mut v = vec![0.0f32; k.len()];
+        let mut t0 = 0usize;
+        for &(page, count) in runs {
             for l in 0..self.layers {
                 for h in 0..self.heads {
                     let src = ((l * self.heads + h) * self.page_tokens) * dh;
-                    let dst = ((l * self.heads + h) * tokens + t0) * dh;
+                    let dst = ((l * self.heads + h) * total + t0) * dh;
                     k[dst..dst + count * dh]
                         .copy_from_slice(&self.k_pages[page][src..src + count * dh]);
                     v[dst..dst + count * dh]
                         .copy_from_slice(&self.v_pages[page][src..src + count * dh]);
                 }
             }
+            t0 += count;
         }
+        debug_assert_eq!(t0, total);
         (k, v)
+    }
+
+    /// Copy `tokens` tokens spanning `pages` (first token at the first
+    /// page's first slot) into a fresh `[layers, heads, tokens, head_dim]`
+    /// pair of K/V buffers — the contiguous special case of
+    /// [`Self::materialize_pages`].
+    fn materialize_run(&self, pages: &[usize], tokens: usize) -> (Vec<f32>, Vec<f32>) {
+        let runs: Vec<(usize, usize)> = pages
+            .iter()
+            .enumerate()
+            .take_while(|(pi, _)| pi * self.page_tokens < tokens)
+            .map(|(pi, &p)| (p, self.page_tokens.min(tokens - pi * self.page_tokens)))
+            .collect();
+        self.materialize_pages(&runs, tokens)
     }
 
     /// Truncate a live sequence to `new_len` tokens — the speculative-
@@ -505,6 +799,24 @@ impl PagedKvCache {
         for p in dropped {
             // A sequence's pages are live by construction.
             self.release_page(p)?;
+        }
+        // Shrink the kept tail page's statistics to the surviving rows
+        // when this sequence is its only holder. A still-shared tail
+        // keeps its wider bounds — the sibling reads those rows, and
+        // this sequence's next append copy-on-writes (or lazily repairs
+        // an exclusive page) before overwriting anything.
+        let tail_rows = new_len % self.page_tokens;
+        if tail_rows != 0 {
+            let tail = *self
+                .seqs
+                .get(&id)
+                .expect("sequence checked above")
+                .pages
+                .last()
+                .expect("a partial tail implies at least one kept page");
+            if self.ref_counts[tail] == 1 && self.meta[tail].filled() > tail_rows {
+                self.meta[tail] = self.recompute_page_meta(tail, tail_rows);
+            }
         }
         Ok(released)
     }
@@ -1195,5 +1507,182 @@ mod tests {
         assert!(err.to_string().contains("double free"));
         assert!(c.retain_page(page).is_err(), "cannot retain a free page");
         assert_eq!(c.free_pages(), 2, "free list not corrupted");
+    }
+
+    #[test]
+    fn token_k_reads_one_cached_key_plane() {
+        let mut c = cache(); // 2 layers, 3 heads, dh 4, page 8
+        let mut rng = Rng::new(51);
+        let len = 11;
+        let k = rows(&mut rng, 2, 3, len, 4);
+        let v = rows(&mut rng, 2, 3, len, 4);
+        c.insert_seq(1, &k, &v, len).unwrap();
+        let t = 9; // second page
+        let plane = c.token_k(1, t).unwrap();
+        for l in 0..2 {
+            for h in 0..3 {
+                let src = (l * 3 + h) * len * 4 + t * 4;
+                let dst = (l * 3 + h) * 4;
+                assert_eq!(&plane[dst..dst + 4], &k[src..src + 4]);
+            }
+        }
+        assert!(c.token_k(1, len).is_none(), "past the end");
+        assert!(c.token_k(9, 0).is_none(), "unknown sequence");
+    }
+
+    #[test]
+    fn page_meta_tracks_inserts_appends_and_cow() {
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 6);
+        let mut rng = Rng::new(52);
+        let len = 6; // page 0 full, page 1 half
+        let k = rows(&mut rng, 1, 1, len, 2);
+        let v = rows(&mut rng, 1, 1, len, 2);
+        c.insert_seq(1, &k, &v, len).unwrap();
+        c.validate_page_meta().unwrap();
+        let pages: Vec<usize> = c.seq_pages(1).unwrap().to_vec();
+        assert_eq!(c.page_meta(pages[0]).filled(), 4);
+        assert_eq!(c.page_meta(pages[1]).filled(), 2);
+        // Bounds match the written rows exactly.
+        let m0 = c.page_meta(pages[0]);
+        let lo = k[..4 * 2].chunks(2).map(|r| r[0]).fold(f32::INFINITY, f32::min);
+        assert_eq!(m0.k_min()[0], lo);
+
+        // A shared partial tail: the COW clone's statistics cover exactly
+        // the cloning holder's view, the original is untouched.
+        c.fork_seq(1, 2).unwrap();
+        let cow = c
+            .append_token(1, &rng.normal_vec(2), &rng.normal_vec(2))
+            .unwrap();
+        assert!(cow);
+        c.validate_page_meta().unwrap();
+        let new_tail = *c.seq_pages(1).unwrap().last().unwrap();
+        assert_ne!(new_tail, pages[1]);
+        assert_eq!(c.page_meta(new_tail).filled(), 3);
+        assert_eq!(c.page_meta(pages[1]).filled(), 2, "sibling's stats intact");
+
+        c.free_seq(1);
+        c.free_seq(2);
+        assert_eq!(c.free_pages(), 6);
+    }
+
+    #[test]
+    fn page_meta_shrinks_on_truncate_and_repairs_lazily() {
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 6);
+        let mut rng = Rng::new(53);
+        let len = 6;
+        let k = rows(&mut rng, 1, 1, len, 2);
+        let v = rows(&mut rng, 1, 1, len, 2);
+        c.insert_seq(1, &k, &v, len).unwrap();
+        let tail = *c.seq_pages(1).unwrap().last().unwrap();
+
+        // Exclusive truncate shrinks the tail statistics immediately.
+        c.truncate_seq(1, 5).unwrap();
+        assert_eq!(c.page_meta(tail).filled(), 1);
+        c.validate_page_meta().unwrap();
+
+        // Shared truncate cannot shrink (the sibling still reads the
+        // rows); the next append repairs before overwriting.
+        c.append_token(1, &rng.normal_vec(2), &rng.normal_vec(2)).unwrap();
+        c.fork_seq(1, 2).unwrap();
+        c.truncate_seq(1, 5).unwrap();
+        assert_eq!(c.page_meta(tail).filled(), 2, "shared stats stay wide");
+        c.validate_page_meta().unwrap();
+        c.free_seq(2); // tail becomes exclusive again, stats still wide
+        assert!(
+            c.append_token(1, &rng.normal_vec(2), &rng.normal_vec(2)).is_ok()
+        );
+        assert_eq!(c.page_meta(tail).filled(), 2, "repair happened at slot 1");
+        c.validate_page_meta().unwrap();
+
+        c.free_seq(1);
+        assert_eq!(c.free_pages(), 6);
+    }
+
+    #[test]
+    fn gather_selected_full_selection_matches_dense_gather() {
+        let mut c = cache();
+        let mut rng = Rng::new(54);
+        let k = rows(&mut rng, 2, 3, 16, 4);
+        let v = rows(&mut rng, 2, 3, 16, 4);
+        c.insert_seq(1, &k, &v, 16).unwrap();
+        let shared: Vec<usize> = c.seq_pages(1).unwrap().to_vec();
+        let ks = rows(&mut rng, 2, 3, 5, 4);
+        let vs = rows(&mut rng, 2, 3, 5, 4);
+        c.insert_seq_shared(2, &shared, &ks, &vs, 5).unwrap();
+
+        let slots = [Some(1), Some(2)];
+        let full: Vec<Vec<usize>> = vec![vec![0, 1], vec![0, 1, 2]];
+        let ctx = 24;
+        let n = 2 * 2 * 3 * ctx * 4;
+        let (mut kf, mut vf) = (vec![0.0; n], vec![0.0; n]);
+        c.gather(&slots, ctx, &mut kf, &mut vf).unwrap();
+        let sg = c.gather_selected(&slots, &full).unwrap();
+        let (mut ks2, mut vs2) = (vec![1.0; n], vec![1.0; n]);
+        sg.compose_dense(ctx, &mut ks2, &mut vs2).unwrap();
+        assert_eq!(kf, ks2, "full selection must reproduce the dense view");
+        assert_eq!(vf, vs2);
+        // The shared 2-page prefix still dedups: one 16-token segment.
+        assert!(sg.segments.iter().any(|s| s.lanes.len() == 2 && s.tokens == 16));
+        let sg_dense = c.gather_shared(&slots).unwrap();
+        assert_eq!(sg.flat_bytes, sg_dense.flat_bytes);
+        assert_eq!(sg.shared_bytes, sg_dense.shared_bytes);
+    }
+
+    #[test]
+    fn gather_selected_prunes_middle_pages_and_packs_the_rest() {
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 8);
+        let mut rng = Rng::new(55);
+        let len = 12; // 3 full pages
+        let k = rows(&mut rng, 1, 1, len, 2);
+        let v = rows(&mut rng, 1, 1, len, 2);
+        c.insert_seq(1, &k, &v, len).unwrap();
+
+        let sg = c.gather_selected(&[Some(1)], &[vec![0, 2]]).unwrap();
+        assert!(sg.shared_bytes < sg.flat_bytes, "pruning must shed bytes");
+        let token_bytes = c.page_bytes() / c.page_tokens;
+        assert_eq!(sg.flat_bytes, 12 * token_bytes);
+        assert_eq!(sg.shared_bytes, 8 * token_bytes);
+
+        let ctx = 8;
+        let n = ctx * 2;
+        let (mut ko, mut vo) = (vec![1.0; n], vec![1.0; n]);
+        sg.compose_dense(ctx, &mut ko, &mut vo).unwrap();
+        // Packed view: tokens 0..4 then 8..12, back to back.
+        assert_eq!(&ko[..4 * 2], &k[..4 * 2]);
+        assert_eq!(&ko[4 * 2..8 * 2], &k[8 * 2..12 * 2]);
+
+        // Selections must be ascending, in range, and non-empty per page.
+        assert!(c.gather_selected(&[Some(1)], &[vec![2, 0]]).is_err());
+        assert!(c.gather_selected(&[Some(1)], &[vec![3]]).is_err());
+        c.free_seq(1);
+    }
+
+    #[test]
+    fn gather_selected_shares_the_selected_sink_run_across_lanes() {
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 12);
+        let mut rng = Rng::new(56);
+        let k = rows(&mut rng, 1, 1, 8, 2);
+        let v = rows(&mut rng, 1, 1, 8, 2);
+        c.insert_seq(1, &k, &v, 8).unwrap(); // 2 full pages
+        let shared: Vec<usize> = c.seq_pages(1).unwrap().to_vec();
+        let ks = rows(&mut rng, 1, 1, 8, 2);
+        let vs = rows(&mut rng, 1, 1, 8, 2);
+        c.insert_seq_shared(2, &shared, &ks, &vs, 8).unwrap(); // 4 pages
+
+        // Both lanes keep the sink page 0 and their own tail; lane 2 also
+        // keeps ordinal 2. The common selected run is the sink page only.
+        let sels = vec![vec![0, 1], vec![0, 2, 3]];
+        let sg = c.gather_selected(&[Some(1), Some(2)], &sels).unwrap();
+        let sink = sg
+            .segments
+            .iter()
+            .find(|s| s.lanes.len() == 2)
+            .expect("shared sink segment");
+        assert_eq!((sink.start, sink.tokens), (0, 4));
+        let token_bytes = c.page_bytes() / c.page_tokens;
+        // 4 (sink, once) + 4 (lane 1 tail) + 8 (lane 2 ordinals 2,3).
+        assert_eq!(sg.shared_bytes, 16 * token_bytes);
+        c.free_seq(1);
+        c.free_seq(2);
     }
 }

@@ -40,6 +40,64 @@ impl PrefixCacheStats {
     }
 }
 
+/// Sparse page-selection counters (long-context decode).
+#[derive(Clone, Debug, Default)]
+pub struct SparseStats {
+    /// Decode steps that gathered through the selected-page sparse path.
+    pub selection_steps: usize,
+    /// Lanes whose context pages were actually scored (dense-threshold
+    /// bypasses excluded).
+    pub lanes_scored: usize,
+    /// Context pages considered across scored lanes.
+    pub pages_total: usize,
+    /// Pages the selections kept — what the step actually scanned.
+    pub pages_scanned: usize,
+    /// K+V bytes a dense gather would have materialized on sparse steps
+    /// (per lane, full context).
+    pub gather_bytes_dense: u64,
+    /// K+V bytes of the selected pages, counted per lane so the ratio
+    /// against `gather_bytes_dense` isolates pure selection — cascade
+    /// dedup of shared sink runs (which the dense path enjoys too) is
+    /// reported by the cascade gather counters, not here.
+    pub gather_bytes_sparse: u64,
+    /// Sum of per-lane score-mass coverage: the softmax-weighted share
+    /// of page upper-bound scores the selection retained (a proxy for
+    /// attention-mass coverage).
+    pub coverage_sum: f64,
+    /// Lanes contributing to `coverage_sum`.
+    pub coverage_samples: usize,
+}
+
+impl SparseStats {
+    /// Fold one scored lane's selection into the counters — the single
+    /// accounting both the engine and the bench harness use.
+    pub fn record_scored_lane(&mut self, scores: &[f32], selected: &[usize]) {
+        self.lanes_scored += 1;
+        self.pages_total += scores.len();
+        self.pages_scanned += selected.len();
+        self.coverage_sum += crate::sparse::score_coverage(scores, selected);
+        self.coverage_samples += 1;
+    }
+
+    /// Fraction of considered pages the selections kept.
+    pub fn scan_fraction(&self) -> f64 {
+        if self.pages_total == 0 {
+            1.0
+        } else {
+            self.pages_scanned as f64 / self.pages_total as f64
+        }
+    }
+
+    /// Mean score-mass coverage across scored lanes.
+    pub fn mean_coverage(&self) -> f64 {
+        if self.coverage_samples == 0 {
+            1.0
+        } else {
+            self.coverage_sum / self.coverage_samples as f64
+        }
+    }
+}
+
 /// Parallel-sampling (fork/prune) counters.
 #[derive(Clone, Debug, Default)]
 pub struct SamplingStats {
@@ -91,6 +149,8 @@ pub struct Metrics {
     pub sampling: SamplingStats,
     /// Speculative-decoding counters (draft-and-verify passes).
     pub spec: SpecStats,
+    /// Sparse page-selection counters (long-context decode).
+    pub sparse: SparseStats,
 }
 
 impl Metrics {
@@ -183,6 +243,28 @@ impl Metrics {
                 self.spec.drafted,
                 self.spec.acceptance_rate() * 100.0,
                 self.spec.rolled_back,
+            ));
+        }
+        if self.sparse.selection_steps > 0 {
+            let saved = if self.sparse.gather_bytes_dense > 0 {
+                100.0
+                    * (1.0
+                        - self.sparse.gather_bytes_sparse as f64
+                            / self.sparse.gather_bytes_dense as f64)
+            } else {
+                0.0
+            };
+            s.push_str(&format!(
+                "sparse selection: {} steps scanned {}/{} pages ({:.0}%), \
+                 {:.1} KiB gathered vs {:.1} KiB dense ({saved:.0}% saved), \
+                 mean coverage {:.2}\n",
+                self.sparse.selection_steps,
+                self.sparse.pages_scanned,
+                self.sparse.pages_total,
+                self.sparse.scan_fraction() * 100.0,
+                self.sparse.gather_bytes_sparse as f64 / 1024.0,
+                self.sparse.gather_bytes_dense as f64 / 1024.0,
+                self.sparse.mean_coverage(),
             ));
         }
         if let Some(sp) = self.projected_speedup() {
@@ -330,6 +412,33 @@ mod tests {
         assert!(rep.contains("4.00 tokens/pass"), "{rep}");
         assert!(rep.contains("15/20 drafts accepted (75%)"), "{rep}");
         assert!(rep.contains("5 draft KV rows rolled back"), "{rep}");
+    }
+
+    #[test]
+    fn sparse_stats_in_report_only_after_selection_steps() {
+        assert!(!Metrics::default().report().contains("sparse selection"));
+        let m = Metrics {
+            sparse: SparseStats {
+                selection_steps: 4,
+                lanes_scored: 4,
+                pages_total: 40,
+                pages_scanned: 10,
+                gather_bytes_dense: 8192,
+                gather_bytes_sparse: 2048,
+                coverage_sum: 3.8,
+                coverage_samples: 4,
+            },
+            ..Default::default()
+        };
+        assert!((m.sparse.scan_fraction() - 0.25).abs() < 1e-12);
+        assert!((m.sparse.mean_coverage() - 0.95).abs() < 1e-12);
+        let rep = m.report();
+        assert!(rep.contains("4 steps scanned 10/40 pages (25%)"), "{rep}");
+        assert!(rep.contains("75% saved"), "{rep}");
+        assert!(rep.contains("mean coverage 0.95"), "{rep}");
+        // Degenerate defaults are safe.
+        assert_eq!(SparseStats::default().scan_fraction(), 1.0);
+        assert_eq!(SparseStats::default().mean_coverage(), 1.0);
     }
 
     #[test]

@@ -34,7 +34,7 @@ pub mod router;
 
 pub use engine::{Engine, EngineConfig};
 pub use kv_cache::PagedKvCache;
-pub use metrics::{Metrics, PrefixCacheStats, SamplingStats};
+pub use metrics::{Metrics, PrefixCacheStats, SamplingStats, SparseStats};
 pub use radix::{PrefixMatch, RadixPrefixIndex};
 pub use request::{FinishReason, FinishedRequest, Request, RequestId};
 pub use router::Router;

@@ -21,8 +21,10 @@
 //!   batcher → radix prefix cache → copy-on-write paged KV cache →
 //!   stream-K attention with Rust-side reduction), [`sampling`] the
 //!   deterministic logits pipeline plus parallel-sampling controllers,
-//!   and [`spec`] speculative decoding (draft-and-verify over the
-//!   multi-query lean pass, bit-identical to sequential decoding).
+//!   [`spec`] speculative decoding (draft-and-verify over the
+//!   multi-query lean pass, bit-identical to sequential decoding), and
+//!   [`sparse`] page-granular top-k KV selection for long-context decode
+//!   (score → select → gather → lean over a pruned page set).
 //!
 //! Quick start (after `make artifacts`):
 //!
@@ -45,6 +47,7 @@ pub mod partition;
 pub mod runtime;
 pub mod sampling;
 pub mod sim;
+pub mod sparse;
 pub mod spec;
 pub mod util;
 

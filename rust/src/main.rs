@@ -130,6 +130,13 @@ commands:
            [--beam-width W] [--expand E]   sampled beam search over forks
            [--spec-k K] [--draft ngram|model]   speculative decoding: K
                                     drafts verified per multi-token pass
+           [--adaptive-spec]        size each sequence's draft from its
+                                    running acceptance rate (EWMA)
+           [--kv-budget P]          sparse long-context decode: stream only
+                                    P selected pages of each context per step
+           [--sink-pages S] [--window-pages W] [--dense-threshold T]
+                                    always-retained sinks/recency window and
+                                    the page count below which decode is dense
   simulate --batch B --heads H --ctx N [--head-dim 64] [--arch a100]
            [--shared-prefix N]      add the cascade row: batch shares an
                                     N-token prefix, streamed once per group
@@ -137,6 +144,10 @@ commands:
                                     sharing the ctx as history, M decode steps
            [--spec-k K] [--acceptance A]   model a verify pass of K drafts
                                     vs E(A, K) sequential decode steps
+           [--sparse-budget P] [--page 16] [--sink-pages S]
+           [--window-pages W] [--mass-alpha 0.85]
+                                    model a P-page selection: bytes saved +
+                                    attention-mass coverage vs dense
   bench    --cascade-exec [--batch 4] [--prefix 256] [--suffix 64]
            [--heads 2] [--head-dim 16] [--tile 32] [--slots 64] [--iters 10]
                                     flat-lean vs cascade execution: gathered
@@ -149,6 +160,10 @@ commands:
                                     speculative decoding: stream equality vs
                                     the sequential oracle, one multi-query
                                     verify pass vs k+1 decode steps, rollback
+  bench    --sparse [--kv-budget 6] [--context 256] [--seqs 2] [--smoke]
+                                    sparse page selection: gathered-KV bytes
+                                    vs dense, needle recall, executor
+                                    exactness, full-budget stream equality
            (every bench takes [--seed N] for run-to-run reproducibility)
   plan     --batch B --heads H --ctx N [--slots 216]
   figures  [table1|fig01|fig02|fig03|fig07|fig08|fig09|fig10|fig11|fig12|fig13|all]
@@ -193,6 +208,22 @@ fn serve(args: &Args) -> Result<()> {
     let spec_k = args.usize("spec-k", 0);
     let spec_draft = lean_attention::spec::DraftKind::parse(&args.str("draft", "ngram"))
         .ok_or_else(|| anyhow::anyhow!("unknown --draft (ngram|model)"))?;
+    let adaptive_spec = args.has("adaptive-spec");
+
+    // Sparse long-context decode: a page budget turns on query-aware
+    // top-k page selection over the paged cache.
+    let kv_budget = args.usize("kv-budget", 0);
+    let sparse = if kv_budget > 0 {
+        let mut p = lean_attention::sparse::SparsePolicy::with_budget(kv_budget);
+        p.sink_pages = args.usize("sink-pages", p.sink_pages);
+        p.window_pages = args.usize("window-pages", p.window_pages);
+        p.dense_threshold_pages =
+            args.usize("dense-threshold", p.dense_threshold_pages);
+        p.validate()?;
+        Some(p)
+    } else {
+        None
+    };
 
     // Sampling pipeline: greedy unless a temperature is given; parallel
     // sampling needs a stochastic sampler, so it defaults to 0.8.
@@ -217,6 +248,8 @@ fn serve(args: &Args) -> Result<()> {
             seed,
             spec_k,
             spec_draft,
+            adaptive_spec,
+            sparse,
             ..Default::default()
         },
     )?;
@@ -226,11 +259,19 @@ fn serve(args: &Args) -> Result<()> {
         engine.ctx_bucket(),
         engine.prefill_bucket()
     );
+    if let Some(p) = &sparse {
+        println!(
+            "sparse decode on: {} of each context's pages per step \
+             ({} sink + {} window retained), dense at <= {} pages",
+            p.budget_pages, p.sink_pages, p.window_pages, p.dense_threshold_pages
+        );
+    }
     if spec_k > 0 {
         if engine.spec_enabled() {
             println!(
-                "speculative decoding on: k={spec_k}, draft={spec_draft} \
+                "speculative decoding on: k={spec_k}{}, draft={spec_draft} \
                  (1..={} tokens committed per verify pass)",
+                if adaptive_spec { " (acceptance-adaptive)" } else { "" },
                 spec_k + 1
             );
         } else {
@@ -428,6 +469,42 @@ fn simulate_cmd(args: &Args) -> Result<()> {
         );
     }
 
+    // Optional sparse-selection row: each sequence streams only a page
+    // budget of its ctx, priced against the dense step.
+    let sparse_budget = args.usize("sparse-budget", 0);
+    if sparse_budget > 0 {
+        use lean_attention::sim::{simulate_sparse_decode, SparseDecodeCase};
+        use lean_attention::sparse::SparsePolicy;
+        let mut policy = SparsePolicy::with_budget(sparse_budget);
+        policy.sink_pages = args.usize("sink-pages", policy.sink_pages);
+        policy.window_pages = args.usize("window-pages", policy.window_pages);
+        policy.validate()?;
+        let case = SparseDecodeCase {
+            batch,
+            heads,
+            head_dim,
+            ctx,
+            page_tokens: args.usize("page", 16),
+            policy,
+            mass_alpha: args.f64("mass-alpha", 0.85),
+        };
+        let r = simulate_sparse_decode(&case, &arch);
+        println!(
+            "\nsparse decode (budget {} of {} pages): {:.1}us vs {:.1}us dense \
+             ({:.2}x), KV {:.1} MiB vs {:.1} MiB ({:.0}% saved), modeled \
+             attention-mass coverage {:.2}",
+            r.pages_selected,
+            r.pages_total,
+            r.sparse_us,
+            r.dense_us,
+            r.speedup(),
+            r.sparse_kv_bytes / (1024.0 * 1024.0),
+            r.dense_kv_bytes / (1024.0 * 1024.0),
+            r.bytes_saved_fraction() * 100.0,
+            r.coverage,
+        );
+    }
+
     // Optional fork-family row: N siblings share the full ctx as their
     // fork-point history and decode M divergent tokens.
     let fork_n = args.usize("fork-n", 0);
@@ -467,11 +544,15 @@ fn bench_cmd(args: &Args) -> Result<()> {
     if args.has("spec") {
         return bench_spec(args, seed);
     }
+    if args.has("sparse") {
+        return bench_sparse(args, seed);
+    }
     anyhow::ensure!(
         args.has("cascade-exec"),
         "usage: leanattn bench --cascade-exec [--batch 4] [--prefix 256] ...\n       \
          leanattn bench --sampling [--n 4] [--history 256] [--suffix 64] [--smoke]\n       \
-         leanattn bench --spec [--k 4] [--draft ngram|model] [--smoke]"
+         leanattn bench --spec [--k 4] [--draft ngram|model] [--smoke]\n       \
+         leanattn bench --sparse [--kv-budget 6] [--context 256] [--smoke]"
     );
     let case = ExecCase {
         batch: args.usize("batch", 4),
@@ -605,6 +686,143 @@ fn bench_sampling(args: &Args, seed: u64) -> Result<()> {
             c.attention.max_err
         );
     }
+    Ok(())
+}
+
+/// `leanattn bench --sparse`: dense vs sparse-selected decode on the
+/// paged KV cache (host pseudo-decode loop — no artifacts needed).
+/// Asserts, on every run: strictly fewer gathered-KV bytes at
+/// sub-context budgets, needle-page recall 1.0 on the planted workload,
+/// the sparse lean executor agreeing with the dense oracle restricted to
+/// the selected pages, and bit-identical streams (tokens, logprobs, RNG
+/// trajectory) once the budget covers the context.
+fn bench_sparse(args: &Args, seed: u64) -> Result<()> {
+    use lean_attention::bench_harness::{compare_sparse, SparseBenchCase};
+    use lean_attention::sparse::SparsePolicy;
+
+    let smoke = args.has("smoke");
+    let base = if smoke {
+        SparseBenchCase::smoke()
+    } else {
+        SparseBenchCase::default_case()
+    };
+    let policy = SparsePolicy {
+        budget_pages: args.usize("kv-budget", base.policy.budget_pages),
+        sink_pages: args.usize("sink-pages", base.policy.sink_pages),
+        window_pages: args.usize("window-pages", base.policy.window_pages),
+        dense_threshold_pages: args
+            .usize("dense-threshold", base.policy.dense_threshold_pages),
+    };
+    policy.validate()?;
+    let case = SparseBenchCase {
+        seqs: args.usize("seqs", base.seqs),
+        context: args.usize("context", base.context),
+        steps: args.usize("steps", base.steps),
+        heads: args.usize("heads", base.heads),
+        head_dim: args.usize("head-dim", base.head_dim),
+        page_tokens: args.usize("page", base.page_tokens),
+        vocab: args.usize("vocab", base.vocab),
+        tile: args.usize("tile", base.tile),
+        policy,
+        needle_page: args.usize("needle-page", base.needle_page),
+    };
+    let iters = args.usize("iters", if smoke { 2 } else { 10 });
+    let pages = case.context.div_ceil(case.page_tokens);
+    println!(
+        "sparse: {} seqs x {} tokens ({pages} pages), budget {} \
+         (sink {} + window {}), {} steps, {} heads x d{}",
+        case.seqs,
+        case.context,
+        case.policy.budget_pages,
+        case.policy.sink_pages,
+        case.policy.window_pages,
+        case.steps,
+        case.heads,
+        case.head_dim
+    );
+
+    let c = compare_sparse(case, iters, seed)?;
+    println!(
+        "gather  dense:  {:>10.1} KiB over the run, p50 {:>9.1}us/step",
+        c.dense.gathered_bytes as f64 / 1024.0,
+        c.dense_us.p50
+    );
+    println!(
+        "gather  sparse: {:>10.1} KiB over the run, p50 {:>9.1}us/step  \
+         ({:.1}% bytes saved, {:.2}x)",
+        c.sparse.gathered_bytes as f64 / 1024.0,
+        c.sparse_us.p50,
+        c.bytes_saved_fraction() * 100.0,
+        c.dense_us.p50 / c.sparse_us.p50
+    );
+    println!(
+        "selection: {} steps scanned {}/{} pages, mean coverage {:.2}, \
+         needle recall {:.2}",
+        c.sparse.stats.selection_steps,
+        c.sparse.stats.pages_scanned,
+        c.sparse.stats.pages_total,
+        c.sparse.stats.mean_coverage(),
+        c.needle_recall()
+    );
+    println!(
+        "executor: sparse lean vs dense-oracle-on-selected-pages \
+         max err {:.2e}",
+        c.exec_max_err
+    );
+    // The strict sub-context assertions only apply when selection can
+    // actually prune: a budget below the context that the dense
+    // threshold does not bypass.
+    let prunable =
+        case.policy.budget_pages < pages && pages > case.policy.dense_threshold_pages;
+    if prunable {
+        anyhow::ensure!(
+            c.sparse.stats.lanes_scored > 0,
+            "selection never engaged on a prunable shape"
+        );
+        anyhow::ensure!(
+            c.sparse.gathered_bytes < c.dense.gathered_bytes,
+            "sub-context budget must gather strictly fewer KV bytes \
+             ({} vs {})",
+            c.sparse.gathered_bytes,
+            c.dense.gathered_bytes
+        );
+        anyhow::ensure!(
+            (c.needle_recall() - 1.0).abs() < 1e-12,
+            "selection dropped the needle page (recall {})",
+            c.needle_recall()
+        );
+    } else {
+        println!(
+            "(budget or dense threshold covers the {pages}-page context — \
+             sub-context assertions skipped)"
+        );
+    }
+    anyhow::ensure!(
+        c.exec_max_err < 1e-3,
+        "sparse executor diverged from the restricted dense oracle: {}",
+        c.exec_max_err
+    );
+
+    // Full-budget twin: the sparse machinery with a covering budget must
+    // reproduce the dense stream bit-for-bit.
+    let mut full = case;
+    full.policy.budget_pages = full.pages_cap() + 1;
+    full.policy.dense_threshold_pages = 0;
+    let cf = compare_sparse(full, 1, seed)?;
+    anyhow::ensure!(
+        cf.streams_equal(),
+        "covering budget must be bit-identical to dense decode"
+    );
+    anyhow::ensure!(
+        cf.sparse.gathered_bytes == cf.dense.gathered_bytes,
+        "covering budget must gather exactly the dense bytes"
+    );
+    println!(
+        "full budget ({} pages): streams bit-identical to dense \
+         (tokens, logprobs, RNG trajectory), {} KiB either way",
+        full.policy.budget_pages,
+        cf.dense.gathered_bytes / 1024
+    );
     Ok(())
 }
 

@@ -45,6 +45,11 @@ pub struct ModelArtifact {
     pub prefill_bucket: usize,
     pub batch: usize,
     pub param_count: usize,
+    /// Rotary base of the model's position embedding (the sparse decode
+    /// path re-rotates fresh K rows from compacted to true positions
+    /// with it). Manifests from before this field default to the python
+    /// layer's `ModelConfig.rope_base` default.
+    pub rope_base: f64,
     pub decode_file: String,
     pub prefill_file: String,
     /// Multi-token verify step for speculative decoding (absent in
@@ -129,6 +134,10 @@ impl Manifest {
                         prefill_bucket: cfg.usize_at("prefill_bucket"),
                         batch: cfg.usize_at("batch"),
                         param_count: cfg.usize_at("param_count"),
+                        rope_base: cfg
+                            .get("rope_base")
+                            .and_then(|v| v.as_f64())
+                            .unwrap_or(10_000.0),
                         decode_file: m.at("decode").str_at("file").to_string(),
                         prefill_file: m.at("prefill").str_at("file").to_string(),
                         verify_file: m

@@ -22,6 +22,7 @@ use crate::partition::cascade::{
 };
 use crate::partition::multi_query::{MultiQueryInputs, MultiQueryProblem};
 use crate::partition::plan::Plan;
+use crate::sparse::selected_token_indices;
 
 use super::artifacts::{AttentionKind, Manifest};
 use super::client::{Executable, Runtime};
@@ -278,6 +279,36 @@ impl AttentionExecutor {
         })
     }
 
+    /// Sparse lean attention through the PJRT partial artifact: each
+    /// sequence's context is restricted to its **selected pages**
+    /// ([`crate::sparse::select_pages`] ordinals over `page_tokens`-token
+    /// pages), compacted in context order, and executed through the same
+    /// task-rolling + fold driver as [`Self::lean_cascade`]. Exact over
+    /// the selected rows by the same associativity argument as every
+    /// other lean path; a selection covering every page reproduces the
+    /// dense lean result. Returns `(o: [batch*heads, d], lse)` in the
+    /// input row layout.
+    #[allow(clippy::too_many_arguments)]
+    pub fn lean_sparse(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        lens: &[u32],
+        heads: usize,
+        n: usize,
+        d: usize,
+        page_tokens: usize,
+        selections: &[Vec<usize>],
+        tile: usize,
+        sm_slots: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (cp, t) =
+            sparse_compact_problem(q, k, v, lens, heads, n, d, page_tokens, selections, tile)?;
+        let cplan = build_cascade_plan(&cp, sm_slots);
+        self.lean_cascade(&cp, &t, &cplan)
+    }
+
     /// Multi-query lean attention — the speculative-decoding verify
     /// pass: `q_len` query rows per sequence (pending token + drafts,
     /// causal within the block) served by **one** walk of each cached
@@ -310,6 +341,90 @@ pub fn lean_multi_query_host(
     batch_rows: usize,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
     let (cp, t) = problem.tensors(inputs)?;
+    let cplan = build_cascade_plan(&cp, sm_slots);
+    Ok(lean_cascade_host(&cp, &t, &cplan, batch_rows))
+}
+
+/// Pose the flat compacted problem a sparse page selection describes:
+/// sequence `s`'s `[heads, n, d]` KV rows (inside the dense
+/// `[batch*heads, n, d]` layout, valid up to `lens[s]`) restricted to the
+/// token spans of its selected page ordinals, packed in context order.
+/// The result is a group-free [`CascadeProblem`] over the compacted
+/// lengths — the dense oracle restricted to the same pages is exact
+/// attention over these tensors.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_compact_problem(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    lens: &[u32],
+    heads: usize,
+    n: usize,
+    d: usize,
+    page_tokens: usize,
+    selections: &[Vec<usize>],
+    tile: usize,
+) -> Result<(CascadeProblem, CascadeTensors)> {
+    let batch = lens.len();
+    anyhow::ensure!(selections.len() == batch, "one selection per sequence");
+    anyhow::ensure!(q.len() == batch * heads * d, "q shape");
+    anyhow::ensure!(k.len() == batch * heads * n * d, "k shape");
+    anyhow::ensure!(v.len() == k.len(), "v shape");
+    let mut ctx_lens = Vec::with_capacity(batch);
+    let mut k_suffix = Vec::with_capacity(batch);
+    let mut v_suffix = Vec::with_capacity(batch);
+    for (s, selection) in selections.iter().enumerate() {
+        let idx = selected_token_indices(lens[s] as usize, page_tokens, selection);
+        let sel_len = idx.len();
+        let mut ks = vec![0.0f32; heads * sel_len * d];
+        let mut vs = vec![0.0f32; ks.len()];
+        for h in 0..heads {
+            let row = (s * heads + h) * n;
+            for (j, &t) in idx.iter().enumerate() {
+                anyhow::ensure!(t < n, "selected token {t} outside the KV view");
+                let src = (row + t) * d;
+                let dst = (h * sel_len + j) * d;
+                ks[dst..dst + d].copy_from_slice(&k[src..src + d]);
+                vs[dst..dst + d].copy_from_slice(&v[src..src + d]);
+            }
+        }
+        ctx_lens.push(sel_len as u32);
+        k_suffix.push(ks);
+        v_suffix.push(vs);
+    }
+    let cp = CascadeProblem::new(heads, ctx_lens, d, Vec::new())?.with_tile(tile);
+    let t = CascadeTensors {
+        q: q.to_vec(),
+        k_shared: Vec::new(),
+        v_shared: Vec::new(),
+        k_suffix,
+        v_suffix,
+    };
+    Ok((cp, t))
+}
+
+/// Artifact-free twin of [`AttentionExecutor::lean_sparse`]: the same
+/// compaction and driver over the host partial oracle. The tier-1
+/// property tests drive this against dense exact attention restricted to
+/// the selected pages (`rust/tests/sparse_props.rs`) — the oracle half of
+/// the engine's sparse decode gather.
+#[allow(clippy::too_many_arguments)]
+pub fn lean_sparse_host(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    lens: &[u32],
+    heads: usize,
+    n: usize,
+    d: usize,
+    page_tokens: usize,
+    selections: &[Vec<usize>],
+    tile: usize,
+    sm_slots: usize,
+    batch_rows: usize,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let (cp, t) =
+        sparse_compact_problem(q, k, v, lens, heads, n, d, page_tokens, selections, tile)?;
     let cplan = build_cascade_plan(&cp, sm_slots);
     Ok(lean_cascade_host(&cp, &t, &cplan, batch_rows))
 }

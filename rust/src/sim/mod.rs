@@ -14,6 +14,7 @@ pub mod cascade;
 pub mod cost;
 pub mod sampling;
 pub mod schedule;
+pub mod sparse;
 pub mod spec;
 pub mod timeshare;
 
@@ -22,6 +23,7 @@ pub use cascade::{simulate_cascade, CascadeSimResult};
 pub use cost::TileCost;
 pub use sampling::{simulate_fork_decode, ForkDecodeCase, ForkDecodeResult};
 pub use schedule::{simulate, simulate_plan, SimResult};
+pub use sparse::{simulate_sparse_decode, SparseDecodeCase, SparseSimResult};
 pub use spec::{
     expected_tokens_per_pass, simulate_spec_decode, SpecDecodeCase, SpecSimResult,
 };

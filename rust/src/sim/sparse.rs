@@ -1,0 +1,226 @@
+//! Sparse-selection decode simulation: bytes saved and attention-mass
+//! coverage vs page budget.
+//!
+//! The sparse subsystem's bargain is bytes-for-coverage: a decode step
+//! that streams `budget` of `P` context pages reads a `budget / P`
+//! fraction of the dense KV traffic but only covers whatever attention
+//! mass those pages hold. This model prices both sides: the pruned
+//! stream runs through the same stream-K schedule simulator as every
+//! dense figure (so latency and occupancy follow the paper's execution
+//! model), while coverage follows the standard long-context shape —
+//! attention sinks and the recency window hold fixed shares of the mass,
+//! and the middle pages' mass decays geometrically by relevance rank,
+//! which a sound upper-bound selector recovers top-first. `leanattn
+//! simulate --sparse-budget` renders this trade-off.
+
+use crate::partition::plan::{DecodeProblem, Strategy};
+use crate::sparse::SparsePolicy;
+
+use super::arch::GpuArch;
+use super::cost::kv_stream_bytes;
+use super::schedule::simulate;
+
+/// Attention-mass share held by the sink pages (fixed, per the
+/// attention-sink literature) when selection engages.
+const SINK_MASS: f64 = 0.3;
+/// Attention-mass share held by the recency window.
+const WINDOW_MASS: f64 = 0.2;
+
+/// One sparse-decode modeling case.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseDecodeCase {
+    pub batch: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Context tokens per sequence.
+    pub ctx: usize,
+    pub page_tokens: usize,
+    pub policy: SparsePolicy,
+    /// Geometric decay of middle-page attention mass by relevance rank
+    /// (in `(0, 1)`; smaller = more concentrated = easier to cover).
+    pub mass_alpha: f64,
+}
+
+/// Modeled outcome of one sparse-vs-dense decode step.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseSimResult {
+    /// Modeled attention latency of the dense step (us).
+    pub dense_us: f64,
+    /// Modeled attention latency over the selected pages only (us).
+    pub sparse_us: f64,
+    /// HBM KV bytes the dense step streams.
+    pub dense_kv_bytes: f64,
+    /// HBM KV bytes the selected pages stream.
+    pub sparse_kv_bytes: f64,
+    /// Modeled attention-mass coverage of the selection, `(0, 1]`.
+    pub coverage: f64,
+    /// Context pages per sequence.
+    pub pages_total: usize,
+    /// Pages each sequence streams under the policy.
+    pub pages_selected: usize,
+}
+
+impl SparseSimResult {
+    pub fn speedup(&self) -> f64 {
+        if self.sparse_us <= 0.0 {
+            return 1.0;
+        }
+        self.dense_us / self.sparse_us
+    }
+
+    /// Fraction of dense KV traffic the selection avoids.
+    pub fn bytes_saved_fraction(&self) -> f64 {
+        if self.dense_kv_bytes <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.sparse_kv_bytes / self.dense_kv_bytes
+    }
+}
+
+/// Model one decode step of `case` on `arch`, dense vs selected pages.
+pub fn simulate_sparse_decode(case: &SparseDecodeCase, arch: &GpuArch) -> SparseSimResult {
+    let pages = case.ctx.div_ceil(case.page_tokens).max(1);
+    let p = &case.policy;
+    // The selected-page count comes from the policy itself
+    // ([`SparsePolicy::effective_pages`]) — the same arithmetic the real
+    // selector runs, so model and selector cannot drift.
+    let selected = p.effective_pages(pages);
+    let coverage = if selected >= pages {
+        1.0
+    } else {
+        let (sink, window) = p.retention(pages);
+        let k = (selected - sink - window) as i32;
+        let middle = (pages - sink - window) as i32;
+        let a = case.mass_alpha.clamp(1e-6, 1.0 - 1e-9);
+        // Share of the middle mass the top-k relevance ranks hold.
+        let covered_middle = (1.0 - a.powi(k)) / (1.0 - a.powi(middle));
+        SINK_MASS + WINDOW_MASS + (1.0 - SINK_MASS - WINDOW_MASS) * covered_middle
+    };
+    // Selected token count: with a retained window the partial tail (if
+    // any) survives and every pruned page is a full middle page; with
+    // `window_pages == 0` the tail is an ordinary middle candidate, and
+    // this model — whose upper-bound selector has no recency term —
+    // prices it as pruned, so every selected page is full.
+    let (_, window) = p.retention(pages);
+    let partial = case.ctx % case.page_tokens;
+    let sel_tokens = if selected >= pages {
+        case.ctx
+    } else if window >= 1 || partial == 0 {
+        case.ctx - (pages - selected) * case.page_tokens
+    } else {
+        (selected * case.page_tokens).min(case.ctx)
+    };
+
+    let dense_p = DecodeProblem::uniform(case.batch, case.heads, case.ctx, case.head_dim);
+    let sparse_p =
+        DecodeProblem::uniform(case.batch, case.heads, sel_tokens, case.head_dim);
+    let dense = simulate(&dense_p, Strategy::StreamK, arch);
+    let sparse = simulate(&sparse_p, Strategy::StreamK, arch);
+    SparseSimResult {
+        dense_us: dense.latency_us,
+        sparse_us: sparse.latency_us,
+        dense_kv_bytes: kv_stream_bytes(dense_p.total_tiles(), dense_p.tile, case.head_dim),
+        sparse_kv_bytes: kv_stream_bytes(
+            sparse_p.total_tiles(),
+            sparse_p.tile,
+            case.head_dim,
+        ),
+        coverage,
+        pages_total: pages,
+        pages_selected: selected,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn case(ctx: usize, budget: usize) -> SparseDecodeCase {
+        SparseDecodeCase {
+            batch: 4,
+            heads: 32,
+            head_dim: 64,
+            ctx,
+            page_tokens: 16,
+            policy: SparsePolicy::with_budget(budget),
+            mass_alpha: 0.85,
+        }
+    }
+
+    #[test]
+    fn sub_budget_streams_strictly_fewer_bytes_and_wins_latency() {
+        let arch = GpuArch::a100();
+        let r = simulate_sparse_decode(&case(524_288, 16), &arch);
+        assert!(r.sparse_kv_bytes < r.dense_kv_bytes);
+        assert!(r.bytes_saved_fraction() > 0.9, "{}", r.bytes_saved_fraction());
+        assert!(r.speedup() > 1.0, "speedup {}", r.speedup());
+        assert!(r.coverage > 0.5 && r.coverage < 1.0, "{}", r.coverage);
+        assert_eq!(r.pages_selected, 16);
+        assert_eq!(r.pages_total, 32_768);
+    }
+
+    #[test]
+    fn covering_budget_degenerates_to_dense() {
+        let arch = GpuArch::a100();
+        let pages = 4096 / 16;
+        let r = simulate_sparse_decode(&case(4096, pages), &arch);
+        assert_eq!(r.pages_selected, r.pages_total);
+        assert_eq!(r.coverage, 1.0);
+        assert!((r.sparse_kv_bytes - r.dense_kv_bytes).abs() < 1e-9);
+        assert!((r.speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coverage_and_bytes_are_monotone_in_the_budget() {
+        let arch = GpuArch::a100();
+        let mut last_cov = 0.0;
+        let mut last_bytes = 0.0;
+        for budget in [8usize, 32, 128, 512, 2048] {
+            let r = simulate_sparse_decode(&case(65_536, budget), &arch);
+            assert!(r.coverage >= last_cov, "coverage dipped at {budget}");
+            assert!(r.sparse_kv_bytes >= last_bytes, "bytes dipped at {budget}");
+            last_cov = r.coverage;
+            last_bytes = r.sparse_kv_bytes;
+        }
+    }
+
+    #[test]
+    fn windowless_policies_price_the_partial_tail_as_pruned() {
+        // ctx 1025 over 512-token pages (two full + a 1-token tail) with
+        // sink 1, window 0, budget 1: the selector keeps the full sink
+        // page and may drop the tail, so the model must count 512
+        // selected tokens (2 of the 5 dense 256-token LeanTiles), not 1.
+        let arch = GpuArch::a100();
+        let c = SparseDecodeCase {
+            batch: 1,
+            heads: 2,
+            head_dim: 64,
+            ctx: 1025,
+            page_tokens: 512,
+            policy: SparsePolicy {
+                budget_pages: 1,
+                sink_pages: 1,
+                window_pages: 0,
+                dense_threshold_pages: 0,
+            },
+            mass_alpha: 0.85,
+        };
+        let r = simulate_sparse_decode(&c, &arch);
+        assert_eq!(r.pages_selected, 1);
+        assert!(
+            (r.bytes_saved_fraction() - 0.6).abs() < 1e-9,
+            "2 of 5 tiles must stream, got {}",
+            r.bytes_saved_fraction()
+        );
+    }
+
+    #[test]
+    fn dense_threshold_bypasses_short_contexts() {
+        let arch = GpuArch::a100();
+        let mut c = case(512, 8); // 32 pages, budget 8
+        c.policy.dense_threshold_pages = 64;
+        let r = simulate_sparse_decode(&c, &arch);
+        assert_eq!(r.pages_selected, r.pages_total, "below threshold = dense");
+        assert_eq!(r.coverage, 1.0);
+    }
+}

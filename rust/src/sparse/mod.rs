@@ -1,0 +1,42 @@
+//! Sparse long-context decode: page-granular top-k KV selection.
+//!
+//! In the 512k-context decode regime every step streams the entire KV
+//! history, yet attention mass concentrates on a small fraction of it —
+//! page-granular top-k selection recovers near-full quality at a fraction
+//! of the bytes (arXiv 2502.06766), bounding the per-step context cost
+//! the lean partitioner walks (arXiv 2410.07063). This module scores and
+//! prunes context *pages* before each decode step:
+//!
+//! * [`page_meta`] — per-page channel-wise K min/max, maintained
+//!   incrementally by [`crate::coordinator::PagedKvCache`] and kept
+//!   consistent across copy-on-write forks and rollback truncations;
+//! * [`select`] — the Quest-style per-page upper bound
+//!   `Σ_d max(q_d·min_d, q_d·max_d)` and deterministic top-k selection
+//!   that always retains the sink pages and the recent window;
+//! * [`policy`] — [`SparsePolicy`]: page budget, sink/window counts, and
+//!   the dense fallback threshold below which selection is bypassed;
+//! * [`rope`] — rotary-position correction: fresh K rows produced under
+//!   a compacted view are advanced to their true positions before they
+//!   enter the cache (exact by rotation composition).
+//!
+//! The serving half lives downstream: `PagedKvCache::gather_selected`
+//! materializes only the selected pages (compacted, order-preserving),
+//! the engine threads per-sequence selections through its decode and
+//! spec-verify gathers, `runtime::attention_exec::lean_sparse_host` is
+//! the executor twin property-tested exact against the dense oracle
+//! restricted to the selected pages, `sim::sparse` models bytes saved and
+//! attention-mass coverage vs budget, and `leanattn serve --kv-budget` /
+//! `bench --sparse` / `simulate --sparse-budget` are the CLI surfaces.
+
+pub mod page_meta;
+pub mod policy;
+pub mod rope;
+pub mod select;
+
+pub use page_meta::PageMeta;
+pub use policy::SparsePolicy;
+pub use rope::advance_rope;
+pub use select::{
+    page_upper_bound, score_coverage, select_pages, selected_token_indices,
+    selected_tokens,
+};

@@ -1,0 +1,121 @@
+//! Per-page key statistics for query-aware page selection.
+//!
+//! Each KV page carries the channel-wise minimum and maximum of its
+//! written K rows, laid out `[layers, heads, head_dim]` — enough to bound
+//! `q · k` for every key in the page from above (Quest's criterion,
+//! arXiv 2502.06766 §page-granular selection) without touching the rows
+//! themselves. The statistics are maintained **incrementally** by
+//! [`crate::coordinator::PagedKvCache`]: every K row written into a page
+//! folds into the running min/max, a copy-on-write clone recomputes its
+//! statistics over exactly the rows the cloning holder's view keeps, and
+//! a truncation of an exclusively-held page shrinks the statistics to the
+//! surviving rows. The invariant — statistics always equal a from-scratch
+//! recompute over the page's `filled` rows, and `filled` covers every
+//! holder's view — is property-tested in `rust/tests/kv_cache_props.rs`.
+
+/// Running channel-wise min/max over the K rows written into one page.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PageMeta {
+    /// Rows the statistics cover (`0..filled` of the page's token slots).
+    filled: usize,
+    /// `[layers, heads, head_dim]` channel-wise minimum over filled rows.
+    k_min: Vec<f32>,
+    /// `[layers, heads, head_dim]` channel-wise maximum over filled rows.
+    k_max: Vec<f32>,
+}
+
+impl PageMeta {
+    /// Statistics of an empty page over a `plane`-channel K row
+    /// (`layers * heads * head_dim`).
+    pub fn empty(plane: usize) -> PageMeta {
+        PageMeta {
+            filled: 0,
+            k_min: vec![f32::INFINITY; plane],
+            k_max: vec![f32::NEG_INFINITY; plane],
+        }
+    }
+
+    /// Reset to the empty state (page returned to the free list).
+    pub fn reset(&mut self) {
+        self.filled = 0;
+        self.k_min.fill(f32::INFINITY);
+        self.k_max.fill(f32::NEG_INFINITY);
+    }
+
+    /// Rows the statistics cover.
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    /// Channel-wise minimum, `[layers, heads, head_dim]`.
+    pub fn k_min(&self) -> &[f32] {
+        &self.k_min
+    }
+
+    /// Channel-wise maximum, `[layers, heads, head_dim]`.
+    pub fn k_max(&self) -> &[f32] {
+        &self.k_max
+    }
+
+    /// Fold one `(layer, head)` K sub-row at channel `offset` into the
+    /// running bounds. Callers fold every sub-row of a token and then
+    /// [`Self::commit_row`] it.
+    pub fn observe(&mut self, offset: usize, k_row: &[f32]) {
+        for (i, &x) in k_row.iter().enumerate() {
+            let c = offset + i;
+            if x < self.k_min[c] {
+                self.k_min[c] = x;
+            }
+            if x > self.k_max[c] {
+                self.k_max[c] = x;
+            }
+        }
+    }
+
+    /// Mark token slot `slot` as covered. Writes are always sequential
+    /// (the cache repairs statistics before any non-sequential write), so
+    /// the slot extends the covered range by exactly one row.
+    pub fn commit_row(&mut self, slot: usize) {
+        debug_assert_eq!(
+            slot, self.filled,
+            "page statistics must cover rows contiguously"
+        );
+        self.filled = slot + 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_meta_has_inverted_bounds() {
+        let m = PageMeta::empty(4);
+        assert_eq!(m.filled(), 0);
+        assert!(m.k_min().iter().all(|&x| x == f32::INFINITY));
+        assert!(m.k_max().iter().all(|&x| x == f32::NEG_INFINITY));
+    }
+
+    #[test]
+    fn observe_and_commit_track_min_max() {
+        let mut m = PageMeta::empty(4);
+        m.observe(0, &[1.0, -2.0]);
+        m.observe(2, &[0.5, 3.0]);
+        m.commit_row(0);
+        m.observe(0, &[-1.0, 5.0]);
+        m.observe(2, &[0.5, -3.0]);
+        m.commit_row(1);
+        assert_eq!(m.filled(), 2);
+        assert_eq!(m.k_min(), &[-1.0, -2.0, 0.5, -3.0]);
+        assert_eq!(m.k_max(), &[1.0, 5.0, 0.5, 3.0]);
+    }
+
+    #[test]
+    fn reset_restores_the_empty_state() {
+        let mut m = PageMeta::empty(2);
+        m.observe(0, &[1.0, 2.0]);
+        m.commit_row(0);
+        m.reset();
+        assert_eq!(m, PageMeta::empty(2));
+    }
+}

@@ -1,0 +1,139 @@
+//! The knobs of sparse page selection.
+
+use anyhow::{ensure, Result};
+
+/// Page-selection policy for sparse long-context decode: how many context
+/// pages each sequence may stream per step, which pages are retained
+/// unconditionally, and when selection is bypassed entirely.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SparsePolicy {
+    /// Total pages a sequence streams per decode step (sinks and the
+    /// recent window included). Floors at `sink_pages + window_pages`.
+    pub budget_pages: usize,
+    /// Leading pages always retained — the attention-sink prefix whose
+    /// removal is known to destroy long-context quality.
+    pub sink_pages: usize,
+    /// Trailing pages always retained — the recency window (the partial
+    /// tail page the step appends into is its last member).
+    pub window_pages: usize,
+    /// Contexts of at most this many pages skip selection and stream
+    /// dense — scoring overhead cannot pay for itself on short contexts.
+    pub dense_threshold_pages: usize,
+}
+
+impl SparsePolicy {
+    /// A policy with the default sink (1 page) and window (2 pages)
+    /// retention and a dense threshold equal to the budget (selection
+    /// engages exactly when the context no longer fits it).
+    pub fn with_budget(budget_pages: usize) -> SparsePolicy {
+        SparsePolicy {
+            budget_pages,
+            sink_pages: 1,
+            window_pages: 2,
+            dense_threshold_pages: budget_pages,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.budget_pages >= 1, "kv budget must be >= 1 page");
+        ensure!(
+            self.budget_pages >= self.sink_pages + self.window_pages,
+            "kv budget of {} pages cannot hold {} sink + {} window pages",
+            self.budget_pages,
+            self.sink_pages,
+            self.window_pages
+        );
+        Ok(())
+    }
+
+    /// Whether a context of `total_pages` pages streams dense (no
+    /// scoring, no selection — the short-context fallback).
+    pub fn bypasses(&self, total_pages: usize) -> bool {
+        total_pages <= self.dense_threshold_pages
+    }
+
+    /// Sink/window retention clamped to a `total_pages` context.
+    pub fn retention(&self, total_pages: usize) -> (usize, usize) {
+        let sink = self.sink_pages.min(total_pages);
+        let window = self.window_pages.min(total_pages - sink);
+        (sink, window)
+    }
+
+    /// Pages a `total_pages`-page context actually streams under this
+    /// policy: everything when bypassed or covered by the budget,
+    /// otherwise the budget floored at the retention. The selector
+    /// ([`crate::sparse::select_pages`]) and the byte model
+    /// ([`crate::sim::sparse`]) both derive their counts from here, so
+    /// they can never drift apart.
+    pub fn effective_pages(&self, total_pages: usize) -> usize {
+        if self.bypasses(total_pages) || self.budget_pages >= total_pages {
+            return total_pages;
+        }
+        let (sink, window) = self.retention(total_pages);
+        self.budget_pages.clamp(sink + window, total_pages)
+    }
+
+    /// Whether a lane whose selection came back `(selected, scored)`
+    /// routes through the sparse selected-page gather: every scored
+    /// lane, plus complete (unscored) selections past the dense
+    /// threshold — covering budgets stay on the proven-bit-identical
+    /// selected-gather path instead of silently falling back to dense.
+    /// The one predicate both the engine and the bench harness use, so
+    /// their `selection_steps` counters mean the same thing.
+    pub fn engages(&self, selected_pages: usize, scored: bool) -> bool {
+        scored || !self.bypasses(selected_pages)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_budget_defaults() {
+        let p = SparsePolicy::with_budget(8);
+        assert_eq!(p.sink_pages, 1);
+        assert_eq!(p.window_pages, 2);
+        assert_eq!(p.dense_threshold_pages, 8);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_budgets_below_retention() {
+        let p = SparsePolicy {
+            budget_pages: 2,
+            sink_pages: 1,
+            window_pages: 2,
+            dense_threshold_pages: 0,
+        };
+        assert!(p.validate().is_err());
+        assert!(SparsePolicy::with_budget(0).validate().is_err());
+    }
+
+    #[test]
+    fn bypass_is_keyed_on_the_dense_threshold() {
+        let p = SparsePolicy::with_budget(4);
+        assert!(p.bypasses(4));
+        assert!(!p.bypasses(5));
+        let eager = SparsePolicy { dense_threshold_pages: 0, ..p };
+        assert!(!eager.bypasses(1), "threshold 0 never bypasses");
+    }
+
+    #[test]
+    fn effective_pages_clamps_and_covers() {
+        let p = SparsePolicy::with_budget(6); // sink 1, window 2
+        assert_eq!(p.effective_pages(4), 4, "covered context is dense");
+        assert_eq!(p.effective_pages(6), 6);
+        assert_eq!(p.effective_pages(20), 6, "budget binds");
+        assert_eq!(p.retention(20), (1, 2));
+        assert_eq!(p.retention(1), (1, 0), "window clamps after the sink");
+        // A budget below retention floors at sink + window.
+        let tight = SparsePolicy {
+            budget_pages: 2,
+            sink_pages: 2,
+            window_pages: 2,
+            dense_threshold_pages: 0,
+        };
+        assert_eq!(tight.effective_pages(10), 4);
+    }
+}

@@ -1,0 +1,93 @@
+//! Rotary-position correction for compacted sparse decode views.
+//!
+//! The decode/verify artifacts take one `positions` input that serves
+//! both as the attention mask length and as the fresh token's rotary
+//! position (`python/compile/model.py::_apply_rope`, rotate-half
+//! convention). A sparse step masks to the **compacted** length, so the
+//! artifact rotates the fresh Q/K at the compacted index instead of the
+//! true one. For the transient query this is the standard packed-view
+//! approximation — every cached key's relative angle shifts by the same
+//! constant, as if the query sat right after the selected tokens — but
+//! the fresh K row is **appended to the cache**, where a wrong rotation
+//! would outlive the step and corrupt every later (even dense) read.
+//! [`advance_rope`] fixes that: rotating by the position delta composes
+//! exactly (`R(a + b) = R(b)·R(a)`), so advancing the artifact's K row
+//! from the compacted to the true position reproduces what a dense step
+//! would have written, up to f32 rounding — and a zero delta (dense and
+//! covering-budget steps) skips the correction entirely, preserving
+//! bit-identity.
+
+/// Rotate every `head_dim`-sized row of `plane` forward by `delta`
+/// positions under rotate-half RoPE with base `rope_base`. `plane` is
+/// any concatenation of head rows (`[layers * heads, head_dim]`
+/// row-major, e.g. a [`crate::coordinator::PagedKvCache`] token plane).
+pub fn advance_rope(plane: &mut [f32], head_dim: usize, delta: f64, rope_base: f64) {
+    if delta == 0.0 {
+        return;
+    }
+    assert!(head_dim >= 2 && head_dim % 2 == 0, "rotary head_dim");
+    assert_eq!(plane.len() % head_dim, 0, "plane of head rows");
+    let half = head_dim / 2;
+    // cos/sin per channel pair, shared by every head row.
+    let mut cos = vec![0.0f32; half];
+    let mut sin = vec![0.0f32; half];
+    for j in 0..half {
+        let inv = rope_base.powf(-(j as f64) / half as f64);
+        let ang = delta * inv;
+        cos[j] = ang.cos() as f32;
+        sin[j] = ang.sin() as f32;
+    }
+    for row in plane.chunks_mut(head_dim) {
+        for j in 0..half {
+            let (a, b) = (row[j], row[j + half]);
+            row[j] = a * cos[j] - b * sin[j];
+            row[j + half] = a * sin[j] + b * cos[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Reference rotate-half RoPE at absolute position `pos` — mirrors
+    /// `python/compile/model.py::_apply_rope`.
+    fn rope_at(raw: &[f32], head_dim: usize, pos: f64, base: f64) -> Vec<f32> {
+        let half = head_dim / 2;
+        let mut out = raw.to_vec();
+        for row in out.chunks_mut(head_dim) {
+            for j in 0..half {
+                let inv = base.powf(-(j as f64) / half as f64);
+                let (c, s) = ((pos * inv).cos() as f32, (pos * inv).sin() as f32);
+                let (a, b) = (row[j], row[j + half]);
+                row[j] = a * c - b * s;
+                row[j + half] = a * s + b * c;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn advancing_composes_to_the_true_position() {
+        let mut rng = Rng::new(3);
+        for (dh, pos, delta) in [(8usize, 5.0, 3.0), (16, 100.0, 77.0), (4, 0.0, 1.0)] {
+            let raw = rng.normal_vec(3 * dh); // 3 head rows
+            let mut got = rope_at(&raw, dh, pos, 10_000.0);
+            advance_rope(&mut got, dh, delta, 10_000.0);
+            let want = rope_at(&raw, dh, pos + delta, 10_000.0);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "{g} vs {w} (dh {dh})");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_delta_is_a_bitwise_no_op() {
+        let mut rng = Rng::new(4);
+        let orig = rng.normal_vec(16);
+        let mut x = orig.clone();
+        advance_rope(&mut x, 8, 0.0, 10_000.0);
+        assert_eq!(x, orig, "delta 0 must not touch the plane");
+    }
+}

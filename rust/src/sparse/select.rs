@@ -1,0 +1,220 @@
+//! Query-aware top-k page selection over per-page key statistics.
+//!
+//! A page's score is the Quest-style upper bound on any `q · k` inside it:
+//! `Σ_d max(q_d · min_d, q_d · max_d)` over the `[layers, heads, head_dim]`
+//! channel plane — no key in the page can score higher against `q`, so
+//! ranking pages by this bound never drops the page holding the true
+//! argmax key. Selection always retains the sink pages and the recent
+//! window ([`SparsePolicy`]), fills the remaining budget with the
+//! top-scored middle pages (ties to the earlier page, deterministically),
+//! and returns ordinals in ascending context order so the compacted
+//! gather preserves token order.
+
+use std::cmp::Ordering;
+
+use super::page_meta::PageMeta;
+use super::policy::SparsePolicy;
+
+/// Upper bound on `q · k` over every K row the page's statistics cover.
+/// `q` is one `[layers, heads, head_dim]` query-proxy row (the same
+/// channel plane as the statistics). An empty page scores `-inf`.
+pub fn page_upper_bound(q: &[f32], meta: &PageMeta) -> f32 {
+    assert_eq!(q.len(), meta.k_min().len(), "query plane mismatch");
+    if meta.filled() == 0 {
+        return f32::NEG_INFINITY;
+    }
+    let mut s = 0.0f32;
+    for ((&qd, &lo), &hi) in q.iter().zip(meta.k_min()).zip(meta.k_max()) {
+        s += (qd * lo).max(qd * hi);
+    }
+    s
+}
+
+/// Pick the page ordinals (indices into a sequence's page list) to stream
+/// this step: all of them when the policy bypasses, otherwise sinks +
+/// top-k middle pages by score + the recent window, ascending. The
+/// result always satisfies `len <= max(budget, sinks + window)` and is a
+/// superset of the sink and window ordinals.
+pub fn select_pages(policy: &SparsePolicy, scores: &[f32]) -> Vec<usize> {
+    let total = scores.len();
+    let budget = policy.effective_pages(total);
+    if budget >= total {
+        return (0..total).collect();
+    }
+    let (sink, window) = policy.retention(total);
+    let k = budget - sink - window;
+    // Top-k of the middle by (score desc, ordinal asc) — a strict total
+    // order, so the winner set is deterministic. An O(middle) partition
+    // instead of a full sort: this runs per lane per decode step, on the
+    // exact hot path the subsystem exists to shrink.
+    let mut middle: Vec<usize> = (sink..total - window).collect();
+    if k < middle.len() {
+        middle.select_nth_unstable_by(k, |&a, &b| {
+            scores[b]
+                .partial_cmp(&scores[a])
+                .unwrap_or(Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        middle.truncate(k);
+    }
+    let mut sel: Vec<usize> = (0..sink)
+        .chain(middle)
+        .chain(total - window..total)
+        .collect();
+    sel.sort_unstable();
+    sel
+}
+
+/// Softmax-weighted share of the per-page upper-bound scores a selection
+/// covers — a cheap proxy for attention-mass coverage (the bound caps the
+/// max logit in each page, so its exp-weight approximates the page's
+/// share of softmax mass). 1.0 when everything is selected.
+pub fn score_coverage(scores: &[f32], selected: &[usize]) -> f64 {
+    let m = scores
+        .iter()
+        .copied()
+        .filter(|s| s.is_finite())
+        .fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return 1.0;
+    }
+    let weight = |s: f32| -> f64 {
+        if s.is_finite() {
+            f64::from(s - m).exp()
+        } else {
+            0.0
+        }
+    };
+    let total: f64 = scores.iter().map(|&s| weight(s)).sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    let covered: f64 = selected.iter().map(|&i| weight(scores[i])).sum();
+    (covered / total).min(1.0)
+}
+
+/// Token indices (ascending) of a `len`-token context that a page
+/// selection keeps: full `page_tokens`-token spans per ordinal, the tail
+/// ordinal clamped to the context length.
+pub fn selected_token_indices(
+    len: usize,
+    page_tokens: usize,
+    selection: &[usize],
+) -> Vec<usize> {
+    let mut idx = Vec::new();
+    for &o in selection {
+        let start = o * page_tokens;
+        for t in start..(start + page_tokens).min(len) {
+            idx.push(t);
+        }
+    }
+    idx
+}
+
+/// Tokens a selection streams out of a `len`-token context.
+pub fn selected_tokens(len: usize, page_tokens: usize, selection: &[usize]) -> usize {
+    selection
+        .iter()
+        .map(|&o| page_tokens.min(len.saturating_sub(o * page_tokens)))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn meta_of(rows: &[Vec<f32>]) -> PageMeta {
+        let mut m = PageMeta::empty(rows[0].len());
+        for (slot, r) in rows.iter().enumerate() {
+            m.observe(0, r);
+            m.commit_row(slot);
+        }
+        m
+    }
+
+    #[test]
+    fn upper_bound_dominates_every_row_score() {
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let d = 6;
+            let rows: Vec<Vec<f32>> =
+                (0..4).map(|_| rng.normal_vec(d)).collect();
+            let m = meta_of(&rows);
+            let q = rng.normal_vec(d);
+            let bound = page_upper_bound(&q, &m);
+            for r in &rows {
+                let dot: f32 = q.iter().zip(r).map(|(&a, &b)| a * b).sum();
+                assert!(
+                    dot <= bound + 1e-5,
+                    "row score {dot} exceeds bound {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_page_scores_neg_inf() {
+        let m = PageMeta::empty(3);
+        assert_eq!(page_upper_bound(&[1.0, -1.0, 0.5], &m), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn selection_keeps_sinks_window_and_top_middle() {
+        let policy = SparsePolicy {
+            budget_pages: 4,
+            sink_pages: 1,
+            window_pages: 1,
+            dense_threshold_pages: 4,
+        };
+        // 8 pages; middle scores peak at ordinals 5 then 2.
+        let scores = [0.0, -1.0, 3.0, -2.0, 0.5, 9.0, -3.0, 0.0];
+        let sel = select_pages(&policy, &scores);
+        assert_eq!(sel, vec![0, 2, 5, 7]);
+    }
+
+    #[test]
+    fn ties_break_to_the_earlier_page() {
+        let policy = SparsePolicy {
+            budget_pages: 3,
+            sink_pages: 1,
+            window_pages: 1,
+            dense_threshold_pages: 0,
+        };
+        let scores = [0.0, 2.0, 2.0, 2.0, 0.0];
+        assert_eq!(select_pages(&policy, &scores), vec![0, 1, 4]);
+    }
+
+    #[test]
+    fn budget_at_or_above_context_selects_everything() {
+        let policy = SparsePolicy::with_budget(5);
+        for n in 1..=5 {
+            let scores = vec![0.0f32; n];
+            assert_eq!(
+                select_pages(&policy, &scores),
+                (0..n).collect::<Vec<_>>()
+            );
+        }
+        // Even with the threshold disabled, a covering budget is dense.
+        let eager = SparsePolicy { dense_threshold_pages: 0, ..policy };
+        assert_eq!(select_pages(&eager, &[0.0; 5]), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn coverage_is_one_when_all_selected_and_less_otherwise() {
+        let scores = [5.0, 1.0, 0.0, 4.0];
+        let all: Vec<usize> = (0..4).collect();
+        assert!((score_coverage(&scores, &all) - 1.0).abs() < 1e-12);
+        let some = score_coverage(&scores, &[0, 3]);
+        assert!(some > 0.5 && some < 1.0, "coverage {some}");
+        assert!(score_coverage(&scores, &[0, 3]) > score_coverage(&scores, &[1, 2]));
+    }
+
+    #[test]
+    fn token_index_helpers_clamp_the_tail_page() {
+        let idx = selected_token_indices(10, 4, &[0, 2]);
+        assert_eq!(idx, vec![0, 1, 2, 3, 8, 9]);
+        assert_eq!(selected_tokens(10, 4, &[0, 2]), 6);
+        assert_eq!(selected_tokens(10, 4, &[0, 1, 2]), 10);
+    }
+}

@@ -1,0 +1,105 @@
+//! Acceptance-aware draft-length control.
+//!
+//! A fixed `spec_k` wastes verify rows whenever the drafter is cold: a
+//! pass that drafts 8 and accepts 0 still scores (and rolls back) all 8
+//! rows. [`AdaptiveK`] tracks each sequence's running acceptance rate as
+//! an EWMA and sizes the next draft proportionally — a stream whose
+//! drafts keep missing converges to `k = 1` (one draft row per pass, the
+//! cheapest probe that can still win), and recovers toward `k_max` as
+//! soon as acceptances return. The committed stream is unaffected by
+//! construction: acceptance verification is exact for *any* draft length
+//! (`rust/tests/spec_props.rs`), so adapting `k` only moves the pass
+//! count and the rolled-back-row count, never the tokens.
+
+/// Per-sequence draft-length controller driven by the running acceptance
+/// rate (the serving-side consumer of `Metrics::spec`-style accounting).
+#[derive(Clone, Debug)]
+pub struct AdaptiveK {
+    k_max: usize,
+    /// EWMA of per-pass acceptance rates, optimistic start (1.0) so the
+    /// first passes probe at full depth.
+    ewma: f64,
+    /// Smoothing gain of each new observation.
+    gain: f64,
+}
+
+impl AdaptiveK {
+    /// A controller bounded by the configured `spec_k`.
+    pub fn new(k_max: usize) -> AdaptiveK {
+        AdaptiveK { k_max, ewma: 1.0, gain: 0.4 }
+    }
+
+    /// Draft length for the next pass: the acceptance estimate scaled
+    /// into `1..=k_max` (0 only when speculation is off entirely).
+    pub fn k(&self) -> usize {
+        if self.k_max == 0 {
+            return 0;
+        }
+        ((self.ewma * self.k_max as f64).round() as usize).clamp(1, self.k_max)
+    }
+
+    /// Current acceptance estimate in `[0, 1]`.
+    pub fn acceptance_estimate(&self) -> f64 {
+        self.ewma
+    }
+
+    /// Fold one verify pass's outcome into the estimate. Passes that
+    /// drafted nothing (budget-capped) carry no signal and are skipped.
+    pub fn observe(&mut self, drafted: usize, accepted: usize) {
+        if drafted == 0 {
+            return;
+        }
+        let rate = (accepted.min(drafted)) as f64 / drafted as f64;
+        self.ewma = (1.0 - self.gain) * self.ewma + self.gain * rate;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_full_depth() {
+        let c = AdaptiveK::new(8);
+        assert_eq!(c.k(), 8);
+        assert_eq!(AdaptiveK::new(0).k(), 0, "speculation off stays off");
+    }
+
+    #[test]
+    fn low_acceptance_stream_converges_to_k_one() {
+        let mut c = AdaptiveK::new(8);
+        let mut sizes = Vec::new();
+        for _ in 0..12 {
+            let k = c.k();
+            sizes.push(k);
+            c.observe(k, 0); // every draft rejected
+        }
+        assert_eq!(*sizes.last().unwrap(), 1, "converges to the minimum");
+        assert!(
+            sizes.windows(2).all(|w| w[1] <= w[0]),
+            "k shrinks monotonically under all-reject: {sizes:?}"
+        );
+        assert!(c.acceptance_estimate() < 0.01);
+    }
+
+    #[test]
+    fn recovers_when_acceptance_returns() {
+        let mut c = AdaptiveK::new(6);
+        for _ in 0..10 {
+            c.observe(c.k(), 0);
+        }
+        assert_eq!(c.k(), 1);
+        for _ in 0..10 {
+            c.observe(c.k(), c.k()); // everything accepted again
+        }
+        assert_eq!(c.k(), 6, "estimate climbs back to full depth");
+    }
+
+    #[test]
+    fn empty_passes_carry_no_signal() {
+        let mut c = AdaptiveK::new(4);
+        let before = c.acceptance_estimate();
+        c.observe(0, 0);
+        assert_eq!(c.acceptance_estimate(), before);
+    }
+}

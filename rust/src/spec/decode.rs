@@ -107,11 +107,17 @@ fn target_rows<M: TokenModel + ?Sized>(
     rows
 }
 
-/// Speculative decoding with a single draft chain per pass.
-pub fn spec_generate<M: TokenModel + ?Sized, D: DraftSource + ?Sized>(
+/// The chain draft-and-verify loop behind both the fixed-`k` and the
+/// acceptance-adaptive entry points: one verify pass per iteration, the
+/// draft never longer than the remaining budget (a pass commits at most
+/// `k + 1`), and the controller — when present — sizes each pass and
+/// folds its acceptance back in.
+#[allow(clippy::too_many_arguments)]
+fn spec_generate_chain<M: TokenModel + ?Sized, D: DraftSource + ?Sized>(
     model: &M,
     drafter: &mut D,
-    k: usize,
+    k_max: usize,
+    mut ctrl: Option<&mut super::AdaptiveK>,
     prompt: &[i32],
     max_new: usize,
     params: &SamplingParams,
@@ -123,8 +129,8 @@ pub fn spec_generate<M: TokenModel + ?Sized, D: DraftSource + ?Sized>(
     let mut stats = SpecStats::default();
     while tokens.len() < max_new {
         let remaining = max_new - tokens.len();
-        // Never draft past the budget: a pass commits at most k + 1.
-        let k_step = k.min(remaining.saturating_sub(1));
+        let k_pass = ctrl.as_deref().map_or(k_max, |c| c.k().min(k_max));
+        let k_step = k_pass.min(remaining.saturating_sub(1));
         let mut draft = if k_step > 0 {
             drafter.draft(&hist, k_step)
         } else {
@@ -134,6 +140,9 @@ pub fn spec_generate<M: TokenModel + ?Sized, D: DraftSource + ?Sized>(
         let rows = target_rows(model, &hist, &draft);
         let row_refs: Vec<&[f32]> = rows.iter().map(Vec::as_slice).collect();
         let verdict = verify_chain(&row_refs, &draft, &hist, params, rng);
+        if let Some(c) = ctrl.as_deref_mut() {
+            c.observe(draft.len(), verdict.accepted);
+        }
         stats.verify_passes += 1;
         stats.drafted += draft.len();
         stats.accepted += verdict.accepted;
@@ -144,6 +153,49 @@ pub fn spec_generate<M: TokenModel + ?Sized, D: DraftSource + ?Sized>(
         }
     }
     SpecRun { tokens, stats }
+}
+
+/// Speculative decoding with a single draft chain per pass.
+pub fn spec_generate<M: TokenModel + ?Sized, D: DraftSource + ?Sized>(
+    model: &M,
+    drafter: &mut D,
+    k: usize,
+    prompt: &[i32],
+    max_new: usize,
+    params: &SamplingParams,
+    rng: &mut Rng,
+) -> SpecRun {
+    spec_generate_chain(model, drafter, k, None, prompt, max_new, params, rng)
+}
+
+/// Speculative decoding with an [`AdaptiveK`](super::AdaptiveK)
+/// controller sizing every pass's draft from the running acceptance rate
+/// instead of a fixed `k`. The committed stream is still bit-identical to
+/// [`sequential_generate`] — adaptation only moves the pass count.
+/// Returns the run plus the controller's final draft length (a
+/// low-acceptance stream converges to 1).
+pub fn spec_generate_adaptive<M: TokenModel + ?Sized, D: DraftSource + ?Sized>(
+    model: &M,
+    drafter: &mut D,
+    k_max: usize,
+    prompt: &[i32],
+    max_new: usize,
+    params: &SamplingParams,
+    rng: &mut Rng,
+) -> (SpecRun, usize) {
+    let mut ctrl = super::AdaptiveK::new(k_max);
+    let run = spec_generate_chain(
+        model,
+        drafter,
+        k_max,
+        Some(&mut ctrl),
+        prompt,
+        max_new,
+        params,
+        rng,
+    );
+    let k_final = ctrl.k();
+    (run, k_final)
 }
 
 /// Speculative decoding over a [`DraftTree`] merged from several
@@ -260,6 +312,63 @@ mod tests {
             spec_generate_tree(&model, &mut drafters, 4, &prompt, 30, &params, &mut r2);
         assert_eq!(run.tokens, seq, "tree verification preserves the stream");
         assert_eq!(run.stats.committed, 30);
+    }
+
+    #[test]
+    fn adaptive_low_acceptance_stream_converges_to_small_k() {
+        // A drafter that always proposes a token the sharp synthetic
+        // model never samples: acceptance stays ~0, so the controller
+        // must shrink the draft length to 1 while the stream remains
+        // bit-identical to the sequential oracle.
+        struct OffByOneDrafter;
+        impl crate::spec::DraftSource for OffByOneDrafter {
+            fn name(&self) -> &'static str {
+                "off-by-one"
+            }
+            fn draft(&mut self, history: &[i32], k: usize) -> Vec<i32> {
+                let wrong = (history.last().copied().unwrap_or(0) + 7) % 16;
+                vec![wrong; k]
+            }
+        }
+        let model = SyntheticModel::new(16, 3, 8.0);
+        let prompt = periodic_prompt(12, 4);
+        let params = SamplingParams::greedy();
+        let mut r1 = seq_rng(5, 6);
+        let seq = sequential_generate(&model, &prompt, 30, &params, &mut r1);
+        let mut r2 = seq_rng(5, 6);
+        let (run, final_k) = spec_generate_adaptive(
+            &model,
+            &mut OffByOneDrafter,
+            8,
+            &prompt,
+            30,
+            &params,
+            &mut r2,
+        );
+        assert_eq!(run.tokens, seq, "adaptation never touches the stream");
+        assert_eq!(final_k, 1, "all-reject stream converges to k = 1");
+        assert!(
+            run.stats.drafted < 8 * run.stats.verify_passes,
+            "shrunken drafts: {} drafted over {} passes",
+            run.stats.drafted,
+            run.stats.verify_passes
+        );
+    }
+
+    #[test]
+    fn adaptive_keeps_full_depth_on_an_accepting_stream() {
+        let model = SyntheticModel::new(32, 5, 6.0);
+        let prompt = periodic_prompt(24, 6);
+        let params = SamplingParams::greedy();
+        let mut r1 = seq_rng(1, 2);
+        let seq = sequential_generate(&model, &prompt, 40, &params, &mut r1);
+        let mut r2 = seq_rng(1, 2);
+        let mut drafter = NGramDrafter::default();
+        let (run, final_k) =
+            spec_generate_adaptive(&model, &mut drafter, 4, &prompt, 40, &params, &mut r2);
+        assert_eq!(run.tokens, seq);
+        assert!(final_k >= 2, "accepting stream keeps a deep draft");
+        assert!(run.stats.tokens_per_pass() > 1.0);
     }
 
     #[test]

@@ -31,13 +31,16 @@
 //! `PagedKvCache::truncate_seq`.
 
 pub mod accept;
+pub mod adaptive;
 pub mod decode;
 pub mod draft;
 pub mod tree;
 
 pub use accept::{verify_chain, verify_tree, ChainVerdict, TreeVerdict};
+pub use adaptive::AdaptiveK;
 pub use decode::{
-    sequential_generate, spec_generate, spec_generate_tree, SpecRun, SpecStats,
+    sequential_generate, spec_generate, spec_generate_adaptive, spec_generate_tree,
+    SpecRun, SpecStats,
 };
 pub use draft::{
     DraftKind, DraftSource, ModelDrafter, NGramDrafter, SyntheticModel, TokenModel,

@@ -9,6 +9,7 @@ use lean_attention::coordinator::request::FinishReason;
 use lean_attention::coordinator::{Engine, EngineConfig, Router};
 use lean_attention::runtime::{Manifest, Runtime};
 use lean_attention::sampling::{BeamSearch, BestOfN, SamplingParams};
+use lean_attention::sparse::SparsePolicy;
 use lean_attention::util::rng::Rng;
 
 fn setup() -> Option<(Rc<Runtime>, Manifest)> {
@@ -665,4 +666,125 @@ fn speculative_decode_matches_plain_stream_and_rolls_back() {
     // truncated the rejects; nothing may leak.
     assert_eq!(spec.kv_used_pages(), spec.prefix_index_pages());
     assert_eq!(spec.active(), 0);
+}
+
+/// Sparse decode with a covering budget: the whole sparse machinery —
+/// scoring, selection, the selected-page gather, compacted positions —
+/// engages on every step (dense threshold 0) but selects every page, so
+/// the stream must be bit-identical to dense decode. The engine half of
+/// the degenerate-sparsity guarantee.
+#[test]
+fn sparse_covering_budget_stream_matches_dense() {
+    let Some((rt, m)) = setup() else { return };
+    let mut dense = engine(&rt, &m);
+    let mut sparse = Engine::new(
+        &rt,
+        &m,
+        EngineConfig {
+            sparse: Some(SparsePolicy {
+                budget_pages: 1 << 20,
+                sink_pages: 1,
+                window_pages: 2,
+                dense_threshold_pages: 0,
+            }),
+            ..EngineConfig::default()
+        },
+    )
+    .expect("engine");
+
+    let mut rng = Rng::new(9);
+    let prompt = random_prompt(&mut rng, 512, 12);
+    let a = dense.submit(prompt.clone(), 12).unwrap();
+    let b = sparse.submit(prompt, 12).unwrap();
+    let fin_dense = dense.run_until_idle().expect("dense run");
+    let fin_sparse = sparse.run_until_idle().expect("sparse run");
+    assert_eq!(fin_dense[0].id, a);
+    assert_eq!(fin_sparse[0].id, b);
+    assert_eq!(
+        fin_sparse[0].output, fin_dense[0].output,
+        "covering sparse budget must not move the stream"
+    );
+    assert_eq!(fin_sparse[0].logprobs, fin_dense[0].logprobs);
+    let st = &sparse.metrics.sparse;
+    assert!(st.selection_steps > 0, "sparse gather path must have run");
+    assert_eq!(
+        st.gather_bytes_sparse, st.gather_bytes_dense,
+        "complete selections gather exactly the dense bytes"
+    );
+}
+
+/// Sub-context budget: selection genuinely prunes pages (small pages, a
+/// budget below the context), the engine completes, and the sparse
+/// gather reads strictly fewer bytes than dense would have.
+#[test]
+fn sparse_sub_budget_prunes_and_completes() {
+    let Some((rt, m)) = setup() else { return };
+    let mut e = Engine::new(
+        &rt,
+        &m,
+        EngineConfig {
+            page_tokens: 4,
+            sparse: Some(SparsePolicy {
+                budget_pages: 3,
+                sink_pages: 1,
+                window_pages: 1,
+                dense_threshold_pages: 3,
+            }),
+            ..EngineConfig::default()
+        },
+    )
+    .expect("engine");
+    let mut rng = Rng::new(11);
+    // Sized so selection is guaranteed to engage: with 4-token pages and
+    // a 3-page threshold, the context passes 13 tokens (4 pages) well
+    // before the 16-token generation budget runs out, for any prompt
+    // length >= 1.
+    let len = 12.min(e.prefill_bucket());
+    let prompt = random_prompt(&mut rng, 512, len);
+    e.submit(prompt, 16).unwrap();
+    let fin = e.run_until_idle().expect("run");
+    assert_eq!(fin.len(), 1);
+    assert_eq!(fin[0].output.len(), 16);
+    let st = &e.metrics.sparse;
+    assert!(st.selection_steps > 0, "selection must engage on this shape");
+    assert!(
+        st.gather_bytes_sparse < st.gather_bytes_dense,
+        "sub-context selection must shed gather bytes ({} vs {})",
+        st.gather_bytes_sparse,
+        st.gather_bytes_dense
+    );
+    assert!(st.pages_scanned < st.pages_total);
+    let rep = e.metrics.report();
+    assert!(rep.contains("sparse selection"), "{rep}");
+    assert_eq!(e.active(), 0);
+}
+
+/// Acceptance-aware draft sizing must never move the committed stream —
+/// it only re-sizes drafts from the running acceptance rate.
+#[test]
+fn adaptive_spec_preserves_the_stream() {
+    let Some((rt, m)) = setup() else { return };
+    let mut plain = engine(&rt, &m);
+    let mut adaptive = Engine::new(
+        &rt,
+        &m,
+        EngineConfig { spec_k: 3, adaptive_spec: true, ..EngineConfig::default() },
+    )
+    .expect("engine");
+    if !adaptive.spec_enabled() {
+        eprintln!("skipping: artifact set has no verify step");
+        return;
+    }
+    let prompt: Vec<i32> = (0..24).map(|t| t % 6).collect();
+    let a = plain.submit(prompt.clone(), 20).unwrap();
+    let b = adaptive.submit(prompt, 20).unwrap();
+    let fin_plain = plain.run_until_idle().expect("plain");
+    let fin_adaptive = adaptive.run_until_idle().expect("adaptive");
+    assert_eq!(fin_plain[0].id, a);
+    assert_eq!(fin_adaptive[0].id, b);
+    assert_eq!(
+        fin_adaptive[0].output, fin_plain[0].output,
+        "adaptive draft sizing must not move the stream"
+    );
+    assert!(adaptive.metrics.spec.verify_passes > 0);
 }

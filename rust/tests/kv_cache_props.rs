@@ -6,7 +6,11 @@
 //! holder's refcount exact, and (d) return a page to the free list
 //! exactly when its last reference drops. Truncation of a shared page
 //! run must never disturb another holder's view — the next append
-//! copy-on-writes instead of mutating the sibling's bytes.
+//! copy-on-writes instead of mutating the sibling's bytes. The same
+//! churn must also never desynchronize the per-page key statistics the
+//! sparse selector scores against: after every operation the
+//! incrementally-maintained metadata must match a from-scratch recompute
+//! over each live page's filled rows ([`PagedKvCache::validate_page_meta`]).
 
 use std::collections::HashMap;
 
@@ -168,6 +172,9 @@ fn random_workload_never_leaks_or_double_frees() {
                 _ => {}
             }
             check_invariants(&cache, &active, &retains)?;
+            // Fork → COW → truncate → append churn must keep the page
+            // statistics equal to a from-scratch recompute.
+            cache.validate_page_meta().map_err(|e| e.to_string())?;
         }
 
         // Drain everything: no page may leak.
@@ -251,6 +258,7 @@ fn gather_shared_equals_flat_gather_on_random_sharing() {
                 }
                 _ => {}
             }
+            cache.validate_page_meta().map_err(|e| e.to_string())?;
         }
         if active.is_empty() {
             return Ok(());
@@ -330,6 +338,7 @@ fn truncate_fork_append_interleavings_preserve_sibling_views() {
             if kx != k0 || vx != v0 {
                 return Err(format!("sibling view changed at step {step}"));
             }
+            cache.validate_page_meta().map_err(|e| e.to_string())?;
         }
 
         cache.free_seq(0);

@@ -10,8 +10,11 @@ use lean_attention::partition::cascade::{
     build_cascade_plan, CascadeProblem, CascadeTensors, PrefixGroup,
 };
 use lean_attention::partition::plan::{build_plan, DecodeProblem, Strategy};
-use lean_attention::runtime::attention_exec::{lean_cascade_host, AttentionProblem};
+use lean_attention::runtime::attention_exec::{
+    lean_cascade_host, lean_sparse_host, AttentionProblem,
+};
 use lean_attention::runtime::{AttentionExecutor, Manifest, Runtime};
+use lean_attention::sparse::selected_token_indices;
 use lean_attention::util::rng::Rng;
 use lean_attention::util::testing::assert_allclose;
 
@@ -169,6 +172,53 @@ fn lean_cascade_matches_host_oracle_and_host_twin() {
     let (o_host, lse_host) = lean_cascade_host(&p, &t, &cp, 8);
     assert_allclose(&o, &o_host, 3e-4, 3e-4, "pjrt vs host twin");
     assert_allclose(&lse, &lse_host, 1e-3, 1e-3, "lse pjrt vs host twin");
+}
+
+#[test]
+fn lean_sparse_matches_host_twin_and_restricted_oracle() {
+    let Some(exec) = setup() else { return };
+    // Two sequences, 1024-token contexts over 256-token pages; each lane
+    // keeps a different page subset and lane 1's kept tail is partial.
+    let (heads, n, d, pt) = (1usize, 1024usize, 64usize, 256usize);
+    let batch = 2;
+    let g = batch * heads;
+    let mut rng = Rng::new(23);
+    let q = rng.normal_vec(g * d);
+    let k = rng.normal_vec(g * n * d);
+    let v = rng.normal_vec(g * n * d);
+    let lens = vec![1024u32, 900];
+    let sels: Vec<Vec<usize>> = vec![vec![0, 2, 3], vec![0, 1, 3]];
+
+    let (o, lse) = exec
+        .lean_sparse(&q, &k, &v, &lens, heads, n, d, pt, &sels, 256, 13)
+        .expect("lean sparse");
+    let (o_host, lse_host) =
+        lean_sparse_host(&q, &k, &v, &lens, heads, n, d, pt, &sels, 256, 13, 8)
+            .expect("host twin");
+    assert_allclose(&o, &o_host, 3e-4, 3e-4, "pjrt vs host twin");
+    assert_allclose(&lse, &lse_host, 1e-3, 1e-3, "lse pjrt vs host twin");
+
+    // Dense oracle restricted to the selected pages, per sequence.
+    for s in 0..batch {
+        let idx = selected_token_indices(lens[s] as usize, pt, &sels[s]);
+        let n_sel = idx.len();
+        let mut kc = vec![0.0f32; n_sel * d];
+        let mut vc = vec![0.0f32; kc.len()];
+        for (j, &t) in idx.iter().enumerate() {
+            let src = (s * n + t) * d;
+            kc[j * d..(j + 1) * d].copy_from_slice(&k[src..src + d]);
+            vc[j * d..(j + 1) * d].copy_from_slice(&v[src..src + d]);
+        }
+        let want =
+            attention_host(&q[s * d..(s + 1) * d], &kc, &vc, 1, n_sel, d, &[n_sel as u32]);
+        assert_allclose(
+            &o[s * d..(s + 1) * d],
+            &want,
+            3e-4,
+            3e-4,
+            "lean_sparse vs restricted oracle",
+        );
+    }
 }
 
 #[test]
