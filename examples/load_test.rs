@@ -1,46 +1,132 @@
 //! Trace-driven load test: Poisson arrivals replayed open-loop against
-//! the serving engine at several offered loads, reporting TTFT and
-//! end-to-end latency percentiles — the deployment-facing view of the
-//! decode-phase scheduling this repo reproduces.
+//! the serving engine at several offered loads, reporting the serving
+//! SLO view — TTFT and end-to-end percentiles from the per-request
+//! lifecycle timelines, goodput, and SLO attainment at a `--slo-ms`
+//! target — the deployment-facing view of the decode-phase scheduling
+//! this repo reproduces (ROADMAP open item 1's load generator).
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example load_test
+//! make artifacts && cargo run --release --example load_test -- \
+//!     --requests 16 --slo-ms 50 [--fixed] [--seed 99] \
+//!     [--trace-capacity 4096 --trace-out /tmp/leanattn.trace.json] \
+//!     [--metrics-out /tmp/leanattn.prom]
 //! ```
+//!
+//! Each load level runs on a fresh engine (queues don't carry over).
+//! `--metrics-out` writes the last level's metrics snapshot (`.prom` →
+//! Prometheus text exposition, anything else → versioned JSON);
+//! `--trace-capacity N --trace-out` writes its Chrome trace-event
+//! export for `chrome://tracing` / `ui.perfetto.dev`.
 
+use std::collections::HashMap;
 use std::rc::Rc;
+
+use anyhow::{Context, Result};
 
 use lean_attention::bench_harness::trace::{replay, TraceSpec};
 use lean_attention::coordinator::{Engine, EngineConfig};
 use lean_attention::runtime::{Manifest, Runtime};
 
-fn main() -> anyhow::Result<()> {
-    let runtime = Rc::new(Runtime::cpu()?);
-    let manifest = Manifest::load(Manifest::default_dir())?;
+fn main() -> Result<()> {
+    let flags = parse_flags();
+    let usize_of = |k: &str, d: usize| -> usize {
+        flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    };
+    let f64_of =
+        |k: &str, d: f64| -> f64 { flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(d) };
+    let slo_ms = f64_of("slo-ms", 50.0);
+    let requests = usize_of("requests", 16);
+    let seed = usize_of("seed", 99) as u64;
+    let trace_capacity = usize_of("trace-capacity", 0);
 
-    println!("== load test: tiny model, Poisson arrivals ==\n");
+    let runtime = Rc::new(Runtime::cpu()?);
+    let manifest = Manifest::load(Manifest::default_dir())
+        .context("load artifacts (run `make artifacts`)")?;
+
+    println!("== load test: tiny model, {requests} requests/level, SLO {slo_ms} ms ==\n");
+    let mut last: Option<Engine> = None;
     for &(label, gap) in &[("light load", 8.0f64), ("moderate", 3.0), ("saturating", 0.5)] {
         // fresh engine per load level so queues don't carry over
         let mut engine = Engine::new(
             &runtime,
             &manifest,
-            EngineConfig { model: "tiny".into(), ..Default::default() },
+            EngineConfig {
+                model: "tiny".into(),
+                seed,
+                trace_capacity,
+                ..Default::default()
+            },
         )?;
         let spec = TraceSpec {
-            requests: 16,
+            requests,
             mean_gap_steps: gap,
-            poisson: true,
+            poisson: !flags.contains_key("fixed"),
             prompt_min: 2,
             prompt_max: engine.prefill_bucket(),
             new_min: 2,
-            new_max: 12,
-            seed: 99,
+            new_max: usize_of("max-new", 12),
+            seed,
         };
         let report = replay(&mut engine, &spec)?;
         println!("-- {label} (mean gap {gap} steps) --");
         println!("{}\n", report.render());
+        // The engine recorded one lifecycle timeline per finished
+        // request; fold them into the SLO attainment report.
+        println!("{}", engine.timelines.slo_report(slo_ms, report.wall_s).render());
         if let Some(speedup) = engine.metrics.projected_speedup() {
             println!("   A100 projection for this batch mix: LA {speedup:.2}x over FD\n");
         }
+        last = Some(engine);
+    }
+
+    // Observability exports cover the last (most loaded) level.
+    let engine = last.expect("at least one load level ran");
+    if let Some(path) = flags.get("metrics-out") {
+        let snap = engine.snapshot();
+        let text = if path.ends_with(".prom") {
+            snap.to_prometheus()
+        } else {
+            snap.to_json().to_string()
+        };
+        std::fs::write(path, &text)
+            .with_context(|| format!("write metrics snapshot to {path}"))?;
+        println!("metrics snapshot: {} series -> {path}", snap.names().len());
+    }
+    if let Some(path) = flags.get("trace-out") {
+        let trace = engine.tracer.export_chrome_trace();
+        std::fs::write(path, trace.to_string())
+            .with_context(|| format!("write chrome trace to {path}"))?;
+        println!(
+            "chrome trace: {} events -> {path} ({} dropped to ring overflow)",
+            engine.tracer.len(),
+            engine.tracer.dropped()
+        );
     }
     Ok(())
+}
+
+/// `--key value` pairs; a `--flag` followed by another `--` (or nothing)
+/// is a boolean. Mirrors the CLI's hand-rolled parser (clap is not in
+/// the offline crate cache).
+fn parse_flags() -> HashMap<String, String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        if let Some(key) = argv[i].strip_prefix("--") {
+            match argv.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    flags.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                _ => {
+                    flags.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
 }

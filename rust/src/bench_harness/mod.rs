@@ -5,6 +5,7 @@
 
 pub mod cascade_exec;
 pub mod figures;
+pub mod obs;
 pub mod runner;
 pub mod sampling;
 pub mod sparse;
@@ -14,6 +15,7 @@ pub mod trace;
 pub mod workload;
 
 pub use cascade_exec::{compare_exec, ExecCase, ExecComparison};
+pub use obs::{run_obs, ObsCase, ObsReport};
 pub use runner::{bench, BenchResult};
 pub use sampling::{compare_sampling, SamplingCase, SamplingComparison};
 pub use sparse::{compare_sparse, SparseBenchCase, SparseComparison};

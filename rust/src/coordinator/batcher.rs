@@ -10,6 +10,9 @@ use super::request::{Request, RequestId};
 pub struct ContinuousBatcher {
     slots: Vec<Option<RequestId>>,
     waiting: VecDeque<Request>,
+    /// High-water mark of the waiting queue — the congestion gauge the
+    /// observability snapshot exports.
+    peak_waiting: usize,
 }
 
 impl ContinuousBatcher {
@@ -18,15 +21,22 @@ impl ContinuousBatcher {
         ContinuousBatcher {
             slots: vec![None; num_slots],
             waiting: VecDeque::new(),
+            peak_waiting: 0,
         }
     }
 
     pub fn enqueue(&mut self, r: Request) {
         self.waiting.push_back(r);
+        self.peak_waiting = self.peak_waiting.max(self.waiting.len());
     }
 
     pub fn waiting_len(&self) -> usize {
         self.waiting.len()
+    }
+
+    /// Deepest the waiting queue has ever been (monotonic watermark).
+    pub fn peak_waiting(&self) -> usize {
+        self.peak_waiting
     }
 
     pub fn active_len(&self) -> usize {
@@ -165,6 +175,28 @@ mod tests {
         // The waiting queue is untouched by occupy.
         b.enqueue(req(2));
         assert_eq!(b.waiting_len(), 1);
+    }
+
+    #[test]
+    fn peak_waiting_is_a_monotonic_watermark() {
+        let mut b = ContinuousBatcher::new(1);
+        assert_eq!(b.peak_waiting(), 0);
+        b.enqueue(req(1));
+        b.enqueue(req(2));
+        b.enqueue(req(3));
+        assert_eq!(b.peak_waiting(), 3);
+        // Draining the queue never lowers the watermark.
+        b.admit(|_| true);
+        assert_eq!(b.waiting_len(), 2);
+        assert_eq!(b.peak_waiting(), 3);
+        b.release(1);
+        b.admit(|_| true);
+        assert_eq!(b.peak_waiting(), 3);
+        // A deeper wave raises it again.
+        for i in 4..8 {
+            b.enqueue(req(i));
+        }
+        assert_eq!(b.peak_waiting(), 5);
     }
 
     #[test]

@@ -34,6 +34,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
+use crate::obs::{Attrs, MetricsSnapshot, Phase, TimelineRecorder, Tracer};
 use crate::partition::cascade::{CascadeProblem, PrefixGroup};
 use crate::partition::plan::{DecodeProblem, Strategy};
 use crate::runtime::{Manifest, ModelRuntime, Runtime};
@@ -88,6 +89,9 @@ pub struct EngineConfig {
     /// each decode step (Quest-style per-page upper bounds over the
     /// paged cache's key statistics). `None` streams dense.
     pub sparse: Option<SparsePolicy>,
+    /// Structured-tracer ring capacity in events; `0` leaves the tracer
+    /// disabled (near-zero overhead on every instrumented hot path).
+    pub trace_capacity: usize,
 }
 
 impl Default for EngineConfig {
@@ -104,6 +108,7 @@ impl Default for EngineConfig {
             spec_draft: DraftKind::NGram,
             adaptive_spec: false,
             sparse: None,
+            trace_capacity: 0,
         }
     }
 }
@@ -181,6 +186,10 @@ pub struct Engine {
     /// Speculative draft source (used when `config.spec_k > 0`).
     drafter: Box<dyn DraftSource>,
     pub metrics: Metrics,
+    /// Structured step tracer (disabled unless `config.trace_capacity > 0`).
+    pub tracer: Tracer,
+    /// Per-request lifecycle timelines, fed at every finish site.
+    pub timelines: TimelineRecorder,
     arch: GpuArch,
     next_id: RequestId,
     /// Pages committed to being (or becoming) allocated: the prefix
@@ -214,6 +223,11 @@ impl Engine {
         let prefix_index = RadixPrefixIndex::new(config.page_tokens);
         let cache_elems = model.cache_elems();
         let drafter = config.spec_draft.build(art.vocab, config.seed);
+        let tracer = if config.trace_capacity > 0 {
+            Tracer::enabled(config.trace_capacity)
+        } else {
+            Tracer::disabled()
+        };
         Ok(Engine {
             config,
             model,
@@ -224,6 +238,8 @@ impl Engine {
             fork_tree: ForkTree::new(),
             drafter,
             metrics: Metrics::default(),
+            tracer,
+            timelines: TimelineRecorder::default(),
             arch: GpuArch::a100(),
             next_id: 1,
             committed_pages: 0,
@@ -354,10 +370,59 @@ impl Engine {
     /// One engine iteration: admissions (+ batched prefill) and one decode
     /// step. Returns requests that finished during this iteration.
     pub fn step(&mut self) -> Result<Vec<FinishedRequest>> {
+        self.tracer.advance_step();
         let mut finished = Vec::new();
         self.admit_and_prefill(&mut finished)?;
         self.decode_once(&mut finished)?;
         Ok(finished)
+    }
+
+    /// Point-in-time sample of every documented serving counter plus the
+    /// engine's live gauges — the one struct both the Prometheus text
+    /// and versioned-JSON exporters serialize.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut s = self.metrics.snapshot();
+        s.gauge(
+            "kv_pages_used",
+            self.cache.used_pages() as f64,
+            "KV pages currently holding data (shared pages counted once).",
+        );
+        s.gauge(
+            "kv_pages_total",
+            self.cache.total_pages() as f64,
+            "KV pages allocated to the cache.",
+        );
+        s.gauge(
+            "prefix_index_pages",
+            self.prefix_index.num_pages() as f64,
+            "Pages pinned by the radix prefix index.",
+        );
+        s.gauge(
+            "requests_waiting",
+            self.batcher.waiting_len() as f64,
+            "Requests queued for admission.",
+        );
+        s.gauge(
+            "requests_active",
+            self.batcher.active_len() as f64,
+            "Sequences resident in batch slots.",
+        );
+        s.counter(
+            "requests_peak_waiting",
+            self.batcher.peak_waiting() as f64,
+            "High-water mark of the admission queue.",
+        );
+        s.counter(
+            "requests_observed_total",
+            self.timelines.requests() as f64,
+            "Request lifecycles folded into the timeline recorder.",
+        );
+        s.counter(
+            "trace_events_dropped_total",
+            self.tracer.dropped() as f64,
+            "Trace events dropped to ring overflow.",
+        );
+        s
     }
 
     /// Drive until every submitted request completes.
@@ -514,7 +579,7 @@ impl Engine {
         self.metrics.sampling.cancelled += 1;
         self.metrics.requests_finished += 1;
         let now = Instant::now();
-        Ok(FinishedRequest {
+        let fr = FinishedRequest {
             id,
             prompt_len: seq.prompt_len,
             output: seq.generated,
@@ -525,7 +590,9 @@ impl Engine {
             cum_logprob: seq.cum_logprob,
             logprobs: seq.logprobs,
             parent: seq.parent,
-        })
+        };
+        self.timelines.observe(fr.timeline());
+        Ok(fr)
     }
 
     /// Extra KV tokens reserved per request beyond `prompt + max_new`:
@@ -585,6 +652,12 @@ impl Engine {
                     }
                     self.committed_pages -= evicted.len();
                     self.metrics.prefix.evicted_pages += evicted.len();
+                    if !evicted.is_empty() {
+                        self.tracer.instant(
+                            Phase::Evict,
+                            Attrs { pages: Some(evicted.len()), ..Default::default() },
+                        );
+                    }
                 }
                 head_match = Some(m);
             }
@@ -640,11 +713,17 @@ impl Engine {
         }
 
         let t0 = Instant::now();
+        let prefill_start = self.tracer.now();
         let out = self.model.prefill(&tokens, &lengths)?;
         self.metrics.prefill_calls += 1;
         self.metrics
             .prefill_us
-            .push(t0.elapsed().as_secs_f64() * 1e6);
+            .record(t0.elapsed().as_secs_f64() * 1e6);
+        self.tracer.record_since(
+            Phase::Prefill,
+            prefill_start,
+            Attrs { k: Some(admitted.len()), ..Default::default() },
+        );
 
         let (l, h, dh) = (
             self.model.art.n_layers,
@@ -694,6 +773,10 @@ impl Engine {
             } else {
                 self.cache.insert_seq(r.id, &k, &v, len)?;
             }
+            self.tracer.instant(
+                Phase::Admit,
+                Attrs { seq: Some(r.id), pages: Some(need), ..Default::default() },
+            );
 
             // Account the hit and register this prompt's full pages so
             // later requests can share them.
@@ -737,7 +820,7 @@ impl Engine {
             // a second token past the budget (`submit` rejects budget 0).
             if r.max_new_tokens <= 1 {
                 self.committed_pages -= need - index_kept;
-                finished.push(FinishedRequest {
+                let fr = FinishedRequest {
                     id: r.id,
                     prompt_len: len,
                     output: vec![first],
@@ -748,7 +831,9 @@ impl Engine {
                     cum_logprob: f64::from(s.logprob),
                     logprobs: vec![s.logprob],
                     parent: None,
-                });
+                };
+                self.timelines.observe(fr.timeline());
+                finished.push(fr);
                 self.batcher.release(r.id);
                 self.cache.free_seq(r.id);
                 self.metrics.requests_finished += 1;
@@ -865,7 +950,13 @@ impl Engine {
     fn gather_step_views(&mut self, slots: &[Option<RequestId>]) -> Result<StepViews> {
         let c = self.model.art.ctx_bucket;
 
-        if let Some(sels) = self.sparse_selections(slots) {
+        let select_start = self.tracer.now();
+        let sels = self.sparse_selections(slots);
+        if self.config.sparse.is_some() {
+            self.tracer.record_since(Phase::SparseSelect, select_start, Attrs::default());
+        }
+        if let Some(sels) = sels {
+            let gather_start = self.tracer.now();
             let sg = self.cache.gather_selected(slots, &sels)?;
             sg.compose_dense(c, &mut self.k_buf, &mut self.v_buf)?;
             self.metrics.sparse.selection_steps += 1;
@@ -881,7 +972,8 @@ impl Engine {
             let mut lens = Vec::new();
             let mut positions = vec![0i32; slots.len()];
             let mut live_of_slot = vec![usize::MAX; slots.len()];
-            let token_bytes = (self.cache.page_bytes() / self.config.page_tokens) as u64;
+            let token_bytes = self.cache.token_bytes() as u64;
+            let mut sparse_bytes = 0u64;
             for (bi, slot) in slots.iter().enumerate() {
                 let Some(id) = slot else { continue };
                 let Some(len) = self.cache.seq_len(*id) else { continue };
@@ -890,12 +982,17 @@ impl Engine {
                 // ratio isolates pure selection: the cascade dedup of a
                 // shared sink run (which the dense path also enjoys) is
                 // reported by the cascade gather counters, not here.
-                self.metrics.sparse.gather_bytes_sparse +=
-                    compact as u64 * token_bytes;
+                sparse_bytes += compact as u64 * token_bytes;
                 live_of_slot[bi] = lens.len();
                 lens.push(compact as u32);
                 positions[bi] = compact as i32;
             }
+            self.metrics.sparse.gather_bytes_sparse += sparse_bytes;
+            self.tracer.record_since(
+                Phase::Gather,
+                gather_start,
+                Attrs { bytes: Some(sparse_bytes), ..Default::default() },
+            );
             // Shared selected runs (the deduplicated sink pages of a
             // prefix group) become the projection's prefix groups.
             let groups: Vec<PrefixGroup> = sg
@@ -922,15 +1019,30 @@ impl Engine {
         } else {
             (Vec::new(), Vec::new())
         };
+        let gather_start = self.tracer.now();
+        let gather_bytes;
         if groups.is_empty() {
             self.cache.gather(slots, c, &mut self.k_buf, &mut self.v_buf)?;
+            let tokens: u64 = slots
+                .iter()
+                .flatten()
+                .filter_map(|id| self.cache.seq_len(*id))
+                .map(|len| len as u64)
+                .sum();
+            gather_bytes = tokens * self.cache.token_bytes() as u64;
         } else {
             let sg = self.cache.gather_shared(slots)?;
             sg.compose_dense(c, &mut self.k_buf, &mut self.v_buf)?;
             self.metrics.cascade_gather_steps += 1;
             self.metrics.gather_bytes_flat += sg.flat_bytes as u64;
             self.metrics.gather_bytes_shared += sg.shared_bytes as u64;
+            gather_bytes = sg.shared_bytes as u64;
         }
+        self.tracer.record_since(
+            Phase::Gather,
+            gather_start,
+            Attrs { bytes: Some(gather_bytes), ..Default::default() },
+        );
         let mut positions = vec![0i32; slots.len()];
         for (bi, slot) in slots.iter().enumerate() {
             if let Some(id) = slot {
@@ -961,18 +1073,26 @@ impl Engine {
         }
 
         let t0 = Instant::now();
+        let exec_start = self.tracer.now();
         let out = self
             .model
             .decode(&tokens, &self.k_buf, &self.v_buf, &views.positions)?;
         let step_us = t0.elapsed().as_secs_f64() * 1e6;
         self.metrics.decode_steps += 1;
-        self.metrics.step_us.push(step_us);
+        self.metrics.step_us.record(step_us);
+        let lanes = slots.iter().flatten().count();
+        self.tracer.record_since(
+            Phase::LeanExec,
+            exec_start,
+            Attrs { k: Some(lanes), ..Default::default() },
+        );
 
         if self.config.project_hardware {
             self.record_projection(&views.lens, &views.groups);
         }
 
         // Per-lane: append fresh KV, sample, check termination.
+        let sample_start = self.tracer.now();
         let plane = l * h * dh;
         let mut nk = vec![0.0f32; plane];
         let mut nv = vec![0.0f32; plane];
@@ -1024,6 +1144,11 @@ impl Engine {
                 self.finish_seq(id, reason, finished);
             }
         }
+        self.tracer.record_since(
+            Phase::Sample,
+            sample_start,
+            Attrs { k: Some(lanes), ..Default::default() },
+        );
         Ok(())
     }
 
@@ -1044,7 +1169,7 @@ impl Engine {
         // returns to the pool.
         self.committed_pages -= seq.reserved_pages - seq.index_kept;
         let now = Instant::now();
-        finished.push(FinishedRequest {
+        let fr = FinishedRequest {
             id,
             prompt_len: seq.prompt_len,
             output: seq.generated,
@@ -1055,7 +1180,9 @@ impl Engine {
             cum_logprob: seq.cum_logprob,
             logprobs: seq.logprobs,
             parent: seq.parent,
-        });
+        };
+        self.timelines.observe(fr.timeline());
+        finished.push(fr);
         self.batcher.release(id);
         self.cache.free_seq(id);
         self.fork_tree.remove(id);
@@ -1102,6 +1229,7 @@ impl Engine {
         // be smaller under sparse selection (compacted artifact views).
         let mut true_len = vec![0usize; b];
         let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); b];
+        let draft_start = self.tracer.now();
         for (bi, slot) in slots.iter().enumerate() {
             let Some(id) = slot else { continue };
             let seq = &self.active[id];
@@ -1126,15 +1254,28 @@ impl Engine {
             }
             drafts[bi] = d;
         }
+        let drafted: usize = drafts.iter().map(Vec::len).sum();
+        self.tracer.record_since(
+            Phase::SpecDraft,
+            draft_start,
+            Attrs { k: Some(drafted), ..Default::default() },
+        );
 
         let t0 = Instant::now();
+        let verify_start = self.tracer.now();
         let out = self
             .model
             .verify(&tokens, &self.k_buf, &self.v_buf, &views.positions)?;
         let step_us = t0.elapsed().as_secs_f64() * 1e6;
         self.metrics.decode_steps += 1;
-        self.metrics.step_us.push(step_us);
+        self.metrics.step_us.record(step_us);
+        self.tracer.record_since(
+            Phase::SpecVerify,
+            verify_start,
+            Attrs { k: Some(drafted), ..Default::default() },
+        );
 
+        let sample_start = self.tracer.now();
         let plane = l * h * dh;
         let mut nk = vec![0.0f32; plane];
         let mut nv = vec![0.0f32; plane];
@@ -1189,12 +1330,23 @@ impl Engine {
                 }
             }
             self.cache.truncate_seq(id, cache_len + commit)?;
-            self.metrics.spec.rolled_back += draft.len() + 1 - commit;
+            let rolled = draft.len() + 1 - commit;
+            self.metrics.spec.rolled_back += rolled;
             self.metrics.spec.verify_passes += 1;
             self.metrics.spec.drafted += draft.len();
             self.metrics.spec.accepted += commit - 1;
             self.metrics.spec.committed += commit;
             self.metrics.tokens_generated += commit;
+            self.tracer.instant(
+                Phase::SpecCommit,
+                Attrs { seq: Some(id), k: Some(commit), ..Default::default() },
+            );
+            if rolled > 0 {
+                self.tracer.instant(
+                    Phase::Rollback,
+                    Attrs { seq: Some(id), k: Some(rolled), ..Default::default() },
+                );
+            }
 
             let seq = self.active.get_mut(&id).unwrap();
             for t in &verdict.committed[..commit] {
@@ -1219,6 +1371,7 @@ impl Engine {
                 self.finish_seq(id, reason, finished);
             }
         }
+        self.tracer.record_since(Phase::Sample, sample_start, Attrs::default());
         Ok(())
     }
 
@@ -1300,9 +1453,11 @@ impl Engine {
             &self.arch,
         );
         let layers = self.model.art.n_layers as f64;
-        self.metrics.projected_lean_us.push(la.latency_us * layers);
-        self.metrics.projected_fd_us.push(fd.latency_us * layers);
-        self.metrics.projected_occupancy.push(la.occupancy);
+        self.metrics.record_projection(
+            la.latency_us * layers,
+            fd.latency_us * layers,
+            la.occupancy,
+        );
 
         if groups.is_empty() {
             return;
@@ -1322,9 +1477,10 @@ impl Engine {
             return;
         }
         let r = simulate_cascade(&cp, &self.arch);
-        self.metrics.projected_cascade_us.push(r.latency_us * layers);
-        self.metrics.cascade_kv_bytes_saved +=
-            (r.baseline_kv_bytes - r.kv_bytes) * layers;
+        self.metrics.record_cascade_projection(
+            r.latency_us * layers,
+            (r.baseline_kv_bytes - r.kv_bytes) * layers,
+        );
     }
 }
 
@@ -1357,6 +1513,15 @@ mod tests {
     #[test]
     fn config_default_streams_dense() {
         assert!(EngineConfig::default().sparse.is_none());
+    }
+
+    #[test]
+    fn config_default_leaves_tracer_disabled() {
+        assert_eq!(
+            EngineConfig::default().trace_capacity,
+            0,
+            "tracing is opt-in"
+        );
     }
 
     // Engine integration tests — including fork/cancel, best-of-n and

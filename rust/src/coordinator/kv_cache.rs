@@ -92,6 +92,12 @@ impl PagedKvCache {
             * std::mem::size_of::<f32>()
     }
 
+    /// K+V bytes held by one cached token (f32 host storage) — the unit
+    /// the gather spans and bandwidth counters report in.
+    pub fn token_bytes(&self) -> usize {
+        self.page_bytes() / self.page_tokens
+    }
+
     pub fn seq_len(&self, id: RequestId) -> Option<usize> {
         self.seqs.get(&id).map(|s| s.len)
     }

@@ -2,7 +2,17 @@
 //! prefix-cache accounting, and the per-step LeanAttention-vs-FlashDecoding
 //! hardware projection the engine records (linking the serving loop back
 //! to the paper's contribution).
+//!
+//! Latency series (`step_us`, `prefill_us`, the projection series) are
+//! [`LogHistogram`]s, not raw `Vec<f64>`s — memory stays fixed on a
+//! long-running engine while mean/min/max stay exact and percentiles
+//! stay within one bucket width (~9%). Everything the module exports is
+//! enumerated in [`DOCUMENTED_METRICS`] and serialized through one
+//! [`MetricsSnapshot`] ([`Metrics::snapshot`]), so the Prometheus and
+//! JSON exporters can never disagree about which counters exist.
 
+use crate::obs::hist::LogHistogram;
+use crate::obs::snapshot::MetricsSnapshot;
 use crate::spec::SpecStats;
 use crate::util::stats::Summary;
 
@@ -37,6 +47,16 @@ impl PrefixCacheStats {
         } else {
             self.hits as f64 / self.lookups as f64
         }
+    }
+
+    fn merge(&mut self, o: &PrefixCacheStats) {
+        self.lookups += o.lookups;
+        self.hits += o.hits;
+        self.tokens_matched += o.tokens_matched;
+        self.pages_shared += o.pages_shared;
+        self.kv_bytes_deduped += o.kv_bytes_deduped;
+        self.evicted_pages += o.evicted_pages;
+        self.cow_copies += o.cow_copies;
     }
 }
 
@@ -96,6 +116,17 @@ impl SparseStats {
             self.coverage_sum / self.coverage_samples as f64
         }
     }
+
+    fn merge(&mut self, o: &SparseStats) {
+        self.selection_steps += o.selection_steps;
+        self.lanes_scored += o.lanes_scored;
+        self.pages_total += o.pages_total;
+        self.pages_scanned += o.pages_scanned;
+        self.gather_bytes_dense += o.gather_bytes_dense;
+        self.gather_bytes_sparse += o.gather_bytes_sparse;
+        self.coverage_sum += o.coverage_sum;
+        self.coverage_samples += o.coverage_samples;
+    }
 }
 
 /// Parallel-sampling (fork/prune) counters.
@@ -111,6 +142,69 @@ pub struct SamplingStats {
     pub cancelled: usize,
 }
 
+impl SamplingStats {
+    fn merge(&mut self, o: &SamplingStats) {
+        self.fork_calls += o.fork_calls;
+        self.forked_siblings += o.forked_siblings;
+        self.cancelled += o.cancelled;
+    }
+}
+
+/// Every metric [`Metrics::snapshot`] exports, in exposition order —
+/// the documented surface the consistency audit (`tests/obs_props.rs`)
+/// diffs against both exporter outputs so nothing is silently dropped.
+pub const DOCUMENTED_METRICS: &[&str] = &[
+    "prefill_calls_total",
+    "decode_steps_total",
+    "tokens_generated_total",
+    "requests_finished_total",
+    "decode_tokens_per_s",
+    "step_us_count",
+    "step_us_sum",
+    "step_us_p50",
+    "step_us_p95",
+    "step_us_p99",
+    "step_us_p999",
+    "prefill_us_count",
+    "prefill_us_sum",
+    "prefill_us_p50",
+    "prefill_us_p95",
+    "prefill_us_p99",
+    "prefill_us_p999",
+    "prefix_lookups_total",
+    "prefix_hits_total",
+    "prefix_hit_rate",
+    "prefix_tokens_matched_total",
+    "prefix_pages_shared_total",
+    "prefix_kv_bytes_deduped_total",
+    "prefix_evicted_pages_total",
+    "prefix_cow_copies_total",
+    "sampling_fork_calls_total",
+    "sampling_forked_siblings_total",
+    "sampling_cancelled_total",
+    "spec_verify_passes_total",
+    "spec_drafted_total",
+    "spec_accepted_total",
+    "spec_committed_total",
+    "spec_rolled_back_total",
+    "spec_acceptance_rate",
+    "sparse_selection_steps_total",
+    "sparse_lanes_scored_total",
+    "sparse_pages_considered_total",
+    "sparse_pages_scanned_total",
+    "sparse_scan_fraction",
+    "sparse_gather_bytes_dense_total",
+    "sparse_gather_bytes_sparse_total",
+    "sparse_mean_coverage",
+    "cascade_gather_steps_total",
+    "gather_bytes_flat_total",
+    "gather_bytes_shared_total",
+    "projected_speedup",
+    "projected_occupancy",
+    "projected_cascade_us_mean",
+    "cascade_kv_bytes_saved_total",
+];
+
 /// Accumulated engine counters.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -118,19 +212,23 @@ pub struct Metrics {
     pub decode_steps: usize,
     pub tokens_generated: usize,
     pub requests_finished: usize,
-    /// Wall-clock of each decode step, microseconds.
-    pub step_us: Vec<f64>,
-    /// Wall-clock of each prefill call, microseconds.
-    pub prefill_us: Vec<f64>,
+    /// Wall-clock of each decode step, microseconds (bounded histogram).
+    pub step_us: LogHistogram,
+    /// Wall-clock of each prefill call, microseconds (bounded histogram).
+    pub prefill_us: LogHistogram,
     /// Projected GPU attention latency per step under LeanAttention (us).
-    pub projected_lean_us: Vec<f64>,
+    pub projected_lean_us: LogHistogram,
     /// Projected GPU attention latency per step under FlashDecoding (us).
-    pub projected_fd_us: Vec<f64>,
-    /// Projected LeanAttention SM occupancy per step.
-    pub projected_occupancy: Vec<f64>,
+    pub projected_fd_us: LogHistogram,
+    /// Sum of projected LeanAttention SM occupancy over projected steps.
+    pub projected_occupancy_sum: f64,
+    /// Sum of per-step FlashDecoding/LeanAttention latency ratios.
+    pub projected_speedup_sum: f64,
+    /// Steps contributing to the projection sums.
+    pub projected_steps: usize,
     /// Projected attention latency per step under cascade (shared-prefix)
     /// stream-K, when the step's batch had a shared prefix (us).
-    pub projected_cascade_us: Vec<f64>,
+    pub projected_cascade_us: LogHistogram,
     /// Modeled KV bytes the cascade plan avoided streaming, summed over
     /// projected steps (shared prefix counted once per group, not per
     /// sequence).
@@ -155,36 +253,252 @@ pub struct Metrics {
 
 impl Metrics {
     pub fn step_summary(&self) -> Option<Summary> {
-        (!self.step_us.is_empty()).then(|| Summary::of(&self.step_us))
+        Summary::from_histogram(&self.step_us)
     }
 
     pub fn prefill_summary(&self) -> Option<Summary> {
-        (!self.prefill_us.is_empty()).then(|| Summary::of(&self.prefill_us))
+        Summary::from_histogram(&self.prefill_us)
+    }
+
+    /// Record one step's hardware projection (LeanAttention vs
+    /// FlashDecoding latency plus LeanAttention occupancy).
+    pub fn record_projection(&mut self, lean_us: f64, fd_us: f64, occupancy: f64) {
+        self.projected_lean_us.record(lean_us);
+        self.projected_fd_us.record(fd_us);
+        self.projected_occupancy_sum += occupancy;
+        if lean_us > 0.0 {
+            self.projected_speedup_sum += fd_us / lean_us;
+        }
+        self.projected_steps += 1;
+    }
+
+    /// Record one shared-prefix step's cascade projection.
+    pub fn record_cascade_projection(&mut self, cascade_us: f64, kv_bytes_saved: f64) {
+        self.projected_cascade_us.record(cascade_us);
+        self.cascade_kv_bytes_saved += kv_bytes_saved;
     }
 
     /// Mean projected speedup of LeanAttention over FlashDecoding across
     /// the steps this engine served.
     pub fn projected_speedup(&self) -> Option<f64> {
-        if self.projected_fd_us.is_empty() {
+        if self.projected_steps == 0 {
             return None;
         }
-        let ratios: Vec<f64> = self
-            .projected_fd_us
-            .iter()
-            .zip(&self.projected_lean_us)
-            .map(|(fd, la)| fd / la)
-            .collect();
-        Some(ratios.iter().sum::<f64>() / ratios.len() as f64)
+        Some(self.projected_speedup_sum / self.projected_steps as f64)
+    }
+
+    /// Mean projected LeanAttention occupancy across projected steps.
+    pub fn projected_occupancy(&self) -> f64 {
+        if self.projected_steps == 0 {
+            return 0.0;
+        }
+        self.projected_occupancy_sum / self.projected_steps as f64
     }
 
     /// Tokens per second of decode wall-clock.
     pub fn decode_tps(&self) -> f64 {
-        let total_s: f64 = self.step_us.iter().sum::<f64>() * 1e-6;
+        let total_s: f64 = self.step_us.sum() * 1e-6;
         if total_s <= 0.0 {
             0.0
         } else {
             self.tokens_generated as f64 / total_s
         }
+    }
+
+    /// Fold another engine's metrics in (multi-replica router totals).
+    pub fn merge(&mut self, o: &Metrics) {
+        self.prefill_calls += o.prefill_calls;
+        self.decode_steps += o.decode_steps;
+        self.tokens_generated += o.tokens_generated;
+        self.requests_finished += o.requests_finished;
+        self.step_us.merge(&o.step_us);
+        self.prefill_us.merge(&o.prefill_us);
+        self.projected_lean_us.merge(&o.projected_lean_us);
+        self.projected_fd_us.merge(&o.projected_fd_us);
+        self.projected_occupancy_sum += o.projected_occupancy_sum;
+        self.projected_speedup_sum += o.projected_speedup_sum;
+        self.projected_steps += o.projected_steps;
+        self.projected_cascade_us.merge(&o.projected_cascade_us);
+        self.cascade_kv_bytes_saved += o.cascade_kv_bytes_saved;
+        self.cascade_gather_steps += o.cascade_gather_steps;
+        self.gather_bytes_flat += o.gather_bytes_flat;
+        self.gather_bytes_shared += o.gather_bytes_shared;
+        self.prefix.merge(&o.prefix);
+        self.sampling.merge(&o.sampling);
+        self.spec.merge(&o.spec);
+        self.sparse.merge(&o.sparse);
+    }
+
+    /// Sample every documented metric into the one snapshot both
+    /// exporters serialize. Names match [`DOCUMENTED_METRICS`] exactly.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut s = MetricsSnapshot::new();
+        s.counter("prefill_calls_total", self.prefill_calls as f64, "Prefill calls served.");
+        s.counter("decode_steps_total", self.decode_steps as f64, "Decode steps taken.");
+        s.counter(
+            "tokens_generated_total",
+            self.tokens_generated as f64,
+            "Tokens sampled across all sequences.",
+        );
+        s.counter(
+            "requests_finished_total",
+            self.requests_finished as f64,
+            "Requests run to completion.",
+        );
+        s.gauge("decode_tokens_per_s", self.decode_tps(), "Decode throughput, tokens/s.");
+        s.counter("step_us_count", self.step_us.count() as f64, "Decode steps timed.");
+        s.counter("step_us_sum", self.step_us.sum(), "Total decode step wall-clock (us).");
+        s.gauge("step_us_p50", self.step_us.quantile(0.5), "p50 decode step latency (us).");
+        s.gauge("step_us_p95", self.step_us.quantile(0.95), "p95 decode step latency (us).");
+        s.gauge("step_us_p99", self.step_us.quantile(0.99), "p99 decode step latency (us).");
+        s.gauge("step_us_p999", self.step_us.quantile(0.999), "p999 decode step latency (us).");
+        s.counter("prefill_us_count", self.prefill_us.count() as f64, "Prefill calls timed.");
+        s.counter("prefill_us_sum", self.prefill_us.sum(), "Total prefill wall-clock (us).");
+        s.gauge("prefill_us_p50", self.prefill_us.quantile(0.5), "p50 prefill latency (us).");
+        s.gauge("prefill_us_p95", self.prefill_us.quantile(0.95), "p95 prefill latency (us).");
+        s.gauge("prefill_us_p99", self.prefill_us.quantile(0.99), "p99 prefill latency (us).");
+        s.gauge("prefill_us_p999", self.prefill_us.quantile(0.999), "p999 prefill latency (us).");
+        s.counter("prefix_lookups_total", self.prefix.lookups as f64, "Prefix-index probes.");
+        s.counter("prefix_hits_total", self.prefix.hits as f64, "Prompts reusing cached pages.");
+        s.gauge("prefix_hit_rate", self.prefix.hit_rate(), "Prefix-cache hit rate per probe.");
+        s.counter(
+            "prefix_tokens_matched_total",
+            self.prefix.tokens_matched as f64,
+            "Prompt tokens served from cached prefix pages.",
+        );
+        s.counter(
+            "prefix_pages_shared_total",
+            self.prefix.pages_shared as f64,
+            "Page references taken on cached prefix pages.",
+        );
+        s.counter(
+            "prefix_kv_bytes_deduped_total",
+            self.prefix.kv_bytes_deduped as f64,
+            "KV bytes deduplicated by prefix sharing.",
+        );
+        s.counter(
+            "prefix_evicted_pages_total",
+            self.prefix.evicted_pages as f64,
+            "Prefix-index pages evicted under pressure.",
+        );
+        s.counter(
+            "prefix_cow_copies_total",
+            self.prefix.cow_copies as f64,
+            "Copy-on-write page clones.",
+        );
+        s.counter(
+            "sampling_fork_calls_total",
+            self.sampling.fork_calls as f64,
+            "Engine::fork calls served.",
+        );
+        s.counter(
+            "sampling_forked_siblings_total",
+            self.sampling.forked_siblings as f64,
+            "Sibling sequences created by forks.",
+        );
+        s.counter(
+            "sampling_cancelled_total",
+            self.sampling.cancelled as f64,
+            "Sequences cancelled mid-generation.",
+        );
+        s.counter(
+            "spec_verify_passes_total",
+            self.spec.verify_passes as f64,
+            "Speculative verify passes run.",
+        );
+        s.counter("spec_drafted_total", self.spec.drafted as f64, "Draft tokens proposed.");
+        s.counter("spec_accepted_total", self.spec.accepted as f64, "Draft tokens accepted.");
+        s.counter(
+            "spec_committed_total",
+            self.spec.committed as f64,
+            "Tokens committed by verify passes.",
+        );
+        s.counter(
+            "spec_rolled_back_total",
+            self.spec.rolled_back as f64,
+            "Speculative KV rows rolled back.",
+        );
+        s.gauge(
+            "spec_acceptance_rate",
+            self.spec.acceptance_rate(),
+            "Fraction of drafted tokens accepted.",
+        );
+        s.counter(
+            "sparse_selection_steps_total",
+            self.sparse.selection_steps as f64,
+            "Decode steps using sparse page selection.",
+        );
+        s.counter(
+            "sparse_lanes_scored_total",
+            self.sparse.lanes_scored as f64,
+            "Lanes whose pages were scored.",
+        );
+        s.counter(
+            "sparse_pages_considered_total",
+            self.sparse.pages_total as f64,
+            "Context pages considered by selection.",
+        );
+        s.counter(
+            "sparse_pages_scanned_total",
+            self.sparse.pages_scanned as f64,
+            "Pages kept by selection (scanned).",
+        );
+        s.gauge(
+            "sparse_scan_fraction",
+            self.sparse.scan_fraction(),
+            "Fraction of considered pages scanned.",
+        );
+        s.counter(
+            "sparse_gather_bytes_dense_total",
+            self.sparse.gather_bytes_dense as f64,
+            "KV bytes a dense gather would have moved.",
+        );
+        s.counter(
+            "sparse_gather_bytes_sparse_total",
+            self.sparse.gather_bytes_sparse as f64,
+            "KV bytes the sparse gather moved.",
+        );
+        s.gauge(
+            "sparse_mean_coverage",
+            self.sparse.mean_coverage(),
+            "Mean score-mass coverage of selections.",
+        );
+        s.counter(
+            "cascade_gather_steps_total",
+            self.cascade_gather_steps as f64,
+            "Steps taking the deduplicated cascade gather.",
+        );
+        s.counter(
+            "gather_bytes_flat_total",
+            self.gather_bytes_flat as f64,
+            "KV bytes a flat gather would have moved.",
+        );
+        s.counter(
+            "gather_bytes_shared_total",
+            self.gather_bytes_shared as f64,
+            "KV bytes the cascade gather moved.",
+        );
+        s.gauge(
+            "projected_speedup",
+            self.projected_speedup().unwrap_or(0.0),
+            "Mean projected LeanAttention speedup over FlashDecoding.",
+        );
+        s.gauge(
+            "projected_occupancy",
+            self.projected_occupancy(),
+            "Mean projected LeanAttention SM occupancy.",
+        );
+        s.gauge(
+            "projected_cascade_us_mean",
+            self.projected_cascade_us.mean(),
+            "Mean projected cascade attention latency (us).",
+        );
+        s.counter(
+            "cascade_kv_bytes_saved_total",
+            self.cascade_kv_bytes_saved,
+            "Modeled KV bytes the cascade plan avoided streaming.",
+        );
+        s
     }
 
     pub fn report(&self) -> String {
@@ -268,11 +582,9 @@ impl Metrics {
             ));
         }
         if let Some(sp) = self.projected_speedup() {
-            let occ = self.projected_occupancy.iter().sum::<f64>()
-                / self.projected_occupancy.len().max(1) as f64;
             s.push_str(&format!(
                 "projected on A100: LeanAttention {sp:.2}x over FlashDecoding, occupancy {:.0}%\n",
-                occ * 100.0
+                self.projected_occupancy() * 100.0
             ));
         }
         if self.cascade_gather_steps > 0 {
@@ -290,13 +602,11 @@ impl Metrics {
             ));
         }
         if !self.projected_cascade_us.is_empty() {
-            let c: f64 = self.projected_cascade_us.iter().sum::<f64>()
-                / self.projected_cascade_us.len() as f64;
             s.push_str(&format!(
                 "projected cascade: mean {:.1}us attention/step over {} shared-prefix steps, \
                  {:.1} KiB modeled KV traffic saved\n",
-                c,
-                self.projected_cascade_us.len(),
+                self.projected_cascade_us.mean(),
+                self.projected_cascade_us.count(),
                 self.cascade_kv_bytes_saved / 1024.0,
             ));
         }
@@ -321,15 +631,13 @@ mod tests {
 
     #[test]
     fn speedup_and_tps() {
-        let m = Metrics {
-            decode_steps: 2,
-            tokens_generated: 4,
-            step_us: vec![1000.0, 1000.0],
-            projected_lean_us: vec![10.0, 10.0],
-            projected_fd_us: vec![20.0, 15.0],
-            ..Default::default()
-        };
+        let mut m = Metrics { decode_steps: 2, tokens_generated: 4, ..Default::default() };
+        m.step_us.record(1000.0);
+        m.step_us.record(1000.0);
+        m.record_projection(10.0, 20.0, 0.9);
+        m.record_projection(10.0, 15.0, 0.7);
         assert!((m.projected_speedup().unwrap() - 1.75).abs() < 1e-12);
+        assert!((m.projected_occupancy() - 0.8).abs() < 1e-12);
         assert!((m.decode_tps() - 2000.0).abs() < 1e-9);
     }
 
@@ -443,13 +751,46 @@ mod tests {
 
     #[test]
     fn step_percentiles_surface_p95() {
-        let m = Metrics {
-            step_us: (1..=100).map(|x| x as f64).collect(),
-            ..Default::default()
-        };
+        let mut m = Metrics::default();
+        for x in 1..=100 {
+            m.step_us.record(x as f64);
+        }
         let rep = m.report();
         assert!(rep.contains("p95="), "{rep}");
         let sm = m.step_summary().unwrap();
         assert!(sm.p50 <= sm.p95 && sm.p95 <= sm.p99);
+    }
+
+    #[test]
+    fn merge_accumulates_across_replicas() {
+        let mut a = Metrics { decode_steps: 2, tokens_generated: 8, ..Default::default() };
+        a.step_us.record(100.0);
+        a.record_projection(10.0, 20.0, 0.8);
+        let mut b = Metrics { decode_steps: 3, tokens_generated: 5, ..Default::default() };
+        b.step_us.record(300.0);
+        b.record_projection(10.0, 10.0, 0.6);
+        b.prefix.lookups = 4;
+        b.prefix.hits = 2;
+        a.merge(&b);
+        assert_eq!(a.decode_steps, 5);
+        assert_eq!(a.tokens_generated, 13);
+        assert_eq!(a.step_us.count(), 2);
+        assert!((a.projected_speedup().unwrap() - 1.5).abs() < 1e-12);
+        assert!((a.projected_occupancy() - 0.7).abs() < 1e-12);
+        assert_eq!(a.prefix.lookups, 4);
+    }
+
+    #[test]
+    fn snapshot_exports_exactly_the_documented_metrics() {
+        let mut m = Metrics { decode_steps: 7, tokens_generated: 21, ..Default::default() };
+        m.step_us.record(250.0);
+        let snap = m.snapshot();
+        assert_eq!(snap.names(), DOCUMENTED_METRICS.to_vec());
+        assert_eq!(snap.get("decode_steps_total").unwrap().value, 7.0);
+        assert_eq!(snap.get("step_us_count").unwrap().value, 1.0);
+        let text = snap.to_prometheus();
+        for name in DOCUMENTED_METRICS {
+            assert!(text.contains(&format!("leanattn_{name} ")), "{name} missing");
+        }
     }
 }

@@ -19,7 +19,10 @@
 //!   round-robin on ties, with a load valve that drops affinity when the
 //!   warm replica's queue skews past the cap).
 //! * [`metrics`] — latency/throughput accounting, including prefix-cache
-//!   hit rates and deduplicated KV bytes.
+//!   hit rates and deduplicated KV bytes; phase timings live in
+//!   log-bucketed histograms ([`crate::obs::LogHistogram`]) and every
+//!   documented counter exports through one
+//!   [`crate::obs::MetricsSnapshot`].
 //! * [`pool`] — std-thread fork-join pool (tokio is not in the offline
 //!   crate cache; the event loop is plain Rust).
 
@@ -34,7 +37,9 @@ pub mod router;
 
 pub use engine::{Engine, EngineConfig};
 pub use kv_cache::PagedKvCache;
-pub use metrics::{Metrics, PrefixCacheStats, SamplingStats, SparseStats};
+pub use metrics::{
+    Metrics, PrefixCacheStats, SamplingStats, SparseStats, DOCUMENTED_METRICS,
+};
 pub use radix::{PrefixMatch, RadixPrefixIndex};
 pub use request::{FinishReason, FinishedRequest, Request, RequestId};
 pub use router::Router;

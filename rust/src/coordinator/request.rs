@@ -2,6 +2,7 @@
 
 use std::time::Instant;
 
+use crate::obs::RequestTimeline;
 use crate::sampling::SamplingParams;
 
 /// Monotonic request identifier.
@@ -86,6 +87,18 @@ impl FinishedRequest {
             self.output.len() as f64 / self.decode_s
         }
     }
+
+    /// This request's lifecycle timeline, the unit the observability
+    /// plane's [`crate::obs::TimelineRecorder`] aggregates.
+    pub fn timeline(&self) -> RequestTimeline {
+        RequestTimeline {
+            id: self.id,
+            queue_us: self.queue_s * 1e6,
+            prefill_us: self.prefill_s * 1e6,
+            decode_us: self.decode_s * 1e6,
+            tokens: self.output.len(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -125,5 +138,11 @@ mod tests {
         assert!((f.decode_tps() - 2.0).abs() < 1e-12);
         let trace_sum: f64 = f.logprobs.iter().map(|&x| f64::from(x)).sum();
         assert!((f.cum_logprob - trace_sum).abs() < 1e-9);
+
+        let tl = f.timeline();
+        assert_eq!(tl.id, 1);
+        assert_eq!(tl.tokens, 4);
+        assert!((tl.queue_us - 0.1e6).abs() < 1e-6);
+        assert!((tl.e2e_us() - f.total_s() * 1e6).abs() < 1e-3);
     }
 }

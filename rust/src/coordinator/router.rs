@@ -22,7 +22,10 @@
 
 use anyhow::Result;
 
+use crate::obs::TimelineRecorder;
+
 use super::engine::Engine;
+use super::metrics::Metrics;
 use super::request::{FinishedRequest, RequestId};
 
 /// Prefix-affinity dispatcher over engine replicas.
@@ -161,6 +164,27 @@ impl Router {
 
     pub fn engines(&self) -> &[Engine] {
         &self.engines
+    }
+
+    /// Fleet-wide serving counters: every replica's [`Metrics`] folded
+    /// into one (histograms merge exactly, so fleet percentiles are as
+    /// tight as any single replica's).
+    pub fn merged_metrics(&self) -> Metrics {
+        let mut m = Metrics::default();
+        for e in &self.engines {
+            m.merge(&e.metrics);
+        }
+        m
+    }
+
+    /// Fleet-wide request lifecycles — the recorder the serving SLO
+    /// report aggregates across replicas.
+    pub fn merged_timelines(&self) -> TimelineRecorder {
+        let mut t = TimelineRecorder::default();
+        for e in &self.engines {
+            t.merge(&e.timelines);
+        }
+        t
     }
 }
 

@@ -22,9 +22,11 @@
 //!   stream-K attention with Rust-side reduction), [`sampling`] the
 //!   deterministic logits pipeline plus parallel-sampling controllers,
 //!   [`spec`] speculative decoding (draft-and-verify over the
-//!   multi-query lean pass, bit-identical to sequential decoding), and
+//!   multi-query lean pass, bit-identical to sequential decoding),
 //!   [`sparse`] page-granular top-k KV selection for long-context decode
-//!   (score → select → gather → lean over a pruned page set).
+//!   (score → select → gather → lean over a pruned page set), and
+//!   [`obs`] the engine observability plane (structured step tracing,
+//!   phase-timing histograms, request timelines, serving SLO reports).
 //!
 //! Quick start (after `make artifacts`):
 //!
@@ -43,6 +45,7 @@ pub mod attention;
 pub mod bench_harness;
 pub mod coordinator;
 pub mod model;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod sampling;

@@ -137,6 +137,14 @@ commands:
            [--sink-pages S] [--window-pages W] [--dense-threshold T]
                                     always-retained sinks/recency window and
                                     the page count below which decode is dense
+           [--slo-ms MS]            print the serving SLO report (TTFT/e2e
+                                    percentiles, goodput, attainment)
+           [--metrics-out PATH]     write the engine metrics snapshot
+                                    (.prom -> Prometheus text exposition,
+                                    anything else -> versioned JSON)
+           [--trace-capacity N] [--trace-out PATH]   enable the structured
+                                    tracer (N-event ring) and write its
+                                    Chrome trace-event export
   simulate --batch B --heads H --ctx N [--head-dim 64] [--arch a100]
            [--shared-prefix N]      add the cascade row: batch shares an
                                     N-token prefix, streamed once per group
@@ -164,6 +172,12 @@ commands:
                                     sparse page selection: gathered-KV bytes
                                     vs dense, needle recall, executor
                                     exactness, full-budget stream equality
+  bench    --obs [--requests 24] [--trace-out PATH] [--slo-ms 50]
+           [--trace-capacity 8192] [--overhead-limit 0.02] [--smoke]
+                                    observability plane: traced cascade +
+                                    speculative serving loop, per-phase
+                                    p50/p95/p99 timings, SLO report, and
+                                    the disabled-tracer overhead bound
            (every bench takes [--seed N] for run-to-run reproducibility)
   plan     --batch B --heads H --ctx N [--slots 216]
   figures  [table1|fig01|fig02|fig03|fig07|fig08|fig09|fig10|fig11|fig12|fig13|all]
@@ -237,6 +251,10 @@ fn serve(args: &Args) -> Result<()> {
     };
     params.validate()?;
 
+    // Observability: a nonzero ring capacity turns the structured
+    // tracer on; the snapshot/SLO surfaces are always available.
+    let trace_capacity = args.usize("trace-capacity", 0);
+
     let runtime = Rc::new(Runtime::cpu()?);
     let manifest = Manifest::load(Manifest::default_dir())?;
     let mut engine = Engine::new(
@@ -250,6 +268,7 @@ fn serve(args: &Args) -> Result<()> {
             spec_draft,
             adaptive_spec,
             sparse,
+            trace_capacity,
             ..Default::default()
         },
     )?;
@@ -282,6 +301,7 @@ fn serve(args: &Args) -> Result<()> {
         }
     }
 
+    let wall0 = std::time::Instant::now();
     let mut rng = Rng::new(seed);
     let vocab = 512u64;
     // A shared system prompt, prepended to every request so the radix
@@ -338,6 +358,7 @@ fn serve(args: &Args) -> Result<()> {
             }
         }
         println!("\n{}", engine.metrics.report());
+        serve_obs_out(&engine, args, wall0.elapsed().as_secs_f64())?;
         return Ok(());
     }
 
@@ -366,6 +387,41 @@ fn serve(args: &Args) -> Result<()> {
         );
     }
     println!("\n{}", engine.metrics.report());
+    serve_obs_out(&engine, args, wall0.elapsed().as_secs_f64())?;
+    Ok(())
+}
+
+/// The observability surfaces `serve` exposes after a run: the SLO
+/// report (`--slo-ms`), the metrics snapshot (`--metrics-out`, Prometheus
+/// text for `.prom` paths and versioned JSON otherwise), and the Chrome
+/// trace-event export (`--trace-capacity N --trace-out PATH`).
+fn serve_obs_out(engine: &Engine, args: &Args, wall_s: f64) -> Result<()> {
+    if args.has("slo-ms") {
+        let slo_ms = args.f64("slo-ms", 50.0);
+        println!("\n{}", engine.timelines.slo_report(slo_ms, wall_s).render());
+    }
+    if let Some(path) = args.flags.get("metrics-out") {
+        let snap = engine.snapshot();
+        let text = if path.ends_with(".prom") {
+            snap.to_prometheus()
+        } else {
+            snap.to_json().to_string()
+        };
+        std::fs::write(path, &text)
+            .with_context(|| format!("write metrics snapshot to {path}"))?;
+        println!("metrics snapshot: {} series -> {path}", snap.names().len());
+    }
+    if let Some(path) = args.flags.get("trace-out") {
+        let trace = engine.tracer.export_chrome_trace();
+        std::fs::write(path, trace.to_string())
+            .with_context(|| format!("write chrome trace to {path}"))?;
+        println!(
+            "chrome trace: {} events -> {path} ({} dropped to ring overflow; \
+             load in chrome://tracing or ui.perfetto.dev)",
+            engine.tracer.len(),
+            engine.tracer.dropped()
+        );
+    }
     Ok(())
 }
 
@@ -547,12 +603,16 @@ fn bench_cmd(args: &Args) -> Result<()> {
     if args.has("sparse") {
         return bench_sparse(args, seed);
     }
+    if args.has("obs") {
+        return bench_obs(args, seed);
+    }
     anyhow::ensure!(
         args.has("cascade-exec"),
         "usage: leanattn bench --cascade-exec [--batch 4] [--prefix 256] ...\n       \
          leanattn bench --sampling [--n 4] [--history 256] [--suffix 64] [--smoke]\n       \
          leanattn bench --spec [--k 4] [--draft ngram|model] [--smoke]\n       \
-         leanattn bench --sparse [--kv-budget 6] [--context 256] [--smoke]"
+         leanattn bench --sparse [--kv-budget 6] [--context 256] [--smoke]\n       \
+         leanattn bench --obs [--requests 24] [--trace-out PATH] [--smoke]"
     );
     let case = ExecCase {
         batch: args.usize("batch", 4),
@@ -684,6 +744,60 @@ fn bench_sampling(args: &Args, seed: u64) -> Result<()> {
             c.attention.max_err < 1e-3,
             "flat and cascade attention diverged: {}",
             c.attention.max_err
+        );
+    }
+    Ok(())
+}
+
+/// `leanattn bench --obs`: the observability plane measured end to end
+/// (artifact-free — host cascade executor + synthetic spec model).
+/// Runs a traced pseudo-serving loop, prints the per-phase timing table
+/// and the serving SLO report, asserts the disabled tracer's overhead
+/// bound on the cascade body, and writes the validated Chrome
+/// trace-event export with `--trace-out`.
+fn bench_obs(args: &Args, seed: u64) -> Result<()> {
+    use lean_attention::bench_harness::{run_obs, ObsCase};
+
+    let smoke = args.has("smoke");
+    let base = if smoke { ObsCase::smoke() } else { ObsCase::default_case() };
+    let case = ObsCase {
+        requests: args.usize("requests", base.requests),
+        batch: args.usize("batch", base.batch),
+        prefix: args.usize("prefix", base.prefix as usize) as u32,
+        suffix: args.usize("suffix", base.suffix as usize) as u32,
+        heads: args.usize("heads", base.heads),
+        head_dim: args.usize("head-dim", base.head_dim),
+        tile: args.usize("tile", base.tile),
+        slots: args.usize("slots", base.slots),
+        spec_k: args.usize("k", base.spec_k),
+        max_new: args.usize("max-new", base.max_new),
+        vocab: args.usize("vocab", base.vocab),
+        trace_capacity: args.usize("trace-capacity", base.trace_capacity),
+        slo_ms: args.f64("slo-ms", base.slo_ms),
+        overhead_iters: args.usize("iters", base.overhead_iters),
+        overhead_limit: args.f64("overhead-limit", base.overhead_limit),
+    };
+    println!(
+        "obs: {} requests, cascade batch {} ({}+{} tokens, {} heads x d{}), \
+         spec k={}, ring capacity {}",
+        case.requests,
+        case.batch,
+        case.prefix,
+        case.suffix,
+        case.heads,
+        case.head_dim,
+        case.spec_k,
+        case.trace_capacity
+    );
+    let r = run_obs(case, seed)?;
+    println!("{}", r.render());
+    if let Some(path) = args.flags.get("trace-out") {
+        std::fs::write(path, r.chrome.to_string())
+            .with_context(|| format!("write chrome trace to {path}"))?;
+        println!(
+            "chrome trace: {} events -> {path} (load in chrome://tracing or \
+             ui.perfetto.dev)",
+            r.events
         );
     }
     Ok(())

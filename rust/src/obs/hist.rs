@@ -1,0 +1,315 @@
+//! Log-bucketed latency histograms (HDR-style, fixed memory).
+//!
+//! The serving metrics used to push every per-step latency into an
+//! unbounded `Vec<f64>` and sort it on demand — O(steps) memory on a
+//! long-running engine. [`LogHistogram`] replaces that on the hot paths:
+//! geometric buckets at [`SUB_BUCKETS_PER_OCTAVE`] per power of two give
+//! a bounded multiplicative resolution ([`LogHistogram::growth`], ~9%),
+//! so any quantile estimate is within **one bucket width** of the exact
+//! sample quantile — the bound `rust/tests/obs_props.rs` pins against
+//! random workloads. `count`/`sum`/`min`/`max` stay exact, so means and
+//! throughput derived from the histogram are not approximations.
+
+/// Geometric sub-buckets per factor-of-two of value range.
+pub const SUB_BUCKETS_PER_OCTAVE: usize = 8;
+
+/// log2 of the smallest distinguishable value (smaller values clamp into
+/// bucket 0). 2^-10 ≈ 1e-3 — well under a nanosecond in microseconds.
+const MIN_LOG2: f64 = -10.0;
+
+/// Octaves covered above [`MIN_LOG2`]: up to 2^44 ≈ 1.8e13, weeks in
+/// microseconds. Larger values clamp into the last bucket.
+const OCTAVES: usize = 54;
+
+const NBUCKETS: usize = OCTAVES * SUB_BUCKETS_PER_OCTAVE;
+
+/// A fixed-capacity log-bucketed histogram over positive `f64` samples.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LogHistogram {
+    /// Lazily allocated on first record so an empty histogram (and a
+    /// disabled tracer full of them) costs nothing.
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+/// Bucket ordinal a value lands in (monotonic in the value).
+fn bucket_of(v: f64) -> usize {
+    if v <= 0.0 || v.log2() <= MIN_LOG2 {
+        return 0;
+    }
+    let idx = ((v.log2() - MIN_LOG2) * SUB_BUCKETS_PER_OCTAVE as f64) as usize;
+    idx.min(NBUCKETS - 1)
+}
+
+/// Lower bound of bucket `i` — the value the quantile walk reports.
+fn bucket_lo(i: usize) -> f64 {
+    2f64.powf(MIN_LOG2 + i as f64 / SUB_BUCKETS_PER_OCTAVE as f64)
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    /// Multiplicative width of one bucket: any quantile estimate `h` of
+    /// an exact quantile `e` satisfies `h <= e < h * growth()`.
+    pub fn growth() -> f64 {
+        2f64.powf(1.0 / SUB_BUCKETS_PER_OCTAVE as f64)
+    }
+
+    /// Record one sample. Non-positive values clamp into the lowest
+    /// bucket (the exact `min`/`sum` still see the raw value).
+    pub fn record(&mut self, v: f64) {
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; NBUCKETS];
+        }
+        self.buckets[bucket_of(v)] += 1;
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of every recorded sample.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Population standard deviation from the exact running moments
+    /// (0 when empty).
+    pub fn stddev(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let mean = self.mean();
+        (self.sum_sq / self.count as f64 - mean * mean).max(0.0).sqrt()
+    }
+
+    /// Exact minimum recorded sample (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum recorded sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank quantile estimate: the lower bound of the bucket
+    /// holding the rank-`ceil(q·n)` sample, clamped into the exact
+    /// `[min, max]`. Within one bucket width of the exact quantile.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_lo(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Approximate fraction of samples `<= v` (linear within the bucket
+    /// `v` falls in). 1.0 when empty — a vacuous SLO holds.
+    pub fn fraction_le(&self, v: f64) -> f64 {
+        if self.count == 0 {
+            return 1.0;
+        }
+        if v >= self.max {
+            return 1.0;
+        }
+        if v < self.min {
+            return 0.0;
+        }
+        let b = bucket_of(v);
+        let mut below = 0u64;
+        for &c in &self.buckets[..b] {
+            below += c;
+        }
+        let lo = bucket_lo(b);
+        let hi = bucket_lo(b + 1);
+        let frac = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
+        ((below as f64 + frac * self.buckets[b] as f64) / self.count as f64).min(1.0)
+    }
+
+    /// Fold another histogram in (bucket-wise; exact stats combine).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; NBUCKETS];
+        }
+        for (b, &o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        if self.count == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.fraction_le(1.0), 1.0);
+    }
+
+    #[test]
+    fn exact_stats_are_exact() {
+        let mut h = LogHistogram::new();
+        for v in [3.0, 1.0, 2.0, 10.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 16.0);
+        assert_eq!(h.mean(), 4.0);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 10.0);
+        // Population stddev of [3,1,2,10]: sqrt(114/4 - 16) = sqrt(12.5).
+        assert!((h.stddev() - 12.5f64.sqrt()).abs() < 1e-12);
+        assert_eq!(LogHistogram::new().stddev(), 0.0);
+    }
+
+    #[test]
+    fn constant_distribution_quantiles_are_exact() {
+        let mut h = LogHistogram::new();
+        for _ in 0..100 {
+            h.record(1000.0);
+        }
+        // min/max clamping recovers the exact value.
+        assert_eq!(h.quantile(0.5), 1000.0);
+        assert_eq!(h.quantile(0.999), 1000.0);
+    }
+
+    #[test]
+    fn quantile_within_one_bucket_of_exact() {
+        let samples: Vec<f64> = (1..=1000).map(|i| i as f64 * 3.7).collect();
+        let mut h = LogHistogram::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        let g = LogHistogram::growth();
+        for q in [0.5, 0.9, 0.95, 0.99, 0.999] {
+            let rank = ((q * samples.len() as f64).ceil() as usize).max(1);
+            let exact = samples[rank - 1];
+            let est = h.quantile(q);
+            assert!(
+                est <= exact * (1.0 + 1e-9) && exact < est * g * (1.0 + 1e-9),
+                "q={q}: est {est} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantiles_are_monotone() {
+        let mut h = LogHistogram::new();
+        let mut x = 1.0f64;
+        for _ in 0..500 {
+            h.record(x);
+            x *= 1.02;
+        }
+        assert!(h.quantile(0.5) <= h.quantile(0.95));
+        assert!(h.quantile(0.95) <= h.quantile(0.99));
+        assert!(h.quantile(0.99) <= h.quantile(0.999));
+    }
+
+    #[test]
+    fn fraction_le_brackets_the_median() {
+        let mut h = LogHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.fraction_le(0.5), 0.0);
+        assert_eq!(h.fraction_le(100.0), 1.0);
+        let f = h.fraction_le(50.0);
+        assert!((0.40..=0.60).contains(&f), "median fraction {f}");
+    }
+
+    #[test]
+    fn merge_matches_recording_everything_into_one() {
+        let (mut a, mut b, mut all) =
+            (LogHistogram::new(), LogHistogram::new(), LogHistogram::new());
+        for i in 1..=50 {
+            a.record(i as f64);
+            all.record(i as f64);
+        }
+        for i in 51..=120 {
+            b.record(i as f64 * 2.5);
+            all.record(i as f64 * 2.5);
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
+        // Merging into an empty histogram copies the other side.
+        let mut e = LogHistogram::new();
+        e.merge(&all);
+        assert_eq!(e.count(), all.count());
+        assert_eq!(e.min(), all.min());
+        assert_eq!(e.quantile(0.95), all.quantile(0.95));
+    }
+
+    #[test]
+    fn non_positive_values_clamp_into_bucket_zero() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(5.0);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min(), -3.0);
+        assert!(h.quantile(0.1) <= 5.0);
+    }
+}

@@ -1,0 +1,31 @@
+//! Engine observability plane.
+//!
+//! Everything the serving stack measures about itself lives here, in
+//! four layers that the coordinator threads through its hot paths:
+//!
+//! - [`tracer`] — structured step tracing: lexically-scoped [`Span`]s
+//!   over a fixed-capacity ring buffer with a monotonic step clock and
+//!   a Chrome trace-event / Perfetto exporter. The span taxonomy
+//!   ([`Phase`]) names every engine phase from `admit` to `evict`.
+//! - [`hist`] — [`LogHistogram`], the bounded-memory HDR-style latency
+//!   histogram behind every percentile this crate reports.
+//! - [`timeline`] — per-request lifecycles ([`RequestTimeline`])
+//!   aggregated by a [`TimelineRecorder`] into the serving
+//!   [`SloReport`] (TTFT/e2e percentiles, goodput, SLO attainment).
+//! - [`snapshot`] — the versioned [`MetricsSnapshot`] both exporters
+//!   (Prometheus text, JSON) serialize, so no counter can reach one
+//!   export format and silently miss the other.
+//!
+//! The plane is feature-cheap by construction: a disabled [`Tracer`]
+//! reads no clocks and allocates nothing, and `leanattn bench --obs`
+//! measures that overhead and asserts it under 2%.
+
+pub mod hist;
+pub mod snapshot;
+pub mod timeline;
+pub mod tracer;
+
+pub use hist::LogHistogram;
+pub use snapshot::{Metric, MetricKind, MetricsSnapshot, SNAPSHOT_VERSION};
+pub use timeline::{Quantiles, RequestTimeline, SloReport, TimelineRecorder};
+pub use tracer::{validate_chrome_trace, Attrs, Phase, Span, TraceEvent, Tracer};

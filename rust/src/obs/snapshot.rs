@@ -1,0 +1,200 @@
+//! Versioned metrics snapshot shared by every exporter.
+//!
+//! The consistency rule of this module: a counter exists in exactly one
+//! place — the [`MetricsSnapshot`] assembled by
+//! `coordinator::Metrics::snapshot` — and both exporters (Prometheus
+//! text exposition for `leanattn serve --metrics-out`, versioned JSON
+//! for dashboards and regression diffs) are pure serializations of that
+//! one struct. A metric added to the snapshot can therefore never be
+//! silently dropped from one export format; `rust/tests/obs_props.rs`
+//! pins this by diffing the documented counter list against both
+//! outputs.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Schema version stamped into the JSON export; bump on breaking
+/// renames so downstream dashboards can detect skew.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// Prometheus metric kind (determines the `# TYPE` line).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotonically non-decreasing over the engine's lifetime.
+    Counter,
+    /// Point-in-time level (may go up or down).
+    Gauge,
+}
+
+impl MetricKind {
+    fn as_str(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+        }
+    }
+}
+
+/// One exported metric: a name in the `leanattn_` namespace, its kind,
+/// the sampled value and a help line.
+#[derive(Clone, Copy, Debug)]
+pub struct Metric {
+    pub name: &'static str,
+    pub kind: MetricKind,
+    pub value: f64,
+    pub help: &'static str,
+}
+
+/// A point-in-time sample of every exported engine metric.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    metrics: Vec<Metric>,
+}
+
+impl MetricsSnapshot {
+    pub fn new() -> MetricsSnapshot {
+        MetricsSnapshot::default()
+    }
+
+    /// Append a counter sample.
+    pub fn counter(&mut self, name: &'static str, value: f64, help: &'static str) {
+        self.push(Metric { name, kind: MetricKind::Counter, value, help });
+    }
+
+    /// Append a gauge sample.
+    pub fn gauge(&mut self, name: &'static str, value: f64, help: &'static str) {
+        self.push(Metric { name, kind: MetricKind::Gauge, value, help });
+    }
+
+    fn push(&mut self, m: Metric) {
+        debug_assert!(
+            self.get(m.name).is_none(),
+            "duplicate metric name {}",
+            m.name
+        );
+        self.metrics.push(m);
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    pub fn metrics(&self) -> &[Metric] {
+        &self.metrics
+    }
+
+    /// Look a metric up by exported name.
+    pub fn get(&self, name: &str) -> Option<&Metric> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.metrics.iter().map(|m| m.name).collect()
+    }
+
+    /// Prometheus text exposition format, one `# HELP`/`# TYPE`/sample
+    /// triple per metric, all under the `leanattn_` prefix.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for m in &self.metrics {
+            out.push_str(&format!("# HELP leanattn_{} {}\n", m.name, m.help));
+            out.push_str(&format!("# TYPE leanattn_{} {}\n", m.name, m.kind.as_str()));
+            out.push_str(&format!("leanattn_{} {}\n", m.name, format_value(m.value)));
+        }
+        out
+    }
+
+    /// Versioned JSON export: `{"version": 1, "metrics": {name: value}}`
+    /// plus a parallel `kinds` object so consumers can tell counters
+    /// from gauges without a schema registry.
+    pub fn to_json(&self) -> Json {
+        let mut vals = BTreeMap::new();
+        let mut kinds = BTreeMap::new();
+        for m in &self.metrics {
+            vals.insert(m.name.to_string(), Json::Num(m.value));
+            kinds.insert(m.name.to_string(), Json::Str(m.kind.as_str().to_string()));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("version".to_string(), Json::Num(SNAPSHOT_VERSION as f64));
+        root.insert("metrics".to_string(), Json::Obj(vals));
+        root.insert("kinds".to_string(), Json::Obj(kinds));
+        Json::Obj(root)
+    }
+}
+
+/// Prometheus sample values: integers without a trailing `.0`.
+fn format_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MetricsSnapshot {
+        let mut s = MetricsSnapshot::new();
+        s.counter("decode_steps_total", 42.0, "Engine decode steps taken.");
+        s.counter("tokens_generated_total", 123.0, "Tokens sampled.");
+        s.gauge("kv_pages_used", 7.0, "Pages currently allocated.");
+        s.gauge("step_us_p99", 1234.5, "p99 decode step latency (us).");
+        s
+    }
+
+    #[test]
+    fn prometheus_exposition_has_help_type_and_sample() {
+        let text = sample().to_prometheus();
+        assert!(text.contains("# HELP leanattn_decode_steps_total Engine decode steps taken.\n"));
+        assert!(text.contains("# TYPE leanattn_decode_steps_total counter\n"));
+        assert!(text.contains("\nleanattn_decode_steps_total 42\n"));
+        assert!(text.contains("# TYPE leanattn_kv_pages_used gauge\n"));
+        assert!(text.contains("leanattn_step_us_p99 1234.5\n"));
+    }
+
+    #[test]
+    fn json_export_is_versioned_and_complete() {
+        let s = sample();
+        let j = s.to_json();
+        assert_eq!(j.usize_at("version"), SNAPSHOT_VERSION as usize);
+        let metrics = j.get("metrics").and_then(Json::as_obj).unwrap();
+        assert_eq!(metrics.len(), s.len());
+        assert_eq!(metrics.get("tokens_generated_total"), Some(&Json::Num(123.0)));
+        let kinds = j.get("kinds").and_then(Json::as_obj).unwrap();
+        assert_eq!(kinds.get("kv_pages_used"), Some(&Json::Str("gauge".into())));
+    }
+
+    #[test]
+    fn json_round_trips_through_parser() {
+        let j = sample().to_json();
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn every_name_reaches_both_exporters() {
+        let s = sample();
+        let text = s.to_prometheus();
+        let j = s.to_json();
+        let metrics = j.get("metrics").and_then(Json::as_obj).unwrap();
+        for name in s.names() {
+            assert!(text.contains(&format!("leanattn_{name} ")), "{name} in text");
+            assert!(metrics.contains_key(name), "{name} in json");
+        }
+    }
+
+    #[test]
+    fn get_and_names_agree() {
+        let s = sample();
+        assert_eq!(s.names().len(), 4);
+        assert_eq!(s.get("kv_pages_used").unwrap().value, 7.0);
+        assert!(s.get("missing").is_none());
+    }
+}

@@ -1,0 +1,297 @@
+//! Per-request lifecycle timelines and the serving SLO report.
+//!
+//! Every finished request contributes one [`RequestTimeline`] — its
+//! submit → admit → first-token → finish phases — to a
+//! [`TimelineRecorder`]: bounded-memory [`LogHistogram`]s over queue
+//! wait, TTFT, end-to-end latency and inter-token gaps, plus a small
+//! ring of the newest raw timelines for inspection. At report time the
+//! recorder folds into an [`SloReport`] — TTFT/e2e percentiles, goodput
+//! (within-SLO finishes per second) and SLO attainment at a `--slo-ms`
+//! target — the iteration-level serving accounting of arXiv 2407.09111
+//! that `examples/load_test.rs` and `leanattn serve --slo-ms` print.
+
+use super::hist::LogHistogram;
+
+/// Raw timelines kept for inspection (newest win on overflow).
+const RECENT_CAP: usize = 64;
+
+/// One request's lifecycle, microseconds per phase.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestTimeline {
+    pub id: u64,
+    /// Submit → admission into a batch slot (queue wait).
+    pub queue_us: f64,
+    /// Admission → first token (prefill).
+    pub prefill_us: f64,
+    /// First token → finish.
+    pub decode_us: f64,
+    /// Tokens generated.
+    pub tokens: usize,
+}
+
+impl RequestTimeline {
+    /// Time to first token: queue wait plus prefill.
+    pub fn ttft_us(&self) -> f64 {
+        self.queue_us + self.prefill_us
+    }
+
+    /// End-to-end latency.
+    pub fn e2e_us(&self) -> f64 {
+        self.queue_us + self.prefill_us + self.decode_us
+    }
+
+    /// Mean inter-token gap after the first token (0 for single-token
+    /// outputs).
+    pub fn inter_token_us(&self) -> f64 {
+        if self.tokens <= 1 {
+            0.0
+        } else {
+            self.decode_us / (self.tokens - 1) as f64
+        }
+    }
+}
+
+/// Bounded-memory aggregation of request lifecycles.
+#[derive(Clone, Debug, Default)]
+pub struct TimelineRecorder {
+    queue_us: LogHistogram,
+    ttft_us: LogHistogram,
+    e2e_us: LogHistogram,
+    inter_token_us: LogHistogram,
+    requests: u64,
+    tokens: u64,
+    recent: Vec<RequestTimeline>,
+}
+
+impl TimelineRecorder {
+    pub fn observe(&mut self, t: RequestTimeline) {
+        self.queue_us.record(t.queue_us);
+        self.ttft_us.record(t.ttft_us());
+        self.e2e_us.record(t.e2e_us());
+        if t.tokens > 1 {
+            self.inter_token_us.record(t.inter_token_us());
+        }
+        self.requests += 1;
+        self.tokens += t.tokens as u64;
+        if self.recent.len() == RECENT_CAP {
+            self.recent.remove(0);
+        }
+        self.recent.push(t);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    /// The newest observed timelines (bounded; oldest first).
+    pub fn recent(&self) -> &[RequestTimeline] {
+        &self.recent
+    }
+
+    pub fn ttft(&self) -> &LogHistogram {
+        &self.ttft_us
+    }
+
+    pub fn e2e(&self) -> &LogHistogram {
+        &self.e2e_us
+    }
+
+    /// Fold another recorder in (multi-replica aggregation).
+    pub fn merge(&mut self, other: &TimelineRecorder) {
+        self.queue_us.merge(&other.queue_us);
+        self.ttft_us.merge(&other.ttft_us);
+        self.e2e_us.merge(&other.e2e_us);
+        self.inter_token_us.merge(&other.inter_token_us);
+        self.requests += other.requests;
+        self.tokens += other.tokens;
+        for t in &other.recent {
+            if self.recent.len() == RECENT_CAP {
+                self.recent.remove(0);
+            }
+            self.recent.push(*t);
+        }
+    }
+
+    /// Aggregate into the serving SLO report: attainment is the fraction
+    /// of requests whose **end-to-end** latency met `slo_ms`, goodput the
+    /// within-SLO finishes per second of `wall_s`.
+    pub fn slo_report(&self, slo_ms: f64, wall_s: f64) -> SloReport {
+        let attainment = self.e2e_us.fraction_le(slo_ms * 1e3);
+        let goodput_rps = if wall_s > 0.0 {
+            attainment * self.requests as f64 / wall_s
+        } else {
+            0.0
+        };
+        let tokens_per_s =
+            if wall_s > 0.0 { self.tokens as f64 / wall_s } else { 0.0 };
+        SloReport {
+            requests: self.requests,
+            tokens: self.tokens,
+            wall_s,
+            slo_ms,
+            queue_ms: Quantiles::of(&self.queue_us, 1e-3),
+            ttft_ms: Quantiles::of(&self.ttft_us, 1e-3),
+            e2e_ms: Quantiles::of(&self.e2e_us, 1e-3),
+            inter_token_ms: Quantiles::of(&self.inter_token_us, 1e-3),
+            attainment,
+            goodput_rps,
+            tokens_per_s,
+        }
+    }
+}
+
+/// p50/p95/p99/p999 pulled out of one histogram (scaled, e.g. us → ms).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Quantiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub p999: f64,
+}
+
+impl Quantiles {
+    pub fn of(h: &LogHistogram, scale: f64) -> Quantiles {
+        Quantiles {
+            p50: h.quantile(0.5) * scale,
+            p95: h.quantile(0.95) * scale,
+            p99: h.quantile(0.99) * scale,
+            p999: h.quantile(0.999) * scale,
+        }
+    }
+}
+
+/// The exportable serving SLO report.
+#[derive(Clone, Debug)]
+pub struct SloReport {
+    pub requests: u64,
+    pub tokens: u64,
+    pub wall_s: f64,
+    /// The end-to-end latency target attainment is measured against.
+    pub slo_ms: f64,
+    pub queue_ms: Quantiles,
+    pub ttft_ms: Quantiles,
+    pub e2e_ms: Quantiles,
+    pub inter_token_ms: Quantiles,
+    /// Fraction of requests with e2e latency <= `slo_ms`.
+    pub attainment: f64,
+    /// Within-SLO finishes per second of wall clock.
+    pub goodput_rps: f64,
+    pub tokens_per_s: f64,
+}
+
+impl SloReport {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "serving SLO report: {} requests, {} tokens in {:.2}s \
+             ({:.1} req/s offered-finish rate, {:.1} tok/s)\n",
+            self.requests,
+            self.tokens,
+            self.wall_s,
+            if self.wall_s > 0.0 { self.requests as f64 / self.wall_s } else { 0.0 },
+            self.tokens_per_s,
+        ));
+        let row = |name: &str, q: &Quantiles| {
+            format!(
+                "  {:<9} p50={:.1} p95={:.1} p99={:.1} p999={:.1}\n",
+                name, q.p50, q.p95, q.p99, q.p999
+            )
+        };
+        s.push_str(&row("queue_ms", &self.queue_ms));
+        s.push_str(&row("ttft_ms", &self.ttft_ms));
+        s.push_str(&row("e2e_ms", &self.e2e_ms));
+        s.push_str(&row("tpot_ms", &self.inter_token_ms));
+        s.push_str(&format!(
+            "  SLO (e2e <= {:.0} ms): {:.1}% attained, goodput {:.2} req/s\n",
+            self.slo_ms,
+            self.attainment * 100.0,
+            self.goodput_rps,
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(id: u64, queue: f64, prefill: f64, decode: f64, tokens: usize) -> RequestTimeline {
+        RequestTimeline {
+            id,
+            queue_us: queue,
+            prefill_us: prefill,
+            decode_us: decode,
+            tokens,
+        }
+    }
+
+    #[test]
+    fn timeline_derived_phases() {
+        let tl = t(1, 100.0, 400.0, 900.0, 10);
+        assert_eq!(tl.ttft_us(), 500.0);
+        assert_eq!(tl.e2e_us(), 1400.0);
+        assert_eq!(tl.inter_token_us(), 100.0);
+        assert_eq!(t(2, 0.0, 1.0, 0.0, 1).inter_token_us(), 0.0);
+    }
+
+    #[test]
+    fn recorder_counts_and_bounds_recents() {
+        let mut r = TimelineRecorder::default();
+        for i in 0..(RECENT_CAP as u64 + 10) {
+            r.observe(t(i, 10.0, 20.0, 30.0, 4));
+        }
+        assert_eq!(r.requests(), RECENT_CAP as u64 + 10);
+        assert_eq!(r.tokens(), (RECENT_CAP as u64 + 10) * 4);
+        assert_eq!(r.recent().len(), RECENT_CAP);
+        assert_eq!(r.recent()[0].id, 10, "newest timelines survive");
+    }
+
+    #[test]
+    fn slo_attainment_splits_fast_and_slow() {
+        let mut r = TimelineRecorder::default();
+        // 8 fast requests (~2ms e2e), 2 slow (~2s e2e).
+        for i in 0..8 {
+            r.observe(t(i, 100.0, 400.0, 1500.0, 8));
+        }
+        for i in 8..10 {
+            r.observe(t(i, 100.0, 400.0, 2_000_000.0, 8));
+        }
+        let rep = r.slo_report(50.0, 4.0);
+        assert_eq!(rep.requests, 10);
+        assert!(
+            (rep.attainment - 0.8).abs() < 0.05,
+            "attainment {}",
+            rep.attainment
+        );
+        assert!((rep.goodput_rps - 2.0).abs() < 0.15, "{}", rep.goodput_rps);
+        assert!(rep.e2e_ms.p50 < 50.0 && rep.e2e_ms.p999 > 1000.0);
+        let out = rep.render();
+        assert!(out.contains("serving SLO report"), "{out}");
+        assert!(out.contains("ttft_ms"), "{out}");
+        assert!(out.contains("goodput"), "{out}");
+    }
+
+    #[test]
+    fn merge_combines_replicas() {
+        let (mut a, mut b) = (TimelineRecorder::default(), TimelineRecorder::default());
+        a.observe(t(1, 1.0, 2.0, 3.0, 2));
+        b.observe(t(2, 10.0, 20.0, 30.0, 5));
+        a.merge(&b);
+        assert_eq!(a.requests(), 2);
+        assert_eq!(a.tokens(), 7);
+        assert_eq!(a.recent().len(), 2);
+    }
+
+    #[test]
+    fn empty_recorder_reports_safely() {
+        let rep = TimelineRecorder::default().slo_report(100.0, 0.0);
+        assert_eq!(rep.requests, 0);
+        assert_eq!(rep.goodput_rps, 0.0);
+        assert_eq!(rep.attainment, 1.0, "vacuous SLO holds");
+        assert!(rep.render().contains("0 requests"));
+    }
+}

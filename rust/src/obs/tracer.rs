@@ -1,0 +1,524 @@
+//! Low-overhead structured step tracer.
+//!
+//! A [`Tracer`] records phase events — lexically-scoped [`Span`] guards
+//! or explicit begin/end pairs ([`Tracer::now`] / [`Tracer::record_since`])
+//! for regions the borrow checker won't let a guard straddle — into a
+//! fixed-capacity ring buffer stamped with a monotonic step clock.
+//! Overflow keeps the **newest** events and counts drops monotonically;
+//! per-phase durations additionally feed [`LogHistogram`]s that survive
+//! ring overflow, so the phase-timing percentiles in the serving report
+//! cover the whole run. [`Tracer::export_chrome_trace`] emits the Chrome
+//! trace-event JSON (`chrome://tracing` / Perfetto `ui.perfetto.dev`)
+//! that `leanattn bench --obs --trace-out` writes.
+//!
+//! A disabled tracer is near-free: no clock reads, no allocation, one
+//! branch per call site — the bound `leanattn bench --obs` measures and
+//! asserts (< 2% on the cascade body).
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::json::Json;
+
+use super::hist::LogHistogram;
+
+/// The engine's span taxonomy — one variant per instrumented phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// A request admitted into a batch slot (instant; `seq`, `pages`).
+    Admit,
+    /// Prompt prefill through the model artifact.
+    Prefill,
+    /// Per-lane sparse page scoring + selection.
+    SparseSelect,
+    /// KV materialization out of the paged cache (`bytes` gathered).
+    Gather,
+    /// The lean/cascade attention + model decode execution.
+    LeanExec,
+    /// Logits processing, sampling and KV append for the step's lanes.
+    Sample,
+    /// Draft-chain proposal (`k` tokens requested).
+    SpecDraft,
+    /// The multi-query verify pass over the draft block.
+    SpecVerify,
+    /// Tokens committed by a verify pass (instant; `k` committed).
+    SpecCommit,
+    /// Speculative KV rows rolled back (instant; `k` rows).
+    Rollback,
+    /// Prefix-index pages evicted under cache pressure (instant; `pages`).
+    Evict,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 11] = [
+        Phase::Admit,
+        Phase::Prefill,
+        Phase::SparseSelect,
+        Phase::Gather,
+        Phase::LeanExec,
+        Phase::Sample,
+        Phase::SpecDraft,
+        Phase::SpecVerify,
+        Phase::SpecCommit,
+        Phase::Rollback,
+        Phase::Evict,
+    ];
+
+    /// The stable event name used in trace exports and reports.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::Admit => "admit",
+            Phase::Prefill => "prefill",
+            Phase::SparseSelect => "sparse_select",
+            Phase::Gather => "gather",
+            Phase::LeanExec => "lean_exec",
+            Phase::Sample => "sample",
+            Phase::SpecDraft => "spec_draft",
+            Phase::SpecVerify => "spec_verify",
+            Phase::SpecCommit => "spec_commit",
+            Phase::Rollback => "rollback",
+            Phase::Evict => "evict",
+        }
+    }
+
+    fn index(self) -> usize {
+        Phase::ALL.iter().position(|&p| p == self).expect("phase in ALL")
+    }
+}
+
+/// Optional per-event attributes. Unset fields are omitted from exports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Attrs {
+    /// Sequence (request) id the event concerns.
+    pub seq: Option<u64>,
+    /// Pages touched (gathered, selected, evicted).
+    pub pages: Option<usize>,
+    /// Bytes moved (KV gathered / written).
+    pub bytes: Option<u64>,
+    /// Draft length / committed tokens / lane count — phase-dependent.
+    pub k: Option<usize>,
+}
+
+/// One recorded event. `start_us` is relative to the tracer's epoch;
+/// `dur_us == 0` marks an instant event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub phase: Phase,
+    pub start_us: f64,
+    pub dur_us: f64,
+    /// Value of the step clock when the event closed.
+    pub step: u64,
+    /// Span nesting depth at the event's open (0 = top level).
+    pub depth: u32,
+    pub attrs: Attrs,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    ring: VecDeque<TraceEvent>,
+    dropped: u64,
+    step: u64,
+    depth: u32,
+    /// Indexed by `Phase::index`; empty when the tracer is disabled.
+    hists: Vec<LogHistogram>,
+}
+
+/// The structured tracer. Interior-mutable so span guards and record
+/// calls take `&Tracer` — the engine holds one alongside `&mut self`
+/// hot-path state.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    capacity: usize,
+    /// `None` when disabled — the cheap-path discriminant.
+    epoch: Option<Instant>,
+    inner: RefCell<Inner>,
+}
+
+impl Tracer {
+    /// A tracer that records nothing and never reads the clock.
+    pub fn disabled() -> Tracer {
+        Tracer::default()
+    }
+
+    /// An enabled tracer whose ring keeps the newest `capacity` events.
+    pub fn enabled(capacity: usize) -> Tracer {
+        Tracer {
+            capacity: capacity.max(1),
+            epoch: Some(Instant::now()),
+            inner: RefCell::new(Inner {
+                hists: vec![LogHistogram::new(); Phase::ALL.len()],
+                ..Default::default()
+            }),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.epoch.is_some()
+    }
+
+    /// Ring capacity (0 when disabled).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Advance the monotonic step clock (once per engine step).
+    pub fn advance_step(&self) {
+        if self.is_enabled() {
+            self.inner.borrow_mut().step += 1;
+        }
+    }
+
+    /// Current step-clock value.
+    pub fn step(&self) -> u64 {
+        self.inner.borrow().step
+    }
+
+    /// Events currently in the ring (oldest first).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.inner.borrow().ring.iter().cloned().collect()
+    }
+
+    /// Events in the ring.
+    pub fn len(&self) -> usize {
+        self.inner.borrow().ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events dropped to ring overflow so far (monotonic).
+    pub fn dropped(&self) -> u64 {
+        self.inner.borrow().dropped
+    }
+
+    /// Clock read for a begin/end pair; `None` when disabled, so the
+    /// matching [`Self::record_since`] is a no-op.
+    pub fn now(&self) -> Option<Instant> {
+        self.is_enabled().then(Instant::now)
+    }
+
+    /// Close a begin/end pair opened with [`Self::now`].
+    pub fn record_since(&self, phase: Phase, start: Option<Instant>, attrs: Attrs) {
+        let (Some(epoch), Some(start)) = (self.epoch, start) else {
+            return;
+        };
+        let start_us = start.duration_since(epoch).as_secs_f64() * 1e6;
+        let dur_us = start.elapsed().as_secs_f64() * 1e6;
+        let depth = self.inner.borrow().depth;
+        self.push(TraceEvent { phase, start_us, dur_us, step: 0, depth, attrs });
+    }
+
+    /// Record a zero-duration event at the current time.
+    pub fn instant(&self, phase: Phase, attrs: Attrs) {
+        let Some(epoch) = self.epoch else {
+            return;
+        };
+        let start_us = epoch.elapsed().as_secs_f64() * 1e6;
+        let depth = self.inner.borrow().depth;
+        self.push(TraceEvent { phase, start_us, dur_us: 0.0, step: 0, depth, attrs });
+    }
+
+    /// Open a lexically-scoped span; it records on drop. Attributes can
+    /// be attached to the returned guard as they become known.
+    pub fn span(&self, phase: Phase) -> Span<'_> {
+        let start = self.now();
+        if start.is_some() {
+            self.inner.borrow_mut().depth += 1;
+        }
+        Span { tracer: self, phase, start, attrs: Attrs::default() }
+    }
+
+    fn close_span(&self, phase: Phase, start: Instant, attrs: Attrs) {
+        let Some(epoch) = self.epoch else {
+            return;
+        };
+        let depth = {
+            let mut inner = self.inner.borrow_mut();
+            inner.depth = inner.depth.saturating_sub(1);
+            inner.depth
+        };
+        let start_us = start.duration_since(epoch).as_secs_f64() * 1e6;
+        let dur_us = start.elapsed().as_secs_f64() * 1e6;
+        self.push(TraceEvent { phase, start_us, dur_us, step: 0, depth, attrs });
+    }
+
+    fn push(&self, mut ev: TraceEvent) {
+        let mut inner = self.inner.borrow_mut();
+        ev.step = inner.step;
+        let idx = ev.phase.index();
+        inner.hists[idx].record(ev.dur_us);
+        if inner.ring.len() == self.capacity {
+            inner.ring.pop_front();
+            inner.dropped += 1;
+        }
+        inner.ring.push_back(ev);
+    }
+
+    /// Clone of the per-phase duration histogram (`None` when disabled
+    /// or the phase never fired). Unlike the ring these survive overflow.
+    pub fn phase_hist(&self, phase: Phase) -> Option<LogHistogram> {
+        let inner = self.inner.borrow();
+        let h = inner.hists.get(phase.index())?;
+        (!h.is_empty()).then(|| h.clone())
+    }
+
+    /// Per-phase timing table: count and p50/p95/p99/p999 microseconds
+    /// for every phase that fired — the serving report's breakdown.
+    pub fn phase_report(&self) -> String {
+        let mut s = String::new();
+        for phase in Phase::ALL {
+            let Some(h) = self.phase_hist(phase) else {
+                continue;
+            };
+            s.push_str(&format!(
+                "  {:<13} n={:<6} p50={:.1}us p95={:.1}us p99={:.1}us p999={:.1}us\n",
+                phase.as_str(),
+                h.count(),
+                h.quantile(0.5),
+                h.quantile(0.95),
+                h.quantile(0.99),
+                h.quantile(0.999),
+            ));
+        }
+        s
+    }
+
+    /// Export the ring as a Chrome trace-event JSON array (complete
+    /// events, `ph: "X"`, microsecond timestamps), sorted by start time.
+    /// Open with Perfetto (`ui.perfetto.dev`) or `chrome://tracing`.
+    pub fn export_chrome_trace(&self) -> Json {
+        let mut events = self.events();
+        events.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+        let arr = events
+            .iter()
+            .map(|ev| {
+                let mut args = std::collections::BTreeMap::new();
+                args.insert("step".to_string(), Json::Num(ev.step as f64));
+                args.insert("depth".to_string(), Json::Num(f64::from(ev.depth)));
+                if let Some(seq) = ev.attrs.seq {
+                    args.insert("seq".to_string(), Json::Num(seq as f64));
+                }
+                if let Some(pages) = ev.attrs.pages {
+                    args.insert("pages".to_string(), Json::Num(pages as f64));
+                }
+                if let Some(bytes) = ev.attrs.bytes {
+                    args.insert("bytes".to_string(), Json::Num(bytes as f64));
+                }
+                if let Some(k) = ev.attrs.k {
+                    args.insert("k".to_string(), Json::Num(k as f64));
+                }
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(ev.phase.as_str().to_string()));
+                o.insert("cat".to_string(), Json::Str("engine".to_string()));
+                o.insert("ph".to_string(), Json::Str("X".to_string()));
+                o.insert("ts".to_string(), Json::Num(ev.start_us));
+                o.insert("dur".to_string(), Json::Num(ev.dur_us));
+                o.insert("pid".to_string(), Json::Num(0.0));
+                o.insert("tid".to_string(), Json::Num(0.0));
+                o.insert("args".to_string(), Json::Obj(args));
+                Json::Obj(o)
+            })
+            .collect();
+        Json::Arr(arr)
+    }
+}
+
+/// Validate a value against the Chrome trace-event schema this module
+/// exports: a JSON array of complete events whose names come from the
+/// span taxonomy — the check `leanattn bench --obs` runs on its export.
+pub fn validate_chrome_trace(trace: &Json) -> Result<()> {
+    let Some(events) = trace.as_arr() else {
+        bail!("trace must be a JSON array of events");
+    };
+    for (i, ev) in events.iter().enumerate() {
+        ensure!(ev.as_obj().is_some(), "event {i} is not an object");
+        let name = ev
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("event {i} has no name"))?;
+        ensure!(
+            Phase::ALL.iter().any(|p| p.as_str() == name),
+            "event {i} name {name:?} is not a known phase"
+        );
+        ensure!(
+            ev.get("ph").and_then(Json::as_str) == Some("X"),
+            "event {i} is not a complete event (ph=X)"
+        );
+        for key in ["ts", "dur", "pid", "tid"] {
+            let v = ev
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("event {i} field {key} not a number"))?;
+            ensure!(v >= 0.0, "event {i} field {key} is negative");
+        }
+        let args = ev
+            .get("args")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("event {i} has no args object"))?;
+        ensure!(
+            args.get("step").and_then(Json::as_f64).is_some(),
+            "event {i} args missing the step clock"
+        );
+    }
+    Ok(())
+}
+
+/// Lexically-scoped span guard: records its phase event (with whatever
+/// attributes were attached) when dropped. Free when the tracer is
+/// disabled — no clock was read at open and drop is a single branch.
+pub struct Span<'a> {
+    tracer: &'a Tracer,
+    phase: Phase,
+    start: Option<Instant>,
+    attrs: Attrs,
+}
+
+impl Span<'_> {
+    pub fn set_seq(&mut self, seq: u64) {
+        self.attrs.seq = Some(seq);
+    }
+
+    pub fn set_pages(&mut self, pages: usize) {
+        self.attrs.pages = Some(pages);
+    }
+
+    pub fn set_bytes(&mut self, bytes: u64) {
+        self.attrs.bytes = Some(bytes);
+    }
+
+    pub fn set_k(&mut self, k: usize) {
+        self.attrs.k = Some(k);
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            self.tracer.close_span(self.phase, start, self.attrs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        assert!(!t.is_enabled());
+        {
+            let mut s = t.span(Phase::LeanExec);
+            s.set_bytes(128);
+        }
+        t.instant(Phase::Evict, Attrs::default());
+        t.record_since(Phase::Gather, t.now(), Attrs::default());
+        t.advance_step();
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+        assert_eq!(t.step(), 0);
+        assert!(t.phase_hist(Phase::LeanExec).is_none());
+    }
+
+    #[test]
+    fn span_records_phase_step_and_attrs() {
+        let t = Tracer::enabled(16);
+        t.advance_step();
+        {
+            let mut s = t.span(Phase::Gather);
+            s.set_seq(7);
+            s.set_bytes(4096);
+            s.set_pages(3);
+        }
+        let evs = t.events();
+        assert_eq!(evs.len(), 1);
+        let e = &evs[0];
+        assert_eq!(e.phase, Phase::Gather);
+        assert_eq!(e.step, 1);
+        assert_eq!(e.depth, 0);
+        assert_eq!(e.attrs.seq, Some(7));
+        assert_eq!(e.attrs.bytes, Some(4096));
+        assert_eq!(e.attrs.pages, Some(3));
+        assert_eq!(e.attrs.k, None);
+        assert!(e.dur_us >= 0.0);
+        assert!(t.phase_hist(Phase::Gather).is_some());
+    }
+
+    #[test]
+    fn nested_spans_track_depth_and_close_inner_first() {
+        let t = Tracer::enabled(16);
+        {
+            let _outer = t.span(Phase::LeanExec);
+            {
+                let _inner = t.span(Phase::Gather);
+            }
+        }
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        // The inner span closes (and records) first, at depth 1.
+        assert_eq!(evs[0].phase, Phase::Gather);
+        assert_eq!(evs[0].depth, 1);
+        assert_eq!(evs[1].phase, Phase::LeanExec);
+        assert_eq!(evs[1].depth, 0);
+        // The outer span's interval contains the inner's.
+        assert!(evs[1].start_us <= evs[0].start_us);
+        assert!(
+            evs[0].start_us + evs[0].dur_us
+                <= evs[1].start_us + evs[1].dur_us + 1e-3
+        );
+    }
+
+    #[test]
+    fn ring_overflow_keeps_newest_and_counts_drops() {
+        let t = Tracer::enabled(4);
+        for i in 0..10u64 {
+            t.instant(Phase::Admit, Attrs { seq: Some(i), ..Default::default() });
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dropped(), 6);
+        let seqs: Vec<u64> =
+            t.events().iter().map(|e| e.attrs.seq.unwrap()).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "newest survive");
+        // Histograms keep counting past overflow.
+        assert_eq!(t.phase_hist(Phase::Admit).unwrap().count(), 10);
+    }
+
+    #[test]
+    fn chrome_export_validates_and_sorts() {
+        let t = Tracer::enabled(16);
+        {
+            let _s = t.span(Phase::LeanExec);
+        }
+        t.instant(Phase::SpecCommit, Attrs { k: Some(3), ..Default::default() });
+        let trace = t.export_chrome_trace();
+        validate_chrome_trace(&trace).expect("export matches the schema");
+        let arr = trace.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        for w in arr.windows(2) {
+            assert!(
+                w[0].at("ts").as_f64().unwrap() <= w[1].at("ts").as_f64().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn validator_rejects_malformed_traces() {
+        assert!(validate_chrome_trace(&Json::Null).is_err());
+        let bad_name =
+            Json::parse(r#"[{"name":"nope","ph":"X","ts":0,"dur":1,"pid":0,"tid":0,"args":{"step":0}}]"#)
+                .unwrap();
+        assert!(validate_chrome_trace(&bad_name).is_err());
+        let bad_ph =
+            Json::parse(r#"[{"name":"gather","ph":"B","ts":0,"dur":1,"pid":0,"tid":0,"args":{"step":0}}]"#)
+                .unwrap();
+        assert!(validate_chrome_trace(&bad_ph).is_err());
+        let no_step =
+            Json::parse(r#"[{"name":"gather","ph":"X","ts":0,"dur":1,"pid":0,"tid":0,"args":{}}]"#)
+                .unwrap();
+        assert!(validate_chrome_trace(&no_step).is_err());
+    }
+}

@@ -590,12 +590,35 @@ pub fn lean_cascade_host(
     cplan: &CascadePlan,
     batch_rows: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    lean_cascade_host_traced(problem, t, cplan, batch_rows, &crate::obs::Tracer::disabled())
+}
+
+/// [`lean_cascade_host`] with the two hot phases traced: a `gather` span
+/// over task rolling (carrying the deduplicated KV bytes the tasks will
+/// stream) and a `lean_exec` span over the batched partial execution and
+/// re-scaling reduction. With a disabled tracer this is exactly the
+/// untraced path — `leanattn bench --obs` measures that bound.
+pub fn lean_cascade_host_traced(
+    problem: &CascadeProblem,
+    t: &CascadeTensors,
+    cplan: &CascadePlan,
+    batch_rows: usize,
+    tracer: &crate::obs::Tracer,
+) -> (Vec<f32>, Vec<f32>) {
+    use crate::obs::{Attrs, Phase};
     let d = problem.head_dim;
+    let gather_start = tracer.now();
     let tasks = roll_cascade_tasks(problem, cplan);
-    run_cascade_tasks(problem, t, &tasks, batch_rows, |q, k, v, valid, rows, w| {
+    let bytes = Some(rolled_kv_bytes(&tasks, d) as u64);
+    tracer.record_since(Phase::Gather, gather_start, Attrs { bytes, ..Default::default() });
+    let exec_start = tracer.now();
+    let out = run_cascade_tasks(problem, t, &tasks, batch_rows, |q, k, v, valid, rows, w| {
         Ok(partial_attention_host(q, k, v, rows, w, d, valid, 0))
     })
-    .expect("host partials cannot fail")
+    .expect("host partials cannot fail");
+    let k_attr = Some(tasks.len());
+    tracer.record_since(Phase::LeanExec, exec_start, Attrs { k: k_attr, ..Default::default() });
+    out
 }
 
 fn fold_row(acc: &mut Partials, gi: usize, row: &[f32], stats: RowStats) {

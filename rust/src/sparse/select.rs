@@ -119,6 +119,18 @@ pub fn selected_tokens(len: usize, page_tokens: usize, selection: &[usize]) -> u
         .sum()
 }
 
+/// K+V bytes a selection streams out of a `len`-token context, given the
+/// cache's per-token K+V footprint — the `bytes` attribute the gather
+/// span and the sparse bandwidth accounting both report.
+pub fn selected_kv_bytes(
+    len: usize,
+    page_tokens: usize,
+    selection: &[usize],
+    token_bytes: usize,
+) -> u64 {
+    selected_tokens(len, page_tokens, selection) as u64 * token_bytes as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,5 +228,6 @@ mod tests {
         assert_eq!(idx, vec![0, 1, 2, 3, 8, 9]);
         assert_eq!(selected_tokens(10, 4, &[0, 2]), 6);
         assert_eq!(selected_tokens(10, 4, &[0, 1, 2]), 10);
+        assert_eq!(selected_kv_bytes(10, 4, &[0, 2], 16), 96);
     }
 }

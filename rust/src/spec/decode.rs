@@ -10,6 +10,7 @@
 //! spec_props.rs` pins that equivalence, and the acceptance *rate* only
 //! moves the pass count, never the stream.
 
+use crate::obs::{Attrs, Phase, Tracer};
 use crate::sampling::{sample_token, SampledToken, SamplingParams};
 use crate::util::rng::Rng;
 
@@ -54,6 +55,15 @@ impl SpecStats {
         } else {
             self.accepted as f64 / self.drafted as f64
         }
+    }
+
+    /// Fold another run's counters in (metrics merge across engines).
+    pub fn merge(&mut self, o: &SpecStats) {
+        self.verify_passes += o.verify_passes;
+        self.drafted += o.drafted;
+        self.accepted += o.accepted;
+        self.committed += o.committed;
+        self.rolled_back += o.rolled_back;
     }
 }
 
@@ -122,24 +132,32 @@ fn spec_generate_chain<M: TokenModel + ?Sized, D: DraftSource + ?Sized>(
     max_new: usize,
     params: &SamplingParams,
     rng: &mut Rng,
+    tracer: &Tracer,
 ) -> SpecRun {
     assert!(!prompt.is_empty(), "empty prompt");
     let mut hist = prompt.to_vec();
     let mut tokens = Vec::with_capacity(max_new);
     let mut stats = SpecStats::default();
     while tokens.len() < max_new {
+        tracer.advance_step();
         let remaining = max_new - tokens.len();
         let k_pass = ctrl.as_deref().map_or(k_max, |c| c.k().min(k_max));
         let k_step = k_pass.min(remaining.saturating_sub(1));
+        let draft_start = tracer.now();
         let mut draft = if k_step > 0 {
             drafter.draft(&hist, k_step)
         } else {
             Vec::new()
         };
         draft.truncate(k_step);
+        let draft_attrs = Attrs { k: Some(draft.len()), ..Default::default() };
+        tracer.record_since(Phase::SpecDraft, draft_start, draft_attrs);
+        let verify_start = tracer.now();
         let rows = target_rows(model, &hist, &draft);
         let row_refs: Vec<&[f32]> = rows.iter().map(Vec::as_slice).collect();
         let verdict = verify_chain(&row_refs, &draft, &hist, params, rng);
+        let verify_attrs = Attrs { k: Some(verdict.accepted), ..Default::default() };
+        tracer.record_since(Phase::SpecVerify, verify_start, verify_attrs);
         if let Some(c) = ctrl.as_deref_mut() {
             c.observe(draft.len(), verdict.accepted);
         }
@@ -147,6 +165,8 @@ fn spec_generate_chain<M: TokenModel + ?Sized, D: DraftSource + ?Sized>(
         stats.drafted += draft.len();
         stats.accepted += verdict.accepted;
         stats.committed += verdict.committed.len();
+        let commit_attrs = Attrs { k: Some(verdict.committed.len()), ..Default::default() };
+        tracer.instant(Phase::SpecCommit, commit_attrs);
         for s in &verdict.committed {
             hist.push(s.token);
             tokens.push(*s);
@@ -165,7 +185,26 @@ pub fn spec_generate<M: TokenModel + ?Sized, D: DraftSource + ?Sized>(
     params: &SamplingParams,
     rng: &mut Rng,
 ) -> SpecRun {
-    spec_generate_chain(model, drafter, k, None, prompt, max_new, params, rng)
+    let tracer = Tracer::disabled();
+    spec_generate_chain(model, drafter, k, None, prompt, max_new, params, rng, &tracer)
+}
+
+/// [`spec_generate`] with every pass traced: `spec_draft` /
+/// `spec_verify` spans (the verify span is the multi-query lean pass
+/// stand-in) and a `spec_commit` instant carrying the commit count.
+/// The committed stream is unchanged — tracing never touches the rng.
+#[allow(clippy::too_many_arguments)]
+pub fn spec_generate_traced<M: TokenModel + ?Sized, D: DraftSource + ?Sized>(
+    model: &M,
+    drafter: &mut D,
+    k: usize,
+    prompt: &[i32],
+    max_new: usize,
+    params: &SamplingParams,
+    rng: &mut Rng,
+    tracer: &Tracer,
+) -> SpecRun {
+    spec_generate_chain(model, drafter, k, None, prompt, max_new, params, rng, tracer)
 }
 
 /// Speculative decoding with an [`AdaptiveK`](super::AdaptiveK)
@@ -184,6 +223,7 @@ pub fn spec_generate_adaptive<M: TokenModel + ?Sized, D: DraftSource + ?Sized>(
     rng: &mut Rng,
 ) -> (SpecRun, usize) {
     let mut ctrl = super::AdaptiveK::new(k_max);
+    let tracer = Tracer::disabled();
     let run = spec_generate_chain(
         model,
         drafter,
@@ -193,6 +233,7 @@ pub fn spec_generate_adaptive<M: TokenModel + ?Sized, D: DraftSource + ?Sized>(
         max_new,
         params,
         rng,
+        &tracer,
     );
     let k_final = ctrl.k();
     (run, k_final)
@@ -369,6 +410,42 @@ mod tests {
         assert_eq!(run.tokens, seq);
         assert!(final_k >= 2, "accepting stream keeps a deep draft");
         assert!(run.stats.tokens_per_pass() > 1.0);
+    }
+
+    #[test]
+    fn traced_run_emits_spans_without_touching_the_stream() {
+        let model = SyntheticModel::new(32, 5, 6.0);
+        let prompt = periodic_prompt(24, 6);
+        let params = SamplingParams::greedy();
+        let mut r1 = seq_rng(1, 2);
+        let mut d1 = NGramDrafter::default();
+        let plain = spec_generate(&model, &mut d1, 4, &prompt, 40, &params, &mut r1);
+        let tracer = Tracer::enabled(4096);
+        let mut r2 = seq_rng(1, 2);
+        let mut d2 = NGramDrafter::default();
+        let traced =
+            spec_generate_traced(&model, &mut d2, 4, &prompt, 40, &params, &mut r2, &tracer);
+        assert_eq!(traced.tokens, plain.tokens, "tracing never moves the stream");
+        let evs = tracer.events();
+        let verifies = evs.iter().filter(|e| e.phase == Phase::SpecVerify).count();
+        assert_eq!(verifies, traced.stats.verify_passes);
+        let commits: usize = evs
+            .iter()
+            .filter(|e| e.phase == Phase::SpecCommit)
+            .map(|e| e.attrs.k.unwrap())
+            .sum();
+        assert_eq!(commits, traced.stats.committed);
+        assert!(tracer.phase_hist(Phase::SpecDraft).is_some());
+    }
+
+    #[test]
+    fn stats_merge_adds_counters() {
+        let mut a = SpecStats { verify_passes: 2, drafted: 6, ..Default::default() };
+        let b = SpecStats { verify_passes: 1, drafted: 3, accepted: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.verify_passes, 3);
+        assert_eq!(a.drafted, 9);
+        assert_eq!(a.accepted, 2);
     }
 
     #[test]

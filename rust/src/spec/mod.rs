@@ -39,8 +39,8 @@ pub mod tree;
 pub use accept::{verify_chain, verify_tree, ChainVerdict, TreeVerdict};
 pub use adaptive::AdaptiveK;
 pub use decode::{
-    sequential_generate, spec_generate, spec_generate_adaptive, spec_generate_tree,
-    SpecRun, SpecStats,
+    sequential_generate, spec_generate, spec_generate_adaptive, spec_generate_traced,
+    spec_generate_tree, SpecRun, SpecStats,
 };
 pub use draft::{
     DraftKind, DraftSource, ModelDrafter, NGramDrafter, SyntheticModel, TokenModel,

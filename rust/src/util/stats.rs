@@ -1,4 +1,13 @@
 //! Descriptive statistics for bench reporting (mean, stddev, percentiles).
+//!
+//! [`Summary::of`] keeps (and sorts) the raw sample — fine for benches
+//! with a few hundred iterations, unbounded for a long-running engine.
+//! Serving hot paths therefore accumulate into a fixed-memory
+//! [`LogHistogram`] instead and summarize via
+//! [`Summary::from_histogram`], which is exact for n/mean/stddev/min/max
+//! and within one bucket width (~9%) for the percentiles.
+
+use crate::obs::hist::LogHistogram;
 
 /// Summary statistics over a sample of f64 measurements.
 #[derive(Clone, Debug, PartialEq)]
@@ -34,6 +43,27 @@ impl Summary {
             p99: percentile_sorted(&sorted, 0.99),
             max: sorted[n - 1],
         }
+    }
+
+    /// Summarize a bounded-memory histogram (the long-serving-run path:
+    /// no raw samples are retained). `None` when the histogram is empty.
+    /// Moments and extrema are exact; percentiles are the histogram's
+    /// one-bucket-width estimates.
+    pub fn from_histogram(h: &LogHistogram) -> Option<Summary> {
+        if h.is_empty() {
+            return None;
+        }
+        Some(Summary {
+            n: h.count() as usize,
+            mean: h.mean(),
+            stddev: h.stddev(),
+            min: h.min(),
+            p50: h.quantile(0.50),
+            p90: h.quantile(0.90),
+            p95: h.quantile(0.95),
+            p99: h.quantile(0.99),
+            max: h.max(),
+        })
     }
 }
 
@@ -93,6 +123,29 @@ mod tests {
     fn geomean_basics() {
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
         assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_histogram_matches_exact_moments() {
+        let samples: Vec<f64> = (1..=200).map(|i| i as f64 * 1.3).collect();
+        let mut h = LogHistogram::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        let exact = Summary::of(&samples);
+        let est = Summary::from_histogram(&h).unwrap();
+        assert_eq!(est.n, exact.n);
+        assert!((est.mean - exact.mean).abs() < 1e-9);
+        assert!((est.stddev - exact.stddev).abs() < 1e-6);
+        assert_eq!(est.min, exact.min);
+        assert_eq!(est.max, exact.max);
+        // Percentiles: within one bucket width, plus 1% slack for
+        // Summary::of's interpolation between adjacent samples.
+        let g = LogHistogram::growth();
+        for (e, q) in [(exact.p50, est.p50), (exact.p95, est.p95), (exact.p99, est.p99)] {
+            assert!(q <= e * 1.0001 && e <= q * g * 1.01, "est {q} vs exact {e}");
+        }
+        assert!(Summary::from_histogram(&LogHistogram::new()).is_none());
     }
 
     #[test]

@@ -1,0 +1,289 @@
+//! Property tests for the observability plane: tracer ring semantics,
+//! span nesting, Chrome-trace round-trips through the hand-rolled JSON
+//! parser, histogram quantile exactness bounds on random workloads, and
+//! the metrics consistency audit (every documented counter reaches both
+//! exporter outputs). Everything here is artifact-free.
+
+use lean_attention::coordinator::{Metrics, DOCUMENTED_METRICS};
+use lean_attention::obs::{
+    validate_chrome_trace, Attrs, LogHistogram, Phase, RequestTimeline,
+    TimelineRecorder, Tracer, SNAPSHOT_VERSION,
+};
+use lean_attention::util::json::Json;
+use lean_attention::util::rng::Rng;
+use lean_attention::util::stats::Summary;
+
+// ---------------------------------------------------------------- tracer
+
+#[test]
+fn ring_overflow_keeps_newest_events_with_monotonic_drop_counter() {
+    for capacity in [1usize, 2, 7, 64] {
+        let t = Tracer::enabled(capacity);
+        let total = 200u64;
+        let mut last_dropped = 0;
+        for i in 0..total {
+            t.instant(Phase::Admit, Attrs { seq: Some(i), ..Default::default() });
+            let d = t.dropped();
+            assert!(d >= last_dropped, "drop counter went backwards");
+            last_dropped = d;
+        }
+        assert_eq!(t.len(), capacity, "ring holds exactly its capacity");
+        assert_eq!(t.dropped(), total - capacity as u64);
+        let seqs: Vec<u64> =
+            t.events().iter().map(|e| e.attrs.seq.unwrap()).collect();
+        let expect: Vec<u64> = (total - capacity as u64..total).collect();
+        assert_eq!(seqs, expect, "cap {capacity}: newest events survive, in order");
+        // The per-phase histogram saw every event, overflow or not.
+        assert_eq!(t.phase_hist(Phase::Admit).unwrap().count(), total);
+    }
+}
+
+/// Open a stack of spans and let them unwind (inner closes first).
+fn nest(t: &Tracer, phases: &[Phase]) {
+    if let Some((first, rest)) = phases.split_first() {
+        let _guard = t.span(*first);
+        nest(t, rest);
+    }
+}
+
+#[test]
+fn span_nesting_records_inner_first_with_contained_intervals() {
+    let mut rng = Rng::new(41);
+    for _trial in 0..20 {
+        let depth = rng.urange(1, 8);
+        let phases: Vec<Phase> = (0..depth)
+            .map(|_| Phase::ALL[rng.urange(0, Phase::ALL.len())])
+            .collect();
+        let t = Tracer::enabled(64);
+        nest(&t, &phases);
+        let evs = t.events();
+        assert_eq!(evs.len(), depth);
+        for (i, ev) in evs.iter().enumerate() {
+            // Close order is the reverse of open order, so event i is the
+            // span opened at depth (depth - 1 - i).
+            assert_eq!(ev.phase, phases[depth - 1 - i]);
+            assert_eq!(ev.depth as usize, depth - 1 - i);
+            if i > 0 {
+                let inner = &evs[i - 1];
+                assert!(ev.start_us <= inner.start_us, "outer opens first");
+                assert!(
+                    inner.start_us + inner.dur_us
+                        <= ev.start_us + ev.dur_us + 1e-3,
+                    "outer closes last"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chrome_trace_round_trips_through_util_json() {
+    let t = Tracer::enabled(256);
+    let mut rng = Rng::new(7);
+    for i in 0..60u64 {
+        if rng.f64() < 0.5 {
+            let mut s = t.span(Phase::ALL[rng.urange(0, Phase::ALL.len())]);
+            s.set_seq(i);
+            s.set_bytes(rng.range(0, 1 << 20));
+            s.set_pages(rng.urange(0, 64));
+        } else {
+            t.instant(
+                Phase::SpecCommit,
+                Attrs { seq: Some(i), k: Some(rng.urange(1, 6)), ..Default::default() },
+            );
+        }
+        if i % 10 == 0 {
+            t.advance_step();
+        }
+    }
+    let trace = t.export_chrome_trace();
+    validate_chrome_trace(&trace).expect("export matches the schema");
+    let text = trace.to_string();
+    let parsed = Json::parse(&text).expect("export parses back");
+    assert_eq!(parsed, trace, "parse(to_string(trace)) is the identity");
+    validate_chrome_trace(&parsed).expect("parsed trace still validates");
+    assert_eq!(parsed.as_arr().unwrap().len(), t.len());
+}
+
+// ------------------------------------------------------------- histogram
+
+/// Nearest-rank exact quantile, matching the histogram's rank rule.
+fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+#[test]
+fn histogram_quantiles_within_one_bucket_of_exact_on_random_workloads() {
+    let growth = LogHistogram::growth();
+    for seed in [3u64, 11, 42, 99] {
+        let mut rng = Rng::new(seed);
+        let mut samples = Vec::new();
+        let mut h = LogHistogram::new();
+        for _ in 0..2000 {
+            // Mixed workload: uniform, exponential tail, heavy spikes —
+            // the shapes serving latencies actually take.
+            let u = rng.f64();
+            let v = match rng.urange(0, 3) {
+                0 => 10.0 + 990.0 * u,
+                1 => -500.0 * (1.0 - u).max(1e-12).ln(),
+                _ => 5e4 * (0.5 + u),
+            };
+            samples.push(v);
+            h.record(v);
+        }
+        samples.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.5, 0.9, 0.95, 0.99, 0.999] {
+            let exact = exact_quantile(&samples, q);
+            let est = h.quantile(q);
+            assert!(
+                est <= exact * (1.0 + 1e-9) && exact < est * growth * (1.0 + 1e-9),
+                "seed {seed} q={q}: est {est} vs exact {exact}"
+            );
+        }
+        // Summary::from_histogram carries the same estimates plus exact
+        // moments — the capped replacement for unbounded sample Vecs.
+        let s = Summary::from_histogram(&h).unwrap();
+        assert_eq!(s.n, samples.len());
+        assert_eq!(s.min, samples[0]);
+        assert_eq!(s.max, *samples.last().unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        assert!((s.mean - mean).abs() / mean < 1e-9);
+    }
+}
+
+#[test]
+fn histogram_merge_matches_one_histogram_over_the_union() {
+    let mut rng = Rng::new(17);
+    let (mut a, mut b, mut all) =
+        (LogHistogram::new(), LogHistogram::new(), LogHistogram::new());
+    for _ in 0..1500 {
+        let v = 1.0 + 1e6 * rng.f64();
+        all.record(v);
+        if rng.f64() < 0.4 {
+            a.record(v);
+        } else {
+            b.record(v);
+        }
+    }
+    a.merge(&b);
+    assert_eq!(a.count(), all.count());
+    assert_eq!(a.min(), all.min());
+    assert_eq!(a.max(), all.max());
+    assert!((a.sum() - all.sum()).abs() / all.sum() < 1e-12);
+    // Bucket contents are integer counts: quantiles agree exactly.
+    for q in [0.1, 0.5, 0.9, 0.99, 0.999] {
+        assert_eq!(a.quantile(q), all.quantile(q), "q={q}");
+    }
+}
+
+// ----------------------------------------------------- timelines and SLO
+
+#[test]
+fn slo_attainment_tracks_the_exact_fraction_on_random_timelines() {
+    let mut rng = Rng::new(23);
+    let mut rec = TimelineRecorder::default();
+    let slo_ms = 40.0;
+    let mut within = 0usize;
+    let n = 400;
+    for i in 0..n {
+        // e2e between ~1ms and ~800ms, log-uniform.
+        let e2e_us = 1e3 * (800f64).powf(rng.f64());
+        let tl = RequestTimeline {
+            id: i as u64,
+            queue_us: e2e_us * 0.1,
+            prefill_us: e2e_us * 0.3,
+            decode_us: e2e_us * 0.6,
+            tokens: rng.urange(1, 32),
+        };
+        if tl.e2e_us() <= slo_ms * 1e3 {
+            within += 1;
+        }
+        rec.observe(tl);
+    }
+    let rep = rec.slo_report(slo_ms, 2.0);
+    assert_eq!(rep.requests, n as u64);
+    let exact = within as f64 / n as f64;
+    assert!(
+        (rep.attainment - exact).abs() < 0.05,
+        "attainment {} vs exact {exact}",
+        rep.attainment
+    );
+    assert!((rep.goodput_rps - exact * n as f64 / 2.0).abs() / rep.goodput_rps < 0.1);
+    // Percentile rows are monotone and rendered.
+    assert!(rep.e2e_ms.p50 <= rep.e2e_ms.p95 && rep.e2e_ms.p95 <= rep.e2e_ms.p999);
+    let out = rep.render();
+    assert!(out.contains("SLO"), "{out}");
+
+    // Merging two replicas' recorders sums their populations.
+    let mut other = TimelineRecorder::default();
+    other.observe(RequestTimeline {
+        id: 1000,
+        queue_us: 5.0,
+        prefill_us: 10.0,
+        decode_us: 20.0,
+        tokens: 3,
+    });
+    let mut merged = rec.clone();
+    merged.merge(&other);
+    assert_eq!(merged.requests(), rec.requests() + 1);
+    assert_eq!(merged.tokens(), rec.tokens() + 3);
+}
+
+// ------------------------------------------------------ consistency audit
+
+#[test]
+fn every_documented_metric_reaches_both_exporters() {
+    let mut m = Metrics::default();
+    // Touch a few recording paths so the snapshot is not all-zero.
+    m.prefill_calls = 3;
+    m.decode_steps = 40;
+    m.tokens_generated = 160;
+    m.requests_finished = 3;
+    m.step_us.record(812.5);
+    m.prefill_us.record(15_000.0);
+    m.record_projection(120.0, 310.0, 0.92);
+    m.record_cascade_projection(95.0, 262_144.0);
+
+    let snap = m.snapshot();
+    assert_eq!(
+        snap.names(),
+        DOCUMENTED_METRICS.to_vec(),
+        "snapshot exports exactly the documented metric list, in order"
+    );
+
+    let prom = snap.to_prometheus();
+    let json = snap.to_json();
+    assert_eq!(json.usize_at("version"), SNAPSHOT_VERSION as usize);
+    let metrics = json.get("metrics").and_then(Json::as_obj).unwrap();
+    let kinds = json.get("kinds").and_then(Json::as_obj).unwrap();
+    for name in DOCUMENTED_METRICS {
+        assert!(
+            prom.contains(&format!("leanattn_{name} ")),
+            "{name} missing a Prometheus sample line"
+        );
+        assert!(
+            prom.contains(&format!("# TYPE leanattn_{name} ")),
+            "{name} missing a Prometheus TYPE line"
+        );
+        assert!(metrics.contains_key(*name), "{name} missing from the JSON export");
+        assert!(kinds.contains_key(*name), "{name} missing a JSON kind");
+    }
+    assert_eq!(metrics.len(), DOCUMENTED_METRICS.len());
+
+    // Spot-check values survive serialization.
+    assert_eq!(
+        metrics.get("decode_steps_total"),
+        Some(&Json::Num(40.0)),
+        "counter value reaches the JSON export"
+    );
+    assert!(prom.contains("leanattn_decode_steps_total 40\n"));
+
+    // Router-style merge keeps the snapshot well-formed.
+    let mut folded = Metrics::default();
+    folded.merge(&m);
+    folded.merge(&m);
+    let snap2 = folded.snapshot();
+    assert_eq!(snap2.get("decode_steps_total").unwrap().value, 80.0);
+    assert_eq!(snap2.names(), DOCUMENTED_METRICS.to_vec());
+}
