@@ -36,6 +36,7 @@ fn main() {
 
         let problem = DecodeProblem {
             heads: 1,
+            kv_heads: 1,
             head_dim: d,
             ctx_lens: lens.clone(),
             tile: 256,

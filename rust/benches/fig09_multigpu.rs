@@ -2,6 +2,6 @@
 use lean_attention::bench_harness::figures::fig09_multigpu;
 fn main() {
     for (i, t) in fig09_multigpu().iter().enumerate() {
-        t.emit(&format!("fig09{}", ['a', 'b', 'c'][i]));
+        t.emit(&format!("fig09{}", ['a', 'b', 'c', 'd'][i]));
     }
 }

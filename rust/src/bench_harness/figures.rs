@@ -245,6 +245,40 @@ pub fn fig08_h100() -> Vec<Table> {
     vec![a, b, c]
 }
 
+/// Fig 9d (GQA extension): tensor parallelism shards **KV heads** — the
+/// unit that owns KV bytes — so each GPU keeps whole query-head groups
+/// and per-GPU KV traffic shrinks by the group size. The dense row
+/// (`kv_heads == heads`) reproduces plain per-head sharding.
+fn fig09d_gqa_tp() -> Table {
+    use crate::partition::tensor_parallel::{shard_heads, simulate_sharded};
+    use crate::sim::cost::kv_stream_bytes;
+    let gpu = GpuArch::a100();
+    let mut t = Table::new(
+        "Fig 9d — 8xA100 TP over kv heads, heads=256 BS=4 ctx=256k d=64",
+        &["kv_heads", "group", "kv/gpu", "q/gpu", "LA_us", "KV_MiB/gpu", "dense_KV_x"],
+    );
+    let mut dense_bytes = None;
+    for kv in [256usize, 64, 32, 8] {
+        let p = DecodeProblem::uniform(4, 256, 262_144, 64).with_kv_heads(kv);
+        let shards = shard_heads(&p, 8, Strategy::StreamK, gpu.sm_slots())
+            .expect("256 query heads shard over 8 GPUs at every grouping");
+        let r = simulate_sharded(&shards, &gpu);
+        let bytes =
+            kv_stream_bytes(shards[0].problem.total_tiles(), p.tile, p.head_dim);
+        let dense = *dense_bytes.get_or_insert(bytes);
+        t.row(vec![
+            kv.to_string(),
+            (256 / kv).to_string(),
+            shards[0].problem.kv_heads.to_string(),
+            shards[0].problem.heads.to_string(),
+            f2(r.latency_us),
+            f2(bytes / (1024.0 * 1024.0)),
+            f2(dense / bytes),
+        ]);
+    }
+    t
+}
+
 /// Fig 9: 8×A100 tensor-parallel speedups.
 pub fn fig09_multigpu() -> Vec<Table> {
     let arch = GpuArch::a100().multi(8);
@@ -274,7 +308,7 @@ pub fn fig09_multigpu() -> Vec<Table> {
             .map(|&bs| (bs.to_string(), DecodeProblem::uniform(bs, 256, 262_144, 64)))
             .collect(),
     );
-    vec![a, b, c]
+    vec![a, b, c, fig09d_gqa_tp()]
 }
 
 /// Fig 10: ragged batching — LA/FD speedup vs batch-context-ratio.
@@ -618,6 +652,18 @@ mod tests {
             s.last().unwrap() > &1.3,
             "long-ctx speedup: {s:?}"
         );
+    }
+
+    #[test]
+    fn fig09d_kv_bytes_shrink_with_the_group_size() {
+        let t = fig09_multigpu().pop().unwrap();
+        assert!(t.title.contains("Fig 9d"), "{}", t.title);
+        // Rows sweep kv_heads 256 (dense), 64, 32, 8: per-GPU KV traffic
+        // shrinks by exactly the group size 1, 4, 8, 32.
+        let x = col(&t, "dense_KV_x");
+        for (got, want) in x.iter().zip([1.0, 4.0, 8.0, 32.0]) {
+            assert!((got - want).abs() < 0.01, "{x:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Dense-per-head vs grouped (GQA/MQA) decode comparison over identical
+//! numbers: the measurement backing `leanattn bench --gqa`.
+//!
+//! Both paths run the same stream-K planner and host executor over a
+//! short decode loop (context grows by one LeanTile per step). The
+//! grouped path poses the problem at **kv-head** granularity — one KV
+//! stream per (lane, kv head) serving a whole query-head group — while
+//! the dense path poses the classic one-KV-stream-per-query-head layout,
+//! its K/V materialized by repeating each kv-head stream `h/h_kv` times
+//! from the *same* random draws. The exactness oracle is plain dense
+//! attention over that repeated KV, so the gathered-KV-byte gap between
+//! the two paths is attributable to the grouping alone and both streams
+//! must agree with the oracle bit-for-float.
+
+use anyhow::{ensure, Result};
+
+use crate::attention::attention_host;
+use crate::partition::host_exec::{execute_plan_host, HostTensors};
+use crate::partition::plan::{build_plan, DecodeProblem, Plan, Strategy};
+use crate::util::stats::Summary;
+use crate::util::testing::max_abs_err;
+use crate::util::timer::sample_us;
+
+/// Shape of one grouped-vs-dense decode comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct GqaCase {
+    pub batch: usize,
+    /// Query heads.
+    pub heads: usize,
+    /// KV heads; divides `heads` (1 = MQA, `heads` = ungrouped).
+    pub kv_heads: usize,
+    /// Context tokens at the first decode step.
+    pub ctx: usize,
+    /// Decode steps; the context grows by one tile per step.
+    pub steps: usize,
+    pub head_dim: usize,
+    pub tile: usize,
+    /// CTA slots handed to the stream-K planner.
+    pub slots: usize,
+}
+
+impl GqaCase {
+    /// CI-sized case (seconds, not minutes).
+    pub fn smoke() -> GqaCase {
+        GqaCase {
+            batch: 2,
+            heads: 4,
+            kv_heads: 1,
+            ctx: 96,
+            steps: 2,
+            head_dim: 16,
+            tile: 32,
+            slots: 24,
+        }
+    }
+
+    pub fn default_case() -> GqaCase {
+        GqaCase {
+            batch: 2,
+            heads: 8,
+            kv_heads: 2,
+            ctx: 512,
+            steps: 4,
+            head_dim: 64,
+            tile: 64,
+            slots: 64,
+        }
+    }
+}
+
+/// Outcome of one grouped-vs-dense comparison.
+#[derive(Clone, Debug)]
+pub struct GqaComparison {
+    pub case: GqaCase,
+    /// K+V bytes the grouped plan streams over the loop (one KV walk per
+    /// kv head).
+    pub grouped_kv_bytes: u64,
+    /// K+V bytes the dense per-query-head plan streams over the loop.
+    pub dense_kv_bytes: u64,
+    pub grouped_us: Summary,
+    pub dense_us: Summary,
+    /// Worst-step max abs error of the grouped stream vs the repeated-KV
+    /// dense oracle.
+    pub grouped_err: f32,
+    /// Worst-step max abs error of the dense stream vs the same oracle.
+    pub dense_err: f32,
+}
+
+impl GqaComparison {
+    /// Dense-over-grouped gathered-KV byte ratio — `h / h_kv` up to tile
+    /// padding.
+    pub fn bytes_ratio(&self) -> f64 {
+        if self.grouped_kv_bytes == 0 {
+            return 0.0;
+        }
+        self.dense_kv_bytes as f64 / self.grouped_kv_bytes as f64
+    }
+}
+
+/// One prepared decode step: plans for both paths plus the oracle output,
+/// all derived from a single set of random draws.
+struct PreparedStep {
+    grouped_problem: DecodeProblem,
+    grouped_plan: Plan,
+    grouped_tensors: HostTensors,
+    dense_problem: DecodeProblem,
+    dense_plan: Plan,
+    dense_tensors: HostTensors,
+    oracle: Vec<f32>,
+}
+
+/// KV bytes a plan streams: every LeanTile moves `tile × d` K rows and as
+/// many V rows (f32 host storage).
+fn plan_kv_bytes(problem: &DecodeProblem) -> u64 {
+    problem.total_tiles() * (2 * problem.tile * problem.head_dim * 4) as u64
+}
+
+/// Run one grouped-vs-dense decode-loop comparison.
+pub fn compare_gqa(case: GqaCase, iters: usize, seed: u64) -> Result<GqaComparison> {
+    ensure!(case.kv_heads >= 1, "--kv-heads must be >= 1");
+    ensure!(
+        case.heads % case.kv_heads == 0,
+        "kv heads {} must divide query heads {}",
+        case.kv_heads,
+        case.heads
+    );
+    ensure!(case.steps >= 1, "need at least one decode step");
+
+    let d = case.head_dim;
+    let mut steps = Vec::with_capacity(case.steps);
+    let mut grouped_kv_bytes = 0u64;
+    let mut dense_kv_bytes = 0u64;
+    for s in 0..case.steps {
+        let ctx = case.ctx + s * case.tile;
+        let gp = DecodeProblem::uniform(case.batch, case.heads, ctx, d)
+            .with_tile(case.tile)
+            .with_kv_heads(case.kv_heads);
+        let gt = HostTensors::random(&gp, seed.wrapping_add(s as u64));
+        // Dense twin: same queries, KV repeated to query-head count —
+        // identical randomness by construction.
+        let dp = DecodeProblem::uniform(case.batch, case.heads, ctx, d)
+            .with_tile(case.tile);
+        let (rk, rv) = gt.repeated_kv(&gp);
+        let dt = HostTensors { q: gt.q.clone(), k: rk, v: rv, n_max: gt.n_max };
+        let oracle = attention_host(
+            &gt.q,
+            &dt.k,
+            &dt.v,
+            gp.outputs(),
+            gt.n_max,
+            d,
+            &gt.output_lens(&gp),
+        );
+        let grouped_plan = build_plan(&gp, Strategy::StreamK, case.slots);
+        grouped_plan.validate(&gp)?;
+        let dense_plan = build_plan(&dp, Strategy::StreamK, case.slots);
+        dense_plan.validate(&dp)?;
+        grouped_kv_bytes += plan_kv_bytes(&gp);
+        dense_kv_bytes += plan_kv_bytes(&dp);
+        steps.push(PreparedStep {
+            grouped_problem: gp,
+            grouped_plan,
+            grouped_tensors: gt,
+            dense_problem: dp,
+            dense_plan,
+            dense_tensors: dt,
+            oracle,
+        });
+    }
+
+    // Exactness: both streams against the repeated-KV dense oracle.
+    let mut grouped_err = 0.0f32;
+    let mut dense_err = 0.0f32;
+    for st in &steps {
+        let g = execute_plan_host(
+            &st.grouped_plan,
+            &st.grouped_problem,
+            &st.grouped_tensors,
+            None,
+        );
+        grouped_err = grouped_err.max(max_abs_err(&g, &st.oracle));
+        let de = execute_plan_host(
+            &st.dense_plan,
+            &st.dense_problem,
+            &st.dense_tensors,
+            None,
+        );
+        dense_err = dense_err.max(max_abs_err(&de, &st.oracle));
+    }
+
+    let grouped_samples = sample_us(iters, 0.0, || {
+        for st in &steps {
+            std::hint::black_box(execute_plan_host(
+                &st.grouped_plan,
+                &st.grouped_problem,
+                &st.grouped_tensors,
+                None,
+            ));
+        }
+    });
+    let dense_samples = sample_us(iters, 0.0, || {
+        for st in &steps {
+            std::hint::black_box(execute_plan_host(
+                &st.dense_plan,
+                &st.dense_problem,
+                &st.dense_tensors,
+                None,
+            ));
+        }
+    });
+
+    Ok(GqaComparison {
+        case,
+        grouped_kv_bytes,
+        dense_kv_bytes,
+        grouped_us: Summary::of(&grouped_samples),
+        dense_us: Summary::of(&dense_samples),
+        grouped_err,
+        dense_err,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouped_stream_is_exact_and_shrinks_bytes_by_the_group_size() {
+        // 8 query heads at h_kv ∈ {1 (MQA), 2 (h/4), 8 (ungrouped)}.
+        for kv_heads in [1usize, 2, 8] {
+            let case = GqaCase {
+                batch: 2,
+                heads: 8,
+                kv_heads,
+                ctx: 96,
+                steps: 2,
+                head_dim: 16,
+                tile: 32,
+                slots: 24,
+            };
+            let c = compare_gqa(case, 1, 11).unwrap();
+            assert!(c.grouped_err < 1e-4, "kv {kv_heads}: grouped err {}", c.grouped_err);
+            assert!(c.dense_err < 1e-4, "kv {kv_heads}: dense err {}", c.dense_err);
+            let want = 8.0 / kv_heads as f64;
+            let got = c.bytes_ratio();
+            assert!(
+                (got - want).abs() <= 0.1 * want,
+                "kv {kv_heads}: bytes ratio {got}, want ~{want}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_dividing_kv_heads_are_rejected() {
+        let case = GqaCase { kv_heads: 3, ..GqaCase::default_case() };
+        assert!(compare_gqa(case, 1, 0).is_err());
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod cascade_exec;
 pub mod figures;
+pub mod gqa;
 pub mod obs;
 pub mod runner;
 pub mod sampling;
@@ -15,6 +16,7 @@ pub mod trace;
 pub mod workload;
 
 pub use cascade_exec::{compare_exec, ExecCase, ExecComparison};
+pub use gqa::{compare_gqa, GqaCase, GqaComparison};
 pub use obs::{run_obs, ObsCase, ObsReport};
 pub use runner::{bench, BenchResult};
 pub use sampling::{compare_sampling, SamplingCase, SamplingComparison};

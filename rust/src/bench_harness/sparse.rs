@@ -397,7 +397,7 @@ pub fn compare_sparse(
     let mut qrng = Rng::new(seed ^ 0xA5A5_5A5A);
     let q = qrng.normal_vec(g * dh);
     let (o_lean, _) = lean_sparse_host(
-        &q, &kf, &vf, &lens, h, ctx_cap, dh, pt, &sels, case.tile, 48, 64,
+        &q, &kf, &vf, &lens, h, h, ctx_cap, dh, pt, &sels, case.tile, 48, 64,
     )?;
     // Independent oracle: token-index compaction + exact attention.
     let mut o_ref = vec![0.0f32; g * dh];

@@ -212,9 +212,12 @@ impl Engine {
         let model = ModelRuntime::load(runtime, manifest, &config.model)
             .with_context(|| format!("load model {:?}", config.model))?;
         let art = &model.art;
+        // The cache stores K/V at kv-head granularity: under GQA this is
+        // where the h/h_kv byte shrink comes from (n_kv_heads == n_heads
+        // for ungrouped models).
         let cache = PagedKvCache::new(
             art.n_layers,
-            art.n_heads,
+            art.n_kv_heads,
             art.head_dim,
             config.page_tokens,
             config.cache_pages,
@@ -228,6 +231,9 @@ impl Engine {
         } else {
             Tracer::disabled()
         };
+        let mut metrics = Metrics::default();
+        metrics.gqa.kv_heads = art.n_kv_heads;
+        metrics.gqa.group_size = art.n_heads / art.n_kv_heads;
         Ok(Engine {
             config,
             model,
@@ -237,7 +243,7 @@ impl Engine {
             prefix_index,
             fork_tree: ForkTree::new(),
             drafter,
-            metrics: Metrics::default(),
+            metrics,
             tracer,
             timelines: TimelineRecorder::default(),
             arch: GpuArch::a100(),
@@ -258,6 +264,17 @@ impl Engine {
 
     pub fn ctx_bucket(&self) -> usize {
         self.model.art.ctx_bucket
+    }
+
+    /// Query heads per layer.
+    pub fn query_heads(&self) -> usize {
+        self.model.art.n_heads
+    }
+
+    /// KV heads per layer — the cache/gather granularity (== query heads
+    /// for ungrouped models).
+    pub fn kv_heads(&self) -> usize {
+        self.model.art.n_kv_heads
     }
 
     pub fn prefill_bucket(&self) -> usize {
@@ -725,9 +742,10 @@ impl Engine {
             Attrs { k: Some(admitted.len()), ..Default::default() },
         );
 
+        // K/V planes are kv-head granular (h_kv == n_heads when ungrouped).
         let (l, h, dh) = (
             self.model.art.n_layers,
-            self.model.art.n_heads,
+            self.model.art.n_kv_heads,
             self.model.art.head_dim,
         );
         let vocab = self.model.art.vocab;
@@ -1038,6 +1056,9 @@ impl Engine {
             self.metrics.gather_bytes_shared += sg.shared_bytes as u64;
             gather_bytes = sg.shared_bytes as u64;
         }
+        // The gather moved kv-head-granular planes; the dense baseline
+        // (one KV head per query head) is group_size times larger.
+        self.metrics.gqa.record_gather(gather_bytes);
         self.tracer.record_since(
             Phase::Gather,
             gather_start,
@@ -1056,9 +1077,10 @@ impl Engine {
         let slots: Vec<Option<RequestId>> = self.batcher.slots().to_vec();
         let b = self.model.art.batch;
         let c = self.model.art.ctx_bucket;
+        // K/V planes are kv-head granular (h_kv == n_heads when ungrouped).
         let (l, h, dh) = (
             self.model.art.n_layers,
-            self.model.art.n_heads,
+            self.model.art.n_kv_heads,
             self.model.art.head_dim,
         );
         let vocab = self.model.art.vocab;
@@ -1208,9 +1230,10 @@ impl Engine {
         let c = self.model.art.ctx_bucket;
         let s = self.model.art.spec_bucket;
         let k = self.config.spec_k.min(s - 1);
+        // K/V planes are kv-head granular (h_kv == n_heads when ungrouped).
         let (l, h, dh) = (
             self.model.art.n_layers,
-            self.model.art.n_heads,
+            self.model.art.n_kv_heads,
             self.model.art.head_dim,
         );
         let vocab = self.model.art.vocab;
@@ -1445,7 +1468,8 @@ impl Engine {
             self.model.art.n_heads,
             lens.to_vec(),
             self.model.art.head_dim,
-        );
+        )
+        .with_kv_heads(self.model.art.n_kv_heads);
         let la = simulate(&problem, Strategy::StreamK, &self.arch);
         let fd = simulate(
             &problem,
@@ -1470,6 +1494,7 @@ impl Engine {
         ) else {
             return;
         };
+        let cp = cp.with_kv_heads(self.model.art.n_kv_heads);
         // Below one LeanTile of shared context the cascade split saves
         // nothing; align to tile boundaries so savings are never negative.
         let cp = cp.tile_aligned();

@@ -2,9 +2,13 @@
 //! built as a substrate for the serving engine).
 //!
 //! Storage unit is a **page** of `page_tokens` tokens holding all layers
-//! and heads: `[layers, heads, page_tokens, head_dim]` f32, one buffer for
-//! K and one for V. Sequences own ordered page lists; the engine gathers
-//! a sequence's pages into the contiguous `[l, b, h, ctx_bucket, dh]`
+//! and **KV heads**: `[layers, h_kv, page_tokens, head_dim]` f32, one
+//! buffer for K and one for V. The cache is kv-head granular end to end:
+//! under GQA/MQA `heads` is the model's `n_kv_heads` (< query heads), so
+//! every page, gather and byte counter shrinks by the query-head group
+//! size; ungrouped models pass `n_kv_heads == n_heads` and nothing
+//! changes. Sequences own ordered page lists; the engine gathers a
+//! sequence's pages into the contiguous `[l, b, h_kv, ctx_bucket, dh]`
 //! views the decode artifact consumes (the CPU-PJRT analogue of the
 //! paper's constant-stride tensor requirement, §IV-C).
 //!
@@ -27,6 +31,8 @@ use super::request::RequestId;
 /// Paged K/V storage for many sequences.
 pub struct PagedKvCache {
     pub layers: usize,
+    /// KV heads per layer — the grouped (GQA/MQA) plane when the model
+    /// shares KV heads across query heads, the query-head count otherwise.
     pub heads: usize,
     pub head_dim: usize,
     pub page_tokens: usize,

@@ -129,6 +129,42 @@ impl SparseStats {
     }
 }
 
+/// Grouped-query attention (GQA/MQA) plane gauges: the engine's KV-head
+/// configuration plus the gather-byte shrink the grouped plane delivers.
+#[derive(Clone, Debug, Default)]
+pub struct GqaStats {
+    /// KV heads per layer — the granularity of the paged cache and of
+    /// every decode gather (0 until an engine configures it).
+    pub kv_heads: usize,
+    /// Query heads sharing each KV head (`h / h_kv`; 1 means ungrouped,
+    /// 0 until configured).
+    pub group_size: usize,
+    /// K+V bytes decode gathers actually moved at kv-head granularity.
+    pub gather_bytes_grouped: u64,
+    /// K+V bytes the same gathers would have moved with one KV head per
+    /// query head (grouped bytes × group size) — the dense baseline the
+    /// `h/h_kv` shrink is measured against.
+    pub gather_bytes_dense: u64,
+}
+
+impl GqaStats {
+    /// Fold one decode gather's byte count in; the dense-equivalent
+    /// baseline scales by the configured group size.
+    pub fn record_gather(&mut self, grouped_bytes: u64) {
+        self.gather_bytes_grouped += grouped_bytes;
+        self.gather_bytes_dense += grouped_bytes * self.group_size.max(1) as u64;
+    }
+
+    fn merge(&mut self, o: &GqaStats) {
+        // Shape gauges, not counters: replicas of one deployment share a
+        // model, so keep whichever side is configured.
+        self.kv_heads = self.kv_heads.max(o.kv_heads);
+        self.group_size = self.group_size.max(o.group_size);
+        self.gather_bytes_grouped += o.gather_bytes_grouped;
+        self.gather_bytes_dense += o.gather_bytes_dense;
+    }
+}
+
 /// Parallel-sampling (fork/prune) counters.
 #[derive(Clone, Debug, Default)]
 pub struct SamplingStats {
@@ -203,6 +239,10 @@ pub const DOCUMENTED_METRICS: &[&str] = &[
     "projected_occupancy",
     "projected_cascade_us_mean",
     "cascade_kv_bytes_saved_total",
+    "gqa_kv_heads",
+    "gqa_group_size",
+    "gqa_gather_bytes_grouped_total",
+    "gqa_gather_bytes_dense_total",
 ];
 
 /// Accumulated engine counters.
@@ -249,6 +289,9 @@ pub struct Metrics {
     pub spec: SpecStats,
     /// Sparse page-selection counters (long-context decode).
     pub sparse: SparseStats,
+    /// Grouped-query attention plane gauges (kv heads, group size,
+    /// grouped-vs-dense gather bytes).
+    pub gqa: GqaStats,
 }
 
 impl Metrics {
@@ -327,6 +370,7 @@ impl Metrics {
         self.sampling.merge(&o.sampling);
         self.spec.merge(&o.spec);
         self.sparse.merge(&o.sparse);
+        self.gqa.merge(&o.gqa);
     }
 
     /// Sample every documented metric into the one snapshot both
@@ -498,6 +542,26 @@ impl Metrics {
             self.cascade_kv_bytes_saved,
             "Modeled KV bytes the cascade plan avoided streaming.",
         );
+        s.gauge(
+            "gqa_kv_heads",
+            self.gqa.kv_heads as f64,
+            "KV heads per layer (the cache/gather granularity).",
+        );
+        s.gauge(
+            "gqa_group_size",
+            self.gqa.group_size as f64,
+            "Query heads sharing each KV head (h / h_kv).",
+        );
+        s.counter(
+            "gqa_gather_bytes_grouped_total",
+            self.gqa.gather_bytes_grouped as f64,
+            "KV bytes decode gathers moved at kv-head granularity.",
+        );
+        s.counter(
+            "gqa_gather_bytes_dense_total",
+            self.gqa.gather_bytes_dense as f64,
+            "KV bytes a per-query-head plane would have gathered.",
+        );
         s
     }
 
@@ -579,6 +643,18 @@ impl Metrics {
                 self.sparse.gather_bytes_sparse as f64 / 1024.0,
                 self.sparse.gather_bytes_dense as f64 / 1024.0,
                 self.sparse.mean_coverage(),
+            ));
+        }
+        if self.gqa.group_size > 1 && self.gqa.gather_bytes_grouped > 0 {
+            s.push_str(&format!(
+                "gqa plane: {} kv heads x{} group size, {:.1} KiB gathered \
+                 vs {:.1} KiB per-query-head dense ({:.1}x less KV traffic)\n",
+                self.gqa.kv_heads,
+                self.gqa.group_size,
+                self.gqa.gather_bytes_grouped as f64 / 1024.0,
+                self.gqa.gather_bytes_dense as f64 / 1024.0,
+                self.gqa.gather_bytes_dense as f64
+                    / self.gqa.gather_bytes_grouped as f64,
             ));
         }
         if let Some(sp) = self.projected_speedup() {
@@ -778,6 +854,27 @@ mod tests {
         assert!((a.projected_speedup().unwrap() - 1.5).abs() < 1e-12);
         assert!((a.projected_occupancy() - 0.7).abs() < 1e-12);
         assert_eq!(a.prefix.lookups, 4);
+    }
+
+    #[test]
+    fn gqa_stats_scale_the_dense_baseline_by_group_size() {
+        let mut m = Metrics::default();
+        m.gqa.kv_heads = 8;
+        m.gqa.group_size = 4;
+        m.gqa.record_gather(1024);
+        m.gqa.record_gather(1024);
+        assert_eq!(m.gqa.gather_bytes_grouped, 2048);
+        assert_eq!(m.gqa.gather_bytes_dense, 8192);
+        let rep = m.report();
+        assert!(rep.contains("gqa plane: 8 kv heads x4 group size"), "{rep}");
+        assert!(rep.contains("4.0x less KV traffic"), "{rep}");
+        // Ungrouped engines stay silent.
+        let mut dense = Metrics::default();
+        dense.gqa.kv_heads = 8;
+        dense.gqa.group_size = 1;
+        dense.gqa.record_gather(1024);
+        assert_eq!(dense.gqa.gather_bytes_dense, 1024);
+        assert!(!dense.report().contains("gqa plane"));
     }
 
     #[test]

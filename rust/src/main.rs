@@ -145,7 +145,14 @@ commands:
            [--trace-capacity N] [--trace-out PATH]   enable the structured
                                     tracer (N-event ring) and write its
                                     Chrome trace-event export
+           [--kv-heads N]           pin the expected GQA plane: fail unless
+                                    the artifact set has N KV heads
   simulate --batch B --heads H --ctx N [--head-dim 64] [--arch a100]
+           [--kv-heads N]           GQA/MQA: H query heads share N KV heads
+                                    (KV streams and bytes shrink by H/N)
+           [--model-preset NAME]    head geometry from a named preset
+                                    (phi3-medium|llama2-7b|mistral-7b|
+                                    opt-30b|llama70b-gqa|mqa)
            [--shared-prefix N]      add the cascade row: batch shares an
                                     N-token prefix, streamed once per group
            [--fork-n N] [--fork-new M]   model a fork family: N siblings
@@ -178,6 +185,12 @@ commands:
                                     speculative serving loop, per-phase
                                     p50/p95/p99 timings, SLO report, and
                                     the disabled-tracer overhead bound
+  bench    --gqa [--heads 8] [--kv-heads N] [--batch 2] [--context 512]
+           [--steps 4] [--tile 64] [--smoke]
+                                    grouped (GQA/MQA) vs dense-per-head
+                                    decode over identical draws: KV bytes
+                                    shrink by h/h_kv, both streams exact
+                                    vs the repeated-KV dense oracle
            (every bench takes [--seed N] for run-to-run reproducibility)
   plan     --batch B --heads H --ctx N [--slots 216]
   figures  [table1|fig01|fig02|fig03|fig07|fig08|fig09|fig10|fig11|fig12|fig13|all]
@@ -200,8 +213,8 @@ fn info() -> Result<()> {
     println!("models:");
     for (name, m) in &manifest.models {
         println!(
-            "  {name}: {} layers, {} heads x d{}, vocab {}, ctx bucket {}, {} params",
-            m.n_layers, m.n_heads, m.head_dim, m.vocab, m.ctx_bucket, m.param_count
+            "  {name}: {} layers, {} heads ({} kv) x d{}, vocab {}, ctx bucket {}, {} params",
+            m.n_layers, m.n_heads, m.n_kv_heads, m.head_dim, m.vocab, m.ctx_bucket, m.param_count
         );
     }
     Ok(())
@@ -278,6 +291,28 @@ fn serve(args: &Args) -> Result<()> {
         engine.ctx_bucket(),
         engine.prefill_bucket()
     );
+    // The KV plane comes from the artifact set; `--kv-heads` pins the
+    // expected GQA grouping so a mismatched artifact fails loudly instead
+    // of silently serving a different KV budget.
+    let kv_heads = args.usize("kv-heads", 0);
+    if kv_heads > 0 {
+        anyhow::ensure!(
+            engine.kv_heads() == kv_heads,
+            "--kv-heads {kv_heads} does not match model {model:?}: artifact \
+             has {} kv heads ({} query heads)",
+            engine.kv_heads(),
+            engine.query_heads()
+        );
+    }
+    if kv_heads > 0 || engine.kv_heads() != engine.query_heads() {
+        println!(
+            "gqa plane: {} query heads over {} kv heads (group {}, KV bytes 1/{} of dense)",
+            engine.query_heads(),
+            engine.kv_heads(),
+            engine.query_heads() / engine.kv_heads(),
+            engine.query_heads() / engine.kv_heads(),
+        );
+    }
     if let Some(p) = &sparse {
         println!(
             "sparse decode on: {} of each context's pages per step \
@@ -426,15 +461,41 @@ fn serve_obs_out(engine: &Engine, args: &Args, wall_s: f64) -> Result<()> {
 }
 
 fn simulate_cmd(args: &Args) -> Result<()> {
+    use lean_attention::model::ModelConfig;
+
+    // A named preset supplies the head geometry (query heads, KV heads,
+    // head_dim); explicit flags still override any of them.
+    let preset_name = args.str("model-preset", "");
+    let preset = if preset_name.is_empty() {
+        None
+    } else {
+        Some(ModelConfig::by_name(&preset_name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown --model-preset {preset_name:?} (one of {})",
+                ModelConfig::PRESET_NAMES.join("|")
+            )
+        })?)
+    };
     let batch = args.usize("batch", 4);
-    let heads = args.usize("heads", 32);
+    let heads = args.usize("heads", preset.as_ref().map_or(32, |c| c.n_heads));
     let ctx = args.usize("ctx", 65536);
-    let head_dim = args.usize("head-dim", 64);
+    let head_dim =
+        args.usize("head-dim", preset.as_ref().map_or(64, |c| c.head_dim));
+    let kv_heads =
+        args.usize("kv-heads", preset.as_ref().map_or(heads, |c| c.n_kv_heads));
+    anyhow::ensure!(
+        kv_heads >= 1 && heads % kv_heads == 0,
+        "--kv-heads {kv_heads} must divide --heads {heads}"
+    );
     let arch = arch_by_name(&args.str("arch", "a100"))?;
 
-    let p = DecodeProblem::uniform(batch, heads, ctx, head_dim);
+    let p = DecodeProblem::uniform(batch, heads, ctx, head_dim).with_kv_heads(kv_heads);
+    if let Some(c) = &preset {
+        println!("preset: {} ({} q heads / {} kv heads, d{})", c.name, c.n_heads, c.n_kv_heads, c.head_dim);
+    }
     println!(
-        "problem: batch={batch} heads={heads} ctx={ctx} d={head_dim} tile={} -> {} output tiles, {} LeanTiles",
+        "problem: batch={batch} heads={heads} kv_heads={kv_heads} (group {}) ctx={ctx} d={head_dim} tile={} -> {} KV streams, {} LeanTiles",
+        p.group_size(),
         p.tile,
         p.groups(),
         p.total_tiles()
@@ -478,6 +539,7 @@ fn simulate_cmd(args: &Args) -> Result<()> {
                 members: (0..batch as u32).collect(),
             }],
         )?
+        .with_kv_heads(kv_heads)
         .tile_aligned();
         if cp.prefix_groups.is_empty() {
             println!(
@@ -606,13 +668,17 @@ fn bench_cmd(args: &Args) -> Result<()> {
     if args.has("obs") {
         return bench_obs(args, seed);
     }
+    if args.has("gqa") {
+        return bench_gqa(args, seed);
+    }
     anyhow::ensure!(
         args.has("cascade-exec"),
         "usage: leanattn bench --cascade-exec [--batch 4] [--prefix 256] ...\n       \
          leanattn bench --sampling [--n 4] [--history 256] [--suffix 64] [--smoke]\n       \
          leanattn bench --spec [--k 4] [--draft ngram|model] [--smoke]\n       \
          leanattn bench --sparse [--kv-budget 6] [--context 256] [--smoke]\n       \
-         leanattn bench --obs [--requests 24] [--trace-out PATH] [--smoke]"
+         leanattn bench --obs [--requests 24] [--trace-out PATH] [--smoke]\n       \
+         leanattn bench --gqa [--heads 8] [--kv-heads 2] [--smoke]"
     );
     let case = ExecCase {
         batch: args.usize("batch", 4),
@@ -940,6 +1006,77 @@ fn bench_sparse(args: &Args, seed: u64) -> Result<()> {
     Ok(())
 }
 
+/// `leanattn bench --gqa`: grouped (GQA/MQA) vs dense-per-head decode
+/// over identical random draws (no artifacts needed — both paths run the
+/// stream-K planner + host executor). Asserts, on every run, that the
+/// gathered-KV bytes per step shrink by ~`h/h_kv` at each swept grouping
+/// and that both streams match the repeated-KV dense oracle.
+fn bench_gqa(args: &Args, seed: u64) -> Result<()> {
+    use lean_attention::bench_harness::{compare_gqa, GqaCase};
+
+    let smoke = args.has("smoke");
+    let base = if smoke { GqaCase::smoke() } else { GqaCase::default_case() };
+    let heads = args.usize("heads", base.heads);
+    let template = GqaCase {
+        batch: args.usize("batch", base.batch),
+        heads,
+        kv_heads: base.kv_heads,
+        ctx: args.usize("context", base.ctx),
+        steps: args.usize("steps", base.steps),
+        head_dim: args.usize("head-dim", base.head_dim),
+        tile: args.usize("tile", base.tile),
+        slots: args.usize("slots", base.slots),
+    };
+    let iters = args.usize("iters", if smoke { 2 } else { 10 });
+    println!(
+        "gqa: {} lanes x {} query heads, ctx {}+{} steps x tile {}, d{}",
+        template.batch, heads, template.ctx, template.steps, template.tile, template.head_dim
+    );
+
+    // Sweep MQA (h_kv = 1), the h/4 grouping, and the ungrouped identity;
+    // `--kv-heads N` pins a single grouping instead.
+    let pinned = args.usize("kv-heads", 0);
+    let sweep: Vec<usize> = if pinned > 0 {
+        vec![pinned]
+    } else {
+        let mut s = vec![1, (heads / 4).max(1), heads];
+        s.dedup();
+        s.retain(|&kv| heads % kv == 0);
+        s
+    };
+    for kv in sweep {
+        let case = GqaCase { kv_heads: kv, ..template };
+        let c = compare_gqa(case, iters, seed)?;
+        let want = heads as f64 / kv as f64;
+        println!(
+            "kv_heads={kv:<3} group={:<3} grouped {:>9.1} KiB p50 {:>8.1}us  \
+             vs dense {:>9.1} KiB p50 {:>8.1}us  bytes x{:.2} (expect {want:.2}), \
+             max err {:.2e}",
+            heads / kv,
+            c.grouped_kv_bytes as f64 / 1024.0,
+            c.grouped_us.p50,
+            c.dense_kv_bytes as f64 / 1024.0,
+            c.dense_us.p50,
+            c.bytes_ratio(),
+            c.grouped_err.max(c.dense_err),
+        );
+        anyhow::ensure!(
+            (c.bytes_ratio() - want).abs() <= 0.1 * want,
+            "gathered-KV byte ratio {:.3} not within 10% of h/h_kv = {want}",
+            c.bytes_ratio()
+        );
+        anyhow::ensure!(
+            c.grouped_err < 1e-3 && c.dense_err < 1e-3,
+            "stream diverged from the repeated-KV dense oracle \
+             (grouped {:.2e}, dense {:.2e})",
+            c.grouped_err,
+            c.dense_err
+        );
+    }
+    println!("all groupings exact vs the repeated-KV oracle; byte shrink ~= h/h_kv");
+    Ok(())
+}
+
 /// `leanattn bench --spec`: speculative draft-and-verify on the host
 /// pipeline (no artifacts needed). Asserts, on every run, that the
 /// committed stream is bit-identical to the sequential sampler's and
@@ -1087,7 +1224,7 @@ fn figures_cmd(args: &Args) -> Result<()> {
     }
     if all || which == "fig09" {
         for (i, t) in figures::fig09_multigpu().iter().enumerate() {
-            t.emit(&format!("fig09{}", ['a', 'b', 'c'][i]));
+            t.emit(&format!("fig09{}", ['a', 'b', 'c', 'd'][i]));
         }
     }
     if all || which == "fig10" {

@@ -82,6 +82,61 @@ impl ModelConfig {
         }
     }
 
+    /// LLaMA-2-70B-style GQA config: 64 query heads over 8 KV heads
+    /// (group size 8) — the canonical served GQA shape.
+    pub fn llama70b_gqa() -> Self {
+        ModelConfig {
+            name: "llama70b-gqa",
+            vocab: 32_000,
+            d_model: 8192,
+            n_layers: 80,
+            n_heads: 64,
+            n_kv_heads: 8,
+            head_dim: 128,
+            d_ff: 28_672,
+            mlp_mults: 3,
+        }
+    }
+
+    /// Multi-query attention (Shazeer 2019): all query heads share a
+    /// single KV head — the h/h_kv extreme of the GQA spectrum.
+    pub fn mqa() -> Self {
+        ModelConfig {
+            name: "mqa",
+            vocab: 32_000,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 1,
+            head_dim: 128,
+            d_ff: 11_008,
+            mlp_mults: 3,
+        }
+    }
+
+    /// Look a named preset up (CLI `--model-preset`).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "phi3-medium" => Some(Self::phi3_medium()),
+            "llama2-7b" => Some(Self::llama2_7b()),
+            "mistral-7b" => Some(Self::mistral_7b()),
+            "opt-30b" => Some(Self::opt_30b()),
+            "llama70b-gqa" => Some(Self::llama70b_gqa()),
+            "mqa" => Some(Self::mqa()),
+            _ => None,
+        }
+    }
+
+    /// Names accepted by [`ModelConfig::by_name`].
+    pub const PRESET_NAMES: &'static [&'static str] = &[
+        "phi3-medium",
+        "llama2-7b",
+        "mistral-7b",
+        "opt-30b",
+        "llama70b-gqa",
+        "mqa",
+    ];
+
     /// A d=64 model with many heads (the operation-level benchmark shape:
     /// 56 heads × d 64 — Figs 3, 13).
     pub fn bench_d64(heads: usize) -> Self {
@@ -96,6 +151,24 @@ impl ModelConfig {
             d_ff: heads * 64 * 4,
             mlp_mults: 2,
         }
+    }
+
+    /// Query heads per KV head (1 when ungrouped, `n_heads` for MQA).
+    pub fn group_size(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    /// Check the GQA shape invariant: `n_kv_heads` divides `n_heads`.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_kv_heads >= 1, "{}: n_kv_heads must be >= 1", self.name);
+        anyhow::ensure!(
+            self.n_heads % self.n_kv_heads == 0,
+            "{}: n_heads {} not divisible by n_kv_heads {}",
+            self.name,
+            self.n_heads,
+            self.n_kv_heads
+        );
+        Ok(())
     }
 
     /// Total parameter count (tied LM head).
@@ -158,5 +231,34 @@ mod tests {
         let c = ModelConfig::llama2_7b();
         // 32 layers * 32 heads * 128 dim * 2 (K+V) * 2 bytes = 524288
         assert_eq!(c.kv_bytes_per_token(), 524_288);
+    }
+
+    #[test]
+    fn every_preset_validates_and_resolves_by_name() {
+        for name in ModelConfig::PRESET_NAMES {
+            let c = ModelConfig::by_name(name).expect("preset resolves");
+            assert_eq!(&c.name, name);
+            c.validate().unwrap();
+        }
+        assert!(ModelConfig::by_name("no-such-model").is_none());
+    }
+
+    #[test]
+    fn gqa_presets_shrink_kv_by_the_group_size() {
+        let g = ModelConfig::llama70b_gqa();
+        assert_eq!((g.n_heads, g.n_kv_heads, g.group_size()), (64, 8, 8));
+        let m = ModelConfig::mqa();
+        assert_eq!(m.group_size(), m.n_heads);
+        // KV bytes scale with n_kv_heads, not n_heads.
+        let dense = ModelConfig { n_kv_heads: m.n_heads, ..m.clone() };
+        assert_eq!(dense.kv_bytes_per_token(), m.kv_bytes_per_token() * m.n_heads as u64);
+    }
+
+    #[test]
+    fn validate_rejects_non_dividing_kv_heads() {
+        let bad = ModelConfig { n_kv_heads: 3, ..ModelConfig::llama2_7b() };
+        assert!(bad.validate().is_err());
+        let zero = ModelConfig { n_kv_heads: 0, ..ModelConfig::llama2_7b() };
+        assert!(zero.validate().is_err());
     }
 }

@@ -39,7 +39,10 @@ pub struct PrefixGroup {
 /// A decode batch annotated with shared-prefix structure.
 #[derive(Clone, Debug)]
 pub struct CascadeProblem {
+    /// Query heads.
     pub heads: usize,
+    /// KV heads (GQA); divides `heads`, == `heads` when ungrouped.
+    pub kv_heads: usize,
     pub head_dim: usize,
     /// Total context per sequence (prefix + suffix for group members).
     pub ctx_lens: Vec<u32>,
@@ -49,13 +52,15 @@ pub struct CascadeProblem {
     pub prefix_groups: Vec<PrefixGroup>,
 }
 
-/// What a segment-problem group stands for.
+/// What a segment-problem group stands for. `head` is a **kv-head**
+/// index: under GQA one segment serves the `heads / kv_heads` query
+/// heads of that kv head from a single KV walk.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SegKind {
-    /// The shared prefix stream of `prefix_groups[pg]` for one head:
+    /// The shared prefix stream of `prefix_groups[pg]` for one kv head:
     /// every LeanTile serves all member queries at once.
     Shared { pg: usize, head: usize },
-    /// One sequence's private suffix for one head.
+    /// One sequence's private suffix for one kv head.
     Suffix { seq: usize, head: usize },
 }
 
@@ -102,6 +107,7 @@ impl CascadeProblem {
             .collect();
         Ok(CascadeProblem {
             heads,
+            kv_heads: heads,
             head_dim,
             ctx_lens,
             tile: lean_tile_for(head_dim),
@@ -113,6 +119,23 @@ impl CascadeProblem {
         assert!(tile > 0);
         self.tile = tile;
         self
+    }
+
+    /// Switch to a grouped-query layout with `kv_heads` KV heads.
+    pub fn with_kv_heads(mut self, kv_heads: usize) -> Self {
+        assert!(kv_heads >= 1, "kv_heads must be >= 1");
+        assert!(
+            self.heads % kv_heads == 0,
+            "heads {} not divisible by kv_heads {kv_heads}",
+            self.heads
+        );
+        self.kv_heads = kv_heads;
+        self
+    }
+
+    /// Query heads per KV head.
+    pub fn group_size(&self) -> usize {
+        self.heads / self.kv_heads
     }
 
     pub fn batch(&self) -> usize {
@@ -158,29 +181,33 @@ impl CascadeProblem {
     pub fn baseline_problem(&self) -> DecodeProblem {
         DecodeProblem::ragged(self.heads, self.ctx_lens.clone(), self.head_dim)
             .with_tile(self.tile)
+            .with_kv_heads(self.kv_heads)
     }
 
     /// The segment problem the planner partitions: synthetic batch lanes
     /// `[0, n_groups)` carry the shared prefix streams (context =
     /// `prefix_len`, counted **once** per group), lanes `[n_groups,
     /// n_groups + batch)` carry the per-sequence suffixes (context =
-    /// `ctx - prefix`, possibly 0). Group `g = lane * heads + head`
-    /// follows the usual batch-major linearization, so
+    /// `ctx - prefix`, possibly 0). Group `g = lane * kv_heads + head`
+    /// follows the usual batch-major linearization over **kv heads**, so
     /// [`stream_k_plan`] equalizes LeanTiles across shared and suffix
-    /// segments alike.
+    /// segments alike; under GQA each segment's walk serves all
+    /// `heads / kv_heads` query heads of its group.
     pub fn segment_problem(&self) -> DecodeProblem {
         let mut lens: Vec<u32> =
             self.prefix_groups.iter().map(|g| g.prefix_len).collect();
         for (seq, &ctx) in self.ctx_lens.iter().enumerate() {
             lens.push(ctx - self.prefix_of(seq));
         }
-        DecodeProblem::ragged(self.heads, lens, self.head_dim).with_tile(self.tile)
+        DecodeProblem::ragged(self.heads, lens, self.head_dim)
+            .with_tile(self.tile)
+            .with_kv_heads(self.kv_heads)
     }
 
-    /// Meaning of segment-problem group `g`.
+    /// Meaning of segment-problem group `g` (`head` is a kv head).
     pub fn seg_kind(&self, g: usize) -> SegKind {
-        let lane = g / self.heads;
-        let head = g % self.heads;
+        let lane = g / self.kv_heads;
+        let head = g % self.kv_heads;
         let n_pg = self.prefix_groups.len();
         if lane < n_pg {
             SegKind::Shared { pg: lane, head }
@@ -190,12 +217,14 @@ impl CascadeProblem {
     }
 
     /// Query rows served by one LeanTile of segment-problem group `g`
-    /// (members of the prefix group for shared streams, 1 otherwise).
+    /// (prefix-group members for shared streams, 1 otherwise — each
+    /// scaled by the query-head group size under GQA).
     pub fn queries_of(&self, g: usize) -> usize {
-        match self.seg_kind(g) {
+        let rows = match self.seg_kind(g) {
             SegKind::Shared { pg, .. } => self.prefix_groups[pg].members.len(),
             SegKind::Suffix { .. } => 1,
-        }
+        };
+        rows * self.group_size()
     }
 }
 
@@ -219,29 +248,30 @@ pub fn build_cascade_plan(problem: &CascadeProblem, sm_slots: usize) -> CascadeP
 }
 
 /// Host tensors for a cascade problem: per-group shared prefix K/V plus
-/// per-sequence suffix K/V (each `[heads, len, d]` row-major), and one
-/// query row per output.
+/// per-sequence suffix K/V (each `[kv_heads, len, d]` row-major), and
+/// one query row per output (query heads).
 pub struct CascadeTensors {
     /// `[batch * heads, d]` query rows.
     pub q: Vec<f32>,
-    /// Per prefix group: `[heads, prefix_len, d]`.
+    /// Per prefix group: `[kv_heads, prefix_len, d]`.
     pub k_shared: Vec<Vec<f32>>,
     pub v_shared: Vec<Vec<f32>>,
-    /// Per sequence: `[heads, suffix_len, d]` with `suffix_len = ctx - prefix`.
+    /// Per sequence: `[kv_heads, suffix_len, d]` with `suffix_len = ctx - prefix`.
     pub k_suffix: Vec<Vec<f32>>,
     pub v_suffix: Vec<Vec<f32>>,
 }
 
 impl CascadeTensors {
-    /// Random tensors for `problem` (deterministic in `seed`).
+    /// Random tensors for `problem` (deterministic in `seed`; with
+    /// `kv_heads == heads` the draw sequence matches the ungrouped one).
     pub fn random(problem: &CascadeProblem, seed: u64) -> CascadeTensors {
         let mut rng = Rng::new(seed);
-        let (h, d) = (problem.heads, problem.head_dim);
+        let (h, hk, d) = (problem.heads, problem.kv_heads, problem.head_dim);
         let q = rng.normal_vec(problem.batch() * h * d);
         let mut k_shared = Vec::new();
         let mut v_shared = Vec::new();
         for g in &problem.prefix_groups {
-            let n = h * g.prefix_len as usize * d;
+            let n = hk * g.prefix_len as usize * d;
             k_shared.push(rng.normal_vec(n));
             v_shared.push(rng.normal_vec(n));
         }
@@ -249,18 +279,21 @@ impl CascadeTensors {
         let mut v_suffix = Vec::new();
         for (seq, &ctx) in problem.ctx_lens.iter().enumerate() {
             let sl = (ctx - problem.prefix_of(seq)) as usize;
-            k_suffix.push(rng.normal_vec(h * sl * d));
-            v_suffix.push(rng.normal_vec(h * sl * d));
+            k_suffix.push(rng.normal_vec(hk * sl * d));
+            v_suffix.push(rng.normal_vec(hk * sl * d));
         }
         CascadeTensors { q, k_shared, v_shared, k_suffix, v_suffix }
     }
 
-    /// Materialize each sequence's full per-head K/V — prefix rows taken
-    /// from the group's shared tensors — padded to `[batch*heads, n_max, d]`.
-    /// This is what a sharing-oblivious engine would store per sequence;
-    /// the cascade path must match exact attention over it.
+    /// Materialize each sequence's full per-**query-head** K/V — prefix
+    /// rows taken from the group's shared tensors, each kv head repeated
+    /// `heads / kv_heads` times — padded to `[batch*heads, n_max, d]`.
+    /// This is what a sharing- and grouping-oblivious engine would store
+    /// per sequence; grouped paths must match exact attention over it
+    /// (the repeated-KV dense oracle for GQA).
     pub fn full_kv(&self, problem: &CascadeProblem) -> (Vec<f32>, Vec<f32>, usize) {
         let (h, d) = (problem.heads, problem.head_dim);
+        let gs = problem.group_size();
         let n_max = problem.ctx_lens.iter().copied().max().unwrap_or(0) as usize;
         let g_out = problem.outputs();
         let mut k = vec![0.0f32; g_out * n_max * d];
@@ -275,16 +308,17 @@ impl CascadeTensors {
                 problem.prefix_groups[p].prefix_len as usize
             });
             for hi in 0..h {
+                let kvh = hi / gs; // kv head serving query head `hi`
                 let out_base = (seq * h + hi) * n_max * d;
                 if let Some(p) = pg {
-                    let src = hi * prefix * d;
+                    let src = kvh * prefix * d;
                     k[out_base..out_base + prefix * d]
                         .copy_from_slice(&self.k_shared[p][src..src + prefix * d]);
                     v[out_base..out_base + prefix * d]
                         .copy_from_slice(&self.v_shared[p][src..src + prefix * d]);
                 }
                 let sl = ctx - prefix;
-                let src = hi * sl * d;
+                let src = kvh * sl * d;
                 let dst = out_base + prefix * d;
                 k[dst..dst + sl * d]
                     .copy_from_slice(&self.k_suffix[seq][src..src + sl * d]);
@@ -298,18 +332,21 @@ impl CascadeTensors {
 
 /// Execute a cascade plan on host numbers: every CTA computes its
 /// segments' partials (a shared segment computes one partial **per member
-/// query** from a single walk of the shared KV slice), then each output
-/// row folds its shared + suffix partials with the rescale operator in an
-/// arbitrary (optionally shuffled) order and normalizes. Must equal plain
-/// exact attention over the composed per-sequence K/V for every legal
-/// plan — the cascade extension of the associativity witness.
+/// query** from a single walk of the shared KV slice; under GQA every
+/// query head of the segment's kv-head group rides that same walk), then
+/// each output row folds its shared + suffix partials with the rescale
+/// operator in an arbitrary (optionally shuffled) order and normalizes.
+/// Must equal plain exact attention over the composed (and, for GQA,
+/// repeated) per-query-head K/V for every legal plan — the cascade
+/// extension of the associativity witness.
 pub fn execute_cascade_host(
     cplan: &CascadePlan,
     problem: &CascadeProblem,
     t: &CascadeTensors,
     shuffle_seed: Option<u64>,
 ) -> Vec<f32> {
-    let (h, d) = (problem.heads, problem.head_dim);
+    let (h, hk, d) = (problem.heads, problem.kv_heads, problem.head_dim);
+    let gs = problem.group_size();
     let tile = cplan.plan.tile;
     let n_pg = problem.prefix_groups.len();
 
@@ -318,8 +355,8 @@ pub fn execute_cascade_host(
     for cta in &cplan.plan.ctas {
         for seg in &cta.segments {
             let g = seg.group as usize;
-            let lane = g / h;
-            let head = g % h;
+            let lane = g / hk;
+            let kvh = g % hk;
             let ctx = cplan.segment_problem.ctx_for_group(g);
             let start = seg.tile_begin as usize * tile;
             let end = ((seg.tile_begin + seg.tile_count) as usize * tile).min(ctx);
@@ -328,14 +365,38 @@ pub fn execute_cascade_host(
                 continue;
             }
             if lane < n_pg {
-                // Shared prefix stream: one KV slice, all member queries.
+                // Shared prefix stream: one KV slice, all member queries
+                // of every query head in the kv-head group.
                 let group = &problem.prefix_groups[lane];
                 let prefix = group.prefix_len as usize;
-                let base = (head * prefix + start) * d;
+                let base = (kvh * prefix + start) * d;
                 let k_slice = &t.k_shared[lane][base..base + width * d];
                 let v_slice = &t.v_shared[lane][base..base + width * d];
                 for &m in &group.members {
-                    let out = m as usize * h + head;
+                    for j in 0..gs {
+                        let out = m as usize * h + kvh * gs + j;
+                        let q_row = &t.q[out * d..(out + 1) * d];
+                        per_output[out].push(partial_attention_host(
+                            q_row,
+                            k_slice,
+                            v_slice,
+                            1,
+                            width,
+                            d,
+                            &[group.prefix_len],
+                            start,
+                        ));
+                    }
+                }
+            } else {
+                // Private suffix segment.
+                let seq = lane - n_pg;
+                let sl = ctx; // suffix length for this lane
+                let base = (kvh * sl + start) * d;
+                let k_slice = &t.k_suffix[seq][base..base + width * d];
+                let v_slice = &t.v_suffix[seq][base..base + width * d];
+                for j in 0..gs {
+                    let out = seq * h + kvh * gs + j;
                     let q_row = &t.q[out * d..(out + 1) * d];
                     per_output[out].push(partial_attention_host(
                         q_row,
@@ -344,29 +405,10 @@ pub fn execute_cascade_host(
                         1,
                         width,
                         d,
-                        &[group.prefix_len],
+                        &[sl as u32],
                         start,
                     ));
                 }
-            } else {
-                // Private suffix segment.
-                let seq = lane - n_pg;
-                let sl = ctx; // suffix length for this lane
-                let base = (head * sl + start) * d;
-                let k_slice = &t.k_suffix[seq][base..base + width * d];
-                let v_slice = &t.v_suffix[seq][base..base + width * d];
-                let out = seq * h + head;
-                let q_row = &t.q[out * d..(out + 1) * d];
-                per_output[out].push(partial_attention_host(
-                    q_row,
-                    k_slice,
-                    v_slice,
-                    1,
-                    width,
-                    d,
-                    &[sl as u32],
-                    start,
-                ));
             }
         }
     }
@@ -549,6 +591,56 @@ mod tests {
             let err = max_abs_err(&got, &want);
             assert!(err < 1e-4, "slots {slots}: err {err}");
         }
+    }
+
+    #[test]
+    fn gqa_cascade_matches_the_repeated_kv_oracle() {
+        // Grouped execution (4 query heads over 1 or 2 kv heads) must
+        // equal dense attention over KV repeated to query-head count.
+        for kv_heads in [1usize, 2, 4] {
+            let p = CascadeProblem::new(
+                4,
+                vec![160, 130, 70, 96],
+                8,
+                vec![PrefixGroup { prefix_len: 96, members: vec![0, 1] }],
+            )
+            .unwrap()
+            .with_tile(32)
+            .with_kv_heads(kv_heads);
+            let t = CascadeTensors::random(&p, 17);
+            let (k, v, n_max) = t.full_kv(&p);
+            let want = attention_host(
+                &t.q,
+                &k,
+                &v,
+                p.outputs(),
+                n_max,
+                p.head_dim,
+                &(0..p.outputs())
+                    .map(|g| p.ctx_lens[g / p.heads])
+                    .collect::<Vec<_>>(),
+            );
+            for slots in [1usize, 5, 64] {
+                let cp = build_cascade_plan(&p, slots);
+                cp.plan.validate(&cp.segment_problem).unwrap();
+                let got = execute_cascade_host(&cp, &p, &t, None);
+                let err = max_abs_err(&got, &want);
+                assert!(err < 1e-4, "kv_heads {kv_heads} slots {slots}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn gqa_segment_problem_shrinks_with_kv_heads() {
+        let p = two_group_problem(); // 2 heads
+        let g = CascadeProblem { kv_heads: 1, ..p.clone() };
+        let seg = g.segment_problem();
+        assert_eq!(seg.groups(), p.segment_problem().groups() / 2);
+        assert_eq!(seg.total_tiles(), p.segment_problem().total_tiles() / 2);
+        // queries_of scales by group size: shared lane serves 2 members
+        // x 2 query heads per kv head.
+        assert_eq!(g.queries_of(0), 4);
+        assert_eq!(g.queries_of(1), 2); // suffix lane, group size 2
     }
 
     #[test]

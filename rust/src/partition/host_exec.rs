@@ -12,8 +12,10 @@ use crate::util::rng::Rng;
 
 use super::plan::{DecodeProblem, Plan};
 
-/// Padded host tensors for a decode problem: `q [g, d]`,
-/// `k/v [g, n_max, d]` with per-group valid lengths from the problem.
+/// Padded host tensors for a decode problem: `q [outputs, d]` (one row
+/// per query head), `k/v [groups, n_max, d]` (one KV stream per
+/// **kv head**) with per-group valid lengths from the problem. With
+/// `kv_heads == heads` outputs == groups and this is the classic layout.
 pub struct HostTensors {
     pub q: Vec<f32>,
     pub k: Vec<f32>,
@@ -22,7 +24,8 @@ pub struct HostTensors {
 }
 
 impl HostTensors {
-    /// Random tensors for `problem` (deterministic in `seed`).
+    /// Random tensors for `problem` (deterministic in `seed`; with
+    /// `kv_heads == heads` the draw sequence matches the ungrouped one).
     pub fn random(problem: &DecodeProblem, seed: u64) -> HostTensors {
         let mut rng = Rng::new(seed);
         let g = problem.groups();
@@ -34,7 +37,7 @@ impl HostTensors {
             .max()
             .unwrap_or(0) as usize;
         HostTensors {
-            q: rng.normal_vec(g * d),
+            q: rng.normal_vec(problem.outputs() * d),
             k: rng.normal_vec(g * n_max * d),
             v: rng.normal_vec(g * n_max * d),
             n_max,
@@ -45,6 +48,34 @@ impl HostTensors {
         (0..problem.groups())
             .map(|gi| problem.ctx_for_group(gi) as u32)
             .collect()
+    }
+
+    /// Per-output valid lengths (each group's length once per query head).
+    pub fn output_lens(&self, problem: &DecodeProblem) -> Vec<u32> {
+        (0..problem.outputs())
+            .map(|o| problem.ctx_lens[o / problem.heads])
+            .collect()
+    }
+
+    /// The repeated-KV dense oracle view: K/V materialized per **query
+    /// head** (`[outputs, n_max, d]`) by repeating each kv-head stream
+    /// `group_size` times. With `kv_heads == heads` this is a plain copy.
+    pub fn repeated_kv(&self, problem: &DecodeProblem) -> (Vec<f32>, Vec<f32>) {
+        let d = problem.head_dim;
+        let (h, hk) = (problem.heads, problem.kv_heads);
+        let gs = problem.group_size();
+        let stride = self.n_max * d;
+        let mut k = vec![0.0f32; problem.outputs() * stride];
+        let mut v = vec![0.0f32; k.len()];
+        for o in 0..problem.outputs() {
+            let (b, hi) = (o / h, o % h);
+            let gi = b * hk + hi / gs;
+            k[o * stride..(o + 1) * stride]
+                .copy_from_slice(&self.k[gi * stride..(gi + 1) * stride]);
+            v[o * stride..(o + 1) * stride]
+                .copy_from_slice(&self.v[gi * stride..(gi + 1) * stride]);
+        }
+        (k, v)
     }
 }
 
@@ -57,13 +88,16 @@ pub fn execute_plan_host(
     t: &HostTensors,
     shuffle_seed: Option<u64>,
 ) -> Vec<f32> {
-    let g = problem.groups();
     let d = problem.head_dim;
+    let (heads, kv_heads) = (problem.heads, problem.kv_heads);
+    let gs = problem.group_size();
     let tile = plan.tile;
     let lens = t.group_lens(problem);
 
-    // Phase 1: every CTA computes one partial per segment (Alg 1).
-    let mut per_group: Vec<Vec<Partials>> = vec![Vec::new(); g];
+    // Phase 1: every CTA computes one partial per segment (Alg 1). A
+    // segment's group is a (batch, kv head) pair: under GQA its KV slice
+    // serves all `gs` query heads of that group.
+    let mut per_output: Vec<Vec<Partials>> = vec![Vec::new(); problem.outputs()];
     for cta in &plan.ctas {
         for seg in &cta.segments {
             let gi = seg.group as usize;
@@ -76,25 +110,28 @@ pub fn execute_plan_host(
                 &t.k[gi * t.n_max * d + start * d..gi * t.n_max * d + end * d];
             let v_slice =
                 &t.v[gi * t.n_max * d + start * d..gi * t.n_max * d + end * d];
-            let q_row = &t.q[gi * d..(gi + 1) * d];
-            let p = partial_attention_host(
-                q_row,
-                k_slice,
-                v_slice,
-                1,
-                width,
-                d,
-                &[lens[gi]],
-                start,
-            );
-            per_group[gi].push(p);
+            for j in 0..gs {
+                let out = (gi / kv_heads) * heads + (gi % kv_heads) * gs + j;
+                let q_row = &t.q[out * d..(out + 1) * d];
+                let p = partial_attention_host(
+                    q_row,
+                    k_slice,
+                    v_slice,
+                    1,
+                    width,
+                    d,
+                    &[lens[gi]],
+                    start,
+                );
+                per_output[out].push(p);
+            }
         }
     }
 
     // Phase 2: host-CTA reduction (Alg 2 lines 24-39), order-shuffled.
     let mut rng = shuffle_seed.map(Rng::new);
-    let mut out = vec![0.0f32; g * d];
-    for (gi, mut parts) in per_group.into_iter().enumerate() {
+    let mut out = vec![0.0f32; problem.outputs() * d];
+    for (oi, mut parts) in per_output.into_iter().enumerate() {
         if parts.is_empty() {
             continue; // empty context
         }
@@ -109,7 +146,7 @@ pub fn execute_plan_host(
         for p in &parts {
             acc.reduce_from(p);
         }
-        out[gi * d..(gi + 1) * d].copy_from_slice(&acc.finalize());
+        out[oi * d..(oi + 1) * d].copy_from_slice(&acc.finalize());
     }
     out
 }
@@ -122,14 +159,17 @@ mod tests {
     use crate::util::testing::{max_abs_err, prop_check};
 
     fn direct(problem: &DecodeProblem, t: &HostTensors) -> Vec<f32> {
+        // Repeated-KV dense oracle: exact attention per query head over
+        // KV materialized to query-head count (a copy when ungrouped).
+        let (k, v) = t.repeated_kv(problem);
         attention_host(
             &t.q,
-            &t.k,
-            &t.v,
-            problem.groups(),
+            &k,
+            &v,
+            problem.outputs(),
             t.n_max,
             problem.head_dim,
-            &t.group_lens(problem),
+            &t.output_lens(problem),
         )
     }
 
@@ -164,13 +204,87 @@ mod tests {
     }
 
     #[test]
-    fn property_random_problems_random_strategies() {
-        prop_check("host exec == direct attention", 40, |rng| {
+    fn gqa_grouped_exec_matches_the_repeated_kv_oracle() {
+        // 8 query heads over {1, 2, 8} kv heads, every strategy.
+        for kv_heads in [1usize, 2, 8] {
+            let problem = DecodeProblem::uniform(2, 8, 700, 64)
+                .with_tile(64)
+                .with_kv_heads(kv_heads);
+            let t = HostTensors::random(&problem, 42);
+            let want = direct(&problem, &t);
+            for strategy in [
+                Strategy::Dense,
+                Strategy::FixedSplit { splits: 4 },
+                Strategy::StreamK,
+            ] {
+                let plan = build_plan(&problem, strategy, 10);
+                plan.validate(&problem).unwrap();
+                let got = execute_plan_host(&plan, &problem, &t, None);
+                let err = max_abs_err(&got, &want);
+                assert!(err < 1e-4, "kv_heads {kv_heads} {}: err {err}", strategy.name());
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_ungrouped_kv_plane_is_bit_identical_to_the_default() {
+        // The headline GQA invariant: `with_kv_heads(heads)` is not
+        // "approximately the old path" — the problem, the plan, the RNG
+        // draw sequence and the executed op order are all identical, so
+        // outputs must match bit for bit (Vec equality, no tolerance).
+        prop_check("with_kv_heads(heads) == default, bitwise", 25, |rng| {
             let batch = rng.urange(1, 4);
             let heads = rng.urange(1, 5);
             let ctx_lens: Vec<u32> =
                 (0..batch).map(|_| rng.range(1, 600) as u32).collect();
-            let mut p = DecodeProblem::ragged(heads, ctx_lens, 32);
+            let base = DecodeProblem::ragged(heads, ctx_lens, 32)
+                .with_tile(*rng.choose(&[16usize, 32, 64]));
+            let pinned = base.clone().with_kv_heads(heads);
+            if base != pinned {
+                return Err("pinning kv_heads == heads moved the problem".into());
+            }
+            let seed = rng.next_u64();
+            let ta = HostTensors::random(&base, seed);
+            let tb = HostTensors::random(&pinned, seed);
+            if ta.q != tb.q || ta.k != tb.k || ta.v != tb.v {
+                return Err("random draw sequence moved under grouping".into());
+            }
+            let strategy = *rng.choose(&[
+                Strategy::Dense,
+                Strategy::FixedSplit { splits: 4 },
+                Strategy::StreamK,
+            ]);
+            let slots = rng.urange(1, 64);
+            let shuffle = rng.next_u64();
+            let a = execute_plan_host(
+                &build_plan(&base, strategy, slots),
+                &base,
+                &ta,
+                Some(shuffle),
+            );
+            let b = execute_plan_host(
+                &build_plan(&pinned, strategy, slots),
+                &pinned,
+                &tb,
+                Some(shuffle),
+            );
+            if a != b {
+                return Err(format!("{}: bit-identity broken", strategy.name()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_random_problems_random_strategies() {
+        prop_check("host exec == direct attention", 40, |rng| {
+            let batch = rng.urange(1, 4);
+            let kv_heads = rng.urange(1, 5);
+            let group_size = *rng.choose(&[1usize, 1, 2, 4]);
+            let heads = kv_heads * group_size;
+            let ctx_lens: Vec<u32> =
+                (0..batch).map(|_| rng.range(1, 600) as u32).collect();
+            let mut p = DecodeProblem::ragged(heads, ctx_lens, 32).with_kv_heads(kv_heads);
             p = p.with_tile(*rng.choose(&[16usize, 32, 64]));
             let t = HostTensors::random(&p, rng.next_u64());
             let want = direct(&p, &t);

@@ -40,7 +40,10 @@ pub struct MultiQuerySeq {
 /// A batch of draft blocks, optionally grouped into fork families.
 #[derive(Clone, Debug)]
 pub struct MultiQueryProblem {
+    /// Query heads.
     pub heads: usize,
+    /// KV heads (GQA); divides `heads`, == `heads` when ungrouped.
+    pub kv_heads: usize,
     pub head_dim: usize,
     pub seqs: Vec<MultiQuerySeq>,
     /// LeanTile size in tokens.
@@ -83,6 +86,7 @@ impl MultiQueryProblem {
         }
         Ok(MultiQueryProblem {
             heads,
+            kv_heads: heads,
             head_dim,
             seqs,
             tile: lean_tile_for(head_dim),
@@ -93,6 +97,18 @@ impl MultiQueryProblem {
     pub fn with_tile(mut self, tile: usize) -> Self {
         assert!(tile > 0);
         self.tile = tile;
+        self
+    }
+
+    /// Switch to a grouped-query layout with `kv_heads` KV heads.
+    pub fn with_kv_heads(mut self, kv_heads: usize) -> Self {
+        assert!(kv_heads >= 1, "kv_heads must be >= 1");
+        assert!(
+            self.heads % kv_heads == 0,
+            "heads {} not divisible by kv_heads {kv_heads}",
+            self.heads
+        );
+        self.kv_heads = kv_heads;
         self
     }
 
@@ -189,6 +205,7 @@ impl MultiQueryProblem {
         CascadeProblem::new(self.heads, lens, self.head_dim, self.row_groups())
             .expect("expansion of a validated multi-query problem")
             .with_tile(self.tile)
+            .with_kv_heads(self.kv_heads)
     }
 
     /// The sharing-oblivious twin: same row-lanes, no prefix structure
@@ -198,6 +215,7 @@ impl MultiQueryProblem {
         CascadeProblem::new(self.heads, lens, self.head_dim, Vec::new())
             .expect("flat expansion is always valid")
             .with_tile(self.tile)
+            .with_kv_heads(self.kv_heads)
     }
 
     /// Build the expanded problem plus its tensors from per-sequence
@@ -205,7 +223,7 @@ impl MultiQueryProblem {
     /// `lean_cascade` / `lean_cascade_host`; outputs are
     /// `[rows * heads, head_dim]` in expanded row order.
     pub fn tensors(&self, inputs: &MultiQueryInputs) -> Result<(CascadeProblem, CascadeTensors)> {
-        let (h, d) = (self.heads, self.head_dim);
+        let (h, hk, d) = (self.heads, self.kv_heads, self.head_dim);
         let n = self.seqs.len();
         ensure!(
             inputs.q.len() == n
@@ -218,12 +236,12 @@ impl MultiQueryProblem {
         for (s, seq) in self.seqs.iter().enumerate() {
             ensure!(inputs.q[s].len() == seq.q_len * h * d, "seq {s}: q shape");
             ensure!(
-                inputs.base_k[s].len() == h * seq.base_len * d
+                inputs.base_k[s].len() == hk * seq.base_len * d
                     && inputs.base_v[s].len() == inputs.base_k[s].len(),
                 "seq {s}: base kv shape"
             );
             ensure!(
-                inputs.draft_k[s].len() == h * seq.q_len * d
+                inputs.draft_k[s].len() == hk * seq.q_len * d
                     && inputs.draft_v[s].len() == inputs.draft_k[s].len(),
                 "seq {s}: draft kv shape"
             );
@@ -240,16 +258,16 @@ impl MultiQueryProblem {
 
         // Shared tensors, one per surviving prefix group, in group
         // order: the leading `prefix` base tokens of the group's first
-        // member row's sequence, `[heads, prefix, d]`.
+        // member row's sequence, `[kv_heads, prefix, d]`.
         let mut k_shared = Vec::with_capacity(cp.prefix_groups.len());
         let mut v_shared = Vec::with_capacity(cp.prefix_groups.len());
         for g in &cp.prefix_groups {
             let (s0, _) = self.seq_of_row(g.members[0] as usize);
             let base = self.seqs[s0].base_len;
             let prefix = g.prefix_len as usize;
-            let mut ks = Vec::with_capacity(h * prefix * d);
-            let mut vs = Vec::with_capacity(h * prefix * d);
-            for hi in 0..h {
+            let mut ks = Vec::with_capacity(hk * prefix * d);
+            let mut vs = Vec::with_capacity(hk * prefix * d);
+            for hi in 0..hk {
                 let src = hi * base * d;
                 ks.extend_from_slice(&inputs.base_k[s0][src..src + prefix * d]);
                 vs.extend_from_slice(&inputs.base_v[s0][src..src + prefix * d]);
@@ -259,7 +277,7 @@ impl MultiQueryProblem {
         }
 
         // Per-row suffixes: base remainder past the row's group prefix,
-        // then draft-block tokens 0..=i, `[heads, suffix, d]`.
+        // then draft-block tokens 0..=i, `[kv_heads, suffix, d]`.
         let rows = self.rows();
         let mut k_suffix = Vec::with_capacity(rows);
         let mut v_suffix = Vec::with_capacity(rows);
@@ -269,9 +287,9 @@ impl MultiQueryProblem {
             let q_len = self.seqs[s].q_len;
             let prefix = cp.prefix_of(row) as usize;
             let suffix = self.ctx_of(s, i) - prefix;
-            let mut ks = Vec::with_capacity(h * suffix * d);
-            let mut vs = Vec::with_capacity(h * suffix * d);
-            for hi in 0..h {
+            let mut ks = Vec::with_capacity(hk * suffix * d);
+            let mut vs = Vec::with_capacity(hk * suffix * d);
+            for hi in 0..hk {
                 let bsrc = (hi * base + prefix) * d;
                 ks.extend_from_slice(&inputs.base_k[s][bsrc..hi * base * d + base * d]);
                 vs.extend_from_slice(&inputs.base_v[s][bsrc..hi * base * d + base * d]);
@@ -279,7 +297,7 @@ impl MultiQueryProblem {
                 ks.extend_from_slice(&inputs.draft_k[s][dsrc..dsrc + (i + 1) * d]);
                 vs.extend_from_slice(&inputs.draft_v[s][dsrc..dsrc + (i + 1) * d]);
             }
-            debug_assert_eq!(ks.len(), h * suffix * d);
+            debug_assert_eq!(ks.len(), hk * suffix * d);
             k_suffix.push(ks);
             v_suffix.push(vs);
         }
@@ -293,10 +311,10 @@ impl MultiQueryProblem {
 pub struct MultiQueryInputs {
     /// Per sequence: `[q_len, heads, d]` query rows (block positions).
     pub q: Vec<Vec<f32>>,
-    /// Per sequence: `[heads, base_len, d]` cached K rows.
+    /// Per sequence: `[kv_heads, base_len, d]` cached K rows.
     pub base_k: Vec<Vec<f32>>,
     pub base_v: Vec<Vec<f32>>,
-    /// Per sequence: `[heads, q_len, d]` draft-block K rows.
+    /// Per sequence: `[kv_heads, q_len, d]` draft-block K rows.
     pub draft_k: Vec<Vec<f32>>,
     pub draft_v: Vec<Vec<f32>>,
 }
@@ -305,20 +323,21 @@ impl MultiQueryInputs {
     /// Random inputs for `p`, deterministic in `seed`. Family members'
     /// leading `prefix_len` base tokens are generated once per family
     /// and copied into every member, honoring the byte-identical-prefix
-    /// contract real shared KV pages provide.
+    /// contract real shared KV pages provide. With `kv_heads == heads`
+    /// the draw sequence matches the ungrouped one.
     pub fn random(p: &MultiQueryProblem, seed: u64) -> MultiQueryInputs {
         let mut rng = Rng::new(seed);
-        let (h, d) = (p.heads, p.head_dim);
-        // Shared leading base tokens per family, `[heads, prefix, d]`.
+        let (h, hk, d) = (p.heads, p.kv_heads, p.head_dim);
+        // Shared leading base tokens per family, `[kv_heads, prefix, d]`.
         let shared: Vec<Vec<f32>> = p
             .families
             .iter()
-            .map(|f| rng.normal_vec(h * f.prefix_len as usize * d))
+            .map(|f| rng.normal_vec(hk * f.prefix_len as usize * d))
             .collect();
         let shared_v: Vec<Vec<f32>> = p
             .families
             .iter()
-            .map(|f| rng.normal_vec(h * f.prefix_len as usize * d))
+            .map(|f| rng.normal_vec(hk * f.prefix_len as usize * d))
             .collect();
         let family_of = |s: usize| -> Option<usize> {
             p.families
@@ -330,10 +349,10 @@ impl MultiQueryInputs {
         for (s, seq) in p.seqs.iter().enumerate() {
             out.q.push(rng.normal_vec(seq.q_len * h * d));
             let (mut bk, mut bv) =
-                (rng.normal_vec(h * seq.base_len * d), rng.normal_vec(h * seq.base_len * d));
+                (rng.normal_vec(hk * seq.base_len * d), rng.normal_vec(hk * seq.base_len * d));
             if let Some(fi) = family_of(s) {
                 let prefix = p.families[fi].prefix_len as usize;
-                for hi in 0..h {
+                for hi in 0..hk {
                     let dst = hi * seq.base_len * d;
                     let src = hi * prefix * d;
                     bk[dst..dst + prefix * d]
@@ -344,8 +363,8 @@ impl MultiQueryInputs {
             }
             out.base_k.push(bk);
             out.base_v.push(bv);
-            out.draft_k.push(rng.normal_vec(h * seq.q_len * d));
-            out.draft_v.push(rng.normal_vec(h * seq.q_len * d));
+            out.draft_k.push(rng.normal_vec(hk * seq.q_len * d));
+            out.draft_v.push(rng.normal_vec(hk * seq.q_len * d));
         }
         out
     }
@@ -445,6 +464,26 @@ mod tests {
         assert_eq!(&t.k_suffix[1][..2 * 4], &inputs.draft_k[0][..2 * 4]);
         // q concatenates per-seq blocks in row order.
         assert_eq!(t.q, inputs.q[0]);
+    }
+
+    #[test]
+    fn gqa_expansion_and_tensors_use_the_kv_head_plane() {
+        let p = MultiQueryProblem::new(4, 8, vec![seq(64, 3), seq(40, 1)], vec![])
+            .unwrap()
+            .with_tile(16)
+            .with_kv_heads(2);
+        let cp = p.expand();
+        assert_eq!(cp.kv_heads, 2);
+        assert_eq!(p.expand_flat().kv_heads, 2);
+        let inputs = MultiQueryInputs::random(&p, 5);
+        // KV at [kv_heads, len, d]; q stays at query-head rows.
+        assert_eq!(inputs.base_k[0].len(), 2 * 64 * 8);
+        assert_eq!(inputs.draft_k[0].len(), 2 * 3 * 8);
+        assert_eq!(inputs.q[0].len(), 3 * 4 * 8);
+        let (cp2, t) = p.tensors(&inputs).unwrap();
+        assert_eq!(cp2.group_size(), 2);
+        assert_eq!(t.k_shared[0].len(), 2 * 64 * 8);
+        assert_eq!(t.q.len(), p.rows() * 4 * 8);
     }
 
     #[test]

@@ -4,12 +4,23 @@
 
 use super::lean_tile::{lean_tile_for, tiles_for_ctx};
 
-/// A decode-phase attention problem: one output tile per `(batch, head)`
+/// A decode-phase attention problem: one KV walk per `(batch, kv_head)`
 /// group (the decode query is a single token), context lengths per batch
 /// element (ragged batches supported — §IV-C "Lean Ragged Batching").
+///
+/// Under grouped-query attention (`kv_heads < heads`) each group's KV
+/// stream serves `heads / kv_heads` query rows at once, so the plan's
+/// tile space — and the KV bytes it prices — shrinks by the group size
+/// while the output rows stay at `batch × heads`. With
+/// `kv_heads == heads` (the default every constructor sets) the layout
+/// is exactly the pre-GQA one.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DecodeProblem {
+    /// Query heads (output rows per batch element).
     pub heads: usize,
+    /// KV heads; divides `heads`. Equal to `heads` unless set through
+    /// [`DecodeProblem::with_kv_heads`].
+    pub kv_heads: usize,
     pub head_dim: usize,
     /// Context length per batch element.
     pub ctx_lens: Vec<u32>,
@@ -22,6 +33,7 @@ impl DecodeProblem {
     pub fn uniform(batch: usize, heads: usize, ctx: usize, head_dim: usize) -> Self {
         DecodeProblem {
             heads,
+            kv_heads: heads,
             head_dim,
             ctx_lens: vec![ctx as u32; batch],
             tile: lean_tile_for(head_dim),
@@ -31,7 +43,7 @@ impl DecodeProblem {
     /// Ragged batch with per-sequence context lengths.
     pub fn ragged(heads: usize, ctx_lens: Vec<u32>, head_dim: usize) -> Self {
         let tile = lean_tile_for(head_dim);
-        DecodeProblem { heads, head_dim, ctx_lens, tile }
+        DecodeProblem { heads, kv_heads: heads, head_dim, ctx_lens, tile }
     }
 
     pub fn with_tile(mut self, tile: usize) -> Self {
@@ -40,18 +52,43 @@ impl DecodeProblem {
         self
     }
 
+    /// Grouped-query layout: `kv_heads` KV heads shared by `heads` query
+    /// heads (`kv_heads == 1` is multi-query attention).
+    pub fn with_kv_heads(mut self, kv_heads: usize) -> Self {
+        assert!(kv_heads >= 1, "kv_heads must be >= 1");
+        assert!(
+            self.heads % kv_heads == 0,
+            "heads {} not divisible by kv_heads {kv_heads}",
+            self.heads
+        );
+        self.kv_heads = kv_heads;
+        self
+    }
+
     pub fn batch(&self) -> usize {
         self.ctx_lens.len()
     }
 
-    /// Output tiles = flattened groups (batch-major, heads inner) — the
-    /// `batch → heads → context` linearization of §IV-C.
+    /// Query heads sharing one KV head's stream (1 without GQA).
+    pub fn group_size(&self) -> usize {
+        self.heads / self.kv_heads
+    }
+
+    /// KV walks = flattened groups (batch-major, kv heads inner) — the
+    /// `batch → heads → context` linearization of §IV-C, at kv-head
+    /// granularity under GQA.
     pub fn groups(&self) -> usize {
+        self.batch() * self.kv_heads
+    }
+
+    /// Query/output rows: `batch × heads`. Equals [`Self::groups`] only
+    /// when `kv_heads == heads`.
+    pub fn outputs(&self) -> usize {
         self.batch() * self.heads
     }
 
     pub fn ctx_for_group(&self, group: usize) -> usize {
-        self.ctx_lens[group / self.heads] as usize
+        self.ctx_lens[group / self.kv_heads] as usize
     }
 
     pub fn tiles_for_group(&self, group: usize) -> u64 {
@@ -407,6 +444,34 @@ mod tests {
         assert_eq!(p.tiles_for_group(0), 256);
         assert_eq!(p.total_tiles(), 128 * 256);
         assert_eq!(p.batch_context_ratio(), 1.0);
+    }
+
+    #[test]
+    fn gqa_shrinks_groups_but_not_outputs() {
+        let p = DecodeProblem::uniform(2, 8, 1024, 64).with_kv_heads(2);
+        assert_eq!(p.group_size(), 4);
+        assert_eq!(p.groups(), 4); // 2 batch x 2 kv heads
+        assert_eq!(p.outputs(), 16); // 2 batch x 8 query heads
+        assert_eq!(p.ctx_for_group(3), 1024);
+        // Total tiles shrink by exactly the group size.
+        let dense = DecodeProblem::uniform(2, 8, 1024, 64);
+        assert_eq!(dense.total_tiles(), p.total_tiles() * 4);
+    }
+
+    #[test]
+    fn kv_heads_equal_heads_is_the_default_identity() {
+        let a = DecodeProblem::uniform(3, 4, 2048, 64);
+        let b = DecodeProblem::uniform(3, 4, 2048, 64).with_kv_heads(4);
+        assert_eq!(a, b);
+        assert_eq!(a.kv_heads, a.heads);
+        assert_eq!(a.groups(), a.outputs());
+        assert_eq!(a.group_size(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn kv_heads_must_divide_heads() {
+        let _ = DecodeProblem::uniform(1, 8, 1024, 64).with_kv_heads(3);
     }
 
     #[test]

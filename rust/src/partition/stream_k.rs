@@ -1,9 +1,12 @@
 //! LeanAttention's stream-K decomposition (§IV-C/D, Algorithm 2).
 //!
 //! All LeanTile iterations of all output tiles are rolled out into one
-//! linear iteration space following the `batch → heads → context`
+//! linear iteration space following the `batch → kv heads → context`
 //! linearization (ragged batches linearize the same way — the per-group
-//! tile counts simply differ). That space is divided into `grid` *equal*
+//! tile counts simply differ). Under GQA/MQA a "group" is a
+//! `(batch, kv_head)` pair: the `heads / kv_heads` query heads sharing
+//! that KV head ride the same LeanTile walk, so the plan shrinks by the
+//! group size while outputs stay per-query-head. That space is divided into `grid` *equal*
 //! contiguous ranges, one per CTA; a CTA's range may cross output-tile
 //! boundaries, in which case it contributes partial results that the
 //! tile's **host** CTA (owner of the tile's first iteration) reduces with
@@ -125,6 +128,22 @@ mod tests {
         let plan = stream_k_plan(&p, 4);
         plan.validate(&p).unwrap();
         assert!(plan.ctas.iter().any(|c| c.segments.len() == 2));
+    }
+
+    #[test]
+    fn gqa_plan_matches_a_kv_head_sized_dense_plan() {
+        // Planning is kv-head granular: 32 query heads over 8 KV heads
+        // yields exactly the plan of an 8-head dense problem.
+        let grouped = DecodeProblem::uniform(4, 32, 65536, 64).with_kv_heads(8);
+        let dense_small = DecodeProblem::uniform(4, 8, 65536, 64);
+        let a = stream_k_plan(&grouped, 216);
+        let b = stream_k_plan(&dense_small, 216);
+        a.validate(&grouped).unwrap();
+        assert_eq!(a.groups, b.groups);
+        assert_eq!(a.grid(), b.grid());
+        for (x, y) in a.ctas.iter().zip(&b.ctas) {
+            assert_eq!(x.segments, y.segments);
+        }
     }
 
     #[test]

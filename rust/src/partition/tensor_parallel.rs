@@ -1,10 +1,14 @@
 //! Tensor-parallel head sharding (§III-D / §V "Multi-GPU Tensor
-//! Parallelism"): attention heads are partitioned across GPUs (each GPU
-//! holds `heads / n` heads of every layer), and each GPU runs its own
-//! stream-K plan over its shard. Because attention is computed per head,
-//! no cross-GPU reduction is needed inside the attention op — the only
-//! collective is the later `Wo` all-reduce, outside this kernel — which is
-//! exactly why LeanAttention "supports tensor parallelism" while
+//! Parallelism"): the sharding unit is the **KV head** — the thing that
+//! owns KV bytes. Each GPU holds `kv_heads / n` KV heads of every layer
+//! *together with their whole query-head groups* (under GQA a query head
+//! is useless without its group's KV stream, and splitting a group would
+//! replicate that stream across GPUs), and runs its own stream-K plan
+//! over its shard. Ungrouped models (`kv_heads == heads`) shard exactly
+//! as plain per-head partitioning did. Because attention is computed per
+//! head, no cross-GPU reduction is needed inside the attention op — the
+//! only collective is the later `Wo` all-reduce, outside this kernel —
+//! which is exactly why LeanAttention "supports tensor parallelism" while
 //! FlashDecoding's fixed grid does not adapt (the paper scales FD to the
 //! total SM count instead; our simulator does the same for the baseline).
 
@@ -20,10 +24,12 @@ pub struct Shard {
     pub plan: Plan,
 }
 
-/// Shard `problem`'s heads over `n_gpus` and plan each shard
+/// Shard `problem`'s KV heads over `n_gpus` and plan each shard
 /// independently with `strategy` on a device with `slots_per_gpu` CTA
-/// slots. Head counts that do not divide evenly are spread ±1 (the same
-/// remainder rule stream-K uses for tiles).
+/// slots. Each shard keeps whole query-head groups (`heads = kv_heads ×
+/// group_size`), so no KV stream is ever replicated across GPUs. KV-head
+/// counts that do not divide evenly are spread ±1 (the same remainder
+/// rule stream-K uses for tiles).
 pub fn shard_heads(
     problem: &DecodeProblem,
     n_gpus: usize,
@@ -32,17 +38,19 @@ pub fn shard_heads(
 ) -> Result<Vec<Shard>> {
     ensure!(n_gpus >= 1, "need at least one GPU");
     ensure!(
-        problem.heads >= n_gpus,
-        "cannot shard {} heads over {n_gpus} GPUs",
-        problem.heads
+        problem.kv_heads >= n_gpus,
+        "cannot shard {} kv heads over {n_gpus} GPUs",
+        problem.kv_heads
     );
-    let base = problem.heads / n_gpus;
-    let rem = problem.heads % n_gpus;
+    let gs = problem.group_size();
+    let base = problem.kv_heads / n_gpus;
+    let rem = problem.kv_heads % n_gpus;
     let mut shards = Vec::with_capacity(n_gpus);
     for gpu in 0..n_gpus {
-        let heads = base + usize::from(gpu < rem);
+        let kv_heads = base + usize::from(gpu < rem);
         let sub = DecodeProblem {
-            heads,
+            heads: kv_heads * gs,
+            kv_heads,
             head_dim: problem.head_dim,
             ctx_lens: problem.ctx_lens.clone(),
             tile: problem.tile,
@@ -109,6 +117,25 @@ mod tests {
     }
 
     #[test]
+    fn gqa_sharding_keeps_whole_query_head_groups() {
+        // 64 query heads over 8 kv heads, 4 GPUs: each GPU owns 2 kv
+        // heads and all 16 query heads of their groups.
+        let p = DecodeProblem::uniform(4, 64, 65536, 64).with_kv_heads(8);
+        let shards = shard_heads(&p, 4, Strategy::StreamK, 216).unwrap();
+        assert_eq!(shards.len(), 4);
+        for s in &shards {
+            assert_eq!(s.problem.kv_heads, 2);
+            assert_eq!(s.problem.heads, 16);
+            assert_eq!(s.problem.group_size(), 8);
+        }
+        assert_eq!(shards.iter().map(|s| s.problem.kv_heads).sum::<usize>(), 8);
+        assert_eq!(shards.iter().map(|s| s.problem.heads).sum::<usize>(), 64);
+        // MQA cannot tensor-parallel-shard: one kv head owns all KV bytes.
+        let mqa = DecodeProblem::uniform(1, 32, 65536, 64).with_kv_heads(1);
+        assert!(shard_heads(&mqa, 2, Strategy::StreamK, 216).is_err());
+    }
+
+    #[test]
     fn sharded_lean_matches_monolithic_multi_gpu_model() {
         // Sharding heads across 8 GPUs ~= one 8x device in the aggregate
         // simulator (both near-perfect occupancy).
@@ -124,17 +151,33 @@ mod tests {
     #[test]
     fn property_shards_cover_all_heads() {
         prop_check("TP sharding coverage", 100, |rng| {
-            let heads = rng.urange(8, 512);
+            let kv_heads = rng.urange(8, 128);
+            let gs = *rng.choose(&[1usize, 1, 2, 4, 8]);
+            let heads = kv_heads * gs;
             let gpus = *rng.choose(&[2usize, 4, 8]);
-            if heads < gpus {
+            if kv_heads < gpus {
                 return Ok(());
             }
-            let p = DecodeProblem::uniform(rng.urange(1, 5), heads, 1 << rng.urange(10, 18), 64);
+            let p = DecodeProblem::uniform(rng.urange(1, 5), heads, 1 << rng.urange(10, 18), 64)
+                .with_kv_heads(kv_heads);
             let shards =
                 shard_heads(&p, gpus, Strategy::StreamK, 216).map_err(|e| e.to_string())?;
+            let kv_total: usize = shards.iter().map(|s| s.problem.kv_heads).sum();
             let total: usize = shards.iter().map(|s| s.problem.heads).sum();
+            if kv_total != kv_heads {
+                return Err(format!("covered {kv_total} of {kv_heads} kv heads"));
+            }
             if total != heads {
-                return Err(format!("covered {total} of {heads} heads"));
+                return Err(format!("covered {total} of {heads} query heads"));
+            }
+            for s in &shards {
+                if s.problem.group_size() != gs {
+                    return Err(format!(
+                        "shard {} group size {} != {gs}",
+                        s.gpu,
+                        s.problem.group_size()
+                    ));
+                }
             }
             Ok(())
         });

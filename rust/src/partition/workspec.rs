@@ -25,9 +25,17 @@ pub enum PhaseReq {
 }
 
 /// A heterogeneous batch of prefill and decode requests sharing the GPU.
+///
+/// Output tiles are emitted at **kv-head** granularity: under GQA each
+/// group of `heads / kv_heads` query heads shares one KV walk, so one
+/// output tile (and one LeanTile iteration stream) serves the whole
+/// group. With `kv_heads == heads` (the default) this is the classic
+/// one-tile-per-query-head layout.
 #[derive(Clone, Debug)]
 pub struct MixedWorkload {
     pub heads: usize,
+    /// KV heads; divides `heads`. Defaults to `heads` (no grouping).
+    pub kv_heads: usize,
     pub head_dim: usize,
     pub reqs: Vec<PhaseReq>,
     pub tile: usize,
@@ -35,24 +43,36 @@ pub struct MixedWorkload {
 
 impl MixedWorkload {
     pub fn new(heads: usize, head_dim: usize, reqs: Vec<PhaseReq>) -> MixedWorkload {
-        MixedWorkload { heads, head_dim, reqs, tile: lean_tile_for(head_dim) }
+        MixedWorkload { heads, kv_heads: heads, head_dim, reqs, tile: lean_tile_for(head_dim) }
+    }
+
+    /// Switch to a grouped-query layout with `kv_heads` KV heads.
+    pub fn with_kv_heads(mut self, kv_heads: usize) -> MixedWorkload {
+        assert!(kv_heads >= 1, "kv_heads must be >= 1");
+        assert!(
+            self.heads % kv_heads == 0,
+            "heads {} not divisible by kv_heads {kv_heads}",
+            self.heads
+        );
+        self.kv_heads = kv_heads;
+        self
     }
 
     /// Flatten into per-output-tile iteration counts
-    /// (request-major, heads inner, query tiles innermost).
+    /// (request-major, kv heads inner, query tiles innermost).
     pub fn tile_counts(&self) -> Vec<u64> {
         let mut counts = Vec::new();
         for req in &self.reqs {
             match *req {
                 PhaseReq::Decode { ctx } => {
                     let c = tiles_for_ctx(ctx as usize, self.tile);
-                    for _ in 0..self.heads {
+                    for _ in 0..self.kv_heads {
                         counts.push(c);
                     }
                 }
                 PhaseReq::Prefill { q_len, past } => {
                     let q_tiles = (q_len as usize).div_ceil(Q_TILE);
-                    for _ in 0..self.heads {
+                    for _ in 0..self.kv_heads {
                         for qi in 0..q_tiles {
                             // Causal: query tile qi sees `past` cached
                             // tokens plus prompt tokens up to its last row.
@@ -164,7 +184,7 @@ pub fn validate_counts(plan: &Plan, counts: &[u64]) -> anyhow::Result<()> {
         .iter()
         .map(|&c| (c as usize * plan.tile) as u32)
         .collect();
-    let p = DecodeProblem { heads: 1, head_dim: 64, ctx_lens, tile: plan.tile };
+    let p = DecodeProblem { heads: 1, kv_heads: 1, head_dim: 64, ctx_lens, tile: plan.tile };
     plan.validate(&p)
 }
 
@@ -183,6 +203,21 @@ mod tests {
         let counts = w.tile_counts();
         let expect: Vec<u64> = (0..p.groups()).map(|g| p.tiles_for_group(g)).collect();
         assert_eq!(counts, expect);
+    }
+
+    #[test]
+    fn gqa_counts_match_a_kv_head_sized_workload() {
+        // One output tile per kv head: an 8-head/2-kv-head workload plans
+        // exactly like a 2-head dense one (each tile just carries 4 query
+        // rows at execution time).
+        let reqs = vec![
+            PhaseReq::Decode { ctx: 1000 },
+            PhaseReq::Prefill { q_len: 256, past: 64 },
+        ];
+        let grouped = MixedWorkload::new(8, 64, reqs.clone()).with_kv_heads(2);
+        let dense_small = MixedWorkload::new(2, 64, reqs);
+        assert_eq!(grouped.tile_counts(), dense_small.tile_counts());
+        assert_eq!(grouped.total_tiles(), dense_small.total_tiles());
     }
 
     #[test]

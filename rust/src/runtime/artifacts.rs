@@ -39,6 +39,10 @@ pub struct ModelArtifact {
     pub d_model: usize,
     pub n_layers: usize,
     pub n_heads: usize,
+    /// KV heads (GQA); divides `n_heads`. Manifests from before the
+    /// grouped-KV plane default to `n_heads` (one KV head per query
+    /// head), which keeps old artifact sets bit-identical.
+    pub n_kv_heads: usize,
     pub head_dim: usize,
     pub d_ff: usize,
     pub ctx_bucket: usize,
@@ -128,6 +132,11 @@ impl Manifest {
                         d_model: cfg.usize_at("d_model"),
                         n_layers: cfg.usize_at("n_layers"),
                         n_heads: cfg.usize_at("n_heads"),
+                        n_kv_heads: cfg
+                            .get("n_kv_heads")
+                            .and_then(|v| v.as_u64())
+                            .map(|v| v as usize)
+                            .unwrap_or_else(|| cfg.usize_at("n_heads")),
                         head_dim: cfg.usize_at("head_dim"),
                         d_ff: cfg.usize_at("d_ff"),
                         ctx_bucket: cfg.usize_at("ctx_bucket"),

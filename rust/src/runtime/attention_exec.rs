@@ -296,6 +296,7 @@ impl AttentionExecutor {
         v: &[f32],
         lens: &[u32],
         heads: usize,
+        kv_heads: usize,
         n: usize,
         d: usize,
         page_tokens: usize,
@@ -303,8 +304,9 @@ impl AttentionExecutor {
         tile: usize,
         sm_slots: usize,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        let (cp, t) =
-            sparse_compact_problem(q, k, v, lens, heads, n, d, page_tokens, selections, tile)?;
+        let (cp, t) = sparse_compact_problem(
+            q, k, v, lens, heads, kv_heads, n, d, page_tokens, selections, tile,
+        )?;
         let cplan = build_cascade_plan(&cp, sm_slots);
         self.lean_cascade(&cp, &t, &cplan)
     }
@@ -346,12 +348,13 @@ pub fn lean_multi_query_host(
 }
 
 /// Pose the flat compacted problem a sparse page selection describes:
-/// sequence `s`'s `[heads, n, d]` KV rows (inside the dense
-/// `[batch*heads, n, d]` layout, valid up to `lens[s]`) restricted to the
-/// token spans of its selected page ordinals, packed in context order.
-/// The result is a group-free [`CascadeProblem`] over the compacted
-/// lengths — the dense oracle restricted to the same pages is exact
-/// attention over these tensors.
+/// sequence `s`'s `[kv_heads, n, d]` KV rows (inside the kv-head-plane
+/// `[batch*kv_heads, n, d]` layout, valid up to `lens[s]`) restricted to
+/// the token spans of its selected page ordinals, packed in context
+/// order. `q` stays at query-head rows (`[batch*heads, d]`). The result
+/// is a group-free [`CascadeProblem`] over the compacted lengths — the
+/// dense oracle restricted to the same pages (with KV repeated to query
+/// heads under GQA) is exact attention over these tensors.
 #[allow(clippy::too_many_arguments)]
 pub fn sparse_compact_problem(
     q: &[f32],
@@ -359,6 +362,7 @@ pub fn sparse_compact_problem(
     v: &[f32],
     lens: &[u32],
     heads: usize,
+    kv_heads: usize,
     n: usize,
     d: usize,
     page_tokens: usize,
@@ -368,7 +372,7 @@ pub fn sparse_compact_problem(
     let batch = lens.len();
     anyhow::ensure!(selections.len() == batch, "one selection per sequence");
     anyhow::ensure!(q.len() == batch * heads * d, "q shape");
-    anyhow::ensure!(k.len() == batch * heads * n * d, "k shape");
+    anyhow::ensure!(k.len() == batch * kv_heads * n * d, "k shape");
     anyhow::ensure!(v.len() == k.len(), "v shape");
     let mut ctx_lens = Vec::with_capacity(batch);
     let mut k_suffix = Vec::with_capacity(batch);
@@ -376,10 +380,10 @@ pub fn sparse_compact_problem(
     for (s, selection) in selections.iter().enumerate() {
         let idx = selected_token_indices(lens[s] as usize, page_tokens, selection);
         let sel_len = idx.len();
-        let mut ks = vec![0.0f32; heads * sel_len * d];
+        let mut ks = vec![0.0f32; kv_heads * sel_len * d];
         let mut vs = vec![0.0f32; ks.len()];
-        for h in 0..heads {
-            let row = (s * heads + h) * n;
+        for h in 0..kv_heads {
+            let row = (s * kv_heads + h) * n;
             for (j, &t) in idx.iter().enumerate() {
                 anyhow::ensure!(t < n, "selected token {t} outside the KV view");
                 let src = (row + t) * d;
@@ -392,7 +396,9 @@ pub fn sparse_compact_problem(
         k_suffix.push(ks);
         v_suffix.push(vs);
     }
-    let cp = CascadeProblem::new(heads, ctx_lens, d, Vec::new())?.with_tile(tile);
+    let cp = CascadeProblem::new(heads, ctx_lens, d, Vec::new())?
+        .with_tile(tile)
+        .with_kv_heads(kv_heads);
     let t = CascadeTensors {
         q: q.to_vec(),
         k_shared: Vec::new(),
@@ -415,6 +421,7 @@ pub fn lean_sparse_host(
     v: &[f32],
     lens: &[u32],
     heads: usize,
+    kv_heads: usize,
     n: usize,
     d: usize,
     page_tokens: usize,
@@ -423,8 +430,9 @@ pub fn lean_sparse_host(
     sm_slots: usize,
     batch_rows: usize,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
-    let (cp, t) =
-        sparse_compact_problem(q, k, v, lens, heads, n, d, page_tokens, selections, tile)?;
+    let (cp, t) = sparse_compact_problem(
+        q, k, v, lens, heads, kv_heads, n, d, page_tokens, selections, tile,
+    )?;
     let cplan = build_cascade_plan(&cp, sm_slots);
     Ok(lean_cascade_host(&cp, &t, &cplan, batch_rows))
 }
@@ -528,19 +536,27 @@ where
 {
     let d = problem.head_dim;
     let heads = problem.heads;
+    let gs = problem.group_size();
 
-    // Expand tasks to (task, output-row) pairs. Rows of one shared task
-    // stay adjacent so they land in the same artifact batch and reuse the
-    // materialized slice.
+    // Expand tasks to (task, output-row) pairs. A task's `head` is a kv
+    // head: under GQA its slice serves all `gs` query heads of that
+    // group. Rows of one task stay adjacent so they land in the same
+    // artifact batch and reuse the materialized slice.
     let mut rows: Vec<(usize, usize)> = Vec::new();
     for (ti, task) in tasks.iter().enumerate() {
         match task.kind {
             SegKind::Shared { pg, head } => {
                 for &m in &problem.prefix_groups[pg].members {
-                    rows.push((ti, m as usize * heads + head));
+                    for j in 0..gs {
+                        rows.push((ti, m as usize * heads + head * gs + j));
+                    }
                 }
             }
-            SegKind::Suffix { seq, head } => rows.push((ti, seq * heads + head)),
+            SegKind::Suffix { seq, head } => {
+                for j in 0..gs {
+                    rows.push((ti, seq * heads + head * gs + j));
+                }
+            }
         }
     }
 

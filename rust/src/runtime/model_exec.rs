@@ -87,16 +87,18 @@ impl ModelRuntime {
         self.verify.is_some() && self.art.spec_bucket >= 2
     }
 
-    /// KV cache element count per layer-batch-head plane: `ctx_bucket * head_dim`.
+    /// KV cache element count: the cache is stored at **kv-head**
+    /// granularity (`[l, b, h_kv, ctx_bucket, dh]`); `n_kv_heads`
+    /// defaults to `n_heads` for pre-GQA artifact sets.
     pub fn cache_elems(&self) -> usize {
-        self.art.n_layers * self.art.batch * self.art.n_heads * self.art.ctx_bucket
+        self.art.n_layers * self.art.batch * self.art.n_kv_heads * self.art.ctx_bucket
             * self.art.head_dim
     }
 
     /// One decode step.
     ///
     /// * `tokens[b]` — current token per sequence.
-    /// * `k_cache/v_cache` — `[l, b, h, ctx_bucket, dh]` materialized caches
+    /// * `k_cache/v_cache` — `[l, b, h_kv, ctx_bucket, dh]` materialized caches
     ///   holding each sequence's first `positions[b]` tokens.
     /// * `positions[b]` — number of cached tokens (the fresh token's index).
     pub fn decode(
@@ -121,7 +123,7 @@ impl ModelRuntime {
 
         let (l, h, c, dh) = (
             self.art.n_layers as i64,
-            self.art.n_heads as i64,
+            self.art.n_kv_heads as i64,
             self.art.ctx_bucket as i64,
             self.art.head_dim as i64,
         );
@@ -151,7 +153,7 @@ impl ModelRuntime {
     /// * `tokens[b * s]` — per sequence, `s = spec_bucket` draft-block
     ///   tokens: the pending token followed by `s - 1` drafted tokens
     ///   (row-major `[b, s]`).
-    /// * `k_cache/v_cache` — the same `[l, b, h, ctx_bucket, dh]` views
+    /// * `k_cache/v_cache` — the same `[l, b, h_kv, ctx_bucket, dh]` views
     ///   [`Self::decode`] consumes, holding `positions[b]` tokens.
     /// * `positions[b]` — cached tokens (the block's first index).
     ///
@@ -187,7 +189,7 @@ impl ModelRuntime {
 
         let (l, h, c, dh) = (
             self.art.n_layers as i64,
-            self.art.n_heads as i64,
+            self.art.n_kv_heads as i64,
             self.art.ctx_bucket as i64,
             self.art.head_dim as i64,
         );

@@ -9,6 +9,11 @@
 //! quantify. Reduction follows stream-K (host CTA folds peer partials
 //! in-kernel), plus one final rescale per output row that merges its
 //! shared-prefix partial with its suffix partial.
+//!
+//! Tiles are priced per **KV head**: under GQA/MQA one KV stream serves a
+//! whole query-head group, so modeled KV bytes divide by the group size
+//! (`queries_of` scales the per-tile compute up by the same factor) —
+//! ungrouped problems (`kv_heads == heads`) price exactly as before.
 
 use crate::partition::cascade::{build_cascade_plan, CascadeProblem, SegKind};
 use crate::partition::plan::Strategy;
@@ -207,6 +212,32 @@ mod tests {
                 r.bytes_saved_fraction()
             );
         }
+    }
+
+    #[test]
+    fn gqa_shrinks_modeled_kv_traffic_by_the_group_size() {
+        // 8 query heads over 2 kv heads: one quarter the KV streams of
+        // the ungrouped batch, on both the cascade and flat plans — so
+        // the shared-prefix savings *fraction* is unchanged.
+        let dense = shared_batch(8, 65536, 1024);
+        let grouped = shared_batch(8, 65536, 1024).with_kv_heads(2);
+        assert!(
+            (cascade_kv_bytes(&grouped) * 4.0 - cascade_kv_bytes(&dense)).abs()
+                < 1e-6 * cascade_kv_bytes(&dense)
+        );
+        assert!(
+            (baseline_kv_bytes(&grouped) * 4.0 - baseline_kv_bytes(&dense)).abs()
+                < 1e-6 * baseline_kv_bytes(&dense)
+        );
+        let arch = GpuArch::a100();
+        let rd = simulate_cascade(&dense, &arch);
+        let rg = simulate_cascade(&grouped, &arch);
+        assert!(
+            (rd.bytes_saved_fraction() - rg.bytes_saved_fraction()).abs() < 1e-9,
+            "saved {:.4} vs {:.4}",
+            rd.bytes_saved_fraction(),
+            rg.bytes_saved_fraction()
+        );
     }
 
     #[test]

@@ -37,6 +37,6 @@ pub use page_meta::PageMeta;
 pub use policy::SparsePolicy;
 pub use rope::advance_rope;
 pub use select::{
-    page_upper_bound, score_coverage, select_pages, selected_kv_bytes,
-    selected_token_indices, selected_tokens,
+    group_upper_bound, page_upper_bound, score_coverage, select_pages,
+    selected_kv_bytes, selected_token_indices, selected_tokens,
 };

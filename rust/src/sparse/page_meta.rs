@@ -1,7 +1,10 @@
 //! Per-page key statistics for query-aware page selection.
 //!
 //! Each KV page carries the channel-wise minimum and maximum of its
-//! written K rows, laid out `[layers, heads, head_dim]` — enough to bound
+//! written K rows, laid out `[layers, h_kv, head_dim]` — kv-head granular
+//! like the cache itself, so under GQA/MQA the statistics shrink with the
+//! KV plane and one page's bounds serve every query head of the group.
+//! They are enough to bound
 //! `q · k` for every key in the page from above (Quest's criterion,
 //! arXiv 2502.06766 §page-granular selection) without touching the rows
 //! themselves. The statistics are maintained **incrementally** by
@@ -18,9 +21,9 @@
 pub struct PageMeta {
     /// Rows the statistics cover (`0..filled` of the page's token slots).
     filled: usize,
-    /// `[layers, heads, head_dim]` channel-wise minimum over filled rows.
+    /// `[layers, h_kv, head_dim]` channel-wise minimum over filled rows.
     k_min: Vec<f32>,
-    /// `[layers, heads, head_dim]` channel-wise maximum over filled rows.
+    /// `[layers, h_kv, head_dim]` channel-wise maximum over filled rows.
     k_max: Vec<f32>,
 }
 

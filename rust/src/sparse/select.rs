@@ -1,7 +1,7 @@
 //! Query-aware top-k page selection over per-page key statistics.
 //!
 //! A page's score is the Quest-style upper bound on any `q · k` inside it:
-//! `Σ_d max(q_d · min_d, q_d · max_d)` over the `[layers, heads, head_dim]`
+//! `Σ_d max(q_d · min_d, q_d · max_d)` over the `[layers, h_kv, head_dim]`
 //! channel plane — no key in the page can score higher against `q`, so
 //! ranking pages by this bound never drops the page holding the true
 //! argmax key. Selection always retains the sink pages and the recent
@@ -16,7 +16,7 @@ use super::page_meta::PageMeta;
 use super::policy::SparsePolicy;
 
 /// Upper bound on `q · k` over every K row the page's statistics cover.
-/// `q` is one `[layers, heads, head_dim]` query-proxy row (the same
+/// `q` is one `[layers, h_kv, head_dim]` query-proxy row (the same
 /// channel plane as the statistics). An empty page scores `-inf`.
 pub fn page_upper_bound(q: &[f32], meta: &PageMeta) -> f32 {
     assert_eq!(q.len(), meta.k_min().len(), "query plane mismatch");
@@ -28,6 +28,19 @@ pub fn page_upper_bound(q: &[f32], meta: &PageMeta) -> f32 {
         s += (qd * lo).max(qd * hi);
     }
     s
+}
+
+/// Per-group aggregate of [`page_upper_bound`] under GQA/MQA: a KV head's
+/// page serves a whole group of query heads, so its score is the **max**
+/// of the bound over every member query-proxy row. Ranking by this
+/// aggregate never drops the page holding *any* member's best key — the
+/// same admissibility the single-query bound gives, lifted to the group.
+/// An empty group (or an empty page) scores `-inf`.
+pub fn group_upper_bound<Q: AsRef<[f32]>>(queries: &[Q], meta: &PageMeta) -> f32 {
+    queries
+        .iter()
+        .map(|q| page_upper_bound(q.as_ref(), meta))
+        .fold(f32::NEG_INFINITY, f32::max)
 }
 
 /// Pick the page ordinals (indices into a sequence's page list) to stream
@@ -163,6 +176,28 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn group_bound_is_the_max_over_member_queries() {
+        let mut rng = Rng::new(11);
+        let d = 6;
+        let rows: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(d)).collect();
+        let m = meta_of(&rows);
+        let members: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(d)).collect();
+        let agg = group_upper_bound(&members, &m);
+        let mut best = f32::NEG_INFINITY;
+        for q in &members {
+            let b = page_upper_bound(q, &m);
+            assert!(b <= agg, "member bound {b} exceeds aggregate {agg}");
+            best = best.max(b);
+        }
+        assert_eq!(agg, best);
+        // One member degenerates to the single-query bound; an empty
+        // group is -inf (no query can score the page).
+        assert_eq!(group_upper_bound(&members[..1], &m), page_upper_bound(&members[0], &m));
+        let none: [Vec<f32>; 0] = [];
+        assert_eq!(group_upper_bound(&none, &m), f32::NEG_INFINITY);
     }
 
     #[test]

@@ -11,6 +11,11 @@
 //! sparse selector scores against: after every operation the
 //! incrementally-maintained metadata must match a from-scratch recompute
 //! over each live page's filled rows ([`PagedKvCache::validate_page_meta`]).
+//!
+//! The cache's head plane is the **KV-head** plane (GQA/MQA stores one
+//! stream per kv head, not per query head), so every suite sweeps
+//! `h_kv ∈ {1, h/4, h}` for a 4-query-head model — page accounting must
+//! be indifferent to the grouping.
 
 use std::collections::HashMap;
 
@@ -19,17 +24,18 @@ use lean_attention::util::rng::Rng;
 use lean_attention::util::testing::prop_check;
 
 const LAYERS: usize = 1;
-const HEADS: usize = 2;
 const DH: usize = 4;
 const PAGE_TOKENS: usize = 4;
 const PAGES: usize = 24;
+/// KV-head planes under test: MQA, grouped (h/4), ungrouped (h_kv == h).
+const KV_HEAD_PLANES: [usize; 3] = [1, 2, 4];
 
-fn new_cache() -> PagedKvCache {
-    PagedKvCache::new(LAYERS, HEADS, DH, PAGE_TOKENS, PAGES)
+fn new_cache(kv_heads: usize) -> PagedKvCache {
+    PagedKvCache::new(LAYERS, kv_heads, DH, PAGE_TOKENS, PAGES)
 }
 
-fn kv(rng: &mut Rng, tokens: usize) -> (Vec<f32>, Vec<f32>) {
-    let n = LAYERS * HEADS * tokens * DH;
+fn kv(rng: &mut Rng, kv_heads: usize, tokens: usize) -> (Vec<f32>, Vec<f32>) {
+    let n = LAYERS * kv_heads * tokens * DH;
     (rng.normal_vec(n), rng.normal_vec(n))
 }
 
@@ -81,7 +87,8 @@ fn check_invariants(
 #[test]
 fn random_workload_never_leaks_or_double_frees() {
     prop_check("kv cache refcount invariants", 40, |rng| {
-        let mut cache = new_cache();
+        let kv_heads = *rng.choose(&KV_HEAD_PLANES);
+        let mut cache = new_cache(kv_heads);
         let mut active: Vec<u64> = Vec::new();
         let mut retains: Vec<usize> = Vec::new();
         let mut next_id = 0u64;
@@ -91,7 +98,7 @@ fn random_workload_never_leaks_or_double_frees() {
                 // Plain insert.
                 0 => {
                     let len = rng.urange(1, 3 * PAGE_TOKENS + 2);
-                    let (k, v) = kv(rng, len);
+                    let (k, v) = kv(rng, kv_heads, len);
                     let id = next_id;
                     next_id += 1;
                     if cache.insert_seq(id, &k, &v, len).is_ok() {
@@ -114,7 +121,7 @@ fn random_workload_never_leaks_or_double_frees() {
                     if shared.is_empty() && suffix == 0 {
                         continue;
                     }
-                    let (k, v) = kv(rng, suffix);
+                    let (k, v) = kv(rng, kv_heads, suffix);
                     let id = next_id;
                     next_id += 1;
                     if cache
@@ -127,7 +134,7 @@ fn random_workload_never_leaks_or_double_frees() {
                 // Append (may copy-on-write if the tail page is shared).
                 2 if !active.is_empty() => {
                     let id = *rng.choose(&active);
-                    let (k, v) = kv(rng, 1);
+                    let (k, v) = kv(rng, kv_heads, 1);
                     let _ = cache.append_token(id, &k, &v);
                 }
                 // Free a sequence.
@@ -207,14 +214,15 @@ fn gather_shared_equals_flat_gather_on_random_sharing() {
     // gather composed back into dense views must equal the flat gather
     // bit-for-bit, while never materializing more bytes than it.
     prop_check("gather_shared == gather", 40, |rng| {
-        let mut cache = new_cache();
+        let kv_heads = *rng.choose(&KV_HEAD_PLANES);
+        let mut cache = new_cache(kv_heads);
         let mut active: Vec<u64> = Vec::new();
         let mut next_id = 0u64;
         for _ in 0..20 {
             match rng.urange(0, 5) {
                 0 => {
                     let len = rng.urange(1, 3 * PAGE_TOKENS);
-                    let (k, v) = kv(rng, len);
+                    let (k, v) = kv(rng, kv_heads, len);
                     if cache.insert_seq(next_id, &k, &v, len).is_ok() {
                         active.push(next_id);
                     }
@@ -230,7 +238,7 @@ fn gather_shared_equals_flat_gather_on_random_sharing() {
                     let shared: Vec<usize> =
                         cache.seq_pages(donor).unwrap()[..take].to_vec();
                     let suffix = rng.urange(0, 2 * PAGE_TOKENS);
-                    let (k, v) = kv(rng, suffix);
+                    let (k, v) = kv(rng, kv_heads, suffix);
                     if cache
                         .insert_seq_shared(next_id, &shared, &k, &v, suffix)
                         .is_ok()
@@ -241,7 +249,7 @@ fn gather_shared_equals_flat_gather_on_random_sharing() {
                 }
                 2 if !active.is_empty() => {
                     let id = *rng.choose(&active);
-                    let (k, v) = kv(rng, 1);
+                    let (k, v) = kv(rng, kv_heads, 1);
                     let _ = cache.append_token(id, &k, &v);
                 }
                 3 if !active.is_empty() => {
@@ -274,7 +282,7 @@ fn gather_shared_equals_flat_gather_on_random_sharing() {
             ctx = ctx.max(cache.seq_len(id).unwrap());
         }
         let ctx = ctx.next_multiple_of(PAGE_TOKENS);
-        let n = LAYERS * slots.len() * HEADS * ctx * DH;
+        let n = LAYERS * slots.len() * kv_heads * ctx * DH;
         let (mut kf, mut vf) = (vec![0.0; n], vec![0.0; n]);
         cache
             .gather(&slots, ctx, &mut kf, &mut vf)
@@ -308,14 +316,15 @@ fn truncate_fork_append_interleavings_preserve_sibling_views() {
     // — truncation never mutates shared pages, and appends into a still-
     // shared tail copy-on-write first.
     prop_check("truncate x fork x append keeps sibling views", 30, |rng| {
-        let mut cache = new_cache();
+        let kv_heads = *rng.choose(&KV_HEAD_PLANES);
+        let mut cache = new_cache(kv_heads);
         let len = rng.urange(1, 3 * PAGE_TOKENS);
-        let (k, v) = kv(rng, len);
+        let (k, v) = kv(rng, kv_heads, len);
         cache.insert_seq(0, &k, &v, len).map_err(|e| e.to_string())?;
         cache.fork_seq(0, 1).map_err(|e| e.to_string())?;
 
         let ctx = 4 * PAGE_TOKENS;
-        let n = LAYERS * HEADS * ctx * DH;
+        let n = LAYERS * kv_heads * ctx * DH;
         let (mut k0, mut v0) = (vec![0.0; n], vec![0.0; n]);
         cache
             .gather(&[Some(1)], ctx, &mut k0, &mut v0)
@@ -324,7 +333,7 @@ fn truncate_fork_append_interleavings_preserve_sibling_views() {
         let (mut kx, mut vx) = (vec![0.0; n], vec![0.0; n]);
         for step in 0..12 {
             if rng.chance(0.5) {
-                let (nk, nv) = kv(rng, 1);
+                let (nk, nv) = kv(rng, kv_heads, 1);
                 let _ = cache.append_token(0, &nk, &nv);
             } else {
                 let plen = cache.seq_len(0).unwrap();
@@ -352,62 +361,68 @@ fn truncate_fork_append_interleavings_preserve_sibling_views() {
 
 #[test]
 fn eviction_frees_only_at_refcount_zero() {
-    let mut rng = Rng::new(9);
-    let mut cache = new_cache();
-    // Seq 1 owns two full pages; an index-style retain pins both.
-    let (k, v) = kv(&mut rng, 2 * PAGE_TOKENS);
-    cache.insert_seq(1, &k, &v, 2 * PAGE_TOKENS).unwrap();
-    let pages: Vec<usize> = cache.seq_pages(1).unwrap().to_vec();
-    for &p in &pages {
-        cache.retain_page(p).unwrap();
-        assert_eq!(cache.page_ref(p), 2);
+    for kv_heads in KV_HEAD_PLANES {
+        let mut rng = Rng::new(9);
+        let mut cache = new_cache(kv_heads);
+        // Seq 1 owns two full pages; an index-style retain pins both.
+        let (k, v) = kv(&mut rng, kv_heads, 2 * PAGE_TOKENS);
+        cache.insert_seq(1, &k, &v, 2 * PAGE_TOKENS).unwrap();
+        let pages: Vec<usize> = cache.seq_pages(1).unwrap().to_vec();
+        for &p in &pages {
+            cache.retain_page(p).unwrap();
+            assert_eq!(cache.page_ref(p), 2);
+        }
+
+        // "Evicting" (releasing the index reference) while the sequence
+        // is alive must not free the pages.
+        assert!(!cache.release_page(pages[0]).unwrap());
+        assert_eq!(cache.page_ref(pages[0]), 1);
+        assert_eq!(cache.free_pages(), PAGES - 2);
+
+        // Once the sequence is gone, the remaining reference is the last
+        // holder: releasing it frees the page.
+        cache.free_seq(1);
+        assert_eq!(cache.free_pages(), PAGES - 1); // pages[1] index-held
+        assert!(cache.release_page(pages[1]).unwrap());
+        assert_eq!(cache.free_pages(), PAGES);
     }
-
-    // "Evicting" (releasing the index reference) while the sequence is
-    // alive must not free the pages.
-    assert!(!cache.release_page(pages[0]).unwrap());
-    assert_eq!(cache.page_ref(pages[0]), 1);
-    assert_eq!(cache.free_pages(), PAGES - 2);
-
-    // Once the sequence is gone, the remaining reference is the last
-    // holder: releasing it frees the page.
-    cache.free_seq(1);
-    assert_eq!(cache.free_pages(), PAGES - 1); // pages[1] still index-held
-    assert!(cache.release_page(pages[1]).unwrap());
-    assert_eq!(cache.free_pages(), PAGES);
 }
 
 #[test]
 fn cow_keeps_both_views_consistent_under_shared_partial_pages() {
-    let mut rng = Rng::new(11);
-    let mut cache = new_cache();
-    // Donor with 1.5 pages; a fork retains its partial tail page.
-    let len = PAGE_TOKENS + PAGE_TOKENS / 2;
-    let (k, v) = kv(&mut rng, len);
-    cache.insert_seq(1, &k, &v, len).unwrap();
-    let tail = *cache.seq_pages(1).unwrap().last().unwrap();
-    cache.retain_page(tail).unwrap();
+    for kv_heads in KV_HEAD_PLANES {
+        let mut rng = Rng::new(11);
+        let mut cache = new_cache(kv_heads);
+        // Donor with 1.5 pages; a fork retains its partial tail page.
+        let len = PAGE_TOKENS + PAGE_TOKENS / 2;
+        let (k, v) = kv(&mut rng, kv_heads, len);
+        cache.insert_seq(1, &k, &v, len).unwrap();
+        let tail = *cache.seq_pages(1).unwrap().last().unwrap();
+        cache.retain_page(tail).unwrap();
 
-    // Append: the tail is shared, so the cache must clone it.
-    let (nk, nv) = kv(&mut rng, 1);
-    let cow = cache.append_token(1, &nk, &nv).unwrap();
-    assert!(cow);
-    let new_tail = *cache.seq_pages(1).unwrap().last().unwrap();
-    assert_ne!(new_tail, tail);
-    assert_eq!(cache.page_ref(tail), 1, "fork still owns the original");
+        // Append: the tail is shared, so the cache must clone it.
+        let (nk, nv) = kv(&mut rng, kv_heads, 1);
+        let cow = cache.append_token(1, &nk, &nv).unwrap();
+        assert!(cow);
+        let new_tail = *cache.seq_pages(1).unwrap().last().unwrap();
+        assert_ne!(new_tail, tail);
+        assert_eq!(cache.page_ref(tail), 1, "fork still owns the original");
 
-    // The sequence's gathered view has the old rows plus the new token.
-    let ctx = 2 * PAGE_TOKENS;
-    let mut ko = vec![0.0; LAYERS * HEADS * ctx * DH];
-    let mut vo = vec![0.0; ko.len()];
-    cache.gather(&[Some(1)], ctx, &mut ko, &mut vo).unwrap();
-    // layer 0, head 0: original token `len - 1` then the appended token.
-    let row = |t: usize| t * DH;
-    let orig = (len - 1) * DH;
-    assert_eq!(&ko[row(len - 1)..row(len - 1) + DH], &k[orig..orig + DH]);
-    assert_eq!(&ko[row(len)..row(len) + DH], &nk[..DH]);
+        // The sequence's gathered view has the old rows plus the new
+        // token.
+        let ctx = 2 * PAGE_TOKENS;
+        let mut ko = vec![0.0; LAYERS * kv_heads * ctx * DH];
+        let mut vo = vec![0.0; ko.len()];
+        cache.gather(&[Some(1)], ctx, &mut ko, &mut vo).unwrap();
+        // layer 0, kv head 0: original token `len - 1`, then the
+        // appended token.
+        let row = |t: usize| t * DH;
+        let orig = (len - 1) * DH;
+        assert_eq!(&ko[row(len - 1)..row(len - 1) + DH], &k[orig..orig + DH]);
+        assert_eq!(&ko[row(len)..row(len) + DH], &nk[..DH]);
 
-    cache.free_seq(1);
-    cache.release_page(tail).unwrap();
-    assert_eq!(cache.free_pages(), PAGES);
+        cache.free_seq(1);
+        cache.release_page(tail).unwrap();
+        assert_eq!(cache.free_pages(), PAGES);
+    }
 }

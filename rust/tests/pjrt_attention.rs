@@ -107,6 +107,7 @@ fn lean_partial_path_matches_fused_kernel() {
     // matching the ragged per-group lengths of the raw tensors.
     let problem = DecodeProblem {
         heads: 1,
+        kv_heads: 1,
         head_dim: 64,
         ctx_lens: case.lens.clone(),
         tile: 256,
@@ -125,6 +126,7 @@ fn lean_path_all_strategies_match_oracle() {
     let want = case.oracle();
     let problem = DecodeProblem {
         heads: 1,
+        kv_heads: 1,
         head_dim: 64,
         ctx_lens: case.lens.clone(),
         tile: 256,
@@ -190,10 +192,10 @@ fn lean_sparse_matches_host_twin_and_restricted_oracle() {
     let sels: Vec<Vec<usize>> = vec![vec![0, 2, 3], vec![0, 1, 3]];
 
     let (o, lse) = exec
-        .lean_sparse(&q, &k, &v, &lens, heads, n, d, pt, &sels, 256, 13)
+        .lean_sparse(&q, &k, &v, &lens, heads, heads, n, d, pt, &sels, 256, 13)
         .expect("lean sparse");
     let (o_host, lse_host) =
-        lean_sparse_host(&q, &k, &v, &lens, heads, n, d, pt, &sels, 256, 13, 8)
+        lean_sparse_host(&q, &k, &v, &lens, heads, heads, n, d, pt, &sels, 256, 13, 8)
             .expect("host twin");
     assert_allclose(&o, &o_host, 3e-4, 3e-4, "pjrt vs host twin");
     assert_allclose(&lse, &lse_host, 1e-3, 1e-3, "lse pjrt vs host twin");

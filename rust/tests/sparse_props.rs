@@ -2,8 +2,8 @@
 //!
 //! * The sparse lean executor ([`lean_sparse_host`]) is **exact** against
 //!   dense attention restricted to the selected pages, for random shapes,
-//!   lengths and selections — the oracle behind the engine's sparse
-//!   decode gather.
+//!   lengths, selections **and GQA groupings** (`h_kv` sweeps MQA through
+//!   ungrouped) — the oracle behind the engine's sparse decode gather.
 //! * Degenerate sparsity dissolves: a budget covering the context selects
 //!   every page, the selected-page gather reproduces the dense gather
 //!   bit-for-bit under arbitrary fork/COW/truncate churn, and the host
@@ -28,16 +28,19 @@ use lean_attention::util::testing::{max_abs_err, prop_check};
 fn sparse_lean_executor_matches_the_restricted_dense_oracle() {
     prop_check("lean_sparse_host == oracle | selected pages", 30, |rng| {
         let batch = rng.urange(1, 4);
-        let heads = rng.urange(1, 3);
+        // GQA plane: `gs` query heads share each kv head (gs = 1 is the
+        // ungrouped layout, kv_heads = 1 with gs > 1 is MQA).
+        let kv_heads = rng.urange(1, 3);
+        let gs = *rng.choose(&[1usize, 1, 2, 4]);
+        let heads = kv_heads * gs;
         let d = *rng.choose(&[4usize, 8]);
         let pt = *rng.choose(&[4usize, 8]);
         let n = rng.urange(1, 7) * pt;
         let lens: Vec<u32> =
             (0..batch).map(|_| rng.urange(1, n + 1) as u32).collect();
-        let g = batch * heads;
-        let q = rng.normal_vec(g * d);
-        let k = rng.normal_vec(g * n * d);
-        let v = rng.normal_vec(g * n * d);
+        let q = rng.normal_vec(batch * heads * d);
+        let k = rng.normal_vec(batch * kv_heads * n * d);
+        let v = rng.normal_vec(batch * kv_heads * n * d);
         // Random non-empty ascending selections over each lane's pages.
         let mut sels: Vec<Vec<usize>> = Vec::new();
         for &len in &lens {
@@ -53,21 +56,24 @@ fn sparse_lean_executor_matches_the_restricted_dense_oracle() {
         let slots = rng.urange(1, 20);
         let batch_rows = rng.urange(1, 9);
         let (o, _) = lean_sparse_host(
-            &q, &k, &v, &lens, heads, n, d, pt, &sels, tile, slots, batch_rows,
+            &q, &k, &v, &lens, heads, kv_heads, n, d, pt, &sels, tile, slots,
+            batch_rows,
         )
         .map_err(|e| e.to_string())?;
 
         // Independent oracle: compact by token index, exact attention,
-        // one (sequence, head) group at a time.
+        // one (sequence, query head) output at a time — each reading the
+        // KV stream of its kv head (`h / gs`).
         for s in 0..batch {
             let idx = selected_token_indices(lens[s] as usize, pt, &sels[s]);
             let n_sel = idx.len();
             for h in 0..heads {
                 let gi = s * heads + h;
+                let ki = s * kv_heads + h / gs;
                 let mut kc = vec![0.0f32; n_sel.max(1) * d];
                 let mut vc = vec![0.0f32; kc.len()];
                 for (j, &t) in idx.iter().enumerate() {
-                    let src = (gi * n + t) * d;
+                    let src = (ki * n + t) * d;
                     kc[j * d..(j + 1) * d].copy_from_slice(&k[src..src + d]);
                     vc[j * d..(j + 1) * d].copy_from_slice(&v[src..src + d]);
                 }
@@ -95,13 +101,19 @@ fn sparse_lean_executor_matches_the_restricted_dense_oracle() {
 
 const PT: usize = 4;
 const PAGES: usize = 24;
+/// KV-head planes the churn suites sweep: MQA, grouped (h/4 for a
+/// 4-query-head model), and the ungrouped h_kv == h plane.
+const KV_HEAD_PLANES: [usize; 3] = [1, 2, 4];
 
-fn churned_cache(rng: &mut Rng) -> (PagedKvCache, Vec<u64>) {
-    let mut cache = PagedKvCache::new(1, 2, 4, PT, PAGES);
+fn churned_cache(
+    rng: &mut Rng,
+    kv_heads: usize,
+) -> Result<(PagedKvCache, Vec<u64>), String> {
+    let mut cache = PagedKvCache::new(1, kv_heads, 4, PT, PAGES);
     let mut active: Vec<u64> = Vec::new();
     let mut next_id = 0u64;
-    let kv = |rng: &mut Rng, tokens: usize| {
-        let n = 2 * tokens * 4;
+    let kv = move |rng: &mut Rng, tokens: usize| {
+        let n = kv_heads * tokens * 4;
         (rng.normal_vec(n), rng.normal_vec(n))
     };
     for _ in 0..24 {
@@ -149,14 +161,18 @@ fn churned_cache(rng: &mut Rng) -> (PagedKvCache, Vec<u64>) {
             }
             _ => {}
         }
+        // Churn must never desynchronize the sparse selector's per-page
+        // key statistics — at any kv-head granularity.
+        cache.validate_page_meta().map_err(|e| e.to_string())?;
     }
-    (cache, active)
+    Ok((cache, active))
 }
 
 #[test]
 fn covering_selection_gathers_bit_identically_to_dense() {
     prop_check("full selection == dense gather", 30, |rng| {
-        let (cache, active) = churned_cache(rng);
+        let kv_heads = *rng.choose(&KV_HEAD_PLANES);
+        let (cache, active) = churned_cache(rng, kv_heads)?;
         let live: Vec<u64> = active
             .iter()
             .copied()
@@ -188,7 +204,7 @@ fn covering_selection_gathers_bit_identically_to_dense() {
             sels.push(sel);
         }
         let ctx = ctx.next_multiple_of(PT);
-        let n = slots.len() * 2 * ctx * 4;
+        let n = slots.len() * kv_heads * ctx * 4;
         let (mut kf, mut vf) = (vec![0.0f32; n], vec![0.0f32; n]);
         cache.gather(&slots, ctx, &mut kf, &mut vf).map_err(|e| e.to_string())?;
         let sg = cache.gather_selected(&slots, &sels).map_err(|e| e.to_string())?;
