@@ -14,6 +14,8 @@
 
 use anyhow::Result;
 
+use crate::obs::attrib::{account_cascade_problem, WorkAccounting};
+use crate::obs::benchlog::BenchReport;
 use crate::partition::cascade::{
     build_cascade_plan, CascadeProblem, CascadeTensors, PrefixGroup,
 };
@@ -55,6 +57,10 @@ pub struct ExecComparison {
     pub max_err: f32,
     /// Whether the partials ran through the PJRT artifact (vs host math).
     pub pjrt: bool,
+    /// Exact work of the flat posing (attrib-accounted).
+    pub work_flat: WorkAccounting,
+    /// Exact work of the cascade posing (attrib-accounted).
+    pub work_cascade: WorkAccounting,
 }
 
 impl ExecComparison {
@@ -63,6 +69,29 @@ impl ExecComparison {
             return 0.0;
         }
         1.0 - self.cascade_kv_bytes as f64 / self.flat_kv_bytes as f64
+    }
+
+    /// Machine-readable telemetry for `--json-out` / the baseline gate.
+    /// Counts and work sections are deterministic for a given shape and
+    /// seed; timings go into the ungated `info` section.
+    pub fn bench_report(&self, seed: u64, smoke: bool) -> BenchReport {
+        let mut r = BenchReport::new("cascade-exec", seed, smoke);
+        r.count("batch", self.case.batch as u64);
+        r.count("prefix_tokens", u64::from(self.case.prefix));
+        r.count("suffix_tokens", u64::from(self.case.suffix));
+        r.count("heads", self.case.heads as u64);
+        r.count("head_dim", self.case.head_dim as u64);
+        r.count("tile", self.case.tile as u64);
+        r.count("flat_kv_bytes", self.flat_kv_bytes as u64);
+        r.count("cascade_kv_bytes", self.cascade_kv_bytes as u64);
+        r.work("flat", self.work_flat);
+        r.work("cascade", self.work_cascade);
+        r.measure("bytes_saved_fraction", self.bytes_saved_fraction());
+        r.measure("max_err", f64::from(self.max_err));
+        r.info("flat_us_p50", self.flat_us.p50);
+        r.info("cascade_us_p50", self.cascade_us.p50);
+        r.info("pjrt", if self.pjrt { 1.0 } else { 0.0 });
+        r
     }
 }
 
@@ -156,6 +185,11 @@ pub fn compare_exec(
         let _ = std::hint::black_box(run_cascade());
     });
 
+    let work_cascade = account_cascade_problem(&p);
+    let work_flat = account_cascade_problem(&pf);
+    debug_assert_eq!(work_cascade.gathered_kv_bytes, cascade_kv_bytes as u64);
+    debug_assert_eq!(work_flat.gathered_kv_bytes, flat_kv_bytes as u64);
+
     Ok(ExecComparison {
         case,
         flat_kv_bytes,
@@ -164,6 +198,8 @@ pub fn compare_exec(
         cascade_us: Summary::of(&cascade_samples),
         max_err,
         pjrt: exec.is_some(),
+        work_flat,
+        work_cascade,
     })
 }
 
@@ -196,5 +232,12 @@ mod tests {
         assert_eq!(c.cascade_kv_bytes, (64 + 3 * 32) * 2 * token);
         assert!(!c.pjrt);
         assert!((c.bytes_saved_fraction() - (1.0 - 160.0 / 288.0)).abs() < 1e-12);
+        // Work accounting agrees with the rolled byte counters, and the
+        // telemetry report is schema-valid.
+        assert_eq!(c.work_flat.gathered_kv_bytes, c.flat_kv_bytes as u64);
+        assert_eq!(c.work_cascade.gathered_kv_bytes, c.cascade_kv_bytes as u64);
+        let rep = c.bench_report(7, true);
+        crate::obs::benchlog::validate_bench_report(&rep.to_json()).unwrap();
+        assert_eq!(rep.name, "cascade-exec");
     }
 }

@@ -15,6 +15,8 @@
 use anyhow::{ensure, Result};
 
 use crate::attention::attention_host;
+use crate::obs::attrib::{account_decode_problem, WorkAccounting};
+use crate::obs::benchlog::BenchReport;
 use crate::partition::host_exec::{execute_plan_host, HostTensors};
 use crate::partition::plan::{build_plan, DecodeProblem, Plan, Strategy};
 use crate::util::stats::Summary;
@@ -84,16 +86,43 @@ pub struct GqaComparison {
     pub grouped_err: f32,
     /// Worst-step max abs error of the dense stream vs the same oracle.
     pub dense_err: f32,
+    /// Exact work of the grouped posing, summed over the decode loop.
+    pub work_grouped: WorkAccounting,
+    /// Exact work of the dense per-query-head posing over the same loop.
+    pub work_dense: WorkAccounting,
 }
 
 impl GqaComparison {
-    /// Dense-over-grouped gathered-KV byte ratio — `h / h_kv` up to tile
-    /// padding.
+    /// Dense-over-grouped gathered-KV byte ratio — exactly `h / h_kv`.
     pub fn bytes_ratio(&self) -> f64 {
         if self.grouped_kv_bytes == 0 {
             return 0.0;
         }
         self.dense_kv_bytes as f64 / self.grouped_kv_bytes as f64
+    }
+
+    /// Machine-readable telemetry for `--json-out` / the baseline gate.
+    /// Counts, work sections and the error maxima are deterministic for
+    /// a given shape and seed; only the wall-clock columns vary.
+    pub fn bench_report(&self, seed: u64, smoke: bool) -> BenchReport {
+        let mut r = BenchReport::new("gqa", seed, smoke);
+        r.count("batch", self.case.batch as u64);
+        r.count("heads", self.case.heads as u64);
+        r.count("kv_heads", self.case.kv_heads as u64);
+        r.count("ctx_tokens", self.case.ctx as u64);
+        r.count("steps", self.case.steps as u64);
+        r.count("head_dim", self.case.head_dim as u64);
+        r.count("tile", self.case.tile as u64);
+        r.count("grouped_kv_bytes", self.grouped_kv_bytes);
+        r.count("dense_kv_bytes", self.dense_kv_bytes);
+        r.work("grouped", self.work_grouped);
+        r.work("dense", self.work_dense);
+        r.measure("bytes_ratio", self.bytes_ratio());
+        r.measure("grouped_err", f64::from(self.grouped_err));
+        r.measure("dense_err", f64::from(self.dense_err));
+        r.info("grouped_us_p50", self.grouped_us.p50);
+        r.info("dense_us_p50", self.dense_us.p50);
+        r
     }
 }
 
@@ -109,11 +138,8 @@ struct PreparedStep {
     oracle: Vec<f32>,
 }
 
-/// KV bytes a plan streams: every LeanTile moves `tile × d` K rows and as
-/// many V rows (f32 host storage).
-fn plan_kv_bytes(problem: &DecodeProblem) -> u64 {
-    problem.total_tiles() * (2 * problem.tile * problem.head_dim * 4) as u64
-}
+// (KV-byte accounting lives in `crate::obs::attrib` — exact context
+// bytes per KV stream, shared with the engine counters and simulator.)
 
 /// Run one grouped-vs-dense decode-loop comparison.
 pub fn compare_gqa(case: GqaCase, iters: usize, seed: u64) -> Result<GqaComparison> {
@@ -128,8 +154,8 @@ pub fn compare_gqa(case: GqaCase, iters: usize, seed: u64) -> Result<GqaComparis
 
     let d = case.head_dim;
     let mut steps = Vec::with_capacity(case.steps);
-    let mut grouped_kv_bytes = 0u64;
-    let mut dense_kv_bytes = 0u64;
+    let mut work_grouped = WorkAccounting::default();
+    let mut work_dense = WorkAccounting::default();
     for s in 0..case.steps {
         let ctx = case.ctx + s * case.tile;
         let gp = DecodeProblem::uniform(case.batch, case.heads, ctx, d)
@@ -155,8 +181,8 @@ pub fn compare_gqa(case: GqaCase, iters: usize, seed: u64) -> Result<GqaComparis
         grouped_plan.validate(&gp)?;
         let dense_plan = build_plan(&dp, Strategy::StreamK, case.slots);
         dense_plan.validate(&dp)?;
-        grouped_kv_bytes += plan_kv_bytes(&gp);
-        dense_kv_bytes += plan_kv_bytes(&dp);
+        work_grouped += account_decode_problem(&gp);
+        work_dense += account_decode_problem(&dp);
         steps.push(PreparedStep {
             grouped_problem: gp,
             grouped_plan,
@@ -211,12 +237,14 @@ pub fn compare_gqa(case: GqaCase, iters: usize, seed: u64) -> Result<GqaComparis
 
     Ok(GqaComparison {
         case,
-        grouped_kv_bytes,
-        dense_kv_bytes,
+        grouped_kv_bytes: work_grouped.gathered_kv_bytes,
+        dense_kv_bytes: work_dense.gathered_kv_bytes,
         grouped_us: Summary::of(&grouped_samples),
         dense_us: Summary::of(&dense_samples),
         grouped_err,
         dense_err,
+        work_grouped,
+        work_dense,
     })
 }
 
@@ -247,7 +275,27 @@ mod tests {
                 (got - want).abs() <= 0.1 * want,
                 "kv {kv_heads}: bytes ratio {got}, want ~{want}"
             );
+            // The byte counters *are* the attrib work sections now, and
+            // grouping never changes the softmax flop count (every query
+            // head still walks its full context).
+            assert_eq!(c.grouped_kv_bytes, c.work_grouped.gathered_kv_bytes);
+            assert_eq!(c.dense_kv_bytes, c.work_dense.gathered_kv_bytes);
+            assert_eq!(c.work_grouped.softmax_flops, c.work_dense.softmax_flops);
         }
+    }
+
+    #[test]
+    fn same_seed_runs_emit_identical_reports() {
+        // The baseline gate compares counts and work bit-exactly and the
+        // error maxima are pure float functions of the seed, so two runs
+        // must agree on every gated section.
+        let a = compare_gqa(GqaCase::smoke(), 1, 17).unwrap().bench_report(17, true);
+        let b = compare_gqa(GqaCase::smoke(), 1, 17).unwrap().bench_report(17, true);
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.work, b.work);
+        assert_eq!(a.measures, b.measures);
+        crate::obs::benchlog::validate_bench_report(&a.to_json()).unwrap();
+        assert_eq!(a.name, "gqa");
     }
 
     #[test]

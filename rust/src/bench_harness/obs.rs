@@ -21,6 +21,8 @@
 
 use anyhow::{ensure, Result};
 
+use crate::obs::attrib::{account_cascade_problem, WorkAccounting};
+use crate::obs::benchlog::BenchReport;
 use crate::obs::{
     validate_chrome_trace, Attrs, Phase, RequestTimeline, SloReport,
     TimelineRecorder, Tracer,
@@ -115,6 +117,9 @@ pub struct ObsReport {
     /// Min-of-samples overhead of the *enabled* tracer on the same body
     /// (reported, not asserted — enabled tracing is opt-in).
     pub overhead_enabled: f64,
+    /// Exact work of one cascade-body pass (attrib-accounted — the same
+    /// numbers the traced spans carry as `bytes`/`flops` attributes).
+    pub work_body: WorkAccounting,
 }
 
 impl ObsReport {
@@ -135,6 +140,32 @@ impl ObsReport {
         );
         s.push_str(&self.slo.render());
         s
+    }
+
+    /// Machine-readable telemetry for `--json-out` / the baseline gate.
+    /// Event and drop counts are deterministic for a given shape and
+    /// seed (the span stream is a pure function of the workload);
+    /// overheads and SLO timings are machine-dependent `info`.
+    pub fn bench_report(&self, seed: u64, smoke: bool) -> BenchReport {
+        let mut r = BenchReport::new("obs", seed, smoke);
+        r.count("requests", self.case.requests as u64);
+        r.count("batch", self.case.batch as u64);
+        r.count("prefix_tokens", u64::from(self.case.prefix));
+        r.count("suffix_tokens", u64::from(self.case.suffix));
+        r.count("trace_capacity", self.case.trace_capacity as u64);
+        r.count("events", self.events as u64);
+        r.count("dropped", self.dropped);
+        r.work("cascade_body", self.work_body);
+        r.work(
+            "traced_loop",
+            (0..self.case.requests)
+                .fold(WorkAccounting::default(), |acc, _| acc + self.work_body),
+        );
+        r.info("overhead_disabled", self.overhead_disabled);
+        r.info("overhead_enabled", self.overhead_enabled);
+        r.info("slo_attainment", self.slo.attainment);
+        r.info("tokens_per_s", self.slo.tokens_per_s);
+        r
     }
 }
 
@@ -255,6 +286,7 @@ pub fn run_obs(case: ObsCase, seed: u64) -> Result<ObsReport> {
         chrome,
         overhead_disabled,
         overhead_enabled,
+        work_body: account_cascade_problem(&p),
     })
 }
 
@@ -297,5 +329,22 @@ mod tests {
         let r = run_obs(loose(case), 5).expect("obs bench");
         assert_eq!(r.events, 16, "ring holds exactly its capacity");
         assert!(r.dropped > 0, "overflow must be counted");
+    }
+
+    #[test]
+    fn same_seed_runs_emit_identical_work_accounting_sections() {
+        // The baseline gate compares counts and work bit-exactly, so two
+        // runs over the same seed must agree on every gated section —
+        // the span stream (events, drops) included.
+        let a = run_obs(loose(ObsCase::smoke()), 21).expect("first run");
+        let b = run_obs(loose(ObsCase::smoke()), 21).expect("second run");
+        let (ra, rb) = (a.bench_report(21, true), b.bench_report(21, true));
+        assert_eq!(ra.counts, rb.counts);
+        assert_eq!(ra.work, rb.work);
+        crate::obs::benchlog::validate_bench_report(&ra.to_json()).unwrap();
+        assert_eq!(
+            ra.work["traced_loop"].softmax_flops,
+            ra.work["cascade_body"].softmax_flops * a.case.requests as u64
+        );
     }
 }

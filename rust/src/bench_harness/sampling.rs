@@ -21,6 +21,7 @@
 use anyhow::{ensure, Result};
 
 use crate::coordinator::PagedKvCache;
+use crate::obs::benchlog::BenchReport;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::util::timer::sample_us;
@@ -96,6 +97,25 @@ impl SamplingComparison {
             return 0.0;
         }
         1.0 - self.shared_gather_bytes as f64 / self.flat_gather_bytes as f64
+    }
+
+    /// Machine-readable telemetry for `--json-out` / the baseline gate.
+    pub fn bench_report(&self, seed: u64, smoke: bool) -> BenchReport {
+        let mut r = BenchReport::new("sampling", seed, smoke);
+        r.count("siblings", self.case.siblings as u64);
+        r.count("history_tokens", self.case.history as u64);
+        r.count("suffix_tokens", self.case.suffix as u64);
+        r.count("fork_fresh_pages", self.fork_fresh_pages as u64);
+        r.count("cow_copies", self.cow_copies as u64);
+        r.count("flat_gather_bytes", self.flat_gather_bytes as u64);
+        r.count("shared_gather_bytes", self.shared_gather_bytes as u64);
+        r.work("attention_flat", self.attention.work_flat);
+        r.work("attention_cascade", self.attention.work_cascade);
+        r.measure("bytes_saved_fraction", self.bytes_saved_fraction());
+        r.measure("attention_max_err", f64::from(self.attention.max_err));
+        r.info("flat_us_p50", self.flat_us.p50);
+        r.info("shared_us_p50", self.shared_us.p50);
+        r
     }
 }
 
@@ -255,5 +275,8 @@ mod tests {
         assert!(c.shared_gather_bytes < c.flat_gather_bytes);
         assert!(c.attention.cascade_kv_bytes < c.attention.flat_kv_bytes);
         assert!(c.attention.max_err < 1e-3);
+        let rep = c.bench_report(3, true);
+        crate::obs::benchlog::validate_bench_report(&rep.to_json()).unwrap();
+        assert_eq!(rep.counts["cow_copies"], c.cow_copies as u64);
     }
 }

@@ -27,7 +27,10 @@ use anyhow::{ensure, Result};
 
 use crate::attention::attention_host;
 use crate::coordinator::{PagedKvCache, SparseStats};
-use crate::runtime::attention_exec::lean_sparse_host;
+use crate::obs::attrib::{account_cascade_problem, WorkAccounting};
+use crate::obs::benchlog::BenchReport;
+use crate::partition::cascade::CascadeProblem;
+use crate::runtime::attention_exec::{lean_sparse_host, sparse_compact_problem};
 use crate::sampling::{sample_token, seq_rng, SamplingParams};
 use crate::sparse::{selected_token_indices, selected_tokens, SparsePolicy};
 use crate::util::rng::Rng;
@@ -133,6 +136,11 @@ pub struct SparseComparison {
     /// Max abs error of the sparse lean executor vs the dense oracle
     /// restricted to the same selected pages (final state, fresh query).
     pub exec_max_err: f32,
+    /// Exact work of a dense attention posing over the final state.
+    pub work_dense: WorkAccounting,
+    /// Exact work of the selected-page posing (the executor check's
+    /// compact problem, attrib-accounted).
+    pub work_sparse: WorkAccounting,
 }
 
 impl SparseComparison {
@@ -158,6 +166,33 @@ impl SparseComparison {
             return 1.0;
         }
         self.sparse.needle_kept as f64 / self.sparse.needle_chances as f64
+    }
+
+    /// Machine-readable telemetry for `--json-out` / the baseline gate.
+    /// Byte counters and work sections are deterministic for a given
+    /// shape and seed (selection scores depend only on workload keys);
+    /// RNG fingerprints are folded to 32 bits so the counts stay exact
+    /// through the f64-backed JSON layer.
+    pub fn bench_report(&self, seed: u64, smoke: bool) -> BenchReport {
+        let fold32 = |fp: u64| (fp >> 32) ^ (fp & 0xffff_ffff);
+        let mut r = BenchReport::new("sparse", seed, smoke);
+        r.count("seqs", self.case.seqs as u64);
+        r.count("context_tokens", self.case.context as u64);
+        r.count("steps", self.case.steps as u64);
+        r.count("budget_pages", self.case.policy.budget_pages as u64);
+        r.count("dense_gathered_bytes", self.dense.gathered_bytes);
+        r.count("sparse_gathered_bytes", self.sparse.gathered_bytes);
+        r.count("selection_steps", self.sparse.stats.selection_steps as u64);
+        r.count("rng_fingerprint_dense", fold32(self.dense.rng_fingerprint));
+        r.count("rng_fingerprint_sparse", fold32(self.sparse.rng_fingerprint));
+        r.work("exec_dense", self.work_dense);
+        r.work("exec_sparse", self.work_sparse);
+        r.measure("bytes_saved_fraction", self.bytes_saved_fraction());
+        r.measure("needle_recall", self.needle_recall());
+        r.measure("exec_max_err", f64::from(self.exec_max_err));
+        r.info("dense_us_p50", self.dense_us.p50);
+        r.info("sparse_us_p50", self.sparse_us.p50);
+        r
     }
 }
 
@@ -421,6 +456,18 @@ pub fn compare_sparse(
     }
     let exec_max_err = max_abs_err(&o_lean, &o_ref);
 
+    // Work accounting over the final state: the selected-page posing is
+    // exactly the compact problem the sparse executor runs, the dense
+    // twin the same contexts with no selection.
+    let (sp, _) = sparse_compact_problem(
+        &q, &kf, &vf, &lens, h, h, ctx_cap, dh, pt, &sels, case.tile,
+    )?;
+    let work_sparse = account_cascade_problem(&sp);
+    let work_dense = account_cascade_problem(
+        &CascadeProblem::new(h, lens.clone(), dh, Vec::new())?.with_tile(case.tile),
+    );
+    debug_assert!(work_sparse.gathered_kv_bytes <= work_dense.gathered_kv_bytes);
+
     Ok(SparseComparison {
         case,
         dense,
@@ -428,6 +475,8 @@ pub fn compare_sparse(
         dense_us: Summary::of(&dense_samples),
         sparse_us: Summary::of(&sparse_samples),
         exec_max_err,
+        work_dense,
+        work_sparse,
     })
 }
 
@@ -448,6 +497,14 @@ mod tests {
         assert!(c.exec_max_err < 1e-3, "executor err {}", c.exec_max_err);
         assert!(c.sparse.stats.selection_steps > 0);
         assert!(c.sparse.stats.pages_scanned < c.sparse.stats.pages_total);
+        // Selection sheds executor work too, and the telemetry report is
+        // schema-valid with the u64 fingerprints folded into f64-safe
+        // 32-bit counts.
+        assert!(c.work_sparse.gathered_kv_bytes < c.work_dense.gathered_kv_bytes);
+        assert!(c.work_sparse.softmax_flops < c.work_dense.softmax_flops);
+        let rep = c.bench_report(11, true);
+        crate::obs::benchlog::validate_bench_report(&rep.to_json()).unwrap();
+        assert!(rep.counts["rng_fingerprint_sparse"] <= u64::from(u32::MAX));
     }
 
     #[test]

@@ -20,6 +20,8 @@
 use anyhow::{ensure, Result};
 
 use crate::coordinator::PagedKvCache;
+use crate::obs::attrib::{account_cascade_problem, WorkAccounting};
+use crate::obs::benchlog::BenchReport;
 use crate::partition::cascade::build_cascade_plan;
 use crate::partition::multi_query::{MultiQueryInputs, MultiQueryProblem, MultiQuerySeq};
 use crate::runtime::attention_exec::{
@@ -99,6 +101,10 @@ pub struct SpecComparison {
     pub rolled_back_tokens: usize,
     /// COW page clones the eager draft append triggered (shared tail).
     pub cow_copies: usize,
+    /// Exact work of the one multi-query verify pass.
+    pub work_verify: WorkAccounting,
+    /// Exact work of the `k + 1` sequential single-query passes.
+    pub work_sequential: WorkAccounting,
 }
 
 impl SpecComparison {
@@ -108,6 +114,30 @@ impl SpecComparison {
             return 0.0;
         }
         1.0 - self.verify_kv_bytes as f64 / self.sequential_kv_bytes as f64
+    }
+
+    /// Machine-readable telemetry for `--json-out` / the baseline gate.
+    pub fn bench_report(&self, seed: u64, smoke: bool) -> BenchReport {
+        let mut r = BenchReport::new("spec", seed, smoke);
+        r.count("k", self.case.k as u64);
+        r.count("max_new", self.case.max_new as u64);
+        r.count("history_tokens", self.case.history as u64);
+        r.count("verify_passes", self.stats.verify_passes as u64);
+        r.count("drafted", self.stats.drafted as u64);
+        r.count("accepted", self.stats.accepted as u64);
+        r.count("committed", self.stats.committed as u64);
+        r.count("verify_kv_bytes", self.verify_kv_bytes as u64);
+        r.count("sequential_kv_bytes", self.sequential_kv_bytes as u64);
+        r.count("rolled_back_tokens", self.rolled_back_tokens as u64);
+        r.count("cow_copies", self.cow_copies as u64);
+        r.work("verify", self.work_verify);
+        r.work("sequential", self.work_sequential);
+        r.measure("bytes_saved_fraction", self.bytes_saved_fraction());
+        r.measure("acceptance_rate", self.stats.acceptance_rate());
+        r.measure("tokens_per_pass", self.stats.tokens_per_pass());
+        r.info("verify_us_p50", self.verify_us.p50);
+        r.info("sequential_us_p50", self.sequential_us.p50);
+        r
     }
 }
 
@@ -194,6 +224,13 @@ pub fn compare_spec(case: SpecCase, iters: usize, seed: u64) -> Result<SpecCompa
             rolled_kv_bytes(&roll_cascade_tasks(&cp, &plan), case.head_dim)
         })
         .sum();
+    let work_verify = account_cascade_problem(&cp);
+    let work_sequential = steps
+        .iter()
+        .map(|(p, _)| account_cascade_problem(&p.expand()))
+        .fold(WorkAccounting::default(), |a, w| a + w);
+    debug_assert_eq!(work_verify.gathered_kv_bytes, verify_kv_bytes as u64);
+    debug_assert_eq!(work_sequential.gathered_kv_bytes, sequential_kv_bytes as u64);
 
     let verify_samples = sample_us(iters, 0.0, || {
         let _ = lean_multi_query_host(&mq, &inputs, slots, batch_rows).expect("verify pass");
@@ -263,6 +300,8 @@ pub fn compare_spec(case: SpecCase, iters: usize, seed: u64) -> Result<SpecCompa
         sequential_us: Summary::of(&sequential_samples),
         rolled_back_tokens,
         cow_copies,
+        work_verify,
+        work_sequential,
     })
 }
 
@@ -297,6 +336,9 @@ mod tests {
             let c = compare_spec(case, 1, 3).expect("smoke");
             assert!(c.stats.committed > c.stats.verify_passes, "draft {draft}");
             assert!(c.verify_kv_bytes < c.sequential_kv_bytes);
+            assert_eq!(c.work_verify.gathered_kv_bytes, c.verify_kv_bytes as u64);
+            let rep = c.bench_report(3, true);
+            crate::obs::benchlog::validate_bench_report(&rep.to_json()).unwrap();
         }
     }
 

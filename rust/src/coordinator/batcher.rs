@@ -2,6 +2,7 @@
 //! of engine slots; whenever one frees, the next waiting request is
 //! admitted at the following step boundary — no batch-completion barrier.
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 
 use super::request::{Request, RequestId};
@@ -11,8 +12,9 @@ pub struct ContinuousBatcher {
     slots: Vec<Option<RequestId>>,
     waiting: VecDeque<Request>,
     /// High-water mark of the waiting queue — the congestion gauge the
-    /// observability snapshot exports.
-    peak_waiting: usize,
+    /// observability snapshot exports. A `Cell` so the snapshot path
+    /// (`&self`) can take-and-reset it with interval semantics.
+    peak_waiting: Cell<usize>,
 }
 
 impl ContinuousBatcher {
@@ -21,22 +23,34 @@ impl ContinuousBatcher {
         ContinuousBatcher {
             slots: vec![None; num_slots],
             waiting: VecDeque::new(),
-            peak_waiting: 0,
+            peak_waiting: Cell::new(0),
         }
     }
 
     pub fn enqueue(&mut self, r: Request) {
         self.waiting.push_back(r);
-        self.peak_waiting = self.peak_waiting.max(self.waiting.len());
+        self.peak_waiting.set(self.peak_waiting.get().max(self.waiting.len()));
     }
 
     pub fn waiting_len(&self) -> usize {
         self.waiting.len()
     }
 
-    /// Deepest the waiting queue has ever been (monotonic watermark).
+    /// Deepest the waiting queue has been since the last
+    /// [`ContinuousBatcher::take_peak_waiting`] (monotonic in between).
     pub fn peak_waiting(&self) -> usize {
-        self.peak_waiting
+        self.peak_waiting.get()
+    }
+
+    /// Read the watermark and reset it to the *current* queue depth, so
+    /// consecutive observability snapshots report per-interval peaks
+    /// instead of a whole-lifetime maximum (a burst at boot no longer
+    /// pins the gauge forever). Resetting to the live depth — not zero —
+    /// keeps a standing queue visible in every interval.
+    pub fn take_peak_waiting(&self) -> usize {
+        let peak = self.peak_waiting.get();
+        self.peak_waiting.set(self.waiting.len());
+        peak
     }
 
     pub fn active_len(&self) -> usize {
@@ -197,6 +211,34 @@ mod tests {
             b.enqueue(req(i));
         }
         assert_eq!(b.peak_waiting(), 5);
+    }
+
+    #[test]
+    fn take_peak_waiting_resets_to_the_live_depth() {
+        let mut b = ContinuousBatcher::new(1);
+        for i in 1..=3 {
+            b.enqueue(req(i));
+        }
+        b.admit(|_| true); // depth 3 -> 2
+        // First interval saw the burst.
+        assert_eq!(b.take_peak_waiting(), 3);
+        // The reset lands on the live depth, not zero: a standing queue
+        // stays visible in the next interval even with no new arrivals.
+        assert_eq!(b.peak_waiting(), 2);
+        assert_eq!(b.take_peak_waiting(), 2);
+        // Draining between takes lowers the *next* interval's floor...
+        b.release(1);
+        b.admit(|_| true);
+        assert_eq!(b.waiting_len(), 1);
+        // ...but never an already-observed peak: the take still reports
+        // the depth at reset time, then re-floors at the live depth.
+        assert_eq!(b.take_peak_waiting(), 2);
+        assert_eq!(b.take_peak_waiting(), 1);
+        // A new wave raises the interval peak from that floor.
+        for i in 4..6 {
+            b.enqueue(req(i));
+        }
+        assert_eq!(b.take_peak_waiting(), 3);
     }
 
     #[test]

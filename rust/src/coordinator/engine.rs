@@ -34,7 +34,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::obs::{Attrs, MetricsSnapshot, Phase, TimelineRecorder, Tracer};
+use crate::obs::{attrib, Attrs, MetricsSnapshot, Phase, TimelineRecorder, Tracer};
 use crate::partition::cascade::{CascadeProblem, PrefixGroup};
 use crate::partition::plan::{DecodeProblem, Strategy};
 use crate::runtime::{Manifest, ModelRuntime, Runtime};
@@ -424,10 +424,10 @@ impl Engine {
             self.batcher.active_len() as f64,
             "Sequences resident in batch slots.",
         );
-        s.counter(
+        s.gauge(
             "requests_peak_waiting",
-            self.batcher.peak_waiting() as f64,
-            "High-water mark of the admission queue.",
+            self.batcher.take_peak_waiting() as f64,
+            "Peak admission-queue depth since the previous snapshot.",
         );
         s.counter(
             "requests_observed_total",
@@ -1000,12 +1000,20 @@ impl Engine {
                 // ratio isolates pure selection: the cascade dedup of a
                 // shared sink run (which the dense path also enjoys) is
                 // reported by the cascade gather counters, not here.
-                sparse_bytes += compact as u64 * token_bytes;
+                // The count goes through the shared attrib accounting so
+                // bench reports and the simulator price the same bytes.
+                sparse_bytes += attrib::selected_gather_bytes(
+                    len,
+                    self.config.page_tokens,
+                    &sels[bi],
+                    token_bytes as usize,
+                );
                 live_of_slot[bi] = lens.len();
                 lens.push(compact as u32);
                 positions[bi] = compact as i32;
             }
             self.metrics.sparse.gather_bytes_sparse += sparse_bytes;
+            self.metrics.attrib.gather_bytes += sparse_bytes;
             self.tracer.record_since(
                 Phase::Gather,
                 gather_start,
@@ -1041,13 +1049,15 @@ impl Engine {
         let gather_bytes;
         if groups.is_empty() {
             self.cache.gather(slots, c, &mut self.k_buf, &mut self.v_buf)?;
-            let tokens: u64 = slots
+            // Attrib-accounted bytes: same formula the bench reports and
+            // the simulator price (tests pin it to the cache's own count).
+            let live: Vec<u32> = slots
                 .iter()
                 .flatten()
                 .filter_map(|id| self.cache.seq_len(*id))
-                .map(|len| len as u64)
-                .sum();
-            gather_bytes = tokens * self.cache.token_bytes() as u64;
+                .map(|len| len as u32)
+                .collect();
+            gather_bytes = attrib::flat_gather_bytes(&live, self.cache.token_bytes());
         } else {
             let sg = self.cache.gather_shared(slots)?;
             sg.compose_dense(c, &mut self.k_buf, &mut self.v_buf)?;
@@ -1055,10 +1065,21 @@ impl Engine {
             self.metrics.gather_bytes_flat += sg.flat_bytes as u64;
             self.metrics.gather_bytes_shared += sg.shared_bytes as u64;
             gather_bytes = sg.shared_bytes as u64;
+            // gather_shared's physical dedup must equal the attrib
+            // prediction over the step's detected prefix groups.
+            debug_assert_eq!(
+                attrib::flat_gather_bytes(&lens, self.cache.token_bytes()),
+                sg.flat_bytes as u64,
+            );
+            debug_assert_eq!(
+                attrib::shared_gather_bytes(&lens, &groups, self.cache.token_bytes()),
+                sg.shared_bytes as u64,
+            );
         }
         // The gather moved kv-head-granular planes; the dense baseline
         // (one KV head per query head) is group_size times larger.
         self.metrics.gqa.record_gather(gather_bytes);
+        self.metrics.attrib.gather_bytes += gather_bytes;
         self.tracer.record_since(
             Phase::Gather,
             gather_start,
@@ -1103,10 +1124,21 @@ impl Engine {
         self.metrics.decode_steps += 1;
         self.metrics.step_us.record(step_us);
         let lanes = slots.iter().flatten().count();
+        // Work-accounting trace attr: flops are tile-independent, so the
+        // span agrees with the projection's plan accounting exactly.
+        let exec_flops = (self.tracer.is_enabled() && !views.lens.is_empty()).then(|| {
+            let p = DecodeProblem::ragged(
+                self.model.art.n_heads,
+                views.lens.clone(),
+                self.model.art.head_dim,
+            )
+            .with_kv_heads(self.model.art.n_kv_heads);
+            attrib::account_decode_problem(&p).softmax_flops
+        });
         self.tracer.record_since(
             Phase::LeanExec,
             exec_start,
-            Attrs { k: Some(lanes), ..Default::default() },
+            Attrs { k: Some(lanes), flops: exec_flops, ..Default::default() },
         );
 
         if self.config.project_hardware {
@@ -1470,6 +1502,9 @@ impl Engine {
             self.model.art.head_dim,
         )
         .with_kv_heads(self.model.art.n_kv_heads);
+        // Exact per-step work (tiles/flops/folds) from the same plan the
+        // projection prices — the engine-side attribution totals.
+        self.metrics.attrib.record_plan(&attrib::account_decode_problem(&problem));
         let la = simulate(&problem, Strategy::StreamK, &self.arch);
         let fd = simulate(
             &problem,

@@ -11,6 +11,7 @@
 //! [`MetricsSnapshot`] ([`Metrics::snapshot`]), so the Prometheus and
 //! JSON exporters can never disagree about which counters exist.
 
+use crate::obs::attrib::WorkAccounting;
 use crate::obs::hist::LogHistogram;
 use crate::obs::snapshot::MetricsSnapshot;
 use crate::spec::SpecStats;
@@ -165,6 +166,44 @@ impl GqaStats {
     }
 }
 
+/// Exact work-attribution totals over served decode steps — the
+/// engine-side end of the perf-attribution plane. Gather bytes are
+/// folded in by the gather path itself (which knows sparse/shared
+/// dedup); tile/flop/fold totals by the per-step plan accounting. Both
+/// go through the same [`crate::obs::attrib`] functions the simulator
+/// and bench reports price, so metered work and modeled work cannot
+/// drift by construction (`tests/attrib_props.rs` pins the byte
+/// counters bit-exactly against the cache's own accounting).
+#[derive(Clone, Debug, Default)]
+pub struct AttribStats {
+    /// K+V bytes decode gathers materialized, attrib-accounted.
+    pub gather_bytes: u64,
+    /// LeanTiles the per-step decode plans visited.
+    pub tiles: u64,
+    /// Online-softmax flops those plans performed.
+    pub softmax_flops: u64,
+    /// Rescale folds (Alg 2 L24-39 reductions) those plans performed.
+    pub rescale_folds: u64,
+}
+
+impl AttribStats {
+    /// Fold one step's planned work in. Bytes are *not* taken from the
+    /// plan — the gather path records them, because only it knows how
+    /// much the sparse/shared paths deduplicated.
+    pub fn record_plan(&mut self, w: &WorkAccounting) {
+        self.tiles += w.tiles;
+        self.softmax_flops += w.softmax_flops;
+        self.rescale_folds += w.rescale_folds;
+    }
+
+    fn merge(&mut self, o: &AttribStats) {
+        self.gather_bytes += o.gather_bytes;
+        self.tiles += o.tiles;
+        self.softmax_flops += o.softmax_flops;
+        self.rescale_folds += o.rescale_folds;
+    }
+}
+
 /// Parallel-sampling (fork/prune) counters.
 #[derive(Clone, Debug, Default)]
 pub struct SamplingStats {
@@ -243,6 +282,10 @@ pub const DOCUMENTED_METRICS: &[&str] = &[
     "gqa_group_size",
     "gqa_gather_bytes_grouped_total",
     "gqa_gather_bytes_dense_total",
+    "attrib_gather_bytes_total",
+    "attrib_tiles_total",
+    "attrib_softmax_flops_total",
+    "attrib_rescale_folds_total",
 ];
 
 /// Accumulated engine counters.
@@ -292,6 +335,8 @@ pub struct Metrics {
     /// Grouped-query attention plane gauges (kv heads, group size,
     /// grouped-vs-dense gather bytes).
     pub gqa: GqaStats,
+    /// Exact work-attribution totals (gather bytes, tiles, flops, folds).
+    pub attrib: AttribStats,
 }
 
 impl Metrics {
@@ -371,6 +416,7 @@ impl Metrics {
         self.spec.merge(&o.spec);
         self.sparse.merge(&o.sparse);
         self.gqa.merge(&o.gqa);
+        self.attrib.merge(&o.attrib);
     }
 
     /// Sample every documented metric into the one snapshot both
@@ -562,6 +608,26 @@ impl Metrics {
             self.gqa.gather_bytes_dense as f64,
             "KV bytes a per-query-head plane would have gathered.",
         );
+        s.counter(
+            "attrib_gather_bytes_total",
+            self.attrib.gather_bytes as f64,
+            "KV bytes decode gathers moved, attrib-accounted.",
+        );
+        s.counter(
+            "attrib_tiles_total",
+            self.attrib.tiles as f64,
+            "LeanTiles visited by per-step decode plans.",
+        );
+        s.counter(
+            "attrib_softmax_flops_total",
+            self.attrib.softmax_flops as f64,
+            "Online-softmax flops of per-step decode plans.",
+        );
+        s.counter(
+            "attrib_rescale_folds_total",
+            self.attrib.rescale_folds as f64,
+            "Rescale folds of per-step decode plans.",
+        );
         s
     }
 
@@ -655,6 +721,16 @@ impl Metrics {
                 self.gqa.gather_bytes_dense as f64 / 1024.0,
                 self.gqa.gather_bytes_dense as f64
                     / self.gqa.gather_bytes_grouped as f64,
+            ));
+        }
+        if self.attrib.tiles > 0 {
+            s.push_str(&format!(
+                "work attribution: {} tiles, {:.1} KiB gathered, {:.2} Mflop softmax, \
+                 {} rescale folds\n",
+                self.attrib.tiles,
+                self.attrib.gather_bytes as f64 / 1024.0,
+                self.attrib.softmax_flops as f64 / 1e6,
+                self.attrib.rescale_folds,
             ));
         }
         if let Some(sp) = self.projected_speedup() {
@@ -875,6 +951,61 @@ mod tests {
         dense.gqa.record_gather(1024);
         assert_eq!(dense.gqa.gather_bytes_dense, 1024);
         assert!(!dense.report().contains("gqa plane"));
+    }
+
+    #[test]
+    fn gqa_merge_is_the_union_of_replica_snapshots() {
+        // Two replicas of one deployment: one configured and serving,
+        // one fresh (gauges still zero). The merged snapshot must be
+        // the union — gauges keep the configured side, byte counters
+        // sum — for every gqa_* metric, with no replica double-counted.
+        let mut a = Metrics::default();
+        a.gqa.kv_heads = 8;
+        a.gqa.group_size = 4;
+        a.gqa.record_gather(1000);
+        a.gqa.record_gather(24);
+        let mut b = Metrics::default();
+        b.gqa.record_gather(512); // unconfigured: dense == grouped
+        let (snap_a, snap_b) = (a.snapshot(), b.snapshot());
+        a.merge(&b);
+        let merged = a.snapshot();
+        for name in ["gqa_kv_heads", "gqa_group_size"] {
+            let (va, vb) = (snap_a.get(name).unwrap().value, snap_b.get(name).unwrap().value);
+            assert_eq!(merged.get(name).unwrap().value, va.max(vb), "{name}");
+        }
+        for name in ["gqa_gather_bytes_grouped_total", "gqa_gather_bytes_dense_total"] {
+            let (va, vb) = (snap_a.get(name).unwrap().value, snap_b.get(name).unwrap().value);
+            assert_eq!(merged.get(name).unwrap().value, va + vb, "{name}");
+        }
+        assert_eq!(a.gqa.gather_bytes_grouped, 1536);
+        assert_eq!(a.gqa.gather_bytes_dense, 4 * 1024 + 512);
+    }
+
+    #[test]
+    fn attrib_totals_merge_and_export() {
+        let w = WorkAccounting {
+            tiles: 6,
+            gathered_kv_bytes: 9999, // ignored by record_plan
+            softmax_flops: 4096,
+            rescale_folds: 12,
+        };
+        let mut a = Metrics::default();
+        a.attrib.record_plan(&w);
+        a.attrib.gather_bytes += 2048;
+        let mut b = Metrics::default();
+        b.attrib.record_plan(&w);
+        b.attrib.gather_bytes += 1024;
+        a.merge(&b);
+        assert_eq!(a.attrib.tiles, 12);
+        assert_eq!(a.attrib.softmax_flops, 8192);
+        assert_eq!(a.attrib.rescale_folds, 24);
+        assert_eq!(a.attrib.gather_bytes, 3072, "plan bytes must not leak in");
+        let snap = a.snapshot();
+        assert_eq!(snap.get("attrib_gather_bytes_total").unwrap().value, 3072.0);
+        assert_eq!(snap.get("attrib_tiles_total").unwrap().value, 12.0);
+        assert_eq!(snap.get("attrib_softmax_flops_total").unwrap().value, 8192.0);
+        assert_eq!(snap.get("attrib_rescale_folds_total").unwrap().value, 24.0);
+        assert!(a.report().contains("work attribution: 12 tiles"), "{}", a.report());
     }
 
     #[test]

@@ -106,6 +106,7 @@ fn run() -> Result<()> {
         "serve" => serve(&args),
         "simulate" => simulate_cmd(&args),
         "bench" => bench_cmd(&args),
+        "calibrate" => calibrate_cmd(&args),
         "plan" => plan_cmd(&args),
         "figures" => figures_cmd(&args),
         "sweep" => sweep_cmd(&args),
@@ -191,7 +192,21 @@ commands:
                                     decode over identical draws: KV bytes
                                     shrink by h/h_kv, both streams exact
                                     vs the repeated-KV dense oracle
-           (every bench takes [--seed N] for run-to-run reproducibility)
+           (every bench takes [--seed N] for run-to-run reproducibility,
+            [--json-out PATH] to write its machine-readable BenchReport,
+            [--check-against BASELINE.json] [--tolerance 0.25] to gate the
+            run against a committed baseline — counts and work accounting
+            bit-exact, float measures within the relative tolerance — and
+            [--baseline-out PATH] to fold its report into a baseline file)
+  calibrate [--smoke] [--seed 0] [--iters N] [--scale N]
+           [--json-out PATH] [--max-rel-err 0.8]
+                                    fit cost-model coefficients (ns/byte,
+                                    ns/flop, per-tile overhead) from traced
+                                    runs of every strategy — flat, cascade,
+                                    GQA, multi-query, sparse — against the
+                                    exact work accounting, print the
+                                    sim-vs-measured drift table, and assert
+                                    the per-point relative-error bound
   plan     --batch B --heads H --ctx N [--slots 216]
   figures  [table1|fig01|fig02|fig03|fig07|fig08|fig09|fig10|fig11|fig12|fig13|all]
   sweep    [--samples 1000] [--arch a100]
@@ -649,6 +664,93 @@ fn simulate_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Shared telemetry plumbing for every bench subcommand: self-validate
+/// the machine-readable report, write it (`--json-out`), gate it against
+/// a committed baseline (`--check-against` + `--tolerance`), and fold it
+/// into a baseline file (`--baseline-out`, read-modify-write so the six
+/// harnesses can accumulate into one file).
+fn bench_report_out(
+    rep: &lean_attention::obs::BenchReport,
+    args: &Args,
+) -> Result<()> {
+    use lean_attention::obs::benchlog;
+    let j = rep.to_json();
+    benchlog::validate_bench_report(&j)
+        .context("emitted bench report failed self-validation")?;
+    if let Some(path) = args.flags.get("json-out") {
+        std::fs::write(path, j.to_string())
+            .with_context(|| format!("write bench report to {path}"))?;
+        println!("bench report: {} -> {path}", rep.name);
+    }
+    if let Some(path) = args.flags.get("check-against") {
+        let tol = args.f64("tolerance", 0.25);
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read baseline {path}"))?;
+        benchlog::check_against(rep, &text, tol)?;
+        println!(
+            "baseline gate: {} matches {path} (counts/work exact, \
+             measures within {:.0}%)",
+            rep.name,
+            tol * 100.0
+        );
+    }
+    if let Some(path) = args.flags.get("baseline-out") {
+        let mut reports = match std::fs::read_to_string(path) {
+            Ok(text) => benchlog::parse_baseline(&text)
+                .with_context(|| format!("parse existing baseline {path}"))?,
+            Err(_) => Default::default(),
+        };
+        reports.insert(rep.name.clone(), rep.clone());
+        std::fs::write(path, benchlog::baseline_to_json(&reports).to_string())
+            .with_context(|| format!("write baseline to {path}"))?;
+        println!("baseline: {} entry updated in {path}", rep.name);
+    }
+    Ok(())
+}
+
+/// `leanattn calibrate`: fit cost-model coefficients (ns/byte, ns/flop,
+/// per-tile overhead) by joining the tracer's measured gather/exec spans
+/// with the exact work accounting over every strategy — flat, cascade,
+/// GQA, multi-query and sparse posings — then report per-strategy
+/// sim-vs-measured drift and assert the relative-error bound.
+fn calibrate_cmd(args: &Args) -> Result<()> {
+    use lean_attention::obs::calibrate::{run_calibration, CalibrationCase};
+
+    let smoke = args.has("smoke");
+    let base =
+        if smoke { CalibrationCase::smoke() } else { CalibrationCase::default_case() };
+    let case = CalibrationCase {
+        iters: args.usize("iters", base.iters),
+        scale: args.usize("scale", base.scale),
+        slots: args.usize("slots", base.slots),
+        batch_rows: args.usize("batch-rows", base.batch_rows),
+    };
+    let seed = args.usize("seed", 0) as u64;
+    let report = run_calibration(case, seed)?;
+    println!("{}", report.render());
+    if let Some(path) = args.flags.get("json-out") {
+        std::fs::write(path, report.to_json().to_string())
+            .with_context(|| format!("write calibration report to {path}"))?;
+        println!("calibration report -> {path}");
+    }
+    // Host timings on shared CI machines are noisy; the default bound
+    // asserts the model *tracks* the measurements (no structural drift),
+    // not that the machine is quiet.
+    let bound = args.f64("max-rel-err", 0.8);
+    anyhow::ensure!(
+        report.max_rel_err() <= bound,
+        "calibrated cost model drifted: max relative error {:.3} exceeds \
+         the {bound} bound",
+        report.max_rel_err()
+    );
+    println!(
+        "cost model holds: max relative error {:.3} <= {bound} across {} points",
+        report.max_rel_err(),
+        report.points.len()
+    );
+    Ok(())
+}
+
 fn bench_cmd(args: &Args) -> Result<()> {
     use lean_attention::bench_harness::{compare_exec, ExecCase};
     use lean_attention::runtime::AttentionExecutor;
@@ -720,6 +822,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
         c.flat_us.p50 / c.cascade_us.p50
     );
     println!("max |flat - cascade| = {:.2e}", c.max_err);
+    bench_report_out(&c.bench_report(seed, args.has("smoke")), args)?;
     Ok(())
 }
 
@@ -812,6 +915,7 @@ fn bench_sampling(args: &Args, seed: u64) -> Result<()> {
             c.attention.max_err
         );
     }
+    bench_report_out(&c.bench_report(seed, smoke), args)?;
     Ok(())
 }
 
@@ -866,6 +970,7 @@ fn bench_obs(args: &Args, seed: u64) -> Result<()> {
             r.events
         );
     }
+    bench_report_out(&r.bench_report(seed, smoke), args)?;
     Ok(())
 }
 
@@ -1003,6 +1108,7 @@ fn bench_sparse(args: &Args, seed: u64) -> Result<()> {
         full.policy.budget_pages,
         cf.dense.gathered_bytes / 1024
     );
+    bench_report_out(&c.bench_report(seed, smoke), args)?;
     Ok(())
 }
 
@@ -1044,6 +1150,7 @@ fn bench_gqa(args: &Args, seed: u64) -> Result<()> {
         s.retain(|&kv| heads % kv == 0);
         s
     };
+    let mut reported = None;
     for kv in sweep {
         let case = GqaCase { kv_heads: kv, ..template };
         let c = compare_gqa(case, iters, seed)?;
@@ -1072,8 +1179,16 @@ fn bench_gqa(args: &Args, seed: u64) -> Result<()> {
             c.grouped_err,
             c.dense_err
         );
+        // The telemetry report covers the first swept grouping (MQA in
+        // the default sweep, the pinned one under `--kv-heads`).
+        if reported.is_none() {
+            reported = Some(c);
+        }
     }
     println!("all groupings exact vs the repeated-KV oracle; byte shrink ~= h/h_kv");
+    if let Some(c) = reported {
+        bench_report_out(&c.bench_report(seed, smoke), args)?;
+    }
     Ok(())
 }
 
@@ -1163,6 +1278,7 @@ fn bench_spec(args: &Args, seed: u64) -> Result<()> {
         "one verify pass must gather strictly fewer KV bytes than {} sequential steps",
         case.k + 1
     );
+    bench_report_out(&c.bench_report(seed, smoke), args)?;
     Ok(())
 }
 

@@ -1,0 +1,323 @@
+//! Exact work accounting per stream-K tile — the attribution layer.
+//!
+//! Every subsystem that talks about "work" (the engine's gather
+//! counters, the simulator's cost model, the bench harnesses' byte
+//! columns) derives its numbers from **this one module**, computed
+//! directly from the partitioner's own structures
+//! ([`DecodeProblem`]/[`CascadeProblem`]/sparse selections). Modeled
+//! and measured work therefore cannot drift by construction: the hot
+//! path and the report both call the same function.
+//!
+//! The unit conventions match the host executor exactly:
+//! - **bytes** are gathered K+V f32 bytes (`2 · tokens · head_dim · 4`),
+//!   shared-prefix slices counted **once per task** (the cascade dedup);
+//! - **flops** are the score+weighted-sum MACs of online softmax
+//!   (`4 · tokens · head_dim` per query row over a KV slice);
+//! - **tiles** are LeanTile-sized KV chunks actually visited (clamped
+//!   to each lane's context — padding tiles are never counted);
+//! - **rescale folds** are associative softmax merges
+//!   (Alg 2 L24-39): one per `(tile, query row)` folded into an
+//!   accumulator.
+
+use std::ops::{Add, AddAssign};
+
+use crate::partition::cascade::{CascadeProblem, PrefixGroup, SegKind};
+use crate::partition::plan::{DecodeProblem, Plan};
+use crate::runtime::attention_exec::CascadeTask;
+use crate::sparse::selected_tokens;
+use crate::util::json::Json;
+
+/// Bytes per gathered KV element on the host executor (f32). The
+/// simulator's [`crate::sim::TileCost`] models fp16 device streams
+/// (2 bytes/element); calibrated coefficients are therefore in
+/// host-f32-byte units.
+pub const HOST_KV_ELEM_BYTES: u64 = 4;
+
+/// Exact work of an attention workload, in executor units.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkAccounting {
+    /// LeanTile-sized KV chunks visited (context-clamped).
+    pub tiles: u64,
+    /// Gathered K+V bytes (f32; shared slices counted once).
+    pub gathered_kv_bytes: u64,
+    /// Online-softmax MACs: `4 · tokens · head_dim` per query row.
+    pub softmax_flops: u64,
+    /// Associative rescale merges: one per `(tile, query row)`.
+    pub rescale_folds: u64,
+}
+
+impl WorkAccounting {
+    /// Work of one KV slice of `width` tokens serving `queries` rows.
+    pub fn slice(width: usize, head_dim: usize, queries: usize) -> WorkAccounting {
+        let (w, d, q) = (width as u64, head_dim as u64, queries as u64);
+        WorkAccounting {
+            tiles: 1,
+            gathered_kv_bytes: 2 * w * d * HOST_KV_ELEM_BYTES,
+            softmax_flops: 4 * w * d * q,
+            rescale_folds: q,
+        }
+    }
+
+    /// Whether any work is accounted at all.
+    pub fn is_zero(&self) -> bool {
+        *self == WorkAccounting::default()
+    }
+
+    /// Serialize for [`crate::obs::benchlog::BenchReport`] work sections.
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("tiles".to_string(), Json::Num(self.tiles as f64));
+        o.insert(
+            "gathered_kv_bytes".to_string(),
+            Json::Num(self.gathered_kv_bytes as f64),
+        );
+        o.insert("softmax_flops".to_string(), Json::Num(self.softmax_flops as f64));
+        o.insert("rescale_folds".to_string(), Json::Num(self.rescale_folds as f64));
+        Json::Obj(o)
+    }
+
+    /// Inverse of [`WorkAccounting::to_json`]; `None` on shape mismatch.
+    pub fn from_json(j: &Json) -> Option<WorkAccounting> {
+        Some(WorkAccounting {
+            tiles: j.get("tiles")?.as_f64()? as u64,
+            gathered_kv_bytes: j.get("gathered_kv_bytes")?.as_f64()? as u64,
+            softmax_flops: j.get("softmax_flops")?.as_f64()? as u64,
+            rescale_folds: j.get("rescale_folds")?.as_f64()? as u64,
+        })
+    }
+}
+
+impl Add for WorkAccounting {
+    type Output = WorkAccounting;
+    fn add(self, rhs: WorkAccounting) -> WorkAccounting {
+        WorkAccounting {
+            tiles: self.tiles + rhs.tiles,
+            gathered_kv_bytes: self.gathered_kv_bytes + rhs.gathered_kv_bytes,
+            softmax_flops: self.softmax_flops + rhs.softmax_flops,
+            rescale_folds: self.rescale_folds + rhs.rescale_folds,
+        }
+    }
+}
+
+impl AddAssign for WorkAccounting {
+    fn add_assign(&mut self, rhs: WorkAccounting) {
+        *self = *self + rhs;
+    }
+}
+
+/// Tile chunks covering `[0, ctx)` between token offsets
+/// `[begin_tok, end_tok)`, each clamped to the context: the exact
+/// chunks the host executors visit for that span.
+fn span_work(
+    ctx: usize,
+    begin_tok: usize,
+    end_tok: usize,
+    tile: usize,
+    head_dim: usize,
+    queries: usize,
+) -> WorkAccounting {
+    let mut w = WorkAccounting::default();
+    let end = end_tok.min(ctx);
+    let mut tok = begin_tok;
+    while tok < end {
+        let width = tile.min(end - tok);
+        w += WorkAccounting::slice(width, head_dim, queries);
+        tok += width;
+    }
+    w
+}
+
+/// Exact work of a flat (or GQA-grouped) decode step: every KV group
+/// streams its full context once, serving `group_size` query rows.
+/// Plan-independent — any valid [`Plan`] over `p` performs exactly this
+/// work ([`account_plan`] is property-tested equal).
+pub fn account_decode_problem(p: &DecodeProblem) -> WorkAccounting {
+    let mut w = WorkAccounting::default();
+    for g in 0..p.groups() {
+        let ctx = p.ctx_for_group(g);
+        w += span_work(ctx, 0, ctx, p.tile, p.head_dim, p.group_size());
+    }
+    w
+}
+
+/// Exact work of a partitioned decode plan, summed over its CTA
+/// segments (context-clamped, so padding tiles beyond a ragged lane's
+/// length contribute nothing).
+pub fn account_plan(p: &DecodeProblem, plan: &Plan) -> WorkAccounting {
+    let mut w = WorkAccounting::default();
+    for cta in &plan.ctas {
+        for seg in &cta.segments {
+            let g = seg.group as usize;
+            let ctx = p.ctx_for_group(g);
+            let begin = seg.tile_begin as usize * plan.tile;
+            let end = (seg.tile_begin + seg.tile_count) as usize * plan.tile;
+            w += span_work(ctx, begin, end, plan.tile, p.head_dim, p.group_size());
+        }
+    }
+    w
+}
+
+/// Query rows served by one cascade segment lane: all members of a
+/// shared-prefix group at once, one sequence otherwise — times the GQA
+/// group size. Matches [`CascadeProblem::queries_of`] and the host
+/// executor's row expansion exactly.
+pub fn cascade_queries(p: &CascadeProblem, kind: SegKind) -> usize {
+    let rows = match kind {
+        SegKind::Shared { pg, .. } => p.prefix_groups[pg].members.len(),
+        SegKind::Suffix { .. } => 1,
+    };
+    rows * p.group_size()
+}
+
+/// Exact work of a cascade decode step: each shared prefix streams once
+/// per group serving all members, each suffix streams privately.
+/// Plan-independent; [`account_cascade_tasks`] over any rolled task list
+/// is property-tested equal.
+pub fn account_cascade_problem(p: &CascadeProblem) -> WorkAccounting {
+    let seg = p.segment_problem();
+    let mut w = WorkAccounting::default();
+    for g in 0..seg.groups() {
+        let ctx = seg.ctx_for_group(g);
+        let queries = cascade_queries(p, p.seg_kind(g));
+        w += span_work(ctx, 0, ctx, seg.tile, seg.head_dim, queries);
+    }
+    w
+}
+
+/// Exact work of a rolled cascade task list — what
+/// [`crate::runtime::attention_exec::roll_cascade_tasks`] hands the
+/// executor. Each task is one context-clamped KV slice.
+pub fn account_cascade_tasks(p: &CascadeProblem, tasks: &[CascadeTask]) -> WorkAccounting {
+    let mut w = WorkAccounting::default();
+    for t in tasks {
+        w += WorkAccounting::slice(t.width, p.head_dim, cascade_queries(p, t.kind));
+    }
+    w
+}
+
+/// Gathered K+V bytes of a rolled cascade task list — the single
+/// byte-accounting function behind
+/// [`crate::runtime::attention_exec::rolled_kv_bytes`], the engine's
+/// cascade projection, and every bench harness byte column.
+pub fn tasks_kv_bytes(tasks: &[CascadeTask], head_dim: usize) -> u64 {
+    tasks
+        .iter()
+        .map(|t| 2 * t.width as u64 * head_dim as u64 * HOST_KV_ELEM_BYTES)
+        .sum()
+}
+
+/// Bytes a flat (dense) gather reads for per-lane context lengths, with
+/// `token_bytes` = bytes per cached token across layers and kv heads
+/// ([`crate::coordinator::PagedKvCache::token_bytes`]). Mirrors
+/// `PagedKvCache::gather` exactly.
+pub fn flat_gather_bytes(lens: &[u32], token_bytes: usize) -> u64 {
+    lens.iter().map(|&l| l as u64 * token_bytes as u64).sum()
+}
+
+/// Bytes a shared-prefix gather reads: the flat bytes minus each
+/// group's deduplicated prefix re-reads (`members − 1` spared copies of
+/// `prefix_len` tokens). Mirrors `PagedKvCache::gather_shared`'s
+/// `shared_bytes` exactly; group members index into `lens`.
+pub fn shared_gather_bytes(lens: &[u32], groups: &[PrefixGroup], token_bytes: usize) -> u64 {
+    let spared: u64 = groups
+        .iter()
+        .map(|g| (g.members.len() as u64 - 1) * g.prefix_len as u64 * token_bytes as u64)
+        .sum();
+    flat_gather_bytes(lens, token_bytes) - spared
+}
+
+/// Bytes a sparse (page-selected) gather reads for one lane: the
+/// compacted token count of the selection over a `len`-token context.
+/// Mirrors the engine's `gather_selected` accounting exactly.
+pub fn selected_gather_bytes(
+    len: usize,
+    page_tokens: usize,
+    selection: &[usize],
+    token_bytes: usize,
+) -> u64 {
+    selected_tokens(len, page_tokens, selection) as u64 * token_bytes as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::cascade::build_cascade_plan;
+    use crate::partition::plan::{build_plan, Strategy};
+    use crate::runtime::attention_exec::{roll_cascade_tasks, rolled_kv_bytes};
+
+    #[test]
+    fn flat_accounting_matches_hand_count() {
+        // 1 lane, 2 kv heads x group 2, ctx 70, tile 32 -> per group:
+        // tiles 3 (32+32+6), bytes 2*70*8*4, flops 4*70*8*2, folds 3*2.
+        let p = DecodeProblem::uniform(1, 4, 70, 8).with_tile(32).with_kv_heads(2);
+        let w = account_decode_problem(&p);
+        assert_eq!(w.tiles, 2 * 3);
+        assert_eq!(w.gathered_kv_bytes, 2 * (2 * 70 * 8 * 4));
+        assert_eq!(w.softmax_flops, 2 * (4 * 70 * 8 * 2));
+        assert_eq!(w.rescale_folds, 2 * (3 * 2));
+    }
+
+    #[test]
+    fn any_valid_plan_accounts_identically_to_its_problem() {
+        let p = DecodeProblem::ragged(4, vec![70, 96, 33, 128], 16)
+            .with_tile(32)
+            .with_kv_heads(2);
+        let want = account_decode_problem(&p);
+        for strategy in [
+            Strategy::Dense,
+            Strategy::StreamK,
+            Strategy::fixed_split_auto(&p, 24),
+        ] {
+            let plan = build_plan(&p, strategy, 24);
+            plan.validate(&p).unwrap();
+            assert_eq!(account_plan(&p, &plan), want, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn rolled_tasks_account_identically_to_the_cascade_problem() {
+        let p = CascadeProblem::new(
+            4,
+            vec![96, 96, 34, 70, 96],
+            8,
+            vec![
+                PrefixGroup { prefix_len: 64, members: vec![0, 1] },
+                PrefixGroup { prefix_len: 32, members: vec![2, 4] },
+            ],
+        )
+        .unwrap()
+        .with_tile(32)
+        .with_kv_heads(2);
+        let cplan = build_cascade_plan(&p, 12);
+        let tasks = roll_cascade_tasks(&p, &cplan);
+        let from_tasks = account_cascade_tasks(&p, &tasks);
+        assert_eq!(from_tasks, account_cascade_problem(&p));
+        assert_eq!(from_tasks.gathered_kv_bytes, tasks_kv_bytes(&tasks, p.head_dim));
+        assert_eq!(
+            from_tasks.gathered_kv_bytes,
+            rolled_kv_bytes(&tasks, p.head_dim) as u64
+        );
+    }
+
+    #[test]
+    fn shared_gather_dedups_each_groups_prefix_rereads() {
+        let token = 64;
+        let lens = [25, 25, 25];
+        let groups = [PrefixGroup { prefix_len: 16, members: vec![0, 1, 2] }];
+        assert_eq!(flat_gather_bytes(&lens, token), 3 * 25 * 64);
+        // Shared: the 16-token prefix streams once, three 9-token tails.
+        assert_eq!(shared_gather_bytes(&lens, &groups, token), (16 + 3 * 9) * 64);
+    }
+
+    #[test]
+    fn work_accounting_round_trips_through_json() {
+        let w = WorkAccounting {
+            tiles: 7,
+            gathered_kv_bytes: 123_456,
+            softmax_flops: 9_999_999,
+            rescale_folds: 42,
+        };
+        assert_eq!(WorkAccounting::from_json(&w.to_json()), Some(w));
+        assert_eq!(WorkAccounting::from_json(&Json::Null), None);
+    }
+}

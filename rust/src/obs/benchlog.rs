@@ -1,0 +1,404 @@
+//! Versioned machine-readable bench telemetry.
+//!
+//! Every bench harness (`bench --cascade-exec/--sampling/--spec/
+//! --sparse/--obs/--gqa`) emits one [`BenchReport`] — written as JSON
+//! by `--json-out PATH` — and the regression gate
+//! (`bench ... --check-against BENCH_baseline.json`) compares a fresh
+//! run against a committed baseline so the perf trajectory accumulates
+//! in CI instead of scrolling away in logs.
+//!
+//! A report has four sections with distinct gate semantics:
+//!
+//! - **counts** — machine-independent integers (gathered bytes, pages,
+//!   committed tokens): gated **bit-exactly** against the baseline.
+//! - **work** — [`WorkAccounting`] sections from [`super::attrib`]:
+//!   also exact integers, gated bit-exactly. These are the sections
+//!   the same-seed determinism assertions pin.
+//! - **measures** — deterministic-but-float ratios (bytes saved,
+//!   acceptance rate): gated within a relative tolerance.
+//! - **info** — wall-clock timings and float error maxima: recorded
+//!   for trend analysis, never gated (machine-dependent).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::json::Json;
+
+use super::attrib::WorkAccounting;
+
+/// Schema version stamped into every report; bump on breaking change.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// One bench run's machine-readable telemetry.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BenchReport {
+    /// Harness name (`cascade-exec`, `sampling`, `spec`, `sparse`,
+    /// `obs`, `gqa`) — the key in the baseline file.
+    pub name: String,
+    /// RNG seed the run used (baselines only compare like seeds).
+    pub seed: u64,
+    /// Whether the run used the `--smoke` shape.
+    pub smoke: bool,
+    /// Exact integer metrics, gated bit-exactly.
+    pub counts: BTreeMap<String, u64>,
+    /// Float metrics gated within a relative tolerance.
+    pub measures: BTreeMap<String, f64>,
+    /// Ungated context (timings in µs, max float errors).
+    pub info: BTreeMap<String, f64>,
+    /// Exact work-accounting sections, gated bit-exactly.
+    pub work: BTreeMap<String, WorkAccounting>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str, seed: u64, smoke: bool) -> BenchReport {
+        BenchReport { name: name.to_string(), seed, smoke, ..Default::default() }
+    }
+
+    pub fn count(&mut self, key: &str, v: u64) {
+        self.counts.insert(key.to_string(), v);
+    }
+
+    pub fn measure(&mut self, key: &str, v: f64) {
+        self.measures.insert(key.to_string(), v);
+    }
+
+    pub fn info(&mut self, key: &str, v: f64) {
+        self.info.insert(key.to_string(), v);
+    }
+
+    pub fn work(&mut self, key: &str, w: WorkAccounting) {
+        self.work.insert(key.to_string(), w);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let num_map = |m: &BTreeMap<String, f64>| {
+            Json::Obj(m.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect())
+        };
+        let mut o = BTreeMap::new();
+        o.insert("version".to_string(), Json::Num(BENCH_SCHEMA_VERSION as f64));
+        o.insert("name".to_string(), Json::Str(self.name.clone()));
+        o.insert("seed".to_string(), Json::Num(self.seed as f64));
+        o.insert("smoke".to_string(), Json::Bool(self.smoke));
+        o.insert(
+            "counts".to_string(),
+            Json::Obj(
+                self.counts
+                    .iter()
+                    .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                    .collect(),
+            ),
+        );
+        o.insert("measures".to_string(), num_map(&self.measures));
+        o.insert("info".to_string(), num_map(&self.info));
+        o.insert(
+            "work".to_string(),
+            Json::Obj(self.work.iter().map(|(k, w)| (k.clone(), w.to_json())).collect()),
+        );
+        Json::Obj(o)
+    }
+
+    /// Parse a report, validating against the schema.
+    pub fn from_json(j: &Json) -> Result<BenchReport> {
+        validate_bench_report(j)?;
+        let sec = |key: &str| j.at(key).as_obj().cloned().unwrap_or_default();
+        Ok(BenchReport {
+            name: j.str_at("name").to_string(),
+            seed: j.at("seed").as_f64().unwrap_or(0.0) as u64,
+            smoke: matches!(j.at("smoke"), Json::Bool(true)),
+            counts: sec("counts")
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_f64().unwrap_or(0.0) as u64))
+                .collect(),
+            measures: sec("measures")
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_f64().unwrap_or(0.0)))
+                .collect(),
+            info: sec("info")
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_f64().unwrap_or(0.0)))
+                .collect(),
+            work: sec("work")
+                .iter()
+                .map(|(k, v)| (k.clone(), WorkAccounting::from_json(v).expect("validated")))
+                .collect(),
+        })
+    }
+}
+
+/// Validate a JSON value against the [`BenchReport`] schema — the check
+/// every `--json-out` emission runs on itself before writing.
+pub fn validate_bench_report(j: &Json) -> Result<()> {
+    ensure!(j.as_obj().is_some(), "bench report must be a JSON object");
+    let version = j
+        .get("version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("bench report missing numeric version"))?;
+    ensure!(
+        version as u64 == BENCH_SCHEMA_VERSION,
+        "bench report version {version} != supported {BENCH_SCHEMA_VERSION}"
+    );
+    ensure!(
+        j.get("name").and_then(Json::as_str).is_some_and(|n| !n.is_empty()),
+        "bench report missing name"
+    );
+    ensure!(
+        j.get("seed").and_then(Json::as_f64).is_some(),
+        "bench report missing numeric seed"
+    );
+    ensure!(
+        matches!(j.get("smoke"), Some(Json::Bool(_))),
+        "bench report missing boolean smoke flag"
+    );
+    for section in ["counts", "measures", "info", "work"] {
+        let obj = j
+            .get(section)
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("bench report missing {section} object"))?;
+        for (key, v) in obj {
+            if section == "work" {
+                ensure!(
+                    WorkAccounting::from_json(v).is_some(),
+                    "work section {key:?} is not a WorkAccounting object"
+                );
+            } else {
+                let n = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("{section}.{key} not a number"))?;
+                ensure!(n.is_finite(), "{section}.{key} is not finite");
+                if section == "counts" {
+                    ensure!(
+                        n >= 0.0 && n.fract() == 0.0,
+                        "counts.{key} = {n} is not a non-negative integer"
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Parse a committed baseline file (`{"version": 1, "reports":
+/// {name: report, ...}}`) into its per-harness reports.
+pub fn parse_baseline(text: &str) -> Result<BTreeMap<String, BenchReport>> {
+    let j = Json::parse(text).map_err(|e| anyhow::anyhow!("baseline parse: {e}"))?;
+    let version = j
+        .get("version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("baseline missing numeric version"))?;
+    ensure!(
+        version as u64 == BENCH_SCHEMA_VERSION,
+        "baseline version {version} != supported {BENCH_SCHEMA_VERSION}"
+    );
+    let reports = j
+        .get("reports")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("baseline missing reports object"))?;
+    let mut out = BTreeMap::new();
+    for (name, rj) in reports {
+        let r = BenchReport::from_json(rj)
+            .map_err(|e| anyhow::anyhow!("baseline report {name:?}: {e}"))?;
+        ensure!(r.name == *name, "baseline key {name:?} names report {:?}", r.name);
+        out.insert(name.clone(), r);
+    }
+    Ok(out)
+}
+
+/// Serialize baseline reports back into the committed-file format.
+pub fn baseline_to_json(reports: &BTreeMap<String, BenchReport>) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("version".to_string(), Json::Num(BENCH_SCHEMA_VERSION as f64));
+    o.insert(
+        "reports".to_string(),
+        Json::Obj(reports.iter().map(|(k, r)| (k.clone(), r.to_json())).collect()),
+    );
+    Json::Obj(o)
+}
+
+/// Compare a fresh run against its baseline. Returns the list of gate
+/// violations (empty = pass): counts and work sections must match
+/// bit-exactly, measures within relative tolerance `tol`
+/// (`|a − b| ≤ tol · max(|a|, |b|)`), info is never gated. Metrics the
+/// baseline lacks are allowed (schema growth); metrics that disappeared
+/// are violations.
+pub fn compare_reports(current: &BenchReport, baseline: &BenchReport, tol: f64) -> Vec<String> {
+    let mut v = Vec::new();
+    if current.name != baseline.name {
+        v.push(format!(
+            "harness mismatch: ran {:?}, baseline is {:?}",
+            current.name, baseline.name
+        ));
+        return v;
+    }
+    if current.smoke != baseline.smoke {
+        v.push(format!(
+            "shape mismatch: run smoke={}, baseline smoke={}",
+            current.smoke, baseline.smoke
+        ));
+        return v;
+    }
+    if current.seed != baseline.seed {
+        v.push(format!(
+            "seed mismatch: run seed={}, baseline seed={} (counts only \
+             compare across identical seeds)",
+            current.seed, baseline.seed
+        ));
+        return v;
+    }
+    for (key, &want) in &baseline.counts {
+        match current.counts.get(key) {
+            None => v.push(format!("counts.{key} disappeared (baseline {want})")),
+            Some(&got) if got != want => {
+                v.push(format!("counts.{key}: {got} != baseline {want}"))
+            }
+            _ => {}
+        }
+    }
+    for (key, want) in &baseline.work {
+        match current.work.get(key) {
+            None => v.push(format!("work.{key} section disappeared")),
+            Some(got) if got != want => {
+                v.push(format!("work.{key}: {got:?} != baseline {want:?}"))
+            }
+            _ => {}
+        }
+    }
+    for (key, &want) in &baseline.measures {
+        match current.measures.get(key) {
+            None => v.push(format!("measures.{key} disappeared (baseline {want})")),
+            Some(&got) => {
+                let scale = got.abs().max(want.abs());
+                if (got - want).abs() > tol * scale + 1e-12 {
+                    v.push(format!(
+                        "measures.{key}: {got} drifted beyond {:.0}% of baseline {want}",
+                        tol * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    v
+}
+
+/// Round-trip helper for `--check-against`: parse the baseline file,
+/// pick this harness's entry, and gate. Errors on a missing entry.
+pub fn check_against(current: &BenchReport, baseline_text: &str, tol: f64) -> Result<()> {
+    let baselines = parse_baseline(baseline_text)?;
+    let Some(base) = baselines.get(&current.name) else {
+        bail!(
+            "baseline has no {:?} entry (has: {})",
+            current.name,
+            baselines.keys().cloned().collect::<Vec<_>>().join(", ")
+        );
+    };
+    let violations = compare_reports(current, base, tol);
+    ensure!(
+        violations.is_empty(),
+        "bench regression gate failed for {:?}:\n  {}",
+        current.name,
+        violations.join("\n  ")
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchReport {
+        let mut r = BenchReport::new("gqa", 7, true);
+        r.count("grouped_kv_bytes", 12_288);
+        r.count("dense_kv_bytes", 49_152);
+        r.measure("bytes_ratio", 4.0);
+        r.info("grouped_us_p50", 123.4);
+        r.work(
+            "grouped",
+            WorkAccounting {
+                tiles: 6,
+                gathered_kv_bytes: 12_288,
+                softmax_flops: 98_304,
+                rescale_folds: 24,
+            },
+        );
+        r
+    }
+
+    #[test]
+    fn report_round_trips_and_validates() {
+        let r = sample();
+        let j = r.to_json();
+        validate_bench_report(&j).expect("emitted report is schema-valid");
+        let text = j.to_string();
+        let back = BenchReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_reports() {
+        assert!(validate_bench_report(&Json::Null).is_err());
+        let mut j = sample().to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".to_string(), Json::Num(99.0));
+        }
+        assert!(validate_bench_report(&j).is_err(), "wrong version");
+        let bad_count =
+            Json::parse(r#"{"version":1,"name":"x","seed":0,"smoke":false,"counts":{"a":1.5},"measures":{},"info":{},"work":{}}"#)
+                .unwrap();
+        assert!(validate_bench_report(&bad_count).is_err(), "fractional count");
+    }
+
+    #[test]
+    fn gate_passes_identical_and_flags_exact_drift() {
+        let base = sample();
+        assert!(compare_reports(&sample(), &base, 0.25).is_empty());
+
+        let mut drifted = sample();
+        drifted.count("grouped_kv_bytes", 12_289);
+        let v = compare_reports(&drifted, &base, 0.25);
+        assert!(v.iter().any(|s| s.contains("counts.grouped_kv_bytes")), "{v:?}");
+
+        let mut work_drift = sample();
+        work_drift.work.get_mut("grouped").unwrap().tiles += 1;
+        let v = compare_reports(&work_drift, &base, 0.25);
+        assert!(v.iter().any(|s| s.contains("work.grouped")), "{v:?}");
+    }
+
+    #[test]
+    fn gate_tolerates_measures_within_relative_tolerance() {
+        let base = sample();
+        let mut near = sample();
+        near.measure("bytes_ratio", 4.2);
+        assert!(compare_reports(&near, &base, 0.1).is_empty());
+        let mut far = sample();
+        far.measure("bytes_ratio", 5.0);
+        assert!(!compare_reports(&far, &base, 0.1).is_empty());
+        // Info is never gated.
+        let mut slow = sample();
+        slow.info("grouped_us_p50", 99_999.0);
+        assert!(compare_reports(&slow, &base, 0.1).is_empty());
+    }
+
+    #[test]
+    fn gate_refuses_cross_shape_and_cross_seed_comparison() {
+        let base = sample();
+        let mut full = sample();
+        full.smoke = false;
+        assert!(!compare_reports(&full, &base, 0.25).is_empty());
+        let mut other_seed = sample();
+        other_seed.seed = 8;
+        assert!(!compare_reports(&other_seed, &base, 0.25).is_empty());
+    }
+
+    #[test]
+    fn baseline_file_round_trips() {
+        let mut reports = BTreeMap::new();
+        reports.insert("gqa".to_string(), sample());
+        let text = baseline_to_json(&reports).to_string();
+        let back = parse_baseline(&text).unwrap();
+        assert_eq!(back, reports);
+        check_against(&sample(), &text, 0.25).expect("self-comparison passes");
+        let mut other = sample();
+        other.name = "spec".to_string();
+        assert!(check_against(&other, &text, 0.25).is_err(), "missing entry");
+    }
+}

@@ -1,0 +1,539 @@
+//! Cost-model calibration: fit [`CostCoefficients`] from traced runs.
+//!
+//! `leanattn calibrate` runs the host cascade executor over one
+//! workload per partitioning strategy — flat, cascade (shared prefix),
+//! sparse (page-compacted), multi-query (draft blocks), and GQA — with
+//! the PR 6 tracer enabled, joins each run's `gather` + `lean_exec`
+//! span durations with the exact [`WorkAccounting`] of the same
+//! problem, and least-squares-fits the three-coefficient linear cost
+//! model (ns/byte gathered, ns/flop, fixed ns/tile). The residual per
+//! strategy is the **sim-vs-measured drift report**: it turns "the
+//! simulator says" into "the simulator is within X% of measured, and
+//! here is the residual per strategy".
+//!
+//! Everything here is artifact-free (host executor only) and
+//! deterministic in shape — only the measured wall-clock varies run to
+//! run, which is why the fit takes the **minimum** over iterations of
+//! each point's traced phase time.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::partition::cascade::{
+    build_cascade_plan, CascadeProblem, CascadeTensors, PrefixGroup,
+};
+use crate::partition::multi_query::{MultiQueryInputs, MultiQueryProblem, MultiQuerySeq};
+use crate::runtime::attention_exec::{lean_cascade_host_traced, sparse_compact_problem};
+use crate::sim::CostCoefficients;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::attrib::{account_cascade_problem, WorkAccounting};
+use super::tracer::{Phase, Tracer};
+
+/// Calibration workload shape.
+#[derive(Clone, Copy, Debug)]
+pub struct CalibrationCase {
+    /// Timing iterations per point (the minimum is the measurement).
+    pub iters: usize,
+    /// Context-length scale: point `i` of each strategy uses roughly
+    /// `scale << i` tokens per lane.
+    pub scale: usize,
+    /// CTA slots handed to the planner.
+    pub slots: usize,
+    /// Partial-bucket row capacity of the host executor.
+    pub batch_rows: usize,
+}
+
+impl CalibrationCase {
+    pub fn default_case() -> CalibrationCase {
+        CalibrationCase { iters: 7, scale: 512, slots: 24, batch_rows: 64 }
+    }
+
+    /// CI-sized shape: same strategy coverage, smaller contexts.
+    pub fn smoke() -> CalibrationCase {
+        CalibrationCase { iters: 3, scale: 192, slots: 24, batch_rows: 64 }
+    }
+}
+
+/// One (strategy, shape) sample: exact work joined with the traced
+/// minimum phase time of the host executor.
+#[derive(Clone, Debug)]
+pub struct CalibrationPoint {
+    /// Strategy name (`flat`, `cascade`, `sparse`, `multi-query`, `gqa`).
+    pub strategy: &'static str,
+    /// Human-readable shape label.
+    pub shape: String,
+    /// Exact accounting of the point's problem.
+    pub work: WorkAccounting,
+    /// Min over iterations of traced `gather` + `lean_exec` time, µs.
+    pub measured_us: f64,
+}
+
+/// Per-strategy relative-error breakdown of the fitted model.
+#[derive(Clone, Debug)]
+pub struct StrategyDrift {
+    pub strategy: &'static str,
+    pub points: usize,
+    pub mean_rel_err: f64,
+    pub max_rel_err: f64,
+}
+
+/// The calibration outcome: fitted coefficients plus the per-point
+/// drift they leave behind.
+#[derive(Clone, Debug)]
+pub struct CalibrationReport {
+    pub case: CalibrationCase,
+    pub coefficients: CostCoefficients,
+    pub points: Vec<CalibrationPoint>,
+}
+
+impl CalibrationReport {
+    /// Relative error of the fitted prediction for one point.
+    pub fn rel_err(&self, p: &CalibrationPoint) -> f64 {
+        let pred = self.coefficients.predict_us(&p.work);
+        (pred - p.measured_us).abs() / p.measured_us.max(1e-9)
+    }
+
+    /// Per-strategy drift rows, in first-seen order.
+    pub fn per_strategy(&self) -> Vec<StrategyDrift> {
+        let mut order: Vec<&'static str> = Vec::new();
+        let mut errs: BTreeMap<&'static str, Vec<f64>> = BTreeMap::new();
+        for p in &self.points {
+            if !errs.contains_key(p.strategy) {
+                order.push(p.strategy);
+            }
+            errs.entry(p.strategy).or_default().push(self.rel_err(p));
+        }
+        order
+            .into_iter()
+            .map(|s| {
+                let e = &errs[s];
+                StrategyDrift {
+                    strategy: s,
+                    points: e.len(),
+                    mean_rel_err: e.iter().sum::<f64>() / e.len() as f64,
+                    max_rel_err: e.iter().copied().fold(0.0, f64::max),
+                }
+            })
+            .collect()
+    }
+
+    /// Worst relative error across every strategy and point.
+    pub fn max_rel_err(&self) -> f64 {
+        self.points.iter().map(|p| self.rel_err(p)).fold(0.0, f64::max)
+    }
+
+    /// Human-readable drift report (the `leanattn calibrate` output).
+    pub fn render(&self) -> String {
+        let c = self.coefficients;
+        let mut s = format!(
+            "fitted cost model: t_ns = {:.4} ns/byte + {:.6} ns/flop + {:.1} ns/tile\n\n",
+            c.ns_per_byte, c.ns_per_flop, c.tile_overhead_ns
+        );
+        s.push_str(&format!(
+            "{:<12} {:>8} {:>12} {:>12} {:>12} {:>10}\n",
+            "strategy", "shape", "bytes", "measured_us", "predicted_us", "rel_err"
+        ));
+        for p in &self.points {
+            s.push_str(&format!(
+                "{:<12} {:>8} {:>12} {:>12.1} {:>12.1} {:>9.1}%\n",
+                p.strategy,
+                p.shape,
+                p.work.gathered_kv_bytes,
+                p.measured_us,
+                self.coefficients.predict_us(&p.work),
+                self.rel_err(p) * 100.0
+            ));
+        }
+        s.push_str("\nper-strategy drift (sim vs measured):\n");
+        for d in self.per_strategy() {
+            s.push_str(&format!(
+                "  {:<12} {} points  mean {:>5.1}%  max {:>5.1}%\n",
+                d.strategy,
+                d.points,
+                d.mean_rel_err * 100.0,
+                d.max_rel_err * 100.0
+            ));
+        }
+        s
+    }
+
+    /// Machine-readable report for `calibrate --json-out`.
+    pub fn to_json(&self) -> Json {
+        let mut coef = BTreeMap::new();
+        coef.insert("ns_per_byte".to_string(), Json::Num(self.coefficients.ns_per_byte));
+        coef.insert("ns_per_flop".to_string(), Json::Num(self.coefficients.ns_per_flop));
+        coef.insert(
+            "tile_overhead_ns".to_string(),
+            Json::Num(self.coefficients.tile_overhead_ns),
+        );
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut o = BTreeMap::new();
+                o.insert("strategy".to_string(), Json::Str(p.strategy.to_string()));
+                o.insert("shape".to_string(), Json::Str(p.shape.clone()));
+                o.insert("work".to_string(), p.work.to_json());
+                o.insert("measured_us".to_string(), Json::Num(p.measured_us));
+                o.insert(
+                    "predicted_us".to_string(),
+                    Json::Num(self.coefficients.predict_us(&p.work)),
+                );
+                o.insert("rel_err".to_string(), Json::Num(self.rel_err(p)));
+                Json::Obj(o)
+            })
+            .collect();
+        let drift: Vec<Json> = self
+            .per_strategy()
+            .iter()
+            .map(|d| {
+                let mut o = BTreeMap::new();
+                o.insert("strategy".to_string(), Json::Str(d.strategy.to_string()));
+                o.insert("points".to_string(), Json::Num(d.points as f64));
+                o.insert("mean_rel_err".to_string(), Json::Num(d.mean_rel_err));
+                o.insert("max_rel_err".to_string(), Json::Num(d.max_rel_err));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut o = BTreeMap::new();
+        o.insert("version".to_string(), Json::Num(1.0));
+        o.insert("coefficients".to_string(), Json::Obj(coef));
+        o.insert("points".to_string(), Json::Arr(points));
+        o.insert("per_strategy".to_string(), Json::Arr(drift));
+        o.insert("max_rel_err".to_string(), Json::Num(self.max_rel_err()));
+        Json::Obj(o)
+    }
+}
+
+/// Measure one cascade problem on the host executor: run it traced
+/// `iters + 1` times (first is warmup) and take the minimum over
+/// iterations of the `gather` + `lean_exec` span durations — the PR 6
+/// tracer is the clock, so the calibration measures exactly the phases
+/// the serving engine traces.
+fn measure_point(
+    cp: &CascadeProblem,
+    t: &CascadeTensors,
+    case: &CalibrationCase,
+    strategy: &'static str,
+    shape: String,
+) -> CalibrationPoint {
+    let cplan = build_cascade_plan(cp, case.slots);
+    let work = account_cascade_problem(cp);
+    let tracer = Tracer::enabled(2 * (case.iters + 2));
+    for _ in 0..=case.iters {
+        let _ = lean_cascade_host_traced(cp, t, &cplan, case.batch_rows, &tracer);
+    }
+    let events = tracer.events();
+    // Events arrive as (gather, lean_exec) pairs per call; drop the
+    // warmup pair and fold each remaining pair into one sample.
+    let mut samples = Vec::new();
+    let mut pending_gather = None;
+    for ev in &events {
+        match ev.phase {
+            Phase::Gather => {
+                // The accounting and the traced gather bytes come from
+                // the same function — drift is impossible, assert it.
+                debug_assert_eq!(ev.attrs.bytes, Some(work.gathered_kv_bytes));
+                pending_gather = Some(ev.dur_us);
+            }
+            Phase::LeanExec => {
+                if let Some(g) = pending_gather.take() {
+                    samples.push(g + ev.dur_us);
+                }
+            }
+            _ => {}
+        }
+    }
+    let measured_us = samples
+        .iter()
+        .skip(1) // warmup
+        .copied()
+        .fold(f64::INFINITY, f64::min)
+        .min(samples.last().copied().unwrap_or(f64::INFINITY));
+    CalibrationPoint { strategy, shape, work, measured_us }
+}
+
+/// The traced pseudo-serving workloads, one per strategy, three
+/// context scales each. Shapes are chosen to decorrelate the three
+/// cost columns: tile size varies (tiles per byte), query fan-out
+/// varies (flops per byte: GQA groups, cascade members, draft rows).
+fn workload_points(case: &CalibrationCase, seed: u64) -> Result<Vec<CalibrationPoint>> {
+    let d = 32;
+    let mut points = Vec::new();
+    for i in 0..3u32 {
+        let ctx = (case.scale << i) as u32;
+        let tile = [32usize, 64, 128][i as usize];
+        let shape = format!("x{}", 1u32 << i);
+
+        // flat: 4 independent lanes, ungrouped (queries = 1 per stream).
+        let flat = CascadeProblem::new(
+            4,
+            vec![ctx, ctx + 7, ctx / 2 + 3, ctx],
+            d,
+            Vec::new(),
+        )?
+        .with_tile(tile);
+        let t = CascadeTensors::random(&flat, seed ^ u64::from(i));
+        points.push(measure_point(&flat, &t, case, "flat", shape.clone()));
+
+        // cascade: two prefix groups over 4 lanes (shared streams serve
+        // 2 query rows each).
+        let cascade = CascadeProblem::new(
+            4,
+            vec![ctx, ctx, ctx + 5, ctx + 5],
+            d,
+            vec![
+                PrefixGroup { prefix_len: ctx / 2, members: vec![0, 1] },
+                PrefixGroup { prefix_len: ctx / 4, members: vec![2, 3] },
+            ],
+        )?
+        .with_tile(tile)
+        .tile_aligned();
+        let t = CascadeTensors::random(&cascade, seed ^ 0x10 ^ u64::from(i));
+        points.push(measure_point(&cascade, &t, case, "cascade", shape.clone()));
+
+        // gqa: 4 query heads over 1 KV head (queries = 4 per stream).
+        let gqa = CascadeProblem::new(4, vec![ctx, ctx + 9], d, Vec::new())?
+            .with_tile(tile)
+            .with_kv_heads(1);
+        let t = CascadeTensors::random(&gqa, seed ^ 0x20 ^ u64::from(i));
+        points.push(measure_point(&gqa, &t, case, "gqa", shape.clone()));
+
+        // multi-query: 2 draft blocks of 5 rows sharing their base
+        // context (the spec-verify shape).
+        let mq = MultiQueryProblem {
+            heads: 4,
+            kv_heads: 4,
+            head_dim: d,
+            seqs: vec![
+                MultiQuerySeq { base_len: ctx as usize, q_len: 5 },
+                MultiQuerySeq { base_len: ctx as usize / 2, q_len: 5 },
+            ],
+            tile,
+            families: Vec::new(),
+        };
+        let inputs = MultiQueryInputs::random(&mq, seed ^ 0x30 ^ u64::from(i));
+        let (mq_cp, mq_t) = mq.tensors(&inputs)?;
+        points.push(measure_point(&mq_cp, &mq_t, case, "multi-query", shape.clone()));
+
+        // sparse: 2 lanes, every other 16-token page selected — the
+        // compacted problem the engine's sparse decode executes.
+        let page = 16usize;
+        let n = ctx as usize;
+        let lens = vec![ctx, ctx - (ctx / 3)];
+        let mut rng = Rng::new(seed ^ 0x40 ^ u64::from(i));
+        let q = rng.normal_vec(2 * 4 * d);
+        let k = rng.normal_vec(2 * 4 * n * d);
+        let v = rng.normal_vec(2 * 4 * n * d);
+        let selections: Vec<Vec<usize>> = lens
+            .iter()
+            .map(|&l| (0..(l as usize).div_ceil(page)).step_by(2).collect())
+            .collect();
+        let (sp_cp, sp_t) = sparse_compact_problem(
+            &q, &k, &v, &lens, 4, 4, n, d, page, &selections, tile,
+        )?;
+        points.push(measure_point(&sp_cp, &sp_t, case, "sparse", shape.clone()));
+    }
+    Ok(points)
+}
+
+/// Non-negative least squares over the three work columns (bytes,
+/// flops, tiles) against measured nanoseconds: solve the normal
+/// equations, and while any active coefficient fits negative, clamp it
+/// to zero and refit the rest (physical costs cannot be negative).
+fn fit(points: &[CalibrationPoint]) -> CostCoefficients {
+    let row = |p: &CalibrationPoint| {
+        [
+            p.work.gathered_kv_bytes as f64,
+            p.work.softmax_flops as f64,
+            p.work.tiles as f64,
+        ]
+    };
+    let mut active = [true; 3];
+    loop {
+        // Normal equations over the active columns.
+        let cols: Vec<usize> = (0..3).filter(|&c| active[c]).collect();
+        if cols.is_empty() {
+            return CostCoefficients::default();
+        }
+        let n = cols.len();
+        let mut ata = vec![vec![0.0f64; n]; n];
+        let mut aty = vec![0.0f64; n];
+        for p in points {
+            let r = row(p);
+            let y = p.measured_us * 1e3; // ns
+            for (a, &ca) in cols.iter().enumerate() {
+                aty[a] += r[ca] * y;
+                for (b, &cb) in cols.iter().enumerate() {
+                    ata[a][b] += r[ca] * r[cb];
+                }
+            }
+        }
+        // Gaussian elimination with partial pivoting.
+        let mut x = vec![0.0f64; n];
+        let mut singular = false;
+        for col in 0..n {
+            let piv = (col..n)
+                .max_by(|&a, &b| ata[a][col].abs().total_cmp(&ata[b][col].abs()))
+                .unwrap();
+            if ata[piv][col].abs() < 1e-12 {
+                singular = true;
+                break;
+            }
+            ata.swap(col, piv);
+            aty.swap(col, piv);
+            for r in col + 1..n {
+                let f = ata[r][col] / ata[col][col];
+                for c in col..n {
+                    ata[r][c] -= f * ata[col][c];
+                }
+                aty[r] -= f * aty[col];
+            }
+        }
+        if singular {
+            // Drop the last active column and retry.
+            active[*cols.last().unwrap()] = false;
+            continue;
+        }
+        for r in (0..n).rev() {
+            let mut s = aty[r];
+            for c in r + 1..n {
+                s -= ata[r][c] * x[c];
+            }
+            x[r] = s / ata[r][r];
+        }
+        let mut coefs = [0.0f64; 3];
+        for (i, &c) in cols.iter().enumerate() {
+            coefs[c] = x[i];
+        }
+        // Clamp the most negative coefficient, if any, and refit.
+        if let Some(worst) = (0..3)
+            .filter(|&c| active[c] && coefs[c] < 0.0)
+            .min_by(|&a, &b| coefs[a].total_cmp(&coefs[b]))
+        {
+            active[worst] = false;
+            continue;
+        }
+        return CostCoefficients {
+            ns_per_byte: coefs[0],
+            ns_per_flop: coefs[1],
+            tile_overhead_ns: coefs[2],
+        };
+    }
+}
+
+/// Run the full calibration: traced workloads, the non-negative
+/// least-squares fit, and the drift report.
+pub fn run_calibration(case: CalibrationCase, seed: u64) -> Result<CalibrationReport> {
+    let points = workload_points(&case, seed)?;
+    ensure!(points.iter().all(|p| p.measured_us.is_finite()), "timing failed");
+    let coefficients = fit(&points);
+    Ok(CalibrationReport { case, coefficients, points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic points generated from known coefficients must fit back
+    /// to those coefficients (the fitter is exact on exact data).
+    #[test]
+    fn fit_recovers_known_coefficients_exactly() {
+        let truth = CostCoefficients {
+            ns_per_byte: 0.25,
+            ns_per_flop: 0.02,
+            tile_overhead_ns: 150.0,
+        };
+        let mut points = Vec::new();
+        for (i, (bytes, flops, tiles)) in [
+            (100_000u64, 400_000u64, 12u64),
+            (250_000, 500_000, 40),
+            (60_000, 900_000, 9),
+            (500_000, 2_000_000, 31),
+            (90_000, 90_000, 77),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let work = WorkAccounting {
+                tiles: *tiles,
+                gathered_kv_bytes: *bytes,
+                softmax_flops: *flops,
+                rescale_folds: 1,
+            };
+            points.push(CalibrationPoint {
+                strategy: ["flat", "cascade"][i % 2],
+                shape: format!("p{i}"),
+                work,
+                measured_us: truth.predict_us(&work),
+            });
+        }
+        let fitted = fit(&points);
+        assert!((fitted.ns_per_byte - truth.ns_per_byte).abs() < 1e-6, "{fitted:?}");
+        assert!((fitted.ns_per_flop - truth.ns_per_flop).abs() < 1e-6, "{fitted:?}");
+        assert!(
+            (fitted.tile_overhead_ns - truth.tile_overhead_ns).abs() < 1e-3,
+            "{fitted:?}"
+        );
+        let report = CalibrationReport {
+            case: CalibrationCase::smoke(),
+            coefficients: fitted,
+            points,
+        };
+        assert!(report.max_rel_err() < 1e-6);
+        assert_eq!(report.per_strategy().len(), 2);
+    }
+
+    /// A negative fit (e.g. anti-correlated noise) is clamped to zero
+    /// rather than producing a negative physical cost.
+    #[test]
+    fn fit_clamps_negative_coefficients() {
+        // Two points where time *decreases* as tiles increase: the tile
+        // coefficient wants to be negative, and must clamp to zero.
+        let mk = |bytes: u64, tiles: u64, us: f64| CalibrationPoint {
+            strategy: "flat",
+            shape: "t".into(),
+            work: WorkAccounting {
+                tiles,
+                gathered_kv_bytes: bytes,
+                softmax_flops: 0,
+                rescale_folds: 0,
+            },
+            measured_us: us,
+        };
+        let points =
+            vec![mk(1000, 50, 1.0), mk(2000, 20, 2.0), mk(3000, 80, 2.9)];
+        let fitted = fit(&points);
+        assert!(fitted.ns_per_byte >= 0.0);
+        assert!(fitted.ns_per_flop >= 0.0);
+        assert!(fitted.tile_overhead_ns >= 0.0);
+    }
+
+    /// End-to-end smoke: the traced workloads produce a fit whose
+    /// drift stays within a (deliberately loose, debug-build-safe)
+    /// bound for every strategy, and the report serializes.
+    #[test]
+    fn calibration_fits_all_strategies_within_bound() {
+        let case = CalibrationCase { iters: 2, scale: 96, slots: 12, batch_rows: 64 };
+        let report = run_calibration(case, 7).unwrap();
+        assert_eq!(report.points.len(), 15, "5 strategies x 3 scales");
+        let drift = report.per_strategy();
+        assert_eq!(drift.len(), 5);
+        for d in &drift {
+            // Debug builds and CI noise allowed for; the CLI asserts a
+            // much tighter bound on release-built runs.
+            assert!(
+                d.max_rel_err < 10.0,
+                "strategy {} drifted {}x",
+                d.strategy,
+                d.max_rel_err
+            );
+        }
+        let j = report.to_json();
+        assert_eq!(j.at("points").as_arr().unwrap().len(), 15);
+        assert!(!report.render().is_empty());
+    }
+}

@@ -1,7 +1,7 @@
 //! Engine observability plane.
 //!
 //! Everything the serving stack measures about itself lives here, in
-//! four layers that the coordinator threads through its hot paths:
+//! layers that the coordinator threads through its hot paths:
 //!
 //! - [`tracer`] — structured step tracing: lexically-scoped [`Span`]s
 //!   over a fixed-capacity ring buffer with a monotonic step clock and
@@ -15,16 +15,32 @@
 //! - [`snapshot`] — the versioned [`MetricsSnapshot`] both exporters
 //!   (Prometheus text, JSON) serialize, so no counter can reach one
 //!   export format and silently miss the other.
+//! - [`attrib`] — exact per-tile work accounting ([`WorkAccounting`])
+//!   derived from the partitioner's own structures: the one source of
+//!   flop/byte/tile/fold numbers for the engine, the simulator, and
+//!   the bench harnesses.
+//! - [`calibrate`] — fits [`crate::sim::CostCoefficients`] from traced
+//!   host-executor runs joined with the accounting, and reports the
+//!   per-strategy sim-vs-measured drift (`leanattn calibrate`).
+//! - [`benchlog`] — the versioned machine-readable [`BenchReport`]
+//!   every bench harness emits (`--json-out`) and the baseline
+//!   regression gate compares (`--check-against`).
 //!
 //! The plane is feature-cheap by construction: a disabled [`Tracer`]
 //! reads no clocks and allocates nothing, and `leanattn bench --obs`
 //! measures that overhead and asserts it under 2%.
 
+pub mod attrib;
+pub mod benchlog;
+pub mod calibrate;
 pub mod hist;
 pub mod snapshot;
 pub mod timeline;
 pub mod tracer;
 
+pub use attrib::WorkAccounting;
+pub use benchlog::{compare_reports, validate_bench_report, BenchReport, BENCH_SCHEMA_VERSION};
+pub use calibrate::{run_calibration, CalibrationReport};
 pub use hist::LogHistogram;
 pub use snapshot::{Metric, MetricKind, MetricsSnapshot, SNAPSHOT_VERSION};
 pub use timeline::{Quantiles, RequestTimeline, SloReport, TimelineRecorder};

@@ -98,6 +98,10 @@ pub struct Attrs {
     pub pages: Option<usize>,
     /// Bytes moved (KV gathered / written).
     pub bytes: Option<u64>,
+    /// Exact online-softmax flops the span executes
+    /// ([`crate::obs::attrib::WorkAccounting::softmax_flops`]) — with
+    /// `bytes`, lets Perfetto derive bandwidth/throughput tracks.
+    pub flops: Option<u64>,
     /// Draft length / committed tokens / lane count — phase-dependent.
     pub k: Option<usize>,
 }
@@ -308,6 +312,9 @@ impl Tracer {
                 if let Some(bytes) = ev.attrs.bytes {
                     args.insert("bytes".to_string(), Json::Num(bytes as f64));
                 }
+                if let Some(flops) = ev.attrs.flops {
+                    args.insert("flops".to_string(), Json::Num(flops as f64));
+                }
                 if let Some(k) = ev.attrs.k {
                     args.insert("k".to_string(), Json::Num(k as f64));
                 }
@@ -363,6 +370,16 @@ pub fn validate_chrome_trace(trace: &Json) -> Result<()> {
             args.get("step").and_then(Json::as_f64).is_some(),
             "event {i} args missing the step clock"
         );
+        // Optional work-accounting attrs must be non-negative numbers
+        // when present — Perfetto derives bandwidth tracks from them.
+        for key in ["seq", "pages", "bytes", "flops", "k", "depth"] {
+            if let Some(v) = args.get(key) {
+                let n = v.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("event {i} arg {key} not a number")
+                })?;
+                ensure!(n >= 0.0, "event {i} arg {key} is negative");
+            }
+        }
     }
     Ok(())
 }
@@ -388,6 +405,10 @@ impl Span<'_> {
 
     pub fn set_bytes(&mut self, bytes: u64) {
         self.attrs.bytes = Some(bytes);
+    }
+
+    pub fn set_flops(&mut self, flops: u64) {
+        self.attrs.flops = Some(flops);
     }
 
     pub fn set_k(&mut self, k: usize) {
@@ -491,7 +512,9 @@ mod tests {
     fn chrome_export_validates_and_sorts() {
         let t = Tracer::enabled(16);
         {
-            let _s = t.span(Phase::LeanExec);
+            let mut s = t.span(Phase::LeanExec);
+            s.set_bytes(8192);
+            s.set_flops(65_536);
         }
         t.instant(Phase::SpecCommit, Attrs { k: Some(3), ..Default::default() });
         let trace = t.export_chrome_trace();
@@ -503,6 +526,29 @@ mod tests {
                 w[0].at("ts").as_f64().unwrap() <= w[1].at("ts").as_f64().unwrap()
             );
         }
+        // The work-accounting attrs ride into the exported args.
+        let exec = arr
+            .iter()
+            .find(|e| e.str_at("name") == "lean_exec")
+            .expect("lean_exec event exported");
+        assert_eq!(exec.at("args").at("bytes").as_f64(), Some(8192.0));
+        assert_eq!(exec.at("args").at("flops").as_f64(), Some(65_536.0));
+    }
+
+    #[test]
+    fn validator_rejects_negative_work_attrs() {
+        let bad = Json::parse(
+            r#"[{"name":"gather","ph":"X","ts":0,"dur":1,"pid":0,"tid":0,
+                 "args":{"step":0,"flops":-5}}]"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&bad).is_err());
+        let bad_type = Json::parse(
+            r#"[{"name":"gather","ph":"X","ts":0,"dur":1,"pid":0,"tid":0,
+                 "args":{"step":0,"bytes":"lots"}}]"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&bad_type).is_err());
     }
 
     #[test]

@@ -481,10 +481,7 @@ pub fn roll_cascade_tasks(problem: &CascadeProblem, cplan: &CascadePlan) -> Vec<
 /// group size — so this is exactly what the cascade executor gathers,
 /// and, on a plan without prefix groups, what the flat lean path gathers.
 pub fn rolled_kv_bytes(tasks: &[CascadeTask], head_dim: usize) -> usize {
-    tasks
-        .iter()
-        .map(|t| 2 * t.width * head_dim * std::mem::size_of::<f32>())
-        .sum()
+    crate::obs::attrib::tasks_kv_bytes(tasks, head_dim) as usize
 }
 
 /// Resolve a task's K/V slice inside the deduplicated cascade tensors.
@@ -625,15 +622,32 @@ pub fn lean_cascade_host_traced(
     let d = problem.head_dim;
     let gather_start = tracer.now();
     let tasks = roll_cascade_tasks(problem, cplan);
-    let bytes = Some(rolled_kv_bytes(&tasks, d) as u64);
-    tracer.record_since(Phase::Gather, gather_start, Attrs { bytes, ..Default::default() });
+    // Work attribution comes from the same accounting the simulator and
+    // bench reports price — modeled and traced work cannot drift.
+    let work = if tracer.is_enabled() {
+        crate::obs::attrib::account_cascade_tasks(problem, &tasks)
+    } else {
+        crate::obs::attrib::WorkAccounting::default()
+    };
+    tracer.record_since(
+        Phase::Gather,
+        gather_start,
+        Attrs { bytes: Some(work.gathered_kv_bytes), ..Default::default() },
+    );
     let exec_start = tracer.now();
     let out = run_cascade_tasks(problem, t, &tasks, batch_rows, |q, k, v, valid, rows, w| {
         Ok(partial_attention_host(q, k, v, rows, w, d, valid, 0))
     })
     .expect("host partials cannot fail");
-    let k_attr = Some(tasks.len());
-    tracer.record_since(Phase::LeanExec, exec_start, Attrs { k: k_attr, ..Default::default() });
+    tracer.record_since(
+        Phase::LeanExec,
+        exec_start,
+        Attrs {
+            k: Some(tasks.len()),
+            flops: Some(work.softmax_flops),
+            ..Default::default()
+        },
+    );
     out
 }
 

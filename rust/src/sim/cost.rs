@@ -8,6 +8,7 @@
 //! an MXU/ALU floor that only matters for tiny tiles.
 
 use super::arch::GpuArch;
+use crate::obs::attrib::WorkAccounting;
 use crate::partition::plan::Strategy;
 
 /// Per-strategy per-tile execution cost on a given architecture.
@@ -67,6 +68,33 @@ pub fn kv_stream_bytes(tiles: u64, tile: usize, head_dim: usize) -> f64 {
     tiles as f64 * 2.0 * tile as f64 * head_dim as f64 * KV_BYTES
 }
 
+/// Calibrated execution-cost coefficients over the exact
+/// [`WorkAccounting`] units: the linear model
+/// `t_us = ns_per_byte · bytes + ns_per_flop · flops + tile_overhead_ns
+/// · tiles` (all divided by 1000), fitted by `leanattn calibrate` from
+/// traced host-executor runs ([`crate::obs::calibrate`]). Bytes are the
+/// host executor's gathered-f32 bytes — not the fp16 device bytes
+/// [`KV_BYTES`] models — so the two cost surfaces stay distinguishable.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostCoefficients {
+    /// Nanoseconds per gathered KV byte (memory/gather term).
+    pub ns_per_byte: f64,
+    /// Nanoseconds per online-softmax flop (compute term).
+    pub ns_per_flop: f64,
+    /// Fixed nanoseconds per LeanTile visited (issue/setup overhead).
+    pub tile_overhead_ns: f64,
+}
+
+impl CostCoefficients {
+    /// Predicted execution time, in microseconds, for exact work `w`.
+    pub fn predict_us(&self, w: &WorkAccounting) -> f64 {
+        (self.ns_per_byte * w.gathered_kv_bytes as f64
+            + self.ns_per_flop * w.softmax_flops as f64
+            + self.tile_overhead_ns * w.tiles as f64)
+            / 1e3
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +145,24 @@ mod tests {
         // 1 tile of 256 x 64 fp16: 2 tensors * 256 * 64 * 2 bytes = 64 KiB.
         assert_eq!(kv_stream_bytes(1, 256, 64), 65536.0);
         assert_eq!(kv_stream_bytes(10, 256, 64), 655360.0);
+    }
+
+    #[test]
+    fn coefficients_price_exact_work_linearly() {
+        let c = CostCoefficients {
+            ns_per_byte: 0.5,
+            ns_per_flop: 0.01,
+            tile_overhead_ns: 100.0,
+        };
+        let w = WorkAccounting {
+            tiles: 10,
+            gathered_kv_bytes: 2000,
+            softmax_flops: 50_000,
+            rescale_folds: 20,
+        };
+        // 0.5*2000 + 0.01*50000 + 100*10 = 1000 + 500 + 1000 ns = 2.5 us.
+        assert!((c.predict_us(&w) - 2.5).abs() < 1e-12);
+        assert_eq!(CostCoefficients::default().predict_us(&w), 0.0);
     }
 
     #[test]

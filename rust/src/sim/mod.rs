@@ -20,7 +20,7 @@ pub mod timeshare;
 
 pub use arch::GpuArch;
 pub use cascade::{simulate_cascade, CascadeSimResult};
-pub use cost::TileCost;
+pub use cost::{CostCoefficients, TileCost};
 pub use sampling::{simulate_fork_decode, ForkDecodeCase, ForkDecodeResult};
 pub use schedule::{simulate, simulate_plan, SimResult};
 pub use sparse::{simulate_sparse_decode, SparseDecodeCase, SparseSimResult};

@@ -1,0 +1,275 @@
+//! Property tests for the work-attribution plane (`obs::attrib`): the
+//! single accounting function must agree **bit-exactly** with every
+//! consumer that claims to do the same arithmetic — stream-K plans of
+//! any strategy, rolled cascade task lists, and the paged KV cache's
+//! gather byte counters (the numbers the engine exports as
+//! `attrib_*_bytes_total` metrics). Any drift between these means a
+//! perf-attribution report is lying about where the bytes went.
+
+use lean_attention::coordinator::PagedKvCache;
+use lean_attention::obs::attrib::{
+    account_cascade_problem, account_cascade_tasks, account_decode_problem,
+    account_plan, flat_gather_bytes, selected_gather_bytes,
+    shared_gather_bytes,
+};
+use lean_attention::partition::planners::build_plan;
+use lean_attention::partition::{
+    build_cascade_plan, CascadeProblem, DecodeProblem, PrefixGroup, Strategy,
+};
+use lean_attention::runtime::attention_exec::{
+    roll_cascade_tasks, rolled_kv_bytes,
+};
+use lean_attention::util::rng::Rng;
+use lean_attention::util::testing::prop_check;
+
+// ------------------------------------------------------- plan accounting
+
+/// Work is a property of the *problem*, not of how a plan slices it:
+/// every strategy covers each KV stream exactly once, so accounting a
+/// plan segment-by-segment must reproduce the problem totals exactly.
+#[test]
+fn every_strategy_accounts_identically_to_its_problem() {
+    prop_check("account_plan == account_decode_problem", 40, |rng| {
+        let kv_heads = *rng.choose(&[1usize, 2, 4]);
+        let heads = kv_heads * rng.urange(1, 4);
+        let batch = rng.urange(1, 6);
+        let lens: Vec<u32> =
+            (0..batch).map(|_| rng.urange(1, 400) as u32).collect();
+        let d = *rng.choose(&[8usize, 16, 32]);
+        let tile = *rng.choose(&[16usize, 32, 64]);
+        let p = DecodeProblem::ragged(heads, lens, d)
+            .with_tile(tile)
+            .with_kv_heads(kv_heads);
+        let want = account_decode_problem(&p);
+        if want.tiles != p.total_tiles() {
+            return Err(format!(
+                "problem accounting counts {} tiles, planner geometry says {}",
+                want.tiles,
+                p.total_tiles()
+            ));
+        }
+        let slots = rng.urange(1, 80);
+        for strategy in
+            [Strategy::Dense, Strategy::StreamK, Strategy::fixed_split_auto(&p, slots)]
+        {
+            let plan = build_plan(&p, strategy, slots);
+            plan.validate(&p).map_err(|e| format!("{strategy:?}: {e}"))?;
+            let got = account_plan(&p, &plan);
+            if got != want {
+                return Err(format!(
+                    "{strategy:?}: plan work {got:?} != problem work {want:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------- cascade accounting
+
+/// Rolled cascade tasks are the executor's ground truth of what it
+/// gathers; the closed-form problem accounting must match them task for
+/// task — including the KV-byte total `rolled_kv_bytes` reports.
+#[test]
+fn rolled_cascade_tasks_account_identically_to_the_problem() {
+    prop_check("cascade tasks == cascade problem work", 40, |rng| {
+        let kv_heads = *rng.choose(&[1usize, 2]);
+        let heads = kv_heads * rng.urange(1, 4);
+        let tile = *rng.choose(&[16usize, 32]);
+        let d = 16;
+        let batch = rng.urange(2, 7);
+        let ctx_lens: Vec<u32> =
+            (0..batch).map(|_| rng.urange(tile, 8 * tile) as u32).collect();
+        // Disjoint prefix groups over consecutive lanes, random prefixes
+        // (tile_aligned() floors them and drops sub-tile groups).
+        let mut groups = Vec::new();
+        let mut lane = 0;
+        while lane + 1 < batch {
+            let take = rng.urange(2, 4).min(batch - lane);
+            if rng.chance(0.7) {
+                let members: Vec<u32> =
+                    (lane..lane + take).map(|m| m as u32).collect();
+                let min_ctx = members
+                    .iter()
+                    .map(|&m| ctx_lens[m as usize])
+                    .min()
+                    .unwrap();
+                let prefix_len = rng.range(1, u64::from(min_ctx) + 1) as u32;
+                groups.push(PrefixGroup { prefix_len, members });
+            }
+            lane += take;
+        }
+        let p = CascadeProblem::new(heads, ctx_lens, d, groups)
+            .map_err(|e| e.to_string())?
+            .with_tile(tile)
+            .with_kv_heads(kv_heads)
+            .tile_aligned();
+        let want = account_cascade_problem(&p);
+        let cplan = build_cascade_plan(&p, rng.urange(1, 64));
+        cplan
+            .plan
+            .validate(&cplan.segment_problem)
+            .map_err(|e| e.to_string())?;
+        let tasks = roll_cascade_tasks(&p, &cplan);
+        let got = account_cascade_tasks(&p, &tasks);
+        if got != want {
+            return Err(format!(
+                "task work {got:?} != problem work {want:?} \
+                 ({} groups, tile {tile})",
+                p.prefix_groups.len()
+            ));
+        }
+        if rolled_kv_bytes(&tasks, d) as u64 != want.gathered_kv_bytes {
+            return Err(format!(
+                "rolled_kv_bytes {} != accounted bytes {}",
+                rolled_kv_bytes(&tasks, d),
+                want.gathered_kv_bytes
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------- cache gather counters
+
+const LAYERS: usize = 1;
+const DH: usize = 4;
+const PT: usize = 8;
+
+fn token_pair(rng: &mut Rng, kv_heads: usize, tokens: usize) -> (Vec<f32>, Vec<f32>) {
+    let n = LAYERS * kv_heads * DH * tokens;
+    (rng.normal_vec(n), rng.normal_vec(n))
+}
+
+/// The engine's shared-gather byte counters (what `attrib_*_bytes_total`
+/// accumulates) must equal the closed-form predictions bit-exactly, for
+/// fork families with divergent suffixes, loner lanes and empty slots.
+/// The predicted prefix group is the parent history floored to full
+/// pages — copy-on-write keeps exactly those pages physically shared.
+#[test]
+fn cache_shared_gather_counters_match_attrib_predictions_bit_exactly() {
+    prop_check("gather_shared == attrib prediction", 25, |rng| {
+        let kv_heads = *rng.choose(&[1usize, 2]);
+        let mut cache = PagedKvCache::new(LAYERS, kv_heads, DH, PT, 512);
+        let mut slots: Vec<Option<u64>> = Vec::new();
+        let mut groups: Vec<PrefixGroup> = Vec::new();
+        let mut next_id = 0u64;
+        for _family in 0..rng.urange(1, 4) {
+            let history = rng.urange(1, 5 * PT);
+            let siblings = rng.urange(2, 5);
+            let parent = next_id;
+            next_id += 1;
+            let (k, v) = token_pair(rng, kv_heads, history);
+            cache.insert_seq(parent, &k, &v, history).map_err(|e| e.to_string())?;
+            // Fork the whole family before anyone appends, so the shared
+            // history is exactly `history` tokens.
+            let mut ids = vec![parent];
+            for _ in 1..siblings {
+                let child = next_id;
+                next_id += 1;
+                cache.fork_seq(parent, child).map_err(|e| e.to_string())?;
+                ids.push(child);
+            }
+            let mut members = Vec::new();
+            for id in ids {
+                members.push(slots.len() as u32);
+                slots.push(Some(id));
+                for _ in 0..rng.urange(0, 2 * PT) {
+                    let (tk, tv) = token_pair(rng, kv_heads, 1);
+                    cache.append_token(id, &tk, &tv).map_err(|e| e.to_string())?;
+                }
+            }
+            groups.push(PrefixGroup {
+                prefix_len: ((history / PT) * PT) as u32,
+                members,
+            });
+        }
+        // Loner lanes and holes: flat traffic only, no sharing.
+        for _ in 0..rng.urange(0, 5) {
+            if rng.chance(0.3) {
+                slots.push(None);
+                continue;
+            }
+            let len = rng.urange(1, 4 * PT);
+            let id = next_id;
+            next_id += 1;
+            let (k, v) = token_pair(rng, kv_heads, len);
+            cache.insert_seq(id, &k, &v, len).map_err(|e| e.to_string())?;
+            slots.push(Some(id));
+        }
+
+        let lens: Vec<u32> = slots
+            .iter()
+            .map(|s| s.map_or(0, |id| cache.seq_len(id).unwrap() as u32))
+            .collect();
+        let tb = cache.token_bytes();
+        let sg = cache.gather_shared(&slots).map_err(|e| e.to_string())?;
+        if sg.flat_bytes as u64 != flat_gather_bytes(&lens, tb) {
+            return Err(format!(
+                "flat: cache counted {} bytes, attrib predicts {}",
+                sg.flat_bytes,
+                flat_gather_bytes(&lens, tb)
+            ));
+        }
+        let want = shared_gather_bytes(&lens, &groups, tb);
+        if sg.shared_bytes as u64 != want {
+            return Err(format!(
+                "shared: cache counted {} bytes, attrib predicts {want} \
+                 (lens {lens:?}, groups {groups:?})",
+                sg.shared_bytes
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Sparse selection byte counters: over independent lanes (no physical
+/// page sharing) the selected gather streams exactly the selected
+/// tokens of each lane, and its `flat_bytes` still reports the dense
+/// traffic the selection avoided — both closed forms in `obs::attrib`.
+#[test]
+fn cache_selected_gather_counters_match_attrib_predictions_bit_exactly() {
+    prop_check("gather_selected == attrib prediction", 25, |rng| {
+        let kv_heads = *rng.choose(&[1usize, 2]);
+        let mut cache = PagedKvCache::new(LAYERS, kv_heads, DH, PT, 512);
+        let batch = rng.urange(1, 7);
+        let mut slots: Vec<Option<u64>> = Vec::new();
+        let mut sels: Vec<Vec<usize>> = Vec::new();
+        let mut lens: Vec<usize> = Vec::new();
+        for id in 0..batch as u64 {
+            let len = rng.urange(1, 6 * PT);
+            let (k, v) = token_pair(rng, kv_heads, len);
+            cache.insert_seq(id, &k, &v, len).map_err(|e| e.to_string())?;
+            // Random ascending page subset; may be empty (lane skipped).
+            let used = len.div_ceil(PT);
+            let sel: Vec<usize> =
+                (0..used).filter(|_| rng.chance(0.5)).collect();
+            slots.push(Some(id));
+            sels.push(sel);
+            lens.push(len);
+        }
+        let tb = cache.token_bytes();
+        let sg = cache.gather_selected(&slots, &sels).map_err(|e| e.to_string())?;
+        let lens32: Vec<u32> = lens.iter().map(|&l| l as u32).collect();
+        if sg.flat_bytes as u64 != flat_gather_bytes(&lens32, tb) {
+            return Err(format!(
+                "dense side: cache counted {} bytes, attrib predicts {}",
+                sg.flat_bytes,
+                flat_gather_bytes(&lens32, tb)
+            ));
+        }
+        let want: u64 = lens
+            .iter()
+            .zip(&sels)
+            .map(|(&len, sel)| selected_gather_bytes(len, PT, sel, tb))
+            .sum();
+        if sg.shared_bytes as u64 != want {
+            return Err(format!(
+                "selected side: cache counted {} bytes, attrib predicts \
+                 {want} (lens {lens:?}, sels {sels:?})",
+                sg.shared_bytes
+            ));
+        }
+        Ok(())
+    });
+}

@@ -86,6 +86,7 @@ fn chrome_trace_round_trips_through_util_json() {
             s.set_seq(i);
             s.set_bytes(rng.range(0, 1 << 20));
             s.set_pages(rng.urange(0, 64));
+            s.set_flops(rng.range(0, 1 << 24));
         } else {
             t.instant(
                 Phase::SpecCommit,
