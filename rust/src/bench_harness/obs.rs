@@ -63,6 +63,9 @@ pub struct ObsCase {
     pub overhead_iters: usize,
     /// Asserted bound on the disabled tracer's min-of-samples overhead.
     pub overhead_limit: f64,
+    /// Asserted bound on the page-heat tracker's min-of-samples
+    /// overhead (the twin-cache gather measurement).
+    pub heat_overhead_limit: f64,
 }
 
 impl ObsCase {
@@ -84,6 +87,7 @@ impl ObsCase {
             slo_ms: 50.0,
             overhead_iters: 40,
             overhead_limit: 0.02,
+            heat_overhead_limit: 0.02,
         }
     }
 
@@ -117,6 +121,12 @@ pub struct ObsReport {
     /// Min-of-samples overhead of the *enabled* tracer on the same body
     /// (reported, not asserted — enabled tracing is opt-in).
     pub overhead_enabled: f64,
+    /// Min-of-samples overhead of the page-heat tracker on a flat
+    /// gather: twin caches with identical contents, one tracking heat
+    /// and one with the tracker disabled (asserted
+    /// `< heat_overhead_limit` — the heat plane is always on in the
+    /// engine, so it must be gather-cheap).
+    pub overhead_heat: f64,
     /// Exact work of one cascade-body pass (attrib-accounted — the same
     /// numbers the traced spans carry as `bytes`/`flops` attributes).
     pub work_body: WorkAccounting,
@@ -129,6 +139,8 @@ impl ObsReport {
              ({} dropped to overflow)\n\
              tracer overhead (min-of-samples on the cascade body): \
              disabled {:.2}% (bound {:.0}%), enabled {:.2}%\n\
+             heat-tracker overhead (twin-cache flat gather): {:.2}% \
+             (bound {:.0}%)\n\
              phase timings:\n{}",
             self.case.requests,
             self.events,
@@ -136,6 +148,8 @@ impl ObsReport {
             self.overhead_disabled * 100.0,
             self.case.overhead_limit * 100.0,
             self.overhead_enabled * 100.0,
+            self.overhead_heat * 100.0,
+            self.case.heat_overhead_limit * 100.0,
             self.phase_report,
         );
         s.push_str(&self.slo.render());
@@ -163,6 +177,7 @@ impl ObsReport {
         );
         r.info("overhead_disabled", self.overhead_disabled);
         r.info("overhead_enabled", self.overhead_enabled);
+        r.info("overhead_heat", self.overhead_heat);
         r.info("slo_attainment", self.slo.attainment);
         r.info("tokens_per_s", self.slo.tokens_per_s);
         r
@@ -184,6 +199,46 @@ fn cascade_body(case: &ObsCase, seed: u64) -> Result<(CascadeProblem, CascadeTen
     let cp = build_cascade_plan(&p, case.slots);
     cp.plan.validate(&cp.segment_problem)?;
     Ok((p, t, cp))
+}
+
+/// Page-heat tracker overhead: the same flat gather sampled over twin
+/// caches with identical contents — one tracking heat (the engine
+/// default), one with the tracker disabled. Min-of-samples on each side
+/// isolates the per-page `Cell` bumps from scheduler noise.
+fn heat_overhead(case: &ObsCase, seed: u64) -> Result<f64> {
+    use crate::coordinator::PagedKvCache;
+    use crate::util::rng::Rng;
+
+    let (layers, page_tokens, pages, lanes) = (2usize, 8usize, 64usize, 4u64);
+    let len = (case.prefix + case.suffix) as usize;
+    let mut hot = PagedKvCache::new(layers, case.heads, case.head_dim, page_tokens, pages);
+    let mut cold = PagedKvCache::new(layers, case.heads, case.head_dim, page_tokens, pages);
+    cold.disable_heat();
+    let plane = layers * case.heads * case.head_dim;
+    let mut rng = Rng::new(seed);
+    for id in 1..=lanes {
+        let k: Vec<f32> =
+            (0..plane * len).map(|_| rng.range(0, 2048) as f32 / 1024.0 - 1.0).collect();
+        let v: Vec<f32> =
+            (0..plane * len).map(|_| rng.range(0, 2048) as f32 / 1024.0 - 1.0).collect();
+        hot.insert_seq(id, &k, &v, len)?;
+        cold.insert_seq(id, &k, &v, len)?;
+    }
+    let slots: Vec<Option<u64>> = (1..=lanes).map(Some).collect();
+    let ctx = pages * page_tokens;
+    let n = layers * slots.len() * case.heads * ctx * case.head_dim;
+    let (mut kb, mut vb) = (vec![0.0f32; n], vec![0.0f32; n]);
+    let on = sample_us(case.overhead_iters, 0.0, || {
+        hot.gather(&slots, ctx, &mut kb, &mut vb).expect("hot gather");
+        std::hint::black_box(&kb);
+    });
+    let off = sample_us(case.overhead_iters, 0.0, || {
+        cold.gather(&slots, ctx, &mut kb, &mut vb).expect("cold gather");
+        std::hint::black_box(&kb);
+    });
+    let min_of = |s: &[f64]| s.iter().copied().fold(f64::INFINITY, f64::min);
+    let (mon, moff) = (min_of(&on), min_of(&off));
+    Ok(((mon - moff) / moff).max(0.0))
 }
 
 /// Run the observability bench. The speculative stream is asserted
@@ -277,6 +332,15 @@ pub fn run_obs(case: ObsCase, seed: u64) -> Result<ObsReport> {
         case.overhead_limit * 100.0
     );
 
+    // --- 4. page-heat tracker overhead on the flat gather -------------
+    let overhead_heat = heat_overhead(&case, seed)?;
+    ensure!(
+        overhead_heat < case.heat_overhead_limit,
+        "heat-tracker overhead {:.2}% exceeds the {:.0}% bound",
+        overhead_heat * 100.0,
+        case.heat_overhead_limit * 100.0
+    );
+
     Ok(ObsReport {
         case,
         events: tracer.len(),
@@ -286,6 +350,7 @@ pub fn run_obs(case: ObsCase, seed: u64) -> Result<ObsReport> {
         chrome,
         overhead_disabled,
         overhead_enabled,
+        overhead_heat,
         work_body: account_cascade_problem(&p),
     })
 }
@@ -296,8 +361,13 @@ mod tests {
 
     fn loose(case: ObsCase) -> ObsCase {
         // Debug builds + shared CI machines: keep the structural
-        // assertions, drop the timing bound out of flake range.
-        ObsCase { overhead_limit: 10.0, overhead_iters: 3, ..case }
+        // assertions, drop the timing bounds out of flake range.
+        ObsCase {
+            overhead_limit: 10.0,
+            heat_overhead_limit: 10.0,
+            overhead_iters: 3,
+            ..case
+        }
     }
 
     #[test]

@@ -34,7 +34,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::obs::{attrib, Attrs, MetricsSnapshot, Phase, TimelineRecorder, Tracer};
+use crate::obs::{
+    attrib, Attrs, CacheReport, FlightRecorder, FlightSnapshot, FlightTrigger,
+    MetricsSnapshot, Phase, TimelineRecorder, Tracer, Watchdog,
+};
 use crate::partition::cascade::{CascadeProblem, PrefixGroup};
 use crate::partition::plan::{DecodeProblem, Strategy};
 use crate::runtime::{Manifest, ModelRuntime, Runtime};
@@ -47,9 +50,53 @@ use crate::util::rng::Rng;
 
 use super::batcher::ContinuousBatcher;
 use super::kv_cache::PagedKvCache;
-use super::metrics::Metrics;
+use super::metrics::{GatherKind, Metrics};
 use super::radix::{PrefixMatch, RadixPrefixIndex};
 use super::request::{FinishReason, FinishedRequest, Request, RequestId};
+
+/// The sampled online invariant audit: which consistency checks run
+/// and how often. The checks are the debug-build validators promoted to
+/// a production sampling plan — cheap enough to leave on in serving,
+/// thorough enough to catch refcount leaks and radix/cache drift the
+/// moment they happen instead of steps later.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AuditPlan {
+    /// Run the audit every N engine steps; 0 disables sampling
+    /// (explicit [`Engine::run_audit`] calls still work).
+    pub every: usize,
+    /// Page-statistics-vs-data check ([`PagedKvCache::validate_page_meta`]).
+    pub page_meta: bool,
+    /// Free-list integrity (entries unique, in range, refcount zero,
+    /// and jointly exhaustive over zero-ref pages).
+    pub free_list: bool,
+    /// Refcount exactness: sequence holders plus radix-index holders
+    /// account for every page reference, page by page.
+    pub refcounts: bool,
+    /// Radix→cache consistency: every indexed page is live.
+    pub radix: bool,
+}
+
+impl AuditPlan {
+    /// All checks, sampled every `every` steps.
+    pub fn every(every: usize) -> AuditPlan {
+        AuditPlan { every, page_meta: true, free_list: true, refcounts: true, radix: true }
+    }
+
+    /// No sampling (the default).
+    pub fn disabled() -> AuditPlan {
+        AuditPlan { every: 0, ..AuditPlan::every(0) }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.every > 0
+    }
+}
+
+impl Default for AuditPlan {
+    fn default() -> Self {
+        AuditPlan::disabled()
+    }
+}
 
 /// Engine construction parameters.
 #[derive(Clone, Debug)]
@@ -92,6 +139,21 @@ pub struct EngineConfig {
     /// Structured-tracer ring capacity in events; `0` leaves the tracer
     /// disabled (near-zero overhead on every instrumented hot path).
     pub trace_capacity: usize,
+    /// Sampled online invariant audits (`serve --audit-every`); the
+    /// default plan never runs.
+    pub audit: AuditPlan,
+    /// Directory for anomaly flight-recorder bundles; `None` disables
+    /// the recorder (triggers are not even evaluated into bundles).
+    pub flight_dir: Option<String>,
+    /// Watchdog stall threshold in consecutive progress-free steps;
+    /// 0 disables the watchdog (always healthy).
+    pub watchdog_stall_steps: u64,
+    /// Flight trigger: prefix-index pages evicted within one step that
+    /// count as an eviction storm (0 disables the trigger).
+    pub eviction_storm_pages: usize,
+    /// Flight trigger: finished-request end-to-end latency (ms) above
+    /// which a step records an SLO-breach bundle (0 disables).
+    pub flight_slo_ms: f64,
 }
 
 impl Default for EngineConfig {
@@ -109,6 +171,11 @@ impl Default for EngineConfig {
             adaptive_spec: false,
             sparse: None,
             trace_capacity: 0,
+            audit: AuditPlan::disabled(),
+            flight_dir: None,
+            watchdog_stall_steps: 0,
+            eviction_storm_pages: 64,
+            flight_slo_ms: 0.0,
         }
     }
 }
@@ -190,6 +257,20 @@ pub struct Engine {
     pub tracer: Tracer,
     /// Per-request lifecycle timelines, fed at every finish site.
     pub timelines: TimelineRecorder,
+    /// Step-progress heartbeat (disabled unless
+    /// `config.watchdog_stall_steps > 0`).
+    watchdog: Watchdog,
+    /// Anomaly post-mortem recorder (enabled by `config.flight_dir`).
+    flight: Option<FlightRecorder>,
+    /// Engine iterations taken ([`Engine::step`] calls) — the audit
+    /// sampling clock and the step stamped into flight bundles.
+    steps: u64,
+    /// Prefix-index pages evicted during the current step (the
+    /// eviction-storm trigger input; reset at every step entry).
+    evicted_this_step: usize,
+    /// Engine bring-up time: the wall clock behind the SLO report text
+    /// frozen into flight bundles.
+    started: Instant,
     arch: GpuArch,
     next_id: RequestId,
     /// Pages committed to being (or becoming) allocated: the prefix
@@ -234,6 +315,8 @@ impl Engine {
         let mut metrics = Metrics::default();
         metrics.gqa.kv_heads = art.n_kv_heads;
         metrics.gqa.group_size = art.n_heads / art.n_kv_heads;
+        let watchdog = Watchdog::new(config.watchdog_stall_steps);
+        let flight = config.flight_dir.as_ref().map(FlightRecorder::new);
         Ok(Engine {
             config,
             model,
@@ -246,6 +329,11 @@ impl Engine {
             metrics,
             tracer,
             timelines: TimelineRecorder::default(),
+            watchdog,
+            flight,
+            steps: 0,
+            evicted_this_step: 0,
+            started: Instant::now(),
             arch: GpuArch::a100(),
             next_id: 1,
             committed_pages: 0,
@@ -388,10 +476,153 @@ impl Engine {
     /// step. Returns requests that finished during this iteration.
     pub fn step(&mut self) -> Result<Vec<FinishedRequest>> {
         self.tracer.advance_step();
+        self.steps += 1;
+        self.evicted_this_step = 0;
         let mut finished = Vec::new();
         self.admit_and_prefill(&mut finished)?;
         self.decode_once(&mut finished)?;
+        self.observe_step(&finished)?;
         Ok(finished)
+    }
+
+    /// Post-step health pass: advance the heat clock, run the sampled
+    /// invariant audit when due, beat the watchdog with the engine's
+    /// progress counter, and evaluate every flight trigger against this
+    /// step's outcome.
+    fn observe_step(&mut self, finished: &[FinishedRequest]) -> Result<()> {
+        self.cache.heat_tick();
+
+        if self.config.audit.is_enabled() && self.steps % self.config.audit.every as u64 == 0 {
+            let failures = self.run_audit();
+            if !failures.is_empty() {
+                self.record_flight(FlightTrigger::AuditFailure)?;
+            }
+        }
+
+        // Tokens plus prefill calls: any counter that moves whenever the
+        // engine does useful work serves as the heartbeat's progress.
+        let progress = (self.metrics.tokens_generated + self.metrics.prefill_calls) as u64;
+        if self.watchdog.beat(progress).is_some() {
+            self.record_flight(FlightTrigger::WatchdogStall)?;
+        }
+
+        if self.config.eviction_storm_pages > 0
+            && self.evicted_this_step >= self.config.eviction_storm_pages
+        {
+            self.record_flight(FlightTrigger::EvictionStorm)?;
+        }
+
+        if self.config.flight_slo_ms > 0.0 {
+            let slo_s = self.config.flight_slo_ms / 1e3;
+            if finished.iter().any(|f| f.queue_s + f.prefill_s + f.decode_s > slo_s) {
+                self.record_flight(FlightTrigger::SloBreach)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the configured invariant audit once, unconditionally: page
+    /// statistics against the stored data, free-list integrity,
+    /// refcount exactness (sequence holders plus radix-index holders
+    /// account for every page reference, page by page), and radix→cache
+    /// consistency (every indexed page is live). Returns the violations
+    /// — empty on a clean pass — and folds pass/fail/duration into the
+    /// audit counters.
+    pub fn run_audit(&mut self) -> Vec<String> {
+        let plan = self.config.audit;
+        let t0 = Instant::now();
+        let mut failures = Vec::new();
+        if plan.page_meta {
+            if let Err(e) = self.cache.validate_page_meta() {
+                failures.push(format!("page_meta: {e:#}"));
+            }
+        }
+        if plan.free_list {
+            if let Err(e) = self.cache.audit_free_list() {
+                failures.push(format!("free_list: {e:#}"));
+            }
+        }
+        if plan.refcounts || plan.radix {
+            let mut expect = self.cache.seq_page_refs();
+            for p in self.prefix_index.pages() {
+                match expect.get_mut(p) {
+                    Some(r) => *r += 1,
+                    None => failures.push(format!("radix: indexed page {p} out of range")),
+                }
+                if plan.radix && self.cache.page_ref(p) == 0 {
+                    failures.push(format!("radix: indexed page {p} is not live"));
+                }
+            }
+            if plan.refcounts {
+                for (p, &want) in expect.iter().enumerate() {
+                    let got = self.cache.page_ref(p);
+                    if got != want {
+                        failures.push(format!(
+                            "refcount: page {p} holds {got} refs, holders account for {want}"
+                        ));
+                    }
+                }
+            }
+        }
+        self.metrics.audit.runs += 1;
+        self.metrics.audit.failures += failures.len();
+        self.metrics.audit.audit_us += t0.elapsed().as_secs_f64() * 1e6;
+        failures
+    }
+
+    /// Freeze the live observability state into a post-mortem bundle
+    /// (no-op without a flight dir). Every part is rendered before the
+    /// recorder is touched so the bundle is a consistent cut.
+    fn record_flight(&mut self, trigger: FlightTrigger) -> Result<()> {
+        if self.flight.is_none() {
+            return Ok(());
+        }
+        let trace = self.tracer.export_chrome_trace();
+        let metrics = self.snapshot().to_json();
+        let cache_report = self.cache_report(8).to_json();
+        let slo_ms = if self.config.flight_slo_ms > 0.0 {
+            self.config.flight_slo_ms
+        } else {
+            1000.0
+        };
+        let slo_text = self
+            .timelines
+            .slo_report(slo_ms, self.started.elapsed().as_secs_f64())
+            .render();
+        let snap = FlightSnapshot {
+            trace: &trace,
+            metrics: &metrics,
+            cache_report: &cache_report,
+            slo_text: &slo_text,
+        };
+        let step = self.steps;
+        self.flight
+            .as_mut()
+            .unwrap()
+            .record(trigger, step, &snap)
+            .context("record flight bundle")?;
+        Ok(())
+    }
+
+    /// The KV-cache introspection report over the live pool, heat
+    /// tracker and (when prefix caching is on) the radix-index shape,
+    /// keeping the `top_k` hottest pages.
+    pub fn cache_report(&self, top_k: usize) -> CacheReport {
+        let radix = self
+            .config
+            .enable_prefix_cache
+            .then(|| self.prefix_index.stats());
+        self.cache.report(radix, top_k)
+    }
+
+    /// Flight bundle directories written so far.
+    pub fn flight_bundles(&self) -> u64 {
+        self.flight.as_ref().map_or(0, |f| f.bundles())
+    }
+
+    /// `false` from a fired watchdog stall until progress resumes.
+    pub fn healthy(&self) -> bool {
+        self.watchdog.healthy()
     }
 
     /// Point-in-time sample of every documented serving counter plus the
@@ -438,6 +669,58 @@ impl Engine {
             "trace_events_dropped_total",
             self.tracer.dropped() as f64,
             "Trace events dropped to ring overflow.",
+        );
+        let heat = self.cache.heat();
+        s.counter(
+            "kv_gather_page_touches_total",
+            heat.gather_total() as f64,
+            "Page touches recorded at the cache's gather sites (flat, shared, selected).",
+        );
+        s.counter(
+            "kv_append_page_touches_total",
+            heat.append_total() as f64,
+            "Page touches recorded at the cache's token-append site.",
+        );
+        s.counter(
+            "kv_select_page_touches_total",
+            heat.select_total() as f64,
+            "Page touches recorded by sparse page selection.",
+        );
+        s.counter(
+            "kv_cow_clones_total",
+            heat.cow_clones() as f64,
+            "Copy-on-write page clones performed by the cache.",
+        );
+        let report = self.cache_report(0);
+        s.gauge(
+            "kv_pool_fragmentation",
+            report.pool.fragmentation,
+            "Free-pool fragmentation: 1 - largest free run / free pages.",
+        );
+        s.gauge(
+            "radix_max_depth",
+            report.radix.as_ref().map_or(0.0, |r| r.max_depth as f64),
+            "Deepest chain in the radix prefix index, in pages.",
+        );
+        s.gauge(
+            "engine_healthy",
+            if self.watchdog.healthy() { 1.0 } else { 0.0 },
+            "1 while the watchdog sees step progress; 0 during a stall.",
+        );
+        s.counter(
+            "watchdog_stalls_total",
+            self.watchdog.stalls() as f64,
+            "Watchdog stall events fired.",
+        );
+        s.counter(
+            "flight_bundles_total",
+            self.flight_bundles() as f64,
+            "Flight-recorder post-mortem bundles written to disk.",
+        );
+        s.counter(
+            "flight_triggers_total",
+            self.flight.as_ref().map_or(0, |f| f.triggers()) as f64,
+            "Flight trigger firings observed (written plus cap-suppressed).",
         );
         s
     }
@@ -669,6 +952,7 @@ impl Engine {
                     }
                     self.committed_pages -= evicted.len();
                     self.metrics.prefix.evicted_pages += evicted.len();
+                    self.evicted_this_step += evicted.len();
                     if !evicted.is_empty() {
                         self.tracer.instant(
                             Phase::Evict,
@@ -1012,8 +1296,7 @@ impl Engine {
                 lens.push(compact as u32);
                 positions[bi] = compact as i32;
             }
-            self.metrics.sparse.gather_bytes_sparse += sparse_bytes;
-            self.metrics.attrib.gather_bytes += sparse_bytes;
+            self.metrics.record_gather(GatherKind::Selected, sparse_bytes);
             self.tracer.record_since(
                 Phase::Gather,
                 gather_start,
@@ -1076,10 +1359,10 @@ impl Engine {
                 sg.shared_bytes as u64,
             );
         }
-        // The gather moved kv-head-granular planes; the dense baseline
-        // (one KV head per query head) is group_size times larger.
-        self.metrics.gqa.record_gather(gather_bytes);
-        self.metrics.attrib.gather_bytes += gather_bytes;
+        // The gather moved kv-head-granular planes; record_gather scales
+        // the dense baseline (one KV head per query head) by group_size.
+        let kind = if groups.is_empty() { GatherKind::Flat } else { GatherKind::Shared };
+        self.metrics.record_gather(kind, gather_bytes);
         self.tracer.record_since(
             Phase::Gather,
             gather_start,

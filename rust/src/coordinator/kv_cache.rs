@@ -24,6 +24,7 @@
 use anyhow::{bail, ensure, Result};
 use std::collections::{BTreeMap, HashMap};
 
+use crate::obs::cache_stats::{CacheReport, HeatTracker, RadixStats, TouchKind};
 use crate::sparse::{page_upper_bound, select_pages, PageMeta, SparsePolicy};
 
 use super::request::RequestId;
@@ -48,6 +49,9 @@ pub struct PagedKvCache {
     ref_counts: Vec<u32>,
     free: Vec<usize>,
     seqs: HashMap<RequestId, SeqEntry>,
+    /// Page-heat telemetry, maintained at the gather / append / select /
+    /// alloc sites below (interior-mutable: gathers take `&self`).
+    heat: HeatTracker,
 }
 
 struct SeqEntry {
@@ -77,7 +81,76 @@ impl PagedKvCache {
             ref_counts: vec![0; num_pages],
             free: (0..num_pages).rev().collect(),
             seqs: HashMap::new(),
+            heat: HeatTracker::enabled(num_pages),
         }
+    }
+
+    /// The page-heat telemetry state.
+    pub fn heat(&self) -> &HeatTracker {
+        &self.heat
+    }
+
+    /// Advance the heat tracker's logical tick clock (once per engine /
+    /// churn step) — the unit page age is measured in.
+    pub fn heat_tick(&self) {
+        self.heat.tick();
+    }
+
+    /// Replace the heat tracker with an inert one — the bench harness's
+    /// comparison baseline for the heat-overhead measurement.
+    pub fn disable_heat(&mut self) {
+        self.heat = HeatTracker::disabled();
+    }
+
+    /// Build the versioned cache introspection report: every aggregate is
+    /// recomputed from scratch over the refcount map and heat state.
+    pub fn report(&self, radix: Option<RadixStats>, top_k: usize) -> CacheReport {
+        CacheReport::build(
+            &self.ref_counts,
+            &self.heat,
+            self.page_tokens,
+            self.token_bytes(),
+            radix,
+            top_k,
+        )
+    }
+
+    /// Per-page reference count attributable to cached sequences alone —
+    /// the sequence-side input to the engine's refcount-exactness audit
+    /// (the engine adds one per radix-indexed page and compares against
+    /// [`Self::page_ref`]).
+    pub fn seq_page_refs(&self) -> Vec<u32> {
+        let mut refs = vec![0u32; self.total_pages()];
+        for entry in self.seqs.values() {
+            for &p in &entry.pages {
+                refs[p] += 1;
+            }
+        }
+        refs
+    }
+
+    /// Free-list consistency audit: every free-list entry is unique, in
+    /// range and refcount-zero, and the list covers every refcount-zero
+    /// page. Test/debug surface alongside [`Self::validate_page_meta`].
+    pub fn audit_free_list(&self) -> Result<()> {
+        let mut seen = vec![false; self.total_pages()];
+        for &p in &self.free {
+            ensure!(p < self.total_pages(), "free-list page {p} out of range");
+            ensure!(!seen[p], "free-list page {p} listed twice");
+            ensure!(
+                self.ref_counts[p] == 0,
+                "free-list page {p} has refcount {}",
+                self.ref_counts[p]
+            );
+            seen[p] = true;
+        }
+        let zero = self.ref_counts.iter().filter(|&&r| r == 0).count();
+        ensure!(
+            zero == self.free.len(),
+            "{zero} pages have refcount 0 but the free list holds {}",
+            self.free.len()
+        );
+        Ok(())
     }
 
     pub fn free_pages(&self) -> usize {
@@ -155,6 +228,9 @@ impl PagedKvCache {
         debug_assert_eq!(self.ref_counts[p], 0);
         self.ref_counts[p] = 1;
         self.meta[p].reset();
+        // A reallocated page holds a new incarnation's data: its heat
+        // history belongs to the old one.
+        self.heat.reset_page(p);
         Some(p)
     }
 
@@ -376,6 +452,7 @@ impl PagedKvCache {
                 };
                 copy_page(&mut self.k_pages, page, fresh);
                 copy_page(&mut self.v_pages, page, fresh);
+                self.heat.record_cow();
                 // The clone's statistics cover exactly the rows this
                 // holder's view keeps — rows past `kept` are another
                 // holder's (or rolled-back) data about to be overwritten.
@@ -421,6 +498,7 @@ impl PagedKvCache {
             }
         }
         self.meta[page].commit_row(slot);
+        self.heat.touch(TouchKind::Append, page);
     }
 
     /// Gather a batch of sequences into contiguous decode-artifact views
@@ -447,6 +525,14 @@ impl PagedKvCache {
                 .get(id)
                 .ok_or_else(|| anyhow::anyhow!("sequence {id} not cached"))?;
             ensure!(entry.len <= ctx_bucket, "sequence longer than ctx bucket");
+            // One gather touch per (lane, page) actually materialized —
+            // the same unit the deduplicated paths count per run entry.
+            for (pi, &page) in entry.pages.iter().enumerate() {
+                if pi * self.page_tokens >= entry.len {
+                    break;
+                }
+                self.heat.touch(TouchKind::Gather, page);
+            }
             for l in 0..self.layers {
                 for h in 0..self.heads {
                     let dst_base =
@@ -590,6 +676,9 @@ impl PagedKvCache {
         // briefly own one empty page more than its length needs).
         let used = pages.len().min(len.div_ceil(self.page_tokens));
         if policy.bypasses(used) || policy.budget_pages >= used {
+            for &p in &pages[..used] {
+                self.heat.touch(TouchKind::Select, p);
+            }
             return Some(((0..used).collect(), None));
         }
         // Query proxy: the most recent cached K row. The true decode
@@ -603,6 +692,9 @@ impl PagedKvCache {
             .map(|&p| page_upper_bound(&q, &self.meta[p]))
             .collect();
         let sel = select_pages(policy, &scores);
+        for &o in &sel {
+            self.heat.touch(TouchKind::Select, pages[o]);
+        }
         Some((sel, Some(scores)))
     }
 
@@ -751,6 +843,7 @@ impl PagedKvCache {
         let mut v = vec![0.0f32; k.len()];
         let mut t0 = 0usize;
         for &(page, count) in runs {
+            self.heat.touch(TouchKind::Gather, page);
             for l in 0..self.layers {
                 for h in 0..self.heads {
                     let src = ((l * self.heads + h) * self.page_tokens) * dh;
@@ -1696,5 +1789,103 @@ mod tests {
         assert_eq!(sg.shared_bytes, 16 * token_bytes);
         c.free_seq(1);
         c.free_seq(2);
+    }
+
+    #[test]
+    fn heat_tracks_every_data_plane_site() {
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 6);
+        let mut rng = Rng::new(61);
+        let len = 6; // page 0 full, page 1 half-full
+        let k = rows(&mut rng, 1, 1, len, 2);
+        let v = rows(&mut rng, 1, 1, len, 2);
+        c.insert_seq(1, &k, &v, len).unwrap();
+        let pages: Vec<usize> = c.seq_pages(1).unwrap().to_vec();
+        // Insert lands one append touch per token written.
+        assert_eq!(c.heat().append_hits(pages[0]), 4);
+        assert_eq!(c.heat().append_hits(pages[1]), 2);
+        assert_eq!(c.heat().append_total(), 6);
+
+        // Flat gather: one touch per (lane, page) materialized.
+        let mut ko = vec![0.0; 8 * 2];
+        let mut vo = vec![0.0; ko.len()];
+        c.gather(&[Some(1)], 8, &mut ko, &mut vo).unwrap();
+        assert_eq!(c.heat().gather_hits(pages[0]), 1);
+        assert_eq!(c.heat().gather_hits(pages[1]), 1);
+        // Deduplicated gather: one touch per run entry.
+        c.gather_shared(&[Some(1)]).unwrap();
+        assert_eq!(c.heat().gather_hits(pages[0]), 2);
+        assert_eq!(c.heat().gather_total(), 4);
+
+        // COW clone: counted, and the fresh page starts cold.
+        c.fork_seq(1, 2).unwrap();
+        assert!(c
+            .append_token(1, &rng.normal_vec(2), &rng.normal_vec(2))
+            .unwrap());
+        assert_eq!(c.heat().cow_clones(), 1);
+        let fresh = *c.seq_pages(1).unwrap().last().unwrap();
+        assert_ne!(fresh, pages[1]);
+        assert_eq!(
+            c.heat().append_hits(fresh),
+            1,
+            "reset on alloc, then exactly the new token's append"
+        );
+
+        // The live-cache report validates and matches the tracker totals.
+        c.heat_tick();
+        let rep = c.report(None, 4);
+        assert_eq!(rep.heat.clock, 1);
+        assert_eq!(rep.heat.append_touches_total, c.heat().append_total());
+        assert_eq!(rep.sharing.cow_clones_total, 1);
+        crate::obs::validate_cache_report(&rep.to_json()).unwrap();
+        c.audit_free_list().unwrap();
+
+        // Sequence-side refcounts: page 0 held by both holders, the old
+        // tail by the fork only, the fresh tail by seq 1 only.
+        let refs = c.seq_page_refs();
+        assert_eq!(refs[pages[0]], 2);
+        assert_eq!(refs[pages[1]], 1);
+        assert_eq!(refs[fresh], 1);
+        for p in 0..c.total_pages() {
+            assert_eq!(refs[p], c.page_ref(p), "no radix holder in this test");
+        }
+        c.free_seq(1);
+        c.free_seq(2);
+    }
+
+    #[test]
+    fn heat_select_touches_and_disable() {
+        let mut c = PagedKvCache::new(1, 1, 2, 4, 8);
+        let mut rng = Rng::new(62);
+        let len = 16; // 4 full pages
+        let k = rows(&mut rng, 1, 1, len, 2);
+        let v = rows(&mut rng, 1, 1, len, 2);
+        c.insert_seq(1, &k, &v, len).unwrap();
+        let pages: Vec<usize> = c.seq_pages(1).unwrap().to_vec();
+
+        // Budget 3 < 4 used pages: scoring runs, 3 pages selected.
+        let policy = SparsePolicy::with_budget(3);
+        let (sel, scores) = c.select_seq_pages(1, &policy).unwrap();
+        assert_eq!(sel.len(), 3);
+        assert!(scores.is_some());
+        let selected: u64 = pages.iter().map(|&p| c.heat().select_hits(p)).sum();
+        assert_eq!(selected, 3);
+        assert_eq!(c.heat().select_total(), 3);
+
+        // A covering budget bypasses scoring but still counts selection.
+        let (all, none) = c.select_seq_pages(1, &SparsePolicy::with_budget(4)).unwrap();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+        assert!(none.is_none());
+        assert_eq!(c.heat().select_total(), 7);
+
+        // Disabling swaps in the inert tracker: no further recording.
+        c.disable_heat();
+        assert!(!c.heat().is_enabled());
+        c.select_seq_pages(1, &policy).unwrap();
+        let mut ko = vec![0.0; 16 * 2];
+        let mut vo = vec![0.0; ko.len()];
+        c.gather(&[Some(1)], 16, &mut ko, &mut vo).unwrap();
+        assert_eq!(c.heat().select_total(), 0);
+        assert_eq!(c.heat().gather_total(), 0);
+        c.free_seq(1);
     }
 }

@@ -204,6 +204,40 @@ impl AttribStats {
     }
 }
 
+/// Which decode gather path materialized a step's KV bytes — the one
+/// taxonomy [`Metrics::record_gather`] routes every gather-byte record
+/// through, so the three engine branches cannot drift in what they
+/// count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GatherKind {
+    /// Dense per-lane gather (no sharing, no selection).
+    Flat,
+    /// Deduplicated cascade gather (shared prefix runs counted once).
+    Shared,
+    /// Sparse gather over selected pages only.
+    Selected,
+}
+
+/// Online invariant-audit counters ([`crate::coordinator::AuditPlan`]):
+/// sampled consistency checks the engine runs every N steps.
+#[derive(Clone, Debug, Default)]
+pub struct AuditStats {
+    /// Audit passes executed (each pass runs every check once).
+    pub runs: usize,
+    /// Individual check failures observed across passes.
+    pub failures: usize,
+    /// Wall-clock spent inside audit passes, microseconds.
+    pub audit_us: f64,
+}
+
+impl AuditStats {
+    fn merge(&mut self, o: &AuditStats) {
+        self.runs += o.runs;
+        self.failures += o.failures;
+        self.audit_us += o.audit_us;
+    }
+}
+
 /// Parallel-sampling (fork/prune) counters.
 #[derive(Clone, Debug, Default)]
 pub struct SamplingStats {
@@ -286,6 +320,9 @@ pub const DOCUMENTED_METRICS: &[&str] = &[
     "attrib_tiles_total",
     "attrib_softmax_flops_total",
     "attrib_rescale_folds_total",
+    "audit_runs_total",
+    "audit_failures_total",
+    "audit_us_total",
 ];
 
 /// Accumulated engine counters.
@@ -337,6 +374,8 @@ pub struct Metrics {
     pub gqa: GqaStats,
     /// Exact work-attribution totals (gather bytes, tiles, flops, folds).
     pub attrib: AttribStats,
+    /// Sampled online invariant-audit counters.
+    pub audit: AuditStats,
 }
 
 impl Metrics {
@@ -358,6 +397,22 @@ impl Metrics {
             self.projected_speedup_sum += fd_us / lean_us;
         }
         self.projected_steps += 1;
+    }
+
+    /// Route one decode gather's materialized K+V bytes into every
+    /// counter family that accounts gather traffic — the single helper
+    /// all three engine gather branches call, unit-tested so each branch
+    /// provably lands in the same counters. Grouped-plane (GQA)
+    /// accounting covers the dense paths; the selected path reports
+    /// through the sparse byte pair instead (its dense baseline is
+    /// recorded separately by the selection step), and every path feeds
+    /// the exact attribution total.
+    pub fn record_gather(&mut self, kind: GatherKind, bytes: u64) {
+        match kind {
+            GatherKind::Flat | GatherKind::Shared => self.gqa.record_gather(bytes),
+            GatherKind::Selected => self.sparse.gather_bytes_sparse += bytes,
+        }
+        self.attrib.gather_bytes += bytes;
     }
 
     /// Record one shared-prefix step's cascade projection.
@@ -417,6 +472,7 @@ impl Metrics {
         self.sparse.merge(&o.sparse);
         self.gqa.merge(&o.gqa);
         self.attrib.merge(&o.attrib);
+        self.audit.merge(&o.audit);
     }
 
     /// Sample every documented metric into the one snapshot both
@@ -628,6 +684,21 @@ impl Metrics {
             self.attrib.rescale_folds as f64,
             "Rescale folds of per-step decode plans.",
         );
+        s.counter(
+            "audit_runs_total",
+            self.audit.runs as f64,
+            "Sampled invariant-audit passes executed.",
+        );
+        s.counter(
+            "audit_failures_total",
+            self.audit.failures as f64,
+            "Invariant-audit check failures observed.",
+        );
+        s.counter(
+            "audit_us_total",
+            self.audit.audit_us,
+            "Wall-clock spent in audit passes (us).",
+        );
         s
     }
 
@@ -731,6 +802,12 @@ impl Metrics {
                 self.attrib.gather_bytes as f64 / 1024.0,
                 self.attrib.softmax_flops as f64 / 1e6,
                 self.attrib.rescale_folds,
+            ));
+        }
+        if self.audit.runs > 0 {
+            s.push_str(&format!(
+                "invariant audits: {} passes, {} failures, {:.0}us total\n",
+                self.audit.runs, self.audit.failures, self.audit.audit_us,
             ));
         }
         if let Some(sp) = self.projected_speedup() {
@@ -1006,6 +1083,54 @@ mod tests {
         assert_eq!(snap.get("attrib_softmax_flops_total").unwrap().value, 8192.0);
         assert_eq!(snap.get("attrib_rescale_folds_total").unwrap().value, 24.0);
         assert!(a.report().contains("work attribution: 12 tiles"), "{}", a.report());
+    }
+
+    #[test]
+    fn record_gather_routes_every_branch_into_the_same_counters() {
+        // Flat and shared branches: grouped-plane bytes + attribution.
+        let mut m = Metrics::default();
+        m.gqa.kv_heads = 4;
+        m.gqa.group_size = 2;
+        m.record_gather(GatherKind::Flat, 1000);
+        m.record_gather(GatherKind::Shared, 500);
+        assert_eq!(m.gqa.gather_bytes_grouped, 1500);
+        assert_eq!(m.gqa.gather_bytes_dense, 3000);
+        assert_eq!(m.attrib.gather_bytes, 1500);
+        assert_eq!(m.sparse.gather_bytes_sparse, 0, "dense paths skip sparse");
+
+        // Selected branch: sparse bytes + attribution, never the
+        // grouped-plane pair (its dense baseline is step-recorded).
+        m.record_gather(GatherKind::Selected, 300);
+        assert_eq!(m.sparse.gather_bytes_sparse, 300);
+        assert_eq!(m.attrib.gather_bytes, 1800);
+        assert_eq!(m.gqa.gather_bytes_grouped, 1500, "selected skips gqa");
+
+        // The snapshot sees the exact same routing.
+        let snap = m.snapshot();
+        assert_eq!(snap.get("attrib_gather_bytes_total").unwrap().value, 1800.0);
+        assert_eq!(snap.get("gqa_gather_bytes_grouped_total").unwrap().value, 1500.0);
+        assert_eq!(snap.get("sparse_gather_bytes_sparse_total").unwrap().value, 300.0);
+    }
+
+    #[test]
+    fn audit_counters_merge_and_export() {
+        let mut a = Metrics::default();
+        a.audit.runs = 3;
+        a.audit.failures = 1;
+        a.audit.audit_us = 120.0;
+        let mut b = Metrics::default();
+        b.audit.runs = 2;
+        b.audit.audit_us = 80.0;
+        a.merge(&b);
+        assert_eq!(a.audit.runs, 5);
+        assert_eq!(a.audit.failures, 1);
+        assert_eq!(a.audit.audit_us, 200.0);
+        let snap = a.snapshot();
+        assert_eq!(snap.get("audit_runs_total").unwrap().value, 5.0);
+        assert_eq!(snap.get("audit_failures_total").unwrap().value, 1.0);
+        assert_eq!(snap.get("audit_us_total").unwrap().value, 200.0);
+        assert!(a.report().contains("invariant audits: 5 passes"), "{}", a.report());
+        assert!(!Metrics::default().report().contains("invariant audits"));
     }
 
     #[test]

@@ -35,10 +35,11 @@ pub mod radix;
 pub mod request;
 pub mod router;
 
-pub use engine::{Engine, EngineConfig};
+pub use engine::{AuditPlan, Engine, EngineConfig};
 pub use kv_cache::PagedKvCache;
 pub use metrics::{
-    Metrics, PrefixCacheStats, SamplingStats, SparseStats, DOCUMENTED_METRICS,
+    GatherKind, Metrics, PrefixCacheStats, SamplingStats, SparseStats,
+    DOCUMENTED_METRICS,
 };
 pub use radix::{PrefixMatch, RadixPrefixIndex};
 pub use request::{FinishReason, FinishedRequest, Request, RequestId};

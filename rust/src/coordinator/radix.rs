@@ -18,6 +18,8 @@
 //! eviction under memory pressure releases only pages whose sole remaining
 //! reference is the index — never pages an active sequence still reads.
 
+use crate::obs::cache_stats::RadixStats;
+
 /// Result of a prefix lookup: the longest indexed page run covering the
 /// head of the token sequence.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -44,12 +46,23 @@ pub struct RadixPrefixIndex {
     roots: Vec<Node>,
     clock: u64,
     num_pages: usize,
+    /// Lookups by matched depth in pages (`[0]` counts misses) — the
+    /// hit-depth half of [`RadixPrefixIndex::stats`], maintained
+    /// incrementally because matched depth is not recoverable from the
+    /// tree shape.
+    hit_depth: Vec<u64>,
 }
 
 impl RadixPrefixIndex {
     pub fn new(page_tokens: usize) -> RadixPrefixIndex {
         assert!(page_tokens >= 1);
-        RadixPrefixIndex { page_tokens, roots: Vec::new(), clock: 0, num_pages: 0 }
+        RadixPrefixIndex {
+            page_tokens,
+            roots: Vec::new(),
+            clock: 0,
+            num_pages: 0,
+            hit_depth: vec![0],
+        }
     }
 
     pub fn page_tokens(&self) -> usize {
@@ -82,6 +95,11 @@ impl RadixPrefixIndex {
             nodes = &mut node.children;
         }
         m.tokens = m.pages.len() * self.page_tokens;
+        let depth = m.pages.len();
+        if self.hit_depth.len() <= depth {
+            self.hit_depth.resize(depth + 1, 0);
+        }
+        self.hit_depth[depth] += 1;
         m
     }
 
@@ -176,6 +194,51 @@ impl RadixPrefixIndex {
                 Self::coldest_leaf(&n.children, evictable, best);
             }
         }
+    }
+
+    /// Every indexed page, in tree-walk order — the audit's ground
+    /// truth for "the index holds one cache reference per page".
+    pub fn pages(&self) -> Vec<usize> {
+        fn walk(nodes: &[Node], out: &mut Vec<usize>) {
+            for n in nodes {
+                out.push(n.page);
+                walk(&n.children, out);
+            }
+        }
+        let mut out = Vec::with_capacity(self.num_pages);
+        walk(&self.roots, &mut out);
+        out
+    }
+
+    /// Tree-shape statistics (depth and branching histograms from a full
+    /// walk) plus the incrementally-maintained lookup hit-depth counts.
+    pub fn stats(&self) -> RadixStats {
+        fn walk(nodes: &[Node], depth: usize, s: &mut RadixStats) {
+            if nodes.is_empty() {
+                return;
+            }
+            if s.depth_hist.len() <= depth {
+                s.depth_hist.resize(depth + 1, 0);
+            }
+            s.max_depth = s.max_depth.max(depth + 1);
+            for n in nodes {
+                s.depth_hist[depth] += 1;
+                let kids = n.children.len();
+                if s.branching_hist.len() <= kids {
+                    s.branching_hist.resize(kids + 1, 0);
+                }
+                s.branching_hist[kids] += 1;
+                walk(&n.children, depth + 1, s);
+            }
+        }
+        let mut s = RadixStats {
+            pages: self.num_pages,
+            hit_depth_hist: self.hit_depth.clone(),
+            lookups: self.hit_depth.iter().sum(),
+            ..RadixStats::default()
+        };
+        walk(&self.roots, 0, &mut s);
+        s
     }
 
     fn remove_leaf(nodes: &mut Vec<Node>, page: usize) -> bool {
@@ -323,5 +386,38 @@ mod tests {
         idx.insert(&[1, 2, 3, 4], &[0]);
         // 3 tokens < one page: nothing shareable.
         assert_eq!(idx.peek(&[1, 2, 3]), PrefixMatch::default());
+    }
+
+    #[test]
+    fn stats_cover_shape_pages_and_hit_depths() {
+        let mut idx = RadixPrefixIndex::new(2);
+        let empty = idx.stats();
+        assert_eq!((empty.pages, empty.max_depth, empty.lookups), (0, 0, 0));
+        assert!(empty.depth_hist.is_empty());
+
+        // Two chains off a shared root chunk plus a separate root:
+        //   [5,6] -> [1,1]        (pages 0 -> 1)
+        //   [5,6] -> [2,2]        (pages 0 -> 2)
+        //   [9,9]                 (page 3)
+        idx.insert(&[5, 6, 1, 1], &[0, 1]);
+        idx.insert(&[5, 6, 2, 2], &[0, 2]);
+        idx.insert(&[9, 9], &[3]);
+        let mut pages = idx.pages();
+        pages.sort_unstable();
+        assert_eq!(pages, vec![0, 1, 2, 3]);
+
+        idx.lookup(&[5, 6, 1, 1]); // depth 2 hit
+        idx.lookup(&[9, 9]); // depth 1 hit
+        idx.lookup(&[4, 4]); // miss
+        idx.peek(&[5, 6]); // peek must not count as a lookup
+
+        let s = idx.stats();
+        assert_eq!(s.pages, 4);
+        assert_eq!(s.max_depth, 2);
+        assert_eq!(s.depth_hist, vec![2, 2], "2 roots, 2 depth-1 leaves");
+        assert_eq!(s.branching_hist, vec![3, 0, 1], "3 leaves, one 2-way node");
+        assert_eq!(s.hit_depth_hist, vec![1, 1, 1]);
+        assert_eq!(s.lookups, 3);
+        assert_eq!(s.depth_hist.iter().sum::<u64>(), s.pages as u64);
     }
 }

@@ -1,7 +1,8 @@
 //! `leanattn` — CLI for the LeanAttention reproduction.
 //!
 //! ```text
-//! leanattn info                          artifact + device inventory
+//! leanattn info    [--metrics]           artifact + device inventory
+//! leanattn inspect [--json-out r.json]   KV-cache introspection report
 //! leanattn serve   [--model tiny] [--requests 8] [--max-new 16]
 //! leanattn simulate --batch 4 --heads 32 --ctx 65536 [--arch a100|h100|8xa100]
 //! leanattn plan    --batch 1 --heads 8 --ctx 65536 [--slots 216]
@@ -102,7 +103,8 @@ fn run() -> Result<()> {
     let args = Args::parse(&argv[1.min(argv.len())..]);
 
     match cmd {
-        "info" => info(),
+        "info" => info(&args),
+        "inspect" => inspect_cmd(&args),
         "serve" => serve(&args),
         "simulate" => simulate_cmd(&args),
         "bench" => bench_cmd(&args),
@@ -121,7 +123,18 @@ fn run() -> Result<()> {
 
 const HELP: &str = "leanattn — LeanAttention (decode-phase stream-K attention) reproduction
 commands:
-  info                              artifact + PJRT device inventory
+  info     [--metrics]              artifact + PJRT device inventory;
+                                    --metrics prints the documented metric
+                                    catalog (name, kind, help) without
+                                    needing artifacts
+  inspect  [--steps 48] [--pages 48] [--page 4] [--top-k 8] [--seed 0]
+           [--json-out PATH] [--flight-dir DIR]
+                                    KV-cache introspection: deterministic
+                                    fork/COW/truncate/evict churn, then the
+                                    versioned page-heat / pool / sharing /
+                                    radix report (schema-validated);
+                                    --flight-dir also records and
+                                    re-validates a demo flight bundle
   serve    [--model tiny] [--requests 8] [--max-new 16] [--seed 0]
            [--system-prompt-len N]  share an N-token system prompt across
                                     requests through the radix prefix cache
@@ -148,6 +161,18 @@ commands:
                                     Chrome trace-event export
            [--kv-heads N]           pin the expected GQA plane: fail unless
                                     the artifact set has N KV heads
+           [--audit-every N]        run the online invariant audit (page
+                                    statistics, free list, refcount
+                                    exactness, radix consistency) every N
+                                    engine steps
+           [--flight-dir DIR]       anomaly flight recorder: on a trigger,
+                                    write a post-mortem bundle (trace +
+                                    metrics + cache report + SLO text)
+           [--watchdog-steps N]     mark the engine unhealthy and record a
+                                    bundle after N progress-free steps
+           [--storm-pages P]        eviction-storm trigger: prefix pages
+                                    evicted within one step (default 64)
+           [--flight-slo-ms MS]     SLO-breach trigger for the recorder
   simulate --batch B --heads H --ctx N [--head-dim 64] [--arch a100]
            [--kv-heads N]           GQA/MQA: H query heads share N KV heads
                                     (KV streams and bytes shrink by H/N)
@@ -181,7 +206,8 @@ commands:
                                     vs dense, needle recall, executor
                                     exactness, full-budget stream equality
   bench    --obs [--requests 24] [--trace-out PATH] [--slo-ms 50]
-           [--trace-capacity 8192] [--overhead-limit 0.02] [--smoke]
+           [--trace-capacity 8192] [--overhead-limit 0.02]
+           [--heat-overhead-limit 0.02] [--smoke]
                                     observability plane: traced cascade +
                                     speculative serving loop, per-phase
                                     p50/p95/p99 timings, SLO report, and
@@ -212,7 +238,33 @@ commands:
   sweep    [--samples 1000] [--arch a100]
   trace    [--model tiny] [--requests 16] [--gap 3] [--fixed] [--seed 0]";
 
-fn info() -> Result<()> {
+fn info(args: &Args) -> Result<()> {
+    // `--metrics`: the documented metric catalog — every name in
+    // `DOCUMENTED_METRICS` with its kind and help line, read straight
+    // from the snapshot both exporters serialize. Artifact-free, so
+    // dashboards can be written before anything is served.
+    if args.has("metrics") {
+        use lean_attention::coordinator::{Metrics, DOCUMENTED_METRICS};
+        use lean_attention::obs::MetricKind;
+        let snap = Metrics::default().snapshot();
+        println!(
+            "documented serving metrics ({}, exported as leanattn_<name>):",
+            DOCUMENTED_METRICS.len()
+        );
+        for m in snap.metrics() {
+            let kind = match m.kind {
+                MetricKind::Counter => "counter",
+                MetricKind::Gauge => "gauge",
+            };
+            println!("  {:<34} {:<8} {}", m.name, kind, m.help);
+        }
+        println!(
+            "\nthe engine snapshot adds live gauges on top (kv_pages_used, \
+             engine_healthy,\nkv_pool_fragmentation, flight_bundles_total, ...) \
+             — see `serve --metrics-out`."
+        );
+        return Ok(());
+    }
     let manifest = Manifest::load(Manifest::default_dir())
         .context("load artifacts (run `make artifacts`)")?;
     let rt = Runtime::cpu()?;
@@ -231,6 +283,155 @@ fn info() -> Result<()> {
             "  {name}: {} layers, {} heads ({} kv) x d{}, vocab {}, ctx bucket {}, {} params",
             m.n_layers, m.n_heads, m.n_kv_heads, m.head_dim, m.vocab, m.ctx_bucket, m.param_count
         );
+    }
+    Ok(())
+}
+
+/// Deterministic noise plane for the inspect churn.
+fn inspect_noise(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.range(0, 2048) as f32 / 1024.0 - 1.0).collect()
+}
+
+/// `leanattn inspect`: the KV-cache introspection plane, artifact-free.
+/// Drives a deterministic fork/COW/truncate/evict churn over a paged
+/// cache plus a radix prefix index — touching every heat site: appends,
+/// flat gathers, sparse selection, evictions — then prints the versioned
+/// cache report, self-validated against the same schema the flight
+/// recorder's bundles re-validate with. `--json-out` writes the JSON
+/// report; `--flight-dir` additionally records a demo flight bundle and
+/// re-validates it from disk.
+fn inspect_cmd(args: &Args) -> Result<()> {
+    use lean_attention::coordinator::{
+        Metrics, PagedKvCache, RadixPrefixIndex, RequestId,
+    };
+    use lean_attention::obs::{
+        validate_bundle, validate_cache_report, Attrs, FlightRecorder,
+        FlightSnapshot, FlightTrigger, Phase, Tracer,
+    };
+    use lean_attention::sparse::SparsePolicy;
+
+    let seed = args.usize("seed", 0) as u64;
+    let steps = args.usize("steps", 48);
+    let pages = args.usize("pages", 48);
+    let page_tokens = args.usize("page", 4);
+    let top_k = args.usize("top-k", 8);
+    let (layers, kv_heads, dh) = (2usize, 2usize, 8usize);
+    anyhow::ensure!(pages >= 8, "--pages must be >= 8");
+
+    let mut cache = PagedKvCache::new(layers, kv_heads, dh, page_tokens, pages);
+    let mut index = RadixPrefixIndex::new(page_tokens);
+    let mut rng = Rng::new(seed);
+    let plane = layers * kv_heads * dh;
+    let policy = SparsePolicy::with_budget(2);
+    let mut next_id: RequestId = 1;
+    let mut live: Vec<RequestId> = Vec::new();
+    println!(
+        "inspect: {steps}-step churn over {pages} pages x {page_tokens} tokens \
+         ({layers} layers x {kv_heads} kv heads x d{dh}), seed {seed}"
+    );
+
+    for step in 0..steps {
+        // Admit a fresh sequence and index its full-page prefix.
+        if live.len() < 6 && cache.free_pages() >= 4 {
+            let id = next_id;
+            next_id += 1;
+            let len = page_tokens * rng.urange(1, 4) + rng.urange(0, page_tokens);
+            let len = len.max(1);
+            let k = inspect_noise(&mut rng, plane * len);
+            let v = inspect_noise(&mut rng, plane * len);
+            if cache.insert_seq(id, &k, &v, len).is_ok() {
+                live.push(id);
+                let tokens: Vec<i32> =
+                    (0..len as i32).map(|t| (id as i32 * 131 + t) % 509).collect();
+                let seq_pages = cache.seq_pages(id).unwrap().to_vec();
+                for p in index.insert(&tokens, &seq_pages) {
+                    cache.retain_page(p)?;
+                }
+                let _ = index.lookup(&tokens); // hit-depth telemetry
+            }
+        }
+        // Fork + divergent append: the copy-on-write path.
+        if step % 3 == 0 && !live.is_empty() && cache.free_pages() >= 2 {
+            let parent = live[rng.urange(0, live.len())];
+            let child = next_id;
+            next_id += 1;
+            if cache.fork_seq(parent, child).is_ok() {
+                live.push(child);
+                let k = inspect_noise(&mut rng, plane);
+                let v = inspect_noise(&mut rng, plane);
+                let _ = cache.append_token(child, &k, &v);
+            }
+        }
+        // Plain append to a random live sequence.
+        if !live.is_empty() && cache.free_pages() >= 1 {
+            let id = live[rng.urange(0, live.len())];
+            let k = inspect_noise(&mut rng, plane);
+            let v = inspect_noise(&mut rng, plane);
+            let _ = cache.append_token(id, &k, &v);
+        }
+        // Speculative-rollback shape: truncate a tail token.
+        if step % 5 == 0 {
+            if let Some(&id) = live.last() {
+                if let Some(len) = cache.seq_len(id) {
+                    if len > 1 {
+                        cache.truncate_seq(id, len - 1)?;
+                    }
+                }
+            }
+        }
+        // Flat gather over up to 4 lanes (per-page gather touches).
+        let lanes: Vec<Option<RequestId>> =
+            live.iter().take(4).map(|&id| Some(id)).collect();
+        if !lanes.is_empty() {
+            let ctx = pages * page_tokens;
+            let n = layers * lanes.len() * kv_heads * ctx * dh;
+            let mut kb = vec![0.0f32; n];
+            let mut vb = vec![0.0f32; n];
+            cache.gather(&lanes, ctx, &mut kb, &mut vb)?;
+        }
+        // Sparse page selection (select touches).
+        if let Some(&id) = live.first() {
+            let _ = cache.select_seq_pages(id, &policy);
+        }
+        // Retire the oldest sequence; evict cold index pages under
+        // pressure (the index may hold the last reference).
+        if live.len() >= 5 {
+            cache.free_seq(live.remove(0));
+        }
+        if cache.free_pages() < 4 {
+            for p in index.evict_lru(4, |p| cache.page_ref(p) == 1) {
+                cache.release_page(p)?;
+            }
+        }
+        cache.heat_tick();
+    }
+
+    let report = cache.report(Some(index.stats()), top_k);
+    let j = report.to_json();
+    validate_cache_report(&j).context("cache report failed self-validation")?;
+    println!("\n{}", report.render());
+    if let Some(path) = args.flags.get("json-out") {
+        std::fs::write(path, j.to_string())
+            .with_context(|| format!("write cache report to {path}"))?;
+        println!("cache report -> {path}");
+    }
+    if let Some(dir) = args.flags.get("flight-dir") {
+        let tracer = Tracer::enabled(64);
+        tracer.instant(Phase::Evict, Attrs { pages: Some(1), ..Default::default() });
+        let trace = tracer.export_chrome_trace();
+        let metrics = Metrics::default().snapshot().to_json();
+        let mut rec = FlightRecorder::new(dir.as_str());
+        let snap = FlightSnapshot {
+            trace: &trace,
+            metrics: &metrics,
+            cache_report: &j,
+            slo_text: "inspect demo bundle (no serving run)",
+        };
+        let bundle = rec
+            .record(FlightTrigger::EvictionStorm, steps as u64, &snap)?
+            .expect("first bundle is always under the cap");
+        validate_bundle(&bundle).context("demo flight bundle failed re-validation")?;
+        println!("flight bundle: {} (re-validated from disk)", bundle.display());
     }
     Ok(())
 }
@@ -283,6 +484,14 @@ fn serve(args: &Args) -> Result<()> {
     // tracer on; the snapshot/SLO surfaces are always available.
     let trace_capacity = args.usize("trace-capacity", 0);
 
+    // The introspection plane: sampled invariant audits, the anomaly
+    // flight recorder and its triggers, and the health watchdog.
+    let audit = lean_attention::coordinator::AuditPlan::every(args.usize("audit-every", 0));
+    let flight_dir = args.flags.get("flight-dir").cloned();
+    let watchdog_stall_steps = args.usize("watchdog-steps", 0) as u64;
+    let eviction_storm_pages = args.usize("storm-pages", 64);
+    let flight_slo_ms = args.f64("flight-slo-ms", 0.0);
+
     let runtime = Rc::new(Runtime::cpu()?);
     let manifest = Manifest::load(Manifest::default_dir())?;
     let mut engine = Engine::new(
@@ -297,6 +506,11 @@ fn serve(args: &Args) -> Result<()> {
             adaptive_spec,
             sparse,
             trace_capacity,
+            audit,
+            flight_dir,
+            watchdog_stall_steps,
+            eviction_storm_pages,
+            flight_slo_ms,
             ..Default::default()
         },
     )?;
@@ -471,6 +685,15 @@ fn serve_obs_out(engine: &Engine, args: &Args, wall_s: f64) -> Result<()> {
             engine.tracer.len(),
             engine.tracer.dropped()
         );
+    }
+    if engine.flight_bundles() > 0 {
+        println!(
+            "flight recorder: {} post-mortem bundle(s) written",
+            engine.flight_bundles()
+        );
+    }
+    if !engine.healthy() {
+        println!("engine health: STALLED (watchdog fired; see the flight bundles)");
     }
     Ok(())
 }
@@ -946,6 +1169,7 @@ fn bench_obs(args: &Args, seed: u64) -> Result<()> {
         slo_ms: args.f64("slo-ms", base.slo_ms),
         overhead_iters: args.usize("iters", base.overhead_iters),
         overhead_limit: args.f64("overhead-limit", base.overhead_limit),
+        heat_overhead_limit: args.f64("heat-overhead-limit", base.heat_overhead_limit),
     };
     println!(
         "obs: {} requests, cascade batch {} ({}+{} tokens, {} heads x d{}), \

@@ -1,0 +1,851 @@
+//! KV-cache introspection: page-heat telemetry and the versioned cache
+//! report.
+//!
+//! The [`HeatTracker`] is the incremental half: per-page touch counters
+//! (gather / append / select), a last-touch stamp on a logical tick
+//! clock, and COW-clone accounting, maintained by
+//! [`crate::coordinator::PagedKvCache`] at its existing single gather /
+//! append / select / alloc sites. Touch recording is interior-mutable
+//! (`Cell`) because every gather path takes `&self`, and a disabled
+//! tracker costs one branch per call site — the bound
+//! `leanattn bench --obs` measures and asserts (< 2% on the gather hot
+//! path, like the tracer).
+//!
+//! The [`CacheReport`] is the from-scratch half: every aggregate — heat
+//! histogram, top-k hottest page runs, refcount distribution, pool
+//! fragmentation, radix-index shape — is recomputed at report time from
+//! the per-page state, so the report can be property-tested bit-exact
+//! against an independent recompute over the same accessors.
+//! [`validate_cache_report`] is the schema check `leanattn inspect`
+//! runs on its own output and the flight recorder runs on bundle
+//! read-back.
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::json::Json;
+
+/// Version stamp of [`CacheReport::to_json`].
+pub const CACHE_REPORT_VERSION: u64 = 1;
+
+/// The page-touch taxonomy: which data-plane operation hit the page.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TouchKind {
+    /// Page materialized out of the cache for attention (flat, shared or
+    /// selected gather — one touch per page per materialization).
+    Gather,
+    /// A token row written into the page.
+    Append,
+    /// Page chosen by sparse page selection.
+    Select,
+}
+
+/// Incremental per-page heat state. One instance lives inside the paged
+/// cache; all mutation goes through `&self` (`Cell`), matching the
+/// gather paths' borrows.
+#[derive(Debug)]
+pub struct HeatTracker {
+    /// `false` = record nothing (the bench's comparison baseline).
+    enabled: bool,
+    /// Logical tick clock — advanced once per engine step (or churn
+    /// step), the unit "age since last touch" is measured in.
+    clock: Cell<u64>,
+    gather: Vec<Cell<u64>>,
+    append: Vec<Cell<u64>>,
+    select: Vec<Cell<u64>>,
+    last_touch: Vec<Cell<u64>>,
+    gather_total: Cell<u64>,
+    append_total: Cell<u64>,
+    select_total: Cell<u64>,
+    cow_clones: Cell<u64>,
+    resets: Cell<u64>,
+}
+
+impl HeatTracker {
+    /// Tracking state for `pages` physical pages.
+    pub fn enabled(pages: usize) -> HeatTracker {
+        HeatTracker {
+            enabled: true,
+            clock: Cell::new(0),
+            gather: vec![Cell::new(0); pages],
+            append: vec![Cell::new(0); pages],
+            select: vec![Cell::new(0); pages],
+            last_touch: vec![Cell::new(0); pages],
+            gather_total: Cell::new(0),
+            append_total: Cell::new(0),
+            select_total: Cell::new(0),
+            cow_clones: Cell::new(0),
+            resets: Cell::new(0),
+        }
+    }
+
+    /// A tracker that records nothing — one branch per touch site.
+    pub fn disabled() -> HeatTracker {
+        HeatTracker {
+            enabled: false,
+            clock: Cell::new(0),
+            gather: Vec::new(),
+            append: Vec::new(),
+            select: Vec::new(),
+            last_touch: Vec::new(),
+            gather_total: Cell::new(0),
+            append_total: Cell::new(0),
+            select_total: Cell::new(0),
+            cow_clones: Cell::new(0),
+            resets: Cell::new(0),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Pages tracked (0 when disabled).
+    pub fn pages(&self) -> usize {
+        self.gather.len()
+    }
+
+    /// Advance the logical tick clock.
+    pub fn tick(&self) {
+        if self.enabled {
+            self.clock.set(self.clock.get() + 1);
+        }
+    }
+
+    pub fn clock(&self) -> u64 {
+        self.clock.get()
+    }
+
+    /// Record one touch of `page`. The hot-path call — a disabled
+    /// tracker returns after one branch.
+    #[inline]
+    pub fn touch(&self, kind: TouchKind, page: usize) {
+        if !self.enabled {
+            return;
+        }
+        let (per_page, total) = match kind {
+            TouchKind::Gather => (&self.gather, &self.gather_total),
+            TouchKind::Append => (&self.append, &self.append_total),
+            TouchKind::Select => (&self.select, &self.select_total),
+        };
+        per_page[page].set(per_page[page].get() + 1);
+        total.set(total.get() + 1);
+        self.last_touch[page].set(self.clock.get());
+    }
+
+    /// Count one copy-on-write page clone.
+    pub fn record_cow(&self) {
+        if self.enabled {
+            self.cow_clones.set(self.cow_clones.get() + 1);
+        }
+    }
+
+    /// Forget a page's history — the page was reallocated and now holds
+    /// a different incarnation's data.
+    pub fn reset_page(&self, page: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.gather[page].set(0);
+        self.append[page].set(0);
+        self.select[page].set(0);
+        self.last_touch[page].set(self.clock.get());
+        self.resets.set(self.resets.get() + 1);
+    }
+
+    pub fn gather_hits(&self, page: usize) -> u64 {
+        self.gather.get(page).map_or(0, Cell::get)
+    }
+
+    pub fn append_hits(&self, page: usize) -> u64 {
+        self.append.get(page).map_or(0, Cell::get)
+    }
+
+    pub fn select_hits(&self, page: usize) -> u64 {
+        self.select.get(page).map_or(0, Cell::get)
+    }
+
+    /// All touches of `page`, every kind.
+    pub fn total_hits(&self, page: usize) -> u64 {
+        self.gather_hits(page) + self.append_hits(page) + self.select_hits(page)
+    }
+
+    /// Tick-clock value at the page's last touch (or last reset).
+    pub fn last_touch(&self, page: usize) -> u64 {
+        self.last_touch.get(page).map_or(0, Cell::get)
+    }
+
+    /// Ticks since the page was last touched.
+    pub fn age(&self, page: usize) -> u64 {
+        self.clock.get().saturating_sub(self.last_touch(page))
+    }
+
+    pub fn gather_total(&self) -> u64 {
+        self.gather_total.get()
+    }
+
+    pub fn append_total(&self) -> u64 {
+        self.append_total.get()
+    }
+
+    pub fn select_total(&self) -> u64 {
+        self.select_total.get()
+    }
+
+    pub fn cow_clones(&self) -> u64 {
+        self.cow_clones.get()
+    }
+
+    /// Page reallocations observed (heat resets).
+    pub fn resets(&self) -> u64 {
+        self.resets.get()
+    }
+}
+
+/// Log2 heat bucket: 0 for a cold page, `floor(log2(t)) + 1` for `t`
+/// touches — the integer classification the heat histogram uses, exposed
+/// so the property tests can recompute it from scratch.
+pub fn heat_bucket(touches: u64) -> usize {
+    if touches == 0 {
+        0
+    } else {
+        64 - touches.leading_zeros() as usize
+    }
+}
+
+/// Shape of the radix prefix index, computed by a full tree walk plus
+/// the index's incremental lookup-depth counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RadixStats {
+    /// Pages currently indexed.
+    pub pages: usize,
+    /// Deepest chain, in pages (0 for an empty index).
+    pub max_depth: usize,
+    /// Nodes per depth; `depth_hist[0]` counts the roots.
+    pub depth_hist: Vec<u64>,
+    /// Nodes by child count; `branching_hist[k]` counts nodes with `k`
+    /// children (leaves at index 0).
+    pub branching_hist: Vec<u64>,
+    /// Lookups by matched depth in pages; `hit_depth_hist[0]` counts
+    /// complete misses.
+    pub hit_depth_hist: Vec<u64>,
+    /// Total `lookup` calls observed.
+    pub lookups: u64,
+}
+
+/// One contiguous run of hot pages in the report's top-k list.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HotRun {
+    /// First physical page of the run.
+    pub start: usize,
+    /// Consecutive pages in the run.
+    pub pages: usize,
+    /// Summed touches (all kinds) over the run.
+    pub touches: u64,
+}
+
+/// Pool occupancy and fragmentation, recomputed from the refcount map.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolStats {
+    pub pages_total: usize,
+    pub pages_used: usize,
+    pub pages_free: usize,
+    pub page_tokens: usize,
+    /// Bytes one token row occupies across layers and kv heads (K + V).
+    pub token_bytes: usize,
+    /// Maximal runs of consecutive free page ids.
+    pub free_runs: usize,
+    pub largest_free_run: usize,
+    /// `1 - largest_free_run / pages_free` (0 when nothing is free): 0
+    /// means the free space is one contiguous run, → 1 means shattered.
+    pub fragmentation: f64,
+}
+
+/// Sharing structure: the refcount distribution over every page.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SharingStats {
+    /// Pages per refcount value (free pages sit at key 0).
+    pub refcount_hist: BTreeMap<u32, u64>,
+    /// Pages with refcount >= 2 (COW- or radix-shared).
+    pub shared_pages: usize,
+    pub max_refcount: u32,
+    pub cow_clones_total: u64,
+}
+
+/// Heat aggregates over the *used* pages.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HeatStats {
+    pub clock: u64,
+    pub gather_touches_total: u64,
+    pub append_touches_total: u64,
+    pub select_touches_total: u64,
+    /// Used pages per [`heat_bucket`] of their total touches.
+    pub histogram: Vec<u64>,
+    /// Top-k hottest pages, merged into contiguous runs, hottest first.
+    pub hottest: Vec<HotRun>,
+}
+
+/// The versioned cache introspection report `leanattn inspect` emits and
+/// the flight recorder snapshots into every bundle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheReport {
+    pub pool: PoolStats,
+    pub sharing: SharingStats,
+    pub heat: HeatStats,
+    pub radix: Option<RadixStats>,
+}
+
+impl CacheReport {
+    /// Build the report from per-page state. Every aggregate here is a
+    /// from-scratch recompute over `ref_counts` and `heat` — nothing is
+    /// carried incrementally, so the report stays bit-exact under any
+    /// interleaving of cache operations.
+    pub fn build(
+        ref_counts: &[u32],
+        heat: &HeatTracker,
+        page_tokens: usize,
+        token_bytes: usize,
+        radix: Option<RadixStats>,
+        top_k: usize,
+    ) -> CacheReport {
+        let pages_total = ref_counts.len();
+        let free: Vec<usize> =
+            (0..pages_total).filter(|&p| ref_counts[p] == 0).collect();
+        let pages_free = free.len();
+        let pages_used = pages_total - pages_free;
+
+        // Fragmentation over the sorted free-id set.
+        let (mut free_runs, mut largest_free_run, mut run) = (0usize, 0usize, 0usize);
+        for (i, &p) in free.iter().enumerate() {
+            if i == 0 || p != free[i - 1] + 1 {
+                free_runs += 1;
+                run = 0;
+            }
+            run += 1;
+            largest_free_run = largest_free_run.max(run);
+        }
+        let fragmentation = if pages_free == 0 {
+            0.0
+        } else {
+            1.0 - largest_free_run as f64 / pages_free as f64
+        };
+
+        let mut refcount_hist = BTreeMap::new();
+        let mut shared_pages = 0usize;
+        let mut max_refcount = 0u32;
+        for &r in ref_counts {
+            *refcount_hist.entry(r).or_insert(0u64) += 1;
+            if r >= 2 {
+                shared_pages += 1;
+            }
+            max_refcount = max_refcount.max(r);
+        }
+
+        // Heat histogram over used pages, bucketed by total touches.
+        let used: Vec<usize> =
+            (0..pages_total).filter(|&p| ref_counts[p] > 0).collect();
+        let max_bucket =
+            used.iter().map(|&p| heat_bucket(heat.total_hits(p))).max().unwrap_or(0);
+        let mut histogram = vec![0u64; max_bucket + 1];
+        for &p in &used {
+            histogram[heat_bucket(heat.total_hits(p))] += 1;
+        }
+
+        // Top-k hottest pages (ties break toward lower ids), merged into
+        // contiguous runs.
+        let mut ranked = used.clone();
+        ranked.sort_by_key(|&p| (std::cmp::Reverse(heat.total_hits(p)), p));
+        ranked.truncate(top_k);
+        ranked.sort_unstable();
+        let mut hottest: Vec<HotRun> = Vec::new();
+        for &p in &ranked {
+            match hottest.last_mut() {
+                Some(r) if r.start + r.pages == p => {
+                    r.pages += 1;
+                    r.touches += heat.total_hits(p);
+                }
+                _ => hottest.push(HotRun {
+                    start: p,
+                    pages: 1,
+                    touches: heat.total_hits(p),
+                }),
+            }
+        }
+        hottest.sort_by_key(|r| (std::cmp::Reverse(r.touches), r.start));
+
+        CacheReport {
+            pool: PoolStats {
+                pages_total,
+                pages_used,
+                pages_free,
+                page_tokens,
+                token_bytes,
+                free_runs,
+                largest_free_run,
+                fragmentation,
+            },
+            sharing: SharingStats {
+                refcount_hist,
+                shared_pages,
+                max_refcount,
+                cow_clones_total: heat.cow_clones(),
+            },
+            heat: HeatStats {
+                clock: heat.clock(),
+                gather_touches_total: heat.gather_total(),
+                append_touches_total: heat.append_total(),
+                select_touches_total: heat.select_total(),
+                histogram,
+                hottest,
+            },
+            radix,
+        }
+    }
+
+    /// The versioned JSON export ([`CACHE_REPORT_VERSION`]).
+    pub fn to_json(&self) -> Json {
+        let mut pool = BTreeMap::new();
+        pool.insert("pages_total".into(), Json::Num(self.pool.pages_total as f64));
+        pool.insert("pages_used".into(), Json::Num(self.pool.pages_used as f64));
+        pool.insert("pages_free".into(), Json::Num(self.pool.pages_free as f64));
+        pool.insert("page_tokens".into(), Json::Num(self.pool.page_tokens as f64));
+        pool.insert("token_bytes".into(), Json::Num(self.pool.token_bytes as f64));
+        pool.insert("free_runs".into(), Json::Num(self.pool.free_runs as f64));
+        pool.insert(
+            "largest_free_run".into(),
+            Json::Num(self.pool.largest_free_run as f64),
+        );
+        pool.insert("fragmentation".into(), Json::Num(self.pool.fragmentation));
+
+        let mut sharing = BTreeMap::new();
+        sharing.insert(
+            "refcount_hist".into(),
+            Json::Obj(
+                self.sharing
+                    .refcount_hist
+                    .iter()
+                    .map(|(k, v)| (k.to_string(), Json::Num(*v as f64)))
+                    .collect(),
+            ),
+        );
+        sharing
+            .insert("shared_pages".into(), Json::Num(self.sharing.shared_pages as f64));
+        sharing
+            .insert("max_refcount".into(), Json::Num(f64::from(self.sharing.max_refcount)));
+        sharing.insert(
+            "cow_clones_total".into(),
+            Json::Num(self.sharing.cow_clones_total as f64),
+        );
+
+        let mut heat = BTreeMap::new();
+        heat.insert("clock".into(), Json::Num(self.heat.clock as f64));
+        heat.insert(
+            "gather_touches_total".into(),
+            Json::Num(self.heat.gather_touches_total as f64),
+        );
+        heat.insert(
+            "append_touches_total".into(),
+            Json::Num(self.heat.append_touches_total as f64),
+        );
+        heat.insert(
+            "select_touches_total".into(),
+            Json::Num(self.heat.select_touches_total as f64),
+        );
+        heat.insert(
+            "histogram".into(),
+            Json::Arr(self.heat.histogram.iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
+        heat.insert(
+            "hottest".into(),
+            Json::Arr(
+                self.heat
+                    .hottest
+                    .iter()
+                    .map(|r| {
+                        let mut o = BTreeMap::new();
+                        o.insert("start".into(), Json::Num(r.start as f64));
+                        o.insert("pages".into(), Json::Num(r.pages as f64));
+                        o.insert("touches".into(), Json::Num(r.touches as f64));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+
+        let radix = match &self.radix {
+            None => Json::Null,
+            Some(r) => {
+                let arr = |xs: &[u64]| {
+                    Json::Arr(xs.iter().map(|&n| Json::Num(n as f64)).collect())
+                };
+                let mut o = BTreeMap::new();
+                o.insert("pages".into(), Json::Num(r.pages as f64));
+                o.insert("max_depth".into(), Json::Num(r.max_depth as f64));
+                o.insert("depth_hist".into(), arr(&r.depth_hist));
+                o.insert("branching_hist".into(), arr(&r.branching_hist));
+                o.insert("hit_depth_hist".into(), arr(&r.hit_depth_hist));
+                o.insert("lookups".into(), Json::Num(r.lookups as f64));
+                Json::Obj(o)
+            }
+        };
+
+        let mut top = BTreeMap::new();
+        top.insert("version".into(), Json::Num(CACHE_REPORT_VERSION as f64));
+        top.insert("pool".into(), Json::Obj(pool));
+        top.insert("sharing".into(), Json::Obj(sharing));
+        top.insert("heat".into(), Json::Obj(heat));
+        top.insert("radix".into(), radix);
+        Json::Obj(top)
+    }
+
+    /// Human-readable summary: the table `leanattn inspect` prints.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "cache report (v{CACHE_REPORT_VERSION}):\n\
+             pool: {} pages ({} used / {} free), page {} tokens x {} B/token\n\
+             fragmentation: {} free runs, largest {} — index {:.3}\n\
+             sharing: {} shared pages, max refcount {}, {} COW clones\n",
+            self.pool.pages_total,
+            self.pool.pages_used,
+            self.pool.pages_free,
+            self.pool.page_tokens,
+            self.pool.token_bytes,
+            self.pool.free_runs,
+            self.pool.largest_free_run,
+            self.pool.fragmentation,
+            self.sharing.shared_pages,
+            self.sharing.max_refcount,
+            self.sharing.cow_clones_total,
+        );
+        s.push_str(&format!(
+            "heat: clock {} — {} gather / {} append / {} select touches\n",
+            self.heat.clock,
+            self.heat.gather_touches_total,
+            self.heat.append_touches_total,
+            self.heat.select_touches_total,
+        ));
+        s.push_str("heat histogram (touches -> used pages):\n");
+        for (b, &n) in self.heat.histogram.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let label = if b == 0 {
+                "0".to_string()
+            } else {
+                format!("{}-{}", 1u64 << (b - 1), (1u64 << b) - 1)
+            };
+            s.push_str(&format!("  {label:>12}  {n}\n"));
+        }
+        if !self.heat.hottest.is_empty() {
+            s.push_str("hottest page runs:\n");
+            for r in &self.heat.hottest {
+                s.push_str(&format!(
+                    "  pages {}..{}  {} touches\n",
+                    r.start,
+                    r.start + r.pages - 1,
+                    r.touches
+                ));
+            }
+        }
+        if let Some(r) = &self.radix {
+            s.push_str(&format!(
+                "radix: {} pages, max depth {}, {} lookups\n",
+                r.pages, r.max_depth, r.lookups
+            ));
+        }
+        s
+    }
+}
+
+fn num_at(obj: &Json, key: &str) -> Result<f64> {
+    obj.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("cache report: {key} missing or not a number"))
+}
+
+fn nonneg_arr(obj: &Json, key: &str) -> Result<Vec<f64>> {
+    let Some(arr) = obj.get(key).and_then(Json::as_arr) else {
+        bail!("cache report: {key} missing or not an array");
+    };
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        let n = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("cache report: {key}[{i}] not a number"))?;
+        ensure!(n >= 0.0, "cache report: {key}[{i}] is negative");
+        out.push(n);
+    }
+    Ok(out)
+}
+
+/// Validate a JSON value against the [`CacheReport::to_json`] schema —
+/// the self-check `leanattn inspect` runs on its output and the flight
+/// recorder runs when re-validating a bundle.
+pub fn validate_cache_report(report: &Json) -> Result<()> {
+    ensure!(report.as_obj().is_some(), "cache report must be a JSON object");
+    let version = num_at(report, "version")?;
+    ensure!(
+        version == CACHE_REPORT_VERSION as f64,
+        "cache report version {version} != {CACHE_REPORT_VERSION}"
+    );
+
+    let pool = report
+        .get("pool")
+        .filter(|p| p.as_obj().is_some())
+        .ok_or_else(|| anyhow::anyhow!("cache report: pool missing"))?;
+    let total = num_at(pool, "pages_total")?;
+    let used = num_at(pool, "pages_used")?;
+    let free = num_at(pool, "pages_free")?;
+    ensure!(used + free == total, "pool accounting: used + free != total");
+    for key in ["page_tokens", "token_bytes", "free_runs", "largest_free_run"] {
+        ensure!(num_at(pool, key)? >= 0.0, "pool {key} is negative");
+    }
+    let frag = num_at(pool, "fragmentation")?;
+    ensure!((0.0..=1.0).contains(&frag), "fragmentation {frag} outside [0, 1]");
+
+    let sharing = report
+        .get("sharing")
+        .filter(|p| p.as_obj().is_some())
+        .ok_or_else(|| anyhow::anyhow!("cache report: sharing missing"))?;
+    let hist = sharing
+        .get("refcount_hist")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("cache report: refcount_hist missing"))?;
+    let mut hist_pages = 0.0;
+    for (k, v) in hist {
+        ensure!(
+            k.parse::<u32>().is_ok(),
+            "refcount_hist key {k:?} is not a refcount"
+        );
+        let n = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("refcount_hist[{k}] not a number"))?;
+        ensure!(n >= 0.0, "refcount_hist[{k}] is negative");
+        hist_pages += n;
+    }
+    ensure!(
+        hist_pages == total,
+        "refcount_hist covers {hist_pages} pages, pool has {total}"
+    );
+    num_at(sharing, "shared_pages")?;
+    num_at(sharing, "max_refcount")?;
+    num_at(sharing, "cow_clones_total")?;
+
+    let heat = report
+        .get("heat")
+        .filter(|p| p.as_obj().is_some())
+        .ok_or_else(|| anyhow::anyhow!("cache report: heat missing"))?;
+    for key in
+        ["clock", "gather_touches_total", "append_touches_total", "select_touches_total"]
+    {
+        ensure!(num_at(heat, key)? >= 0.0, "heat {key} is negative");
+    }
+    let heat_hist = nonneg_arr(heat, "histogram")?;
+    ensure!(
+        heat_hist.iter().sum::<f64>() == used,
+        "heat histogram covers {} pages, pool has {used} used",
+        heat_hist.iter().sum::<f64>()
+    );
+    let hottest = heat
+        .get("hottest")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("cache report: hottest missing"))?;
+    for (i, run) in hottest.iter().enumerate() {
+        for key in ["start", "pages", "touches"] {
+            let n = run.get(key).and_then(Json::as_f64).ok_or_else(|| {
+                anyhow::anyhow!("hottest[{i}].{key} missing or not a number")
+            })?;
+            ensure!(n >= 0.0, "hottest[{i}].{key} is negative");
+        }
+        ensure!(
+            run.get("pages").and_then(Json::as_f64) >= Some(1.0),
+            "hottest[{i}] is an empty run"
+        );
+    }
+
+    match report.get("radix") {
+        None => bail!("cache report: radix missing (use null for no index)"),
+        Some(Json::Null) => {}
+        Some(radix) => {
+            ensure!(radix.as_obj().is_some(), "radix must be an object or null");
+            num_at(radix, "pages")?;
+            num_at(radix, "max_depth")?;
+            num_at(radix, "lookups")?;
+            let depth = nonneg_arr(radix, "depth_hist")?;
+            nonneg_arr(radix, "branching_hist")?;
+            let hits = nonneg_arr(radix, "hit_depth_hist")?;
+            ensure!(
+                hits.iter().sum::<f64>() == num_at(radix, "lookups")?,
+                "hit_depth_hist does not cover every lookup"
+            );
+            ensure!(
+                num_at(radix, "pages")? == depth.iter().sum::<f64>(),
+                "depth_hist does not cover every indexed page"
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracker_is_inert() {
+        let h = HeatTracker::disabled();
+        h.tick();
+        h.touch(TouchKind::Gather, 3);
+        h.touch(TouchKind::Append, 7);
+        h.record_cow();
+        h.reset_page(1);
+        assert!(!h.is_enabled());
+        assert_eq!(h.clock(), 0);
+        assert_eq!(h.gather_total(), 0);
+        assert_eq!(h.total_hits(3), 0);
+        assert_eq!(h.cow_clones(), 0);
+    }
+
+    #[test]
+    fn touches_land_in_per_page_and_total_counters() {
+        let h = HeatTracker::enabled(8);
+        h.tick();
+        h.touch(TouchKind::Gather, 2);
+        h.touch(TouchKind::Gather, 2);
+        h.touch(TouchKind::Append, 2);
+        h.touch(TouchKind::Select, 5);
+        assert_eq!(h.gather_hits(2), 2);
+        assert_eq!(h.append_hits(2), 1);
+        assert_eq!(h.select_hits(5), 1);
+        assert_eq!(h.total_hits(2), 3);
+        assert_eq!((h.gather_total(), h.append_total(), h.select_total()), (2, 1, 1));
+        assert_eq!(h.last_touch(2), 1);
+        h.tick();
+        h.tick();
+        assert_eq!(h.age(2), 2);
+        assert_eq!(h.age(5), 2);
+        h.reset_page(2);
+        assert_eq!(h.total_hits(2), 0);
+        assert_eq!(h.age(2), 0);
+        assert_eq!(h.resets(), 1);
+        // Totals are lifetime counters; resets don't rewind them.
+        assert_eq!(h.gather_total(), 2);
+    }
+
+    #[test]
+    fn heat_buckets_are_log2() {
+        assert_eq!(heat_bucket(0), 0);
+        assert_eq!(heat_bucket(1), 1);
+        assert_eq!(heat_bucket(2), 2);
+        assert_eq!(heat_bucket(3), 2);
+        assert_eq!(heat_bucket(4), 3);
+        assert_eq!(heat_bucket(1023), 10);
+        assert_eq!(heat_bucket(1024), 11);
+    }
+
+    #[test]
+    fn report_round_trips_and_validates() {
+        let h = HeatTracker::enabled(6);
+        // Pages 0..3 used (0 and 1 shared), 4..5 free — a fragmented
+        // pool would need non-adjacent free ids, so free {4, 5} is one
+        // run and fragmentation 0.
+        let refs = [2u32, 3, 1, 1, 0, 0];
+        for _ in 0..5 {
+            h.touch(TouchKind::Gather, 0);
+        }
+        h.touch(TouchKind::Append, 1);
+        h.touch(TouchKind::Select, 2);
+        h.record_cow();
+        let rep = CacheReport::build(&refs, &h, 4, 64, None, 3);
+        assert_eq!(rep.pool.pages_used, 4);
+        assert_eq!(rep.pool.free_runs, 1);
+        assert_eq!(rep.pool.largest_free_run, 2);
+        assert_eq!(rep.pool.fragmentation, 0.0);
+        assert_eq!(rep.sharing.shared_pages, 2);
+        assert_eq!(rep.sharing.max_refcount, 3);
+        assert_eq!(rep.sharing.cow_clones_total, 1);
+        assert_eq!(rep.sharing.refcount_hist[&0], 2);
+        assert_eq!(rep.sharing.refcount_hist[&1], 2);
+        // Heat histogram: page 3 cold (bucket 0), pages 1 and 2 at one
+        // touch (bucket 1), page 0 at five touches (bucket 3).
+        assert_eq!(rep.heat.histogram, vec![1, 2, 0, 1]);
+        // Top-3 pages are 0 (5 touches), 1 and 2 (1 each): 1 and 2 merge
+        // into one run but page 0 stays hottest.
+        assert_eq!(
+            rep.heat.hottest,
+            vec![
+                HotRun { start: 0, pages: 1, touches: 5 },
+                HotRun { start: 1, pages: 2, touches: 2 },
+            ]
+        );
+        let j = rep.to_json();
+        validate_cache_report(&j).expect("report validates");
+        let parsed = Json::parse(&j.to_string()).expect("report parses back");
+        assert_eq!(parsed, j, "JSON round-trip is the identity");
+        validate_cache_report(&parsed).expect("parsed report still validates");
+        let text = rep.render();
+        assert!(text.contains("cache report"), "{text}");
+        assert!(text.contains("hottest page runs"), "{text}");
+    }
+
+    #[test]
+    fn fragmented_free_set_is_measured() {
+        let h = HeatTracker::enabled(7);
+        // Free ids {0, 2, 3, 6}: runs [0], [2,3], [6] -> 3 runs, largest 2.
+        let refs = [0u32, 1, 0, 0, 1, 2, 0];
+        let rep = CacheReport::build(&refs, &h, 4, 16, None, 4);
+        assert_eq!(rep.pool.free_runs, 3);
+        assert_eq!(rep.pool.largest_free_run, 2);
+        assert_eq!(rep.pool.fragmentation, 1.0 - 2.0 / 4.0);
+        validate_cache_report(&rep.to_json()).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_malformed_reports() {
+        assert!(validate_cache_report(&Json::Null).is_err());
+        let h = HeatTracker::enabled(2);
+        let good = CacheReport::build(&[1, 0], &h, 4, 16, None, 2).to_json();
+        validate_cache_report(&good).unwrap();
+        // Wrong version.
+        let mut bad = good.clone();
+        if let Json::Obj(o) = &mut bad {
+            o.insert("version".into(), Json::Num(99.0));
+        }
+        assert!(validate_cache_report(&bad).is_err());
+        // Pool accounting broken.
+        let mut bad = good.clone();
+        if let Json::Obj(o) = &mut bad {
+            if let Some(Json::Obj(pool)) = o.get_mut("pool") {
+                pool.insert("pages_used".into(), Json::Num(5.0));
+            }
+        }
+        assert!(validate_cache_report(&bad).is_err());
+        // Missing radix key entirely.
+        let mut bad = good.clone();
+        if let Json::Obj(o) = &mut bad {
+            o.remove("radix");
+        }
+        assert!(validate_cache_report(&bad).is_err());
+    }
+
+    #[test]
+    fn radix_section_validates_its_accounting() {
+        let h = HeatTracker::enabled(2);
+        let stats = RadixStats {
+            pages: 3,
+            max_depth: 2,
+            depth_hist: vec![2, 1],
+            branching_hist: vec![2, 1],
+            hit_depth_hist: vec![1, 0, 2],
+            lookups: 3,
+        };
+        let rep = CacheReport::build(&[1, 1], &h, 4, 16, Some(stats), 2);
+        validate_cache_report(&rep.to_json()).unwrap();
+        // A lookup the hit-depth histogram misses is rejected.
+        let mut bad = rep.clone();
+        bad.radix.as_mut().unwrap().lookups = 4;
+        assert!(validate_cache_report(&bad.to_json()).is_err());
+    }
+}

@@ -1,0 +1,350 @@
+//! Anomaly flight recorder: post-mortem bundles for a serving engine.
+//!
+//! When a trigger condition fires — SLO breach, eviction storm, audit
+//! failure, watchdog stall — the engine freezes its observability state
+//! and the recorder writes a **bundle** directory under the configured
+//! flight dir: the Chrome trace-event export of the trace ring, the
+//! metrics snapshot JSON, the cache introspection report, the rendered
+//! SLO/timeline report, and a manifest naming the trigger and step. The
+//! bundle is exactly what a human needs to answer "what was the engine
+//! doing when it went sideways" after the process is gone.
+//!
+//! Bundles are capped per recorder ([`FlightRecorder::MAX_BUNDLES`]) so
+//! a flapping trigger cannot fill the disk; suppressed recordings are
+//! still counted. [`validate_bundle`] re-validates a bundle from disk
+//! against the same schema validators the exporters are tested with —
+//! the e2e check that what the recorder wrote is what a reader gets.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+use super::cache_stats::validate_cache_report;
+use super::snapshot::SNAPSHOT_VERSION;
+use super::tracer::validate_chrome_trace;
+
+/// Version stamp of the bundle manifest.
+pub const FLIGHT_MANIFEST_VERSION: u64 = 1;
+
+/// Why a bundle was recorded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlightTrigger {
+    /// A finished request blew through the configured latency target.
+    SloBreach,
+    /// One step evicted at least the storm threshold of prefix pages.
+    EvictionStorm,
+    /// An online invariant audit failed.
+    AuditFailure,
+    /// The watchdog saw the stall threshold of progress-free steps.
+    WatchdogStall,
+}
+
+impl FlightTrigger {
+    pub const ALL: [FlightTrigger; 4] = [
+        FlightTrigger::SloBreach,
+        FlightTrigger::EvictionStorm,
+        FlightTrigger::AuditFailure,
+        FlightTrigger::WatchdogStall,
+    ];
+
+    /// Stable name used in manifests and bundle directory names.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FlightTrigger::SloBreach => "slo_breach",
+            FlightTrigger::EvictionStorm => "eviction_storm",
+            FlightTrigger::AuditFailure => "audit_failure",
+            FlightTrigger::WatchdogStall => "watchdog_stall",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FlightTrigger> {
+        FlightTrigger::ALL.iter().copied().find(|t| t.as_str() == s)
+    }
+}
+
+/// Everything one bundle freezes. The engine assembles this from its
+/// live observability state at trigger time.
+pub struct FlightSnapshot<'a> {
+    /// Chrome trace-event export of the trace ring.
+    pub trace: &'a Json,
+    /// `MetricsSnapshot::to_json()` of the engine snapshot.
+    pub metrics: &'a Json,
+    /// `CacheReport::to_json()` of the cache introspection report.
+    pub cache_report: &'a Json,
+    /// Rendered SLO / timeline report (human-readable post-mortem text).
+    pub slo_text: &'a str,
+}
+
+/// Writes post-mortem bundles under a directory.
+pub struct FlightRecorder {
+    dir: PathBuf,
+    /// Bundles written (also the next bundle's sequence number).
+    written: u64,
+    /// Trigger firings seen, including suppressed ones.
+    triggers: u64,
+}
+
+impl FlightRecorder {
+    /// Bundle cap per recorder: a flapping trigger must not fill disk.
+    pub const MAX_BUNDLES: u64 = 8;
+
+    pub fn new(dir: impl Into<PathBuf>) -> FlightRecorder {
+        FlightRecorder { dir: dir.into(), written: 0, triggers: 0 }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Bundles written so far.
+    pub fn bundles(&self) -> u64 {
+        self.written
+    }
+
+    /// Trigger firings observed (written + suppressed).
+    pub fn triggers(&self) -> u64 {
+        self.triggers
+    }
+
+    /// Record one bundle. Returns the bundle directory, or `None` when
+    /// the bundle cap suppressed the write (the firing is still
+    /// counted).
+    pub fn record(
+        &mut self,
+        trigger: FlightTrigger,
+        step: u64,
+        snap: &FlightSnapshot,
+    ) -> Result<Option<PathBuf>> {
+        self.triggers += 1;
+        if self.written >= Self::MAX_BUNDLES {
+            return Ok(None);
+        }
+        let bundle = self
+            .dir
+            .join(format!("flight-{:04}-{}", self.written, trigger.as_str()));
+        std::fs::create_dir_all(&bundle)
+            .with_context(|| format!("create flight bundle {}", bundle.display()))?;
+
+        let mut manifest = BTreeMap::new();
+        manifest
+            .insert("version".to_string(), Json::Num(FLIGHT_MANIFEST_VERSION as f64));
+        manifest
+            .insert("trigger".to_string(), Json::Str(trigger.as_str().to_string()));
+        manifest.insert("step".to_string(), Json::Num(step as f64));
+        manifest.insert(
+            "files".to_string(),
+            Json::Arr(
+                ["manifest.json", "trace.json", "metrics.json", "cache_report.json", "slo.txt"]
+                    .iter()
+                    .map(|f| Json::Str((*f).to_string()))
+                    .collect(),
+            ),
+        );
+
+        let writes: [(&str, String); 5] = [
+            ("manifest.json", Json::Obj(manifest).to_string()),
+            ("trace.json", snap.trace.to_string()),
+            ("metrics.json", snap.metrics.to_string()),
+            ("cache_report.json", snap.cache_report.to_string()),
+            ("slo.txt", snap.slo_text.to_string()),
+        ];
+        for (name, text) in &writes {
+            let path = bundle.join(name);
+            std::fs::write(&path, text)
+                .with_context(|| format!("write {}", path.display()))?;
+        }
+        self.written += 1;
+        Ok(Some(bundle))
+    }
+}
+
+/// Validate a `MetricsSnapshot::to_json()` export: versioned, with
+/// `metrics` and `kinds` objects naming exactly the same series and
+/// every kind a known one.
+pub fn validate_snapshot_json(snap: &Json) -> Result<()> {
+    ensure!(snap.as_obj().is_some(), "metrics snapshot must be a JSON object");
+    let version = snap
+        .get("version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("snapshot missing version"))?;
+    ensure!(
+        version == SNAPSHOT_VERSION as f64,
+        "snapshot version {version} != {SNAPSHOT_VERSION}"
+    );
+    let metrics = snap
+        .get("metrics")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("snapshot missing metrics object"))?;
+    let kinds = snap
+        .get("kinds")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("snapshot missing kinds object"))?;
+    ensure!(
+        metrics.len() == kinds.len(),
+        "snapshot metrics/kinds disagree on series count"
+    );
+    for (name, v) in metrics {
+        ensure!(v.as_f64().is_some(), "metric {name} is not a number");
+        let kind = kinds
+            .get(name)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("metric {name} has no kind"))?;
+        ensure!(
+            kind == "counter" || kind == "gauge",
+            "metric {name} has unknown kind {kind:?}"
+        );
+    }
+    Ok(())
+}
+
+/// Re-validate a bundle directory from disk: manifest shape, the trace
+/// against the Chrome trace-event schema, the metrics snapshot against
+/// the snapshot schema, and the cache report against its schema.
+pub fn validate_bundle(dir: &Path) -> Result<()> {
+    let read = |name: &str| -> Result<Json> {
+        let path = dir.join(name);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Json::parse(&text).with_context(|| format!("parse {}", path.display()))
+    };
+    let manifest = read("manifest.json")?;
+    let version = manifest
+        .get("version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("manifest missing version"))?;
+    ensure!(
+        version == FLIGHT_MANIFEST_VERSION as f64,
+        "manifest version {version} != {FLIGHT_MANIFEST_VERSION}"
+    );
+    let trigger = manifest
+        .get("trigger")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("manifest missing trigger"))?;
+    ensure!(
+        FlightTrigger::parse(trigger).is_some(),
+        "manifest trigger {trigger:?} is not a known trigger"
+    );
+    ensure!(
+        manifest.get("step").and_then(Json::as_f64).is_some(),
+        "manifest missing step"
+    );
+
+    validate_chrome_trace(&read("trace.json")?).context("bundle trace.json")?;
+    validate_snapshot_json(&read("metrics.json")?).context("bundle metrics.json")?;
+    validate_cache_report(&read("cache_report.json")?)
+        .context("bundle cache_report.json")?;
+    ensure!(
+        dir.join("slo.txt").exists(),
+        "bundle missing slo.txt"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::cache_stats::{CacheReport, HeatTracker};
+    use crate::obs::snapshot::MetricsSnapshot;
+    use crate::obs::tracer::{Attrs, Phase, Tracer};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "leanattn-flight-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn demo_snapshot() -> (Json, Json, Json) {
+        let t = Tracer::enabled(16);
+        t.instant(Phase::Evict, Attrs { pages: Some(4), ..Default::default() });
+        let trace = t.export_chrome_trace();
+        let mut s = MetricsSnapshot::default();
+        s.counter("decode_steps_total", 12.0, "steps");
+        s.gauge("kv_pages_used", 3.0, "pages");
+        let heat = HeatTracker::enabled(4);
+        let report = CacheReport::build(&[1, 2, 0, 0], &heat, 4, 16, None, 2);
+        (trace, s.to_json(), report.to_json())
+    }
+
+    #[test]
+    fn bundle_round_trips_through_the_validators() {
+        let dir = tmp_dir("roundtrip");
+        let mut rec = FlightRecorder::new(&dir);
+        let (trace, metrics, cache) = demo_snapshot();
+        let snap = FlightSnapshot {
+            trace: &trace,
+            metrics: &metrics,
+            cache_report: &cache,
+            slo_text: "serving SLO report: demo",
+        };
+        let bundle = rec
+            .record(FlightTrigger::EvictionStorm, 7, &snap)
+            .expect("record")
+            .expect("under the cap");
+        assert!(bundle.ends_with("flight-0000-eviction_storm"));
+        validate_bundle(&bundle).expect("bundle re-validates from disk");
+        assert_eq!(rec.bundles(), 1);
+        assert_eq!(rec.triggers(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bundle_cap_suppresses_but_keeps_counting() {
+        let dir = tmp_dir("cap");
+        let mut rec = FlightRecorder::new(&dir);
+        let (trace, metrics, cache) = demo_snapshot();
+        let snap = FlightSnapshot {
+            trace: &trace,
+            metrics: &metrics,
+            cache_report: &cache,
+            slo_text: "x",
+        };
+        for i in 0..FlightRecorder::MAX_BUNDLES + 3 {
+            let got = rec.record(FlightTrigger::WatchdogStall, i, &snap).unwrap();
+            assert_eq!(got.is_some(), i < FlightRecorder::MAX_BUNDLES);
+        }
+        assert_eq!(rec.bundles(), FlightRecorder::MAX_BUNDLES);
+        assert_eq!(rec.triggers(), FlightRecorder::MAX_BUNDLES + 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn validator_rejects_a_tampered_bundle() {
+        let dir = tmp_dir("tamper");
+        let mut rec = FlightRecorder::new(&dir);
+        let (trace, metrics, cache) = demo_snapshot();
+        let snap = FlightSnapshot {
+            trace: &trace,
+            metrics: &metrics,
+            cache_report: &cache,
+            slo_text: "x",
+        };
+        let bundle = rec
+            .record(FlightTrigger::AuditFailure, 1, &snap)
+            .unwrap()
+            .unwrap();
+        std::fs::write(bundle.join("trace.json"), "[{\"name\":\"nope\"}]").unwrap();
+        assert!(validate_bundle(&bundle).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_validator_checks_kinds() {
+        let mut s = MetricsSnapshot::default();
+        s.counter("a_total", 1.0, "a");
+        let j = s.to_json();
+        validate_snapshot_json(&j).unwrap();
+        let mut bad = j.clone();
+        if let Json::Obj(o) = &mut bad {
+            if let Some(Json::Obj(kinds)) = o.get_mut("kinds") {
+                kinds.insert("a_total".into(), Json::Str("mystery".into()));
+            }
+        }
+        assert!(validate_snapshot_json(&bad).is_err());
+    }
+}

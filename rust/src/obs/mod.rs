@@ -25,23 +25,45 @@
 //! - [`benchlog`] — the versioned machine-readable [`BenchReport`]
 //!   every bench harness emits (`--json-out`) and the baseline
 //!   regression gate compares (`--check-against`).
+//! - [`cache_stats`] — the KV-cache introspection plane: the per-page
+//!   [`HeatTracker`] the paged cache maintains at its gather / append /
+//!   select sites and the versioned [`CacheReport`] (`leanattn
+//!   inspect`) recomputed from scratch over that state.
+//! - [`watchdog`] — the step-progress heartbeat ([`Watchdog`]) that
+//!   marks engine health and fires the flight recorder on stalls.
+//! - [`flight`] — the anomaly [`FlightRecorder`]: post-mortem bundles
+//!   (trace + metrics snapshot + cache report + SLO text) written when
+//!   a trigger condition fires, re-validated on read-back.
 //!
 //! The plane is feature-cheap by construction: a disabled [`Tracer`]
 //! reads no clocks and allocates nothing, and `leanattn bench --obs`
-//! measures that overhead and asserts it under 2%.
+//! measures that overhead — and the heat tracker's — and asserts both
+//! under 2%.
 
 pub mod attrib;
 pub mod benchlog;
+pub mod cache_stats;
 pub mod calibrate;
+pub mod flight;
 pub mod hist;
 pub mod snapshot;
 pub mod timeline;
 pub mod tracer;
+pub mod watchdog;
 
 pub use attrib::WorkAccounting;
 pub use benchlog::{compare_reports, validate_bench_report, BenchReport, BENCH_SCHEMA_VERSION};
+pub use cache_stats::{
+    heat_bucket, validate_cache_report, CacheReport, HeatTracker, HotRun,
+    RadixStats, TouchKind, CACHE_REPORT_VERSION,
+};
 pub use calibrate::{run_calibration, CalibrationReport};
+pub use flight::{
+    validate_bundle, validate_snapshot_json, FlightRecorder, FlightSnapshot,
+    FlightTrigger, FLIGHT_MANIFEST_VERSION,
+};
 pub use hist::LogHistogram;
 pub use snapshot::{Metric, MetricKind, MetricsSnapshot, SNAPSHOT_VERSION};
 pub use timeline::{Quantiles, RequestTimeline, SloReport, TimelineRecorder};
 pub use tracer::{validate_chrome_trace, Attrs, Phase, Span, TraceEvent, Tracer};
+pub use watchdog::{StallEvent, Watchdog};

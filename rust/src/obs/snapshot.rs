@@ -28,7 +28,7 @@ pub enum MetricKind {
 }
 
 impl MetricKind {
-    fn as_str(&self) -> &'static str {
+    pub fn as_str(&self) -> &'static str {
         match self {
             MetricKind::Counter => "counter",
             MetricKind::Gauge => "gauge",

@@ -1,0 +1,138 @@
+//! Engine health watchdog: a step-progress heartbeat.
+//!
+//! The engine beats the watchdog once per step with its monotonic
+//! progress counter (tokens generated + prefill calls). A configured
+//! stall threshold — consecutive steps without progress — marks the
+//! engine unhealthy, fires a [`StallEvent`] the engine hands to the
+//! flight recorder, and keeps counting so every further whole threshold
+//! of stalled steps re-fires. Health is exported as the `engine_healthy`
+//! gauge in the engine snapshot.
+//!
+//! Step-counted (not wall-clock) stall detection keeps the watchdog
+//! deterministic and testable; today's synchronous engine cannot stall
+//! by construction, but ROADMAP open item 1's async server steps even
+//! when lanes are blocked — exactly the state this catches.
+
+/// One stall detection: the heartbeat saw `stalled_steps` consecutive
+/// steps without progress.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StallEvent {
+    pub stalled_steps: u64,
+    /// The progress value the engine has been stuck at.
+    pub progress: u64,
+}
+
+/// Step-progress watchdog. `stall_steps == 0` disables it (always
+/// healthy, never fires).
+#[derive(Clone, Debug)]
+pub struct Watchdog {
+    stall_steps: u64,
+    last_progress: u64,
+    stalled_for: u64,
+    stalls: u64,
+    healthy: bool,
+}
+
+impl Watchdog {
+    pub fn new(stall_steps: u64) -> Watchdog {
+        Watchdog {
+            stall_steps,
+            last_progress: 0,
+            stalled_for: 0,
+            stalls: 0,
+            healthy: true,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.stall_steps > 0
+    }
+
+    /// The configured stall threshold, in steps.
+    pub fn stall_steps(&self) -> u64 {
+        self.stall_steps
+    }
+
+    /// One heartbeat: `progress` is any monotonic counter that moves
+    /// when the engine does useful work. Returns the stall event when
+    /// the threshold is crossed (and again at every further multiple).
+    pub fn beat(&mut self, progress: u64) -> Option<StallEvent> {
+        if !self.is_enabled() {
+            return None;
+        }
+        if progress != self.last_progress {
+            self.last_progress = progress;
+            self.stalled_for = 0;
+            self.healthy = true;
+            return None;
+        }
+        self.stalled_for += 1;
+        if self.stalled_for % self.stall_steps == 0 {
+            self.healthy = false;
+            self.stalls += 1;
+            return Some(StallEvent { stalled_steps: self.stalled_for, progress });
+        }
+        None
+    }
+
+    /// `false` from the first fired stall until progress resumes.
+    pub fn healthy(&self) -> bool {
+        self.healthy
+    }
+
+    /// Stall events fired so far (monotonic).
+    pub fn stalls(&self) -> u64 {
+        self.stalls
+    }
+
+    /// Consecutive progress-free steps at the last beat.
+    pub fn stalled_for(&self) -> u64 {
+        self.stalled_for
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_watchdog_never_fires() {
+        let mut w = Watchdog::new(0);
+        assert!(!w.is_enabled());
+        for _ in 0..100 {
+            assert_eq!(w.beat(7), None);
+        }
+        assert!(w.healthy());
+        assert_eq!(w.stalls(), 0);
+    }
+
+    #[test]
+    fn progress_keeps_the_watchdog_quiet() {
+        let mut w = Watchdog::new(3);
+        for p in 1..50u64 {
+            assert_eq!(w.beat(p), None);
+        }
+        assert!(w.healthy());
+        assert_eq!(w.stalls(), 0);
+    }
+
+    #[test]
+    fn stall_fires_at_the_threshold_and_refires_each_multiple() {
+        let mut w = Watchdog::new(3);
+        assert_eq!(w.beat(5), None); // progress moves to 5
+        assert_eq!(w.beat(5), None); // stalled 1
+        assert_eq!(w.beat(5), None); // stalled 2
+        let e = w.beat(5).expect("stalled 3 -> fire");
+        assert_eq!(e, StallEvent { stalled_steps: 3, progress: 5 });
+        assert!(!w.healthy());
+        assert_eq!(w.beat(5), None); // 4
+        assert_eq!(w.beat(5), None); // 5
+        assert!(w.beat(5).is_some(), "re-fires at 6");
+        assert_eq!(w.stalls(), 2);
+
+        // Progress resumes: health restored, counter rearmed.
+        assert_eq!(w.beat(6), None);
+        assert!(w.healthy());
+        assert_eq!(w.stalled_for(), 0);
+    }
+}

@@ -1,0 +1,288 @@
+//! Property tests for the cache introspection report: across random
+//! workloads of inserts, shared-prefix inserts, appends (with
+//! copy-on-write), zero-copy forks, speculative truncations, radix-style
+//! retains/releases, gathers, sparse page selections, frees and tick
+//! advances, [`PagedKvCache::report`] must equal — field for field, bit
+//! for bit — an independent from-scratch recompute over the per-page
+//! accessors (`page_ref`, `HeatTracker::total_hits`, ...). The JSON
+//! export must round-trip through the parser unchanged and pass
+//! [`validate_cache_report`] at every checkpoint.
+//!
+//! The cache's head plane is the KV-head plane, so the suite sweeps
+//! `h_kv ∈ {1, 2, 4}` like the page-accounting properties — the report
+//! must be indifferent to the grouping.
+
+use std::cmp::Reverse;
+use std::collections::BTreeMap;
+
+use lean_attention::coordinator::PagedKvCache;
+use lean_attention::obs::cache_stats::{HeatStats, PoolStats, SharingStats};
+use lean_attention::obs::{heat_bucket, validate_cache_report, CacheReport, HotRun};
+use lean_attention::sparse::SparsePolicy;
+use lean_attention::util::json::Json;
+use lean_attention::util::rng::Rng;
+use lean_attention::util::testing::prop_check;
+
+const LAYERS: usize = 1;
+const DH: usize = 4;
+const PAGE_TOKENS: usize = 4;
+const PAGES: usize = 24;
+const KV_HEAD_PLANES: [usize; 3] = [1, 2, 4];
+
+fn kv(rng: &mut Rng, kv_heads: usize, tokens: usize) -> (Vec<f32>, Vec<f32>) {
+    let n = LAYERS * kv_heads * tokens * DH;
+    (rng.normal_vec(n), rng.normal_vec(n))
+}
+
+/// From-scratch recompute of the full report over the public per-page
+/// accessors — deliberately reimplemented here, not routed through
+/// `CacheReport::build`, so the two derivations check each other.
+fn recompute_report(cache: &PagedKvCache, top_k: usize) -> CacheReport {
+    let heat = cache.heat();
+    let total = cache.total_pages();
+    let refs: Vec<u32> = (0..total).map(|p| cache.page_ref(p)).collect();
+    let free: Vec<usize> = (0..total).filter(|&p| refs[p] == 0).collect();
+    let used: Vec<usize> = (0..total).filter(|&p| refs[p] > 0).collect();
+
+    let mut free_runs = 0usize;
+    let mut largest = 0usize;
+    let mut run = 0usize;
+    for (i, &p) in free.iter().enumerate() {
+        if i == 0 || p != free[i - 1] + 1 {
+            free_runs += 1;
+            run = 0;
+        }
+        run += 1;
+        largest = largest.max(run);
+    }
+    let fragmentation = if free.is_empty() {
+        0.0
+    } else {
+        1.0 - largest as f64 / free.len() as f64
+    };
+
+    let mut refcount_hist: BTreeMap<u32, u64> = BTreeMap::new();
+    for &r in &refs {
+        *refcount_hist.entry(r).or_insert(0) += 1;
+    }
+    let shared_pages = refs.iter().filter(|&&r| r >= 2).count();
+    let max_refcount = refs.iter().copied().max().unwrap_or(0);
+
+    let max_bucket =
+        used.iter().map(|&p| heat_bucket(heat.total_hits(p))).max().unwrap_or(0);
+    let mut histogram = vec![0u64; max_bucket + 1];
+    for &p in &used {
+        histogram[heat_bucket(heat.total_hits(p))] += 1;
+    }
+
+    let mut ranked = used.clone();
+    ranked.sort_by_key(|&p| (Reverse(heat.total_hits(p)), p));
+    ranked.truncate(top_k);
+    ranked.sort_unstable();
+    let mut hottest: Vec<HotRun> = Vec::new();
+    for &p in &ranked {
+        match hottest.last_mut() {
+            Some(r) if r.start + r.pages == p => {
+                r.pages += 1;
+                r.touches += heat.total_hits(p);
+            }
+            _ => hottest.push(HotRun { start: p, pages: 1, touches: heat.total_hits(p) }),
+        }
+    }
+    hottest.sort_by_key(|r| (Reverse(r.touches), r.start));
+
+    CacheReport {
+        pool: PoolStats {
+            pages_total: total,
+            pages_used: used.len(),
+            pages_free: free.len(),
+            page_tokens: PAGE_TOKENS,
+            token_bytes: cache.token_bytes(),
+            free_runs,
+            largest_free_run: largest,
+            fragmentation,
+        },
+        sharing: SharingStats {
+            refcount_hist,
+            shared_pages,
+            max_refcount,
+            cow_clones_total: heat.cow_clones(),
+        },
+        heat: HeatStats {
+            clock: heat.clock(),
+            gather_touches_total: heat.gather_total(),
+            append_touches_total: heat.append_total(),
+            select_touches_total: heat.select_total(),
+            histogram,
+            hottest,
+        },
+        radix: None,
+    }
+}
+
+fn check_report(cache: &PagedKvCache, top_k: usize) -> Result<(), String> {
+    let rep = cache.report(None, top_k);
+    let expect = recompute_report(cache, top_k);
+    if rep != expect {
+        return Err(format!(
+            "report diverged from recompute (top_k {top_k}):\n got {rep:?}\nwant {expect:?}"
+        ));
+    }
+    let j = rep.to_json();
+    validate_cache_report(&j).map_err(|e| format!("schema: {e}"))?;
+    let parsed = Json::parse(&j.to_string()).map_err(|e| format!("parse-back: {e}"))?;
+    if parsed != j {
+        return Err("JSON round-trip is not the identity".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn report_matches_from_scratch_recompute_under_churn() {
+    prop_check("cache report == recompute", 30, |rng| {
+        let kv_heads = *rng.choose(&KV_HEAD_PLANES);
+        let mut cache = PagedKvCache::new(LAYERS, kv_heads, DH, PAGE_TOKENS, PAGES);
+        let mut active: Vec<u64> = Vec::new();
+        let mut retains: Vec<usize> = Vec::new();
+        let mut next_id = 0u64;
+        let policy = SparsePolicy::with_budget(2);
+
+        for step in 0..100 {
+            match rng.urange(0, 11) {
+                0 => {
+                    let len = rng.urange(1, 3 * PAGE_TOKENS + 2);
+                    let (k, v) = kv(rng, kv_heads, len);
+                    if cache.insert_seq(next_id, &k, &v, len).is_ok() {
+                        active.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 if !active.is_empty() => {
+                    let donor = *rng.choose(&active);
+                    let full = cache.seq_len(donor).unwrap() / PAGE_TOKENS;
+                    if full == 0 {
+                        continue;
+                    }
+                    let take = rng.urange(1, full + 1);
+                    let shared: Vec<usize> =
+                        cache.seq_pages(donor).unwrap()[..take].to_vec();
+                    let suffix = rng.urange(0, PAGE_TOKENS + 3);
+                    let (k, v) = kv(rng, kv_heads, suffix);
+                    if cache.insert_seq_shared(next_id, &shared, &k, &v, suffix).is_ok() {
+                        active.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                // Append — COW when the tail page is shared; both the
+                // append touch and the clone must land in the heat state.
+                2 if !active.is_empty() => {
+                    let id = *rng.choose(&active);
+                    let (k, v) = kv(rng, kv_heads, 1);
+                    let _ = cache.append_token(id, &k, &v);
+                }
+                3 if !active.is_empty() => {
+                    let donor = *rng.choose(&active);
+                    if cache.fork_seq(donor, next_id).is_ok() {
+                        active.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                4 if !active.is_empty() => {
+                    let id = *rng.choose(&active);
+                    let len = cache.seq_len(id).unwrap();
+                    cache
+                        .truncate_seq(id, rng.urange(0, len + 1))
+                        .map_err(|e| e.to_string())?;
+                }
+                5 if !active.is_empty() => {
+                    let i = rng.urange(0, active.len());
+                    cache.free_seq(active.swap_remove(i));
+                }
+                // Radix-style external retain / release: report sharing
+                // counts must follow `page_ref`, whoever the holder is.
+                6 if !active.is_empty() => {
+                    let id = *rng.choose(&active);
+                    let pages = cache.seq_pages(id).unwrap();
+                    let p = pages[rng.urange(0, pages.len())];
+                    cache.retain_page(p).map_err(|e| e.to_string())?;
+                    retains.push(p);
+                }
+                7 if !retains.is_empty() => {
+                    let i = rng.urange(0, retains.len());
+                    let p = retains.swap_remove(i);
+                    cache.release_page(p).map_err(|e| e.to_string())?;
+                }
+                // Flat gather over a few live lanes: per-page gather
+                // touches accumulate.
+                8 if !active.is_empty() => {
+                    let lanes: Vec<Option<u64>> =
+                        active.iter().take(3).map(|&id| Some(id)).collect();
+                    let ctx = lanes
+                        .iter()
+                        .filter_map(|s| s.and_then(|id| cache.seq_len(id)))
+                        .max()
+                        .unwrap_or(PAGE_TOKENS)
+                        .max(1)
+                        .next_multiple_of(PAGE_TOKENS);
+                    let n = LAYERS * lanes.len() * kv_heads * ctx * DH;
+                    let (mut kb, mut vb) = (vec![0.0; n], vec![0.0; n]);
+                    cache
+                        .gather(&lanes, ctx, &mut kb, &mut vb)
+                        .map_err(|e| e.to_string())?;
+                }
+                // Sparse page selection: select touches accumulate.
+                9 if !active.is_empty() => {
+                    let id = *rng.choose(&active);
+                    let _ = cache.select_seq_pages(id, &policy);
+                }
+                _ => cache.heat_tick(),
+            }
+            // Bit-exact at every step, across several top-k widths.
+            let top_k = [0, 1, 4, PAGES][step % 4];
+            check_report(&cache, top_k)?;
+        }
+
+        for id in active.drain(..) {
+            cache.free_seq(id);
+        }
+        for p in retains.drain(..) {
+            cache.release_page(p).map_err(|e| e.to_string())?;
+        }
+        // Drained pool: the report must agree that everything is free and
+        // the lifetime totals survive page reuse.
+        let rep = cache.report(None, 4);
+        if rep.pool.pages_free != PAGES || rep.pool.pages_used != 0 {
+            return Err("drained pool not reported as fully free".into());
+        }
+        if !rep.heat.hottest.is_empty() {
+            return Err("hottest runs listed over an empty pool".into());
+        }
+        check_report(&cache, 4)
+    });
+}
+
+#[test]
+fn disabled_heat_reports_zero_touch_state() {
+    // The bench baseline: a cache with the tracker disabled still builds
+    // a valid report — pool and sharing sections live, heat section
+    // all-zero.
+    let mut rng = Rng::new(17);
+    let mut cache = PagedKvCache::new(LAYERS, 2, DH, PAGE_TOKENS, PAGES);
+    cache.disable_heat();
+    let (k, v) = kv(&mut rng, 2, 2 * PAGE_TOKENS);
+    cache.insert_seq(1, &k, &v, 2 * PAGE_TOKENS).unwrap();
+    let ctx = 2 * PAGE_TOKENS;
+    let n = LAYERS * 2 * ctx * DH;
+    let (mut kb, mut vb) = (vec![0.0; n], vec![0.0; n]);
+    cache.gather(&[Some(1)], ctx, &mut kb, &mut vb).unwrap();
+    cache.heat_tick();
+
+    let rep = cache.report(None, 8);
+    assert_eq!(rep.pool.pages_used, 2);
+    assert_eq!(rep.heat.clock, 0);
+    assert_eq!(rep.heat.gather_touches_total, 0);
+    assert_eq!(rep.heat.histogram, vec![2], "both pages in the cold bucket");
+    assert_eq!(rep, recompute_report(&cache, 8));
+    validate_cache_report(&rep.to_json()).unwrap();
+    cache.free_seq(1);
+}

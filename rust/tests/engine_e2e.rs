@@ -6,7 +6,8 @@ use std::path::Path;
 use std::rc::Rc;
 
 use lean_attention::coordinator::request::FinishReason;
-use lean_attention::coordinator::{Engine, EngineConfig, Router};
+use lean_attention::coordinator::{AuditPlan, Engine, EngineConfig, Router};
+use lean_attention::obs::validate_bundle;
 use lean_attention::runtime::{Manifest, Runtime};
 use lean_attention::sampling::{BeamSearch, BestOfN, SamplingParams};
 use lean_attention::sparse::SparsePolicy;
@@ -757,6 +758,168 @@ fn sparse_sub_budget_prunes_and_completes() {
     let rep = e.metrics.report();
     assert!(rep.contains("sparse selection"), "{rep}");
     assert_eq!(e.active(), 0);
+}
+
+/// Eviction-storm flight recording end to end: a tiny page pool plus
+/// distinct-prefix churn forces the admission path to evict LRU radix
+/// pages; with a 1-page storm threshold the trigger fires, a post-mortem
+/// bundle lands under `flight_dir`, and the bundle re-validates from
+/// disk (manifest, Chrome trace, metrics snapshot, cache report, SLO
+/// text).
+#[test]
+fn eviction_storm_records_a_flight_bundle_on_disk() {
+    let Some((rt, m)) = setup() else { return };
+    let dir = std::env::temp_dir()
+        .join(format!("leanattn-flight-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut e = Engine::new(
+        &rt,
+        &m,
+        EngineConfig {
+            cache_pages: 12,
+            page_tokens: 4,
+            project_hardware: false,
+            trace_capacity: 512,
+            eviction_storm_pages: 1,
+            flight_dir: Some(dir.to_string_lossy().into_owned()),
+            ..EngineConfig::default()
+        },
+    )
+    .expect("engine");
+    let mut rng = Rng::new(13);
+    let len = 8.min(e.prefill_bucket()).max(1);
+    for _ in 0..8 {
+        e.submit(random_prompt(&mut rng, 512, len), 4).unwrap();
+        e.run_until_idle().expect("wave");
+        if e.flight_bundles() > 0 {
+            break;
+        }
+    }
+    assert!(
+        e.metrics.prefix.evicted_pages > 0,
+        "churn against 12 pages must evict index pages"
+    );
+    assert!(e.flight_bundles() > 0, "the storm trigger must record a bundle");
+
+    let mut found = 0u64;
+    for entry in std::fs::read_dir(&dir).expect("flight dir exists") {
+        let p = entry.unwrap().path();
+        if !p.is_dir() {
+            continue;
+        }
+        let name = p.file_name().unwrap().to_string_lossy().into_owned();
+        assert!(name.contains("eviction_storm"), "unexpected trigger: {name}");
+        validate_bundle(&p).expect("bundle re-validates from disk");
+        found += 1;
+    }
+    assert_eq!(found, e.flight_bundles(), "every recorded bundle is on disk");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Sampled invariant audits on a healthy run: an every-step plan must
+/// execute on every engine iteration and find nothing.
+#[test]
+fn sampled_audits_pass_on_a_healthy_run() {
+    let Some((rt, m)) = setup() else { return };
+    let mut e = Engine::new(
+        &rt,
+        &m,
+        EngineConfig { audit: AuditPlan::every(1), ..EngineConfig::default() },
+    )
+    .expect("engine");
+    let mut rng = Rng::new(15);
+    for _ in 0..3 {
+        e.submit(random_prompt(&mut rng, 512, 8), 4).unwrap();
+    }
+    e.run_until_idle().expect("run");
+    assert!(e.metrics.audit.runs > 0, "an every-step plan must have audited");
+    assert_eq!(e.metrics.audit.failures, 0, "healthy engine, zero findings");
+    assert!(e.metrics.audit.audit_us > 0.0, "audit time must be accounted");
+    assert!(e.run_audit().is_empty(), "direct audit agrees: no findings");
+    assert!(e.healthy(), "disabled watchdog reports healthy");
+}
+
+/// Fleet fold: every merged counter and histogram must be the exact
+/// union of the replicas' — merging never invents or drops samples.
+#[test]
+fn merged_metrics_and_timelines_union_the_fleet() {
+    let Some((rt, m)) = setup() else { return };
+    let mut router = Router::new(vec![engine(&rt, &m), engine(&rt, &m)]);
+    let mut rng = Rng::new(21);
+    for _ in 0..6 {
+        router.submit(random_prompt(&mut rng, 512, 8), 3).unwrap();
+    }
+    router.run_until_idle().expect("run");
+    let engines = router.engines();
+    assert!(
+        engines.iter().all(|e| e.metrics.requests_finished > 0),
+        "round-robin must have spread work to both replicas"
+    );
+    let merged = router.merged_metrics();
+    let sums: [(usize, fn(&Engine) -> usize); 4] = [
+        (merged.requests_finished, |e| e.metrics.requests_finished),
+        (merged.tokens_generated, |e| e.metrics.tokens_generated),
+        (merged.prefill_calls, |e| e.metrics.prefill_calls),
+        (merged.decode_steps, |e| e.metrics.decode_steps),
+    ];
+    for (got, per) in sums {
+        assert_eq!(got, engines.iter().map(per).sum::<usize>(), "merged != union");
+    }
+    assert_eq!(
+        merged.step_us.count(),
+        engines.iter().map(|e| e.metrics.step_us.count()).sum::<u64>(),
+        "step histogram union"
+    );
+    let t = router.merged_timelines();
+    assert_eq!(
+        t.requests(),
+        engines.iter().map(|e| e.timelines.requests()).sum::<u64>()
+    );
+    assert_eq!(t.tokens(), engines.iter().map(|e| e.timelines.tokens()).sum::<u64>());
+    assert_eq!(
+        t.e2e().count(),
+        engines.iter().map(|e| e.timelines.e2e().count()).sum::<u64>(),
+        "e2e latency histogram union"
+    );
+}
+
+/// SLO attainment computed from the merged histograms must equal the
+/// request-weighted mean of the per-replica attainments — identical
+/// log-bucket boundaries make the fleet fold exact, for any target.
+#[test]
+fn merged_slo_attainment_matches_the_per_replica_fold() {
+    let Some((rt, m)) = setup() else { return };
+    let mut router = Router::new(vec![engine(&rt, &m), engine(&rt, &m)]);
+    let mut rng = Rng::new(23);
+    for _ in 0..6 {
+        let len = rng.urange(2, 10);
+        let max_new = rng.urange(1, 5);
+        router.submit(random_prompt(&mut rng, 512, len), max_new).unwrap();
+    }
+    router.run_until_idle().expect("run");
+    let total: u64 = router.engines().iter().map(|e| e.timelines.requests()).sum();
+    assert!(total > 0);
+    let merged = router.merged_timelines();
+    for slo_ms in [0.001, 1.0, 50.0, 1e6] {
+        let got = merged.slo_report(slo_ms, 1.0).attainment;
+        let folded: f64 = router
+            .engines()
+            .iter()
+            .filter(|e| e.timelines.requests() > 0)
+            .map(|e| {
+                e.timelines.slo_report(slo_ms, 1.0).attainment
+                    * e.timelines.requests() as f64
+            })
+            .sum::<f64>()
+            / total as f64;
+        assert!(
+            (got - folded).abs() < 1e-9,
+            "slo {slo_ms} ms: merged attainment {got} != folded {folded}"
+        );
+    }
+    // Extremes anchor the fold: nothing meets a ~0 target, everything
+    // meets a huge one.
+    assert_eq!(merged.slo_report(1e9, 1.0).attainment, 1.0);
 }
 
 /// Acceptance-aware draft sizing must never move the committed stream —

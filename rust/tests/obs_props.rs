@@ -288,3 +288,88 @@ fn every_documented_metric_reaches_both_exporters() {
     assert_eq!(snap2.get("decode_steps_total").unwrap().value, 80.0);
     assert_eq!(snap2.names(), DOCUMENTED_METRICS.to_vec());
 }
+
+/// A metric name Prometheus accepts: `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+fn legal_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    let Some(first) = chars.next() else { return false };
+    (first.is_ascii_alphabetic() || first == '_' || first == ':')
+        && chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+#[test]
+fn prometheus_exposition_parses_back_line_exact() {
+    // Parse the exposition text the way a scraper would: every line is a
+    // HELP comment, a TYPE comment, or a `name value` sample; names are
+    // legal; every documented metric appears as exactly one sample with
+    // its HELP and TYPE lines directly above it; every value parses as a
+    // finite f64 that round-trips to the snapshot's.
+    let mut m = Metrics::default();
+    m.decode_steps = 17;
+    m.tokens_generated = 321;
+    m.step_us.record(99.5);
+    m.audit.runs = 2;
+    m.audit.audit_us = 123.25;
+    let snap = m.snapshot();
+    let text = snap.to_prometheus();
+
+    let mut samples: std::collections::BTreeMap<&str, f64> =
+        std::collections::BTreeMap::new();
+    let mut last_help: Option<&str> = None;
+    let mut last_type: Option<(&str, &str)> = None;
+    for line in text.lines() {
+        assert!(!line.trim().is_empty(), "no blank lines in the exposition");
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) =
+                rest.split_once(' ').expect("HELP carries name + text");
+            assert!(legal_metric_name(name), "illegal HELP name {name:?}");
+            assert!(!help.trim().is_empty(), "{name} has empty help text");
+            last_help = Some(name);
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) =
+                rest.split_once(' ').expect("TYPE carries name + kind");
+            assert!(legal_metric_name(name), "illegal TYPE name {name:?}");
+            assert!(
+                kind == "counter" || kind == "gauge",
+                "{name}: unknown type {kind:?}"
+            );
+            assert_eq!(last_help, Some(name), "TYPE must follow its HELP line");
+            last_type = Some((name, kind));
+        } else {
+            let (name, value) =
+                line.split_once(' ').expect("sample is `name value`");
+            assert!(legal_metric_name(name), "illegal sample name {name:?}");
+            assert!(
+                !name.contains('{'),
+                "exposition is label-free; got {name:?}"
+            );
+            assert_eq!(
+                last_type.map(|(n, _)| n),
+                Some(name),
+                "sample must follow its TYPE line"
+            );
+            let v: f64 = value.parse().expect("sample value parses as f64");
+            assert!(v.is_finite(), "{name} exports a non-finite value");
+            assert!(
+                samples.insert(name, v).is_none(),
+                "{name} sampled more than once"
+            );
+        }
+    }
+
+    // Exactly the documented set, each matching the snapshot's value and
+    // kind bit-for-bit.
+    assert_eq!(samples.len(), DOCUMENTED_METRICS.len());
+    for name in DOCUMENTED_METRICS {
+        let prom_name = format!("leanattn_{name}");
+        let metric = snap.get(name).expect("documented metric in snapshot");
+        let v = samples
+            .get(prom_name.as_str())
+            .unwrap_or_else(|| panic!("{name} missing from the exposition"));
+        assert_eq!(*v, metric.value, "{name}: exposition value drifted");
+        assert!(
+            text.contains(&format!("# TYPE {prom_name} {}\n", metric.kind.as_str())),
+            "{name}: TYPE line disagrees with the snapshot kind"
+        );
+    }
+}
