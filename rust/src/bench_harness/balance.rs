@@ -1,0 +1,330 @@
+//! Partition-balance bench: the measurement behind `leanattn bench
+//! --balance`.
+//!
+//! Artifact-free, in three movements:
+//!
+//! 1. **Ragged-batch balance report** — the cross-strategy
+//!    [`PartitionReport`] over a Fig-10-style ragged batch,
+//!    self-validated against its schema. Asserted on every run:
+//!    stream-K's load-imbalance factor is **strictly below** the
+//!    fixed-split (FlashDecoding) baseline's.
+//! 2. **Traced execution + per-tile join** — a smaller plan actually
+//!    runs on the host ([`execute_plan_traced`]), its rescale-fold
+//!    output is asserted exact against the direct-softmax [`oracle`],
+//!    and every CTA's measured `gather`/`lean_exec` span joins its
+//!    ledger row by the [`Attrs::tile`](crate::obs::Attrs) index.
+//! 3. **Stationary drift stream** — the same executed plan feeds a
+//!    [`DriftDetector`] one `(exact work, measured µs)` pair per
+//!    iteration. On a stationary workload the detector must stay
+//!    quiet: zero breaches, relative-error EWMA within the limit.
+
+use anyhow::{ensure, Result};
+
+use crate::obs::attrib::account_decode_problem;
+use crate::obs::balance::{
+    execute_plan_traced, join_measured_events, oracle, partition_report,
+    validate_partition_report, BalanceTensors, PartitionReport, StrategyBalance,
+};
+use crate::obs::benchlog::BenchReport;
+use crate::obs::{DriftDetector, Tracer};
+use crate::partition::plan::{build_plan, DecodeProblem, Strategy};
+use crate::sim::{CostCoefficients, GpuArch};
+
+/// Shape of one partition-balance bench run.
+#[derive(Clone, Debug)]
+pub struct BalanceCase {
+    /// Ragged per-lane context lengths of the report problem (the
+    /// Fig-10 x-axis is how ragged this batch is).
+    pub ctx_lens: Vec<u32>,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Traced-execution shape: small enough to actually run on the
+    /// host, ragged enough that stream-K has something to level.
+    pub exec_ctx_lens: Vec<u32>,
+    pub exec_heads: usize,
+    pub exec_head_dim: usize,
+    /// LeanTile size of the executed problem (small, so the plan has
+    /// many tiles to split).
+    pub exec_tile: usize,
+    /// CTA slots the executed stream-K plan targets.
+    pub exec_slots: usize,
+    /// Drift-stream iterations (must exceed the detector warmup so at
+    /// least some samples are judged).
+    pub drift_iters: usize,
+    /// Drift EWMA limit. Generous: a stationary run on a noisy shared
+    /// CI machine must never breach.
+    pub drift_limit: f64,
+}
+
+impl BalanceCase {
+    /// The `leanattn bench --balance` default shape.
+    pub fn default_case() -> BalanceCase {
+        BalanceCase {
+            ctx_lens: vec![511, 64, 1290, 32, 777, 96, 2048, 130],
+            heads: 4,
+            head_dim: 32,
+            exec_ctx_lens: vec![100, 37, 260, 64],
+            exec_heads: 2,
+            exec_head_dim: 16,
+            exec_tile: 32,
+            exec_slots: 8,
+            drift_iters: 48,
+            drift_limit: 0.75,
+        }
+    }
+
+    /// CI smoke shape: a shorter drift stream, same assertions.
+    pub fn smoke() -> BalanceCase {
+        BalanceCase { drift_iters: 24, ..BalanceCase::default_case() }
+    }
+
+    fn report_problem(&self) -> DecodeProblem {
+        DecodeProblem::ragged(self.heads, self.ctx_lens.clone(), self.head_dim)
+    }
+
+    fn exec_problem(&self) -> DecodeProblem {
+        DecodeProblem::ragged(self.exec_heads, self.exec_ctx_lens.clone(), self.exec_head_dim)
+            .with_tile(self.exec_tile)
+    }
+}
+
+/// Outcome of one partition-balance bench run.
+pub struct BalanceComparison {
+    pub case: BalanceCase,
+    /// Cross-strategy report over the ragged batch (schema-validated).
+    pub report: PartitionReport,
+    /// Stream-K balance of the *executed* plan, with every ledger row
+    /// joined to its measured span time.
+    pub exec_balance: StrategyBalance,
+    /// Max |fold − oracle| over the executed plan's outputs.
+    pub exec_max_err: f32,
+    /// Ledger rows that joined a measured span (== the exec grid).
+    pub measured_rows: usize,
+    /// Drift detector state after the stationary stream.
+    pub drift_observations: u64,
+    pub drift_breaches: u64,
+    pub drift_rel_err: f64,
+    pub drift_gain: f64,
+}
+
+impl BalanceComparison {
+    /// The stream-K and fixed-split rows of the ragged report.
+    fn anchor_rows(&self) -> (&StrategyBalance, &StrategyBalance) {
+        let lean = self.report.stream_k().expect("report always has a stream-K row");
+        let fd = self
+            .report
+            .strategies
+            .iter()
+            .find(|s| s.strategy == "flashdecoding")
+            .expect("report always has a fixed-split row");
+        (lean, fd)
+    }
+
+    pub fn render(&self) -> String {
+        let (lean, fd) = self.anchor_rows();
+        format!(
+            "{}\
+             ragged batch: stream-K imbalance {:.3} vs fixed-split {:.3} \
+             ({:.2}x more level)\n\
+             traced execution: {} CTAs, fold-vs-oracle max err {:.2e}, \
+             {}/{} ledger rows joined a measured span\n\
+             drift (stationary, {} observations): {} breaches, rel err \
+             EWMA {:.3} (limit {:.2}), gain {:.2}\n",
+            self.report.render(),
+            lean.imbalance,
+            fd.imbalance,
+            fd.imbalance / lean.imbalance,
+            self.exec_balance.grid,
+            self.exec_max_err,
+            self.measured_rows,
+            self.exec_balance.grid,
+            self.drift_observations,
+            self.drift_breaches,
+            self.drift_rel_err,
+            self.case.drift_limit,
+            self.drift_gain,
+        )
+    }
+
+    /// Machine-readable telemetry for `--json-out` / the baseline gate.
+    /// Shape echoes, grid sizes and work totals are deterministic
+    /// (pure functions of the case); simulated balance factors are
+    /// machine-independent `measures`; wall-clock-derived drift numbers
+    /// are ungated `info`.
+    pub fn bench_report(&self, seed: u64, smoke: bool) -> BenchReport {
+        let (lean, fd) = self.anchor_rows();
+        let mut r = BenchReport::new("balance", seed, smoke);
+        r.count("lanes", self.case.ctx_lens.len() as u64);
+        r.count("heads", self.case.heads as u64);
+        r.count("head_dim", self.case.head_dim as u64);
+        r.count("exec_lanes", self.case.exec_ctx_lens.len() as u64);
+        r.count("exec_heads", self.case.exec_heads as u64);
+        r.count("exec_head_dim", self.case.exec_head_dim as u64);
+        r.count("exec_tile", self.case.exec_tile as u64);
+        r.count("exec_slots", self.case.exec_slots as u64);
+        r.count("exec_grid", self.exec_balance.grid as u64);
+        r.count("measured_rows", self.measured_rows as u64);
+        r.count("drift_iters", self.case.drift_iters as u64);
+        r.count("drift_observations", self.drift_observations);
+        r.count("drift_breaches", self.drift_breaches);
+        r.count("report_grid_streamk", lean.grid as u64);
+        r.count("report_grid_fixed_split", fd.grid as u64);
+        r.work("report_streamk_total", lean.total);
+        r.work("exec_total", self.exec_balance.total);
+        r.measure("imbalance_streamk", lean.imbalance);
+        r.measure("imbalance_fixed_split", fd.imbalance);
+        r.measure("wave_efficiency_streamk", lean.wave_efficiency);
+        r.measure("batch_context_ratio", self.report.batch_context_ratio);
+        r.info("exec_max_err", self.exec_max_err as f64);
+        r.info("drift_rel_err", self.drift_rel_err);
+        r.info("drift_gain", self.drift_gain);
+        r.info("exec_makespan_us", self.exec_balance.makespan_us);
+        r
+    }
+}
+
+/// Run the partition-balance bench. Every run asserts: the report
+/// validates against its schema, stream-K's imbalance is strictly below
+/// fixed-split's on the ragged batch, the executed plan's fold is exact
+/// against the oracle, every ledger row joins a measured span, and the
+/// stationary drift stream stays quiet.
+pub fn run_balance(case: BalanceCase, seed: u64) -> Result<BalanceComparison> {
+    ensure!(!case.ctx_lens.is_empty(), "need at least one report lane");
+    ensure!(!case.exec_ctx_lens.is_empty(), "need at least one exec lane");
+    ensure!(
+        case.drift_iters > DriftDetector::WARMUP,
+        "--drift-iters {} must exceed the detector warmup ({})",
+        case.drift_iters,
+        DriftDetector::WARMUP
+    );
+    let arch = GpuArch::a100();
+
+    // --- 1. the ragged-batch cross-strategy report --------------------
+    let p = case.report_problem();
+    let report = partition_report(&p, &arch);
+    validate_partition_report(&report.to_json())
+        .map_err(|e| e.context("partition report failed self-validation"))?;
+    let lean = report.stream_k().expect("stream-K row");
+    let fd = report
+        .strategies
+        .iter()
+        .find(|s| s.strategy == "flashdecoding")
+        .expect("fixed-split row");
+    ensure!(
+        lean.imbalance < fd.imbalance,
+        "stream-K imbalance {:.3} is not strictly below fixed-split {:.3} \
+         on the ragged batch",
+        lean.imbalance,
+        fd.imbalance
+    );
+    ensure!(lean.imbalance >= 1.0 - 1e-9, "imbalance factor below 1");
+
+    // --- 2. traced host execution + per-tile join ---------------------
+    let ep = case.exec_problem();
+    let plan = build_plan(&ep, Strategy::StreamK, case.exec_slots);
+    let t = BalanceTensors::random(&ep, seed);
+    let tracer = Tracer::enabled((4 * plan.grid()).max(256));
+    let m = execute_plan_traced(&ep, &plan, &t, &tracer);
+    let want = oracle(&ep, &t);
+    let mut exec_max_err = 0.0f32;
+    for (got, want) in m.outputs.iter().zip(&want) {
+        for (a, b) in got.iter().zip(want) {
+            exec_max_err = exec_max_err.max((a - b).abs());
+        }
+    }
+    ensure!(
+        exec_max_err < 1e-3,
+        "partition fold diverged from the direct-softmax oracle: {exec_max_err}"
+    );
+    let mut exec_balance =
+        crate::obs::balance::plan_balance(&ep, &plan, &arch);
+    join_measured_events(&mut exec_balance, &tracer.events());
+    let measured_rows =
+        exec_balance.ledger.iter().filter(|r| r.measured_us.is_some()).count();
+    ensure!(
+        measured_rows == exec_balance.grid,
+        "only {measured_rows} of {} ledger rows joined a measured span",
+        exec_balance.grid
+    );
+
+    // --- 3. the stationary drift stream -------------------------------
+    // A few unobserved warmup passes first, so cache/branch warm-up on
+    // a cold machine does not skew the gain the detector fits.
+    let off = Tracer::disabled();
+    for _ in 0..3 {
+        std::hint::black_box(execute_plan_traced(&ep, &plan, &t, &off));
+    }
+    let work = account_decode_problem(&ep);
+    let mut detector =
+        DriftDetector::new(CostCoefficients::nominal(), case.drift_limit);
+    for _ in 0..case.drift_iters {
+        let run = execute_plan_traced(&ep, &plan, &t, &off);
+        let measured_us: f64 = run.cta_us.iter().sum();
+        detector.observe(&work, measured_us);
+    }
+    ensure!(
+        detector.observations() == case.drift_iters as u64,
+        "drift stream dropped observations ({} of {})",
+        detector.observations(),
+        case.drift_iters
+    );
+    ensure!(
+        detector.breaches() == 0,
+        "drift detector breached {} time(s) on a stationary workload",
+        detector.breaches()
+    );
+    let drift_rel_err = detector.rel_err().unwrap_or(0.0);
+    ensure!(
+        drift_rel_err <= case.drift_limit,
+        "stationary rel-err EWMA {drift_rel_err:.3} exceeds the {:.2} limit",
+        case.drift_limit
+    );
+
+    Ok(BalanceComparison {
+        drift_observations: detector.observations(),
+        drift_breaches: detector.breaches(),
+        drift_rel_err,
+        drift_gain: detector.gain().unwrap_or(0.0),
+        case,
+        report,
+        exec_balance,
+        exec_max_err,
+        measured_rows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_case_passes_every_balance_assertion() {
+        let c = run_balance(BalanceCase::smoke(), 11).expect("balance bench");
+        assert_eq!(c.measured_rows, c.exec_balance.grid);
+        assert_eq!(c.drift_breaches, 0);
+        let out = c.render();
+        assert!(out.contains("partition balance"), "{out}");
+        assert!(out.contains("drift (stationary"), "{out}");
+    }
+
+    #[test]
+    fn same_seed_runs_emit_identical_gated_sections() {
+        // The baseline gate compares counts and work bit-exactly; both
+        // are pure functions of the case shape, so two same-seed runs
+        // must agree even though the wall-clock info differs.
+        let a = run_balance(BalanceCase::smoke(), 5).expect("first run");
+        let b = run_balance(BalanceCase::smoke(), 5).expect("second run");
+        let (ra, rb) = (a.bench_report(5, true), b.bench_report(5, true));
+        assert_eq!(ra.counts, rb.counts);
+        assert_eq!(ra.work, rb.work);
+        assert_eq!(ra.measures, rb.measures);
+        crate::obs::benchlog::validate_bench_report(&ra.to_json()).unwrap();
+    }
+
+    #[test]
+    fn exec_work_total_matches_the_closed_form() {
+        let c = run_balance(BalanceCase::smoke(), 3).expect("balance bench");
+        let ep = c.case.exec_problem();
+        assert_eq!(c.exec_balance.total, account_decode_problem(&ep));
+    }
+}

@@ -3,6 +3,7 @@
 //! JSON table formatting. The `rust/benches/figXX_*.rs` binaries are thin
 //! wrappers over [`figures`].
 
+pub mod balance;
 pub mod cascade_exec;
 pub mod figures;
 pub mod gqa;
@@ -15,6 +16,7 @@ pub mod table;
 pub mod trace;
 pub mod workload;
 
+pub use balance::{run_balance, BalanceCase, BalanceComparison};
 pub use cascade_exec::{compare_exec, ExecCase, ExecComparison};
 pub use gqa::{compare_gqa, GqaCase, GqaComparison};
 pub use obs::{run_obs, ObsCase, ObsReport};

@@ -34,16 +34,17 @@ use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
+use crate::obs::balance::plan_balance;
 use crate::obs::{
-    attrib, Attrs, CacheReport, FlightRecorder, FlightSnapshot, FlightTrigger,
-    MetricsSnapshot, Phase, TimelineRecorder, Tracer, Watchdog,
+    attrib, Attrs, CacheReport, DriftDetector, FlightRecorder, FlightSnapshot,
+    FlightTrigger, MetricsSnapshot, Phase, TimelineRecorder, Tracer, Watchdog,
 };
 use crate::partition::cascade::{CascadeProblem, PrefixGroup};
-use crate::partition::plan::{DecodeProblem, Strategy};
+use crate::partition::plan::{build_plan, DecodeProblem, Strategy};
 use crate::runtime::{Manifest, ModelRuntime, Runtime};
 use crate::sampling::{sample_token, seq_rng, ForkTree, SamplingParams};
 use crate::sim::cascade::simulate_cascade;
-use crate::sim::{simulate, GpuArch};
+use crate::sim::{effective_slots, simulate, CostCoefficients, GpuArch};
 use crate::sparse::{advance_rope, selected_tokens, SparsePolicy};
 use crate::spec::{verify_chain, AdaptiveK, DraftKind, DraftSource};
 use crate::util::rng::Rng;
@@ -154,6 +155,15 @@ pub struct EngineConfig {
     /// Flight trigger: finished-request end-to-end latency (ms) above
     /// which a step records an SLO-breach bundle (0 disables).
     pub flight_slo_ms: f64,
+    /// Online cost-model drift detection (`serve --drift-limit`):
+    /// relative-error EWMA bound above which a sustained breach fires
+    /// the flight recorder's `drift` trigger. 0 disables the detector.
+    pub drift_limit: f64,
+    /// Calibrated coefficients the drift detector judges (`serve
+    /// --drift-calibration <calibrate json>`); `None` falls back to
+    /// [`CostCoefficients::nominal`] — the detector's warmup gain
+    /// absorbs absolute scale either way.
+    pub drift_coefficients: Option<CostCoefficients>,
 }
 
 impl Default for EngineConfig {
@@ -176,6 +186,8 @@ impl Default for EngineConfig {
             watchdog_stall_steps: 0,
             eviction_storm_pages: 64,
             flight_slo_ms: 0.0,
+            drift_limit: 0.0,
+            drift_coefficients: None,
         }
     }
 }
@@ -262,6 +274,13 @@ pub struct Engine {
     watchdog: Watchdog,
     /// Anomaly post-mortem recorder (enabled by `config.flight_dir`).
     flight: Option<FlightRecorder>,
+    /// Online cost-model drift detector (enabled by
+    /// `config.drift_limit > 0`).
+    drift: Option<DriftDetector>,
+    /// Wall time of the current step's gather phase, microseconds (the
+    /// gather half of the drift detector's measured step time; written
+    /// by [`Engine::gather_step_views`] only while the detector is on).
+    last_gather_us: f64,
     /// Engine iterations taken ([`Engine::step`] calls) — the audit
     /// sampling clock and the step stamped into flight bundles.
     steps: u64,
@@ -317,6 +336,14 @@ impl Engine {
         metrics.gqa.group_size = art.n_heads / art.n_kv_heads;
         let watchdog = Watchdog::new(config.watchdog_stall_steps);
         let flight = config.flight_dir.as_ref().map(FlightRecorder::new);
+        let drift = (config.drift_limit > 0.0).then(|| {
+            DriftDetector::new(
+                config
+                    .drift_coefficients
+                    .unwrap_or_else(CostCoefficients::nominal),
+                config.drift_limit,
+            )
+        });
         Ok(Engine {
             config,
             model,
@@ -331,6 +358,8 @@ impl Engine {
             timelines: TimelineRecorder::default(),
             watchdog,
             flight,
+            drift,
+            last_gather_us: 0.0,
             steps: 0,
             evicted_this_step: 0,
             started: Instant::now(),
@@ -517,6 +546,18 @@ impl Engine {
             if finished.iter().any(|f| f.queue_s + f.prefill_s + f.decode_s > slo_s) {
                 self.record_flight(FlightTrigger::SloBreach)?;
             }
+        }
+
+        // One flight bundle per sustained cost-model drift event: the
+        // detector latches a pending breach when its error EWMA stays
+        // over the limit for PATIENCE steps, and `take_breach` consumes
+        // it exactly once.
+        let drift_breach = match self.drift.as_mut() {
+            Some(d) => d.take_breach(),
+            None => false,
+        };
+        if drift_breach {
+            self.record_flight(FlightTrigger::Drift)?;
         }
         Ok(())
     }
@@ -1252,6 +1293,11 @@ impl Engine {
     fn gather_step_views(&mut self, slots: &[Option<RequestId>]) -> Result<StepViews> {
         let c = self.model.art.ctx_bucket;
 
+        // Drift observations pair the predicted gather+exec work with
+        // the measured gather+exec wall time; the timer is independent
+        // of the tracer so `--drift-limit` works untraced.
+        let drift_t0 = if self.drift.is_some() { Some(Instant::now()) } else { None };
+
         let select_start = self.tracer.now();
         let sels = self.sparse_selections(slots);
         if self.config.sparse.is_some() {
@@ -1317,6 +1363,9 @@ impl Engine {
                         .collect(),
                 })
                 .collect();
+            if let Some(t0) = drift_t0 {
+                self.last_gather_us = t0.elapsed().as_secs_f64() * 1e6;
+            }
             return Ok(StepViews { lens, groups, positions });
         }
 
@@ -1374,6 +1423,9 @@ impl Engine {
                 positions[bi] = self.cache.seq_len(*id).unwrap_or(0) as i32;
             }
         }
+        if let Some(t0) = drift_t0 {
+            self.last_gather_us = t0.elapsed().as_secs_f64() * 1e6;
+        }
         Ok(StepViews { lens, groups, positions })
     }
 
@@ -1423,6 +1475,27 @@ impl Engine {
             exec_start,
             Attrs { k: Some(lanes), flops: exec_flops, ..Default::default() },
         );
+
+        // Online drift check: one (exact work, measured µs) pair per
+        // decode step — the serve-time replay of the calibration join.
+        // The measured side is gather + decode wall time, matching the
+        // byte + flop + tile terms the coefficients price.
+        if let Some(d) = self.drift.as_mut() {
+            if !views.lens.is_empty() {
+                let p = DecodeProblem::ragged(
+                    self.model.art.n_heads,
+                    views.lens.clone(),
+                    self.model.art.head_dim,
+                )
+                .with_kv_heads(self.model.art.n_kv_heads);
+                let work = attrib::account_decode_problem(&p);
+                let measured_us = self.last_gather_us + step_us;
+                d.observe(&work, measured_us);
+            }
+            self.metrics.balance.drift_observations = d.observations();
+            self.metrics.balance.drift_breaches = d.breaches();
+            self.metrics.balance.drift_rel_err = d.rel_err().unwrap_or(0.0);
+        }
 
         if self.config.project_hardware {
             self.record_projection(&views.lens, &views.groups);
@@ -1800,6 +1873,13 @@ impl Engine {
             fd.latency_us * layers,
             la.occupancy,
         );
+        // Partition-balance gauges over the same stream-K plan the
+        // projection priced: how level is this step's CTA schedule?
+        let slots = effective_slots(Strategy::StreamK, &self.arch);
+        let plan = build_plan(&problem, Strategy::StreamK, slots);
+        let bal = plan_balance(&problem, &plan, &self.arch);
+        self.metrics.balance.partition_imbalance = bal.imbalance;
+        self.metrics.balance.wave_efficiency = bal.wave_efficiency;
 
         if groups.is_empty() {
             return;
@@ -1856,6 +1936,13 @@ mod tests {
     #[test]
     fn config_default_streams_dense() {
         assert!(EngineConfig::default().sparse.is_none());
+    }
+
+    #[test]
+    fn config_default_disables_drift_detection() {
+        let c = EngineConfig::default();
+        assert_eq!(c.drift_limit, 0.0, "drift detection is opt-in");
+        assert!(c.drift_coefficients.is_none(), "nominal priors by default");
     }
 
     #[test]

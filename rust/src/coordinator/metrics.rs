@@ -238,6 +238,39 @@ impl AuditStats {
     }
 }
 
+/// Partition-balance and cost-model-drift plane
+/// ([`crate::obs::balance`] / [`crate::obs::drift`]): the latest
+/// projected step's stream-K plan quality and the online drift
+/// detector's state.
+#[derive(Clone, Debug, Default)]
+pub struct BalanceStats {
+    /// Drift observations fed to the detector (including warmup).
+    pub drift_observations: u64,
+    /// Sustained cost-model breaches the detector declared.
+    pub drift_breaches: u64,
+    /// Current relative-error EWMA of the cost model (gauge).
+    pub drift_rel_err: f64,
+    /// Load-imbalance factor (makespan over mean busy-slot time) of the
+    /// latest step's stream-K plan (gauge; 1.0 = perfectly level).
+    pub partition_imbalance: f64,
+    /// Wave efficiency (busy slot-time over makespan x slots) of the
+    /// latest step's stream-K plan (gauge; 1.0 = no quantization waste).
+    pub wave_efficiency: f64,
+}
+
+impl BalanceStats {
+    fn merge(&mut self, o: &BalanceStats) {
+        self.drift_observations += o.drift_observations;
+        self.drift_breaches += o.drift_breaches;
+        // Point-in-time gauges, not counters — when folding replicas,
+        // surface the worst drift / imbalance and the best efficiency
+        // actually observed rather than summing meaningless totals.
+        self.drift_rel_err = self.drift_rel_err.max(o.drift_rel_err);
+        self.partition_imbalance = self.partition_imbalance.max(o.partition_imbalance);
+        self.wave_efficiency = self.wave_efficiency.max(o.wave_efficiency);
+    }
+}
+
 /// Parallel-sampling (fork/prune) counters.
 #[derive(Clone, Debug, Default)]
 pub struct SamplingStats {
@@ -323,6 +356,11 @@ pub const DOCUMENTED_METRICS: &[&str] = &[
     "audit_runs_total",
     "audit_failures_total",
     "audit_us_total",
+    "drift_observations_total",
+    "drift_breaches_total",
+    "drift_rel_err",
+    "partition_imbalance",
+    "wave_efficiency",
 ];
 
 /// Accumulated engine counters.
@@ -376,6 +414,8 @@ pub struct Metrics {
     pub attrib: AttribStats,
     /// Sampled online invariant-audit counters.
     pub audit: AuditStats,
+    /// Partition-balance and cost-model-drift plane gauges.
+    pub balance: BalanceStats,
 }
 
 impl Metrics {
@@ -473,6 +513,7 @@ impl Metrics {
         self.gqa.merge(&o.gqa);
         self.attrib.merge(&o.attrib);
         self.audit.merge(&o.audit);
+        self.balance.merge(&o.balance);
     }
 
     /// Sample every documented metric into the one snapshot both
@@ -699,6 +740,31 @@ impl Metrics {
             self.audit.audit_us,
             "Wall-clock spent in audit passes (us).",
         );
+        s.counter(
+            "drift_observations_total",
+            self.balance.drift_observations as f64,
+            "Cost-model drift observations fed (incl. warmup).",
+        );
+        s.counter(
+            "drift_breaches_total",
+            self.balance.drift_breaches as f64,
+            "Sustained cost-model drift breaches declared.",
+        );
+        s.gauge(
+            "drift_rel_err",
+            self.balance.drift_rel_err,
+            "Relative-error EWMA of the online cost model.",
+        );
+        s.gauge(
+            "partition_imbalance",
+            self.balance.partition_imbalance,
+            "Load-imbalance factor of the latest stream-K plan.",
+        );
+        s.gauge(
+            "wave_efficiency",
+            self.balance.wave_efficiency,
+            "Wave efficiency of the latest stream-K plan.",
+        );
         s
     }
 
@@ -808,6 +874,20 @@ impl Metrics {
             s.push_str(&format!(
                 "invariant audits: {} passes, {} failures, {:.0}us total\n",
                 self.audit.runs, self.audit.failures, self.audit.audit_us,
+            ));
+        }
+        if self.balance.partition_imbalance > 0.0 {
+            s.push_str(&format!(
+                "partition balance: imbalance {:.3}, wave efficiency {:.3}\n",
+                self.balance.partition_imbalance, self.balance.wave_efficiency,
+            ));
+        }
+        if self.balance.drift_observations > 0 {
+            s.push_str(&format!(
+                "cost-model drift: {} observations, rel err EWMA {:.3}, {} breaches\n",
+                self.balance.drift_observations,
+                self.balance.drift_rel_err,
+                self.balance.drift_breaches,
             ));
         }
         if let Some(sp) = self.projected_speedup() {
@@ -1131,6 +1211,38 @@ mod tests {
         assert_eq!(snap.get("audit_us_total").unwrap().value, 200.0);
         assert!(a.report().contains("invariant audits: 5 passes"), "{}", a.report());
         assert!(!Metrics::default().report().contains("invariant audits"));
+    }
+
+    #[test]
+    fn balance_counters_sum_and_gauges_keep_the_worst_side() {
+        let mut a = Metrics::default();
+        a.balance.drift_observations = 40;
+        a.balance.drift_breaches = 1;
+        a.balance.drift_rel_err = 0.12;
+        a.balance.partition_imbalance = 1.4;
+        a.balance.wave_efficiency = 0.7;
+        let mut b = Metrics::default();
+        b.balance.drift_observations = 10;
+        b.balance.drift_rel_err = 0.03;
+        b.balance.partition_imbalance = 1.1;
+        b.balance.wave_efficiency = 0.95;
+        a.merge(&b);
+        assert_eq!(a.balance.drift_observations, 50);
+        assert_eq!(a.balance.drift_breaches, 1);
+        assert_eq!(a.balance.drift_rel_err, 0.12);
+        assert_eq!(a.balance.partition_imbalance, 1.4);
+        assert_eq!(a.balance.wave_efficiency, 0.95);
+        let snap = a.snapshot();
+        assert_eq!(snap.get("drift_observations_total").unwrap().value, 50.0);
+        assert_eq!(snap.get("drift_breaches_total").unwrap().value, 1.0);
+        assert_eq!(snap.get("drift_rel_err").unwrap().value, 0.12);
+        assert_eq!(snap.get("partition_imbalance").unwrap().value, 1.4);
+        assert_eq!(snap.get("wave_efficiency").unwrap().value, 0.95);
+        let rep = a.report();
+        assert!(rep.contains("partition balance: imbalance 1.400"), "{rep}");
+        assert!(rep.contains("cost-model drift: 50 observations"), "{rep}");
+        assert!(!Metrics::default().report().contains("partition balance"));
+        assert!(!Metrics::default().report().contains("cost-model drift"));
     }
 
     #[test]

@@ -107,6 +107,7 @@ fn run() -> Result<()> {
         "inspect" => inspect_cmd(&args),
         "serve" => serve(&args),
         "simulate" => simulate_cmd(&args),
+        "analyze" => analyze_cmd(&args),
         "bench" => bench_cmd(&args),
         "calibrate" => calibrate_cmd(&args),
         "plan" => plan_cmd(&args),
@@ -173,6 +174,13 @@ commands:
            [--storm-pages P]        eviction-storm trigger: prefix pages
                                     evicted within one step (default 64)
            [--flight-slo-ms MS]     SLO-breach trigger for the recorder
+           [--drift-limit E]        online cost-model drift detection: EWMA
+                                    of the predicted-vs-measured relative
+                                    step-time error; a sustained breach of E
+                                    fires the recorder's drift trigger
+           [--drift-calibration PATH]   judge drift against the coefficients
+                                    a `calibrate --json-out` run fitted
+                                    (defaults to built-in nominal priors)
   simulate --batch B --heads H --ctx N [--head-dim 64] [--arch a100]
            [--kv-heads N]           GQA/MQA: H query heads share N KV heads
                                     (KV streams and bytes shrink by H/N)
@@ -212,6 +220,14 @@ commands:
                                     speculative serving loop, per-phase
                                     p50/p95/p99 timings, SLO report, and
                                     the disabled-tracer overhead bound
+  bench    --balance [--iters 48] [--drift-limit 0.75] [--smoke]
+                                    partition balance: the cross-strategy
+                                    PartitionReport on a ragged batch
+                                    (stream-K imbalance strictly below
+                                    fixed-split), a traced execution whose
+                                    per-CTA spans join the work ledger, and
+                                    a stationary drift stream that must not
+                                    breach
   bench    --gqa [--heads 8] [--kv-heads N] [--batch 2] [--context 512]
            [--steps 4] [--tile 64] [--smoke]
                                     grouped (GQA/MQA) vs dense-per-head
@@ -233,6 +249,14 @@ commands:
                                     exact work accounting, print the
                                     sim-vs-measured drift table, and assert
                                     the per-point relative-error bound
+  analyze  --partition [--batch 8] [--heads 4] [--head-dim 32]
+           [--ctx-lens 511,64,1290,...] [--arch a100] [--json-out PATH]
+                                    per-tile work ledger + occupancy/wave
+                                    report: every strategy's CTA schedule on
+                                    one (default ragged) problem — grid,
+                                    waves, makespan, load-imbalance factor,
+                                    wave efficiency, critical-path CTA —
+                                    schema-validated, JSON with --json-out
   plan     --batch B --heads H --ctx N [--slots 216]
   figures  [table1|fig01|fig02|fig03|fig07|fig08|fig09|fig10|fig11|fig12|fig13|all]
   sweep    [--samples 1000] [--arch a100]
@@ -492,6 +516,22 @@ fn serve(args: &Args) -> Result<()> {
     let eviction_storm_pages = args.usize("storm-pages", 64);
     let flight_slo_ms = args.f64("flight-slo-ms", 0.0);
 
+    // Online cost-model drift detection: a nonzero EWMA limit arms the
+    // detector; `--drift-calibration` judges against the coefficients a
+    // `calibrate --json-out` run fitted instead of the nominal priors.
+    let drift_limit = args.f64("drift-limit", 0.0);
+    let drift_coefficients = match args.flags.get("drift-calibration") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("read calibration report {path}"))?;
+            Some(
+                parse_calibration_coefficients(&text)
+                    .with_context(|| format!("parse calibration report {path}"))?,
+            )
+        }
+        None => None,
+    };
+
     let runtime = Rc::new(Runtime::cpu()?);
     let manifest = Manifest::load(Manifest::default_dir())?;
     let mut engine = Engine::new(
@@ -511,6 +551,8 @@ fn serve(args: &Args) -> Result<()> {
             watchdog_stall_steps,
             eviction_storm_pages,
             flight_slo_ms,
+            drift_limit,
+            drift_coefficients,
             ..Default::default()
         },
     )?;
@@ -547,6 +589,16 @@ fn serve(args: &Args) -> Result<()> {
             "sparse decode on: {} of each context's pages per step \
              ({} sink + {} window retained), dense at <= {} pages",
             p.budget_pages, p.sink_pages, p.window_pages, p.dense_threshold_pages
+        );
+    }
+    if drift_limit > 0.0 {
+        println!(
+            "drift detection on: rel-err EWMA limit {drift_limit} ({})",
+            if args.has("drift-calibration") {
+                "calibrated coefficients"
+            } else {
+                "nominal priors"
+            }
         );
     }
     if spec_k > 0 {
@@ -653,6 +705,36 @@ fn serve(args: &Args) -> Result<()> {
     println!("\n{}", engine.metrics.report());
     serve_obs_out(&engine, args, wall0.elapsed().as_secs_f64())?;
     Ok(())
+}
+
+/// Extract the fitted [`CostCoefficients`] from a `calibrate --json-out`
+/// report, so `serve --drift-calibration` judges drift against exactly
+/// the model the calibration run asserted.
+fn parse_calibration_coefficients(
+    text: &str,
+) -> Result<lean_attention::sim::CostCoefficients> {
+    use lean_attention::util::json::Json;
+    let j = Json::parse(text).context("calibration report is not valid JSON")?;
+    let coef = j
+        .as_obj()
+        .and_then(|o| o.get("coefficients"))
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("report has no coefficients object"))?;
+    let field = |key: &str| {
+        coef.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("coefficients missing {key:?}"))
+    };
+    let c = lean_attention::sim::CostCoefficients {
+        ns_per_byte: field("ns_per_byte")?,
+        ns_per_flop: field("ns_per_flop")?,
+        tile_overhead_ns: field("tile_overhead_ns")?,
+    };
+    anyhow::ensure!(
+        c.ns_per_byte > 0.0 || c.ns_per_flop > 0.0 || c.tile_overhead_ns > 0.0,
+        "calibrated coefficients are all zero — the detector would never observe"
+    );
+    Ok(c)
 }
 
 /// The observability surfaces `serve` exposes after a run: the SLO
@@ -887,6 +969,82 @@ fn simulate_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `leanattn analyze --partition`: the partition-quality report. Builds
+/// every strategy's plan for one decode problem (default: the ragged
+/// Fig-10-style batch), joins the per-tile work ledger with the
+/// simulated per-CTA timelines, self-validates the result against the
+/// versioned schema, and prints the cross-strategy comparison — grid,
+/// waves, makespan, load-imbalance factor, wave efficiency and the
+/// critical-path CTA. `--json-out` writes the full report (ledger rows
+/// included) as JSON.
+fn analyze_cmd(args: &Args) -> Result<()> {
+    use lean_attention::obs::{partition_report, validate_partition_report};
+
+    anyhow::ensure!(
+        args.has("partition"),
+        "usage: leanattn analyze --partition [--ctx-lens 511,64,...] \
+         [--batch 8 --ctx N] [--heads 4] [--head-dim 32] [--kv-heads N] \
+         [--arch a100] [--json-out PATH]"
+    );
+    let heads = args.usize("heads", 4);
+    let head_dim = args.usize("head-dim", 32);
+    let arch = arch_by_name(&args.str("arch", "a100"))?;
+    // The problem: an explicit ragged list, a uniform batch, or the
+    // default ragged batch (the same shape `bench --balance` gates).
+    let lens: Vec<u32> = match args.flags.get("ctx-lens") {
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<u32>()
+                    .map_err(|_| anyhow::anyhow!("bad --ctx-lens entry {s:?}"))
+            })
+            .collect::<Result<Vec<u32>>>()?,
+        None => {
+            let ctx = args.usize("ctx", 0);
+            if ctx > 0 {
+                vec![ctx as u32; args.usize("batch", 8)]
+            } else {
+                vec![511, 64, 1290, 32, 777, 96, 2048, 130]
+            }
+        }
+    };
+    anyhow::ensure!(!lens.is_empty(), "--ctx-lens is empty");
+    let kv_heads = args.usize("kv-heads", heads);
+    anyhow::ensure!(
+        kv_heads >= 1 && heads % kv_heads == 0,
+        "--kv-heads {kv_heads} must divide --heads {heads}"
+    );
+    let mut p = DecodeProblem::ragged(heads, lens, head_dim).with_kv_heads(kv_heads);
+    let tile = args.usize("tile", 0);
+    if tile > 0 {
+        p = p.with_tile(tile);
+    }
+
+    let report = partition_report(&p, &arch);
+    validate_partition_report(&report.to_json())
+        .context("partition report failed self-validation")?;
+    println!("{}", report.render());
+    if let Some(lean) = report.stream_k() {
+        let mut rows: Vec<_> = lean.ledger.iter().collect();
+        rows.sort_by(|a, b| b.finish_us.total_cmp(&a.finish_us));
+        println!("stream-K critical path (top CTAs by finish time):");
+        for r in rows.iter().take(3) {
+            println!(
+                "  cta {:>4} slot {:>3}  {:>6} tiles in {} segment(s)  \
+                 finish {:>9.1}us",
+                r.cta, r.slot, r.work.tiles, r.segments, r.finish_us
+            );
+        }
+    }
+    if let Some(path) = args.flags.get("json-out") {
+        std::fs::write(path, report.to_json().to_string())
+            .with_context(|| format!("write partition report to {path}"))?;
+        println!("partition report -> {path}");
+    }
+    Ok(())
+}
+
 /// Shared telemetry plumbing for every bench subcommand: self-validate
 /// the machine-readable report, write it (`--json-out`), gate it against
 /// a committed baseline (`--check-against` + `--tolerance`), and fold it
@@ -996,6 +1154,9 @@ fn bench_cmd(args: &Args) -> Result<()> {
     if args.has("gqa") {
         return bench_gqa(args, seed);
     }
+    if args.has("balance") {
+        return bench_balance(args, seed);
+    }
     anyhow::ensure!(
         args.has("cascade-exec"),
         "usage: leanattn bench --cascade-exec [--batch 4] [--prefix 256] ...\n       \
@@ -1003,7 +1164,8 @@ fn bench_cmd(args: &Args) -> Result<()> {
          leanattn bench --spec [--k 4] [--draft ngram|model] [--smoke]\n       \
          leanattn bench --sparse [--kv-budget 6] [--context 256] [--smoke]\n       \
          leanattn bench --obs [--requests 24] [--trace-out PATH] [--smoke]\n       \
-         leanattn bench --gqa [--heads 8] [--kv-heads 2] [--smoke]"
+         leanattn bench --gqa [--heads 8] [--kv-heads 2] [--smoke]\n       \
+         leanattn bench --balance [--iters 48] [--drift-limit 0.75] [--smoke]"
     );
     let case = ExecCase {
         batch: args.usize("batch", 4),
@@ -1413,6 +1575,48 @@ fn bench_gqa(args: &Args, seed: u64) -> Result<()> {
     if let Some(c) = reported {
         bench_report_out(&c.bench_report(seed, smoke), args)?;
     }
+    Ok(())
+}
+
+/// `leanattn bench --balance`: the partition-balance bench (artifact-
+/// free). Builds the cross-strategy PartitionReport on a ragged batch
+/// and asserts stream-K's load-imbalance factor strictly below the
+/// fixed-split baseline's; runs a traced host execution whose per-CTA
+/// `gather`/`lean_exec` spans join the work ledger by tile index (fold
+/// asserted exact against the direct-softmax oracle); and feeds a
+/// stationary drift stream to the online detector, which must stay
+/// quiet (zero breaches, rel-err EWMA within the limit).
+fn bench_balance(args: &Args, seed: u64) -> Result<()> {
+    use lean_attention::bench_harness::{run_balance, BalanceCase};
+
+    let smoke = args.has("smoke");
+    let base = if smoke { BalanceCase::smoke() } else { BalanceCase::default_case() };
+    let case = BalanceCase {
+        heads: args.usize("heads", base.heads),
+        head_dim: args.usize("head-dim", base.head_dim),
+        exec_slots: args.usize("slots", base.exec_slots),
+        drift_iters: args.usize("iters", base.drift_iters),
+        drift_limit: args.f64("drift-limit", base.drift_limit),
+        ..base
+    };
+    println!(
+        "balance: ragged batch of {} lanes x {} heads d{}; exec {} lanes x \
+         {} heads d{} tile {} over {} slots; drift stream {} iters, \
+         limit {}",
+        case.ctx_lens.len(),
+        case.heads,
+        case.head_dim,
+        case.exec_ctx_lens.len(),
+        case.exec_heads,
+        case.exec_head_dim,
+        case.exec_tile,
+        case.exec_slots,
+        case.drift_iters,
+        case.drift_limit
+    );
+    let c = run_balance(case, seed)?;
+    println!("{}", c.render());
+    bench_report_out(&c.bench_report(seed, smoke), args)?;
     Ok(())
 }
 

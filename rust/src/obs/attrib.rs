@@ -107,8 +107,11 @@ impl AddAssign for WorkAccounting {
 
 /// Tile chunks covering `[0, ctx)` between token offsets
 /// `[begin_tok, end_tok)`, each clamped to the context: the exact
-/// chunks the host executors visit for that span.
-fn span_work(
+/// chunks the host executors visit for that span. Public so the
+/// partition-balance ledger (`obs::balance`) prices individual plan
+/// segments with the same closed form the totals use — their sums are
+/// bit-exact equal by construction.
+pub fn span_work(
     ctx: usize,
     begin_tok: usize,
     end_tok: usize,

@@ -1,0 +1,830 @@
+//! Partition-balance observability: the per-tile work ledger and the
+//! versioned [`PartitionReport`].
+//!
+//! LeanAttention's headline claim is a *scheduling* property: stream-K
+//! decomposition equalizes per-CTA load where fixed splits leave waves
+//! ragged (paper Figs 2/3/10). This module turns that claim into a
+//! reportable, enforceable number by joining three views of one plan:
+//!
+//! 1. **Predicted work** — a per-CTA ledger priced with the exact same
+//!    closed form the attribution totals use
+//!    ([`span_work`] at segment granularity), so the ledger's
+//!    sum is bit-exact equal to [`crate::obs::attrib::account_plan`] /
+//!    [`crate::obs::attrib::account_cascade_problem`] by construction.
+//! 2. **Simulated timelines** — [`schedule_detail`]'s per-CTA slot
+//!    placement and start/finish times on a [`GpuArch`].
+//! 3. **Measured spans** — when traced, per-CTA `gather`/`lean_exec`
+//!    span times carrying the [`Attrs::tile`] index
+//!    ([`execute_plan_traced`] emits them; [`join_measured_events`]
+//!    folds them back into the ledger).
+//!
+//! The summary numbers: **load-imbalance factor** = makespan over mean
+//! busy-slot time (1.0 = perfectly level), **wave efficiency** = busy
+//! slot-time over `makespan × slots` (1.0 = no wave-quantization
+//! waste), and the **critical-path CTA** whose finish sets the
+//! makespan. `leanattn analyze --partition` renders the per-strategy
+//! comparison; `bench --balance` asserts stream-K's imbalance strictly
+//! below the fixed-split baseline on a ragged batch.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::obs::attrib::{span_work, WorkAccounting};
+use crate::obs::tracer::{Attrs, Phase, TraceEvent, Tracer};
+use crate::partition::cascade::{CascadePlan, CascadeProblem};
+use crate::partition::plan::{build_plan, DecodeProblem, Plan, Strategy};
+use crate::sim::schedule::{effective_slots, schedule_detail};
+use crate::sim::GpuArch;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Schema version stamped into every [`PartitionReport`] JSON export.
+pub const PARTITION_REPORT_VERSION: u64 = 1;
+
+/// One CTA's row in the per-tile work ledger: predicted work priced at
+/// segment granularity, simulated placement, and (when traced) the
+/// measured span time joined by tile index.
+#[derive(Clone, Debug)]
+pub struct CtaLedgerRow {
+    /// CTA index in plan launch order (the `tile` span attribute).
+    pub cta: usize,
+    /// Simulated slot the CTA landed on.
+    pub slot: usize,
+    /// Simulated start, microseconds from kernel start.
+    pub start_us: f64,
+    /// Simulated finish, microseconds from kernel start.
+    pub finish_us: f64,
+    /// LeanTile segments the CTA runs back-to-back.
+    pub segments: usize,
+    /// Exact predicted work of those segments (context-clamped).
+    pub work: WorkAccounting,
+    /// Measured `gather` + `lean_exec` span time for this CTA, when a
+    /// traced execution was joined in.
+    pub measured_us: Option<f64>,
+}
+
+/// Balance summary of one strategy's plan on one problem.
+#[derive(Clone, Debug)]
+pub struct StrategyBalance {
+    /// Strategy name ([`Strategy::name`]).
+    pub strategy: &'static str,
+    /// CTAs launched.
+    pub grid: usize,
+    /// Co-resident CTA slots the schedule had available.
+    pub slots: usize,
+    /// `grid / slots` — fractional waves of the launch.
+    pub waves: f64,
+    /// Simulated compute makespan, microseconds.
+    pub makespan_us: f64,
+    /// Mean busy time of the slots that received work, microseconds.
+    pub mean_slot_us: f64,
+    /// Load-imbalance factor: `makespan / mean_slot_us` (>= 1; 1.0
+    /// means every used slot finished together).
+    pub imbalance: f64,
+    /// Busy slot-time over `makespan x slots` (<= 1; 1.0 means no
+    /// wave-quantization idle time on any slot).
+    pub wave_efficiency: f64,
+    /// CTA whose finish time sets the makespan (the critical path).
+    pub critical_cta: usize,
+    /// Histogram of per-CTA tile counts in log2 buckets: bucket `i`
+    /// counts CTAs with `tiles` in `[2^(i-1), 2^i)` (bucket 0 = zero
+    /// tiles). A balanced plan concentrates in one bucket.
+    pub tiles_hist: Vec<u64>,
+    /// Ledger total — bit-exact equal to the plan's closed-form
+    /// accounting.
+    pub total: WorkAccounting,
+    /// Per-CTA rows, indexed by launch order.
+    pub ledger: Vec<CtaLedgerRow>,
+}
+
+/// Per-CTA predicted work for a plain decode plan, one row per CTA in
+/// launch order. Prices each segment with [`span_work`] — the rows sum
+/// bit-exact to [`crate::obs::attrib::account_plan`].
+pub fn plan_ledger(p: &DecodeProblem, plan: &Plan) -> Vec<WorkAccounting> {
+    plan.ctas
+        .iter()
+        .map(|cta| {
+            let mut w = WorkAccounting::default();
+            for seg in &cta.segments {
+                let g = seg.group as usize;
+                let ctx = p.ctx_for_group(g);
+                let begin = seg.tile_begin as usize * plan.tile;
+                let end = (seg.tile_begin + seg.tile_count) as usize * plan.tile;
+                w += span_work(ctx, begin, end, plan.tile, p.head_dim, p.group_size());
+            }
+            w
+        })
+        .collect()
+}
+
+/// Per-CTA predicted work for a cascade plan: shared-prefix segments
+/// serve every group member's query rows at once, suffixes serve one —
+/// [`CascadeProblem::queries_of`] supplies the row count per segment
+/// group. Rows sum bit-exact to
+/// [`crate::obs::attrib::account_cascade_problem`].
+pub fn cascade_ledger(cp: &CascadeProblem, cplan: &CascadePlan) -> Vec<WorkAccounting> {
+    let sp = &cplan.segment_problem;
+    cplan
+        .plan
+        .ctas
+        .iter()
+        .map(|cta| {
+            let mut w = WorkAccounting::default();
+            for seg in &cta.segments {
+                let g = seg.group as usize;
+                let ctx = sp.ctx_for_group(g);
+                let begin = seg.tile_begin as usize * cplan.plan.tile;
+                let end = (seg.tile_begin + seg.tile_count) as usize * cplan.plan.tile;
+                w += span_work(ctx, begin, end, cplan.plan.tile, sp.head_dim, cp.queries_of(g));
+            }
+            w
+        })
+        .collect()
+}
+
+fn tiles_hist(ledger: &[WorkAccounting]) -> Vec<u64> {
+    let mut hist = Vec::new();
+    for w in ledger {
+        let bucket = (u64::BITS - w.tiles.leading_zeros()) as usize;
+        if hist.len() <= bucket {
+            hist.resize(bucket + 1, 0);
+        }
+        hist[bucket] += 1;
+    }
+    hist
+}
+
+fn balance_from(
+    strategy: &'static str,
+    plan: &Plan,
+    ledger: Vec<WorkAccounting>,
+    problem: &DecodeProblem,
+    arch: &GpuArch,
+) -> StrategyBalance {
+    let slots = effective_slots(plan.strategy, arch);
+    let detail = schedule_detail(plan, problem, arch);
+    debug_assert_eq!(detail.len(), ledger.len());
+    let busy: f64 = detail.iter().map(|c| c.finish_us - c.start_us).sum();
+    let makespan_us = detail.iter().map(|c| c.finish_us).fold(0.0, f64::max);
+    let used_slots = plan.grid().min(slots).max(1);
+    let mean_slot_us = busy / used_slots as f64;
+    let imbalance = if mean_slot_us > 0.0 { makespan_us / mean_slot_us } else { 1.0 };
+    let wave_efficiency = if makespan_us > 0.0 {
+        (busy / (makespan_us * slots as f64)).min(1.0)
+    } else {
+        1.0
+    };
+    let critical_cta = detail
+        .iter()
+        .max_by(|a, b| a.finish_us.total_cmp(&b.finish_us))
+        .map_or(0, |c| c.cta);
+    let total = ledger.iter().fold(WorkAccounting::default(), |a, &w| a + w);
+    let hist = tiles_hist(&ledger);
+    let rows = detail
+        .iter()
+        .zip(&ledger)
+        .map(|(c, &work)| CtaLedgerRow {
+            cta: c.cta,
+            slot: c.slot,
+            start_us: c.start_us,
+            finish_us: c.finish_us,
+            segments: plan.ctas[c.cta].segments.len(),
+            work,
+            measured_us: None,
+        })
+        .collect();
+    StrategyBalance {
+        strategy,
+        grid: plan.grid(),
+        slots,
+        waves: plan.grid() as f64 / slots as f64,
+        makespan_us,
+        mean_slot_us,
+        imbalance,
+        wave_efficiency,
+        critical_cta,
+        tiles_hist: hist,
+        total,
+        ledger: rows,
+    }
+}
+
+/// Join the ledger with the simulated per-CTA timeline for one plan.
+pub fn plan_balance(p: &DecodeProblem, plan: &Plan, arch: &GpuArch) -> StrategyBalance {
+    balance_from(plan.strategy.name(), plan, plan_ledger(p, plan), p, arch)
+}
+
+/// Join the cascade ledger with the simulated timeline of the cascade
+/// plan's segment problem.
+pub fn cascade_balance(
+    cp: &CascadeProblem,
+    cplan: &CascadePlan,
+    arch: &GpuArch,
+) -> StrategyBalance {
+    balance_from(
+        cplan.plan.strategy.name(),
+        &cplan.plan,
+        cascade_ledger(cp, cplan),
+        &cplan.segment_problem,
+        arch,
+    )
+}
+
+/// Fold measured `gather`/`lean_exec` span durations carrying a `tile`
+/// attribute back into the ledger rows they index. Events without the
+/// attribute (step-level engine spans) are ignored; repeated events for
+/// one tile accumulate, so an iterated run joins its total.
+pub fn join_measured_events(b: &mut StrategyBalance, events: &[TraceEvent]) {
+    for ev in events {
+        if !matches!(ev.phase, Phase::Gather | Phase::LeanExec) {
+            continue;
+        }
+        let Some(tile) = ev.attrs.tile else { continue };
+        if let Some(row) = b.ledger.get_mut(tile) {
+            *row.measured_us.get_or_insert(0.0) += ev.dur_us;
+        }
+    }
+}
+
+/// The partition-quality report for one problem: every strategy's
+/// balance summary side by side, schema-validated and versioned.
+#[derive(Clone, Debug)]
+pub struct PartitionReport {
+    pub version: u64,
+    /// Human-readable problem shape.
+    pub shape: String,
+    /// Fig 10's x-axis: average over max context of the batch (1.0 =
+    /// uniform, small = one long straggler lane).
+    pub batch_context_ratio: f64,
+    pub strategies: Vec<StrategyBalance>,
+}
+
+/// Build the cross-strategy report for one decode problem: dense
+/// (FlashAttention-2), auto fixed-split (FlashDecoding), paged fixed
+/// split (FlashInfer) and stream-K (LeanAttention).
+pub fn partition_report(p: &DecodeProblem, arch: &GpuArch) -> PartitionReport {
+    let fd = Strategy::fixed_split_auto(p, arch.num_sms);
+    let fi_splits = match fd {
+        Strategy::FixedSplit { splits } => splits,
+        _ => 1,
+    };
+    let strategies = [
+        Strategy::Dense,
+        fd,
+        Strategy::PagedFixedSplit { splits: fi_splits, page: 16 },
+        Strategy::StreamK,
+    ]
+    .into_iter()
+    .map(|s| {
+        let plan = build_plan(p, s, effective_slots(s, arch));
+        plan_balance(p, &plan, arch)
+    })
+    .collect();
+    PartitionReport {
+        version: PARTITION_REPORT_VERSION,
+        shape: format!(
+            "b{} h{}/kv{} d{} ctx {}..{} tile {}",
+            p.batch(),
+            p.heads,
+            p.kv_heads,
+            p.head_dim,
+            p.ctx_lens.iter().min().copied().unwrap_or(0),
+            p.ctx_lens.iter().max().copied().unwrap_or(0),
+            p.tile
+        ),
+        batch_context_ratio: p.batch_context_ratio(),
+        strategies,
+    }
+}
+
+impl StrategyBalance {
+    fn to_json(&self) -> Json {
+        let ledger = self
+            .ledger
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("cta".to_string(), Json::Num(r.cta as f64));
+                o.insert("slot".to_string(), Json::Num(r.slot as f64));
+                o.insert("start_us".to_string(), Json::Num(r.start_us));
+                o.insert("finish_us".to_string(), Json::Num(r.finish_us));
+                o.insert("segments".to_string(), Json::Num(r.segments as f64));
+                o.insert("work".to_string(), r.work.to_json());
+                if let Some(m) = r.measured_us {
+                    o.insert("measured_us".to_string(), Json::Num(m));
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        let mut o = BTreeMap::new();
+        o.insert("strategy".to_string(), Json::Str(self.strategy.to_string()));
+        o.insert("grid".to_string(), Json::Num(self.grid as f64));
+        o.insert("slots".to_string(), Json::Num(self.slots as f64));
+        o.insert("waves".to_string(), Json::Num(self.waves));
+        o.insert("makespan_us".to_string(), Json::Num(self.makespan_us));
+        o.insert("mean_slot_us".to_string(), Json::Num(self.mean_slot_us));
+        o.insert("imbalance".to_string(), Json::Num(self.imbalance));
+        o.insert("wave_efficiency".to_string(), Json::Num(self.wave_efficiency));
+        o.insert("critical_cta".to_string(), Json::Num(self.critical_cta as f64));
+        o.insert(
+            "tiles_hist".to_string(),
+            Json::Arr(self.tiles_hist.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        o.insert("total".to_string(), self.total.to_json());
+        o.insert("ledger".to_string(), Json::Arr(ledger));
+        Json::Obj(o)
+    }
+}
+
+impl PartitionReport {
+    /// Versioned JSON export (`analyze --partition --json-out`).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("version".to_string(), Json::Num(self.version as f64));
+        o.insert("shape".to_string(), Json::Str(self.shape.clone()));
+        o.insert(
+            "batch_context_ratio".to_string(),
+            Json::Num(self.batch_context_ratio),
+        );
+        o.insert(
+            "strategies".to_string(),
+            Json::Arr(self.strategies.iter().map(StrategyBalance::to_json).collect()),
+        );
+        Json::Obj(o)
+    }
+
+    /// The stream-K row, if present (the comparison anchor).
+    pub fn stream_k(&self) -> Option<&StrategyBalance> {
+        self.strategies.iter().find(|s| s.strategy == "leanattention")
+    }
+
+    /// Human-readable comparison table.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "partition balance: {} (avg/max ctx {:.2})\n\
+             {:<16} {:>6} {:>6} {:>7} {:>11} {:>10} {:>9} {:>9}\n",
+            self.shape,
+            self.batch_context_ratio,
+            "strategy",
+            "grid",
+            "slots",
+            "waves",
+            "makespan_us",
+            "imbalance",
+            "wave_eff",
+            "crit_cta",
+        );
+        for b in &self.strategies {
+            s.push_str(&format!(
+                "{:<16} {:>6} {:>6} {:>7.2} {:>11.1} {:>10.3} {:>9.3} {:>9}\n",
+                b.strategy,
+                b.grid,
+                b.slots,
+                b.waves,
+                b.makespan_us,
+                b.imbalance,
+                b.wave_efficiency,
+                b.critical_cta,
+            ));
+        }
+        s
+    }
+}
+
+fn require_num(o: &BTreeMap<String, Json>, key: &str, at: &str) -> Result<f64> {
+    o.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("{at}: missing numeric {key:?}"))
+}
+
+/// Validate a [`PartitionReport`] JSON export against its schema,
+/// including the recomputable invariants: ledger length equals the
+/// grid, per-row work sums bit-exact to the strategy total, imbalance
+/// >= 1 and wave efficiency in (0, 1].
+pub fn validate_partition_report(j: &Json) -> Result<()> {
+    let Some(root) = j.as_obj() else { bail!("partition report must be an object") };
+    ensure!(
+        root.get("version").and_then(Json::as_f64) == Some(PARTITION_REPORT_VERSION as f64),
+        "unknown partition report version"
+    );
+    ensure!(
+        root.get("shape").and_then(Json::as_str).is_some(),
+        "report missing shape string"
+    );
+    let ratio = require_num(root, "batch_context_ratio", "report")?;
+    ensure!(
+        ratio > 0.0 && ratio <= 1.0 + 1e-9,
+        "batch_context_ratio {ratio} outside (0, 1]"
+    );
+    let strategies = root
+        .get("strategies")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("report missing strategies array"))?;
+    ensure!(!strategies.is_empty(), "report has no strategies");
+    for sj in strategies {
+        let Some(o) = sj.as_obj() else { bail!("strategy entry is not an object") };
+        let name = o
+            .get("strategy")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("strategy entry missing name"))?;
+        ensure!(
+            ["flashattention2", "flashdecoding", "flashinfer", "leanattention", "cascade"]
+                .contains(&name),
+            "unknown strategy name {name:?}"
+        );
+        let at = format!("strategy {name}");
+        let grid = require_num(o, "grid", &at)? as usize;
+        ensure!(grid >= 1, "{at}: empty grid");
+        ensure!(require_num(o, "slots", &at)? >= 1.0, "{at}: no slots");
+        let imb = require_num(o, "imbalance", &at)?;
+        ensure!(imb >= 1.0 - 1e-9, "{at}: imbalance {imb} below 1");
+        let eff = require_num(o, "wave_efficiency", &at)?;
+        ensure!(eff > 0.0 && eff <= 1.0 + 1e-9, "{at}: wave_efficiency {eff} outside (0, 1]");
+        require_num(o, "waves", &at)?;
+        require_num(o, "makespan_us", &at)?;
+        require_num(o, "mean_slot_us", &at)?;
+        require_num(o, "critical_cta", &at)?;
+        let total = o
+            .get("total")
+            .and_then(WorkAccounting::from_json)
+            .ok_or_else(|| anyhow::anyhow!("{at}: missing work total"))?;
+        let ledger = o
+            .get("ledger")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("{at}: missing ledger array"))?;
+        ensure!(
+            ledger.len() == grid,
+            "{at}: ledger has {} rows for a grid of {grid}",
+            ledger.len()
+        );
+        let mut sum = WorkAccounting::default();
+        for (i, rj) in ledger.iter().enumerate() {
+            let Some(r) = rj.as_obj() else { bail!("{at}: ledger row {i} not an object") };
+            let rat = format!("{at} row {i}");
+            for key in ["cta", "slot", "start_us", "finish_us", "segments"] {
+                ensure!(require_num(r, key, &rat)? >= 0.0, "{rat}: negative {key}");
+            }
+            let w = r
+                .get("work")
+                .and_then(WorkAccounting::from_json)
+                .ok_or_else(|| anyhow::anyhow!("{rat}: missing work"))?;
+            sum += w;
+        }
+        ensure!(
+            sum == total,
+            "{at}: ledger rows sum to a different work total than reported"
+        );
+    }
+    Ok(())
+}
+
+/// Random Q/K/V tensors for a decode problem, laid out per KV group:
+/// `q[g]` is `group_size x head_dim`, `k[g]`/`v[g]` are `ctx x
+/// head_dim`. The host substrate [`execute_plan_traced`] and its
+/// [`oracle`] both read.
+pub struct BalanceTensors {
+    pub q: Vec<Vec<f32>>,
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+impl BalanceTensors {
+    pub fn random(p: &DecodeProblem, seed: u64) -> BalanceTensors {
+        let mut rng = Rng::new(seed);
+        let mut noise =
+            |n: usize| (0..n).map(|_| rng.range(0, 2048) as f32 / 1024.0 - 1.0).collect();
+        let d = p.head_dim;
+        let gs = p.group_size();
+        let mut q = Vec::with_capacity(p.groups());
+        let mut k = Vec::with_capacity(p.groups());
+        let mut v = Vec::with_capacity(p.groups());
+        for g in 0..p.groups() {
+            let ctx = p.ctx_for_group(g);
+            q.push(noise(gs * d));
+            k.push(noise(ctx * d));
+            v.push(noise(ctx * d));
+        }
+        BalanceTensors { q, k, v }
+    }
+}
+
+/// One unscaled online-softmax partial: per query row, the running max,
+/// the exp-sum and the weighted-V accumulator.
+struct Partial {
+    group: usize,
+    m: Vec<f32>,
+    s: Vec<f32>,
+    acc: Vec<f32>,
+}
+
+/// Outcome of a per-CTA traced host execution of one plan.
+pub struct MeasuredPlan {
+    /// Per-CTA measured `gather` + `exec` wall time, microseconds, in
+    /// launch order — the per-tile join input for [`CtaLedgerRow`] and
+    /// the drift detector.
+    pub cta_us: Vec<f64>,
+    /// Exact attention output per group, `group_size x head_dim`,
+    /// folded from the CTA partials in reduction order.
+    pub outputs: Vec<Vec<f32>>,
+}
+
+/// Execute a plan CTA by CTA on the host: each CTA gathers its
+/// segments' KV slices into a contiguous buffer (a `gather` span with
+/// the slice bytes), computes the unscaled online-softmax partials (a
+/// `lean_exec` span with the segment flops), and both spans carry the
+/// CTA index in [`Attrs::tile`] so measured times join the ledger
+/// per-tile. Partials fold per group afterwards — associativity makes
+/// the result exact against [`oracle`] regardless of the partition.
+pub fn execute_plan_traced(
+    p: &DecodeProblem,
+    plan: &Plan,
+    t: &BalanceTensors,
+    tracer: &Tracer,
+) -> MeasuredPlan {
+    let d = p.head_dim;
+    let gs = p.group_size();
+    let scale = 1.0 / (d as f32).sqrt();
+    let ledger = plan_ledger(p, plan);
+    let mut cta_us = Vec::with_capacity(plan.ctas.len());
+    let mut partials: Vec<Partial> = Vec::new();
+    let mut kbuf: Vec<f32> = Vec::new();
+    let mut vbuf: Vec<f32> = Vec::new();
+
+    for (ci, cta) in plan.ctas.iter().enumerate() {
+        // Token ranges per segment, clamped to each group's context.
+        let ranges: Vec<(usize, usize, usize)> = cta
+            .segments
+            .iter()
+            .map(|seg| {
+                let g = seg.group as usize;
+                let ctx = p.ctx_for_group(g);
+                let begin = (seg.tile_begin as usize * plan.tile).min(ctx);
+                let end = ((seg.tile_begin + seg.tile_count) as usize * plan.tile).min(ctx);
+                (g, begin, end)
+            })
+            .collect();
+
+        let wall0 = Instant::now();
+        let gather_start = tracer.now();
+        kbuf.clear();
+        vbuf.clear();
+        for &(g, begin, end) in &ranges {
+            kbuf.extend_from_slice(&t.k[g][begin * d..end * d]);
+            vbuf.extend_from_slice(&t.v[g][begin * d..end * d]);
+        }
+        tracer.record_since(
+            Phase::Gather,
+            gather_start,
+            Attrs {
+                bytes: Some(ledger[ci].gathered_kv_bytes),
+                tile: Some(ci),
+                ..Default::default()
+            },
+        );
+
+        let exec_start = tracer.now();
+        let mut off = 0usize;
+        for &(g, begin, end) in &ranges {
+            let width = end - begin;
+            let mut part = Partial {
+                group: g,
+                m: vec![f32::NEG_INFINITY; gs],
+                s: vec![0.0; gs],
+                acc: vec![0.0; gs * d],
+            };
+            for tok in 0..width {
+                let krow = &kbuf[(off + tok) * d..(off + tok + 1) * d];
+                let vrow = &vbuf[(off + tok) * d..(off + tok + 1) * d];
+                for qi in 0..gs {
+                    let qrow = &t.q[g][qi * d..(qi + 1) * d];
+                    let score =
+                        qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    let m_new = part.m[qi].max(score);
+                    let corr = (part.m[qi] - m_new).exp();
+                    let w = (score - m_new).exp();
+                    part.s[qi] = part.s[qi] * corr + w;
+                    for di in 0..d {
+                        let a = &mut part.acc[qi * d + di];
+                        *a = *a * corr + w * vrow[di];
+                    }
+                    part.m[qi] = m_new;
+                }
+            }
+            off += width;
+            if width > 0 {
+                partials.push(part);
+            }
+        }
+        tracer.record_since(
+            Phase::LeanExec,
+            exec_start,
+            Attrs {
+                flops: Some(ledger[ci].softmax_flops),
+                k: Some(cta.segments.len()),
+                tile: Some(ci),
+                ..Default::default()
+            },
+        );
+        cta_us.push(wall0.elapsed().as_secs_f64() * 1e6);
+    }
+
+    // Rescale-fold the partials per group (any order — associative).
+    let mut outputs = vec![vec![0.0f32; gs * d]; p.groups()];
+    for g in 0..p.groups() {
+        let mine: Vec<&Partial> = partials.iter().filter(|pt| pt.group == g).collect();
+        for qi in 0..gs {
+            let m_star = mine
+                .iter()
+                .map(|pt| pt.m[qi])
+                .fold(f32::NEG_INFINITY, f32::max);
+            if m_star == f32::NEG_INFINITY {
+                continue;
+            }
+            let mut s_star = 0.0f32;
+            let mut acc_star = vec![0.0f32; d];
+            for pt in &mine {
+                let corr = (pt.m[qi] - m_star).exp();
+                s_star += pt.s[qi] * corr;
+                for di in 0..d {
+                    acc_star[di] += pt.acc[qi * d + di] * corr;
+                }
+            }
+            for di in 0..d {
+                outputs[g][qi * d + di] = acc_star[di] / s_star.max(f32::MIN_POSITIVE);
+            }
+        }
+    }
+    MeasuredPlan { cta_us, outputs }
+}
+
+/// Direct softmax attention per group — the exactness reference for
+/// [`execute_plan_traced`]'s partial folding.
+pub fn oracle(p: &DecodeProblem, t: &BalanceTensors) -> Vec<Vec<f32>> {
+    let d = p.head_dim;
+    let gs = p.group_size();
+    let scale = 1.0 / (d as f32).sqrt();
+    (0..p.groups())
+        .map(|g| {
+            let ctx = p.ctx_for_group(g);
+            let mut out = vec![0.0f32; gs * d];
+            for qi in 0..gs {
+                let qrow = &t.q[g][qi * d..(qi + 1) * d];
+                let scores: Vec<f32> = (0..ctx)
+                    .map(|tok| {
+                        let krow = &t.k[g][tok * d..(tok + 1) * d];
+                        qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale
+                    })
+                    .collect();
+                let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let ws: Vec<f32> = scores.iter().map(|&x| (x - m).exp()).collect();
+                let s: f32 = ws.iter().sum();
+                for (tok, &w) in ws.iter().enumerate() {
+                    let vrow = &t.v[g][tok * d..(tok + 1) * d];
+                    for di in 0..d {
+                        out[qi * d + di] += w * vrow[di] / s;
+                    }
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::attrib::{
+        account_cascade_problem, account_decode_problem, account_plan,
+    };
+    use crate::partition::cascade::{build_cascade_plan, PrefixGroup};
+
+    fn ragged() -> DecodeProblem {
+        DecodeProblem::ragged(4, vec![511, 64, 1290, 32, 777, 96, 2048, 130], 32)
+    }
+
+    #[test]
+    fn plan_ledger_sums_bit_exact_to_account_plan() {
+        let p = ragged();
+        let arch = GpuArch::a100();
+        for s in [
+            Strategy::Dense,
+            Strategy::fixed_split_auto(&p, arch.num_sms),
+            Strategy::PagedFixedSplit { splits: 4, page: 16 },
+            Strategy::StreamK,
+        ] {
+            let plan = build_plan(&p, s, 24);
+            let ledger = plan_ledger(&p, &plan);
+            assert_eq!(ledger.len(), plan.grid());
+            let sum = ledger.iter().fold(WorkAccounting::default(), |a, &w| a + w);
+            assert_eq!(sum, account_plan(&p, &plan), "strategy {}", s.name());
+            assert_eq!(sum, account_decode_problem(&p), "strategy {}", s.name());
+        }
+    }
+
+    #[test]
+    fn cascade_ledger_sums_bit_exact_to_cascade_accounting() {
+        let cp = CascadeProblem::new(
+            2,
+            vec![300, 300, 280, 90],
+            16,
+            vec![PrefixGroup { prefix_len: 256, members: vec![0, 1, 2] }],
+        )
+        .unwrap()
+        .tile_aligned();
+        let cplan = build_cascade_plan(&cp, 24);
+        let ledger = cascade_ledger(&cp, &cplan);
+        assert_eq!(ledger.len(), cplan.plan.grid());
+        let sum = ledger.iter().fold(WorkAccounting::default(), |a, &w| a + w);
+        assert_eq!(sum, account_cascade_problem(&cp));
+    }
+
+    #[test]
+    fn stream_k_imbalance_below_fixed_split_on_ragged_batch() {
+        let p = ragged();
+        let arch = GpuArch::a100();
+        let report = partition_report(&p, &arch);
+        let lean = report.stream_k().unwrap();
+        let fd = report
+            .strategies
+            .iter()
+            .find(|s| s.strategy == "flashdecoding")
+            .unwrap();
+        assert!(
+            lean.imbalance < fd.imbalance,
+            "lean {} vs fd {}",
+            lean.imbalance,
+            fd.imbalance
+        );
+        assert!(lean.imbalance >= 1.0 && fd.imbalance >= 1.0);
+        assert!(lean.wave_efficiency >= fd.wave_efficiency);
+    }
+
+    #[test]
+    fn report_json_round_trips_and_validates() {
+        let p = ragged();
+        let report = partition_report(&p, &GpuArch::a100());
+        let j = report.to_json();
+        validate_partition_report(&j).expect("schema-valid");
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+        validate_partition_report(&back).expect("round-trip stays valid");
+    }
+
+    #[test]
+    fn validator_rejects_tampered_ledgers() {
+        let p = ragged();
+        let report = partition_report(&p, &GpuArch::a100());
+        let mut j = report.to_json();
+        // Corrupt one ledger row's tile count: the bit-exact total check
+        // must catch it.
+        if let Json::Obj(root) = &mut j {
+            let Some(Json::Arr(strategies)) = root.get_mut("strategies") else {
+                panic!()
+            };
+            let Some(Json::Obj(s0)) = strategies.first_mut() else { panic!() };
+            let Some(Json::Arr(ledger)) = s0.get_mut("ledger") else { panic!() };
+            let Some(Json::Obj(row)) = ledger.first_mut() else { panic!() };
+            let Some(Json::Obj(work)) = row.get_mut("work") else { panic!() };
+            work.insert("tiles".to_string(), Json::Num(9999.0));
+        }
+        assert!(validate_partition_report(&j).is_err());
+    }
+
+    #[test]
+    fn traced_execution_is_exact_and_joins_per_tile() {
+        let p = DecodeProblem::ragged(2, vec![100, 37, 260], 16);
+        let plan = build_plan(&p, Strategy::StreamK, 8);
+        let t = BalanceTensors::random(&p, 7);
+        let tracer = Tracer::enabled(256);
+        let m = execute_plan_traced(&p, &plan, &t, &tracer);
+        assert_eq!(m.cta_us.len(), plan.grid());
+        let want = oracle(&p, &t);
+        let mut max_err = 0.0f32;
+        for (got, want) in m.outputs.iter().zip(&want) {
+            for (a, b) in got.iter().zip(want) {
+                max_err = max_err.max((a - b).abs());
+            }
+        }
+        assert!(max_err < 1e-3, "partition fold drifted: {max_err}");
+
+        let arch = GpuArch::a100();
+        let mut b = plan_balance(&p, &plan, &arch);
+        join_measured_events(&mut b, &tracer.events());
+        assert!(
+            b.ledger.iter().all(|r| r.measured_us.is_some()),
+            "every CTA row joined a measured span"
+        );
+    }
+
+    #[test]
+    fn uniform_stream_k_is_nearly_level() {
+        let p = DecodeProblem::uniform(1, 8, 65536, 64);
+        let arch = GpuArch::a100();
+        let plan = build_plan(&p, Strategy::StreamK, arch.sm_slots());
+        let b = plan_balance(&p, &plan, &arch);
+        assert!(b.imbalance < 1.10, "stream-K imbalance {}", b.imbalance);
+        assert!(b.wave_efficiency > 0.90, "wave efficiency {}", b.wave_efficiency);
+    }
+}

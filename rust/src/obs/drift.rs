@@ -1,0 +1,243 @@
+//! Online cost-model drift detection.
+//!
+//! The calibration plane (`leanattn calibrate`) fits
+//! [`CostCoefficients`] offline and asserts the model's relative error
+//! under a bound — once. This module replays the same span ↔ accounting
+//! join *at serve time*: every observed step contributes one
+//! `(predicted work, measured microseconds)` pair, and an EWMA of the
+//! relative error tracks whether the calibrated model still describes
+//! the machine it is running on. A sustained breach (several
+//! consecutive EWMA samples over the limit) marks real drift — thermal
+//! throttling, a noisy neighbour, a regressed gather path — and fires
+//! the flight recorder's `drift` trigger so the offending window is
+//! preserved for post-mortem.
+//!
+//! The detector self-calibrates a **scalar gain** instead of re-fitting
+//! the three coefficients online: a serve loop's observation stream is
+//! close to rank-one (the workload shape barely moves step to step), so
+//! a least-squares refit would be singular, while the single gain
+//! `Σ measured / Σ predicted` over the warmup window is well-posed on
+//! any stream and absorbs host-vs-calibration machine scale. After
+//! warmup the *shape* of the model is held fixed — exactly the thing
+//! drift detection is supposed to test.
+
+use crate::obs::attrib::WorkAccounting;
+use crate::sim::CostCoefficients;
+
+/// Streaming EWMA drift detector over the cost model.
+#[derive(Clone, Debug)]
+pub struct DriftDetector {
+    coeffs: CostCoefficients,
+    /// EWMA breach threshold on relative error.
+    limit: f64,
+    /// Observations used to fit the scalar gain before judging.
+    warmup: usize,
+    /// EWMA smoothing factor.
+    alpha: f64,
+    /// Consecutive over-limit samples required to declare a breach.
+    patience: usize,
+    observations: u64,
+    warm_pred: f64,
+    warm_meas: f64,
+    gain: Option<f64>,
+    ewma: Option<f64>,
+    streak: usize,
+    breaches: u64,
+    pending_breach: bool,
+}
+
+impl DriftDetector {
+    /// Observations used to fit the scalar gain before any judgement.
+    pub const WARMUP: usize = 16;
+    /// EWMA smoothing factor (weight of the newest sample).
+    pub const ALPHA: f64 = 0.2;
+    /// Consecutive over-limit EWMA samples that constitute a breach.
+    pub const PATIENCE: usize = 4;
+
+    /// Detector judging `coeffs` against measured step times, breaching
+    /// when the error EWMA stays above `limit` for [`Self::PATIENCE`]
+    /// consecutive observations.
+    pub fn new(coeffs: CostCoefficients, limit: f64) -> DriftDetector {
+        DriftDetector {
+            coeffs,
+            limit,
+            warmup: Self::WARMUP,
+            alpha: Self::ALPHA,
+            patience: Self::PATIENCE,
+            observations: 0,
+            warm_pred: 0.0,
+            warm_meas: 0.0,
+            gain: None,
+            ewma: None,
+            streak: 0,
+            breaches: 0,
+            pending_breach: false,
+        }
+    }
+
+    /// Feed one `(exact work, measured microseconds)` observation.
+    /// Returns the sample's relative error once the detector is warm,
+    /// `None` while still fitting the gain. Zero-work or non-positive
+    /// measurements are ignored.
+    pub fn observe(&mut self, work: &WorkAccounting, measured_us: f64) -> Option<f64> {
+        if work.is_zero() || measured_us <= 0.0 {
+            return None;
+        }
+        let base = self.coeffs.predict_us(work);
+        if base <= 0.0 {
+            return None;
+        }
+        self.observations += 1;
+        let Some(gain) = self.gain else {
+            self.warm_pred += base;
+            self.warm_meas += measured_us;
+            if self.observations as usize >= self.warmup && self.warm_pred > 0.0 {
+                self.gain = Some(self.warm_meas / self.warm_pred);
+            }
+            return None;
+        };
+        let predicted = gain * base;
+        let rel = (predicted - measured_us).abs() / measured_us.max(1e-9);
+        // Zero-initialized EWMA: a fresh (or re-armed) detector needs
+        // genuinely sustained error to climb over the limit — a single
+        // spike contributes only `alpha * rel`.
+        let prev = self.ewma.unwrap_or(0.0);
+        let ewma = prev + self.alpha * (rel - prev);
+        self.ewma = Some(ewma);
+        if ewma > self.limit {
+            self.streak += 1;
+            if self.streak >= self.patience {
+                self.breaches += 1;
+                self.pending_breach = true;
+                // Re-arm: restart the estimate so the lingering EWMA of
+                // the event just captured cannot immediately fire again
+                // once the workload has recovered.
+                self.streak = 0;
+                self.ewma = None;
+            }
+        } else {
+            self.streak = 0;
+        }
+        Some(rel)
+    }
+
+    /// Total observations fed (including warmup).
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Current relative-error EWMA; `None` until warm and judged once
+    /// (and right after a breach re-arms the estimate).
+    pub fn rel_err(&self) -> Option<f64> {
+        self.ewma
+    }
+
+    /// Scalar gain fitted over the warmup window, once available.
+    pub fn gain(&self) -> Option<f64> {
+        self.gain
+    }
+
+    /// Sustained breaches declared so far.
+    pub fn breaches(&self) -> u64 {
+        self.breaches
+    }
+
+    /// Consume the pending-breach flag: `true` exactly once per
+    /// declared breach, so the caller records one flight bundle per
+    /// sustained event rather than one per over-limit step.
+    pub fn take_breach(&mut self) -> bool {
+        std::mem::take(&mut self.pending_breach)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coeffs() -> CostCoefficients {
+        CostCoefficients { ns_per_byte: 0.02, ns_per_flop: 0.004, tile_overhead_ns: 300.0 }
+    }
+
+    fn work() -> WorkAccounting {
+        WorkAccounting::slice(4096, 64, 8)
+    }
+
+    #[test]
+    fn stationary_stream_stays_quiet() {
+        let c = coeffs();
+        let w = work();
+        // Measurements track the model at 3x scale — the gain absorbs it.
+        let mut d = DriftDetector::new(c, 0.10);
+        for i in 0..200u64 {
+            let jitter = 1.0 + 0.01 * ((i % 7) as f64 - 3.0) / 3.0;
+            d.observe(&w, 3.0 * c.predict_us(&w) * jitter);
+        }
+        assert_eq!(d.breaches(), 0);
+        assert!(!d.take_breach());
+        let rel = d.rel_err().expect("warm after 200 observations");
+        assert!(rel < 0.05, "stationary rel err {rel}");
+        let g = d.gain().unwrap();
+        assert!((g - 3.0).abs() < 0.05, "gain {g}");
+    }
+
+    #[test]
+    fn sustained_shift_breaches_once_per_event() {
+        let c = coeffs();
+        let w = work();
+        let mut d = DriftDetector::new(c, 0.10);
+        let base = c.predict_us(&w);
+        for _ in 0..DriftDetector::WARMUP {
+            d.observe(&w, base);
+        }
+        assert!(d.gain().is_some());
+        // 2x slowdown: every sample's rel err is 0.5 >> 0.10; the
+        // zero-initialized EWMA needs one extra step to clear the limit
+        // before the PATIENCE streak starts counting.
+        let mut fired = 0;
+        for _ in 0..DriftDetector::PATIENCE + 2 {
+            d.observe(&w, 2.0 * base);
+            if d.take_breach() {
+                fired += 1;
+            }
+        }
+        assert_eq!(fired, 1, "exactly one breach from one sustained event");
+        assert_eq!(d.breaches(), 1);
+        // Recovery resets the streak; no further breach.
+        for _ in 0..50 {
+            d.observe(&w, base);
+        }
+        assert_eq!(d.breaches(), 1);
+        assert!(!d.take_breach());
+    }
+
+    #[test]
+    fn transient_spikes_below_patience_do_not_breach() {
+        let c = coeffs();
+        let w = work();
+        let mut d = DriftDetector::new(c, 0.10);
+        let base = c.predict_us(&w);
+        for _ in 0..DriftDetector::WARMUP {
+            d.observe(&w, base);
+        }
+        for _ in 0..20 {
+            // Short bursts just over the limit, then recovery: the EWMA
+            // (alpha 0.2 from zero) peaks near 0.073 < 0.10, so the
+            // streak never even starts.
+            for _ in 0..DriftDetector::PATIENCE - 1 {
+                d.observe(&w, 1.15 * base);
+            }
+            for _ in 0..8 {
+                d.observe(&w, base);
+            }
+        }
+        assert_eq!(d.breaches(), 0);
+    }
+
+    #[test]
+    fn zero_work_and_zero_time_are_ignored() {
+        let mut d = DriftDetector::new(coeffs(), 0.10);
+        assert!(d.observe(&WorkAccounting::default(), 5.0).is_none());
+        assert!(d.observe(&work(), 0.0).is_none());
+        assert_eq!(d.observations(), 0);
+    }
+}

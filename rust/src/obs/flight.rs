@@ -40,14 +40,18 @@ pub enum FlightTrigger {
     AuditFailure,
     /// The watchdog saw the stall threshold of progress-free steps.
     WatchdogStall,
+    /// The online cost-model drift detector saw a sustained breach of
+    /// its relative-error limit (`serve --drift-limit`).
+    Drift,
 }
 
 impl FlightTrigger {
-    pub const ALL: [FlightTrigger; 4] = [
+    pub const ALL: [FlightTrigger; 5] = [
         FlightTrigger::SloBreach,
         FlightTrigger::EvictionStorm,
         FlightTrigger::AuditFailure,
         FlightTrigger::WatchdogStall,
+        FlightTrigger::Drift,
     ];
 
     /// Stable name used in manifests and bundle directory names.
@@ -57,6 +61,7 @@ impl FlightTrigger {
             FlightTrigger::EvictionStorm => "eviction_storm",
             FlightTrigger::AuditFailure => "audit_failure",
             FlightTrigger::WatchdogStall => "watchdog_stall",
+            FlightTrigger::Drift => "drift",
         }
     }
 

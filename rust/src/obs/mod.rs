@@ -31,6 +31,15 @@
 //!   inspect`) recomputed from scratch over that state.
 //! - [`watchdog`] — the step-progress heartbeat ([`Watchdog`]) that
 //!   marks engine health and fires the flight recorder on stalls.
+//! - [`balance`] — the partition-quality plane: per-tile work ledgers
+//!   priced with [`attrib`]'s closed form (bit-exact to the totals),
+//!   joined with simulated per-CTA timelines and measured tile spans
+//!   into the versioned [`PartitionReport`] (`leanattn analyze
+//!   --partition`, `bench --balance`).
+//! - [`drift`] — the online EWMA [`DriftDetector`] that replays the
+//!   calibration join at serve time and fires the flight recorder's
+//!   `drift` trigger on a sustained cost-model breach
+//!   (`serve --drift-limit`).
 //! - [`flight`] — the anomaly [`FlightRecorder`]: post-mortem bundles
 //!   (trace + metrics snapshot + cache report + SLO text) written when
 //!   a trigger condition fires, re-validated on read-back.
@@ -41,9 +50,11 @@
 //! under 2%.
 
 pub mod attrib;
+pub mod balance;
 pub mod benchlog;
 pub mod cache_stats;
 pub mod calibrate;
+pub mod drift;
 pub mod flight;
 pub mod hist;
 pub mod snapshot;
@@ -52,12 +63,17 @@ pub mod tracer;
 pub mod watchdog;
 
 pub use attrib::WorkAccounting;
+pub use balance::{
+    partition_report, validate_partition_report, PartitionReport,
+    StrategyBalance, PARTITION_REPORT_VERSION,
+};
 pub use benchlog::{compare_reports, validate_bench_report, BenchReport, BENCH_SCHEMA_VERSION};
 pub use cache_stats::{
     heat_bucket, validate_cache_report, CacheReport, HeatTracker, HotRun,
     RadixStats, TouchKind, CACHE_REPORT_VERSION,
 };
 pub use calibrate::{run_calibration, CalibrationReport};
+pub use drift::DriftDetector;
 pub use flight::{
     validate_bundle, validate_snapshot_json, FlightRecorder, FlightSnapshot,
     FlightTrigger, FLIGHT_MANIFEST_VERSION,

@@ -104,6 +104,10 @@ pub struct Attrs {
     pub flops: Option<u64>,
     /// Draft length / committed tokens / lane count — phase-dependent.
     pub k: Option<usize>,
+    /// CTA / LeanTile segment index within the step's partition plan —
+    /// lets per-tile measured `gather`/`lean_exec` spans be joined with
+    /// the per-tile work ledger (`obs::balance`).
+    pub tile: Option<usize>,
 }
 
 /// One recorded event. `start_us` is relative to the tracer's epoch;
@@ -318,6 +322,9 @@ impl Tracer {
                 if let Some(k) = ev.attrs.k {
                     args.insert("k".to_string(), Json::Num(k as f64));
                 }
+                if let Some(tile) = ev.attrs.tile {
+                    args.insert("tile".to_string(), Json::Num(tile as f64));
+                }
                 let mut o = std::collections::BTreeMap::new();
                 o.insert("name".to_string(), Json::Str(ev.phase.as_str().to_string()));
                 o.insert("cat".to_string(), Json::Str("engine".to_string()));
@@ -372,7 +379,7 @@ pub fn validate_chrome_trace(trace: &Json) -> Result<()> {
         );
         // Optional work-accounting attrs must be non-negative numbers
         // when present — Perfetto derives bandwidth tracks from them.
-        for key in ["seq", "pages", "bytes", "flops", "k", "depth"] {
+        for key in ["seq", "pages", "bytes", "flops", "k", "tile", "depth"] {
             if let Some(v) = args.get(key) {
                 let n = v.as_f64().ok_or_else(|| {
                     anyhow::anyhow!("event {i} arg {key} not a number")
@@ -413,6 +420,10 @@ impl Span<'_> {
 
     pub fn set_k(&mut self, k: usize) {
         self.attrs.k = Some(k);
+    }
+
+    pub fn set_tile(&mut self, tile: usize) {
+        self.attrs.tile = Some(tile);
     }
 }
 
@@ -533,6 +544,36 @@ mod tests {
             .expect("lean_exec event exported");
         assert_eq!(exec.at("args").at("bytes").as_f64(), Some(8192.0));
         assert_eq!(exec.at("args").at("flops").as_f64(), Some(65_536.0));
+    }
+
+    #[test]
+    fn tile_attr_exports_and_validates() {
+        let t = Tracer::enabled(16);
+        {
+            let mut s = t.span(Phase::LeanExec);
+            s.set_tile(7);
+            s.set_flops(1024);
+        }
+        {
+            let mut s = t.span(Phase::Gather);
+            s.set_tile(7);
+            s.set_bytes(4096);
+        }
+        let trace = t.export_chrome_trace();
+        validate_chrome_trace(&trace).expect("tile attr passes the schema");
+        let arr = trace.as_arr().unwrap();
+        let exec = arr
+            .iter()
+            .find(|e| e.str_at("name") == "lean_exec")
+            .expect("lean_exec event exported");
+        assert_eq!(exec.at("args").at("tile").as_f64(), Some(7.0));
+        // A negative tile index is rejected like every work attr.
+        let bad = Json::parse(
+            r#"[{"name":"lean_exec","ph":"X","ts":0,"dur":1,"pid":0,"tid":0,
+                 "args":{"step":0,"tile":-1}}]"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&bad).is_err());
     }
 
     #[test]

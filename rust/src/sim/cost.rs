@@ -86,6 +86,21 @@ pub struct CostCoefficients {
 }
 
 impl CostCoefficients {
+    /// Rough host-executor priors for when drift detection is enabled
+    /// without a calibration file (`serve --drift-limit` alone). The
+    /// [`crate::obs::drift::DriftDetector`] fits a scalar gain over its
+    /// warmup window, so only the *ratios* between these terms matter;
+    /// they mirror the shape `leanattn calibrate` typically fits on the
+    /// host executor (gather-byte dominated, with a visible per-tile
+    /// setup term).
+    pub fn nominal() -> CostCoefficients {
+        CostCoefficients {
+            ns_per_byte: 0.05,
+            ns_per_flop: 0.5,
+            tile_overhead_ns: 200.0,
+        }
+    }
+
     /// Predicted execution time, in microseconds, for exact work `w`.
     pub fn predict_us(&self, w: &WorkAccounting) -> f64 {
         (self.ns_per_byte * w.gathered_kv_bytes as f64
@@ -163,6 +178,10 @@ mod tests {
         // 0.5*2000 + 0.01*50000 + 100*10 = 1000 + 500 + 1000 ns = 2.5 us.
         assert!((c.predict_us(&w) - 2.5).abs() < 1e-12);
         assert_eq!(CostCoefficients::default().predict_us(&w), 0.0);
+        // The nominal priors must price real work at a positive time,
+        // or `serve --drift-limit` without a calibration file would
+        // silently observe nothing.
+        assert!(CostCoefficients::nominal().predict_us(&w) > 0.0);
     }
 
     #[test]

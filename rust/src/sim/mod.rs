@@ -22,7 +22,10 @@ pub use arch::GpuArch;
 pub use cascade::{simulate_cascade, CascadeSimResult};
 pub use cost::{CostCoefficients, TileCost};
 pub use sampling::{simulate_fork_decode, ForkDecodeCase, ForkDecodeResult};
-pub use schedule::{simulate, simulate_plan, SimResult};
+pub use schedule::{
+    effective_slots, list_schedule, schedule_detail, simulate, simulate_all,
+    simulate_plan, CtaTimeline, SimResult,
+};
 pub use sparse::{simulate_sparse_decode, SparseDecodeCase, SparseSimResult};
 pub use spec::{
     expected_tokens_per_pass, simulate_spec_decode, SpecDecodeCase, SpecSimResult,

@@ -49,8 +49,10 @@ pub fn simulate(problem: &DecodeProblem, strategy: Strategy, arch: &GpuArch) -> 
 }
 
 /// FlashInfer's scheduler can keep fewer CTAs resident (reserved buffer
-/// management); everyone else gets the full device.
-fn effective_slots(strategy: Strategy, arch: &GpuArch) -> usize {
+/// management); everyone else gets the full device. Public so the
+/// partition-balance report (`obs::balance`) plans and scores each
+/// strategy with exactly the slot count the simulator schedules on.
+pub fn effective_slots(strategy: Strategy, arch: &GpuArch) -> usize {
     match strategy {
         Strategy::PagedFixedSplit { .. } => {
             ((arch.sm_slots() as f64 * arch.fi_slot_fraction) as usize).max(1)
@@ -61,7 +63,11 @@ fn effective_slots(strategy: Strategy, arch: &GpuArch) -> usize {
 
 /// Greedy list scheduling of `durations` onto `slots` identical slots in
 /// index order. Returns per-CTA finish times and the makespan.
-pub(crate) fn list_schedule(durations: &[f64], slots: usize) -> (Vec<f64>, f64) {
+///
+/// Invariants (property-tested in `rust/tests/balance_props.rs`):
+/// makespan ≥ total/slots, makespan ≥ max duration, and the busy
+/// fraction busy/(makespan·slots) lies in (0, 1] for non-empty input.
+pub fn list_schedule(durations: &[f64], slots: usize) -> (Vec<f64>, f64) {
     assert!(slots > 0);
     let mut slot_free = vec![0.0f64; slots.min(durations.len()).max(1)];
     let mut finish = Vec::with_capacity(durations.len());

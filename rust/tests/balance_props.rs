@@ -1,0 +1,244 @@
+//! Property tests for the partition-balance plane: the greedy list
+//! scheduler's invariants on arbitrary duration vectors, the per-tile
+//! work ledger's bit-exact agreement with the closed-form accounting on
+//! random ragged problems, the PartitionReport JSON schema round-trip,
+//! and the drift detector's flight-recorder contract (a sustained shift
+//! writes a validated `drift` bundle; a stationary stream writes none).
+
+use lean_attention::coordinator::{Metrics, PagedKvCache};
+use lean_attention::obs::attrib::{account_decode_problem, account_plan, WorkAccounting};
+use lean_attention::obs::balance::{partition_report, plan_balance, validate_partition_report};
+use lean_attention::obs::{
+    validate_bundle, Attrs, DriftDetector, FlightRecorder, FlightSnapshot,
+    FlightTrigger, Phase, Tracer,
+};
+use lean_attention::partition::planners::build_plan;
+use lean_attention::partition::{DecodeProblem, Strategy};
+use lean_attention::sim::{list_schedule, CostCoefficients, GpuArch};
+use lean_attention::util::json::Json;
+use lean_attention::util::testing::prop_check;
+
+// --------------------------------------------------- list-schedule laws
+
+/// The scheduler every balance number is computed from must obey the
+/// classic bounds on any input: makespan at least the critical job and
+/// at least the perfectly-level share, at most the Graham greedy bound,
+/// busy fraction in (0, 1], and per-job finishes consistent with the
+/// reported makespan.
+#[test]
+fn list_schedule_invariants_hold_on_random_durations() {
+    prop_check("list_schedule bounds", 80, |rng| {
+        let n = rng.urange(1, 200);
+        let slots = rng.urange(1, 64);
+        let durations: Vec<f64> =
+            (0..n).map(|_| rng.range(1, 2000) as f64 / 100.0).collect();
+        let total: f64 = durations.iter().sum();
+        let max_d = durations.iter().cloned().fold(0.0, f64::max);
+        // list_schedule never opens more slots than it has jobs.
+        let m = slots.min(n).max(1) as f64;
+        let eps = 1e-9 * (1.0 + total);
+
+        let (finish, makespan) = list_schedule(&durations, slots);
+        if finish.len() != n {
+            return Err(format!("{} finish times for {n} jobs", finish.len()));
+        }
+        if makespan + eps < max_d {
+            return Err(format!("makespan {makespan} below critical job {max_d}"));
+        }
+        if makespan + eps < total / m {
+            return Err(format!(
+                "makespan {makespan} below the level share {} ({n} jobs, {m} slots)",
+                total / m
+            ));
+        }
+        if makespan > total / m + max_d + eps {
+            return Err(format!(
+                "makespan {makespan} exceeds the Graham bound {}",
+                total / m + max_d
+            ));
+        }
+        let occupancy = total / (makespan * m);
+        if !(occupancy > 0.0 && occupancy <= 1.0 + 1e-9) {
+            return Err(format!("busy fraction {occupancy} outside (0, 1]"));
+        }
+        let max_finish = finish.iter().cloned().fold(0.0, f64::max);
+        if max_finish != makespan {
+            return Err(format!(
+                "latest finish {max_finish} disagrees with makespan {makespan}"
+            ));
+        }
+        for (i, (&f, &d)) in finish.iter().zip(&durations).enumerate() {
+            if f + eps < d {
+                return Err(format!("job {i} finished at {f} before its duration {d}"));
+            }
+        }
+        // Same input, same schedule — the simulator must be a function.
+        let again = list_schedule(&durations, slots);
+        if again.0 != finish || again.1 != makespan {
+            return Err("list_schedule is not deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------- ledger bit-exactness laws
+
+/// On any ragged problem and any strategy, the per-CTA ledger must sum
+/// bit-exactly to the closed-form problem accounting, and the derived
+/// balance numbers must sit in their documented ranges with the
+/// critical-path CTA actually setting the makespan.
+#[test]
+fn plan_ledger_and_balance_invariants_hold_on_random_problems() {
+    prop_check("plan_balance == closed-form accounting", 30, |rng| {
+        let arch = GpuArch::a100();
+        let kv_heads = *rng.choose(&[1usize, 2, 4]);
+        let heads = kv_heads * rng.urange(1, 4);
+        let batch = rng.urange(1, 6);
+        let lens: Vec<u32> =
+            (0..batch).map(|_| rng.urange(1, 600) as u32).collect();
+        let d = *rng.choose(&[8usize, 16, 32]);
+        let tile = *rng.choose(&[16usize, 32, 64]);
+        let p = DecodeProblem::ragged(heads, lens, d)
+            .with_tile(tile)
+            .with_kv_heads(kv_heads);
+        let want = account_decode_problem(&p);
+        let slots = rng.urange(1, 80);
+        for strategy in
+            [Strategy::Dense, Strategy::StreamK, Strategy::fixed_split_auto(&p, slots)]
+        {
+            let plan = build_plan(&p, strategy, slots);
+            let b = plan_balance(&p, &plan, &arch);
+            if b.grid != plan.grid() || b.ledger.len() != b.grid {
+                return Err(format!(
+                    "{strategy:?}: {} ledger rows for a grid of {}",
+                    b.ledger.len(),
+                    plan.grid()
+                ));
+            }
+            let sum = b
+                .ledger
+                .iter()
+                .fold(WorkAccounting::default(), |a, r| a + r.work);
+            if sum != b.total || b.total != account_plan(&p, &plan) || b.total != want {
+                return Err(format!(
+                    "{strategy:?}: ledger sum {sum:?} / total {:?} drifted from \
+                     the closed form {want:?}",
+                    b.total
+                ));
+            }
+            if b.imbalance < 1.0 - 1e-9 {
+                return Err(format!("{strategy:?}: imbalance {} below 1", b.imbalance));
+            }
+            if !(b.wave_efficiency > 0.0 && b.wave_efficiency <= 1.0 + 1e-9) {
+                return Err(format!(
+                    "{strategy:?}: wave efficiency {} outside (0, 1]",
+                    b.wave_efficiency
+                ));
+            }
+            let crit = b
+                .ledger
+                .iter()
+                .find(|r| r.cta == b.critical_cta)
+                .ok_or_else(|| format!("{strategy:?}: critical CTA not in ledger"))?;
+            if crit.finish_us != b.makespan_us {
+                return Err(format!(
+                    "{strategy:?}: critical CTA finishes at {} but makespan is {}",
+                    crit.finish_us, b.makespan_us
+                ));
+            }
+            if b.tiles_hist.iter().sum::<u64>() != b.grid as u64 {
+                return Err(format!(
+                    "{strategy:?}: tiles histogram counts {} CTAs of {}",
+                    b.tiles_hist.iter().sum::<u64>(),
+                    b.grid
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The full cross-strategy report must validate against its schema and
+/// survive a parse round-trip unchanged, for any ragged problem.
+#[test]
+fn partition_report_round_trips_and_validates_on_random_problems() {
+    prop_check("PartitionReport JSON round-trip", 12, |rng| {
+        let heads = rng.urange(1, 5);
+        let batch = rng.urange(1, 5);
+        let lens: Vec<u32> =
+            (0..batch).map(|_| rng.urange(1, 800) as u32).collect();
+        let d = *rng.choose(&[16usize, 32]);
+        let p = DecodeProblem::ragged(heads, lens, d);
+        let report = partition_report(&p, &GpuArch::a100());
+        let j = report.to_json();
+        validate_partition_report(&j).map_err(|e| format!("self-validation: {e:#}"))?;
+        let back = Json::parse(&j.to_string()).map_err(|e| format!("parse: {e}"))?;
+        if back != j {
+            return Err("JSON round-trip changed the report".into());
+        }
+        validate_partition_report(&back)
+            .map_err(|e| format!("round-trip validation: {e:#}"))?;
+        Ok(())
+    });
+}
+
+// ---------------------------------------- drift -> flight recorder e2e
+
+fn drift_snapshot_parts() -> (Json, Json, Json) {
+    let tracer = Tracer::enabled(16);
+    tracer.instant(Phase::Decode, Attrs::default());
+    let trace = tracer.export_chrome_trace();
+    let metrics = Metrics::default().snapshot().to_json();
+    let cache = PagedKvCache::new(1, 1, 4, 4, 8).report(None, 4).to_json();
+    (trace, metrics, cache)
+}
+
+/// Artifact-free half of the drift e2e contract: when the detector
+/// declares a sustained breach, recording the flight snapshot must leave
+/// a `drift`-trigger bundle on disk that re-validates; until then, the
+/// recorder directory must not even exist.
+#[test]
+fn drift_breach_records_a_validated_drift_bundle() {
+    let dir = std::env::temp_dir()
+        .join(format!("leanattn-drift-props-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let coeffs = CostCoefficients::nominal();
+    let work = WorkAccounting::slice(4096, 64, 8);
+    let base = coeffs.predict_us(&work);
+    let mut d = DriftDetector::new(coeffs, 0.10);
+
+    // Stationary stream: warm, judged, quiet — and nothing on disk.
+    for _ in 0..DriftDetector::WARMUP + 40 {
+        d.observe(&work, base);
+    }
+    assert_eq!(d.breaches(), 0, "stationary stream must not breach");
+    assert!(!d.take_breach());
+    assert!(!dir.exists(), "no breach, no recorder directory");
+
+    // Sustained 2x shift: one breach, one bundle.
+    let mut rec = FlightRecorder::new(dir.to_string_lossy().as_ref());
+    let (trace, metrics, cache) = drift_snapshot_parts();
+    let mut bundle = None;
+    for step in 0..20u64 {
+        d.observe(&work, 2.0 * base);
+        if d.take_breach() {
+            let snap = FlightSnapshot {
+                trace: &trace,
+                metrics: &metrics,
+                cache_report: &cache,
+                slo_text: "drift props bundle (synthetic stream)",
+            };
+            bundle = rec
+                .record(FlightTrigger::Drift, step, &snap)
+                .expect("record bundle")
+                .or(bundle);
+            break;
+        }
+    }
+    let bundle = bundle.expect("a sustained 2x shift must breach and record");
+    let name = bundle.file_name().unwrap().to_string_lossy().into_owned();
+    assert!(name.contains("drift"), "bundle dir {name:?} lacks the trigger");
+    validate_bundle(&bundle).expect("drift bundle re-validates from disk");
+    assert_eq!(d.breaches(), 1, "exactly one sustained event");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -816,6 +816,88 @@ fn eviction_storm_records_a_flight_bundle_on_disk() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Cost-model drift flight recording end to end: with an absurdly tight
+/// relative-error limit, ordinary wall-clock noise against the nominal
+/// priors sustains a breach once the detector is warm, and the engine
+/// must land a `drift`-trigger post-mortem bundle that re-validates from
+/// disk.
+#[test]
+fn drift_breach_records_a_flight_bundle_on_disk() {
+    let Some((rt, m)) = setup() else { return };
+    let dir = std::env::temp_dir()
+        .join(format!("leanattn-drift-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut e = Engine::new(
+        &rt,
+        &m,
+        EngineConfig {
+            drift_limit: 1e-9,
+            project_hardware: false,
+            trace_capacity: 512,
+            flight_dir: Some(dir.to_string_lossy().into_owned()),
+            ..EngineConfig::default()
+        },
+    )
+    .expect("engine");
+    let mut rng = Rng::new(29);
+    // Plenty of decode steps past warmup (16) + patience (4).
+    e.submit(random_prompt(&mut rng, 512, 6), 48).unwrap();
+    e.run_until_idle().expect("run");
+    assert!(
+        e.metrics.balance.drift_observations > 16,
+        "the detector must have been fed past its warmup"
+    );
+    assert!(e.metrics.balance.drift_breaches > 0, "a 1e-9 limit must breach");
+    assert!(e.flight_bundles() > 0, "the drift trigger must record a bundle");
+
+    let mut found = 0u64;
+    for entry in std::fs::read_dir(&dir).expect("flight dir exists") {
+        let p = entry.unwrap().path();
+        if !p.is_dir() {
+            continue;
+        }
+        let name = p.file_name().unwrap().to_string_lossy().into_owned();
+        assert!(name.contains("drift"), "unexpected trigger: {name}");
+        validate_bundle(&p).expect("drift bundle re-validates from disk");
+        found += 1;
+    }
+    assert_eq!(found, e.flight_bundles(), "every recorded bundle is on disk");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The healthy twin: a stationary run under a generous limit observes
+/// every decode step but never breaches, and writes nothing to the
+/// flight directory.
+#[test]
+fn healthy_run_under_a_generous_drift_limit_writes_no_bundle() {
+    let Some((rt, m)) = setup() else { return };
+    let dir = std::env::temp_dir()
+        .join(format!("leanattn-drift-quiet-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut e = Engine::new(
+        &rt,
+        &m,
+        EngineConfig {
+            drift_limit: 100.0,
+            project_hardware: false,
+            flight_dir: Some(dir.to_string_lossy().into_owned()),
+            ..EngineConfig::default()
+        },
+    )
+    .expect("engine");
+    let mut rng = Rng::new(31);
+    e.submit(random_prompt(&mut rng, 512, 6), 48).unwrap();
+    e.run_until_idle().expect("run");
+    assert!(
+        e.metrics.balance.drift_observations > 16,
+        "the detector must still observe every decode step"
+    );
+    assert_eq!(e.metrics.balance.drift_breaches, 0, "stationary run stays quiet");
+    assert_eq!(e.flight_bundles(), 0, "no breach, no bundle");
+    assert!(!dir.exists(), "the recorder must not even create the directory");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Sampled invariant audits on a healthy run: an every-step plan must
 /// execute on every engine iteration and find nothing.
 #[test]
